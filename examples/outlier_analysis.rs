@@ -1,0 +1,32 @@
+//! Outlier & attention-sink analysis (paper §5.2, Figures 2, 5, 6, 8-11):
+//! activation/weight histograms, massive-activation (6-sigma) detection,
+//! sink-head identification, and the sink-logit strategy comparison
+//! between Adam and OSP checkpoints.
+//!
+//!   cargo run --release --example outlier_analysis
+//!   cargo run --release --example outlier_analysis -- --tags adam,muon,osp
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use osp::repro;
+use osp::runtime::Engine;
+use osp::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(false);
+    let engine = Engine::open(std::path::Path::new(
+        &args.str_or("artifacts", "artifacts")))?;
+    let runs_dir = PathBuf::from(args.str_or("runs-dir", "runs"));
+    let tags = args.list_or("tags", &["adam", "osp"]);
+    let tag_refs: Vec<&str> = tags.iter().map(|s| s.as_str()).collect();
+
+    // Figure 2 + Figures 8-9: activation histograms at probed depths.
+    println!("{}", repro::fig2(&engine, &runs_dir, &tag_refs)?);
+    // Figures 10-11: weight histograms.
+    println!("{}", repro::fig1011(&engine, &runs_dir, &tag_refs)?);
+    // Figures 5-6 + §5.2: attention sinks without outliers.
+    println!("{}", repro::fig56(&engine, &runs_dir, &tag_refs)?);
+    Ok(())
+}

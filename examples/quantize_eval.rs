@@ -1,0 +1,75 @@
+//! PTQ composition study (paper Table 4): apply RTN, FFN-Had, GPTQ,
+//! QuaRot-lite, and SpinQuant-lite to trained checkpoints and compare
+//! W4-A4-KV4 perplexity — showing OSP models both need PTQ less and still
+//! compose with it.
+//!
+//!   cargo run --release --example quantize_eval            # adam vs osp
+//!   cargo run --release --example quantize_eval -- --tags osp --w-bits 3
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use osp::bench::{fmt_ppl, Table};
+use osp::eval::perplexity;
+use osp::quant::{self, PtqConfig, Rotation, WeightMethod};
+use osp::repro;
+use osp::runtime::Engine;
+use osp::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(false);
+    let engine = Engine::open(std::path::Path::new(
+        &args.str_or("artifacts", "artifacts")))?;
+    let runs_dir = PathBuf::from(args.str_or("runs-dir", "runs"));
+    let tags = args.list_or("tags", &["adam", "osp"]);
+    let tag_refs: Vec<&str> = tags.iter().map(|s| s.as_str()).collect();
+    let runs = repro::load_runs(&runs_dir, &tag_refs)?;
+    let w_bits = args.usize_or("w-bits", 4) as u32;
+    let (a_bits, kv_bits) = (args.usize_or("a-bits", 4) as u32,
+                             args.usize_or("kv-bits", 4) as u32);
+
+    let base = PtqConfig::rtn(w_bits);
+    let recipes: Vec<(&str, PtqConfig)> = vec![
+        ("RTN", base),
+        ("+ FFN Had", PtqConfig { ffn_had: true, ..base }),
+        ("+ GPTQ", PtqConfig { method: WeightMethod::Gptq, ..base }),
+        ("+ QuaRot-lite", PtqConfig { method: WeightMethod::Gptq,
+                                      rotation: Rotation::Random,
+                                      ffn_had: true, ..base }),
+        ("+ SpinQuant-lite", PtqConfig { method: WeightMethod::Gptq,
+                                         rotation: Rotation::Learned,
+                                         ffn_had: true, ..base }),
+    ];
+
+    let mut headers: Vec<String> = vec!["Quantization".into()];
+    headers.extend(tags.iter().cloned());
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        &format!("PTQ composition — W{w_bits}-A{a_bits}-KV{kv_bits} \
+                  perplexity"),
+        &hdr);
+
+    // fp16 reference row first.
+    let mut fp_row = vec!["fp16 (reference)".to_string()];
+    for run in &runs {
+        let fp = perplexity(&engine, &run.arch, &run.params, 16, 16, 0.0,
+                            2)?;
+        fp_row.push(fmt_ppl(fp.ppl));
+    }
+    table.row(fp_row);
+
+    for (label, cfg) in recipes {
+        let mut row = vec![label.to_string()];
+        for run in &runs {
+            let qm = quant::prepare(&engine, &run.arch, &run.params, &cfg)?;
+            let q = perplexity(&engine, &qm.arch, &qm.params, a_bits,
+                               kv_bits, qm.had_flag, 2)?;
+            row.push(fmt_ppl(q.ppl));
+        }
+        table.row(row);
+        println!("  finished {label}");
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Quickstart: open the artifact engine, train the OSP configuration for
+//! a handful of steps, watch loss fall and kurtosis stay flat, and
+//! evaluate held-out perplexity — the whole three-layer stack in ~40
+//! lines of user code.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use osp::config::TrainConfig;
+use osp::coordinator::Trainer;
+use osp::runtime::Engine;
+use osp::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(false);
+    let engine = Engine::open(std::path::Path::new(
+        &args.str_or("artifacts", "artifacts")))?;
+    println!("preset={} model d={} L={} vocab={}",
+             engine.manifest().preset,
+             engine.manifest().model.d_model,
+             engine.manifest().model.n_layers,
+             engine.manifest().model.vocab_size);
+
+    // OSP = Muon optimizer + SSNorm + EmbProj (the paper's recipe).
+    let mut cfg = TrainConfig::from_args(&args);
+    cfg.optimizer = "muon".into();
+    cfg.arch = "ssnorm_embproj".into();
+    cfg.steps = args.u64_or("steps", 10);
+    cfg.eval_every = 0;
+    cfg.run_dir = "".into(); // no telemetry for the quickstart
+
+    let mut trainer = Trainer::new(engine, cfg)?;
+    for step in 0..trainer.cfg.steps {
+        let (loss, kurt) = trainer.step(step)?;
+        let kmax = kurt.iter().cloned().fold(f32::MIN, f32::max);
+        println!("step {step:3}  loss {loss:.4}  residual kurt_max {kmax:+.3}");
+    }
+    let (ppl, _) = trainer.evaluate()?;
+    println!("held-out perplexity after {} steps: {ppl:.2}",
+             trainer.cfg.steps);
+    Ok(())
+}

@@ -1,0 +1,114 @@
+//! End-to-end driver (deliverable (b) + the DESIGN.md validation run):
+//! trains the paper's ablation grid (Adam baseline ... full OSP) on the
+//! synthetic corpus, logging loss + excess-kurtosis curves, saving
+//! checkpoints, then evaluating every run at fp16 and under 4-bit
+//! quantization — the Figure 3 / Table 2 / Table 3 pipeline in one
+//! command.
+//!
+//!   cargo run --release --example train_osp -- --ablation --steps 300
+//!   cargo run --release --example train_osp -- --steps 200   # adam+osp
+//!
+//! Also demonstrates the systems modes:
+//!   --dp-ranks 2           simulated data parallelism (ring all-reduce)
+//!   --disaggregated true   the paper's optimizer-parallel Muon
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use osp::bench::{fmt_pct, fmt_ppl, Table};
+use osp::config::{TrainConfig, ABLATION_GRID};
+use osp::coordinator::Trainer;
+use osp::eval::BitConfig;
+use osp::repro::{self, Effort};
+use osp::runtime::Engine;
+use osp::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(false);
+    let engine = Engine::open(std::path::Path::new(
+        &args.str_or("artifacts", "artifacts")))?;
+    let steps = args.u64_or("steps", 300);
+    let runs_dir = PathBuf::from(args.str_or("runs-dir", "runs"));
+
+    let grid: Vec<(&str, &str, &str)> = if args.bool_or("ablation", false) {
+        ABLATION_GRID.to_vec()
+    } else {
+        vec![("adam", "adam", "rmsnorm_plain"),
+             ("osp", "muon", "ssnorm_embproj")]
+    };
+
+    // ---- phase 1: training runs (Figure 3/7 telemetry) ----
+    for (tag, optimizer, arch) in &grid {
+        let run_dir = runs_dir.join(tag);
+        if !osp::checkpoint::list_steps(&run_dir).is_empty()
+            && !args.bool_or("force", false)
+        {
+            println!("[{tag}] found existing checkpoints — skipping \
+                      (use --force to retrain)");
+            continue;
+        }
+        let mut t = vec![
+            "--optimizer".to_string(), optimizer.to_string(),
+            "--arch".to_string(), arch.to_string(),
+            "--steps".to_string(), steps.to_string(),
+            "--run-dir".to_string(), run_dir.to_string_lossy().into_owned(),
+            "--ckpt-every".to_string(), (steps / 3).max(1).to_string(),
+            "--eval-every".to_string(),
+            args.str_or("eval-every", "25"),
+        ];
+        for flag in ["dp-ranks", "grad-accum", "disaggregated", "lr",
+                     "seed"] {
+            if let Some(v) = args.get(flag) {
+                t.push(format!("--{flag}"));
+                t.push(v.to_string());
+            }
+        }
+        let cfg = TrainConfig::from_args(&Args::parse(&t, false));
+        println!("=== {tag}: {optimizer} @ {arch}, {steps} steps ===");
+        let mut trainer = Trainer::new(engine.clone(), cfg)?;
+        let s = trainer.run()?;
+        println!(
+            "[{tag}] loss {:.4} -> ppl {:.2} | kurt_max {:+.2} | \
+             {:.0} tok/s ({:.1}s)",
+            s.final_loss, s.final_ppl, s.final_kurt_max, s.tokens_per_sec,
+            s.wall_secs);
+        for (phase, n, secs) in trainer.profiler.report() {
+            println!("    {phase:12} x{n:<5} {secs:7.2}s");
+        }
+    }
+
+    // ---- phase 2: the headline comparison (Figure 1 / Table 2 slice) ----
+    let effort = if args.bool_or("full", false) {
+        Effort::FULL
+    } else {
+        Effort::QUICK
+    };
+    let tags: Vec<&str> = grid.iter().map(|&(t, _, _)| t).collect();
+    let runs = repro::load_runs(&runs_dir, &tags)?;
+    let mut table = Table::new(
+        "E2E summary — fp16 vs 4-bit (RTN, W4-A4-KV4)",
+        &["run", "kurt_max", "fp16 avg", "fp16 ppl", "4bit avg",
+          "4bit ppl"]);
+    for run in &runs {
+        let fp = osp::eval::perplexity(&engine, &run.arch, &run.params, 16,
+                                       16, 0.0, effort.ppl_batches)?;
+        let (_r, fp_avg) = osp::eval::tasks::run_suite(
+            &engine, &run.arch, &run.params, effort.n_per_task, 16, 16,
+            0.0, 99)?;
+        let (q_avg, q_ppl, _) = repro::eval_bitconfig(
+            &engine, run, BitConfig::new(4, 4, 4), false, effort)?;
+        table.row(vec![
+            run.tag.clone(),
+            format!("{:+.2}", fp.kurt_max),
+            fmt_pct(fp_avg),
+            fmt_ppl(fp.ppl),
+            fmt_pct(q_avg),
+            fmt_ppl(q_ppl),
+        ]);
+    }
+    table.print();
+    println!("{}", repro::fig3(&runs_dir, &tags)?);
+    println!("telemetry + checkpoints in {}", runs_dir.display());
+    Ok(())
+}

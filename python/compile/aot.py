@@ -1,0 +1,440 @@
+"""AOT build: lower every executable the Rust coordinator needs to HLO text.
+
+Interchange is HLO *text* (never serialized HloModuleProto): jax >= 0.5
+emits protos with 64-bit instruction ids that the runtime's xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly.
+
+Artifacts (see DESIGN.md §3 for the full table):
+  init_<arch>                  (seed)                       -> params...
+  train_<opt>_<arch>           (params..., opt..., tokens, lr)
+                               -> params'..., opt'..., loss, kurt[2L]
+  grad_<arch>                  (params..., tokens)          -> grads..., loss, kurt
+  ns_<m>x<n>                   (g)                          -> orth(g)
+  evalq_<arch>                 (params..., tokens, a_levels, kv_levels, had)
+                               -> nll_sum, count, kurt[2L]
+  logitsq_<arch>               (params..., tokens, a_levels, kv_levels, had)
+                               -> logits[B,S,V]
+  probe_<arch>                 (params..., tokens)          -> probe tensors
+
+plus artifacts/manifest.json describing every input/output tensor, the
+parameter/opt-state flattening order, and the model configuration — the
+Rust side is entirely manifest-driven.
+
+Caching: each artifact records a content hash (package sources + config +
+artifact name); `make artifacts` is a no-op when nothing changed.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import optimizers
+from .config import PRESETS, ModelConfig, arch_name
+from .kernels.newton_schulz import ns_orthogonalize
+from .model import (QuantTaps, forward, init_params, loss_fn, nll,
+                    param_specs, unflatten_params)
+
+# Architecture grid used by the experiments (DESIGN.md §5).
+ARCHS = {
+    "rmsnorm_plain": dict(norm="rms", embproj=False),
+    "ssnorm_plain": dict(norm="ss", embproj=False),
+    "rmsnorm_embproj": dict(norm="rms", embproj=True),
+    "ssnorm_embproj": dict(norm="ss", embproj=True),  # = OSP architecture
+}
+
+# (optimizer, arch) pairs that get a fused train artifact (Table 2 rows +
+# Table 1 cost rows).
+TRAIN_MATRIX = [
+    ("adam", "rmsnorm_plain"),
+    ("muon_noadam", "rmsnorm_plain"),
+    ("muon", "rmsnorm_plain"),
+    ("muon", "ssnorm_plain"),
+    ("muon", "rmsnorm_embproj"),
+    ("muon", "ssnorm_embproj"),
+    ("adam", "ssnorm_embproj"),
+    ("shampoo", "rmsnorm_plain"),
+    ("soap", "rmsnorm_plain"),
+]
+
+GRAD_ARCHS = ["rmsnorm_plain", "ssnorm_embproj"]
+
+# Multi-step fused train artifacts (§Perf): K steps per PJRT dispatch via
+# lax.scan, amortizing the host<->device parameter round-trip that
+# dominates single-step dispatch. Built for the two headline configs.
+MULTI_STEP = [("adam", "rmsnorm_plain"), ("muon", "ssnorm_embproj")]
+MULTI_K = 8
+
+BATCH_TRAIN = 8
+BATCH_EVAL = 8
+BATCH_PROBE = 2
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(
+        tuple(shape), jnp.int32 if dtype == "i32" else jnp.float32)
+
+
+def _io(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def probe_layer_ids(cfg: ModelConfig):
+    ids = sorted({0, cfg.n_layers // 3, (2 * cfg.n_layers) // 3,
+                  cfg.n_layers - 1})
+    return ids
+
+
+class ArtifactBuilder:
+    """Collects (fn, input specs, io metadata) per artifact and lowers."""
+
+    def __init__(self, cfg: ModelConfig, out_dir: Path, use_pallas: bool):
+        self.cfg = cfg
+        self.out_dir = out_dir
+        self.use_pallas = use_pallas
+        self.entries = {}
+
+    # -- builders ---------------------------------------------------------
+
+    def add(self, name, fn, inputs, outputs):
+        self.entries[name] = {"fn": fn, "inputs": inputs, "outputs": outputs}
+
+    def param_io(self, cfg, suffix=""):
+        return [_io(f"param.{s.name}{suffix}", s.shape)
+                for s in param_specs(cfg)]
+
+    def opt_io(self, opt, cfg, suffix=""):
+        return [_io(f"opt.{n}{suffix}", shape)
+                for n, shape, _init in optimizers.opt_state_specs(opt, cfg)]
+
+    def build_all(self):
+        cfg = self.cfg
+        for arch, overrides in ARCHS.items():
+            acfg = cfg.with_(**overrides)
+            self._build_init(arch, acfg)
+            self._build_evalq(arch, acfg)
+            self._build_logitsq(arch, acfg)
+            self._build_probe(arch, acfg)
+        for arch in GRAD_ARCHS:
+            self._build_grad(arch, cfg.with_(**ARCHS[arch]))
+        for opt, arch in TRAIN_MATRIX:
+            self._build_train(opt, arch, cfg.with_(**ARCHS[arch]))
+        for opt, arch in MULTI_STEP:
+            self._build_train_multi(opt, arch, cfg.with_(**ARCHS[arch]),
+                                    MULTI_K)
+        self._build_ns_shapes()
+
+    def _build_init(self, arch, acfg):
+        specs = param_specs(acfg)
+
+        def fn(seed):
+            key = jax.random.PRNGKey(seed[0])
+            params = init_params(acfg, key)
+            return tuple(params[s.name] for s in specs)
+
+        self.add(f"init_{arch}", fn,
+                 [( _spec((1,), "i32"), _io("seed", (1,), "i32"))],
+                 [_io(f"param.{s.name}", s.shape) for s in specs])
+
+    def _build_train(self, opt, arch, acfg):
+        specs = param_specs(acfg)
+        ospecs = optimizers.opt_state_specs(opt, acfg)
+        np_, no = len(specs), len(ospecs)
+
+        def fn(*args):
+            params = {s.name: a for s, a in zip(specs, args[:np_])}
+            state = {n: a for (n, _sh, _i), a in
+                     zip(ospecs, args[np_:np_ + no])}
+            tokens, lr = args[np_ + no], args[np_ + no + 1][0]
+            (loss, kurt), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, tokens, acfg), has_aux=True)(params)
+            new_p, new_s = optimizers.opt_update(
+                opt, acfg, params, grads, state, lr,
+                use_pallas=self.use_pallas)
+            return tuple([new_p[s.name] for s in specs] +
+                         [new_s[n] for n, _sh, _i in ospecs] +
+                         [loss, kurt])
+
+        inputs = (
+            [(_spec(s.shape), _io(f"param.{s.name}", s.shape))
+             for s in specs] +
+            [(_spec(sh), _io(f"opt.{n}", sh)) for n, sh, _i in ospecs] +
+            [(_spec((BATCH_TRAIN, acfg.seq_len), "i32"),
+              _io("tokens", (BATCH_TRAIN, acfg.seq_len), "i32")),
+             (_spec((1,)), _io("lr", (1,)))])
+        outputs = (self.param_io(acfg) + self.opt_io(opt, acfg) +
+                   [_io("loss", ()), _io("kurt", (2 * acfg.n_layers,))])
+        self.add(f"train_{opt}_{arch}", fn, inputs, outputs)
+
+    def _build_train_multi(self, opt, arch, acfg, k):
+        """K fused steps per call via lax.scan (§Perf: amortizes the
+        per-dispatch parameter transfer). Same math as k calls of the
+        single-step artifact with the same per-step lr."""
+        specs = param_specs(acfg)
+        ospecs = optimizers.opt_state_specs(opt, acfg)
+        np_, no = len(specs), len(ospecs)
+
+        def fn(*args):
+            params = {s.name: a for s, a in zip(specs, args[:np_])}
+            state = {n: a for (n, _sh, _i), a in
+                     zip(ospecs, args[np_:np_ + no])}
+            tokens, lrs = args[np_ + no], args[np_ + no + 1]
+
+            def body(carry, xs):
+                params, state = carry
+                toks, lr = xs
+                (loss, kurt), grads = jax.value_and_grad(
+                    lambda p: loss_fn(p, toks, acfg), has_aux=True)(params)
+                new_p, new_s = optimizers.opt_update(
+                    opt, acfg, params, grads, state, lr,
+                    use_pallas=self.use_pallas)
+                return (new_p, new_s), (loss, kurt)
+
+            (params, state), (losses, kurts) = jax.lax.scan(
+                body, (params, state), (tokens, lrs))
+            return tuple([params[s.name] for s in specs] +
+                         [state[n] for n, _sh, _i in ospecs] +
+                         [jnp.mean(losses), kurts[-1]])
+
+        inputs = (
+            [(_spec(s.shape), _io(f"param.{s.name}", s.shape))
+             for s in specs] +
+            [(_spec(sh), _io(f"opt.{n}", sh)) for n, sh, _i in ospecs] +
+            [(_spec((k, BATCH_TRAIN, acfg.seq_len), "i32"),
+              _io("tokens", (k, BATCH_TRAIN, acfg.seq_len), "i32")),
+             (_spec((k,)), _io("lrs", (k,)))])
+        outputs = (self.param_io(acfg) + self.opt_io(opt, acfg) +
+                   [_io("loss", ()), _io("kurt", (2 * acfg.n_layers,))])
+        self.add(f"train{k}_{opt}_{arch}", fn, inputs, outputs)
+
+    def _build_grad(self, arch, acfg):
+        specs = param_specs(acfg)
+
+        def fn(*args):
+            params = {s.name: a for s, a in zip(specs, args[:len(specs)])}
+            tokens = args[len(specs)]
+            (loss, kurt), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, tokens, acfg), has_aux=True)(params)
+            return tuple([grads[s.name] for s in specs] + [loss, kurt])
+
+        inputs = ([(_spec(s.shape), _io(f"param.{s.name}", s.shape))
+                   for s in specs] +
+                  [(_spec((BATCH_TRAIN, acfg.seq_len), "i32"),
+                    _io("tokens", (BATCH_TRAIN, acfg.seq_len), "i32"))])
+        outputs = ([_io(f"grad.{s.name}", s.shape) for s in specs] +
+                   [_io("loss", ()), _io("kurt", (2 * acfg.n_layers,))])
+        self.add(f"grad_{arch}", fn, inputs, outputs)
+
+    def _quant_inputs(self, acfg, batch):
+        return [
+            (_spec((batch, acfg.seq_len), "i32"),
+             _io("tokens", (batch, acfg.seq_len), "i32")),
+            (_spec((1,)), _io("a_levels", (1,))),
+            (_spec((1,)), _io("kv_levels", (1,))),
+            (_spec((1,)), _io("had_flag", (1,))),
+        ]
+
+    def _build_evalq(self, arch, acfg):
+        specs = param_specs(acfg)
+
+        def fn(*args):
+            params = {s.name: a for s, a in zip(specs, args[:len(specs)])}
+            tokens, a_lv, kv_lv, had = args[len(specs):len(specs) + 4]
+            taps = QuantTaps(a_lv[0], kv_lv[0], had[0],
+                             use_pallas=self.use_pallas)
+            nll_sum, count, kurt = nll(params, tokens, acfg, taps=taps)
+            return (nll_sum, count, kurt)
+
+        inputs = ([(_spec(s.shape), _io(f"param.{s.name}", s.shape))
+                   for s in specs] + self._quant_inputs(acfg, BATCH_EVAL))
+        outputs = [_io("nll_sum", ()), _io("count", ()),
+                   _io("kurt", (2 * acfg.n_layers,))]
+        self.add(f"evalq_{arch}", fn, inputs, outputs)
+
+    def _build_logitsq(self, arch, acfg):
+        specs = param_specs(acfg)
+
+        def fn(*args):
+            params = {s.name: a for s, a in zip(specs, args[:len(specs)])}
+            tokens, a_lv, kv_lv, had = args[len(specs):len(specs) + 4]
+            taps = QuantTaps(a_lv[0], kv_lv[0], had[0],
+                             use_pallas=self.use_pallas)
+            logits, _aux = forward(params, tokens, acfg, taps=taps)
+            return (logits,)
+
+        inputs = ([(_spec(s.shape), _io(f"param.{s.name}", s.shape))
+                   for s in specs] + self._quant_inputs(acfg, BATCH_EVAL))
+        outputs = [_io("logits",
+                       (BATCH_EVAL, acfg.seq_len, acfg.vocab_size))]
+        self.add(f"logitsq_{arch}", fn, inputs, outputs)
+
+    def _build_probe(self, arch, acfg):
+        specs = param_specs(acfg)
+        pl_ids = probe_layer_ids(acfg)
+        b, s = BATCH_PROBE, acfg.seq_len
+        d, nh, hd = acfg.d_model, acfg.n_heads, acfg.head_dim
+        npl = len(pl_ids)
+
+        def fn(*args):
+            params = {sp.name: a for sp, a in zip(specs, args[:len(specs)])}
+            tokens = args[len(specs)]
+            _logits, aux = forward(params, tokens, acfg,
+                                   probe_layers=pl_ids)
+            pr = aux["probes"]
+            return (aux["kurt"], pr["mhsa_in"], pr["ffn_in"], pr["q_mag"],
+                    pr["k_mag"], pr["attn_logits"])
+
+        inputs = ([(_spec(sp.shape), _io(f"param.{sp.name}", sp.shape))
+                   for sp in specs] +
+                  [(_spec((b, s), "i32"), _io("tokens", (b, s), "i32"))])
+        outputs = [
+            _io("kurt", (2 * acfg.n_layers,)),
+            _io("mhsa_in", (npl, b, s, d)),
+            _io("ffn_in", (npl, b, s, d)),
+            _io("q_mag", (npl, b, nh, hd)),
+            _io("k_mag", (npl, b, nh, hd)),
+            _io("attn_logits", (npl, b, nh, s, s)),
+        ]
+        self.add(f"probe_{arch}", fn, inputs, outputs)
+
+    def _build_ns_shapes(self):
+        """One ns_<m>x<n> artifact per distinct matrix shape (used by the
+        disaggregated optimizer-parallel mode)."""
+        shapes = set()
+        for arch in GRAD_ARCHS:
+            acfg = self.cfg.with_(**ARCHS[arch])
+            for s in param_specs(acfg):
+                if s.kind == "matrix" or s.kind in ("embed", "unembed"):
+                    if len(s.shape) == 2:
+                        shapes.add(s.shape)
+        for (m, n) in sorted(shapes):
+            def fn(g, _m=m, _n=n):
+                return (ns_orthogonalize(g, use_pallas=self.use_pallas),)
+            self.add(f"ns_{m}x{n}", fn,
+                     [(_spec((m, n)), _io("g", (m, n)))],
+                     [_io("orth", (m, n))])
+
+    # -- lowering ---------------------------------------------------------
+
+    def lower(self, name):
+        e = self.entries[name]
+        specs = [s for s, _meta in e["inputs"]]
+        t0 = time.time()
+        # keep_unused: the manifest's calling convention is positional, so
+        # arguments that an artifact happens not to use (e.g. the unembed
+        # matrix in probe_*) must still be real HLO parameters.
+        lowered = jax.jit(e["fn"], keep_unused=True).lower(*specs)
+        text = to_hlo_text(lowered)
+        dt = time.time() - t0
+        return text, dt
+
+
+def _source_hash(cfg: ModelConfig, use_pallas: bool, name: str) -> str:
+    h = hashlib.sha256()
+    pkg = Path(__file__).parent
+    for p in sorted(pkg.rglob("*.py")):
+        h.update(p.read_bytes())
+    h.update(repr(cfg.to_dict()).encode())
+    h.update(str(use_pallas).encode())
+    h.update(name.encode())
+    h.update(jax.__version__.encode())
+    return h.hexdigest()[:16]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default=os.environ.get("OSP_PRESET", "small"),
+                    choices=sorted(PRESETS))
+    ap.add_argument("--kernels",
+                    default=os.environ.get("OSP_KERNELS", "pallas"),
+                    choices=["pallas", "jnp"])
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = PRESETS[args.preset]
+    use_pallas = args.kernels == "pallas"
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest_path = out_dir / "manifest.json"
+    old = {}
+    if manifest_path.exists():
+        try:
+            old = json.loads(manifest_path.read_text()).get("artifacts", {})
+        except Exception:
+            old = {}
+
+    builder = ArtifactBuilder(cfg, out_dir, use_pallas)
+    builder.build_all()
+
+    manifest = {
+        "version": 1,
+        "preset": args.preset,
+        "kernels": args.kernels,
+        "model_config": cfg.to_dict(),
+        "batch_train": BATCH_TRAIN,
+        "batch_eval": BATCH_EVAL,
+        "batch_probe": BATCH_PROBE,
+        "probe_layers": probe_layer_ids(cfg),
+        "archs": {a: dict(ov) for a, ov in ARCHS.items()},
+        "param_specs": {},
+        "opt_specs": {},
+        "artifacts": {},
+    }
+    for arch, overrides in ARCHS.items():
+        acfg = cfg.with_(**overrides)
+        manifest["param_specs"][arch] = [
+            {"name": s.name, "shape": list(s.shape), "init": s.init,
+             "kind": s.kind} for s in param_specs(acfg)]
+        manifest["opt_specs"][arch] = {
+            opt: [{"name": n, "shape": list(sh), "init": init}
+                  for n, sh, init in optimizers.opt_state_specs(opt, acfg)]
+            for opt in optimizers.OPTIMIZERS}
+
+    n_built = n_cached = 0
+    for name, e in builder.entries.items():
+        if args.only and args.only not in name:
+            continue
+        fname = f"{name}.hlo.txt"
+        hsh = _source_hash(cfg, use_pallas, name)
+        entry = {
+            "file": fname,
+            "hash": hsh,
+            "inputs": [meta for _s, meta in e["inputs"]],
+            "outputs": e["outputs"],
+        }
+        cached = (not args.force and old.get(name, {}).get("hash") == hsh
+                  and (out_dir / fname).exists())
+        if cached:
+            n_cached += 1
+        else:
+            text, dt = builder.lower(name)
+            (out_dir / fname).write_text(text)
+            n_built += 1
+            print(f"  lowered {name:32s} {len(text)/1e6:7.2f} MB "
+                  f"in {dt:6.1f}s", flush=True)
+        manifest["artifacts"][name] = entry
+
+    manifest_path.write_text(json.dumps(manifest, indent=1))
+    print(f"artifacts: {n_built} built, {n_cached} cached -> {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

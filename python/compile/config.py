@@ -1,0 +1,62 @@
+"""Model / architecture configuration shared by the L2 model and aot.py.
+
+The Rust side never sees these dataclasses; aot.py serializes the resolved
+config into artifacts/manifest.json and the coordinator is manifest-driven.
+"""
+
+from dataclasses import dataclass, asdict, replace
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """LLaMA-style decoder configuration.
+
+    norm: "rms"  -> standard RMSNorm with a learnable per-channel scale
+                    vector (the outlier-prone baseline),
+          "ss"   -> Single-Scale RMSNorm (SSNorm, Eq. 3 of the paper):
+                    gamma * x / ||x||_2 with a single learnable scalar.
+    embproj: learnable full-rank projections after the embedding and before
+             the unembedding (EMBPROJ, Section 3.3). Initialized orthogonal
+             (via Newton-Schulz of a Gaussian) to preserve norm statistics.
+    """
+
+    vocab_size: int = 512
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 352  # SwiGLU hidden (~8/3 * d_model, rounded to multiple of 16)
+    seq_len: int = 128
+    rope_theta: float = 10000.0
+    norm: str = "rms"
+    embproj: bool = False
+    # Quantization taps (evalq artifact): runtime-controlled, see model.py.
+    init_std: float = 0.02
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    def with_(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)
+
+
+# Presets. "tiny" lowers fast and is used by pytest and the artifact smoke
+# path; "small" is the default experiment scale (see DESIGN.md §2 for the
+# scale substitution rationale); "e2e" is the end-to-end driver scale.
+PRESETS = {
+    "tiny": ModelConfig(vocab_size=256, d_model=64, n_layers=2, n_heads=2,
+                        d_ff=176, seq_len=64),
+    "small": ModelConfig(vocab_size=512, d_model=128, n_layers=4, n_heads=4,
+                         d_ff=352, seq_len=128),
+    "e2e": ModelConfig(vocab_size=512, d_model=256, n_layers=6, n_heads=8,
+                       d_ff=688, seq_len=128),
+}
+
+
+def arch_name(cfg: ModelConfig) -> str:
+    """Canonical architecture tag used in artifact names."""
+    return f"{cfg.norm}norm_{'embproj' if cfg.embproj else 'plain'}"

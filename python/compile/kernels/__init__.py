@@ -1,0 +1,28 @@
+"""L1 Pallas kernels (build-time only; lowered with interpret=True).
+
+Kernel selection: every wrapper takes `use_pallas`; the package-level
+default comes from the OSP_KERNELS env var ("pallas" | "jnp") so aot.py
+can build both artifact flavors without touching call sites. The jnp
+flavor routes to the oracles in ref.py — the two flavors are asserted
+numerically identical by python/tests/test_kernels.py.
+"""
+
+import os
+
+DEFAULT_USE_PALLAS = os.environ.get("OSP_KERNELS", "pallas") == "pallas"
+
+from .ref import (  # noqa: E402,F401
+    NS_COEFFS,
+    NS_STEPS,
+    excess_kurtosis_ref,
+    fake_quant_ref,
+    hadamard_ref,
+    matmul_ref,
+    ns_orthogonalize_ref,
+    rmsnorm_ref,
+    ssnorm_ref,
+)
+from .newton_schulz import matmul_pallas, ns_orthogonalize  # noqa: E402,F401
+from .ssnorm import ssnorm  # noqa: E402,F401
+from .fake_quant import fake_quant  # noqa: E402,F401
+from .hadamard import hadamard  # noqa: E402,F401

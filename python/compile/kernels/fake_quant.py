@@ -1,0 +1,66 @@
+"""Pallas kernel for symmetric round-to-nearest quantize-dequantize (RTN).
+
+Per-row (per-token) dynamic quantization: scale = absmax(row) / levels.
+`levels` (= 2**(bits-1) - 1) is a *runtime* input so a single lowered
+artifact serves the whole Figure-4 bit-width sweep; passing levels large
+enough (e.g. 2**20) makes the op numerically the identity, which is how
+the 16-bit (unquantized) columns are expressed.
+
+The absmax reduction and the quantize step are fused into one kernel pass
+per row-block (two-phase within the block), so HBM traffic is exactly one
+read + one write of the tensor.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _fake_quant_kernel(x_ref, levels_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    levels = levels_ref[0]
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = absmax / levels + eps
+    q = jnp.clip(jnp.round(x / scale), -levels - 1.0, levels)
+    o_ref[...] = q * scale
+
+
+def _pick_rows(rows: int, target: int = 128) -> int:
+    if rows <= target:
+        return rows
+    for cand in range(target, 0, -1):
+        if rows % cand == 0:
+            return cand
+    return rows
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def _fake_quant_pallas(x2d, levels, eps, interpret=True):
+    rows, d = x2d.shape
+    br = _pick_rows(rows)
+    return pl.pallas_call(
+        functools.partial(_fake_quant_kernel, eps=eps),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), jnp.float32),
+        interpret=interpret,
+    )(x2d.astype(jnp.float32),
+      jnp.reshape(jnp.asarray(levels, jnp.float32), (1,)))
+
+
+def fake_quant(x, levels, axis=-1, eps=1e-8, use_pallas=True):
+    """RTN quantize-dequantize along `axis` (only axis=-1 has a Pallas
+    path; other axes route to the oracle)."""
+    if not use_pallas or axis != -1:
+        return ref.fake_quant_ref(x, levels, axis=axis, eps=eps)
+    shape = x.shape
+    out = _fake_quant_pallas(x.reshape(-1, shape[-1]), levels, eps)
+    return out.reshape(shape)

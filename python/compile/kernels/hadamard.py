@@ -1,0 +1,66 @@
+"""Pallas kernel for the normalized fast Walsh-Hadamard transform.
+
+Used for the online "FFN Had" rotation (Table 2/4): the FFN hidden state
+is rotated by H before quantization and the down-projection weight is
+pre-rotated by H on the Rust side, so the composition is exact in fp32
+(H is orthogonal and an involution after normalization).
+
+The butterfly runs entirely in VMEM on a row-block: log2(n) stages of
+stride-halving add/sub, one HBM read + one write total.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _hadamard_kernel(x_ref, o_ref, *, n, blk):
+    y = x_ref[...].astype(jnp.float32)
+    rows = y.shape[0]
+    y = y.reshape(-1, blk)
+    h = 1
+    while h < blk:
+        y = y.reshape(-1, blk // (2 * h), 2, h)
+        a = y[:, :, 0, :]
+        b = y[:, :, 1, :]
+        y = jnp.stack([a + b, a - b], axis=2)
+        h *= 2
+    o_ref[...] = y.reshape(rows, n) / jnp.sqrt(jnp.float32(blk))
+
+
+def _pick_rows(rows: int, target: int = 128) -> int:
+    if rows <= target:
+        return rows
+    for cand in range(target, 0, -1):
+        if rows % cand == 0:
+            return cand
+    return rows
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _hadamard_pallas(x2d, interpret=True):
+    rows, n = x2d.shape
+    br = _pick_rows(rows)
+    return pl.pallas_call(
+        functools.partial(_hadamard_kernel, n=n, blk=ref.pow2_block(n)),
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), jnp.float32),
+        interpret=interpret,
+    )(x2d.astype(jnp.float32))
+
+
+def hadamard(x, use_pallas=True):
+    """Normalized blocked FWHT along the last axis (block = largest
+    power-of-two factor of the axis length; see ref.hadamard_ref)."""
+    n = x.shape[-1]
+    if not use_pallas:
+        return ref.hadamard_ref(x)
+    shape = x.shape
+    out = _hadamard_pallas(x.reshape(-1, n))
+    return out.reshape(shape)

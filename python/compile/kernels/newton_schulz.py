@@ -1,0 +1,92 @@
+"""Tiled Pallas GEMM + Muon's Newton-Schulz orthogonalization (L1 hot-spot).
+
+The NS iteration is 10 chained square GEMMs per gradient matrix per step,
+so the kernel of interest is a blocked matmul. The BlockSpec is MXU-shaped
+(128x128 output tiles, fp32 accumulation over a K-grid) — see DESIGN.md
+§Hardware-Adaptation for the TPU mapping; on this testbed it runs under
+interpret=True.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .ref import NS_COEFFS, NS_STEPS
+
+# MXU-shaped tile. VMEM per grid step: 3 tiles * 128*128 * 4B = 192 KiB.
+TILE = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (i, j, k) grid step: o[i,j] += a[i,k] @ b[k,j].
+
+    The K axis is the innermost grid dimension, so o_ref revisits the same
+    tile across k steps — initialize on k == 0, accumulate afterwards.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def _pick_block(dim: int, target: int = TILE) -> int:
+    """Largest divisor of `dim` that is <= target (prefer MXU-sized)."""
+    if dim <= target:
+        return dim
+    for cand in range(target, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul_pallas(a, b, interpret=True):
+    """Blocked matmul a @ b via Pallas. Shapes need not be tile-aligned —
+    non-divisible dims fall back to the largest divisor block."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"matmul inner dims mismatch: {a.shape} @ {b.shape}"
+    bm, bn, bk = _pick_block(m), _pick_block(n), _pick_block(k)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def ns_orthogonalize(g, steps=NS_STEPS, coeffs=NS_COEFFS, eps=1e-7,
+                     use_pallas=True):
+    """Newton-Schulz orthogonalization G = U S V^T -> ~U V^T (paper Eq. 2).
+
+    Identical math to ref.ns_orthogonalize_ref but with every GEMM routed
+    through the Pallas tile kernel when use_pallas is set.
+    """
+    if not use_pallas:
+        return ref.ns_orthogonalize_ref(g, steps=steps, coeffs=coeffs,
+                                        eps=eps)
+    mm = matmul_pallas
+    a, b, c = coeffs
+    x = g.astype(jnp.float32)
+    transposed = x.shape[0] > x.shape[1]
+    if transposed:
+        x = x.T
+    x = x / (jnp.sqrt(jnp.sum(x * x)) + eps)
+    for _ in range(steps):
+        gram = mm(x, x.T)
+        poly = b * gram + c * mm(gram, gram)
+        x = a * x + mm(poly, x)
+    if transposed:
+        x = x.T
+    return x

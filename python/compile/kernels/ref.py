@@ -1,0 +1,135 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function here is the mathematical definition; the Pallas kernels in
+this package must match these to float tolerance (pytest + hypothesis
+enforce it). The oracles are also usable directly in the L2 model when
+building the `--kernels jnp` artifact flavor (see DESIGN.md §7).
+"""
+
+import jax.numpy as jnp
+
+# Quintic Newton-Schulz coefficients from Jordan et al. (2024) — tuned so
+# the iteration maps singular values into ~[0.7, 1.3] within 5 steps.
+NS_COEFFS = (3.4445, -4.7750, 2.0315)
+NS_STEPS = 5
+
+
+def matmul_ref(a, b):
+    """Plain f32 matmul, the oracle for the tiled Pallas GEMM."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def ns_orthogonalize_ref(g, steps=NS_STEPS, coeffs=NS_COEFFS, eps=1e-7):
+    """Muon's Newton-Schulz orthogonalization: G = U S V^T -> ~ U V^T.
+
+    Iterates X <- a X + (b (X X^T) + c (X X^T)^2) X on the Frobenius-
+    normalized matrix. Matches Eq. 2 of the paper. Works on any m x n
+    matrix; transposes internally so the Gram matrix is the smaller side.
+    """
+    a, b, c = coeffs
+    x = g.astype(jnp.float32)
+    transposed = x.shape[0] > x.shape[1]
+    if transposed:
+        x = x.T
+    x = x / (jnp.sqrt(jnp.sum(x * x)) + eps)
+    for _ in range(steps):
+        gram = x @ x.T
+        poly = b * gram + c * (gram @ gram)
+        x = a * x + poly @ x
+    if transposed:
+        x = x.T
+    return x
+
+
+def polar_ref(g, steps=30, eps=1e-7):
+    """Exact-limit polar factor via the *cubic* Newton-Schulz iteration
+    X <- 1.5 X - 0.5 X X^T X (converges to U V^T for sigma in (0, sqrt 3)).
+
+    The quintic iteration above is tuned for Muon's speed and lands
+    singular values in ~[0.7, 1.3]; this one is used where true
+    orthogonality matters (EmbProj initialization, rotation matrices).
+    """
+    x = g.astype(jnp.float32)
+    transposed = x.shape[0] > x.shape[1]
+    if transposed:
+        x = x.T
+    x = x / (jnp.sqrt(jnp.sum(x * x)) + eps)
+    for _ in range(steps):
+        x = 1.5 * x - 0.5 * (x @ x.T) @ x
+    if transposed:
+        x = x.T
+    return x
+
+
+def ssnorm_ref(x, gamma, eps=1e-6):
+    """Single-Scale RMSNorm (paper Eq. 3): gamma * x / ||x||_2 (last axis).
+
+    gamma is a single scalar; there is no per-channel scale, hence no
+    privileged basis. Initialized to sqrt(d) so t=0 behaviour matches
+    RMSNorm with unit scales.
+    """
+    norm = jnp.sqrt(jnp.sum(x.astype(jnp.float32) ** 2, axis=-1,
+                            keepdims=True) + eps)
+    return gamma * x / norm
+
+
+def rmsnorm_ref(x, scale, eps=1e-6):
+    """Standard RMSNorm with per-channel learnable scale (the baseline)."""
+    ms = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return x * (scale / jnp.sqrt(ms + eps))
+
+
+def fake_quant_ref(x, levels, axis=-1, eps=1e-8):
+    """Symmetric round-to-nearest quantize-dequantize.
+
+    levels = 2**(bits-1) - 1 (e.g. 7 for 4-bit). The scale is dynamic
+    absmax along `axis` (per-token for activations when axis=-1; pass
+    axis=None for per-tensor). `levels` may be a traced scalar, which is
+    how the evalq artifact exposes bit-width as a runtime input.
+    """
+    x = x.astype(jnp.float32)
+    if axis is None:
+        absmax = jnp.max(jnp.abs(x))
+    else:
+        absmax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = absmax / levels + eps
+    q = jnp.clip(jnp.round(x / scale), -levels - 1, levels)
+    return q * scale
+
+
+def pow2_block(n: int) -> int:
+    """Largest power of two dividing n (the Hadamard block size)."""
+    return n & (-n)
+
+
+def hadamard_ref(x):
+    """Normalized blocked fast Walsh-Hadamard transform along the last axis.
+
+    For n = m * 2^k (2^k the largest power-of-two factor), applies the
+    normalized FWHT independently to each 2^k-sized block — i.e. multiplies
+    by the block-diagonal orthogonal matrix I_m (x) H_{2^k}. This is how
+    QuaRot-style online rotations handle non-power-of-two hidden sizes.
+    Involution: had(had(x)) == x.
+    """
+    n = x.shape[-1]
+    blk = pow2_block(n)
+    orig_shape = x.shape
+    y = x.astype(jnp.float32).reshape(-1, blk)
+    h = 1
+    while h < blk:
+        y = y.reshape(-1, blk // (2 * h), 2, h)
+        a = y[:, :, 0, :]
+        b = y[:, :, 1, :]
+        y = jnp.stack([a + b, a - b], axis=2)
+        h *= 2
+    y = y.reshape(orig_shape) / jnp.sqrt(jnp.float32(blk))
+    return y.astype(jnp.float32)
+
+
+def excess_kurtosis_ref(x, eps=1e-12):
+    """Excess kurtosis E[((x-mu)/sigma)^4] - 3 over all elements (Eq. 4)."""
+    x = x.astype(jnp.float32).reshape(-1)
+    mu = jnp.mean(x)
+    var = jnp.mean((x - mu) ** 2)
+    m4 = jnp.mean((x - mu) ** 4)
+    return m4 / (var ** 2 + eps) - 3.0

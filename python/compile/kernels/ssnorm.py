@@ -1,0 +1,59 @@
+"""Pallas kernel for Single-Scale RMSNorm (paper Eq. 3).
+
+SSNorm(x) = gamma * x / ||x||_2 along the channel axis, with a *scalar*
+learnable gamma — the architectural fix that removes RMSNorm's per-channel
+scale vector (a privileged basis, Section 3.2).
+
+BlockSpec: the row dimension is tiled, the channel dimension stays whole in
+VMEM (d <= 1024 here; one row-block of 128 x d f32 is <= 512 KiB), so the
+L2-norm reduction is a single in-VMEM pass per row.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _ssnorm_kernel(x_ref, gamma_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True) + eps)
+    o_ref[...] = gamma_ref[0] * x / norm
+
+
+def _pick_rows(rows: int, target: int = 128) -> int:
+    if rows <= target:
+        return rows
+    for cand in range(target, 0, -1):
+        if rows % cand == 0:
+            return cand
+    return rows
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def _ssnorm_pallas(x2d, gamma, eps, interpret=True):
+    rows, d = x2d.shape
+    br = _pick_rows(rows)
+    return pl.pallas_call(
+        functools.partial(_ssnorm_kernel, eps=eps),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), jnp.float32),
+        interpret=interpret,
+    )(x2d.astype(jnp.float32), jnp.reshape(gamma, (1,)).astype(jnp.float32))
+
+
+def ssnorm(x, gamma, eps=1e-6, use_pallas=True):
+    """SSNorm over the last axis of an arbitrary-rank input."""
+    if not use_pallas:
+        return ref.ssnorm_ref(x, gamma, eps=eps)
+    shape = x.shape
+    out = _ssnorm_pallas(x.reshape(-1, shape[-1]), gamma, eps)
+    return out.reshape(shape)

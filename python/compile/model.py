@@ -1,0 +1,268 @@
+"""L2: LLaMA-style decoder with the OSP architectural knobs (build-time).
+
+Implements the paper's three pre-training interventions as configuration:
+
+  * norm = "rms" | "ss"   — RMSNorm (per-channel scale vector, outlier-
+    prone baseline) vs Single-Scale RMSNorm (Eq. 3).
+  * embproj = True|False  — learnable full-rank projections after the
+    embedding / before the unembedding (Section 3.3), orthogonally
+    initialized via Newton-Schulz of a Gaussian.
+
+plus the quantization taps used by the evalq/logitsq artifacts: per-token
+RTN fake-quantization of every linear-layer input activation, KV-cache
+quantization, and the optional online Hadamard rotation of the FFN hidden
+state ("FFN Had"). Bit-widths arrive as *runtime* scalars (levels =
+2**(bits-1) - 1), so one lowered artifact serves all bit configurations.
+
+Autodiff note: the training loss path uses the pure-jnp reference kernels
+(Pallas interpret-mode calls have no transpose rule), while the forward-
+only artifacts (evalq/logitsq/probe) and the optimizer's Newton-Schulz
+run the Pallas kernels. test_kernels.py pins the two numerically equal.
+"""
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import ref
+from .kernels.fake_quant import fake_quant
+from .kernels.hadamard import hadamard
+from .kernels.ssnorm import ssnorm
+
+
+# --------------------------------------------------------------------------
+# Parameter specs: the single source of truth for the flattened parameter
+# ordering shared with the Rust side through artifacts/manifest.json.
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple
+    init: str   # "normal" | "normal_out" | "zeros" | "ones" | "sqrt_d" | "orthogonal"
+    kind: str   # "matrix" | "embed" | "unembed" | "norm"
+
+
+def param_specs(cfg: ModelConfig):
+    """Ordered parameter list. Order is load-bearing: it defines the
+    flattened calling convention of every artifact."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    norm_shape = (1,) if cfg.norm == "ss" else (d,)
+    norm_init = "sqrt_d" if cfg.norm == "ss" else "ones"
+    specs = [ParamSpec("embed", (v, d), "normal", "embed")]
+    if cfg.embproj:
+        specs.append(ParamSpec("embproj_in", (d, d), "orthogonal", "matrix"))
+        specs.append(ParamSpec("embproj_out", (d, d), "orthogonal", "matrix"))
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        specs += [
+            ParamSpec(p + "attn_norm", norm_shape, norm_init, "norm"),
+            ParamSpec(p + "wq", (d, d), "normal", "matrix"),
+            ParamSpec(p + "wk", (d, d), "normal", "matrix"),
+            ParamSpec(p + "wv", (d, d), "normal", "matrix"),
+            ParamSpec(p + "wo", (d, d), "normal_out", "matrix"),
+            ParamSpec(p + "ffn_norm", norm_shape, norm_init, "norm"),
+            ParamSpec(p + "w_gate", (d, f), "normal", "matrix"),
+            ParamSpec(p + "w_up", (d, f), "normal", "matrix"),
+            ParamSpec(p + "w_down", (f, d), "normal_out", "matrix"),
+        ]
+    specs.append(ParamSpec("final_norm", norm_shape, norm_init, "norm"))
+    specs.append(ParamSpec("unembed", (d, v), "normal", "unembed"))
+    return specs
+
+
+def init_params(cfg: ModelConfig, key):
+    """Initialize the parameter dict. normal_out is scaled down by
+    1/sqrt(2*n_layers) (residual-branch init); EmbProj is orthogonalized
+    with Newton-Schulz so it starts norm-preserving (Section 3.3)."""
+    params = {}
+    residual_scale = 1.0 / jnp.sqrt(2.0 * cfg.n_layers)
+    for spec in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if spec.init == "normal":
+            w = cfg.init_std * jax.random.normal(sub, spec.shape, jnp.float32)
+        elif spec.init == "normal_out":
+            w = cfg.init_std * residual_scale * jax.random.normal(
+                sub, spec.shape, jnp.float32)
+        elif spec.init == "ones":
+            w = jnp.ones(spec.shape, jnp.float32)
+        elif spec.init == "sqrt_d":
+            w = jnp.full(spec.shape, jnp.sqrt(jnp.float32(cfg.d_model)))
+        elif spec.init == "zeros":
+            w = jnp.zeros(spec.shape, jnp.float32)
+        elif spec.init == "orthogonal":
+            g = jax.random.normal(sub, spec.shape, jnp.float32)
+            w = ref.polar_ref(g, steps=40)
+        else:
+            raise ValueError(spec.init)
+        params[spec.name] = w
+    return params
+
+
+def flatten_params(cfg: ModelConfig, params: dict):
+    return [params[s.name] for s in param_specs(cfg)]
+
+
+def unflatten_params(cfg: ModelConfig, flat):
+    specs = param_specs(cfg)
+    assert len(flat) == len(specs), (len(flat), len(specs))
+    return {s.name: x for s, x in zip(specs, flat)}
+
+
+# --------------------------------------------------------------------------
+# Quantization taps
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class QuantTaps:
+    """Runtime quantization scalars threaded through the forward pass.
+
+    a_levels / kv_levels = 2**(bits-1) - 1 as f32 (pass 2**20 for "off").
+    had_flag in {0.0, 1.0}: online Hadamard on the FFN hidden state before
+    quantizing it (the matching pre-rotation of w_down happens in Rust).
+    use_pallas: route taps through the Pallas kernels (forward-only graphs).
+    """
+    a_levels: jnp.ndarray
+    kv_levels: jnp.ndarray
+    had_flag: jnp.ndarray
+    use_pallas: bool = True
+
+    def act(self, x):
+        return fake_quant(x, self.a_levels, use_pallas=self.use_pallas)
+
+    def kv(self, x):
+        return fake_quant(x, self.kv_levels, use_pallas=self.use_pallas)
+
+    def ffn_hidden(self, h):
+        rotated = hadamard(h, use_pallas=self.use_pallas)
+        h = jnp.where(self.had_flag > 0.5, rotated, h)
+        return self.act(h)
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+def _norm(x, w, cfg: ModelConfig, use_pallas: bool):
+    if cfg.norm == "ss":
+        if use_pallas:
+            return ssnorm(x, w[0])
+        return ref.ssnorm_ref(x, w[0])
+    return ref.rmsnorm_ref(x, w)
+
+
+def _rope(x, theta: float):
+    """Rotary embedding over [B, H, S, hd]."""
+    b, h, s, hd = x.shape
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = jnp.arange(s, dtype=jnp.float32)[:, None] * freqs[None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _split_heads(x, n_heads):
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+
+
+def forward(params: dict, tokens, cfg: ModelConfig,
+            taps: Optional[QuantTaps] = None, probe_layers=None,
+            use_pallas_norm: bool = False):
+    """Run the decoder. Returns (logits, aux) where aux always contains
+    "kurt": excess kurtosis [2*L] of the residual-stream inputs to MHSA
+    and FFN per layer (the paper's Fig-2/3 measurement points), and, if
+    probe_layers is given, the raw probe tensors for Figs 2/5/6/8-11.
+    """
+    b, s = tokens.shape
+    d, nh, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    probe_layers = probe_layers or []
+
+    x = params["embed"][tokens]  # [B, S, D]
+    if cfg.embproj:
+        x = x @ params["embproj_in"]
+
+    kurts = []
+    probes = {"mhsa_in": [], "ffn_in": [], "q_mag": [], "k_mag": [],
+              "attn_logits": []}
+    causal = jnp.tril(jnp.ones((s, s), jnp.bool_))
+
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        # ---- MHSA ----
+        kurts.append(ref.excess_kurtosis_ref(x))
+        if i in probe_layers:
+            probes["mhsa_in"].append(x)
+        h = _norm(x, params[p + "attn_norm"], cfg, use_pallas_norm)
+        if taps is not None:
+            h = taps.act(h)
+        q = _split_heads(h @ params[p + "wq"], nh)
+        k = _split_heads(h @ params[p + "wk"], nh)
+        v = _split_heads(h @ params[p + "wv"], nh)
+        q = _rope(q, cfg.rope_theta)
+        k = _rope(k, cfg.rope_theta)
+        if taps is not None:
+            k = taps.kv(k)
+            v = taps.kv(v)
+        logits_att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(
+            jnp.float32(hd))
+        if i in probe_layers:
+            probes["q_mag"].append(jnp.mean(jnp.abs(q), axis=2))   # [B,H,hd]
+            probes["k_mag"].append(jnp.mean(jnp.abs(k), axis=2))
+            probes["attn_logits"].append(logits_att)
+        logits_att = jnp.where(causal[None, None], logits_att, -1e30)
+        attn = jax.nn.softmax(logits_att, axis=-1)
+        out = _merge_heads(jnp.einsum("bhqk,bhkd->bhqd", attn, v))
+        if taps is not None:
+            out = taps.act(out)
+        x = x + out @ params[p + "wo"]
+
+        # ---- FFN (SwiGLU) ----
+        kurts.append(ref.excess_kurtosis_ref(x))
+        if i in probe_layers:
+            probes["ffn_in"].append(x)
+        h = _norm(x, params[p + "ffn_norm"], cfg, use_pallas_norm)
+        if taps is not None:
+            h = taps.act(h)
+        g = jax.nn.silu(h @ params[p + "w_gate"]) * (h @ params[p + "w_up"])
+        if taps is not None:
+            g = taps.ffn_hidden(g)
+        x = x + g @ params[p + "w_down"]
+
+    x = _norm(x, params["final_norm"], cfg, use_pallas_norm)
+    if cfg.embproj:
+        x = x @ params["embproj_out"]
+    if taps is not None:
+        x = taps.act(x)
+    logits = x @ params["unembed"]
+
+    aux = {"kurt": jnp.stack(kurts)}
+    if probe_layers:
+        aux["probes"] = {k: jnp.stack(vs) for k, vs in probes.items() if vs}
+    return logits, aux
+
+
+def nll(params, tokens, cfg, taps=None):
+    """Summed next-token negative log-likelihood + token count + kurt."""
+    logits, aux = forward(params, tokens, cfg, taps=taps)
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    tgt = tokens[:, 1:]
+    picked = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    count = jnp.float32(tgt.size)
+    return -jnp.sum(picked), count, aux["kurt"]
+
+
+def loss_fn(params, tokens, cfg):
+    """Mean cross-entropy loss (training path: jnp kernels only)."""
+    s, count, kurt = nll(params, tokens, cfg, taps=None)
+    return s / count, kurt

@@ -1,0 +1,213 @@
+"""Optimizers for the train_step artifacts: Adam, Muon (+decoupled Adam
+embeddings), Muon-everywhere, Shampoo, and a SOAP-like method.
+
+All are pure jnp (matmul-only linear algebra — no eigh/qr custom-calls,
+which the runtime's XLA 0.5.1 CPU client could not execute). Shampoo's
+inverse fourth root uses a coupled Newton iteration, the same strategy
+production TPU Shampoo uses; the SOAP variant tracks the Shampoo
+eigenbasis by subspace iteration with Newton-Schulz polar
+orthogonalization (documented approximation — SOAP is only exercised by
+the Table-1 cost benchmark, which measures cost structure, not quality).
+
+State layout is a flat dict (name -> array) whose ordered spec is exported
+to artifacts/manifest.json; the Rust coordinator allocates and threads it.
+"""
+
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels.newton_schulz import ns_orthogonalize
+from .model import param_specs
+
+# Hyperparameters (paper Appendix A.1: wd = 0.01 everywhere; Adam lr is
+# 10x the Muon lr — we thread one runtime `lr` and scale internally).
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.95, 1e-8
+MUON_MOMENTUM = 0.95
+WEIGHT_DECAY = 0.01
+ADAM_LR_RATIO = 10.0   # lr_adam = ADAM_LR_RATIO * lr when inside Muon
+SHAMPOO_EPS = 1e-6
+SHAMPOO_MOMENTUM = 0.9
+
+OPTIMIZERS = ("adam", "muon", "muon_noadam", "shampoo", "soap")
+
+
+def _partition(opt_name: str, cfg: ModelConfig):
+    """Which params get the matrix treatment vs element-wise Adam."""
+    matrix, elementwise = [], []
+    for s in param_specs(cfg):
+        is_matrix = s.kind == "matrix" or (
+            opt_name == "muon_noadam" and s.kind in ("embed", "unembed"))
+        if opt_name in ("muon", "muon_noadam", "shampoo", "soap") and is_matrix:
+            matrix.append(s)
+        else:
+            elementwise.append(s)
+    return matrix, elementwise
+
+
+def opt_state_specs(opt_name: str, cfg: ModelConfig) -> List[Tuple[str, tuple, str]]:
+    """Ordered (name, shape, init) opt-state leaves; init is zeros|eye."""
+    matrix, elementwise = _partition(opt_name, cfg)
+    specs: List[Tuple[str, tuple, str]] = [("step", (1,), "zeros")]
+    for s in elementwise:
+        specs.append((f"adam_m.{s.name}", s.shape, "zeros"))
+        specs.append((f"adam_v.{s.name}", s.shape, "zeros"))
+    for s in matrix:
+        if opt_name in ("muon", "muon_noadam"):
+            specs.append((f"muon_buf.{s.name}", s.shape, "zeros"))
+        elif opt_name == "shampoo":
+            m, n = s.shape
+            specs.append((f"sh_buf.{s.name}", s.shape, "zeros"))
+            specs.append((f"sh_l.{s.name}", (m, m), "zeros"))
+            specs.append((f"sh_r.{s.name}", (n, n), "zeros"))
+        elif opt_name == "soap":
+            m, n = s.shape
+            specs.append((f"so_l.{s.name}", (m, m), "zeros"))
+            specs.append((f"so_r.{s.name}", (n, n), "zeros"))
+            specs.append((f"so_ql.{s.name}", (m, m), "eye"))
+            specs.append((f"so_qr.{s.name}", (n, n), "eye"))
+            specs.append((f"so_m.{s.name}", s.shape, "zeros"))
+            specs.append((f"so_v.{s.name}", s.shape, "zeros"))
+        elif opt_name == "adam":
+            pass  # handled element-wise
+    return specs
+
+
+def init_opt_state(opt_name: str, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    state = {}
+    for name, shape, init in opt_state_specs(opt_name, cfg):
+        if init == "eye":
+            state[name] = jnp.eye(shape[0], dtype=jnp.float32)
+        else:
+            state[name] = jnp.zeros(shape, jnp.float32)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Element-wise Adam (bias-corrected, decoupled weight decay)
+# ---------------------------------------------------------------------------
+
+def _adam_leaf(p, g, m, v, lr, t, wd):
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    mhat = m / (1.0 - ADAM_B1 ** t)
+    vhat = v / (1.0 - ADAM_B2 ** t)
+    p = p * (1.0 - lr * wd) - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return p, m, v
+
+
+# ---------------------------------------------------------------------------
+# Matrix preconditioners
+# ---------------------------------------------------------------------------
+
+def _muon_update(g, buf, use_pallas):
+    """Nesterov momentum + Newton-Schulz orthogonalization + shape scale
+    (Jordan et al. 2024): u = ns(g + mu*buf) * sqrt(max(1, n_out/n_in))."""
+    buf = MUON_MOMENTUM * buf + g
+    u = ns_orthogonalize(g + MUON_MOMENTUM * buf, use_pallas=use_pallas)
+    n_in, n_out = g.shape
+    u = u * jnp.sqrt(jnp.maximum(1.0, n_out / n_in))
+    return u, buf
+
+
+def _inv_fourth_root(a, iters=8, eps=SHAMPOO_EPS):
+    """A^{-1/4} for symmetric PSD A via the coupled Newton iteration
+    (matmul-only; the production TPU-Shampoo approach)."""
+    n = a.shape[0]
+    eye = jnp.eye(n, dtype=jnp.float32)
+    # Normalize by the Frobenius norm (an upper bound on lambda_max) so the
+    # iteration's spectrum starts inside (0, 1], its convergence region.
+    c = jnp.sqrt(jnp.sum(a * a)) + eps
+    m = a / c + eps * eye
+    x = eye
+    for _ in range(iters):
+        t = (5.0 * eye - m) / 4.0
+        x = x @ t
+        t2 = t @ t
+        m = (t2 @ t2) @ m
+    return x / (c ** 0.25)
+
+
+def _shampoo_update(g, buf, l_stat, r_stat):
+    l_stat = l_stat + g @ g.T
+    r_stat = r_stat + g.T @ g
+    pre = _inv_fourth_root(l_stat) @ g @ _inv_fourth_root(r_stat)
+    # Grafting: give the preconditioned direction the raw gradient's norm.
+    gn = jnp.sqrt(jnp.sum(g * g))
+    pn = jnp.sqrt(jnp.sum(pre * pre)) + 1e-12
+    u = pre * (gn / pn)
+    buf = SHAMPOO_MOMENTUM * buf + u
+    return buf, buf, l_stat, r_stat
+
+
+def _soap_update(g, l_stat, r_stat, ql, qr, m, v, t, use_pallas):
+    l_stat = 0.95 * l_stat + 0.05 * (g @ g.T)
+    r_stat = 0.95 * r_stat + 0.05 * (g.T @ g)
+    # One subspace-iteration step toward the stats' eigenbasis, kept
+    # orthogonal by Newton-Schulz polar factorization.
+    ql = ns_orthogonalize(l_stat @ ql, use_pallas=use_pallas)
+    qr = ns_orthogonalize(r_stat @ qr, use_pallas=use_pallas)
+    g_rot = ql.T @ g @ qr
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * g_rot
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * g_rot * g_rot
+    mhat = m / (1.0 - ADAM_B1 ** t)
+    vhat = v / (1.0 - ADAM_B2 ** t)
+    u_rot = mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    u = ql @ u_rot @ qr.T
+    return u, l_stat, r_stat, ql, qr, m, v
+
+
+# ---------------------------------------------------------------------------
+# The single-step update entry point
+# ---------------------------------------------------------------------------
+
+def opt_update(opt_name: str, cfg: ModelConfig, params: Dict, grads: Dict,
+               state: Dict, lr, use_pallas: bool = True):
+    """Apply one optimizer step. lr is a runtime scalar (the Rust
+    coordinator owns the trapezoidal schedule). Returns (params', state')."""
+    assert opt_name in OPTIMIZERS, opt_name
+    matrix, elementwise = _partition(opt_name, cfg)
+    new_p, new_s = {}, {}
+    t = state["step"][0] + 1.0
+    new_s["step"] = state["step"] + 1.0
+
+    lr_adam = lr * ADAM_LR_RATIO if opt_name != "adam" else lr
+    for s in elementwise:
+        wd = WEIGHT_DECAY if s.kind != "norm" else 0.0
+        p, m, v = _adam_leaf(params[s.name], grads[s.name],
+                             state[f"adam_m.{s.name}"],
+                             state[f"adam_v.{s.name}"], lr_adam, t, wd)
+        new_p[s.name] = p
+        new_s[f"adam_m.{s.name}"] = m
+        new_s[f"adam_v.{s.name}"] = v
+
+    for s in matrix:
+        p, g = params[s.name], grads[s.name]
+        if opt_name in ("muon", "muon_noadam"):
+            u, buf = _muon_update(g, state[f"muon_buf.{s.name}"], use_pallas)
+            new_s[f"muon_buf.{s.name}"] = buf
+        elif opt_name == "shampoo":
+            u, buf, l_stat, r_stat = _shampoo_update(
+                g, state[f"sh_buf.{s.name}"], state[f"sh_l.{s.name}"],
+                state[f"sh_r.{s.name}"])
+            new_s[f"sh_buf.{s.name}"] = buf
+            new_s[f"sh_l.{s.name}"] = l_stat
+            new_s[f"sh_r.{s.name}"] = r_stat
+        elif opt_name == "soap":
+            u, l_stat, r_stat, ql, qr, m, v = _soap_update(
+                g, state[f"so_l.{s.name}"], state[f"so_r.{s.name}"],
+                state[f"so_ql.{s.name}"], state[f"so_qr.{s.name}"],
+                state[f"so_m.{s.name}"], state[f"so_v.{s.name}"], t,
+                use_pallas)
+            new_s[f"so_l.{s.name}"] = l_stat
+            new_s[f"so_r.{s.name}"] = r_stat
+            new_s[f"so_ql.{s.name}"] = ql
+            new_s[f"so_qr.{s.name}"] = qr
+            new_s[f"so_m.{s.name}"] = m
+            new_s[f"so_v.{s.name}"] = v
+        else:
+            raise AssertionError(opt_name)
+        new_p[s.name] = p * (1.0 - lr * WEIGHT_DECAY) - lr * u
+
+    return new_p, new_s

@@ -1,0 +1,91 @@
+"""AOT build integrity: artifact catalogue completeness and manifest
+consistency. Uses the builder in-memory (no lowering) plus one real
+lowering smoke test on the cheapest artifact."""
+
+import json
+from pathlib import Path
+
+import jax
+import pytest
+
+from compile import aot, optimizers
+from compile.aot import ARCHS, GRAD_ARCHS, TRAIN_MATRIX, ArtifactBuilder
+from compile.config import PRESETS
+from compile.model import param_specs
+
+
+@pytest.fixture(scope="module")
+def builder():
+    cfg = PRESETS["tiny"]
+    b = ArtifactBuilder(cfg, Path("/tmp/osp_aot_test"), use_pallas=False)
+    b.build_all()
+    return b
+
+
+def test_catalogue_complete(builder):
+    names = set(builder.entries)
+    for arch in ARCHS:
+        for prefix in ("init", "evalq", "logitsq", "probe"):
+            assert f"{prefix}_{arch}" in names
+    for arch in GRAD_ARCHS:
+        assert f"grad_{arch}" in names
+    for opt, arch in TRAIN_MATRIX:
+        assert f"train_{opt}_{arch}" in names
+    assert any(n.startswith("ns_") for n in names)
+
+
+def test_train_io_counts(builder):
+    cfg = PRESETS["tiny"]
+    for opt, arch in TRAIN_MATRIX:
+        acfg = cfg.with_(**ARCHS[arch])
+        e = builder.entries[f"train_{opt}_{arch}"]
+        np_ = len(param_specs(acfg))
+        no = len(optimizers.opt_state_specs(opt, acfg))
+        assert len(e["inputs"]) == np_ + no + 2   # + tokens + lr
+        assert len(e["outputs"]) == np_ + no + 2  # + loss + kurt
+
+
+def test_io_metadata_shapes_match_specs(builder):
+    """Every input's declared shape must match its ShapeDtypeStruct."""
+    for name, e in builder.entries.items():
+        for spec, meta in e["inputs"]:
+            assert list(spec.shape) == meta["shape"], (name, meta)
+            want = "i32" if spec.dtype.name == "int32" else "f32"
+            assert meta["dtype"] == want, (name, meta)
+
+
+def test_ns_artifacts_cover_all_matrix_shapes(builder):
+    cfg = PRESETS["tiny"]
+    for arch in GRAD_ARCHS:
+        acfg = cfg.with_(**ARCHS[arch])
+        for s in param_specs(acfg):
+            if len(s.shape) == 2 and s.kind in ("matrix", "embed",
+                                                "unembed"):
+                m, n = s.shape
+                assert f"ns_{m}x{n}" in builder.entries, s.name
+
+
+def test_lowering_smoke_and_hlo_wellformed(builder):
+    name = sorted(n for n in builder.entries if n.startswith("ns_"))[0]
+    text, _dt = builder.lower(name)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    assert "custom-call" not in text  # CPU PJRT 0.5.1 can't run those
+
+
+def test_manifest_roundtrip(tmp_path):
+    rc = aot.main(["--out-dir", str(tmp_path), "--preset", "tiny",
+                   "--only", "ns_64x64"])
+    assert rc == 0
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["model_config"]["d_model"] == 64
+    assert "ns_64x64" in manifest["artifacts"]
+    entry = manifest["artifacts"]["ns_64x64"]
+    assert (tmp_path / entry["file"]).exists()
+    for arch in ARCHS:
+        assert manifest["param_specs"][arch]
+        assert set(manifest["opt_specs"][arch]) == set(optimizers.OPTIMIZERS)
+    # cached second run: same hash, no rebuild needed
+    rc = aot.main(["--out-dir", str(tmp_path), "--preset", "tiny",
+                   "--only", "ns_64x64"])
+    assert rc == 0

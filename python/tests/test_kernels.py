@@ -1,0 +1,238 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/values; assert_allclose against ref.py is THE
+core correctness signal for the kernels that end up inside the shipped
+HLO artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fake_quant import fake_quant
+from compile.kernels.hadamard import hadamard
+from compile.kernels.newton_schulz import matmul_pallas, ns_orthogonalize
+from compile.kernels.ssnorm import ssnorm
+
+SETTINGS = dict(deadline=None, max_examples=15)
+
+
+def _randn(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape,
+                                     jnp.float32)
+
+
+# ---------------------------------------------------------------- matmul
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 160), k=st.integers(1, 160), n=st.integers(1, 160),
+       seed=st.integers(0, 2**30))
+def test_matmul_matches_ref(m, k, n, seed):
+    a = _randn(seed, (m, k))
+    b = _randn(seed + 1, (k, n))
+    np.testing.assert_allclose(matmul_pallas(a, b), ref.matmul_ref(a, b),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_matmul_tile_aligned():
+    a = _randn(0, (256, 128))
+    b = _randn(1, (128, 256))
+    np.testing.assert_allclose(matmul_pallas(a, b), ref.matmul_ref(a, b),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------- newton-schulz
+
+@settings(**SETTINGS)
+@given(m=st.sampled_from([8, 24, 64, 96]), n=st.sampled_from([8, 32, 64]),
+       seed=st.integers(0, 2**30))
+def test_ns_matches_ref(m, n, seed):
+    g = _randn(seed, (m, n))
+    np.testing.assert_allclose(ns_orthogonalize(g),
+                               ref.ns_orthogonalize_ref(g),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(deadline=None, max_examples=8)
+@given(seed=st.integers(0, 2**30))
+def test_ns_output_near_orthogonal(seed):
+    """NS output should have singular values near 1: X^T X ~ I for a
+    well-conditioned tall input (the paper's UV^T map, Eq. 2)."""
+    g = _randn(seed, (96, 48))
+    x = np.asarray(ref.ns_orthogonalize_ref(g, steps=10))
+    gram = x.T @ x
+    # Quintic NS converges to sigma in [0.7, 1.3]; with 10 steps and a
+    # random Gaussian (well-conditioned whp) we get close to identity.
+    assert np.abs(np.diag(gram) - 1.0).max() < 0.35
+    off = gram - np.diag(np.diag(gram))
+    assert np.abs(off).max() < 0.35
+
+
+def test_ns_matches_svd_oracle():
+    """Against the true polar factor U V^T computed by numpy SVD."""
+    g = np.asarray(_randn(7, (64, 32)))
+    u, _s, vt = np.linalg.svd(g, full_matrices=False)
+    polar = u @ vt
+    x = np.asarray(ref.ns_orthogonalize_ref(jnp.asarray(g), steps=10))
+    # NS(5-step quintic) is an approximation; direction must match well.
+    cos = np.sum(polar * x) / (np.linalg.norm(polar) * np.linalg.norm(x))
+    assert cos > 0.98, cos
+
+
+@settings(deadline=None, max_examples=6)
+@given(m=st.sampled_from([16, 48, 64]), n=st.sampled_from([16, 64]),
+       seed=st.integers(0, 2**30))
+def test_polar_is_orthogonal(m, n, seed):
+    """The cubic polar iteration must reach true orthogonality (used for
+    EmbProj init and rotation matrices, unlike Muon's quintic)."""
+    g = _randn(seed, (m, n))
+    x = np.asarray(ref.polar_ref(g, steps=40))
+    if m >= n:
+        gram = x.T @ x
+    else:
+        gram = x @ x.T
+    assert np.abs(gram - np.eye(min(m, n))).max() < 1e-3
+
+
+def test_ns_transposed_consistency():
+    g = _randn(3, (40, 80))
+    a = ref.ns_orthogonalize_ref(g)
+    b = ref.ns_orthogonalize_ref(g.T).T
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------- ssnorm
+
+@settings(**SETTINGS)
+@given(rows=st.integers(1, 200), d=st.integers(2, 256),
+       gamma=st.floats(0.1, 30.0), seed=st.integers(0, 2**30))
+def test_ssnorm_matches_ref(rows, d, gamma, seed):
+    x = _randn(seed, (rows, d), scale=3.0)
+    np.testing.assert_allclose(ssnorm(x, jnp.float32(gamma)),
+                               ref.ssnorm_ref(x, gamma),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ssnorm_output_norm_is_gamma():
+    """||SSNorm(x)||_2 == gamma for every row — the single-scale property
+    that removes the privileged per-channel basis (paper Eq. 3)."""
+    x = _randn(0, (32, 64), scale=5.0)
+    y = np.asarray(ref.ssnorm_ref(x, 4.0))
+    np.testing.assert_allclose(np.linalg.norm(y, axis=-1), 4.0, rtol=1e-4)
+
+
+def test_ssnorm_scale_invariance():
+    """SSNorm(c*x) == SSNorm(x): magnitude information is fully removed."""
+    x = _randn(1, (8, 32))
+    np.testing.assert_allclose(ref.ssnorm_ref(3.7 * x, 2.0),
+                               ref.ssnorm_ref(x, 2.0), rtol=1e-4, atol=1e-5)
+
+
+def test_ssnorm_3d_input():
+    x = _randn(2, (2, 16, 48))
+    np.testing.assert_allclose(ssnorm(x, jnp.float32(6.0)),
+                               ref.ssnorm_ref(x, 6.0), rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------- fake_quant
+
+@settings(**SETTINGS)
+@given(rows=st.integers(1, 100), d=st.integers(1, 128),
+       bits=st.integers(2, 8), seed=st.integers(0, 2**30))
+def test_fake_quant_matches_ref(rows, d, bits, seed):
+    x = _randn(seed, (rows, d), scale=4.0)
+    levels = float(2 ** (bits - 1) - 1)
+    np.testing.assert_allclose(fake_quant(x, levels),
+                               ref.fake_quant_ref(x, levels),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(bits=st.integers(2, 8), seed=st.integers(0, 2**30))
+def test_fake_quant_error_bound(bits, seed):
+    """|x - q(x)| <= scale/2 + eps where scale = absmax/levels (RTN)."""
+    x = _randn(seed, (16, 64), scale=2.0)
+    levels = float(2 ** (bits - 1) - 1)
+    q = np.asarray(ref.fake_quant_ref(x, levels))
+    scale = np.abs(np.asarray(x)).max(-1, keepdims=True) / levels
+    assert (np.abs(q - np.asarray(x)) <= scale / 2 + 1e-5).all()
+
+
+def test_fake_quant_identity_at_high_levels():
+    """levels = 2**20 must be numerically the identity — this is how the
+    16-bit columns of Table 2 are expressed at runtime."""
+    x = _randn(0, (8, 32))
+    q = ref.fake_quant_ref(x, float(2 ** 20))
+    np.testing.assert_allclose(q, x, rtol=1e-4, atol=1e-5)
+
+
+def test_fake_quant_grid_size():
+    """4-bit RTN must produce at most 16 distinct values per row."""
+    x = _randn(1, (4, 256), scale=3.0)
+    q = np.asarray(ref.fake_quant_ref(x, 7.0))
+    for row in q:
+        assert len(np.unique(np.round(row / (np.abs(row).max() / 7 + 1e-8))
+                             )) <= 16
+
+
+# --------------------------------------------------------------- hadamard
+
+@settings(**SETTINGS)
+@given(rows=st.integers(1, 64),
+       n=st.sampled_from([2, 8, 16, 64, 128, 176, 352, 96]),
+       seed=st.integers(0, 2**30))
+def test_hadamard_matches_ref(rows, n, seed):
+    x = _randn(seed, (rows, n))
+    np.testing.assert_allclose(hadamard(x), ref.hadamard_ref(x),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(n=st.sampled_from([16, 64, 176, 352]), seed=st.integers(0, 2**30))
+def test_hadamard_involution(n, seed):
+    x = _randn(seed, (8, n))
+    np.testing.assert_allclose(ref.hadamard_ref(ref.hadamard_ref(x)), x,
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(n=st.sampled_from([16, 64, 176]), seed=st.integers(0, 2**30))
+def test_hadamard_preserves_norm(n, seed):
+    """Orthogonality: per-row L2 norm is preserved."""
+    x = _randn(seed, (8, n))
+    y = np.asarray(ref.hadamard_ref(x))
+    np.testing.assert_allclose(np.linalg.norm(y, axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-4)
+
+
+def test_hadamard_flattens_outliers():
+    """The rotation's whole point: a one-hot spike becomes flat."""
+    x = np.zeros((1, 64), np.float32)
+    x[0, 17] = 64.0
+    y = np.asarray(ref.hadamard_ref(jnp.asarray(x)))
+    assert np.abs(y).max() <= 64.0 / np.sqrt(64) + 1e-4
+
+
+# ------------------------------------------------------------- kurtosis
+
+def test_excess_kurtosis_gaussian_near_zero():
+    x = _randn(0, (200_000,))
+    k = float(ref.excess_kurtosis_ref(x))
+    assert abs(k) < 0.1, k
+
+
+def test_excess_kurtosis_heavy_tail_positive():
+    x = np.asarray(_randn(1, (100_000,))).copy()
+    x[:50] *= 100.0  # inject outliers
+    assert float(ref.excess_kurtosis_ref(jnp.asarray(x))) > 50.0
+
+
+def test_excess_kurtosis_uniform_negative():
+    x = jnp.asarray(np.random.default_rng(0).uniform(-1, 1, 100_000)
+                    .astype(np.float32))
+    k = float(ref.excess_kurtosis_ref(x))
+    assert -1.4 < k < -1.0  # uniform has excess kurtosis -1.2

@@ -1,0 +1,188 @@
+"""L2 model invariants: shapes, OSP component semantics, quantization
+taps, and the EmbProj absorption (computational invariance, Section 3.3).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.config import PRESETS
+from compile.model import QuantTaps
+
+CFG = PRESETS["tiny"]
+KEY = jax.random.PRNGKey(0)
+
+
+def _toks(cfg, batch=2, seed=0):
+    return jax.random.randint(jax.random.PRNGKey(seed), (batch, cfg.seq_len),
+                              0, cfg.vocab_size)
+
+
+def _taps(a_bits=16, kv_bits=16, had=0.0, use_pallas=False):
+    lv = lambda b: float(2 ** 20 if b >= 16 else 2 ** (b - 1) - 1)
+    return QuantTaps(jnp.float32(lv(a_bits)), jnp.float32(lv(kv_bits)),
+                     jnp.float32(had), use_pallas=use_pallas)
+
+
+ARCHS = [dict(norm="rms", embproj=False), dict(norm="ss", embproj=False),
+         dict(norm="rms", embproj=True), dict(norm="ss", embproj=True)]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes(arch):
+    cfg = CFG.with_(**arch)
+    params = model.init_params(cfg, KEY)
+    toks = _toks(cfg)
+    logits, aux = model.forward(params, toks, cfg)
+    assert logits.shape == (2, cfg.seq_len, cfg.vocab_size)
+    assert aux["kurt"].shape == (2 * cfg.n_layers,)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_flatten_roundtrip(arch):
+    cfg = CFG.with_(**arch)
+    params = model.init_params(cfg, KEY)
+    flat = model.flatten_params(cfg, params)
+    back = model.unflatten_params(cfg, flat)
+    assert set(back) == set(params)
+    for k in params:
+        np.testing.assert_array_equal(params[k], back[k])
+
+
+def test_param_specs_embproj_presence():
+    assert not any(s.name.startswith("embproj")
+                   for s in model.param_specs(CFG))
+    cfg = CFG.with_(embproj=True)
+    names = [s.name for s in model.param_specs(cfg)]
+    assert "embproj_in" in names and "embproj_out" in names
+
+
+def test_embproj_orthogonal_init():
+    """EmbProj must start ~orthogonal to preserve embedding norms."""
+    cfg = CFG.with_(embproj=True)
+    params = model.init_params(cfg, KEY)
+    p = np.asarray(params["embproj_in"])
+    gram = p.T @ p
+    assert np.abs(gram - np.eye(cfg.d_model)).max() < 0.05
+
+
+def test_ssnorm_param_is_scalar():
+    cfg = CFG.with_(norm="ss")
+    specs = {s.name: s for s in model.param_specs(cfg)}
+    assert specs["layers.0.attn_norm"].shape == (1,)
+    assert specs["final_norm"].shape == (1,)
+    # initialized to sqrt(d) so t=0 matches unit-scale RMSNorm
+    params = model.init_params(cfg, KEY)
+    np.testing.assert_allclose(params["final_norm"][0],
+                               np.sqrt(cfg.d_model), rtol=1e-6)
+
+
+def test_quant_taps_off_is_identity():
+    """levels=2**20 + had=0 must match the un-tapped forward closely."""
+    cfg = CFG
+    params = model.init_params(cfg, KEY)
+    toks = _toks(cfg)
+    base, _ = model.forward(params, toks, cfg)
+    tapped, _ = model.forward(params, toks, cfg, taps=_taps(16, 16, 0.0))
+    np.testing.assert_allclose(base, tapped, rtol=1e-3, atol=1e-3)
+
+
+def test_quant_4bit_changes_logits():
+    cfg = CFG
+    params = model.init_params(cfg, KEY)
+    toks = _toks(cfg)
+    base, _ = model.forward(params, toks, cfg)
+    q, _ = model.forward(params, toks, cfg, taps=_taps(4, 4, 0.0))
+    assert np.abs(np.asarray(base) - np.asarray(q)).max() > 1e-3
+
+
+def test_quant_pallas_matches_jnp_taps():
+    """The pallas-kernel taps and the jnp-oracle taps must agree — this is
+    the cross-flavor guarantee the artifact build relies on."""
+    cfg = CFG
+    params = model.init_params(cfg, KEY)
+    toks = _toks(cfg)
+    a, _ = model.forward(params, toks, cfg,
+                         taps=_taps(4, 8, 1.0, use_pallas=False))
+    b, _ = model.forward(params, toks, cfg,
+                         taps=_taps(4, 8, 1.0, use_pallas=True))
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+def test_embproj_absorption_invariance():
+    """Folding embproj_in into embed and embproj_out into unembed must
+    reproduce the plain architecture's logits exactly (Section 3.3:
+    'absorbed into their adjacent embeddings after training')."""
+    cfg = CFG.with_(embproj=True)
+    params = model.init_params(cfg, KEY)
+    toks = _toks(cfg)
+    ref_logits, _ = model.forward(params, toks, cfg)
+
+    plain_cfg = CFG.with_(embproj=False)
+    absorbed = {k: v for k, v in params.items()
+                if not k.startswith("embproj")}
+    absorbed["embed"] = params["embed"] @ params["embproj_in"]
+    absorbed["unembed"] = params["embproj_out"] @ params["unembed"]
+    got, _ = model.forward(absorbed, toks, plain_cfg)
+    np.testing.assert_allclose(ref_logits, got, rtol=2e-4, atol=2e-4)
+
+
+def test_loss_decreases_with_training_signal():
+    """Sanity: loss at init is ~ln(V) for uniform predictions."""
+    cfg = CFG
+    params = model.init_params(cfg, KEY)
+    loss, _ = model.loss_fn(params, _toks(cfg), cfg)
+    assert abs(float(loss) - np.log(cfg.vocab_size)) < 1.0
+
+
+def test_nll_count():
+    cfg = CFG
+    params = model.init_params(cfg, KEY)
+    toks = _toks(cfg, batch=3)
+    s, count, kurt = model.nll(params, toks, cfg)
+    assert int(count) == 3 * (cfg.seq_len - 1)
+    assert float(s) > 0
+    assert kurt.shape == (2 * cfg.n_layers,)
+
+
+def test_causality():
+    """Changing a future token must not affect past logits."""
+    cfg = CFG
+    params = model.init_params(cfg, KEY)
+    toks = np.asarray(_toks(cfg))
+    logits1, _ = model.forward(params, jnp.asarray(toks), cfg)
+    toks2 = toks.copy()
+    toks2[:, -1] = (toks2[:, -1] + 1) % cfg.vocab_size
+    logits2, _ = model.forward(params, jnp.asarray(toks2), cfg)
+    np.testing.assert_allclose(logits1[:, :-1], logits2[:, :-1],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kurtosis_tap_detects_planted_outlier():
+    """Scaling one channel of the embedding matrix must raise the
+    measured residual-stream kurtosis — the Fig-2/3 measurement works."""
+    cfg = CFG
+    params = model.init_params(cfg, KEY)
+    toks = _toks(cfg)
+    _, aux0 = model.forward(params, toks, cfg)
+    spiked = dict(params)
+    col = np.asarray(params["embed"]).copy()
+    col[:, 3] *= 50.0
+    spiked["embed"] = jnp.asarray(col)
+    _, aux1 = model.forward(spiked, toks, cfg)
+    assert float(aux1["kurt"][0]) > float(aux0["kurt"][0]) + 5.0
+
+
+def test_probe_outputs():
+    cfg = CFG
+    params = model.init_params(cfg, KEY)
+    toks = _toks(cfg)
+    _, aux = model.forward(params, toks, cfg, probe_layers=[0, 1])
+    pr = aux["probes"]
+    assert pr["mhsa_in"].shape == (2, 2, cfg.seq_len, cfg.d_model)
+    assert pr["attn_logits"].shape == (
+        2, 2, cfg.n_heads, cfg.seq_len, cfg.seq_len)
+    assert pr["q_mag"].shape == (2, 2, cfg.n_heads, cfg.head_dim)

@@ -1,0 +1,22 @@
+//! Figure 1 — fp16 vs 4-bit score per saved checkpoint: Adam checkpoints
+//! collapse off the diagonal; OSP checkpoints stay near it.
+
+use osp::repro::{self, Effort};
+use osp::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from(
+        std::env::var("OSP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()));
+    let runs = std::path::PathBuf::from(
+        std::env::var("OSP_RUNS").unwrap_or_else(|_| "runs".into()));
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP fig1: no artifacts");
+        return Ok(());
+    }
+    let engine = Engine::open(&dir)?;
+    match repro::fig1(&engine, &runs, Effort::QUICK) {
+        Ok(t) => t.print(),
+        Err(e) => eprintln!("SKIP fig1: {e}"),
+    }
+    Ok(())
+}

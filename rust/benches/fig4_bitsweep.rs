@@ -1,0 +1,28 @@
+//! Figure 4 — WikiText-2-analog perplexity across weight x activation
+//! bit-widths for Adam / Muon / OSP (RTN). Also prints the Figure 3/7
+//! training-dynamics summary from telemetry.
+
+use osp::repro::{self, Effort};
+use osp::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from(
+        std::env::var("OSP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()));
+    let runs = std::path::PathBuf::from(
+        std::env::var("OSP_RUNS").unwrap_or_else(|_| "runs".into()));
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP fig4: no artifacts");
+        return Ok(());
+    }
+    let engine = Engine::open(&dir)?;
+    // Quick variant: the two headline configs; `osp repro fig4` adds muon.
+    match repro::fig4(&engine, &runs, &["adam", "osp"], Effort::QUICK) {
+        Ok(t) => t.print(),
+        Err(e) => eprintln!("SKIP fig4: {e}"),
+    }
+    match repro::fig3(&runs, &repro::ablation_tags()) {
+        Ok(s) => println!("{s}"),
+        Err(e) => eprintln!("SKIP fig3: {e}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Microbenchmarks of the L3 substrates (§Perf): host linalg (the
+//! disaggregated-Muon outer loop), quantization kernels, ring all-reduce,
+//! the data pipeline, and raw executable dispatch overhead.
+
+use osp::bench::{bench, Table};
+use osp::coordinator::dp::ring_all_reduce;
+use osp::data::{Split, TokenStream};
+use osp::quant::rtn;
+use osp::tensor::linalg;
+use osp::tensor::Tensor;
+use osp::util::rng::Pcg;
+
+fn randn(shape: &[usize], seed: u64) -> Tensor {
+    let mut rng = Pcg::new(seed, 8);
+    let mut t = Tensor::zeros(shape);
+    rng.fill_normal(t.data_mut(), 1.0);
+    t
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut table = Table::new(
+        "L3 microbenchmarks",
+        &["op", "size", "mean (ms)", "throughput"]);
+
+    let a = randn(&[256, 256], 1);
+    let b = randn(&[256, 256], 2);
+    let t = bench(2, 10, || {
+        std::hint::black_box(linalg::matmul(&a, &b));
+    });
+    table.row(vec!["matmul".into(), "256x256".into(),
+                   format!("{:.2}", t.mean_secs * 1e3),
+                   format!("{:.2} GFLOP/s",
+                           2.0 * 256f64.powi(3) / t.mean_secs / 1e9)]);
+
+    let g = randn(&[256, 256], 3);
+    let t = bench(1, 5, || {
+        std::hint::black_box(linalg::ns_orthogonalize(&g, 5));
+    });
+    table.row(vec!["newton_schulz(5)".into(), "256x256".into(),
+                   format!("{:.2}", t.mean_secs * 1e3),
+                   format!("{:.0} mat/s", t.per_sec())]);
+
+    let w = randn(&[512, 512], 4);
+    let t = bench(1, 10, || {
+        std::hint::black_box(rtn::quantize_per_channel(&w, 4));
+    });
+    table.row(vec!["rtn_per_channel".into(), "512x512".into(),
+                   format!("{:.2}", t.mean_secs * 1e3),
+                   format!("{:.1} Melem/s",
+                           w.len() as f64 / t.mean_secs / 1e6)]);
+
+    let x = randn(&[512, 512], 5);
+    let t = bench(1, 10, || {
+        std::hint::black_box(linalg::hadamard_rows(&x));
+    });
+    table.row(vec!["hadamard_rows".into(), "512x512".into(),
+                   format!("{:.2}", t.mean_secs * 1e3),
+                   format!("{:.1} Melem/s",
+                           x.len() as f64 / t.mean_secs / 1e6)]);
+
+    for k in [2usize, 4, 8] {
+        let n = 1 << 18;
+        let t = bench(1, 5, || {
+            let parts: Vec<Vec<f32>> =
+                (0..k).map(|i| vec![i as f32; n]).collect();
+            std::hint::black_box(ring_all_reduce(parts));
+        });
+        table.row(vec![format!("ring_all_reduce(k={k})"),
+                       format!("{n} f32"),
+                       format!("{:.2}", t.mean_secs * 1e3),
+                       format!("{:.1} MB/s",
+                               (k * n * 4) as f64 / t.mean_secs / 1e6)]);
+    }
+
+    let t = bench(1, 5, || {
+        let mut s = TokenStream::new(512, 1, Split::Train, 0, 1);
+        for i in 0..20 {
+            std::hint::black_box(s.next_batch(8, 128, i));
+        }
+    });
+    table.row(vec!["data 20 batches".into(), "8x128".into(),
+                   format!("{:.2}", t.mean_secs * 1e3),
+                   format!("{:.2} Mtok/s",
+                           20.0 * 8.0 * 128.0 / t.mean_secs / 1e6)]);
+
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! §Perf — training-step dispatch study: single-step fused executable vs
+//! the K-step scan artifact (train8_*), measuring how much of the step is
+//! host<->device parameter traffic vs compute, plus evalq dispatch cost.
+//!
+//!   cargo bench --bench perf_steps
+
+use osp::bench::{bench, Table};
+use osp::runtime::{Engine, HostValue};
+use osp::util::rng::Pcg;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from(
+        std::env::var("OSP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()));
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP perf_steps: no artifacts");
+        return Ok(());
+    }
+    let engine = Engine::open(&dir)?;
+    let m = engine.manifest();
+    let (b, s) = (m.batch_train, m.model.seq_len);
+    let mut table = Table::new(
+        "§Perf — step dispatch: 1-step vs 8-step artifacts",
+        &["config", "artifact", "ms/step", "tok/s", "speedup"]);
+
+    for (opt, arch) in [("adam", "rmsnorm_plain"),
+                        ("muon", "ssnorm_embproj")] {
+        let init = engine.load(&format!("init_{arch}"))?;
+        let params: Vec<HostValue> = init
+            .run(&[HostValue::tokens(&[1], vec![3])])?
+            .into_iter()
+            .map(|t| HostValue::F32(t.into_f32().unwrap()))
+            .collect();
+        let opt_state: Vec<HostValue> =
+            osp::runtime::init_opt_state(m.opt_leaves(arch, opt)?)
+                .into_iter()
+                .map(HostValue::F32)
+                .collect();
+        let mut rng = Pcg::new(5, 0);
+        let mut toks = |n: usize| -> Vec<i32> {
+            (0..n).map(|_| rng.below(m.model.vocab_size as u64) as i32)
+                .collect()
+        };
+
+        // Single-step.
+        let exe1 = engine.load(&format!("train_{opt}_{arch}"))?;
+        let mut in1: Vec<HostValue> = params.clone();
+        in1.extend(opt_state.iter().cloned());
+        in1.push(HostValue::tokens(&[b, s], toks(b * s)));
+        in1.push(HostValue::scalar(1e-3));
+        let t1 = bench(1, 5, || {
+            exe1.run(&in1).expect("step");
+        });
+        let tok1 = (b * s) as f64 / t1.mean_secs;
+        table.row(vec![format!("{opt}@{arch}"), "train (1-step)".into(),
+                       format!("{:.1}", 1e3 * t1.mean_secs),
+                       format!("{tok1:.0}"), "1.00x".into()]);
+
+        // 8-step scan (if built).
+        let name8 = format!("train8_{opt}_{arch}");
+        if engine.manifest().artifact(&name8).is_ok() {
+            let exe8 = engine.load(&name8)?;
+            let k = 8usize;
+            let mut in8: Vec<HostValue> = params.clone();
+            in8.extend(opt_state.iter().cloned());
+            in8.push(HostValue::tokens(&[k, b, s], toks(k * b * s)));
+            in8.push(HostValue::F32(osp::tensor::Tensor::new(
+                vec![k], vec![1e-3; k])));
+            let t8 = bench(1, 3, || {
+                exe8.run(&in8).expect("step8");
+            });
+            let per_step = t8.mean_secs / k as f64;
+            table.row(vec![
+                format!("{opt}@{arch}"), "train8 (scan)".into(),
+                format!("{:.1}", 1e3 * per_step),
+                format!("{:.0}", (b * s) as f64 / per_step),
+                format!("{:.2}x", t1.mean_secs / per_step),
+            ]);
+        }
+    }
+
+    // Dispatch overhead floor: the cheapest executable (ns_*).
+    if let Some(ns) = engine.manifest().artifacts.keys()
+        .find(|n| n.starts_with("ns_")).cloned()
+    {
+        let exe = engine.load(&ns)?;
+        let shape = exe.spec.inputs[0].shape.clone();
+        let mut g = osp::tensor::Tensor::zeros(&shape);
+        Pcg::new(1, 1).fill_normal(g.data_mut(), 1.0);
+        let inp = [HostValue::F32(g)];
+        let t = bench(2, 10, || {
+            exe.run(&inp).expect("ns");
+        });
+        table.row(vec!["dispatch floor".into(), ns,
+                       format!("{:.2}", 1e3 * t.mean_secs),
+                       "-".into(), "-".into()]);
+    }
+    table.print();
+    Ok(())
+}

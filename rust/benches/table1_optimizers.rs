@@ -1,0 +1,89 @@
+//! Table 1 — optimizer cost comparison: training throughput (TPS,
+//! relative to Adam), optimizer-state memory, and build (compile) time
+//! per optimizer, all through the fused train_* executables.
+//!
+//!   cargo bench --bench table1_optimizers
+
+use std::time::Instant;
+
+use osp::bench::{bench, Table};
+use osp::runtime::{Engine, HostValue};
+use osp::util::rng::Pcg;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from(
+        std::env::var("OSP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()));
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP table1: no artifacts (run `make artifacts`)");
+        return Ok(());
+    }
+    let engine = Engine::open(&dir)?;
+    let m = engine.manifest();
+    let arch = "rmsnorm_plain";
+    let (b, s) = (m.batch_train, m.model.seq_len);
+    let tokens_per_step = (b * s) as f64;
+    let param_elems = m.param_count(arch)? as f64;
+
+    let init = engine.load(&format!("init_{arch}"))?;
+    let params: Vec<HostValue> = init
+        .run(&[HostValue::tokens(&[1], vec![3])])?
+        .into_iter()
+        .map(|t| HostValue::F32(t.into_f32().unwrap()))
+        .collect();
+    let mut rng = Pcg::new(5, 0);
+    let toks: Vec<i32> = (0..b * s)
+        .map(|_| rng.below(m.model.vocab_size as u64) as i32)
+        .collect();
+    let tokens = HostValue::tokens(&[b, s], toks);
+
+    let mut table = Table::new(
+        "Table 1 — optimizer cost (paper: Adam 100%, Muon 97.9%, \
+         Shampoo 75.5%, SOAP worse; mem 36/24/~113/~101 LD^2)",
+        &["Optimizer", "TPS", "Relative", "OptState/Params", "Build (s)",
+          "Step (ms)"]);
+
+    let mut adam_tps = None;
+    for opt in ["adam", "muon", "muon_noadam", "shampoo", "soap"] {
+        let name = format!("train_{opt}_{arch}");
+        if engine.manifest().artifact(&name).is_err() {
+            continue;
+        }
+        // Build time = parse + XLA compile (what the paper's "Build Time"
+        // column measures on its TPU toolchain).
+        let t0 = Instant::now();
+        let exe = engine.load(&name)?;
+        let build_secs = t0.elapsed().as_secs_f64();
+
+        let opt_state: Vec<HostValue> =
+            osp::runtime::init_opt_state(m.opt_leaves(arch, opt)?)
+                .into_iter()
+                .map(HostValue::F32)
+                .collect();
+        let state_elems = m.opt_state_count(arch, opt)? as f64;
+
+        let mut inputs: Vec<HostValue> = params.clone();
+        inputs.extend(opt_state.iter().cloned());
+        inputs.push(tokens.clone());
+        inputs.push(HostValue::scalar(1e-3));
+
+        let timing = bench(1, 5, || {
+            exe.run(&inputs).expect("train step");
+        });
+        let tps = tokens_per_step / timing.mean_secs;
+        let rel = adam_tps.map(|a: f64| tps / a).unwrap_or(1.0);
+        if opt == "adam" {
+            adam_tps = Some(tps);
+        }
+        table.row(vec![
+            opt.to_string(),
+            format!("{tps:.0}"),
+            format!("{:.1}%", 100.0 * rel),
+            format!("{:.2}x", state_elems / param_elems),
+            format!("{build_secs:.2}"),
+            format!("{:.1}", 1000.0 * timing.mean_secs),
+        ]);
+        eprintln!("  measured {opt}");
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,27 @@
+//! Table 2 — the ablation grid across quantization configurations
+//! (quick-effort variant; `osp repro table2 --full` for the full rows).
+//! Requires trained runs (`cargo run --release --example train_osp --
+//! --ablation`).
+
+use osp::repro::{self, Effort};
+use osp::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from(
+        std::env::var("OSP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()));
+    let runs = std::path::PathBuf::from(
+        std::env::var("OSP_RUNS").unwrap_or_else(|_| "runs".into()));
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP table2: no artifacts");
+        return Ok(());
+    }
+    let engine = Engine::open(&dir)?;
+    // Quick variant over the three headline configs; the full grid is
+    // `osp repro table2 --full`.
+    match repro::table2_tags(&engine, &runs, Effort::QUICK,
+                             &["adam", "muon", "osp"]) {
+        Ok(t) => t.print(),
+        Err(e) => eprintln!("SKIP table2: {e}"),
+    }
+    Ok(())
+}

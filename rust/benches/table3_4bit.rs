@@ -1,0 +1,27 @@
+//! Table 3 — per-task benchmark scores at 4-4-4 across the trained
+//! configurations (the paper's open-source-comparator table; our ablation
+//! runs stand in for the Adam-lineage models — DESIGN.md §2).
+
+use osp::repro::{self, Effort};
+use osp::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from(
+        std::env::var("OSP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()));
+    let runs = std::path::PathBuf::from(
+        std::env::var("OSP_RUNS").unwrap_or_else(|_| "runs".into()));
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP table3: no artifacts");
+        return Ok(());
+    }
+    let engine = Engine::open(&dir)?;
+    match repro::table3(&engine, &runs, Effort::QUICK) {
+        Ok(t) => t.print(),
+        Err(e) => eprintln!("SKIP table3: {e}"),
+    }
+    match repro::table5(&engine, &runs, Effort::QUICK) {
+        Ok(t) => t.print(),
+        Err(e) => eprintln!("SKIP table5: {e}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! Table 4 — PTQ method composition (RTN / FFN-Had / GPTQ / QuaRot-lite /
+//! SpinQuant-lite) at W4-A4-KV4, Adam vs OSP checkpoints.
+
+use osp::repro::{self, Effort};
+use osp::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from(
+        std::env::var("OSP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()));
+    let runs = std::path::PathBuf::from(
+        std::env::var("OSP_RUNS").unwrap_or_else(|_| "runs".into()));
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP table4: no artifacts");
+        return Ok(());
+    }
+    let engine = Engine::open(&dir)?;
+    match repro::table4(&engine, &runs, Effort::QUICK) {
+        Ok(t) => t.print(),
+        Err(e) => eprintln!("SKIP table4: {e}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,148 @@
+//! Bench harness (criterion is not in the offline vendor set): warmup +
+//! timed iterations with mean/min/max, and paper-style table rendering
+//! shared by `rust/benches/*` and the `osp repro` subcommands.
+
+use std::time::Instant;
+
+/// Timing summary over the measured iterations.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+}
+
+impl Timing {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean_secs.max(1e-12)
+    }
+}
+
+/// Run `f` `warmup` times untimed, then `iters` times timed.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    Timing {
+        iters,
+        mean_secs: times.iter().sum::<f64>() / iters as f64,
+        min_secs: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_secs: times.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+/// Markdown-ish table rendering (the paper-row printers).
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(),
+                   "row width != header width");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.chars().count());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            s
+        };
+        let mut out = format!("\n## {}\n\n", self.title);
+        out.push_str(&line(&self.headers));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format helpers used by the bench binaries.
+pub fn fmt_ppl(ppl: f64) -> String {
+    if ppl >= 1e4 {
+        format!("{ppl:.1e}")
+    } else {
+        format!("{ppl:.2}")
+    }
+}
+
+pub fn fmt_pct(frac: f64) -> String {
+    format!("{:.1}", 100.0 * frac)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0;
+        let t = bench(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(t.iters, 5);
+        assert!(t.min_secs <= t.mean_secs && t.mean_secs <= t.max_secs);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Test", &["a", "long_header"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["wide_cell".into(), "x".into()]);
+        let s = t.render();
+        assert!(s.contains("## Test"));
+        assert!(s.contains("| wide_cell | x           |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only_one".into()]);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ppl(12.345), "12.35");
+        assert_eq!(fmt_ppl(123456.0), "1.2e5");
+        assert_eq!(fmt_pct(0.357), "35.7");
+    }
+}

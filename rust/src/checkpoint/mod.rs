@@ -1,0 +1,224 @@
+//! Checkpoint store: flat binary tensors + a JSON manifest per step.
+//!
+//! Layout: `<run>/ckpt/step_<N>/{meta.json, params.bin}` where params.bin
+//! is the little-endian f32 concatenation of the parameter leaves in
+//! manifest order. Optimizer state is stored the same way when requested
+//! (resumable training).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::{OptLeafSpec, ParamSpec};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+fn write_tensors(path: &Path, tensors: &[Tensor]) -> Result<()> {
+    let mut bytes: Vec<u8> = Vec::new();
+    for t in tensors {
+        for v in t.data() {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    std::fs::write(path, &bytes).with_context(|| format!("writing {path:?}"))
+}
+
+fn read_tensors(path: &Path, shapes: &[Vec<usize>]) -> Result<Vec<Tensor>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    let total: usize = shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+    if bytes.len() != total * 4 {
+        bail!("{path:?}: {} bytes, expected {} ({} f32)", bytes.len(),
+              total * 4, total);
+    }
+    let mut off = 0usize;
+    let mut out = Vec::with_capacity(shapes.len());
+    for shape in shapes {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = bytes[off..off + 4 * n]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        off += 4 * n;
+        out.push(Tensor::new(shape.clone(), data));
+    }
+    Ok(out)
+}
+
+/// A saved training state.
+pub struct Checkpoint {
+    pub step: u64,
+    pub arch: String,
+    pub optimizer: String,
+    pub params: Vec<Tensor>,
+    pub opt_state: Option<Vec<Tensor>>,
+}
+
+pub fn ckpt_dir(run_dir: &Path, step: u64) -> PathBuf {
+    run_dir.join("ckpt").join(format!("step_{step:07}"))
+}
+
+/// Save a checkpoint. `param_specs` fixes ordering; opt_state optional.
+pub fn save(run_dir: &Path, step: u64, arch: &str, optimizer: &str,
+            param_specs: &[ParamSpec], params: &[Tensor],
+            opt_leaves: Option<(&[OptLeafSpec], &[Tensor])>) -> Result<PathBuf> {
+    assert_eq!(param_specs.len(), params.len());
+    let dir = ckpt_dir(run_dir, step);
+    std::fs::create_dir_all(&dir)?;
+    write_tensors(&dir.join("params.bin"), params)?;
+    let mut meta = vec![
+        ("step", Json::num(step as f64)),
+        ("arch", Json::str(arch)),
+        ("optimizer", Json::str(optimizer)),
+        ("has_opt_state", Json::Bool(opt_leaves.is_some())),
+        ("param_names",
+         Json::Arr(param_specs.iter().map(|p| Json::str(p.name.clone()))
+                   .collect())),
+        ("param_shapes",
+         Json::Arr(param_specs
+                   .iter()
+                   .map(|p| Json::Arr(p.shape.iter()
+                                      .map(|&d| Json::num(d as f64))
+                                      .collect()))
+                   .collect())),
+    ];
+    if let Some((leaves, state)) = opt_leaves {
+        assert_eq!(leaves.len(), state.len());
+        write_tensors(&dir.join("opt_state.bin"), state)?;
+        meta.push((
+            "opt_shapes",
+            Json::Arr(leaves
+                      .iter()
+                      .map(|l| Json::Arr(l.shape.iter()
+                                         .map(|&d| Json::num(d as f64))
+                                         .collect()))
+                      .collect()),
+        ));
+    }
+    std::fs::write(dir.join("meta.json"), Json::obj(meta).dump())?;
+    Ok(dir)
+}
+
+/// Load a checkpoint saved by [`save`].
+pub fn load(dir: &Path) -> Result<Checkpoint> {
+    let meta_text = std::fs::read_to_string(dir.join("meta.json"))
+        .with_context(|| format!("no checkpoint at {dir:?}"))?;
+    let meta = Json::parse(&meta_text)
+        .map_err(|e| anyhow::anyhow!("meta.json: {e}"))?;
+    let shapes: Vec<Vec<usize>> = meta
+        .req("param_shapes")?
+        .as_arr()
+        .context("param_shapes")?
+        .iter()
+        .map(|s| s.usize_arr().context("shape"))
+        .collect::<Result<_>>()?;
+    let params = read_tensors(&dir.join("params.bin"), &shapes)?;
+    let opt_state = if meta.req("has_opt_state")?.as_bool() == Some(true) {
+        let oshapes: Vec<Vec<usize>> = meta
+            .req("opt_shapes")?
+            .as_arr()
+            .context("opt_shapes")?
+            .iter()
+            .map(|s| s.usize_arr().context("shape"))
+            .collect::<Result<_>>()?;
+        Some(read_tensors(&dir.join("opt_state.bin"), &oshapes)?)
+    } else {
+        None
+    };
+    Ok(Checkpoint {
+        step: meta.req("step")?.as_usize().context("step")? as u64,
+        arch: meta.req("arch")?.as_str().context("arch")?.to_string(),
+        optimizer: meta.req("optimizer")?.as_str().context("opt")?.to_string(),
+        params,
+        opt_state,
+    })
+}
+
+/// List checkpoint step dirs under a run, ascending.
+pub fn list_steps(run_dir: &Path) -> Vec<(u64, PathBuf)> {
+    let mut out = Vec::new();
+    let Ok(rd) = std::fs::read_dir(run_dir.join("ckpt")) else {
+        return out;
+    };
+    for entry in rd.flatten() {
+        let name = entry.file_name().to_string_lossy().to_string();
+        if let Some(num) = name.strip_prefix("step_") {
+            if let Ok(step) = num.parse::<u64>() {
+                out.push((step, entry.path()));
+            }
+        }
+    }
+    out.sort_by_key(|&(s, _)| s);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec { name: "a".into(), shape: vec![2, 3],
+                        init: "normal".into(), kind: "matrix".into() },
+            ParamSpec { name: "b".into(), shape: vec![4],
+                        init: "ones".into(), kind: "norm".into() },
+        ]
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let run = std::env::temp_dir().join("osp_ckpt_test_a");
+        let _ = std::fs::remove_dir_all(&run);
+        let params = vec![
+            Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]),
+            Tensor::new(vec![4], vec![0.5; 4]),
+        ];
+        let dir = save(&run, 42, "ssnorm_embproj", "muon", &specs(), &params,
+                       None).unwrap();
+        let ck = load(&dir).unwrap();
+        assert_eq!(ck.step, 42);
+        assert_eq!(ck.arch, "ssnorm_embproj");
+        assert_eq!(ck.params[0].data(), params[0].data());
+        assert_eq!(ck.params[1].shape(), &[4]);
+        assert!(ck.opt_state.is_none());
+    }
+
+    #[test]
+    fn save_load_with_opt_state() {
+        let run = std::env::temp_dir().join("osp_ckpt_test_b");
+        let _ = std::fs::remove_dir_all(&run);
+        let params = vec![
+            Tensor::zeros(&[2, 3]),
+            Tensor::zeros(&[4]),
+        ];
+        let leaves = vec![OptLeafSpec { name: "step".into(), shape: vec![1],
+                                        init: "zeros".into() }];
+        let state = vec![Tensor::new(vec![1], vec![7.0])];
+        let dir = save(&run, 7, "rmsnorm_plain", "adam", &specs(), &params,
+                       Some((&leaves, &state))).unwrap();
+        let ck = load(&dir).unwrap();
+        assert_eq!(ck.opt_state.unwrap()[0].data(), &[7.0]);
+    }
+
+    #[test]
+    fn list_steps_sorted() {
+        let run = std::env::temp_dir().join("osp_ckpt_test_c");
+        let _ = std::fs::remove_dir_all(&run);
+        let params = vec![Tensor::zeros(&[2, 3]), Tensor::zeros(&[4])];
+        for step in [30u64, 10, 20] {
+            save(&run, step, "a", "adam", &specs(), &params, None).unwrap();
+        }
+        let steps: Vec<u64> =
+            list_steps(&run).into_iter().map(|(s, _)| s).collect();
+        assert_eq!(steps, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn corrupted_size_rejected() {
+        let run = std::env::temp_dir().join("osp_ckpt_test_d");
+        let _ = std::fs::remove_dir_all(&run);
+        let params = vec![Tensor::zeros(&[2, 3]), Tensor::zeros(&[4])];
+        let dir = save(&run, 1, "a", "adam", &specs(), &params, None).unwrap();
+        std::fs::write(dir.join("params.bin"), [0u8; 12]).unwrap();
+        assert!(load(&dir).is_err());
+    }
+}

@@ -1,0 +1,144 @@
+//! Simulated data parallelism: K ranks compute gradients on their own
+//! microbatches (grad_* executable), a ring all-reduce averages them, the
+//! host optimizer applies the update.
+//!
+//! The transport is in-process (threads + bounded channels) but the
+//! algorithm is the real one: reduce-scatter then all-gather over K-1
+//! hops each, chunked by rank. Invariants (exact average, independence
+//! from interleaving, every microbatch consumed once) are tested here and
+//! property-tested in rust/tests.
+
+use std::sync::Arc;
+
+use crate::util::threadpool::BoundedChannel;
+
+/// Ring all-reduce (average) over `parts`: each element is one rank's
+/// flat gradient vector. Returns the per-rank results (all equal).
+///
+/// Chunking: the vector is split into K chunks; chunk c travels the ring
+/// accumulating, then travels again broadcasting — the standard
+/// bandwidth-optimal schedule.
+pub fn ring_all_reduce(parts: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+    let k = parts.len();
+    assert!(k > 0);
+    let n = parts[0].len();
+    assert!(parts.iter().all(|p| p.len() == n), "rank size mismatch");
+    if k == 1 {
+        return parts;
+    }
+
+    // Chunk boundaries (chunk i: [bounds[i], bounds[i+1])).
+    let bounds: Vec<usize> = (0..=k).map(|i| i * n / k).collect();
+
+    // Channels: rank r sends to rank (r+1) % k.
+    let mut senders = Vec::with_capacity(k);
+    let mut receivers = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (tx, rx) = BoundedChannel::new(2);
+        senders.push(Some(tx));
+        receivers.push(Some(rx));
+    }
+    // rank r receives from rank (r-1+k)%k: re-index receivers.
+    let mut rx_for_rank: Vec<_> = (0..k).map(|_| None).collect();
+    for (r, rx) in receivers.into_iter().enumerate() {
+        rx_for_rank[(r + 1) % k] = rx;
+    }
+
+    let bounds = Arc::new(bounds);
+    let mut handles = Vec::with_capacity(k);
+    for (r, (mut data, (tx, rx))) in parts
+        .into_iter()
+        .zip(senders.into_iter().map(Option::unwrap).zip(
+            rx_for_rank.into_iter().map(Option::unwrap)))
+        .enumerate()
+    {
+        let bounds = Arc::clone(&bounds);
+        handles.push(std::thread::spawn(move || {
+            // Reduce-scatter: K-1 hops; at hop h, rank r sends chunk
+            // (r - h) mod K and accumulates the incoming chunk.
+            for h in 0..k - 1 {
+                let send_c = (r + k - h) % k;
+                let (s0, s1) = (bounds[send_c], bounds[send_c + 1]);
+                tx.send((send_c, data[s0..s1].to_vec()))
+                    .map_err(|_| ()).expect("ring send");
+                let (c, chunk) = rx.recv().expect("ring recv");
+                let (b0, _b1) = (bounds[c], bounds[c + 1]);
+                for (i, v) in chunk.iter().enumerate() {
+                    data[b0 + i] += v;
+                }
+            }
+            // All-gather: K-1 hops; rank r now owns the fully reduced
+            // chunk (r+1) mod K.
+            for h in 0..k - 1 {
+                let send_c = (r + 1 + k - h) % k;
+                let (s0, s1) = (bounds[send_c], bounds[send_c + 1]);
+                tx.send((send_c, data[s0..s1].to_vec()))
+                    .map_err(|_| ()).expect("ring send");
+                let (c, chunk) = rx.recv().expect("ring recv");
+                let (b0, _b1) = (bounds[c], bounds[c + 1]);
+                data[b0..b0 + chunk.len()].copy_from_slice(&chunk);
+            }
+            // Average.
+            let inv = 1.0 / k as f32;
+            for v in data.iter_mut() {
+                *v *= inv;
+            }
+            data
+        }));
+    }
+    handles.into_iter().map(|h| h.join().expect("rank panicked")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn make_parts(k: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg::new(seed, 2);
+        (0..k)
+            .map(|_| (0..n).map(|_| rng.normal()).collect())
+            .collect()
+    }
+
+    fn expected_avg(parts: &[Vec<f32>]) -> Vec<f32> {
+        let k = parts.len() as f32;
+        let n = parts[0].len();
+        (0..n)
+            .map(|i| parts.iter().map(|p| p[i]).sum::<f32>() / k)
+            .collect()
+    }
+
+    #[test]
+    fn averages_exactly() {
+        for k in [1, 2, 3, 4, 7] {
+            for n in [1, 5, 64, 257] {
+                let parts = make_parts(k, n, (k * 1000 + n) as u64);
+                let want = expected_avg(&parts);
+                let got = ring_all_reduce(parts);
+                for r in &got {
+                    crate::util::prop::all_close(r, &want, 1e-5)
+                        .unwrap_or_else(|e| panic!("k={k} n={n}: {e}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_ranks_agree() {
+        let parts = make_parts(5, 100, 9);
+        let got = ring_all_reduce(parts);
+        for r in 1..got.len() {
+            assert_eq!(got[0], got[r]);
+        }
+    }
+
+    #[test]
+    fn n_smaller_than_k() {
+        // Degenerate chunking (some chunks empty) must still work.
+        let parts = make_parts(8, 3, 11);
+        let want = expected_avg(&parts);
+        let got = ring_all_reduce(parts);
+        crate::util::prop::all_close(&got[3], &want, 1e-5).unwrap();
+    }
+}

@@ -1,0 +1,78 @@
+//! Trapezoidal (warmup-stable-decay) learning-rate schedule, as used by
+//! the paper (Appendix A.1: linear warmup over the first 5B tokens, flat
+//! plateau, linear decay to zero over the final 20%).
+
+/// Piecewise-linear trapezoid. All fractions of `total_steps`.
+#[derive(Clone, Copy, Debug)]
+pub struct Trapezoid {
+    pub peak: f64,
+    pub total_steps: u64,
+    pub warmup_frac: f64,
+    pub decay_frac: f64,
+}
+
+impl Trapezoid {
+    pub fn new(peak: f64, total_steps: u64, warmup_frac: f64,
+               decay_frac: f64) -> Trapezoid {
+        assert!(warmup_frac >= 0.0 && decay_frac >= 0.0);
+        assert!(warmup_frac + decay_frac <= 1.0,
+                "warmup + decay fractions exceed 1");
+        Trapezoid { peak, total_steps, warmup_frac, decay_frac }
+    }
+
+    /// LR for step `t` (0-based).
+    pub fn at(&self, t: u64) -> f64 {
+        let total = self.total_steps.max(1) as f64;
+        let w = (self.warmup_frac * total).round();
+        let d = (self.decay_frac * total).round();
+        let decay_start = total - d;
+        let t = t as f64;
+        if t < w {
+            self.peak * (t + 1.0) / w.max(1.0)
+        } else if t >= decay_start {
+            let remain = (total - t) / d.max(1.0);
+            self.peak * remain.max(0.0)
+        } else {
+            self.peak
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_is_trapezoidal() {
+        let s = Trapezoid::new(1.0, 100, 0.1, 0.2);
+        assert!(s.at(0) <= 0.2); // warming up
+        assert!(s.at(5) < 1.0);
+        assert_eq!(s.at(10), 1.0); // plateau
+        assert_eq!(s.at(79), 1.0);
+        assert!(s.at(90) < 1.0); // decaying
+        assert!(s.at(99) <= 0.06);
+        // monotone warmup
+        for t in 0..9 {
+            assert!(s.at(t) <= s.at(t + 1) + 1e-12);
+        }
+        // monotone decay
+        for t in 80..99 {
+            assert!(s.at(t) >= s.at(t + 1) - 1e-12);
+        }
+    }
+
+    #[test]
+    fn no_warmup_no_decay_is_constant() {
+        let s = Trapezoid::new(0.5, 50, 0.0, 0.0);
+        for t in 0..50 {
+            assert_eq!(s.at(t), 0.5);
+        }
+    }
+
+    #[test]
+    fn peak_reached_even_tiny_runs() {
+        let s = Trapezoid::new(2.0, 3, 0.34, 0.33);
+        let max = (0..3).map(|t| s.at(t)).fold(0.0f64, f64::max);
+        assert!(max >= 1.9);
+    }
+}

@@ -1,0 +1,475 @@
+//! The training coordinator (Layer 3): owns data order, the LR schedule,
+//! microbatching, telemetry, checkpoints, and the optimizer control
+//! plane. Compute happens in the AOT XLA executables.
+//!
+//! Three execution modes (DESIGN.md §4):
+//! * **Fused** — one `train_<opt>_<arch>` executable per step (fast path).
+//! * **Host/DP** — `dp_ranks` simulated data-parallel workers each run
+//!   `grad_<arch>` on their microbatch, a ring all-reduce averages the
+//!   gradients, the host optimizer ([`opt::HostOpt`]) applies the update.
+//! * **Disaggregated** — Host/DP plus the paper's 8-way optimizer-
+//!   parallel Muon: Newton-Schulz jobs are sharded over `opt_ranks`
+//!   workers, each calling the `ns_<m>x<n>` executable (Appendix A.1).
+
+pub mod dp;
+pub mod lr;
+pub mod opt;
+
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::checkpoint;
+use crate::config::TrainConfig;
+use crate::data::{Loader, Split, TokenStream};
+use crate::metrics::{PhaseProfiler, Record, Series, TelemetryWriter};
+use crate::runtime::{Engine, Executable, HostValue};
+use crate::tensor::Tensor;
+use crate::util::threadpool::ThreadPool;
+
+use lr::Trapezoid;
+use opt::HostOpt;
+
+/// Outcome summary of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainSummary {
+    pub steps: u64,
+    pub final_loss: f64,
+    pub final_ppl: f64,
+    pub final_kurt_max: f64,
+    pub loss: Series,
+    pub kurt_max: Series,
+    pub wall_secs: f64,
+    pub tokens_per_sec: f64,
+}
+
+enum Mode {
+    Fused {
+        train: Arc<Executable>,
+        opt_state: Vec<Tensor>,
+    },
+    Host {
+        grad: Arc<Executable>,
+        host_opt: HostOpt,
+        pool: Arc<ThreadPool>,
+    },
+}
+
+pub struct Trainer {
+    engine: Engine,
+    pub cfg: TrainConfig,
+    params: Vec<Tensor>,
+    mode: Mode,
+    evalq: Arc<Executable>,
+    schedule: Trapezoid,
+    loader: Loader,
+    eval_batches: Vec<HostValue>,
+    telemetry: Option<TelemetryWriter>,
+    pub profiler: PhaseProfiler,
+    n_layers: usize,
+}
+
+/// "off" levels value for the evalq quantization inputs (2^20 ~ fp16+).
+pub const LEVELS_OFF: f32 = (1u32 << 20) as f32;
+
+pub fn levels_for_bits(bits: u32) -> f32 {
+    if bits >= 16 {
+        LEVELS_OFF
+    } else {
+        (1u32 << (bits - 1)) as f32 - 1.0
+    }
+}
+
+impl Trainer {
+    pub fn new(engine: Engine, cfg: TrainConfig) -> Result<Trainer> {
+        cfg.validate()?;
+        let m = engine.manifest();
+        let arch = cfg.arch.clone();
+        let n_layers = m.model.n_layers;
+        let vocab = m.model.vocab_size;
+        let (batch, seq) = (m.batch_train, m.model.seq_len);
+
+        // Initialize params through the init artifact (same RNG as the
+        // paper pipeline's jax init).
+        let init = engine.load(&format!("init_{arch}"))?;
+        let params: Vec<Tensor> = init
+            .run(&[HostValue::tokens(&[1], vec![cfg.seed as i32])])?
+            .into_iter()
+            .map(|v| v.into_f32())
+            .collect::<Result<_>>()?;
+
+        let mode = if cfg.dp_ranks > 1 || cfg.disaggregated {
+            let grad = engine
+                .load(&format!("grad_{arch}"))
+                .with_context(|| format!(
+                    "host/disaggregated mode needs grad_{arch}; rebuild \
+                     artifacts or use fused mode"))?;
+            let mut host_opt = HostOpt::new(&cfg.optimizer, m.params(&arch)?);
+            let pool = Arc::new(ThreadPool::new(
+                cfg.dp_ranks.max(cfg.opt_ranks).max(1), 64));
+            if cfg.disaggregated {
+                install_disaggregated_ns(&engine, &mut host_opt,
+                                         Arc::clone(&pool), cfg.opt_ranks)?;
+            }
+            Mode::Host { grad, host_opt, pool }
+        } else {
+            let train = engine.load(&format!("train_{}_{arch}",
+                                             cfg.optimizer))?;
+            let opt_state = crate::runtime::init_opt_state(
+                m.opt_leaves(&arch, &cfg.optimizer)?);
+            Mode::Fused { train, opt_state }
+        };
+
+        let evalq = engine.load(&format!("evalq_{arch}"))?;
+
+        // Enough train batches for the whole run (+ accumulation).
+        let max_batches =
+            cfg.steps * (cfg.dp_ranks as u64 * cfg.grad_accum as u64).max(1)
+            + 4;
+        let loader = Loader::spawn(vocab, cfg.seed, Split::Train, batch, seq,
+                                   8, max_batches);
+
+        // Fixed held-out batches for perplexity (our WikiText-2).
+        let mut valid = TokenStream::new(vocab, cfg.seed, Split::Valid, 0, 1);
+        let eval_batches = (0..2)
+            .map(|i| {
+                let b = valid.next_batch(m.batch_eval, seq, i);
+                HostValue::tokens(&[m.batch_eval, seq], b.tokens)
+            })
+            .collect();
+
+        let schedule = Trapezoid::new(cfg.peak_lr, cfg.steps,
+                                      cfg.warmup_frac, cfg.decay_frac);
+        let telemetry = if cfg.run_dir.as_os_str().is_empty() {
+            None
+        } else {
+            cfg.save(&cfg.run_dir)?;
+            Some(TelemetryWriter::create(&cfg.run_dir.join("telemetry.jsonl"))?)
+        };
+
+        Ok(Trainer {
+            engine,
+            cfg,
+            params,
+            mode,
+            evalq,
+            schedule,
+            loader,
+            eval_batches,
+            telemetry,
+            profiler: PhaseProfiler::default(),
+            n_layers,
+        })
+    }
+
+    pub fn params(&self) -> &[Tensor] {
+        &self.params
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+
+    /// One training step. Returns (loss, kurt[2L]).
+    pub fn step(&mut self, step_idx: u64) -> Result<(f64, Vec<f32>)> {
+        let lr = self.schedule.at(step_idx) as f32;
+        match &mut self.mode {
+            Mode::Fused { train, opt_state } => {
+                let tokens = {
+                    let _g = self.profiler.span("data");
+                    self.loader
+                        .next()
+                        .ok_or_else(|| anyhow!("data loader exhausted"))?
+                };
+                let tokens =
+                    HostValue::tokens(&[tokens.batch, tokens.seq_len],
+                                      tokens.tokens);
+                let n_p = self.params.len();
+                let n_o = opt_state.len();
+                let _g = self.profiler.span("train_exec");
+                let mut inputs: Vec<HostValue> = Vec::with_capacity(
+                    n_p + n_o + 2);
+                inputs.extend(self.params.iter().cloned().map(HostValue::F32));
+                inputs.extend(opt_state.iter().cloned().map(HostValue::F32));
+                inputs.push(tokens);
+                inputs.push(HostValue::scalar(lr));
+                let out = train.run(&inputs)?;
+                for (dst, v) in self.params.iter_mut().zip(&out[..n_p]) {
+                    *dst = v.as_f32()?.clone();
+                }
+                for (dst, v) in
+                    opt_state.iter_mut().zip(&out[n_p..n_p + n_o])
+                {
+                    *dst = v.as_f32()?.clone();
+                }
+                let loss = out[n_p + n_o].as_f32()?.data()[0] as f64;
+                let kurt = out[n_p + n_o + 1].as_f32()?.data().to_vec();
+                Ok((loss, kurt))
+            }
+            Mode::Host { grad, host_opt, pool } => {
+                // Collect dp_ranks * grad_accum microbatches.
+                let n_micro = self.cfg.dp_ranks * self.cfg.grad_accum;
+                let mut micro = Vec::with_capacity(n_micro);
+                {
+                    let _g = self.profiler.span("data");
+                    for _ in 0..n_micro {
+                        let b = self.loader.next().ok_or_else(|| {
+                            anyhow!("data loader exhausted")
+                        })?;
+                        micro.push(HostValue::tokens(
+                            &[b.batch, b.seq_len], b.tokens));
+                    }
+                }
+                let n_p = self.params.len();
+                // Per-rank: run grad_accum microbatches, locally average.
+                let params: Vec<HostValue> = self
+                    .params
+                    .iter()
+                    .cloned()
+                    .map(HostValue::F32)
+                    .collect();
+                let accum = self.cfg.grad_accum;
+                let grad_exe = Arc::clone(grad);
+                let params = Arc::new(params);
+                let rank_inputs: Vec<Vec<HostValue>> = micro
+                    .chunks(accum)
+                    .map(|c| c.to_vec())
+                    .collect();
+                let t0 = Instant::now();
+                let rank_results: Vec<Result<(Vec<f32>, f64, Vec<f32>)>> =
+                    pool.scatter(rank_inputs, move |_i, batches| {
+                        let mut flat: Option<Vec<f32>> = None;
+                        let mut loss_sum = 0.0f64;
+                        let mut kurt: Vec<f32> = Vec::new();
+                        for tokens in batches {
+                            let mut inputs: Vec<HostValue> =
+                                params.as_ref().clone();
+                            inputs.push(tokens);
+                            let out = grad_exe.run(&inputs)?;
+                            loss_sum +=
+                                out[n_p].as_f32()?.data()[0] as f64;
+                            kurt = out[n_p + 1].as_f32()?.data().to_vec();
+                            let mut g: Vec<f32> = Vec::new();
+                            for v in &out[..n_p] {
+                                g.extend_from_slice(v.as_f32()?.data());
+                            }
+                            match &mut flat {
+                                None => flat = Some(g),
+                                Some(acc) => {
+                                    for (a, b) in acc.iter_mut().zip(&g) {
+                                        *a += b;
+                                    }
+                                }
+                            }
+                        }
+                        let mut g = flat.unwrap();
+                        let inv = 1.0 / accum as f32;
+                        for v in g.iter_mut() {
+                            *v *= inv;
+                        }
+                        Ok((g, loss_sum / accum as f64, kurt))
+                    });
+                self.profiler.add("grad_exec", t0.elapsed().as_secs_f64());
+
+                let mut flats = Vec::with_capacity(self.cfg.dp_ranks);
+                let mut loss = 0.0f64;
+                let mut kurt = Vec::new();
+                for r in rank_results {
+                    let (g, l, k) = r?;
+                    flats.push(g);
+                    loss += l;
+                    kurt = k;
+                }
+                loss /= self.cfg.dp_ranks as f64;
+
+                let t1 = Instant::now();
+                let reduced = dp::ring_all_reduce(flats);
+                self.profiler.add("all_reduce", t1.elapsed().as_secs_f64());
+
+                // Unflatten rank 0's result into grad tensors.
+                let t2 = Instant::now();
+                let mut grads = Vec::with_capacity(n_p);
+                let mut off = 0usize;
+                for p in &self.params {
+                    let n = p.len();
+                    grads.push(Tensor::new(p.shape().to_vec(),
+                                           reduced[0][off..off + n].to_vec()));
+                    off += n;
+                }
+                host_opt.apply(&mut self.params, &grads, lr)?;
+                self.profiler.add("opt_apply", t2.elapsed().as_secs_f64());
+                Ok((loss, kurt))
+            }
+        }
+    }
+
+    /// Held-out perplexity + kurtosis at the current params (fp path).
+    pub fn evaluate(&mut self) -> Result<(f64, Vec<f32>)> {
+        let _g = self.profiler.span("eval");
+        let mut nll = 0.0f64;
+        let mut count = 0.0f64;
+        let mut kurt = Vec::new();
+        for tokens in &self.eval_batches {
+            let mut inputs: Vec<HostValue> = self
+                .params
+                .iter()
+                .cloned()
+                .map(HostValue::F32)
+                .collect();
+            inputs.push(tokens.clone());
+            inputs.push(HostValue::scalar(LEVELS_OFF));
+            inputs.push(HostValue::scalar(LEVELS_OFF));
+            inputs.push(HostValue::scalar(0.0));
+            let out = self.evalq.run(&inputs)?;
+            nll += out[0].as_f32()?.data()[0] as f64;
+            count += out[1].as_f32()?.data()[0] as f64;
+            kurt = out[2].as_f32()?.data().to_vec();
+        }
+        Ok(((nll / count).exp(), kurt))
+    }
+
+    /// Run the configured number of steps with telemetry + checkpoints.
+    pub fn run(&mut self) -> Result<TrainSummary> {
+        let t0 = Instant::now();
+        let mut loss_series = Series::default();
+        let mut kurt_series = Series::default();
+        let mut last_loss = f64::NAN;
+        let m_seq = self.engine.manifest().model.seq_len;
+        let m_batch = self.engine.manifest().batch_train;
+
+        for step in 0..self.cfg.steps {
+            let (loss, kurt) = self.step(step)?;
+            if !loss.is_finite() {
+                bail!("loss diverged (NaN/inf) at step {step}");
+            }
+            last_loss = loss;
+            let kmax = kurt.iter().cloned().fold(f32::MIN, f32::max) as f64;
+            let kmean =
+                kurt.iter().sum::<f32>() as f64 / kurt.len().max(1) as f64;
+            loss_series.push(step, loss);
+            kurt_series.push(step, kmax);
+            if let Some(w) = &mut self.telemetry {
+                w.write(
+                    &Record::new(step)
+                        .field("loss", loss)
+                        .field("lr", self.schedule.at(step))
+                        .field("kurt_max", kmax)
+                        .field("kurt_mean", kmean)
+                        .tag("phase", "train"),
+                )?;
+            }
+            let do_eval = self.cfg.eval_every > 0
+                && (step + 1) % self.cfg.eval_every == 0;
+            if do_eval {
+                let (ppl, ekurt) = self.evaluate()?;
+                let ekmax =
+                    ekurt.iter().cloned().fold(f32::MIN, f32::max) as f64;
+                if let Some(w) = &mut self.telemetry {
+                    w.write(
+                        &Record::new(step)
+                            .field("valid_ppl", ppl)
+                            .field("valid_kurt_max", ekmax)
+                            .tag("phase", "eval"),
+                    )?;
+                    w.flush()?;
+                }
+            }
+            if self.cfg.ckpt_every > 0 && (step + 1) % self.cfg.ckpt_every == 0
+            {
+                self.save_checkpoint(step + 1)?;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        self.save_checkpoint(self.cfg.steps)?;
+        let (final_ppl, final_kurt) = self.evaluate()?;
+        let final_kurt_max =
+            final_kurt.iter().cloned().fold(f32::MIN, f32::max) as f64;
+        if let Some(w) = &mut self.telemetry {
+            w.write(
+                &Record::new(self.cfg.steps)
+                    .field("valid_ppl", final_ppl)
+                    .field("valid_kurt_max", final_kurt_max)
+                    .tag("phase", "final"),
+            )?;
+            w.flush()?;
+        }
+        let micro = (self.cfg.dp_ranks * self.cfg.grad_accum).max(1) as f64;
+        let tokens =
+            self.cfg.steps as f64 * micro * (m_batch * m_seq) as f64;
+        Ok(TrainSummary {
+            steps: self.cfg.steps,
+            final_loss: last_loss,
+            final_ppl,
+            final_kurt_max,
+            loss: loss_series,
+            kurt_max: kurt_series,
+            wall_secs: wall,
+            tokens_per_sec: tokens / wall.max(1e-9),
+        })
+    }
+
+    pub fn save_checkpoint(&self, step: u64) -> Result<()> {
+        if self.cfg.run_dir.as_os_str().is_empty() {
+            return Ok(());
+        }
+        let m = self.engine.manifest();
+        let specs = m.params(&self.cfg.arch)?;
+        let opt_leaves;
+        let opt_pair = match &self.mode {
+            Mode::Fused { opt_state, .. } => {
+                opt_leaves =
+                    m.opt_leaves(&self.cfg.arch, &self.cfg.optimizer)?;
+                Some((opt_leaves, opt_state.as_slice()))
+            }
+            Mode::Host { .. } => None,
+        };
+        checkpoint::save(&self.cfg.run_dir, step, &self.cfg.arch,
+                         &self.cfg.optimizer, specs, &self.params, opt_pair)?;
+        Ok(())
+    }
+
+    /// Layers in the model (kurt vector is 2x this).
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+}
+
+/// Wire the paper's optimizer-parallel Newton-Schulz into a HostOpt:
+/// NS jobs are sharded round-robin over `opt_ranks` pool workers, each
+/// executing the matching `ns_<m>x<n>` XLA artifact (gradients partitioned
+/// across dedicated optimizer ranks, Appendix A.1).
+pub fn install_disaggregated_ns(engine: &Engine, host_opt: &mut HostOpt,
+                                pool: Arc<ThreadPool>,
+                                _opt_ranks: usize) -> Result<()> {
+    let engine = engine.clone();
+    host_opt.ns_fn = Box::new(move |jobs| {
+        let items: Vec<(usize, Tensor)> = jobs.to_vec();
+        let engine = engine.clone();
+        let results = pool.scatter(items, move |_r, (idx, g)| {
+            let (m, n) = (g.shape()[0], g.shape()[1]);
+            let exe = engine.load(&format!("ns_{m}x{n}"))?;
+            let out = exe.run(&[HostValue::F32(g)])?;
+            Ok::<(usize, Tensor), anyhow::Error>(
+                (idx, out.into_iter().next().unwrap().into_f32()?))
+        });
+        results.into_iter().collect()
+    });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_mapping() {
+        assert_eq!(levels_for_bits(4), 7.0);
+        assert_eq!(levels_for_bits(8), 127.0);
+        assert_eq!(levels_for_bits(3), 3.0);
+        assert_eq!(levels_for_bits(16), LEVELS_OFF);
+        assert_eq!(levels_for_bits(32), LEVELS_OFF);
+    }
+}

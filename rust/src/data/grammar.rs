@@ -1,0 +1,367 @@
+//! Synthetic probabilistic grammar: the stand-in for the paper's
+//! FineWeb-Edu/FineMath/Cosmopedia/StarCoder mixture (DESIGN.md §2).
+//!
+//! The language mixes five generative processes so the corpus has
+//! (a) a Zipfian long-tail unigram distribution — realistic channel
+//! statistics, (b) local bigram structure — learnable quickly, (c)
+//! induction/copy patterns — exercises attention, (d) bracket nesting —
+//! stack-like state, and (e) key-value "facts" + modular arithmetic —
+//! the raw material for the 10 synthetic benchmark task families in
+//! `eval::tasks`. Everything is deterministic in (vocab_size, seed).
+
+use crate::util::rng::Pcg;
+
+/// The language itself (class partition, bigram table, agreement map) is
+/// a project-wide constant: every consumer — training stream, held-out
+/// stream, benchmark tasks, calibration — must speak the *same* language,
+/// while document sampling varies by split/seed.
+pub const LANGUAGE_SEED: u64 = 1;
+
+/// Reserved token ids (the "tokenizer" — the language is already tokens).
+pub const BOS: i32 = 0;
+pub const SEP: i32 = 1;
+pub const LPAREN: i32 = 2;
+pub const RPAREN: i32 = 3;
+pub const EQUALS: i32 = 4;
+pub const PLUS: i32 = 5;
+pub const COLON: i32 = 6;
+pub const QUERY: i32 = 7;
+pub const N_SPECIAL: usize = 8;
+
+/// Number of "digit" tokens for the modular-arithmetic clauses.
+pub const N_DIGITS: usize = 20;
+
+/// Content-token classes (template slots).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Class {
+    Noun,
+    Verb,
+    Adj,
+    Func,
+}
+
+pub struct Grammar {
+    pub vocab_size: usize,
+    /// Content tokens per class, each with Zipf weights.
+    nouns: Vec<i32>,
+    verbs: Vec<i32>,
+    adjs: Vec<i32>,
+    funcs: Vec<i32>,
+    /// Zipf weights aligned with the class vectors.
+    noun_w: Vec<f64>,
+    verb_w: Vec<f64>,
+    adj_w: Vec<f64>,
+    func_w: Vec<f64>,
+    /// Preferred successor table: bigram structure (4 per token).
+    successors: Vec<[i32; 4]>,
+    /// Agreement map: each noun deterministically selects a verb "form"
+    /// (the long-range-agreement task keys on this).
+    pub agreement: Vec<i32>,
+}
+
+fn zipf_weights(n: usize, s: f64) -> Vec<f64> {
+    (1..=n).map(|k| 1.0 / (k as f64).powf(s)).collect()
+}
+
+impl Grammar {
+    pub fn digit(&self, v: usize) -> i32 {
+        (N_SPECIAL + (v % N_DIGITS)) as i32
+    }
+
+    pub fn new(vocab_size: usize, seed: u64) -> Grammar {
+        assert!(vocab_size >= 64, "vocab too small for the grammar");
+        let mut rng = Pcg::new(seed, 101);
+        let first_content = N_SPECIAL + N_DIGITS;
+        let content: Vec<i32> =
+            (first_content..vocab_size).map(|t| t as i32).collect();
+        // Partition content into classes 40/25/15/20 %.
+        let n = content.len();
+        let n_noun = n * 40 / 100;
+        let n_verb = n * 25 / 100;
+        let n_adj = n * 15 / 100;
+        let mut shuffled = content;
+        rng.shuffle(&mut shuffled);
+        let nouns = shuffled[..n_noun].to_vec();
+        let verbs = shuffled[n_noun..n_noun + n_verb].to_vec();
+        let adjs = shuffled[n_noun + n_verb..n_noun + n_verb + n_adj].to_vec();
+        let funcs = shuffled[n_noun + n_verb + n_adj..].to_vec();
+
+        let successors = (0..vocab_size)
+            .map(|_| {
+                let mut s = [0i32; 4];
+                for slot in s.iter_mut() {
+                    *slot = shuffled[rng.below_usize(shuffled.len())];
+                }
+                s
+            })
+            .collect();
+
+        let agreement = (0..vocab_size)
+            .map(|_| verbs[rng.below_usize(verbs.len())])
+            .collect();
+
+        Grammar {
+            vocab_size,
+            noun_w: zipf_weights(nouns.len(), 1.1),
+            verb_w: zipf_weights(verbs.len(), 1.1),
+            adj_w: zipf_weights(adjs.len(), 1.2),
+            func_w: zipf_weights(funcs.len(), 0.9),
+            nouns,
+            verbs,
+            adjs,
+            funcs,
+            successors,
+            agreement,
+        }
+    }
+
+    pub fn sample_class(&self, c: Class, rng: &mut Pcg) -> i32 {
+        let (toks, w) = match c {
+            Class::Noun => (&self.nouns, &self.noun_w),
+            Class::Verb => (&self.verbs, &self.verb_w),
+            Class::Adj => (&self.adjs, &self.adj_w),
+            Class::Func => (&self.funcs, &self.func_w),
+        };
+        toks[rng.weighted(w)]
+    }
+
+    pub fn class_tokens(&self, c: Class) -> &[i32] {
+        match c {
+            Class::Noun => &self.nouns,
+            Class::Verb => &self.verbs,
+            Class::Adj => &self.adjs,
+            Class::Func => &self.funcs,
+        }
+    }
+
+    /// The four preferred successors of a token (bigram structure).
+    pub fn successors(&self, t: i32) -> &[i32; 4] {
+        &self.successors[t as usize]
+    }
+
+    // ---- clause generators -------------------------------------------------
+
+    /// Markov walk: each step follows a preferred successor w.p. 0.85,
+    /// else a fresh class sample. This is the bulk of the corpus.
+    fn clause_markov(&self, rng: &mut Pcg, out: &mut Vec<i32>) {
+        let len = 4 + rng.below_usize(8);
+        let mut t = self.sample_class(Class::Noun, rng);
+        out.push(t);
+        for _ in 0..len {
+            t = if rng.uniform() < 0.85 {
+                let s = self.successors(t);
+                s[rng.below_usize(4)]
+            } else {
+                self.sample_class(Class::Func, rng)
+            };
+            out.push(t);
+        }
+    }
+
+    /// Template: ADJ NOUN VERB(agreeing) FUNC NOUN — the long-range
+    /// agreement: the verb is determined by the *first* noun.
+    fn clause_template(&self, rng: &mut Pcg, out: &mut Vec<i32>) {
+        let adj = self.sample_class(Class::Adj, rng);
+        let noun = self.sample_class(Class::Noun, rng);
+        let verb = self.agreement[noun as usize];
+        let func = self.sample_class(Class::Func, rng);
+        let obj = self.sample_class(Class::Noun, rng);
+        out.extend_from_slice(&[adj, noun, verb, func, obj]);
+    }
+
+    /// Induction: A B ... filler ... A B (the induction-head pattern).
+    fn clause_induction(&self, rng: &mut Pcg, out: &mut Vec<i32>) {
+        let a = self.sample_class(Class::Noun, rng);
+        let b = self.sample_class(Class::Verb, rng);
+        out.push(a);
+        out.push(b);
+        for _ in 0..2 + rng.below_usize(4) {
+            out.push(self.sample_class(Class::Func, rng));
+        }
+        out.push(a);
+        out.push(b);
+    }
+
+    /// Copy: X1..Xk SEP X1..Xk.
+    fn clause_copy(&self, rng: &mut Pcg, out: &mut Vec<i32>) {
+        let k = 2 + rng.below_usize(3);
+        let span: Vec<i32> =
+            (0..k).map(|_| self.sample_class(Class::Noun, rng)).collect();
+        out.extend_from_slice(&span);
+        out.push(SEP);
+        out.extend_from_slice(&span);
+    }
+
+    /// Bracketed span with nesting depth <= 2.
+    fn clause_bracket(&self, rng: &mut Pcg, out: &mut Vec<i32>) {
+        out.push(LPAREN);
+        out.push(self.sample_class(Class::Noun, rng));
+        if rng.uniform() < 0.4 {
+            out.push(LPAREN);
+            out.push(self.sample_class(Class::Adj, rng));
+            out.push(RPAREN);
+        }
+        out.push(self.sample_class(Class::Verb, rng));
+        out.push(RPAREN);
+    }
+
+    /// Modular arithmetic fact: d1 + d2 = (d1+d2) mod N_DIGITS.
+    fn clause_math(&self, rng: &mut Pcg, out: &mut Vec<i32>) {
+        let a = rng.below_usize(N_DIGITS);
+        let b = rng.below_usize(N_DIGITS);
+        out.extend_from_slice(&[
+            self.digit(a),
+            PLUS,
+            self.digit(b),
+            EQUALS,
+            self.digit(a + b),
+        ]);
+    }
+
+    /// Key-value fact + later recall: K COLON V ... QUERY K COLON V.
+    fn clause_fact(&self, rng: &mut Pcg, out: &mut Vec<i32>) {
+        let k = self.sample_class(Class::Noun, rng);
+        let v = self.sample_class(Class::Adj, rng);
+        out.extend_from_slice(&[k, COLON, v]);
+        for _ in 0..1 + rng.below_usize(3) {
+            out.push(self.sample_class(Class::Func, rng));
+        }
+        out.extend_from_slice(&[QUERY, k, COLON, v]);
+    }
+
+    /// Generate one document (BOS ... SEP-joined clauses).
+    pub fn document(&self, rng: &mut Pcg) -> Vec<i32> {
+        let mut out = vec![BOS];
+        let n_clauses = 5 + rng.below_usize(8);
+        for _ in 0..n_clauses {
+            match rng.weighted(&[4.0, 2.0, 1.0, 1.0, 1.0, 1.0, 1.0]) {
+                0 => self.clause_markov(rng, &mut out),
+                1 => self.clause_template(rng, &mut out),
+                2 => self.clause_induction(rng, &mut out),
+                3 => self.clause_copy(rng, &mut out),
+                4 => self.clause_bracket(rng, &mut out),
+                5 => self.clause_math(rng, &mut out),
+                _ => self.clause_fact(rng, &mut out),
+            }
+            out.push(SEP);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_by_seed() {
+        let g1 = Grammar::new(512, 9);
+        let g2 = Grammar::new(512, 9);
+        let mut r1 = Pcg::new(1, 0);
+        let mut r2 = Pcg::new(1, 0);
+        assert_eq!(g1.document(&mut r1), g2.document(&mut r2));
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        let g = Grammar::new(256, 3);
+        let mut rng = Pcg::new(2, 0);
+        for _ in 0..50 {
+            for &t in &g.document(&mut rng) {
+                assert!((0..256).contains(&t), "token {t} out of range");
+            }
+        }
+    }
+
+    #[test]
+    fn classes_are_disjoint_and_cover_content() {
+        let g = Grammar::new(512, 1);
+        let mut all: Vec<i32> = [
+            g.class_tokens(Class::Noun),
+            g.class_tokens(Class::Verb),
+            g.class_tokens(Class::Adj),
+            g.class_tokens(Class::Func),
+        ]
+        .concat();
+        let total = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), total, "classes overlap");
+        assert_eq!(total, 512 - N_SPECIAL - N_DIGITS);
+    }
+
+    #[test]
+    fn unigram_distribution_is_long_tailed() {
+        let g = Grammar::new(512, 7);
+        let mut rng = Pcg::new(5, 0);
+        let mut counts = vec![0usize; 512];
+        for _ in 0..400 {
+            for t in g.document(&mut rng) {
+                counts[t as usize] += 1;
+            }
+        }
+        let mut sorted: Vec<usize> =
+            counts.iter().copied().filter(|&c| c > 0).collect();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        // Zipf-ish: the head token should dominate the median by a lot.
+        let head = sorted[1]; // skip SEP at [0]
+        let median = sorted[sorted.len() / 2];
+        assert!(head > 10 * median, "head {head} median {median}");
+    }
+
+    #[test]
+    fn math_clauses_are_consistent() {
+        let g = Grammar::new(256, 11);
+        let mut rng = Pcg::new(8, 0);
+        let mut found = 0;
+        for _ in 0..200 {
+            let doc = g.document(&mut rng);
+            for w in doc.windows(5) {
+                if w[1] == PLUS && w[3] == EQUALS {
+                    let a = w[0] as usize - N_SPECIAL;
+                    let b = w[2] as usize - N_SPECIAL;
+                    let c = w[4] as usize - N_SPECIAL;
+                    assert_eq!((a + b) % N_DIGITS, c);
+                    found += 1;
+                }
+            }
+        }
+        assert!(found > 10, "math clauses too rare: {found}");
+    }
+
+    #[test]
+    fn fact_clauses_recall_their_value() {
+        let g = Grammar::new(512, 13);
+        let mut rng = Pcg::new(9, 0);
+        let mut found = 0;
+        for _ in 0..200 {
+            let doc = g.document(&mut rng);
+            for (i, &t) in doc.iter().enumerate() {
+                if t == QUERY && i + 3 < doc.len() {
+                    let k = doc[i + 1];
+                    // The defining `k COLON v` is the *nearest* earlier
+                    // occurrence (keys may repeat across clauses).
+                    for j in (0..i).rev() {
+                        if doc[j] == k && doc.get(j + 1) == Some(&COLON) {
+                            assert_eq!(doc[j + 2], doc[i + 3],
+                                       "fact recall mismatch");
+                            found += 1;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        assert!(found > 10, "fact clauses too rare: {found}");
+    }
+
+    #[test]
+    fn agreement_is_deterministic_per_noun() {
+        let g = Grammar::new(512, 17);
+        let noun = g.class_tokens(Class::Noun)[0];
+        let v1 = g.agreement[noun as usize];
+        let v2 = g.agreement[noun as usize];
+        assert_eq!(v1, v2);
+        assert!(g.class_tokens(Class::Verb).contains(&v1));
+    }
+}

@@ -1,0 +1,230 @@
+//! Data pipeline: synthetic grammar corpus -> sharded token stream ->
+//! prefetched fixed-shape batches for the training loop.
+//!
+//! Mirrors a production ingestion path (shards, deterministic order,
+//! held-out split, bounded prefetch with backpressure) at laptop scale.
+
+pub mod grammar;
+
+use crate::util::rng::Pcg;
+use crate::util::threadpool::{BoundedChannel, Receiver};
+
+pub use grammar::Grammar;
+
+/// A fixed-shape token batch [batch, seq_len], row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Batch {
+    pub batch: usize,
+    pub seq_len: usize,
+    pub tokens: Vec<i32>,
+    /// Global step index this batch was produced for (telemetry).
+    pub index: u64,
+}
+
+impl Batch {
+    pub fn shape(&self) -> [usize; 2] {
+        [self.batch, self.seq_len]
+    }
+}
+
+/// Which split a stream draws from. Train and Valid documents live in
+/// disjoint RNG-stream id spaces, so the held-out set ("our WikiText-2")
+/// can never leak into training.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Valid,
+}
+
+/// Deterministic, shardable token stream: shard `s` of `n` produces the
+/// documents at slots s, s+n, s+2n, ... so any shard partition covers the
+/// corpus exactly once (property-tested below).
+pub struct TokenStream {
+    grammar: Grammar,
+    seed: u64,
+    split: Split,
+    shard: usize,
+    n_shards: usize,
+    /// Carry-over tokens between batches (documents are packed, never
+    /// dropped).
+    buffer: Vec<i32>,
+    next_doc: u64,
+}
+
+impl TokenStream {
+    pub fn new(vocab_size: usize, seed: u64, split: Split, shard: usize,
+               n_shards: usize) -> TokenStream {
+        assert!(shard < n_shards);
+        TokenStream {
+            // The grammar (the language) is fixed by LANGUAGE_SEED;
+            // `seed` only drives document sampling.
+            grammar: Grammar::new(vocab_size, grammar::LANGUAGE_SEED),
+            seed,
+            split,
+            shard,
+            n_shards,
+            buffer: Vec::new(),
+            next_doc: 0,
+        }
+    }
+
+    pub fn grammar(&self) -> &Grammar {
+        &self.grammar
+    }
+
+    fn doc_rng(&self, doc_index: u64) -> Pcg {
+        let split_tag = match self.split {
+            Split::Train => 1u64 << 62,
+            Split::Valid => 2u64 << 62,
+        };
+        let slot = doc_index * self.n_shards as u64 + self.shard as u64;
+        Pcg::new(self.seed, split_tag | slot)
+    }
+
+    /// Produce the next [batch, seq_len] batch by packing documents.
+    pub fn next_batch(&mut self, batch: usize, seq_len: usize,
+                      index: u64) -> Batch {
+        let need = batch * seq_len;
+        while self.buffer.len() < need {
+            let mut rng = self.doc_rng(self.next_doc);
+            self.next_doc += 1;
+            let doc = self.grammar.document(&mut rng);
+            self.buffer.extend_from_slice(&doc);
+        }
+        let tokens: Vec<i32> = self.buffer.drain(..need).collect();
+        Batch { batch, seq_len, tokens, index }
+    }
+
+    /// Documents consumed so far (telemetry / resumption).
+    pub fn docs_consumed(&self) -> u64 {
+        self.next_doc
+    }
+}
+
+/// Prefetching loader: a producer thread generates batches ahead of the
+/// training loop through a bounded channel (capacity = backpressure).
+pub struct Loader {
+    rx: Receiver<Batch>,
+}
+
+impl Loader {
+    pub fn spawn(vocab_size: usize, seed: u64, split: Split, batch: usize,
+                 seq_len: usize, capacity: usize, max_batches: u64) -> Loader {
+        let (tx, rx) = BoundedChannel::new(capacity);
+        std::thread::Builder::new()
+            .name("osp-data-loader".into())
+            .spawn(move || {
+                let mut stream =
+                    TokenStream::new(vocab_size, seed, split, 0, 1);
+                for i in 0..max_batches {
+                    let b = stream.next_batch(batch, seq_len, i);
+                    if tx.send(b).is_err() {
+                        return; // consumer gone
+                    }
+                }
+            })
+            .expect("spawn loader");
+        Loader { rx }
+    }
+
+    pub fn next(&self) -> Option<Batch> {
+        self.rx.recv()
+    }
+
+    pub fn depth(&self) -> usize {
+        self.rx.depth()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_are_deterministic() {
+        let mut a = TokenStream::new(256, 4, Split::Train, 0, 1);
+        let mut b = TokenStream::new(256, 4, Split::Train, 0, 1);
+        for i in 0..5 {
+            assert_eq!(a.next_batch(4, 64, i), b.next_batch(4, 64, i));
+        }
+    }
+
+    #[test]
+    fn shards_partition_documents() {
+        // Union of 3 shards' first documents == the first 9 documents of
+        // the unsharded stream (as multisets).
+        let single: Vec<Vec<i32>> = {
+            let s = TokenStream::new(256, 4, Split::Train, 0, 1);
+            (0..9u64)
+                .map(|d| {
+                    let mut rng = s.doc_rng(d);
+                    s.grammar.document(&mut rng)
+                })
+                .collect()
+        };
+        let mut union: Vec<Vec<i32>> = Vec::new();
+        for shard in 0..3 {
+            let s = TokenStream::new(256, 4, Split::Train, shard, 3);
+            for d in 0..3u64 {
+                let mut rng = s.doc_rng(d);
+                union.push(s.grammar.document(&mut rng));
+            }
+        }
+        let mut a = single;
+        let mut b = union;
+        a.sort();
+        b.sort();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn train_and_valid_disjoint() {
+        let t = TokenStream::new(256, 4, Split::Train, 0, 1);
+        let v = TokenStream::new(256, 4, Split::Valid, 0, 1);
+        let mut tr = t.doc_rng(0);
+        let mut vr = v.doc_rng(0);
+        assert_ne!(t.grammar.document(&mut tr), v.grammar.document(&mut vr));
+    }
+
+    #[test]
+    fn packing_loses_no_tokens() {
+        let mut s = TokenStream::new(256, 4, Split::Train, 0, 1);
+        let b1 = s.next_batch(2, 32, 0);
+        let b2 = s.next_batch(2, 32, 1);
+        // Regenerate the same docs manually; concatenation must match.
+        let mut manual = Vec::new();
+        let fresh = TokenStream::new(256, 4, Split::Train, 0, 1);
+        let mut d = 0u64;
+        while manual.len() < 128 {
+            let mut rng = fresh.doc_rng(d);
+            manual.extend(fresh.grammar.document(&mut rng));
+            d += 1;
+        }
+        let got: Vec<i32> =
+            b1.tokens.iter().chain(&b2.tokens).copied().collect();
+        assert_eq!(got, manual[..128].to_vec());
+    }
+
+    #[test]
+    fn loader_prefetches_and_terminates() {
+        let loader = Loader::spawn(256, 7, Split::Train, 2, 32, 3, 10);
+        let mut n = 0;
+        while let Some(b) = loader.next() {
+            assert_eq!(b.tokens.len(), 64);
+            assert_eq!(b.index, n);
+            n += 1;
+        }
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    fn loader_depth_bounded() {
+        let loader = Loader::spawn(256, 7, Split::Train, 2, 32, 2, 100);
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert!(loader.depth() <= 2);
+        for _ in 0..10 {
+            loader.next().unwrap();
+            assert!(loader.depth() <= 2);
+        }
+    }
+}

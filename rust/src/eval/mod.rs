@@ -1,0 +1,101 @@
+//! Evaluation: held-out perplexity under any quantization configuration,
+//! the 10-task synthetic benchmark suite, and attention-sink analysis.
+
+pub mod sinks;
+pub mod tasks;
+
+use anyhow::Result;
+
+use crate::coordinator::levels_for_bits;
+use crate::data::{Split, TokenStream};
+use crate::runtime::{Engine, HostValue};
+use crate::tensor::Tensor;
+
+/// A `w-a-kv` bit configuration (paper notation; 16 = off). The weight
+/// bits are applied by `quant::prepare` before calling these helpers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BitConfig {
+    pub w: u32,
+    pub a: u32,
+    pub kv: u32,
+}
+
+impl BitConfig {
+    pub const FP: BitConfig = BitConfig { w: 16, a: 16, kv: 16 };
+
+    pub fn new(w: u32, a: u32, kv: u32) -> BitConfig {
+        BitConfig { w, a, kv }
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}-{}-{}", self.w, self.a, self.kv)
+    }
+
+    /// The paper's Table-2 columns.
+    pub fn table2_columns() -> Vec<BitConfig> {
+        vec![
+            BitConfig::new(16, 16, 16),
+            BitConfig::new(4, 8, 16),
+            BitConfig::new(4, 8, 8),
+            BitConfig::new(4, 4, 16),
+            BitConfig::new(4, 4, 4),
+        ]
+    }
+}
+
+/// Evaluation outcome.
+#[derive(Clone, Debug)]
+pub struct PplResult {
+    pub ppl: f64,
+    pub nll_per_token: f64,
+    pub kurt_max: f64,
+    pub kurt_mean: f64,
+}
+
+/// Held-out perplexity with runtime activation/KV quantization.
+/// `had_flag` must match the weight preparation (quant::prepare).
+pub fn perplexity(engine: &Engine, arch: &str, params: &[Tensor],
+                  a_bits: u32, kv_bits: u32, had_flag: f32,
+                  n_batches: usize) -> Result<PplResult> {
+    let m = engine.manifest();
+    let evalq = engine.load(&format!("evalq_{arch}"))?;
+    let (b, s) = (m.batch_eval, m.model.seq_len);
+    let mut valid = TokenStream::new(m.model.vocab_size, 0xE7A1, Split::Valid,
+                                     0, 1);
+    let mut nll = 0.0f64;
+    let mut count = 0.0f64;
+    let mut kurt: Vec<f32> = Vec::new();
+    for i in 0..n_batches {
+        let batch = valid.next_batch(b, s, i as u64);
+        let mut inputs: Vec<HostValue> =
+            params.iter().cloned().map(HostValue::F32).collect();
+        inputs.push(HostValue::tokens(&[b, s], batch.tokens));
+        inputs.push(HostValue::scalar(levels_for_bits(a_bits)));
+        inputs.push(HostValue::scalar(levels_for_bits(kv_bits)));
+        inputs.push(HostValue::scalar(had_flag));
+        let out = evalq.run(&inputs)?;
+        nll += out[0].as_f32()?.data()[0] as f64;
+        count += out[1].as_f32()?.data()[0] as f64;
+        kurt = out[2].as_f32()?.data().to_vec();
+    }
+    let per_tok = nll / count;
+    let kmax = kurt.iter().cloned().fold(f32::MIN, f32::max) as f64;
+    let kmean = kurt.iter().sum::<f32>() as f64 / kurt.len().max(1) as f64;
+    // Perplexities explode under aggressive quantization (the paper's 1e5
+    // cells); clamp the exponent to keep the number printable.
+    let ppl = per_tok.min(60.0).exp();
+    Ok(PplResult { ppl, nll_per_token: per_tok, kurt_max: kmax,
+                   kurt_mean: kmean })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitconfig_labels() {
+        assert_eq!(BitConfig::new(4, 4, 4).label(), "4-4-4");
+        assert_eq!(BitConfig::FP.label(), "16-16-16");
+        assert_eq!(BitConfig::table2_columns().len(), 5);
+    }
+}

@@ -1,0 +1,162 @@
+//! Attention-sink and massive-activation analysis (paper §5.2, Figures
+//! 5 & 6): do sinks persist without outliers, and through which logit
+//! strategy?
+//!
+//! Works on the probe executable's captures: residual streams (massive-
+//! activation detection via the Bondarenko 6-sigma criterion), per-head
+//! q/k channel magnitudes (Fig 5), and raw attention logits (Fig 6's
+//! sink-vs-rest distributions).
+
+use anyhow::Result;
+
+use crate::runtime::{Engine, HostValue};
+use crate::tensor::stats;
+use crate::tensor::Tensor;
+
+/// Per-head sink diagnostics for one probed layer.
+#[derive(Clone, Debug)]
+pub struct HeadSink {
+    pub layer: usize,
+    pub head: usize,
+    /// Mean attention probability mass on position 0 (BOS) over queries.
+    pub sink_mass: f64,
+    /// Mean raw logit toward position 0 vs mean logit elsewhere.
+    pub sink_logit_mean: f64,
+    pub other_logit_mean: f64,
+    pub other_logit_std: f64,
+}
+
+/// Whole-model analysis output.
+#[derive(Clone, Debug)]
+pub struct SinkReport {
+    pub heads: Vec<HeadSink>,
+    /// Fraction of residual-stream activations beyond 6 sigma.
+    pub massive_fraction_mhsa: f64,
+    pub massive_fraction_ffn: f64,
+    /// Residual-stream excess kurtosis (max over probed layers).
+    pub kurt_max: f64,
+    /// Channel concentration of q/k magnitudes: max/mean ratio per probed
+    /// layer-head, averaged (Fig 5: Adam concentrated, OSP diffuse).
+    pub qk_concentration: f64,
+}
+
+impl SinkReport {
+    /// Heads with sink mass above `thresh` (Gu et al.-style filter).
+    pub fn sink_heads(&self, thresh: f64) -> Vec<&HeadSink> {
+        self.heads.iter().filter(|h| h.sink_mass > thresh).collect()
+    }
+}
+
+/// Run the probe and analyze sinks / massive activations.
+pub fn analyze(engine: &Engine, arch: &str, params: &[Tensor],
+               tokens: HostValue) -> Result<SinkReport> {
+    let m = engine.manifest();
+    let probe = engine.load(&format!("probe_{arch}"))?;
+    let (b, s) = (m.batch_probe, m.model.seq_len);
+    let (nh, d) = (m.model.n_heads, m.model.d_model);
+    let hd = d / nh;
+    let probe_layers = m.probe_layers.clone();
+
+    let mut inputs: Vec<HostValue> =
+        params.iter().cloned().map(HostValue::F32).collect();
+    inputs.push(tokens);
+    let out = probe.run(&inputs)?;
+    let kurt = out[0].as_f32()?;
+    let mhsa_in = out[1].as_f32()?;
+    let ffn_in = out[2].as_f32()?;
+    let q_mag = out[3].as_f32()?;
+    let k_mag = out[4].as_f32()?;
+    let attn_logits = out[5].as_f32()?;
+
+    let mut heads = Vec::new();
+    let lstride = b * nh * s * s;
+    for (pi, &layer) in probe_layers.iter().enumerate() {
+        for h in 0..nh {
+            let mut sink_mass = 0.0f64;
+            let mut sink_logits = Vec::new();
+            let mut other_logits = Vec::new();
+            for bb in 0..b {
+                let off = pi * lstride + (bb * nh + h) * s * s;
+                let logits = &attn_logits.data()[off..off + s * s];
+                for q in 1..s {
+                    let row = &logits[q * s..q * s + q + 1]; // causal prefix
+                    // softmax over the prefix
+                    let mx = row.iter().cloned().fold(f32::MIN, f32::max);
+                    let exps: Vec<f32> =
+                        row.iter().map(|&v| (v - mx).exp()).collect();
+                    let z: f32 = exps.iter().sum();
+                    sink_mass += (exps[0] / z) as f64;
+                    sink_logits.push(row[0]);
+                    other_logits.extend_from_slice(&row[1..]);
+                }
+            }
+            let n_q = (b * (s - 1)) as f64;
+            let sm = stats::moments(&sink_logits);
+            let om = stats::moments(&other_logits);
+            heads.push(HeadSink {
+                layer,
+                head: h,
+                sink_mass: sink_mass / n_q,
+                sink_logit_mean: sm.mean,
+                other_logit_mean: om.mean,
+                other_logit_std: om.var.sqrt(),
+            });
+        }
+    }
+
+    // q/k channel concentration: max |channel| / mean |channel|.
+    let mut conc = Vec::new();
+    let hstride = b * nh * hd;
+    for pi in 0..probe_layers.len() {
+        for mag in [q_mag, k_mag] {
+            let data = &mag.data()[pi * hstride..(pi + 1) * hstride];
+            for bh in 0..b * nh {
+                let ch = &data[bh * hd..(bh + 1) * hd];
+                let mx = ch.iter().cloned().fold(0.0f32, f32::max) as f64;
+                let mean =
+                    ch.iter().map(|&v| v as f64).sum::<f64>() / hd as f64;
+                if mean > 1e-9 {
+                    conc.push(mx / mean);
+                }
+            }
+        }
+    }
+    let qk_concentration =
+        conc.iter().sum::<f64>() / conc.len().max(1) as f64;
+
+    Ok(SinkReport {
+        heads,
+        massive_fraction_mhsa:
+            stats::Histogram::outlier_fraction(mhsa_in.data(), 6.0),
+        massive_fraction_ffn:
+            stats::Histogram::outlier_fraction(ffn_in.data(), 6.0),
+        kurt_max: kurt.data().iter().cloned().fold(f32::MIN, f32::max)
+            as f64,
+        qk_concentration,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sink_heads_filter() {
+        let mk = |mass| HeadSink {
+            layer: 0,
+            head: 0,
+            sink_mass: mass,
+            sink_logit_mean: 0.0,
+            other_logit_mean: 0.0,
+            other_logit_std: 1.0,
+        };
+        let report = SinkReport {
+            heads: vec![mk(0.1), mk(0.5), mk(0.9)],
+            massive_fraction_mhsa: 0.0,
+            massive_fraction_ffn: 0.0,
+            kurt_max: 0.0,
+            qk_concentration: 1.0,
+        };
+        assert_eq!(report.sink_heads(0.3).len(), 2);
+    }
+}

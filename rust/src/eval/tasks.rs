@@ -1,0 +1,368 @@
+//! The 10-task synthetic benchmark suite (the stand-in for ARC, CSQA,
+//! GSM8K, HellaSwag, MMLU, OBQA, PIQA, SIQA, TriviaQA, WinoGrande —
+//! DESIGN.md §2).
+//!
+//! Every task is 4-way multiple choice scored exactly like lm-eval-
+//! harness MC tasks: the option with the highest next-token
+//! log-likelihood wins; chance = 25%. Tasks are derived from the grammar
+//! the model was trained on, so a trained model is far above chance at
+//! fp16 and collapses toward chance when quantization destroys it —
+//! reproducing the Table-3 signature.
+
+use anyhow::Result;
+
+use crate::coordinator::levels_for_bits;
+use crate::data::grammar::{Class, Grammar, BOS, COLON, EQUALS, LPAREN,
+                           N_DIGITS, PLUS, QUERY, RPAREN, SEP};
+use crate::runtime::{Engine, HostValue};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg;
+
+pub const N_OPTIONS: usize = 4;
+
+/// One MC instance: a context, 4 single-token options, the answer index.
+#[derive(Clone, Debug)]
+pub struct Instance {
+    pub context: Vec<i32>,
+    pub options: [i32; N_OPTIONS],
+    pub answer: usize,
+}
+
+/// The task families, in the order reported by the benches.
+pub const TASK_NAMES: [&str; 10] = [
+    "bigram", "template", "induction", "copy", "math", "bracket", "zipf",
+    "recall", "long_induction", "math_2hop",
+];
+
+fn pick_distractors(correct: i32, pool: &[i32], rng: &mut Pcg) -> [i32; N_OPTIONS] {
+    let mut opts = [correct; N_OPTIONS];
+    let mut used = vec![correct];
+    for slot in opts.iter_mut().skip(1) {
+        loop {
+            let cand = pool[rng.below_usize(pool.len())];
+            if !used.contains(&cand) {
+                used.push(cand);
+                *slot = cand;
+                break;
+            }
+        }
+    }
+    opts
+}
+
+fn shuffle_answer(mut opts: [i32; N_OPTIONS], rng: &mut Pcg) -> ([i32; N_OPTIONS], usize) {
+    let correct = opts[0];
+    // Fisher-Yates over the fixed-size array.
+    for i in (1..N_OPTIONS).rev() {
+        let j = rng.below_usize(i + 1);
+        opts.swap(i, j);
+    }
+    let answer = opts.iter().position(|&o| o == correct).unwrap();
+    (opts, answer)
+}
+
+/// Generate `n` instances of the named task.
+pub fn generate(g: &Grammar, task: &str, n: usize, seed: u64) -> Vec<Instance> {
+    let mut rng = Pcg::new(seed ^ 0x7A5C, 55);
+    (0..n).map(|_| generate_one(g, task, &mut rng)).collect()
+}
+
+fn filler(g: &Grammar, rng: &mut Pcg, k: usize, out: &mut Vec<i32>) {
+    for _ in 0..k {
+        out.push(g.sample_class(Class::Func, rng));
+    }
+}
+
+fn generate_one(g: &Grammar, task: &str, rng: &mut Pcg) -> Instance {
+    let mut ctx = vec![BOS];
+    match task {
+        // ARC stand-in: local bigram knowledge.
+        "bigram" => {
+            let t = g.sample_class(Class::Noun, rng);
+            filler(g, rng, 3, &mut ctx);
+            ctx.push(SEP);
+            ctx.push(t);
+            let succ = g.successors(t);
+            let correct = succ[0];
+            let pool: Vec<i32> = g
+                .class_tokens(Class::Noun)
+                .iter()
+                .chain(g.class_tokens(Class::Verb))
+                .copied()
+                .filter(|c| !succ.contains(c))
+                .collect();
+            let (options, answer) =
+                shuffle_answer(pick_distractors(correct, &pool, rng), rng);
+            Instance { context: ctx, options, answer }
+        }
+        // WinoGrande stand-in: agreement between noun and verb form.
+        "template" => {
+            let adj = g.sample_class(Class::Adj, rng);
+            let noun = g.sample_class(Class::Noun, rng);
+            let correct = g.agreement[noun as usize];
+            ctx.extend_from_slice(&[adj, noun]);
+            let pool: Vec<i32> = g
+                .class_tokens(Class::Verb)
+                .iter()
+                .copied()
+                .filter(|&v| v != correct)
+                .collect();
+            let (options, answer) =
+                shuffle_answer(pick_distractors(correct, &pool, rng), rng);
+            Instance { context: ctx, options, answer }
+        }
+        // HellaSwag stand-in: continue the repeated pattern.
+        "induction" | "long_induction" => {
+            let a = g.sample_class(Class::Noun, rng);
+            let b = g.sample_class(Class::Verb, rng);
+            ctx.push(a);
+            ctx.push(b);
+            let gap = if task == "induction" { 3 } else { 12 };
+            filler(g, rng, gap, &mut ctx);
+            ctx.push(a);
+            let pool: Vec<i32> = g
+                .class_tokens(Class::Verb)
+                .iter()
+                .copied()
+                .filter(|&v| v != b)
+                .collect();
+            let (options, answer) =
+                shuffle_answer(pick_distractors(b, &pool, rng), rng);
+            Instance { context: ctx, options, answer }
+        }
+        // PIQA stand-in: verbatim copy.
+        "copy" => {
+            let span: Vec<i32> = (0..3)
+                .map(|_| g.sample_class(Class::Noun, rng))
+                .collect();
+            ctx.extend_from_slice(&span);
+            ctx.push(SEP);
+            ctx.extend_from_slice(&span[..2]);
+            let correct = span[2];
+            let pool: Vec<i32> = g
+                .class_tokens(Class::Noun)
+                .iter()
+                .copied()
+                .filter(|&v| !span.contains(&v))
+                .collect();
+            let (options, answer) =
+                shuffle_answer(pick_distractors(correct, &pool, rng), rng);
+            Instance { context: ctx, options, answer }
+        }
+        // MMLU stand-in: one-hop modular arithmetic.
+        "math" => {
+            let a = rng.below_usize(N_DIGITS);
+            let b = rng.below_usize(N_DIGITS);
+            ctx.extend_from_slice(&[g.digit(a), PLUS, g.digit(b), EQUALS]);
+            let correct = g.digit(a + b);
+            let pool: Vec<i32> = (0..N_DIGITS)
+                .map(|v| g.digit(v))
+                .filter(|&v| v != correct)
+                .collect();
+            let (options, answer) =
+                shuffle_answer(pick_distractors(correct, &pool, rng), rng);
+            Instance { context: ctx, options, answer }
+        }
+        // OBQA stand-in: close the bracket.
+        "bracket" => {
+            ctx.push(LPAREN);
+            ctx.push(g.sample_class(Class::Noun, rng));
+            ctx.push(g.sample_class(Class::Verb, rng));
+            let correct = RPAREN;
+            let distractors = [
+                LPAREN,
+                g.sample_class(Class::Noun, rng),
+                g.sample_class(Class::Func, rng),
+            ];
+            let mut options = [correct; N_OPTIONS];
+            options[1..].copy_from_slice(&distractors);
+            let (options, answer) = shuffle_answer(options, rng);
+            Instance { context: ctx, options, answer }
+        }
+        // SIQA stand-in: frequency prior (Zipf head vs tail).
+        "zipf" => {
+            ctx.push(SEP);
+            let nouns = g.class_tokens(Class::Noun);
+            let correct = nouns[0]; // Zipf rank 1 within the class
+            let tail = &nouns[nouns.len() * 3 / 4..];
+            let (options, answer) =
+                shuffle_answer(pick_distractors(correct, tail, rng), rng);
+            Instance { context: ctx, options, answer }
+        }
+        // TriviaQA stand-in: key-value recall.
+        "recall" => {
+            let k = g.sample_class(Class::Noun, rng);
+            let v = g.sample_class(Class::Adj, rng);
+            ctx.extend_from_slice(&[k, COLON, v]);
+            filler(g, rng, 4, &mut ctx);
+            ctx.extend_from_slice(&[QUERY, k, COLON]);
+            let pool: Vec<i32> = g
+                .class_tokens(Class::Adj)
+                .iter()
+                .copied()
+                .filter(|&x| x != v)
+                .collect();
+            let (options, answer) =
+                shuffle_answer(pick_distractors(v, &pool, rng), rng);
+            Instance { context: ctx, options, answer }
+        }
+        // GSM8K stand-in: two-hop arithmetic (expected near chance at
+        // this scale, like GSM8K's 0.0 rows in Table 3).
+        "math_2hop" => {
+            let a = rng.below_usize(N_DIGITS);
+            let b = rng.below_usize(N_DIGITS);
+            let c = (a + b) % N_DIGITS;
+            let d = rng.below_usize(N_DIGITS);
+            ctx.extend_from_slice(&[
+                g.digit(a), PLUS, g.digit(b), EQUALS, g.digit(c), SEP,
+                g.digit(c), PLUS, g.digit(d), EQUALS,
+            ]);
+            let correct = g.digit(c + d);
+            let pool: Vec<i32> = (0..N_DIGITS)
+                .map(|v| g.digit(v))
+                .filter(|&v| v != correct)
+                .collect();
+            let (options, answer) =
+                shuffle_answer(pick_distractors(correct, &pool, rng), rng);
+            Instance { context: ctx, options, answer }
+        }
+        other => panic!("unknown task '{other}'"),
+    }
+}
+
+/// Accuracy of the model on a task under the given runtime quantization.
+/// Instances are packed into fixed [batch_eval, seq_len] rows; options
+/// are scored by the logit at the context's final position.
+pub fn accuracy(engine: &Engine, arch: &str, params: &[Tensor],
+                instances: &[Instance], a_bits: u32, kv_bits: u32,
+                had_flag: f32) -> Result<f64> {
+    let m = engine.manifest();
+    let logitsq = engine.load(&format!("logitsq_{arch}"))?;
+    let (b, s, v) = (m.batch_eval, m.model.seq_len, m.model.vocab_size);
+
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for chunk in instances.chunks(b) {
+        let mut tokens = vec![SEP; b * s];
+        let mut read_pos = vec![0usize; b];
+        for (r, inst) in chunk.iter().enumerate() {
+            let ctx = &inst.context[..inst.context.len().min(s)];
+            tokens[r * s..r * s + ctx.len()].copy_from_slice(ctx);
+            read_pos[r] = ctx.len() - 1;
+        }
+        let mut inputs: Vec<HostValue> =
+            params.iter().cloned().map(HostValue::F32).collect();
+        inputs.push(HostValue::tokens(&[b, s], tokens));
+        inputs.push(HostValue::scalar(levels_for_bits(a_bits)));
+        inputs.push(HostValue::scalar(levels_for_bits(kv_bits)));
+        inputs.push(HostValue::scalar(had_flag));
+        let out = logitsq.run(&inputs)?;
+        let logits = out[0].as_f32()?;
+        for (r, inst) in chunk.iter().enumerate() {
+            let base = (r * s + read_pos[r]) * v;
+            let row = &logits.data()[base..base + v];
+            let best = inst
+                .options
+                .iter()
+                .enumerate()
+                .max_by(|(_, &x), (_, &y)| {
+                    row[x as usize].total_cmp(&row[y as usize])
+                })
+                .map(|(i, _)| i)
+                .unwrap();
+            if best == inst.answer {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    Ok(correct as f64 / total.max(1) as f64)
+}
+
+/// Run the full 10-task suite; returns (task, accuracy) pairs + average.
+pub fn run_suite(engine: &Engine, arch: &str, params: &[Tensor],
+                 n_per_task: usize, a_bits: u32, kv_bits: u32,
+                 had_flag: f32, seed: u64) -> Result<(Vec<(String, f64)>, f64)> {
+    let m = engine.manifest();
+    // Tasks must be posed in the language the model was trained on.
+    let g = Grammar::new(m.model.vocab_size,
+                         crate::data::grammar::LANGUAGE_SEED);
+    let mut rows = Vec::new();
+    let mut sum = 0.0;
+    for task in TASK_NAMES {
+        let instances = generate(&g, task, n_per_task, seed);
+        let acc = accuracy(engine, arch, params, &instances, a_bits,
+                           kv_bits, had_flag)?;
+        sum += acc;
+        rows.push((task.to_string(), acc));
+    }
+    Ok((rows, sum / TASK_NAMES.len() as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grammar() -> Grammar {
+        Grammar::new(512, 42)
+    }
+
+    #[test]
+    fn all_tasks_generate_valid_instances() {
+        let g = grammar();
+        for task in TASK_NAMES {
+            let instances = generate(&g, task, 20, 7);
+            assert_eq!(instances.len(), 20);
+            for inst in &instances {
+                assert!(inst.answer < N_OPTIONS);
+                assert!(inst.context.len() >= 2);
+                assert!(inst.context.len() < 64, "{task} context too long");
+                // options distinct
+                let mut o = inst.options.to_vec();
+                o.sort_unstable();
+                o.dedup();
+                assert_eq!(o.len(), N_OPTIONS, "{task} duplicate options");
+                // correct option present at answer index
+                for &t in &inst.options {
+                    assert!((0..512).contains(&t));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn answers_are_shuffled() {
+        let g = grammar();
+        let instances = generate(&g, "bigram", 100, 9);
+        let mut hist = [0usize; N_OPTIONS];
+        for i in &instances {
+            hist[i.answer] += 1;
+        }
+        for &h in &hist {
+            assert!(h > 5, "answer position biased: {hist:?}");
+        }
+    }
+
+    #[test]
+    fn math_task_is_consistent_with_grammar() {
+        let g = grammar();
+        for inst in generate(&g, "math", 50, 3) {
+            // context: BOS d1 + d2 =
+            let a = inst.context[1] - 8;
+            let b = inst.context[3] - 8;
+            let correct = inst.options[inst.answer] - 8;
+            assert_eq!((a + b) % N_DIGITS as i32, correct);
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let g = grammar();
+        let a = generate(&g, "recall", 10, 5);
+        let b = generate(&g, "recall", 10, 5);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.context, y.context);
+            assert_eq!(x.options, y.options);
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! Outlier-Safe Pre-Training (OSP) — Rust coordinator library.
+//!
+//! Reproduction of *Outlier-Safe Pre-Training for Robust 4-Bit
+//! Quantization of Large Language Models* (Park et al., ACL 2025) as a
+//! three-layer Rust + JAX + Pallas system. This crate is Layer 3: the
+//! training coordinator, data pipeline, quantization library, and
+//! evaluation harness that drive AOT-compiled XLA executables (built once
+//! by `make artifacts` from `python/compile/`).
+//!
+//! Module map (see DESIGN.md §3):
+//! * [`util`] — hand-built substrates (JSON, RNG, CLI, threadpool,
+//!   property testing); the offline build vendors only the `xla` crate.
+//! * [`tensor`] — dense f32 tensor/linalg library (matmul, QR, Cholesky,
+//!   Hadamard, moment statistics).
+//! * [`runtime`] — PJRT client wrapper; manifest-driven artifact loading.
+//! * [`data`] — synthetic grammar corpus, sharding, batching.
+//! * [`coordinator`] — the training control plane (fused + disaggregated
+//!   optimizer-parallel modes, simulated data parallelism).
+//! * [`quant`] — RTN / GPTQ / QuaRot-lite / SpinQuant-lite and EmbProj
+//!   absorption.
+//! * [`eval`] — perplexity, the 10-task synthetic benchmark suite, and
+//!   attention-sink analysis.
+//! * [`metrics`] — telemetry registry, histograms, kurtosis tracking.
+//! * [`checkpoint`] — binary parameter store.
+//! * [`bench`] — the bench harness used by `rust/benches/*` (no criterion
+//!   offline).
+
+pub mod bench;
+pub mod checkpoint;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod metrics;
+pub mod quant;
+pub mod repro;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,216 @@
+//! `osp` — the Outlier-Safe Pre-Training coordinator CLI.
+//!
+//! Subcommands:
+//!   train      train one configuration (fused / DP / disaggregated)
+//!   ablation   train the full Table-2 ablation grid
+//!   repro      regenerate a paper table or figure from recorded runs
+//!   suite      run the 10-task benchmark suite on a checkpoint
+//!   quantize   apply a PTQ recipe to a checkpoint and report perplexity
+//!   analyze    attention-sink / massive-activation analysis (§5.2)
+//!
+//! Everything is manifest-driven; run `make artifacts` first.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use osp::checkpoint;
+use osp::config::{TrainConfig, ABLATION_GRID};
+use osp::coordinator::Trainer;
+use osp::eval::{perplexity, tasks};
+use osp::quant::{self, PtqConfig, Rotation, WeightMethod};
+use osp::repro::{self, Effort};
+use osp::runtime::Engine;
+use osp::util::cli::Args;
+
+const HELP: &str = "\
+osp — Outlier-Safe Pre-Training coordinator (Park et al., ACL 2025 repro)
+
+USAGE: osp <subcommand> [flags]
+
+  train      --optimizer adam|muon|muon_noadam|shampoo|soap
+             --arch rmsnorm_plain|ssnorm_plain|rmsnorm_embproj|ssnorm_embproj
+             --steps N --lr F --seed N --run-dir DIR
+             --dp-ranks N --grad-accum N --disaggregated true
+             --ckpt-every N --eval-every N
+  ablation   --steps N --runs-dir DIR          train all 6 Table-2 configs
+  repro      table2|table3|table4|table5|fig1|fig2|fig3|fig4|
+             fig5_6|fig7|fig8_11  [--runs-dir DIR] [--full]
+  suite      --ckpt DIR [--a-bits N --kv-bits N]
+  quantize   --ckpt DIR [--w-bits N] [--method rtn|gptq]
+             [--rotation none|random|learned] [--ffn-had true]
+  analyze    [--runs-dir DIR] [--tags adam,osp]
+
+  common     --artifacts DIR (default: artifacts)
+";
+
+fn engine_from(args: &Args) -> Result<Engine> {
+    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    Engine::open(&dir)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = TrainConfig::from_args(args);
+    let engine = engine_from(args)?;
+    let mut trainer = Trainer::new(engine, cfg)?;
+    let summary = trainer.run()?;
+    println!(
+        "done: steps={} final_loss={:.4} final_ppl={:.2} kurt_max={:.2} \
+         tok/s={:.0} wall={:.1}s",
+        summary.steps, summary.final_loss, summary.final_ppl,
+        summary.final_kurt_max, summary.tokens_per_sec, summary.wall_secs);
+    for (phase, n, secs) in trainer.profiler.report() {
+        println!("  [profile] {phase:12} x{n:<6} {secs:8.2}s");
+    }
+    Ok(())
+}
+
+fn cmd_ablation(args: &Args) -> Result<()> {
+    let engine = engine_from(args)?;
+    let steps = args.u64_or("steps", 300);
+    let runs_dir = PathBuf::from(args.str_or("runs-dir", "runs"));
+    for (tag, optimizer, arch) in ABLATION_GRID {
+        let run_dir = runs_dir.join(tag);
+        if !checkpoint::list_steps(&run_dir).is_empty()
+            && !args.bool_or("force", false)
+        {
+            println!("[{tag}] already trained (use --force to redo)");
+            continue;
+        }
+        println!("=== training {tag} ({optimizer} @ {arch}) ===");
+        let mut targs = vec![
+            "--optimizer".to_string(), optimizer.to_string(),
+            "--arch".to_string(), arch.to_string(),
+            "--steps".to_string(), steps.to_string(),
+            "--run-dir".to_string(), run_dir.to_string_lossy().into_owned(),
+            "--ckpt-every".to_string(),
+            (steps / 3).max(1).to_string(),
+        ];
+        if let Some(lr) = args.get("lr") {
+            targs.push("--lr".into());
+            targs.push(lr.to_string());
+        }
+        let cfg = TrainConfig::from_args(&Args::parse(&targs, false));
+        let mut trainer = Trainer::new(engine.clone(), cfg)?;
+        let s = trainer.run()?;
+        println!(
+            "[{tag}] loss={:.4} ppl={:.2} kurt_max={:.2} tok/s={:.0}",
+            s.final_loss, s.final_ppl, s.final_kurt_max, s.tokens_per_sec);
+    }
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let what = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("repro needs a table/figure id"))?
+        .clone();
+    let engine = engine_from(args)?;
+    let runs_dir = PathBuf::from(args.str_or("runs-dir", "runs"));
+    let effort = if args.bool_or("full", false) {
+        Effort::FULL
+    } else {
+        Effort::QUICK
+    };
+    let all = repro::ablation_tags();
+    match what.as_str() {
+        "table2" => repro::table2(&engine, &runs_dir, effort)?.print(),
+        "table3" => repro::table3(&engine, &runs_dir, effort)?.print(),
+        "table4" => repro::table4(&engine, &runs_dir, effort)?.print(),
+        "table5" => repro::table5(&engine, &runs_dir, effort)?.print(),
+        "fig1" => repro::fig1(&engine, &runs_dir, effort)?.print(),
+        "fig2" | "fig8_11" => {
+            println!("{}", repro::fig2(&engine, &runs_dir, &all)?);
+            println!("{}", repro::fig1011(&engine, &runs_dir,
+                                          &["adam", "osp"])?);
+        }
+        "fig3" => println!("{}", repro::fig3(&runs_dir, &all)?),
+        "fig7" => println!("{}", repro::fig3(&runs_dir, &["adam", "osp"])?),
+        "fig4" => repro::fig4(&engine, &runs_dir,
+                              &["adam", "muon", "osp"], effort)?.print(),
+        "fig5_6" => println!("{}", repro::fig56(&engine, &runs_dir,
+                                                &["adam", "osp"])?),
+        "table1" => bail!("table1 is a bench: \
+                           cargo bench --bench table1_optimizers"),
+        other => bail!("unknown repro target '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_suite(args: &Args) -> Result<()> {
+    let engine = engine_from(args)?;
+    let ckpt = PathBuf::from(
+        args.get("ckpt").ok_or_else(|| anyhow!("--ckpt required"))?);
+    let ck = checkpoint::load(&ckpt)?;
+    let a = args.usize_or("a-bits", 16) as u32;
+    let kv = args.usize_or("kv-bits", 16) as u32;
+    let (rows, avg) = tasks::run_suite(&engine, &ck.arch, &ck.params, 24,
+                                       a, kv, 0.0, 99)?;
+    for (task, acc) in rows {
+        println!("{task:16} {:.1}", 100.0 * acc);
+    }
+    println!("{:16} {:.1}", "AVERAGE", 100.0 * avg);
+    Ok(())
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let engine = engine_from(args)?;
+    let ckpt = PathBuf::from(
+        args.get("ckpt").ok_or_else(|| anyhow!("--ckpt required"))?);
+    let ck = checkpoint::load(&ckpt)?;
+    let cfg = PtqConfig {
+        w_bits: args.usize_or("w-bits", 4) as u32,
+        method: match args.str_or("method", "rtn").as_str() {
+            "gptq" => WeightMethod::Gptq,
+            _ => WeightMethod::Rtn,
+        },
+        rotation: match args.str_or("rotation", "none").as_str() {
+            "random" => Rotation::Random,
+            "learned" => Rotation::Learned,
+            _ => Rotation::None,
+        },
+        ffn_had: args.bool_or("ffn-had", false),
+        seed: args.u64_or("seed", 7),
+        calib_batches: args.usize_or("calib-batches", 2),
+    };
+    let qm = quant::prepare(&engine, &ck.arch, &ck.params, &cfg)?;
+    let a = args.usize_or("a-bits", 4) as u32;
+    let kv = args.usize_or("kv-bits", 4) as u32;
+    let fp = perplexity(&engine, &ck.arch, &ck.params, 16, 16, 0.0, 2)?;
+    let q = perplexity(&engine, &qm.arch, &qm.params, a, kv, qm.had_flag,
+                       2)?;
+    println!("{}: fp16 ppl {:.2} -> quantized ppl {:.2} (kurt_max {:.2})",
+             cfg.label(), fp.ppl, q.ppl, fp.kurt_max);
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let engine = engine_from(args)?;
+    let runs_dir = PathBuf::from(args.str_or("runs-dir", "runs"));
+    let tags = args.list_or("tags", &["adam", "osp"]);
+    let tag_refs: Vec<&str> = tags.iter().map(|s| s.as_str()).collect();
+    println!("{}", repro::fig56(&engine, &runs_dir, &tag_refs)?);
+    Ok(())
+}
+
+fn main() {
+    let args = Args::from_env(true);
+    let result = match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("ablation") => cmd_ablation(&args),
+        Some("repro") => cmd_repro(&args),
+        Some("suite") => cmd_suite(&args),
+        Some("quantize") => cmd_quantize(&args),
+        Some("analyze") => cmd_analyze(&args),
+        Some("help") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => Err(anyhow!("unknown subcommand '{other}'\n{HELP}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,258 @@
+//! Telemetry: per-step scalar series, JSONL emission, and the kurtosis
+//! tracker behind Figures 3 and 7.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One telemetry record (a step, an eval, a probe...).
+#[derive(Clone, Debug, Default)]
+pub struct Record {
+    pub step: u64,
+    pub fields: BTreeMap<String, f64>,
+    pub tags: BTreeMap<String, String>,
+}
+
+impl Record {
+    pub fn new(step: u64) -> Record {
+        Record { step, ..Default::default() }
+    }
+
+    pub fn field(mut self, key: &str, v: f64) -> Record {
+        self.fields.insert(key.to_string(), v);
+        self
+    }
+
+    pub fn tag(mut self, key: &str, v: &str) -> Record {
+        self.tags.insert(key.to_string(), v.to_string());
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("step".to_string(), Json::num(self.step as f64));
+        for (k, v) in &self.fields {
+            obj.insert(k.clone(), Json::num(*v));
+        }
+        for (k, v) in &self.tags {
+            obj.insert(k.clone(), Json::str(v.clone()));
+        }
+        Json::Obj(obj)
+    }
+
+    pub fn from_json(j: &Json) -> Option<Record> {
+        let obj = j.as_obj()?;
+        let mut r = Record::new(obj.get("step")?.as_f64()? as u64);
+        for (k, v) in obj {
+            if k == "step" {
+                continue;
+            }
+            match v {
+                Json::Num(n) => {
+                    r.fields.insert(k.clone(), *n);
+                }
+                Json::Str(s) => {
+                    r.tags.insert(k.clone(), s.clone());
+                }
+                _ => {}
+            }
+        }
+        Some(r)
+    }
+}
+
+/// Append-only JSONL telemetry writer (one per run).
+pub struct TelemetryWriter {
+    file: std::fs::File,
+}
+
+impl TelemetryWriter {
+    pub fn create(path: &Path) -> Result<TelemetryWriter> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating {path:?}"))?;
+        Ok(TelemetryWriter { file })
+    }
+
+    pub fn write(&mut self, rec: &Record) -> Result<()> {
+        writeln!(self.file, "{}", rec.to_json().dump())?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// Read a telemetry file back (the `repro fig3/fig7` renderers).
+pub fn read_telemetry(path: &Path) -> Result<Vec<Record>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {path:?}"))?;
+    Ok(text
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .filter_map(|l| Json::parse(l).ok())
+        .filter_map(|j| Record::from_json(&j))
+        .collect())
+}
+
+/// A scalar series (loss curve, kurtosis curve).
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub values: Vec<(u64, f64)>,
+}
+
+impl Series {
+    pub fn push(&mut self, step: u64, v: f64) {
+        self.values.push((step, v));
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.values.last().map(|&(_, v)| v)
+    }
+
+    /// Mean of the final `k` values (smoothed endpoint).
+    pub fn tail_mean(&self, k: usize) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        let n = self.values.len();
+        let s = &self.values[n.saturating_sub(k)..];
+        s.iter().map(|&(_, v)| v).sum::<f64>() / s.len() as f64
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().map(|&(_, v)| v).fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Downsample to ~k points for terminal plotting.
+    pub fn downsample(&self, k: usize) -> Vec<(u64, f64)> {
+        if self.values.len() <= k {
+            return self.values.clone();
+        }
+        let stride = self.values.len() as f64 / k as f64;
+        (0..k)
+            .map(|i| self.values[(i as f64 * stride) as usize])
+            .collect()
+    }
+}
+
+/// Wall-clock phase profiler for the coordinator's hot loop (§Perf):
+/// accumulates named spans, reports a breakdown.
+#[derive(Default)]
+pub struct PhaseProfiler {
+    totals: BTreeMap<String, (u64, f64)>,
+}
+
+pub struct PhaseGuard<'a> {
+    profiler: &'a mut PhaseProfiler,
+    name: String,
+    start: Instant,
+}
+
+impl PhaseProfiler {
+    pub fn span(&mut self, name: &str) -> PhaseGuard<'_> {
+        PhaseGuard { profiler: self, name: name.to_string(),
+                     start: Instant::now() }
+    }
+
+    pub fn add(&mut self, name: &str, secs: f64) {
+        let e = self.totals.entry(name.to_string()).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += secs;
+    }
+
+    pub fn report(&self) -> Vec<(String, u64, f64)> {
+        self.totals
+            .iter()
+            .map(|(k, &(n, t))| (k.clone(), n, t))
+            .collect()
+    }
+
+    pub fn total(&self, name: &str) -> f64 {
+        self.totals.get(name).map(|&(_, t)| t).unwrap_or(0.0)
+    }
+}
+
+impl Drop for PhaseGuard<'_> {
+    fn drop(&mut self) {
+        let dt = self.start.elapsed().as_secs_f64();
+        self.profiler.add(&self.name, dt);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_json_roundtrip() {
+        let r = Record::new(17)
+            .field("loss", 3.25)
+            .field("kurt_max", 12.5)
+            .tag("config", "osp");
+        let j = r.to_json();
+        let back = Record::from_json(&j).unwrap();
+        assert_eq!(back.step, 17);
+        assert_eq!(back.fields["loss"], 3.25);
+        assert_eq!(back.tags["config"], "osp");
+    }
+
+    #[test]
+    fn telemetry_write_read() {
+        let dir = std::env::temp_dir().join("osp_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("telemetry.jsonl");
+        {
+            let mut w = TelemetryWriter::create(&path).unwrap();
+            for i in 0..5 {
+                w.write(&Record::new(i).field("loss", 5.0 - i as f64))
+                    .unwrap();
+            }
+            w.flush().unwrap();
+        }
+        let recs = read_telemetry(&path).unwrap();
+        assert_eq!(recs.len(), 5);
+        assert_eq!(recs[4].fields["loss"], 1.0);
+    }
+
+    #[test]
+    fn series_aggregates() {
+        let mut s = Series::default();
+        for i in 0..10 {
+            s.push(i, i as f64);
+        }
+        assert_eq!(s.last(), Some(9.0));
+        assert_eq!(s.tail_mean(2), 8.5);
+        assert_eq!(s.max(), 9.0);
+        assert_eq!(s.downsample(5).len(), 5);
+    }
+
+    #[test]
+    fn profiler_accumulates() {
+        let mut p = PhaseProfiler::default();
+        {
+            let _g = p.span("phase_a");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        p.add("phase_a", 0.1);
+        let rep = p.report();
+        assert_eq!(rep.len(), 1);
+        assert_eq!(rep[0].1, 2);
+        assert!(p.total("phase_a") > 0.1);
+    }
+
+    #[test]
+    fn nan_serializes_as_null() {
+        let r = Record::new(0).field("bad", f64::NAN);
+        assert!(r.to_json().dump().contains("null"));
+    }
+}

@@ -1,0 +1,112 @@
+//! EmbProj absorption (paper Section 3.3): the learnable embedding
+//! projections are linear maps adjacent to the embedding/unembedding, so
+//! after training they fold into their neighbors with exact computational
+//! invariance:
+//!
+//!   embed' = embed @ P_in        unembed' = P_out @ unembed
+//!
+//! turning an `*_embproj` checkpoint into the corresponding plain
+//! architecture. The integration suite verifies invariance through the
+//! real evalq executables.
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::manifest::ParamSpec;
+use crate::tensor::linalg::matmul;
+use crate::tensor::Tensor;
+
+/// Fold embproj_in/out into embed/unembed. Inputs are the embproj arch's
+/// (specs, params); returns params ordered for the matching plain arch
+/// specs (same list minus the embproj leaves).
+pub fn absorb_embproj(specs: &[ParamSpec], params: &[Tensor])
+                      -> Result<Vec<Tensor>> {
+    assert_eq!(specs.len(), params.len());
+    let idx = |name: &str| -> Result<usize> {
+        specs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow!("param '{name}' not found"))
+    };
+    let p_in = &params[idx("embproj_in")?];
+    let p_out = &params[idx("embproj_out")?];
+    let embed = &params[idx("embed")?];
+    let unembed = &params[idx("unembed")?];
+
+    let new_embed = matmul(embed, p_in);
+    let new_unembed = matmul(p_out, unembed);
+
+    let mut out = Vec::with_capacity(specs.len() - 2);
+    for (s, p) in specs.iter().zip(params) {
+        match s.name.as_str() {
+            "embproj_in" | "embproj_out" => {}
+            "embed" => out.push(new_embed.clone()),
+            "unembed" => out.push(new_unembed.clone()),
+            _ => out.push(p.clone()),
+        }
+    }
+    Ok(out)
+}
+
+/// The plain-arch name for an embproj arch ("ssnorm_embproj" ->
+/// "ssnorm_plain").
+pub fn plain_arch(arch: &str) -> Option<String> {
+    arch.strip_suffix("_embproj").map(|base| format!("{base}_plain"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn spec(name: &str, shape: &[usize], kind: &str) -> ParamSpec {
+        ParamSpec { name: name.into(), shape: shape.to_vec(),
+                    init: "normal".into(), kind: kind.into() }
+    }
+
+    #[test]
+    fn absorb_drops_projections_and_composes() {
+        let mut rng = Pcg::new(1, 0);
+        let mut randn = |shape: &[usize]| {
+            let mut t = Tensor::zeros(shape);
+            rng.fill_normal(t.data_mut(), 1.0);
+            t
+        };
+        let specs = vec![
+            spec("embed", &[10, 4], "embed"),
+            spec("embproj_in", &[4, 4], "matrix"),
+            spec("embproj_out", &[4, 4], "matrix"),
+            spec("layers.0.wq", &[4, 4], "matrix"),
+            spec("unembed", &[4, 10], "unembed"),
+        ];
+        let params: Vec<Tensor> =
+            specs.iter().map(|s| randn(&s.shape)).collect();
+        let absorbed = absorb_embproj(&specs, &params).unwrap();
+        assert_eq!(absorbed.len(), 3);
+        // embed' = embed @ p_in
+        let want = matmul(&params[0], &params[1]);
+        crate::util::prop::all_close(absorbed[0].data(), want.data(), 1e-6)
+            .unwrap();
+        // unembed' = p_out @ unembed
+        let want_u = matmul(&params[2], &params[4]);
+        crate::util::prop::all_close(absorbed[2].data(), want_u.data(), 1e-6)
+            .unwrap();
+        // middle weight untouched
+        assert_eq!(absorbed[1].data(), params[3].data());
+    }
+
+    #[test]
+    fn plain_arch_names() {
+        assert_eq!(plain_arch("ssnorm_embproj").as_deref(),
+                   Some("ssnorm_plain"));
+        assert_eq!(plain_arch("rmsnorm_embproj").as_deref(),
+                   Some("rmsnorm_plain"));
+        assert_eq!(plain_arch("rmsnorm_plain"), None);
+    }
+
+    #[test]
+    fn missing_projection_errors() {
+        let specs = vec![spec("embed", &[4, 2], "embed")];
+        let params = vec![Tensor::zeros(&[4, 2])];
+        assert!(absorb_embproj(&specs, &params).is_err());
+    }
+}

@@ -1,0 +1,256 @@
+//! GPTQ calibration: reconstruct per-linear input activations from the
+//! probe executable's captures and accumulate Hessians H = X^T X.
+//!
+//! The probe artifact returns the raw residual-stream inputs (mhsa_in,
+//! ffn_in) and attention logits at the probed layers; everything else a
+//! linear layer consumes (post-norm h, the attention output, the FFN
+//! hidden state) is recomputed host-side from the checkpoint weights.
+//! Layers that are not probed borrow the Hessian of the nearest probed
+//! layer (DESIGN.md §5 documents this substitution).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::{Split, TokenStream};
+use crate::runtime::{Engine, HostValue};
+use crate::tensor::linalg::{matmul, transpose};
+use crate::tensor::Tensor;
+
+/// Per-parameter-name Hessians over the input dimension.
+pub type Hessians = BTreeMap<String, Tensor>;
+
+fn rmsnorm_rows(x: &Tensor, scale: &Tensor) -> Tensor {
+    let (rows, d) = (x.rows(), x.cols());
+    let mut out = x.clone();
+    for r in 0..rows {
+        let row = out.row_mut(r);
+        let ms: f32 =
+            row.iter().map(|v| v * v).sum::<f32>() / d as f32 + 1e-6;
+        let inv = 1.0 / ms.sqrt();
+        if scale.len() == 1 {
+            // SSNorm: gamma * x / ||x||_2 == gamma/sqrt(d) * x / rms.
+            let g = scale.data()[0] / (d as f32).sqrt();
+            for v in row.iter_mut() {
+                *v *= inv * g;
+            }
+        } else {
+            for (v, s) in row.iter_mut().zip(scale.data()) {
+                *v *= inv * s;
+            }
+        }
+    }
+    out
+}
+
+fn silu(v: f32) -> f32 {
+    v / (1.0 + (-v).exp())
+}
+
+/// Accumulate X^T X into the map under `name`.
+fn accumulate(hessians: &mut Hessians, name: &str, x: &Tensor) {
+    let h = matmul(&transpose(&x.clone().reshape(&[x.rows(), x.cols()])), x);
+    match hessians.get_mut(name) {
+        Some(acc) => acc.axpy(1.0, &h),
+        None => {
+            hessians.insert(name.to_string(), h);
+        }
+    }
+}
+
+/// Softmax over the last axis with causal masking, applied to captured
+/// attention logits [H, S, S] for one batch element.
+fn causal_softmax_rows(logits: &mut [f32], s: usize) {
+    for q in 0..s {
+        let row = &mut logits[q * s..(q + 1) * s];
+        let valid = q + 1;
+        let m = row[..valid].iter().cloned().fold(f32::MIN, f32::max);
+        let mut z = 0.0f32;
+        for v in row[..valid].iter_mut() {
+            *v = (*v - m).exp();
+            z += *v;
+        }
+        for v in row[..valid].iter_mut() {
+            *v /= z;
+        }
+        for v in row[valid..].iter_mut() {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Build calibration Hessians for `arch` at `params` using `n_batches`
+/// probe batches of held-out data.
+pub fn collect_hessians(engine: &Engine, arch: &str, params: &[Tensor],
+                        n_batches: usize) -> Result<Hessians> {
+    let m = engine.manifest();
+    let specs = m.params(arch)?;
+    let probe = engine.load(&format!("probe_{arch}"))?;
+    let (b, s) = (m.batch_probe, m.model.seq_len);
+    let (d, nh) = (m.model.d_model, m.model.n_heads);
+    let hd = d / nh;
+    let n_layers = m.model.n_layers;
+    let probe_layers = m.probe_layers.clone();
+
+    let by_name: BTreeMap<&str, &Tensor> = specs
+        .iter()
+        .zip(params)
+        .map(|(sp, p)| (sp.name.as_str(), p))
+        .collect();
+    let get = |name: &str| -> Result<&Tensor> {
+        by_name
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("calib: missing param {name}"))
+    };
+
+    let mut valid = TokenStream::new(m.model.vocab_size, 0xCA11B, Split::Valid,
+                                     0, 1);
+    let mut hessians: Hessians = BTreeMap::new();
+
+    for bi in 0..n_batches {
+        let batch = valid.next_batch(b, s, bi as u64);
+        let mut inputs: Vec<HostValue> =
+            params.iter().cloned().map(HostValue::F32).collect();
+        inputs.push(HostValue::tokens(&[b, s], batch.tokens));
+        let out = probe.run(&inputs)?;
+        // outputs: kurt, mhsa_in, ffn_in, q_mag, k_mag, attn_logits
+        let mhsa_in = out[1].as_f32()?;
+        let ffn_in = out[2].as_f32()?;
+        let attn_logits = out[5].as_f32()?;
+
+        for (pi, &layer) in probe_layers.iter().enumerate() {
+            let pfx = format!("layers.{layer}.");
+            let n = b * s;
+            let slice = |t: &Tensor| -> Tensor {
+                let stride = b * s * d;
+                Tensor::new(vec![n, d],
+                            t.data()[pi * stride..(pi + 1) * stride].to_vec())
+            };
+
+            // h_attn = norm(mhsa_in): input to wq/wk/wv.
+            let h_attn = rmsnorm_rows(&slice(mhsa_in),
+                                      get(&format!("{pfx}attn_norm"))?);
+            accumulate(&mut hessians, &format!("{pfx}wq"), &h_attn);
+            accumulate(&mut hessians, &format!("{pfx}wk"), &h_attn);
+            accumulate(&mut hessians, &format!("{pfx}wv"), &h_attn);
+
+            // Attention output = softmax(masked logits) @ v, merged heads:
+            // input to wo.
+            let v_flat = matmul(&h_attn, get(&format!("{pfx}wv"))?);
+            let mut attn_out = Tensor::zeros(&[n, d]);
+            let lstride = b * nh * s * s;
+            for bb in 0..b {
+                for h in 0..nh {
+                    let off = pi * lstride + (bb * nh + h) * s * s;
+                    let mut probs =
+                        attn_logits.data()[off..off + s * s].to_vec();
+                    causal_softmax_rows(&mut probs, s);
+                    // out[q, :] = sum_k probs[q,k] * v[k, head h]
+                    for q in 0..s {
+                        for k in 0..=q.min(s - 1) {
+                            let p = probs[q * s + k];
+                            if p == 0.0 {
+                                continue;
+                            }
+                            for c in 0..hd {
+                                let vv = v_flat
+                                    .at2(bb * s + k, h * hd + c);
+                                let cur =
+                                    attn_out.at2(bb * s + q, h * hd + c);
+                                attn_out.set2(bb * s + q, h * hd + c,
+                                              cur + p * vv);
+                            }
+                        }
+                    }
+                }
+            }
+            accumulate(&mut hessians, &format!("{pfx}wo"), &attn_out);
+
+            // h_ffn = norm(ffn_in): input to w_gate/w_up.
+            let h_ffn = rmsnorm_rows(&slice(ffn_in),
+                                     get(&format!("{pfx}ffn_norm"))?);
+            accumulate(&mut hessians, &format!("{pfx}w_gate"), &h_ffn);
+            accumulate(&mut hessians, &format!("{pfx}w_up"), &h_ffn);
+
+            // FFN hidden g = silu(h@w_gate) * (h@w_up): input to w_down.
+            let gate = matmul(&h_ffn, get(&format!("{pfx}w_gate"))?);
+            let up = matmul(&h_ffn, get(&format!("{pfx}w_up"))?);
+            let mut g = up;
+            for (gv, xv) in g.data_mut().iter_mut().zip(gate.data()) {
+                *gv *= silu(*xv);
+            }
+            accumulate(&mut hessians, &format!("{pfx}w_down"), &g);
+        }
+    }
+
+    // Nearest-probe-layer fallback for unprobed layers.
+    for layer in 0..n_layers {
+        if probe_layers.contains(&layer) {
+            continue;
+        }
+        let nearest = *probe_layers
+            .iter()
+            .min_by_key(|&&p| (p as i64 - layer as i64).abs())
+            .unwrap();
+        for w in ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"] {
+            let src = format!("layers.{nearest}.{w}");
+            if let Some(h) = hessians.get(&src) {
+                hessians.insert(format!("layers.{layer}.{w}"), h.clone());
+            }
+        }
+    }
+    Ok(hessians)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmsnorm_rows_unit_rms() {
+        let x = Tensor::new(vec![2, 4], vec![2., 2., 2., 2., 1., 0., 0., 0.]);
+        let scale = Tensor::full(&[4], 1.0);
+        let y = rmsnorm_rows(&x, &scale);
+        for r in 0..2 {
+            let ms: f32 =
+                y.row(r).iter().map(|v| v * v).sum::<f32>() / 4.0;
+            assert!((ms - 1.0).abs() < 1e-3, "{ms}");
+        }
+    }
+
+    #[test]
+    fn ssnorm_scalar_path() {
+        let x = Tensor::new(vec![1, 4], vec![3., 0., 4., 0.]);
+        let gamma = Tensor::new(vec![1], vec![2.0]); // SSNorm gamma
+        let y = rmsnorm_rows(&x, &gamma);
+        // ||y|| should be gamma = 2
+        let n: f32 = y.data().iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!((n - 2.0).abs() < 1e-3, "{n}");
+    }
+
+    #[test]
+    fn causal_softmax_masks_future() {
+        let s = 4;
+        let mut logits = vec![0.0f32; s * s];
+        causal_softmax_rows(&mut logits, s);
+        // Row 0 attends only to position 0.
+        assert_eq!(logits[0], 1.0);
+        assert_eq!(logits[1], 0.0);
+        // Rows sum to 1 over the causal prefix.
+        for q in 0..s {
+            let sum: f32 = logits[q * s..(q + 1) * s].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn accumulate_sums_gram_matrices() {
+        let mut h = Hessians::new();
+        let x = Tensor::new(vec![2, 2], vec![1., 0., 0., 1.]);
+        accumulate(&mut h, "w", &x);
+        accumulate(&mut h, "w", &x);
+        assert_eq!(h["w"].at2(0, 0), 2.0);
+        assert_eq!(h["w"].at2(0, 1), 0.0);
+    }
+}

@@ -1,0 +1,179 @@
+//! GPTQ (Frantar et al., 2023): Hessian-aware weight quantization with
+//! error feedback, from scratch on the in-tree linalg.
+//!
+//! Orientation: weights are [in, out] (x @ W) and the Hessian is
+//! H = X^T X over the input dimension. Rows of W are quantized in order;
+//! the residual of row i is propagated to the not-yet-quantized rows
+//! through the upper Cholesky factor U of H^{-1} (U^T U = H^{-1}).
+
+use anyhow::{anyhow, Result};
+
+use crate::tensor::linalg::{cholesky, spd_inverse, transpose};
+use crate::tensor::Tensor;
+
+use super::rtn;
+
+/// Damped Hessian -> upper Cholesky factor of its inverse.
+fn inverse_cholesky(h: &Tensor, damp_frac: f64) -> Result<Tensor> {
+    let n = h.shape()[0];
+    let mut hd = h.clone();
+    let mean_diag: f64 =
+        (0..n).map(|i| hd.at2(i, i) as f64).sum::<f64>() / n as f64;
+    let damp = (damp_frac * mean_diag.max(1e-8)) as f32;
+    for i in 0..n {
+        let d = hd.at2(i, i);
+        // Dead inputs (never activated in calibration) get unit curvature.
+        let v = if d <= 0.0 { 1.0 } else { d + damp };
+        hd.set2(i, i, v);
+    }
+    let hinv = spd_inverse(&hd)
+        .map_err(|e| anyhow!("GPTQ Hessian inverse: {e}"))?;
+    let l = cholesky(&hinv).map_err(|e| anyhow!("GPTQ Cholesky: {e}"))?;
+    Ok(transpose(&l)) // upper factor U with U^T U = H^{-1}
+}
+
+/// GPTQ-quantize a [in, out] weight against Hessian [in, in].
+/// Scales are symmetric per output channel, fixed from the original W
+/// (same grid RTN uses, so improvements are purely from error feedback).
+pub fn gptq_quantize(w: &Tensor, h: &Tensor, bits: u32) -> Result<Tensor> {
+    let Some(lv) = rtn::levels(bits) else {
+        return Ok(w.clone());
+    };
+    let (rows, cols) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(h.shape(), &[rows, rows], "hessian shape");
+
+    let u = inverse_cholesky(h, 0.01)?;
+
+    // Per-output-channel scales from the original weights.
+    let mut scales = vec![0.0f32; cols];
+    for i in 0..rows {
+        for (j, s) in scales.iter_mut().enumerate() {
+            *s = s.max(w.at2(i, j).abs());
+        }
+    }
+    for s in scales.iter_mut() {
+        *s /= lv;
+    }
+
+    let mut work = w.clone();
+    let mut out = Tensor::zeros(&[rows, cols]);
+    for i in 0..rows {
+        let uii = u.at2(i, i).max(1e-12);
+        // Quantize row i; compute scaled residual.
+        let mut err = vec![0.0f32; cols];
+        for j in 0..cols {
+            let v = work.at2(i, j);
+            let s = scales[j];
+            let q = if s <= 0.0 {
+                0.0
+            } else {
+                (v / s).round().clamp(-lv - 1.0, lv) * s
+            };
+            out.set2(i, j, q);
+            err[j] = (v - q) / uii;
+        }
+        // Propagate to later rows: w[r,:] -= U[i,r] * err.
+        for r in i + 1..rows {
+            let uir = u.at2(i, r);
+            if uir == 0.0 {
+                continue;
+            }
+            let row = work.row_mut(r);
+            for (j, e) in err.iter().enumerate() {
+                row[j] -= uir * e;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Hessian-weighted reconstruction error tr((W-Q)^T H (W-Q)) — the
+/// objective GPTQ minimizes greedily; used to verify GPTQ <= RTN.
+pub fn hessian_error(w: &Tensor, q: &Tensor, h: &Tensor) -> f64 {
+    let diff = w.sub(q);
+    let hd = crate::tensor::linalg::matmul(h, &diff);
+    let mut tr = 0.0f64;
+    for (a, b) in diff.data().iter().zip(hd.data()) {
+        tr += (*a as f64) * (*b as f64);
+    }
+    tr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::linalg::matmul;
+    use crate::util::rng::Pcg;
+
+    fn randn(shape: &[usize], seed: u64, std: f32) -> Tensor {
+        let mut rng = Pcg::new(seed, 6);
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(t.data_mut(), std);
+        t
+    }
+
+    fn random_hessian(n: usize, samples: usize, seed: u64) -> Tensor {
+        let x = randn(&[samples, n], seed, 1.0);
+        matmul(&transpose(&x), &x)
+    }
+
+    #[test]
+    fn identity_hessian_reduces_to_rtn() {
+        let w = randn(&[16, 8], 1, 1.0);
+        let h = Tensor::eye(16);
+        let q = gptq_quantize(&w, &h, 4).unwrap();
+        let r = rtn::quantize_per_channel(&w, 4);
+        crate::util::prop::all_close(q.data(), r.data(), 1e-6).unwrap();
+    }
+
+    #[test]
+    fn gptq_beats_rtn_in_hessian_norm() {
+        for seed in 0..5 {
+            let w = randn(&[24, 12], 100 + seed, 1.0);
+            let h = random_hessian(24, 64, 200 + seed);
+            let q = gptq_quantize(&w, &h, 4).unwrap();
+            let r = rtn::quantize_per_channel(&w, 4);
+            let eg = hessian_error(&w, &q, &h);
+            let er = hessian_error(&w, &r, &h);
+            assert!(eg <= er * 1.001,
+                    "seed {seed}: gptq {eg} > rtn {er}");
+        }
+    }
+
+    #[test]
+    fn sixteen_bit_identity() {
+        let w = randn(&[8, 4], 2, 1.0);
+        let h = random_hessian(8, 32, 3);
+        let q = gptq_quantize(&w, &h, 16).unwrap();
+        assert_eq!(q, w);
+    }
+
+    #[test]
+    fn handles_rank_deficient_hessian() {
+        // Fewer calibration samples than dims -> singular H; damping must
+        // keep the algorithm well-posed.
+        let w = randn(&[32, 8], 4, 1.0);
+        let h = random_hessian(32, 4, 5);
+        let q = gptq_quantize(&w, &h, 4).unwrap();
+        assert!(q.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn quantized_values_on_grid() {
+        let w = randn(&[16, 4], 6, 2.0);
+        let h = random_hessian(16, 64, 7);
+        let q = gptq_quantize(&w, &h, 4).unwrap();
+        // Each column's values live on a 16-point symmetric grid.
+        for j in 0..4 {
+            let absmax = (0..16).map(|i| w.at2(i, j).abs())
+                .fold(0.0f32, f32::max);
+            let s = absmax / 7.0;
+            for i in 0..16 {
+                let ratio = q.at2(i, j) / s;
+                assert!((ratio - ratio.round()).abs() < 1e-3,
+                        "off-grid value {}", q.at2(i, j));
+                assert!(ratio.round().abs() <= 8.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! Post-training quantization library (Tables 2-4, Figures 1 & 4).
+//!
+//! Pipeline (`prepare`): absorb EmbProj -> (optional) fold norm scales +
+//! residual rotation (QuaRot-lite / SpinQuant-lite) -> (optional) FFN-Had
+//! weight pre-rotation -> weight quantization (RTN per-channel or GPTQ).
+//! Activation / KV-cache quantization happens *inside* the evalq/logitsq
+//! executables at runtime (bit-widths are inputs), so one artifact serves
+//! every configuration.
+
+pub mod absorb;
+pub mod calib;
+pub mod gptq;
+pub mod rotate;
+pub mod rtn;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::Engine;
+use crate::tensor::linalg;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg;
+
+pub use rotate::Rotation;
+
+/// Weight-quantization algorithm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightMethod {
+    Rtn,
+    Gptq,
+}
+
+/// A full PTQ recipe (one row of Table 4 / one cell of Table 2).
+#[derive(Clone, Copy, Debug)]
+pub struct PtqConfig {
+    pub w_bits: u32,
+    pub method: WeightMethod,
+    pub rotation: Rotation,
+    /// Online Hadamard on the FFN hidden state ("FFN Had"): pre-rotates
+    /// w_down here and sets had_flag=1 for the executables.
+    pub ffn_had: bool,
+    pub seed: u64,
+    /// Calibration batches for GPTQ.
+    pub calib_batches: usize,
+}
+
+impl PtqConfig {
+    pub fn rtn(w_bits: u32) -> PtqConfig {
+        PtqConfig { w_bits, method: WeightMethod::Rtn,
+                    rotation: Rotation::None, ffn_had: false, seed: 0,
+                    calib_batches: 2 }
+    }
+
+    pub fn label(&self) -> String {
+        let mut parts = vec![match self.method {
+            WeightMethod::Rtn => "RTN".to_string(),
+            WeightMethod::Gptq => "GPTQ".to_string(),
+        }];
+        match self.rotation {
+            Rotation::None => {}
+            Rotation::Random => parts.push("QuaRot-lite".into()),
+            Rotation::Learned => parts.push("SpinQuant-lite".into()),
+        }
+        if self.ffn_had {
+            parts.push("FFN-Had".into());
+        }
+        format!("{} (W{})", parts.join("+"), self.w_bits)
+    }
+}
+
+/// A weight-quantized model ready for the evalq/logitsq executables.
+pub struct QuantizedModel {
+    /// Architecture whose executables must be used (embproj arches are
+    /// absorbed into their plain counterparts).
+    pub arch: String,
+    pub params: Vec<Tensor>,
+    /// had_flag input value (1.0 when ffn_had).
+    pub had_flag: f32,
+}
+
+/// Apply the PTQ recipe to a checkpoint.
+pub fn prepare(engine: &Engine, arch: &str, params: &[Tensor],
+               cfg: &PtqConfig) -> Result<QuantizedModel> {
+    let m = engine.manifest();
+
+    // 1. Absorb EmbProj into the neighboring embeddings (Section 3.3).
+    let (arch, mut params) = if let Some(plain) = absorb::plain_arch(arch) {
+        let specs = m.params(arch)?;
+        (plain.clone(), absorb::absorb_embproj(specs, params)?)
+    } else {
+        (arch.to_string(), params.to_vec())
+    };
+    let specs = m.params(&arch)?.to_vec();
+
+    // 2. Residual rotation (rotation-invariant thanks to folded scales /
+    //    SSNorm's scalar gamma).
+    match cfg.rotation {
+        Rotation::None => {}
+        Rotation::Random => {
+            rotate::fold_norm_scales(&specs, &mut params);
+            let mut rng = Pcg::new(cfg.seed ^ 0x51A407, 31);
+            let q = linalg::random_orthogonal(m.model.d_model, &mut rng);
+            rotate::apply_residual_rotation(&specs, &mut params, &q)?;
+        }
+        Rotation::Learned => {
+            rotate::fold_norm_scales(&specs, &mut params);
+            let q = rotate::learn_rotation(&specs, &params,
+                                           m.model.d_model, cfg.w_bits,
+                                           cfg.seed);
+            rotate::apply_residual_rotation(&specs, &mut params, &q)?;
+        }
+    }
+
+    // 3. FFN-Had pre-rotation (pairs with the executables' online H).
+    if cfg.ffn_had {
+        rotate::prerotate_w_down_hadamard(&specs, &mut params);
+    }
+
+    // 4. Weight quantization of every 2D parameter.
+    let hessians = if cfg.method == WeightMethod::Gptq && cfg.w_bits < 16 {
+        Some(calib::collect_hessians(engine, &arch, &params,
+                                     cfg.calib_batches)
+             .context("GPTQ calibration")?)
+    } else {
+        None
+    };
+    for (s, p) in specs.iter().zip(params.iter_mut()) {
+        if p.shape().len() != 2 || s.kind == "norm" {
+            continue;
+        }
+        *p = match hessians.as_ref().and_then(|h| h.get(&s.name)) {
+            Some(h) => gptq::gptq_quantize(p, h, cfg.w_bits)
+                .with_context(|| format!("GPTQ on {}", s.name))?,
+            None => rtn::quantize_per_channel(p, cfg.w_bits),
+        };
+    }
+
+    Ok(QuantizedModel {
+        arch,
+        params,
+        had_flag: if cfg.ffn_had { 1.0 } else { 0.0 },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels() {
+        assert_eq!(PtqConfig::rtn(4).label(), "RTN (W4)");
+        let c = PtqConfig { w_bits: 4, method: WeightMethod::Gptq,
+                            rotation: Rotation::Learned, ffn_had: true,
+                            seed: 0, calib_batches: 1 };
+        assert_eq!(c.label(), "GPTQ+SpinQuant-lite+FFN-Had (W4)");
+    }
+}

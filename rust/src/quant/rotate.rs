@@ -1,0 +1,315 @@
+//! Residual-stream rotations: QuaRot-lite (random orthogonal / Hadamard)
+//! and SpinQuant-lite (a learned rotation), plus the "FFN Had" weight
+//! pre-rotation that pairs with the evalq executables' online Hadamard.
+//!
+//! Invariance argument (DESIGN.md §5, Table 4): with the norm's
+//! channel-wise scale folded away, RMSNorm (and SSNorm natively — a
+//! single scalar gamma commutes with rotations, one more payoff of the
+//! paper's §3.2) satisfies norm(Q^T x) = Q^T norm(x). Rotating
+//!
+//!   embed' = embed Q,   {wq,wk,wv,w_gate,w_up}' = Q^T W,
+//!   {wo,w_down}' = W Q,  unembed' = Q^T unembed
+//!
+//! leaves every logit unchanged in fp32 while redistributing outlier
+//! channels before quantization.
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::manifest::ParamSpec;
+use crate::tensor::linalg::{self, matmul, transpose};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg;
+
+use super::rtn;
+
+/// Fold channel-wise norm scales into the downstream weight matrices and
+/// set the norm params to 1 (RMSNorm arches; SSNorm needs no folding —
+/// its single scalar commutes with any rotation, so it is left alone).
+///
+/// rmsnorm(x; s) @ W == rmsnorm(x; 1) @ (diag(s) W).
+pub fn fold_norm_scales(specs: &[ParamSpec], params: &mut [Tensor]) {
+    let idx = |name: &str| specs.iter().position(|s| s.name == name);
+    let layer_count = specs
+        .iter()
+        .filter(|s| s.name.ends_with(".attn_norm"))
+        .count();
+
+    let mut fold = |norm_name: String, targets: Vec<String>| {
+        let Some(ni) = idx(&norm_name) else { return };
+        if params[ni].len() <= 1 {
+            return; // SSNorm scalar: rotation-equivariant as-is.
+        }
+        let scale = params[ni].clone();
+        for t in targets {
+            let Some(wi) = idx(&t) else { continue };
+            let w = &mut params[wi];
+            let cols = w.shape()[1];
+            for (i, &s) in scale.data().iter().enumerate() {
+                for j in 0..cols {
+                    let v = w.at2(i, j) * s;
+                    w.set2(i, j, v);
+                }
+            }
+        }
+        params[ni] = Tensor::full(&[scale.len()], 1.0);
+    };
+
+    for l in 0..layer_count {
+        fold(format!("layers.{l}.attn_norm"),
+             vec![format!("layers.{l}.wq"), format!("layers.{l}.wk"),
+                  format!("layers.{l}.wv")]);
+        fold(format!("layers.{l}.ffn_norm"),
+             vec![format!("layers.{l}.w_gate"), format!("layers.{l}.w_up")]);
+    }
+    fold("final_norm".to_string(), vec!["unembed".to_string()]);
+}
+
+/// Apply the residual-stream rotation Q (d_model x d_model, orthogonal).
+/// Caller must fold norm scales first (RMSNorm arches) for exactness.
+pub fn apply_residual_rotation(specs: &[ParamSpec], params: &mut [Tensor],
+                               q: &Tensor) -> Result<()> {
+    let qt = transpose(q);
+    for (s, p) in specs.iter().zip(params.iter_mut()) {
+        let short = s.name.rsplit('.').next().unwrap_or(&s.name);
+        match short {
+            // Consumers of the residual stream: W' = Q^T W.
+            "wq" | "wk" | "wv" | "w_gate" | "w_up" | "unembed" => {
+                *p = matmul(&qt, p);
+            }
+            // Producers into the residual stream: W' = W Q.
+            "wo" | "w_down" => {
+                *p = matmul(p, q);
+            }
+            // The embedding emits residual vectors: rows rotate.
+            "embed" => {
+                *p = matmul(p, q);
+            }
+            "embproj_in" | "embproj_out" => {
+                return Err(anyhow!(
+                    "rotate after absorbing embproj (quant::absorb)"));
+            }
+            _ => {} // norm scalars / folded scales
+        }
+    }
+    Ok(())
+}
+
+/// Pre-rotate w_down for the online "FFN Had" path: the executable
+/// applies H to the FFN hidden state when had_flag=1, so computational
+/// invariance needs w_down' = H w_down (H symmetric involution).
+pub fn prerotate_w_down_hadamard(specs: &[ParamSpec],
+                                 params: &mut [Tensor]) {
+    for (s, p) in specs.iter().zip(params.iter_mut()) {
+        if s.name.ends_with("w_down") {
+            // H W: rows mix => apply the blocked FWHT to columns, i.e.
+            // transpose, row-transform, transpose back.
+            let t = transpose(p);
+            let rotated = linalg::hadamard_rows(&t);
+            *p = transpose(&rotated);
+        }
+    }
+}
+
+/// Rotation selection for Table 4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rotation {
+    None,
+    /// Random orthogonal Q (QuaRot-lite).
+    Random,
+    /// Learned Q (SpinQuant-lite): best-of-K random starts refined by
+    /// Givens sweeps against the weight quantization MSE objective.
+    Learned,
+}
+
+/// Objective for SpinQuant-lite: total per-channel 4-bit quantization MSE
+/// of the residual-facing matrices after rotation (a weight-space proxy
+/// for SpinQuant's end-to-end objective; DESIGN.md §2 documents the
+/// substitution).
+pub fn rotation_objective(specs: &[ParamSpec], params: &[Tensor],
+                          q: &Tensor, bits: u32) -> f64 {
+    let mut trial: Vec<Tensor> = params.to_vec();
+    let mut specs_v = specs.to_vec();
+    fold_norm_scales(&specs_v, &mut trial);
+    apply_residual_rotation(&mut specs_v.clone(), &mut trial, q).unwrap();
+    let _ = &mut specs_v;
+    let mut total = 0.0;
+    for (s, w) in specs.iter().zip(&trial) {
+        if w.shape().len() == 2 && s.kind != "norm" {
+            total += rtn::quant_mse(w, bits) * w.len() as f64;
+        }
+    }
+    total
+}
+
+/// Learn a rotation by best-of-K random starts + greedy Givens refinement.
+pub fn learn_rotation(specs: &[ParamSpec], params: &[Tensor], d: usize,
+                      bits: u32, seed: u64) -> Tensor {
+    let mut rng = Pcg::new(seed, 77);
+    // Candidates: identity-free random orthogonals.
+    let mut best_q = linalg::random_orthogonal(d, &mut rng);
+    let mut best = rotation_objective(specs, params, &best_q, bits);
+    for _ in 0..3 {
+        let q = linalg::random_orthogonal(d, &mut rng);
+        let obj = rotation_objective(specs, params, &q, bits);
+        if obj < best {
+            best = obj;
+            best_q = q;
+        }
+    }
+    // Givens refinement: try small-angle rotations in random planes.
+    let angles = [0.15f32, -0.15, 0.05, -0.05];
+    for _ in 0..24 {
+        let i = rng.below_usize(d);
+        let mut j = rng.below_usize(d);
+        if i == j {
+            j = (j + 1) % d;
+        }
+        let mut improved = false;
+        for &a in &angles {
+            let mut q = best_q.clone();
+            givens_right(&mut q, i, j, a);
+            let obj = rotation_objective(specs, params, &q, bits);
+            if obj < best * 0.9999 {
+                best = obj;
+                best_q = q;
+                improved = true;
+                break;
+            }
+        }
+        let _ = improved;
+    }
+    best_q
+}
+
+/// Right-multiply q by a Givens rotation in plane (i, j).
+fn givens_right(q: &mut Tensor, i: usize, j: usize, angle: f32) {
+    let (c, s) = (angle.cos(), angle.sin());
+    let rows = q.shape()[0];
+    for r in 0..rows {
+        let a = q.at2(r, i);
+        let b = q.at2(r, j);
+        q.set2(r, i, c * a - s * b);
+        q.set2(r, j, s * a + c * b);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, shape: &[usize], kind: &str) -> ParamSpec {
+        ParamSpec { name: name.into(), shape: shape.to_vec(),
+                    init: "normal".into(), kind: kind.into() }
+    }
+
+    fn toy_model(d: usize, seed: u64) -> (Vec<ParamSpec>, Vec<Tensor>) {
+        let mut rng = Pcg::new(seed, 5);
+        let mut randn = |shape: &[usize]| {
+            let mut t = Tensor::zeros(shape);
+            rng.fill_normal(t.data_mut(), 1.0);
+            t
+        };
+        let specs = vec![
+            spec("embed", &[12, d], "embed"),
+            spec("layers.0.attn_norm", &[d], "norm"),
+            spec("layers.0.wq", &[d, d], "matrix"),
+            spec("layers.0.wk", &[d, d], "matrix"),
+            spec("layers.0.wv", &[d, d], "matrix"),
+            spec("layers.0.wo", &[d, d], "matrix"),
+            spec("layers.0.ffn_norm", &[d], "norm"),
+            spec("layers.0.w_gate", &[d, 2 * d], "matrix"),
+            spec("layers.0.w_up", &[d, 2 * d], "matrix"),
+            spec("layers.0.w_down", &[2 * d, d], "matrix"),
+            spec("final_norm", &[d], "norm"),
+            spec("unembed", &[d, 12], "unembed"),
+        ];
+        let params: Vec<Tensor> =
+            specs.iter().map(|s| randn(&s.shape)).collect();
+        (specs, params)
+    }
+
+    #[test]
+    fn fold_makes_norms_unit() {
+        let (specs, mut params) = toy_model(8, 1);
+        let wq_before = params[2].clone();
+        let scale_before = params[1].clone();
+        fold_norm_scales(&specs, &mut params);
+        for v in params[1].data() {
+            assert_eq!(*v, 1.0);
+        }
+        // wq row i scaled by s_i
+        for i in 0..8 {
+            for j in 0..8 {
+                let want = wq_before.at2(i, j) * scale_before.data()[i];
+                assert!((params[2].at2(i, j) - want).abs() < 1e-6);
+            }
+        }
+        // wo untouched by folding
+    }
+
+    #[test]
+    fn rotation_preserves_functional_composition() {
+        // Check a single linear algebra identity on the rotated weights:
+        // (Q^T x) @ (Q^T W) is NOT invariant, but x @ W computed through
+        // the rotated pipeline embed Q -> Q^T wq is:
+        //   (e Q)(Q^T wq) = e wq.
+        let (specs, mut params) = toy_model(8, 2);
+        let e0 = params[0].clone();
+        let wq0 = params[2].clone();
+        let wo0 = params[5].clone();
+        let mut rng = Pcg::new(3, 0);
+        let q = linalg::random_orthogonal(8, &mut rng);
+        apply_residual_rotation(&specs, &mut params, &q).unwrap();
+        let recomposed = matmul(&params[0], &params[2]);
+        let want = matmul(&e0, &wq0);
+        crate::util::prop::all_close(recomposed.data(), want.data(), 1e-3)
+            .unwrap();
+        // Producer side: wo' = wo Q, so wo' Q^T == wo.
+        let back = matmul(&params[5], &transpose(&q));
+        crate::util::prop::all_close(back.data(), wo0.data(), 1e-3).unwrap();
+    }
+
+    #[test]
+    fn hadamard_prerotation_involution() {
+        let (specs, mut params) = toy_model(8, 4);
+        let w0 = params[9].clone();
+        prerotate_w_down_hadamard(&specs, &mut params);
+        prerotate_w_down_hadamard(&specs, &mut params);
+        crate::util::prop::all_close(params[9].data(), w0.data(), 1e-4)
+            .unwrap();
+    }
+
+    #[test]
+    fn rotation_flattens_outlier_channel_mse() {
+        // Plant an outlier channel; a random rotation must reduce the
+        // 4-bit quantization MSE (the QuaRot mechanism).
+        let (specs, mut params) = toy_model(16, 5);
+        // Outlier channel in wq's input dim.
+        for i in 0..16 {
+            let v = params[2].at2(i, 3) * 50.0;
+            params[2].set2(i, 3, v);
+        }
+        let eye = Tensor::eye(16);
+        let base = rotation_objective(&specs, &params, &eye, 4);
+        let mut rng = Pcg::new(6, 0);
+        let q = linalg::random_orthogonal(16, &mut rng);
+        let rotated = rotation_objective(&specs, &params, &q, 4);
+        assert!(rotated < base, "rotated {rotated} >= base {base}");
+    }
+
+    #[test]
+    fn learned_rotation_not_worse_than_random() {
+        let (specs, params) = toy_model(8, 7);
+        let learned = learn_rotation(&specs, &params, 8, 4, 11);
+        let obj_learned = rotation_objective(&specs, &params, &learned, 4);
+        let mut rng = Pcg::new(12, 0);
+        let random = linalg::random_orthogonal(8, &mut rng);
+        let obj_random = rotation_objective(&specs, &params, &random, 4);
+        assert!(obj_learned <= obj_random * 1.05,
+                "learned {obj_learned} vs random {obj_random}");
+        // and actually orthogonal
+        let g = matmul(&transpose(&learned), &learned);
+        crate::util::prop::all_close(g.data(), Tensor::eye(8).data(), 1e-3)
+            .unwrap();
+    }
+}

@@ -1,0 +1,161 @@
+//! Round-to-nearest weight quantization (the paper's RTN baseline).
+//!
+//! Weights are stored [in, out] (used as x @ W), so the quantization
+//! group is the *output channel* = column: one symmetric scale per
+//! column, scale = absmax / (2^(b-1) - 1).
+
+use crate::tensor::Tensor;
+
+/// levels = 2^(bits-1) - 1 (7 for 4-bit). bits >= 16 means "off".
+pub fn levels(bits: u32) -> Option<f32> {
+    if bits >= 16 {
+        None
+    } else {
+        Some(((1u32 << (bits - 1)) - 1) as f32)
+    }
+}
+
+/// Quantize-dequantize one value against a scale.
+#[inline]
+fn rtn(v: f32, scale: f32, lv: f32) -> f32 {
+    if scale <= 0.0 {
+        return 0.0;
+    }
+    (v / scale).round().clamp(-lv - 1.0, lv) * scale
+}
+
+/// Per-output-channel (column) symmetric RTN for a [in, out] matrix.
+pub fn quantize_per_channel(w: &Tensor, bits: u32) -> Tensor {
+    let Some(lv) = levels(bits) else {
+        return w.clone();
+    };
+    let (rows, cols) = (w.shape()[0], w.shape()[1]);
+    // Column absmax.
+    let mut absmax = vec![0.0f32; cols];
+    for i in 0..rows {
+        for (j, m) in absmax.iter_mut().enumerate() {
+            *m = m.max(w.at2(i, j).abs());
+        }
+    }
+    let scales: Vec<f32> = absmax.iter().map(|m| m / lv).collect();
+    let mut out = w.clone();
+    for i in 0..rows {
+        for j in 0..cols {
+            let v = rtn(w.at2(i, j), scales[j], lv);
+            out.set2(i, j, v);
+        }
+    }
+    out
+}
+
+/// Per-tensor symmetric RTN (any shape).
+pub fn quantize_per_tensor(w: &Tensor, bits: u32) -> Tensor {
+    let Some(lv) = levels(bits) else {
+        return w.clone();
+    };
+    let scale = w.abs_max() / lv;
+    let mut out = w.clone();
+    for v in out.data_mut() {
+        *v = rtn(*v, scale, lv);
+    }
+    out
+}
+
+/// Mean squared quantization error (diagnostics + SpinQuant objective).
+pub fn quant_mse(w: &Tensor, bits: u32) -> f64 {
+    let q = quantize_per_channel(w, bits);
+    let mut s = 0.0f64;
+    for (a, b) in w.data().iter().zip(q.data()) {
+        let d = (a - b) as f64;
+        s += d * d;
+    }
+    s / w.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn randn(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Pcg::new(seed, 4);
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(t.data_mut(), 1.0);
+        t
+    }
+
+    #[test]
+    fn levels_table() {
+        assert_eq!(levels(4), Some(7.0));
+        assert_eq!(levels(8), Some(127.0));
+        assert_eq!(levels(2), Some(1.0));
+        assert_eq!(levels(16), None);
+    }
+
+    #[test]
+    fn sixteen_bit_is_identity() {
+        let w = randn(&[8, 8], 1);
+        assert_eq!(quantize_per_channel(&w, 16), w);
+    }
+
+    #[test]
+    fn error_bounded_by_half_scale() {
+        let w = randn(&[32, 16], 2);
+        let q = quantize_per_channel(&w, 4);
+        for j in 0..16 {
+            let absmax = (0..32).map(|i| w.at2(i, j).abs())
+                .fold(0.0f32, f32::max);
+            let scale = absmax / 7.0;
+            for i in 0..32 {
+                assert!((w.at2(i, j) - q.at2(i, j)).abs()
+                        <= scale / 2.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn grid_size_at_4bit() {
+        let w = randn(&[64, 4], 3);
+        let q = quantize_per_channel(&w, 4);
+        for j in 0..4 {
+            let mut vals: Vec<i64> = (0..64)
+                .map(|i| {
+                    let absmax = (0..64).map(|r| w.at2(r, j).abs())
+                        .fold(0.0f32, f32::max);
+                    (q.at2(i, j) / (absmax / 7.0)).round() as i64
+                })
+                .collect();
+            vals.sort_unstable();
+            vals.dedup();
+            assert!(vals.len() <= 16, "{}", vals.len());
+        }
+    }
+
+    #[test]
+    fn outlier_column_wrecks_only_itself() {
+        // Per-channel scales isolate an outlier column — unlike per-tensor,
+        // where it inflates everyone's scale (the paper's Eq. 1 problem).
+        let mut w = randn(&[32, 8], 4);
+        for i in 0..32 {
+            let v = w.at2(i, 3) * 100.0;
+            w.set2(i, 3, v);
+        }
+        let q_pc = quantize_per_channel(&w, 4);
+        let q_pt = quantize_per_tensor(&w, 4);
+        let mse_col = |q: &Tensor, j: usize| -> f64 {
+            (0..32)
+                .map(|i| ((w.at2(i, j) - q.at2(i, j)) as f64).powi(2))
+                .sum::<f64>()
+        };
+        // Non-outlier column 0: per-channel much better than per-tensor.
+        assert!(mse_col(&q_pc, 0) < mse_col(&q_pt, 0) / 10.0);
+    }
+
+    #[test]
+    fn mse_decreases_with_bits() {
+        let w = randn(&[64, 32], 5);
+        let e4 = quant_mse(&w, 4);
+        let e8 = quant_mse(&w, 8);
+        assert!(e8 < e4 / 10.0);
+    }
+}

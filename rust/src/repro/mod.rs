@@ -1,0 +1,446 @@
+//! Paper-row regeneration: one function per table/figure (DESIGN.md §5
+//! experiment index). Used by the `osp repro` CLI, the examples, and the
+//! bench binaries (quick variants).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::bench::{fmt_pct, fmt_ppl, Table};
+use crate::checkpoint;
+use crate::config::ABLATION_GRID;
+use crate::data::{Split, TokenStream};
+use crate::eval::{perplexity, sinks, tasks, BitConfig};
+use crate::metrics::read_telemetry;
+use crate::quant::{self, PtqConfig, Rotation, WeightMethod};
+use crate::runtime::{Engine, HostValue};
+use crate::tensor::stats::Histogram;
+use crate::tensor::Tensor;
+
+/// Evaluation effort knob (benches use Quick).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Effort {
+    pub ppl_batches: usize,
+    pub n_per_task: usize,
+}
+
+impl Effort {
+    pub const QUICK: Effort = Effort { ppl_batches: 1, n_per_task: 8 };
+    pub const FULL: Effort = Effort { ppl_batches: 4, n_per_task: 24 };
+}
+
+/// A trained run on disk (tag -> final checkpoint).
+pub struct Run {
+    pub tag: String,
+    pub arch: String,
+    pub optimizer: String,
+    pub dir: PathBuf,
+    pub params: Vec<Tensor>,
+}
+
+/// Load the latest checkpoint of each ablation tag present in runs_dir.
+pub fn load_runs(runs_dir: &Path, tags: &[&str]) -> Result<Vec<Run>> {
+    let mut out = Vec::new();
+    for &tag in tags {
+        let dir = runs_dir.join(tag);
+        let steps = checkpoint::list_steps(&dir);
+        let Some((_step, ckpt_dir)) = steps.last() else {
+            continue;
+        };
+        let ck = checkpoint::load(ckpt_dir)
+            .with_context(|| format!("loading {ckpt_dir:?}"))?;
+        out.push(Run { tag: tag.to_string(), arch: ck.arch.clone(),
+                       optimizer: ck.optimizer.clone(), dir,
+                       params: ck.params });
+    }
+    if out.is_empty() {
+        return Err(anyhow!(
+            "no trained runs under {runs_dir:?}; run \
+             `cargo run --release --example train_osp -- --ablation` first"));
+    }
+    Ok(out)
+}
+
+pub fn ablation_tags() -> Vec<&'static str> {
+    ABLATION_GRID.iter().map(|&(tag, _, _)| tag).collect()
+}
+
+/// Evaluate one run under one bit configuration (weights quantized here;
+/// activations/KV at runtime). Returns (avg_score, ppl, kurt_max).
+pub fn eval_bitconfig(engine: &Engine, run: &Run, bits: BitConfig,
+                      ffn_had: bool, effort: Effort)
+                      -> Result<(f64, f64, f64)> {
+    let cfg = PtqConfig {
+        w_bits: bits.w,
+        method: WeightMethod::Rtn,
+        rotation: Rotation::None,
+        ffn_had,
+        seed: 7,
+        calib_batches: 1,
+    };
+    let qm = quant::prepare(engine, &run.arch, &run.params, &cfg)?;
+    let ppl = perplexity(engine, &qm.arch, &qm.params, bits.a, bits.kv,
+                         qm.had_flag, effort.ppl_batches)?;
+    let (_rows, avg) = tasks::run_suite(engine, &qm.arch, &qm.params,
+                                        effort.n_per_task, bits.a, bits.kv,
+                                        qm.had_flag, 99)?;
+    Ok((avg, ppl.ppl, ppl.kurt_max))
+}
+
+/// Table 2: the ablation grid across bit configurations, RTN and +Had.
+pub fn table2(engine: &Engine, runs_dir: &Path, effort: Effort)
+              -> Result<Table> {
+    table2_tags(engine, runs_dir, effort, &ablation_tags())
+}
+
+/// Table 2 restricted to a subset of configs (the bench's quick variant).
+pub fn table2_tags(engine: &Engine, runs_dir: &Path, effort: Effort,
+                   tags: &[&str]) -> Result<Table> {
+    let runs = load_runs(runs_dir, tags)?;
+    let cols = BitConfig::table2_columns();
+    let mut headers = vec!["Config".to_string(), "Had.".to_string(),
+                           "Ex.Kurt".to_string()];
+    for c in &cols {
+        headers.push(format!("{} Avg", c.label()));
+        headers.push(format!("{} PPL", c.label()));
+    }
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        "Table 2 — ablation x quantization (RTN / +FFN-Had)", &hdr_refs);
+    for run in &runs {
+        let fp = perplexity(engine, &absorbed_arch(engine, run)?.0,
+                            &absorbed_arch(engine, run)?.1, 16, 16, 0.0,
+                            effort.ppl_batches)?;
+        for &had in &[false, true] {
+            let mut row = vec![run.tag.clone(),
+                               if had { "yes" } else { "no" }.to_string(),
+                               format!("{:.2}", fp.kurt_max)];
+            for c in &cols {
+                let (avg, ppl, _k) =
+                    eval_bitconfig(engine, run, *c, had, effort)?;
+                row.push(fmt_pct(avg));
+                row.push(fmt_ppl(ppl));
+            }
+            table.row(row);
+        }
+    }
+    Ok(table)
+}
+
+fn absorbed_arch(engine: &Engine, run: &Run) -> Result<(String, Vec<Tensor>)> {
+    // FP evaluation of embproj arches can use the native artifacts.
+    Ok((run.arch.clone(), run.params.clone()))
+        .map(|(a, p)| {
+            let _ = engine;
+            (a, p)
+        })
+}
+
+/// Table 3: per-task scores at 4-4-4 (our from-scratch rows; ablation
+/// configs stand in for the open-source comparators — DESIGN.md §2).
+pub fn table3(engine: &Engine, runs_dir: &Path, effort: Effort)
+              -> Result<Table> {
+    let runs = load_runs(runs_dir, &ablation_tags())?;
+    let mut headers = vec!["Model".to_string()];
+    headers.extend(tasks::TASK_NAMES.iter().map(|s| s.to_string()));
+    headers.push("Avg".to_string());
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new("Table 3 — 4-bit (4-4-4) benchmark scores",
+                               &hdr_refs);
+    for run in &runs {
+        let cfg = PtqConfig::rtn(4);
+        let qm = quant::prepare(engine, &run.arch, &run.params, &cfg)?;
+        let (rows, avg) = tasks::run_suite(engine, &qm.arch, &qm.params,
+                                           effort.n_per_task, 4, 4,
+                                           qm.had_flag, 99)?;
+        let mut cells = vec![run.tag.clone()];
+        cells.extend(rows.iter().map(|(_t, a)| fmt_pct(*a)));
+        cells.push(fmt_pct(avg));
+        table.row(cells);
+    }
+    Ok(table)
+}
+
+/// Table 4: PTQ method composition at W4-A4-KV4, Adam vs OSP.
+pub fn table4(engine: &Engine, runs_dir: &Path, effort: Effort)
+              -> Result<Table> {
+    let runs = load_runs(runs_dir, &["adam", "osp"])?;
+    let recipes: Vec<(&str, PtqConfig)> = vec![
+        ("RTN", PtqConfig::rtn(4)),
+        ("+ FFN Had", PtqConfig { ffn_had: true, ..PtqConfig::rtn(4) }),
+        ("+ GPTQ", PtqConfig { method: WeightMethod::Gptq,
+                               ..PtqConfig::rtn(4) }),
+        ("+ QuaRot-lite", PtqConfig { method: WeightMethod::Gptq,
+                                      rotation: Rotation::Random,
+                                      ffn_had: true, ..PtqConfig::rtn(4) }),
+        ("+ SpinQuant-lite", PtqConfig { method: WeightMethod::Gptq,
+                                         rotation: Rotation::Learned,
+                                         ffn_had: true,
+                                         ..PtqConfig::rtn(4) }),
+    ];
+    let mut headers = vec!["Quantization".to_string()];
+    for r in &runs {
+        headers.push(r.tag.clone());
+    }
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        "Table 4 — PTQ composition, W4-A4-KV4 perplexity", &hdr_refs);
+    for (label, cfg) in recipes {
+        let mut row = vec![label.to_string()];
+        for run in &runs {
+            let qm = quant::prepare(engine, &run.arch, &run.params, &cfg)?;
+            let ppl = perplexity(engine, &qm.arch, &qm.params, 4, 4,
+                                 qm.had_flag, effort.ppl_batches)?;
+            row.push(fmt_ppl(ppl.ppl));
+        }
+        table.row(row);
+    }
+    Ok(table)
+}
+
+/// Table 5: full-precision per-task scores.
+pub fn table5(engine: &Engine, runs_dir: &Path, effort: Effort)
+              -> Result<Table> {
+    let runs = load_runs(runs_dir, &ablation_tags())?;
+    let mut headers = vec!["Model".to_string()];
+    headers.extend(tasks::TASK_NAMES.iter().map(|s| s.to_string()));
+    headers.push("Avg".to_string());
+    headers.push("PPL".to_string());
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table =
+        Table::new("Table 5 — full-precision benchmark scores", &hdr_refs);
+    for run in &runs {
+        let (rows, avg) = tasks::run_suite(engine, &run.arch, &run.params,
+                                           effort.n_per_task, 16, 16, 0.0,
+                                           99)?;
+        let ppl = perplexity(engine, &run.arch, &run.params, 16, 16, 0.0,
+                             effort.ppl_batches)?;
+        let mut cells = vec![run.tag.clone()];
+        cells.extend(rows.iter().map(|(_t, a)| fmt_pct(*a)));
+        cells.push(fmt_pct(avg));
+        cells.push(fmt_ppl(ppl.ppl));
+        table.row(cells);
+    }
+    Ok(table)
+}
+
+/// Figure 1: fp16 vs 4-bit average score per saved checkpoint.
+pub fn fig1(engine: &Engine, runs_dir: &Path, effort: Effort)
+            -> Result<Table> {
+    let mut table = Table::new(
+        "Figure 1 — degradation under 4-bit (per checkpoint)",
+        &["run", "step", "fp16 avg", "4-4-4 avg", "delta"]);
+    for &tag in &ablation_tags() {
+        let dir = runs_dir.join(tag);
+        let steps = checkpoint::list_steps(&dir);
+        // Quick effort: only the final two checkpoints per run.
+        let skip = if effort.n_per_task <= Effort::QUICK.n_per_task {
+            steps.len().saturating_sub(2)
+        } else {
+            0
+        };
+        for (step, ckpt_dir) in steps.into_iter().skip(skip) {
+            let ck = checkpoint::load(&ckpt_dir)?;
+            let run = Run { tag: tag.into(), arch: ck.arch.clone(),
+                            optimizer: ck.optimizer.clone(),
+                            dir: dir.clone(), params: ck.params };
+            let (_r, fp_avg) = tasks::run_suite(
+                engine, &run.arch, &run.params, effort.n_per_task, 16, 16,
+                0.0, 99)?;
+            let (q_avg, _ppl, _k) = eval_bitconfig(
+                engine, &run, BitConfig::new(4, 4, 4), false, effort)?;
+            table.row(vec![tag.to_string(), step.to_string(),
+                           fmt_pct(fp_avg), fmt_pct(q_avg),
+                           format!("{:+.1}", 100.0 * (q_avg - fp_avg))]);
+        }
+    }
+    Ok(table)
+}
+
+/// Figure 2 / Figures 8-9: activation histograms at the probed layers.
+pub fn fig2(engine: &Engine, runs_dir: &Path, tags: &[&str])
+            -> Result<String> {
+    let runs = load_runs(runs_dir, tags)?;
+    let m = engine.manifest();
+    let mut out = String::from(
+        "\n## Figure 2 / 8-9 — activation histograms (log-scale sparklines)\n");
+    for run in &runs {
+        let probe = engine.load(&format!("probe_{}", run.arch))?;
+        let mut valid = TokenStream::new(m.model.vocab_size, 0xF16,
+                                         Split::Valid, 0, 1);
+        let b = valid.next_batch(m.batch_probe, m.model.seq_len, 0);
+        let mut inputs: Vec<HostValue> =
+            run.params.iter().cloned().map(HostValue::F32).collect();
+        inputs.push(HostValue::tokens(&[m.batch_probe, m.model.seq_len],
+                                      b.tokens));
+        let res = probe.run(&inputs)?;
+        let mhsa = res[1].as_f32()?;
+        let ffn = res[2].as_f32()?;
+        out.push_str(&format!("\n### {}\n", run.tag));
+        let stride = m.batch_probe * m.model.seq_len * m.model.d_model;
+        for (pi, &layer) in m.probe_layers.iter().enumerate() {
+            for (name, t) in [("MHSA-in", mhsa), ("FFN-in", ffn)] {
+                let data = &t.data()[pi * stride..(pi + 1) * stride];
+                let h = Histogram::auto(data, 64);
+                let absmax =
+                    data.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+                let kurt = crate::tensor::stats::excess_kurtosis(data);
+                out.push_str(&format!(
+                    "layer {layer:2} {name:8} absmax {absmax:8.2} \
+                     kurt {kurt:9.2} |{}|\n",
+                    h.sparkline()));
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Figure 3 / 7: loss + kurtosis curves from telemetry.
+pub fn fig3(runs_dir: &Path, tags: &[&str]) -> Result<String> {
+    let mut out = String::from(
+        "\n## Figure 3/7 — training dynamics (loss | max excess kurtosis)\n");
+    for &tag in tags {
+        let path = runs_dir.join(tag).join("telemetry.jsonl");
+        if !path.exists() {
+            continue;
+        }
+        let recs = read_telemetry(&path)?;
+        let mut loss = crate::metrics::Series::default();
+        let mut kurt = crate::metrics::Series::default();
+        for r in &recs {
+            if let Some(l) = r.fields.get("loss") {
+                loss.push(r.step, *l);
+            }
+            if let Some(k) = r.fields.get("kurt_max") {
+                kurt.push(r.step, *k);
+            }
+        }
+        out.push_str(&format!("\n### {tag}\n  step: "));
+        for (s, _) in loss.downsample(12) {
+            out.push_str(&format!("{s:>8}"));
+        }
+        out.push_str("\n  loss: ");
+        for (_, v) in loss.downsample(12) {
+            out.push_str(&format!("{v:>8.3}"));
+        }
+        out.push_str("\n  kurt: ");
+        for (_, v) in kurt.downsample(12) {
+            out.push_str(&format!("{v:>8.2}"));
+        }
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+/// Figure 4: perplexity across weight x activation bit-widths.
+pub fn fig4(engine: &Engine, runs_dir: &Path, tags: &[&str],
+            effort: Effort) -> Result<Table> {
+    let runs = load_runs(runs_dir, tags)?;
+    let w_bits = [16u32, 8, 6, 4, 3, 2];
+    let a_bits = [16u32, 8, 6, 4];
+    let mut headers = vec!["run".to_string(), "W bits".to_string()];
+    for a in a_bits {
+        headers.push(format!("A{a}"));
+    }
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(
+        "Figure 4 — PPL across weight/activation bit-widths (RTN)",
+        &hdr_refs);
+    for run in &runs {
+        for w in w_bits {
+            let cfg = PtqConfig::rtn(w);
+            let qm = quant::prepare(engine, &run.arch, &run.params, &cfg)?;
+            let mut row = vec![run.tag.clone(), w.to_string()];
+            for a in a_bits {
+                let ppl = perplexity(engine, &qm.arch, &qm.params, a, 16,
+                                     0.0, effort.ppl_batches)?;
+                row.push(fmt_ppl(ppl.ppl));
+            }
+            table.row(row);
+        }
+    }
+    Ok(table)
+}
+
+/// Figures 5 & 6 + §5.2: attention sinks and massive activations.
+pub fn fig56(engine: &Engine, runs_dir: &Path, tags: &[&str])
+             -> Result<String> {
+    let runs = load_runs(runs_dir, tags)?;
+    let m = engine.manifest();
+    let mut out = String::from(
+        "\n## Figures 5-6 — attention sinks without outliers\n");
+    for run in &runs {
+        let mut valid = TokenStream::new(m.model.vocab_size, 0x517Bu64,
+                                         Split::Valid, 0, 1);
+        let b = valid.next_batch(m.batch_probe, m.model.seq_len, 0);
+        let report = sinks::analyze(
+            engine, &run.arch, &run.params,
+            HostValue::tokens(&[m.batch_probe, m.model.seq_len], b.tokens))?;
+        out.push_str(&format!(
+            "\n### {}\n  massive(|x|>6sigma): mhsa {:.4}% ffn {:.4}%  \
+             kurt_max {:.2}  qk-concentration {:.2}\n",
+            run.tag,
+            100.0 * report.massive_fraction_mhsa,
+            100.0 * report.massive_fraction_ffn,
+            report.kurt_max,
+            report.qk_concentration));
+        let sink_heads = report.sink_heads(0.3);
+        out.push_str(&format!("  sink heads (mass>0.3): {}\n",
+                              sink_heads.len()));
+        for h in report.heads.iter().take(8) {
+            out.push_str(&format!(
+                "    L{} H{}: sink_mass {:.2}  sink_logit {:+.2}  \
+                 other_logit {:+.2} (sd {:.2})\n",
+                h.layer, h.head, h.sink_mass, h.sink_logit_mean,
+                h.other_logit_mean, h.other_logit_std));
+        }
+    }
+    Ok(out)
+}
+
+/// Figures 10-11: weight histograms at probed depths.
+pub fn fig1011(engine: &Engine, runs_dir: &Path, tags: &[&str])
+               -> Result<String> {
+    let runs = load_runs(runs_dir, tags)?;
+    let m = engine.manifest();
+    let mut out =
+        String::from("\n## Figures 10-11 — weight histograms\n");
+    for run in &runs {
+        out.push_str(&format!("\n### {}\n", run.tag));
+        let specs = engine.manifest().params(&run.arch)?;
+        for &layer in &m.probe_layers {
+            for w in ["wq", "w_down"] {
+                let name = format!("layers.{layer}.{w}");
+                if let Some(idx) =
+                    specs.iter().position(|s| s.name == name)
+                {
+                    let t = &run.params[idx];
+                    let h = Histogram::auto(t.data(), 64);
+                    let kurt =
+                        crate::tensor::stats::excess_kurtosis(t.data());
+                    out.push_str(&format!(
+                        "{name:20} absmax {:8.3} kurt {kurt:8.2} |{}|\n",
+                        t.abs_max(), h.sparkline()));
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn efforts() {
+        assert!(Effort::QUICK.n_per_task < Effort::FULL.n_per_task);
+    }
+
+    #[test]
+    fn ablation_tags_match_grid() {
+        let tags = ablation_tags();
+        assert_eq!(tags.len(), 6);
+        assert!(tags.contains(&"osp") && tags.contains(&"adam"));
+    }
+}

@@ -1,0 +1,279 @@
+//! artifacts/manifest.json model: the contract between python/compile
+//! (which writes it) and the Rust coordinator (which is entirely
+//! manifest-driven — no hard-coded shapes anywhere in L3).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unknown dtype '{other}'"),
+        }
+    }
+}
+
+/// One input or output tensor of an artifact.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered HLO executable.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// A model parameter leaf (ordering = calling convention).
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String,
+    pub kind: String,
+}
+
+/// An optimizer-state leaf. init is "zeros" | "eye".
+#[derive(Clone, Debug)]
+pub struct OptLeafSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String,
+}
+
+/// Model configuration as resolved at lowering time.
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub preset: String,
+    pub kernels: String,
+    pub model: ModelCfg,
+    pub batch_train: usize,
+    pub batch_eval: usize,
+    pub batch_probe: usize,
+    pub probe_layers: Vec<usize>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// arch name -> ordered param leaves
+    pub param_specs: BTreeMap<String, Vec<ParamSpec>>,
+    /// arch name -> optimizer name -> ordered opt-state leaves
+    pub opt_specs: BTreeMap<String, BTreeMap<String, Vec<OptLeafSpec>>>,
+}
+
+fn tensor_spec(j: &Json) -> Result<TensorSpec> {
+    Ok(TensorSpec {
+        name: j.req("name")?.as_str().context("name")?.to_string(),
+        shape: j.req("shape")?.usize_arr().context("shape")?,
+        dtype: Dtype::parse(j.req("dtype")?.as_str().unwrap_or("f32"))?,
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+
+        let mc = j.req("model_config")?;
+        let model = ModelCfg {
+            vocab_size: mc.req("vocab_size")?.as_usize().context("vocab")?,
+            d_model: mc.req("d_model")?.as_usize().context("d_model")?,
+            n_layers: mc.req("n_layers")?.as_usize().context("n_layers")?,
+            n_heads: mc.req("n_heads")?.as_usize().context("n_heads")?,
+            d_ff: mc.req("d_ff")?.as_usize().context("d_ff")?,
+            seq_len: mc.req("seq_len")?.as_usize().context("seq_len")?,
+        };
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.req("artifacts")?.as_obj().context("artifacts")? {
+            let inputs = a
+                .req("inputs")?
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .map(tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .req("outputs")?
+                .as_arr()
+                .context("outputs")?
+                .iter()
+                .map(tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(a.req("file")?.as_str().context("file")?),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+
+        let mut param_specs = BTreeMap::new();
+        for (arch, arr) in j.req("param_specs")?.as_obj().context("p")? {
+            let specs = arr
+                .as_arr()
+                .context("param_specs arr")?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p.req("name")?.as_str().context("n")?.into(),
+                        shape: p.req("shape")?.usize_arr().context("s")?,
+                        init: p.req("init")?.as_str().context("i")?.into(),
+                        kind: p.req("kind")?.as_str().context("k")?.into(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            param_specs.insert(arch.clone(), specs);
+        }
+
+        let mut opt_specs = BTreeMap::new();
+        for (arch, opts) in j.req("opt_specs")?.as_obj().context("o")? {
+            let mut per_opt = BTreeMap::new();
+            for (opt, arr) in opts.as_obj().context("opt obj")? {
+                let leaves = arr
+                    .as_arr()
+                    .context("opt arr")?
+                    .iter()
+                    .map(|p| {
+                        Ok(OptLeafSpec {
+                            name: p.req("name")?.as_str().context("n")?.into(),
+                            shape: p.req("shape")?.usize_arr().context("s")?,
+                            init: p.req("init")?.as_str().context("i")?.into(),
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                per_opt.insert(opt.clone(), leaves);
+            }
+            opt_specs.insert(arch.clone(), per_opt);
+        }
+
+        Ok(Manifest {
+            preset: j.req("preset")?.as_str().context("preset")?.into(),
+            kernels: j.req("kernels")?.as_str().unwrap_or("pallas").into(),
+            model,
+            batch_train: j.req("batch_train")?.as_usize().context("bt")?,
+            batch_eval: j.req("batch_eval")?.as_usize().context("be")?,
+            batch_probe: j.req("batch_probe")?.as_usize().context("bp")?,
+            probe_layers: j.req("probe_layers")?.usize_arr().context("pl")?,
+            artifacts,
+            param_specs,
+            opt_specs,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest (have: {:?})",
+                                   self.artifacts.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn params(&self, arch: &str) -> Result<&[ParamSpec]> {
+        self.param_specs
+            .get(arch)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| anyhow!("unknown arch '{arch}'"))
+    }
+
+    pub fn opt_leaves(&self, arch: &str, opt: &str) -> Result<&[OptLeafSpec]> {
+        self.opt_specs
+            .get(arch)
+            .and_then(|m| m.get(opt))
+            .map(|v| v.as_slice())
+            .ok_or_else(|| anyhow!("unknown arch/opt '{arch}/{opt}'"))
+    }
+
+    /// Total parameter count for an architecture.
+    pub fn param_count(&self, arch: &str) -> Result<usize> {
+        Ok(self.params(arch)?.iter().map(|p| p.shape.iter().product::<usize>()).sum())
+    }
+
+    /// Optimizer state element count (the Table-1 memory column).
+    pub fn opt_state_count(&self, arch: &str, opt: &str) -> Result<usize> {
+        Ok(self
+            .opt_leaves(arch, opt)?
+            .iter()
+            .map(|p| p.shape.iter().product::<usize>())
+            .sum())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "preset": "tiny", "kernels": "pallas",
+      "model_config": {"vocab_size": 256, "d_model": 64, "n_layers": 2,
+        "n_heads": 2, "d_ff": 176, "seq_len": 64, "rope_theta": 10000.0,
+        "norm": "rms", "embproj": false, "init_std": 0.02},
+      "batch_train": 8, "batch_eval": 8, "batch_probe": 2,
+      "probe_layers": [0, 1],
+      "archs": {"rmsnorm_plain": {"norm": "rms", "embproj": false}},
+      "param_specs": {"rmsnorm_plain": [
+        {"name": "embed", "shape": [256, 64], "init": "normal",
+         "kind": "embed"}]},
+      "opt_specs": {"rmsnorm_plain": {"adam": [
+        {"name": "step", "shape": [1], "init": "zeros"},
+        {"name": "adam_m.embed", "shape": [256, 64], "init": "zeros"}]}},
+      "artifacts": {"ns_64x64": {"file": "ns_64x64.hlo.txt",
+        "hash": "abc",
+        "inputs": [{"name": "g", "shape": [64, 64], "dtype": "f32"}],
+        "outputs": [{"name": "orth", "shape": [64, 64], "dtype": "f32"}]}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let dir = std::env::temp_dir().join("osp_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.preset, "tiny");
+        assert_eq!(m.model.d_model, 64);
+        let a = m.artifact("ns_64x64").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![64, 64]);
+        assert_eq!(a.inputs[0].dtype, Dtype::F32);
+        assert_eq!(m.params("rmsnorm_plain").unwrap()[0].kind, "embed");
+        assert_eq!(m.param_count("rmsnorm_plain").unwrap(), 256 * 64);
+        assert_eq!(m.opt_state_count("rmsnorm_plain", "adam").unwrap(),
+                   1 + 256 * 64);
+        assert!(m.artifact("nope").is_err());
+        assert!(m.params("nope").is_err());
+    }
+}

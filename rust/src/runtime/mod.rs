@@ -1,0 +1,322 @@
+//! PJRT runtime: load `artifacts/*.hlo.txt`, compile once on the CPU
+//! client, execute from the coordinator's hot path.
+//!
+//! Mirrors /opt/xla-example/load_hlo: HLO *text* interchange (the image's
+//! xla_extension 0.5.1 rejects jax>=0.5 serialized protos), tuple results
+//! unpacked by the manifest's output specs. Python never runs here.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{ArtifactSpec, Dtype, Manifest, OptLeafSpec, ParamSpec,
+                   TensorSpec};
+
+use crate::tensor::Tensor;
+
+/// A host-side value crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum HostValue {
+    F32(Tensor),
+    I32(Vec<usize>, Vec<i32>),
+}
+
+impl HostValue {
+    pub fn scalar(v: f32) -> HostValue {
+        HostValue::F32(Tensor::new(vec![1], vec![v]))
+    }
+
+    pub fn tokens(shape: &[usize], data: Vec<i32>) -> HostValue {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostValue::I32(shape.to_vec(), data)
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32(t) => t.shape(),
+            HostValue::I32(s, _) => s,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            HostValue::F32(t) => Ok(t),
+            HostValue::I32(..) => bail!("expected f32 value, got i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Tensor> {
+        match self {
+            HostValue::F32(t) => Ok(t),
+            HostValue::I32(..) => bail!("expected f32 value, got i32"),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64>;
+        let lit = match self {
+            HostValue::F32(t) => {
+                dims = t.shape().iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(t.data()).reshape(&dims)?
+            }
+            HostValue::I32(shape, data) => {
+                dims = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostValue> {
+        match spec.dtype {
+            Dtype::F32 => {
+                let data = lit.to_vec::<f32>().with_context(|| {
+                    format!("output '{}' not f32", spec.name)
+                })?;
+                if data.len() != spec.numel() {
+                    bail!("output '{}': got {} elems, manifest says {:?}",
+                          spec.name, data.len(), spec.shape);
+                }
+                let shape = if spec.shape.is_empty() {
+                    vec![1]
+                } else {
+                    spec.shape.clone()
+                };
+                Ok(HostValue::F32(Tensor::new(shape, data)))
+            }
+            Dtype::I32 => {
+                let data = lit.to_vec::<i32>()?;
+                Ok(HostValue::I32(spec.shape.clone(), data))
+            }
+        }
+    }
+}
+
+/// A compiled artifact plus its manifest spec.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// Cumulative execution statistics (for §Perf profiling).
+    pub stats: Mutex<ExecStats>,
+}
+
+// The xla crate's wrappers hold `Rc` handles, so they are !Send/!Sync even
+// though the underlying C++ PJRT objects are thread-safe. All PJRT entry
+// points in this module go through EXEC_LOCK (the device is a single CPU
+// stream anyway), which also serializes the Rc refcount traffic the
+// wrapper types generate internally — making the shared use sound.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+/// Global PJRT serialization lock (see the safety note above). Worker
+/// threads stay structurally parallel (scatter/all-reduce/channels); only
+/// the accelerator queue is serialized, as on a real single-device node.
+static EXEC_LOCK: Mutex<()> = Mutex::new(());
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+}
+
+impl Executable {
+    /// Validate inputs against the manifest, run, unpack the tuple result.
+    pub fn run(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!("artifact '{}': {} inputs given, {} expected",
+                  self.spec.name, inputs.len(), self.spec.inputs.len());
+        }
+        for (v, s) in inputs.iter().zip(&self.spec.inputs) {
+            let numel: usize = v.shape().iter().product();
+            if numel != s.numel() {
+                bail!("artifact '{}', input '{}': shape {:?} != manifest {:?}",
+                      self.spec.name, s.name, v.shape(), s.shape);
+            }
+        }
+        let t0 = Instant::now();
+        let parts = {
+            let _lock = EXEC_LOCK.lock().unwrap();
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|v| v.to_literal())
+                .collect::<Result<_>>()?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("executing '{}'", self.spec.name))?;
+            let tuple = result[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            tuple.to_tuple().context("untupling result")?
+        };
+        if parts.len() != self.spec.outputs.len() {
+            bail!("artifact '{}': {} outputs, manifest says {}",
+                  self.spec.name, parts.len(), self.spec.outputs.len());
+        }
+        let out = parts
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| HostValue::from_literal(lit, spec))
+            .collect::<Result<Vec<_>>>()?;
+        let dt = t0.elapsed().as_secs_f64();
+        let mut st = self.stats.lock().unwrap();
+        st.calls += 1;
+        st.total_secs += dt;
+        Ok(out)
+    }
+}
+
+/// The PJRT engine: one CPU client + a lazy compile cache keyed by
+/// artifact name. Clone-cheap via Arc; safe to share across the
+/// coordinator's worker threads (PJRT execution is thread-safe; the
+/// compile cache is mutex-guarded).
+#[derive(Clone)]
+pub struct Engine {
+    inner: Arc<EngineInner>,
+}
+
+struct EngineInner {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+// xla::PjRtClient wraps a thread-safe C++ client; the raw pointer fields
+// make the rust type !Send by default.
+unsafe impl Send for EngineInner {}
+unsafe impl Sync for EngineInner {}
+
+impl Engine {
+    /// Open the artifact directory (must contain manifest.json).
+    pub fn open(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            inner: Arc::new(EngineInner {
+                client,
+                dir: dir.to_path_buf(),
+                manifest,
+                cache: Mutex::new(HashMap::new()),
+            }),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.inner.manifest
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.inner.dir
+    }
+
+    /// Load + compile an artifact (cached). Compilation happens once per
+    /// process; the hot path only executes.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.inner.cache.lock().unwrap().get(name) {
+            return Ok(Arc::clone(e));
+        }
+        let spec = self.inner.manifest.artifact(name)?.clone();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .with_context(|| format!("parsing HLO text {:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .inner
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling '{name}'"))?;
+        let compiled = Arc::new(Executable {
+            spec,
+            exe,
+            stats: Mutex::new(ExecStats::default()),
+        });
+        eprintln!("[runtime] compiled {name} in {:.2}s",
+                  t0.elapsed().as_secs_f64());
+        self.inner
+            .cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::clone(&compiled));
+        Ok(compiled)
+    }
+
+    /// Time spent inside PJRT per loaded artifact (for §Perf).
+    pub fn exec_stats(&self) -> Vec<(String, ExecStats)> {
+        self.inner
+            .cache
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), *v.stats.lock().unwrap()))
+            .collect()
+    }
+}
+
+/// Build the initial optimizer state from manifest init kinds.
+pub fn init_opt_state(leaves: &[OptLeafSpec]) -> Vec<Tensor> {
+    leaves
+        .iter()
+        .map(|l| match l.init.as_str() {
+            "eye" => Tensor::eye(l.shape[0]),
+            _ => Tensor::zeros(&l.shape),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_value_roundtrip_f32() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let v = HostValue::F32(t.clone());
+        let lit = v.to_literal().unwrap();
+        let spec = TensorSpec { name: "x".into(), shape: vec![2, 3],
+                                dtype: Dtype::F32 };
+        let back = HostValue::from_literal(&lit, &spec).unwrap();
+        assert_eq!(back.as_f32().unwrap().data(), t.data());
+    }
+
+    #[test]
+    fn host_value_roundtrip_i32() {
+        let v = HostValue::tokens(&[2, 2], vec![1, 2, 3, 4]);
+        let lit = v.to_literal().unwrap();
+        let spec = TensorSpec { name: "t".into(), shape: vec![2, 2],
+                                dtype: Dtype::I32 };
+        match HostValue::from_literal(&lit, &spec).unwrap() {
+            HostValue::I32(shape, data) => {
+                assert_eq!(shape, vec![2, 2]);
+                assert_eq!(data, vec![1, 2, 3, 4]);
+            }
+            _ => panic!("wrong dtype"),
+        }
+    }
+
+    #[test]
+    fn scalar_helper() {
+        let v = HostValue::scalar(3.5);
+        assert_eq!(v.shape(), &[1]);
+        assert_eq!(v.as_f32().unwrap().data(), &[3.5]);
+    }
+
+    #[test]
+    fn init_opt_state_kinds() {
+        let leaves = vec![
+            OptLeafSpec { name: "step".into(), shape: vec![1],
+                          init: "zeros".into() },
+            OptLeafSpec { name: "q".into(), shape: vec![3, 3],
+                          init: "eye".into() },
+        ];
+        let st = init_opt_state(&leaves);
+        assert_eq!(st[0].data(), &[0.0]);
+        assert_eq!(st[1].at2(1, 1), 1.0);
+        assert_eq!(st[1].at2(0, 1), 0.0);
+    }
+}

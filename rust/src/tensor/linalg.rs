@@ -1,0 +1,457 @@
+//! Matrix algebra on [`Tensor`]: blocked matmul, transpose, Cholesky,
+//! Householder QR, random orthogonal matrices, Newton-Schulz polar
+//! factorization, and the blocked Walsh-Hadamard transform.
+//!
+//! These back GPTQ (Cholesky of the damped Hessian), QuaRot-lite /
+//! SpinQuant-lite (orthogonal rotations), EmbProj absorption, and the
+//! disaggregated Muon outer loop.
+
+use super::Tensor;
+use crate::util::rng::Pcg;
+
+/// Blocked matmul C = A @ B. Panics on shape mismatch.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul {:?} @ {:?}", a.shape(), b.shape());
+    let mut c = Tensor::zeros(&[m, n]);
+    // i-k-j loop order: streams B rows, accumulates into C rows — cache
+    // friendly for row-major without an explicit transpose.
+    let (ad, bd) = (a.data(), b.data());
+    let cd = c.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let crow = &mut cd[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &bd[kk * n..(kk + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += aik * bv;
+            }
+        }
+    }
+    c
+}
+
+pub fn transpose(a: &Tensor) -> Tensor {
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    let mut t = Tensor::zeros(&[n, m]);
+    for i in 0..m {
+        for j in 0..n {
+            let v = a.at2(i, j);
+            t.set2(j, i, v);
+        }
+    }
+    t
+}
+
+/// y = A @ x for a vector x.
+pub fn matvec(a: &Tensor, x: &[f32]) -> Vec<f32> {
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    assert_eq!(n, x.len());
+    (0..m).map(|i| a.row(i).iter().zip(x).map(|(p, q)| p * q).sum()).collect()
+}
+
+/// Cholesky factorization A = L L^T for symmetric positive definite A.
+/// Returns the lower-triangular L; errors if A is not SPD (non-positive
+/// pivot), which GPTQ handles by increasing damping.
+pub fn cholesky(a: &Tensor) -> Result<Tensor, String> {
+    let n = a.shape()[0];
+    assert_eq!(a.shape(), &[n, n]);
+    let mut l = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.at2(i, j);
+            for k in 0..j {
+                s -= l.at2(i, k) * l.at2(j, k);
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return Err(format!(
+                        "cholesky: non-positive pivot {s} at {i}"));
+                }
+                l.set2(i, j, s.sqrt());
+            } else {
+                l.set2(i, j, s / l.at2(j, j));
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L y = b with lower-triangular L (forward substitution).
+pub fn solve_lower(l: &Tensor, b: &[f32]) -> Vec<f32> {
+    let n = l.shape()[0];
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l.at2(i, k) * y[k];
+        }
+        y[i] = s / l.at2(i, i);
+    }
+    y
+}
+
+/// Solve L^T x = y with lower-triangular L (back substitution).
+pub fn solve_lower_t(l: &Tensor, y: &[f32]) -> Vec<f32> {
+    let n = l.shape()[0];
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in i + 1..n {
+            s -= l.at2(k, i) * x[k];
+        }
+        x[i] = s / l.at2(i, i);
+    }
+    x
+}
+
+/// Inverse of an SPD matrix via Cholesky (used by GPTQ's Hessian inverse).
+pub fn spd_inverse(a: &Tensor) -> Result<Tensor, String> {
+    let n = a.shape()[0];
+    let l = cholesky(a)?;
+    let mut inv = Tensor::zeros(&[n, n]);
+    let mut e = vec![0.0f32; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_lower_t(&l, &y);
+        for i in 0..n {
+            inv.set2(i, j, x[i]);
+        }
+        e[j] = 0.0;
+    }
+    Ok(inv)
+}
+
+/// Householder QR: A (m x n, m >= n) -> (Q m x n thin, R n x n upper).
+pub fn qr(a: &Tensor) -> (Tensor, Tensor) {
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    assert!(m >= n, "qr expects m >= n, got {m}x{n}");
+    let mut r = a.clone();
+    // Accumulate the Householder vectors, then form thin Q by applying
+    // the reflections to the first n columns of I.
+    let mut vs: Vec<Vec<f32>> = Vec::with_capacity(n);
+    for k in 0..n {
+        // Build the reflector for column k below the diagonal.
+        let mut v = vec![0.0f32; m];
+        let mut norm2 = 0.0f32;
+        for i in k..m {
+            let x = r.at2(i, k);
+            v[i] = x;
+            norm2 += x * x;
+        }
+        let norm = norm2.sqrt();
+        if norm < 1e-30 {
+            vs.push(v);
+            continue;
+        }
+        let sign = if v[k] >= 0.0 { 1.0 } else { -1.0 };
+        v[k] += sign * norm;
+        let vnorm2: f32 = v[k..].iter().map(|x| x * x).sum();
+        if vnorm2 < 1e-30 {
+            vs.push(v);
+            continue;
+        }
+        // Apply (I - 2 v v^T / v^T v) to R.
+        for j in k..n {
+            let mut dot = 0.0f32;
+            for i in k..m {
+                dot += v[i] * r.at2(i, j);
+            }
+            let c = 2.0 * dot / vnorm2;
+            for i in k..m {
+                let val = r.at2(i, j) - c * v[i];
+                r.set2(i, j, val);
+            }
+        }
+        vs.push(v);
+    }
+    // Thin Q: apply reflections in reverse to I(m x n).
+    let mut q = Tensor::zeros(&[m, n]);
+    for j in 0..n {
+        q.set2(j, j, 1.0);
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2: f32 = v[k..].iter().map(|x| x * x).sum();
+        if vnorm2 < 1e-30 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0f32;
+            for i in k..m {
+                dot += v[i] * q.at2(i, j);
+            }
+            let c = 2.0 * dot / vnorm2;
+            for i in k..m {
+                let val = q.at2(i, j) - c * v[i];
+                q.set2(i, j, val);
+            }
+        }
+    }
+    // Zero R's subdiagonal and truncate to n x n.
+    let mut rr = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        for j in i..n {
+            rr.set2(i, j, r.at2(i, j));
+        }
+    }
+    (q, rr)
+}
+
+/// Haar-ish random orthogonal matrix: QR of a Gaussian with the R-diagonal
+/// sign fix (used by QuaRot-lite rotations and SpinQuant-lite starts).
+pub fn random_orthogonal(n: usize, rng: &mut Pcg) -> Tensor {
+    let mut g = Tensor::zeros(&[n, n]);
+    rng.fill_normal(g.data_mut(), 1.0);
+    let (mut q, r) = qr(&g);
+    for j in 0..n {
+        if r.at2(j, j) < 0.0 {
+            for i in 0..n {
+                let v = -q.at2(i, j);
+                q.set2(i, j, v);
+            }
+        }
+    }
+    q
+}
+
+/// Cubic Newton-Schulz polar factor (matches ref.polar_ref in python):
+/// X <- 1.5 X - 0.5 X X^T X after Frobenius normalization.
+pub fn polar(g: &Tensor, steps: usize) -> Tensor {
+    let transposed = g.shape()[0] > g.shape()[1];
+    let mut x = if transposed { transpose(g) } else { g.clone() };
+    let norm = x.frobenius_norm() + 1e-7;
+    x = x.scale(1.0 / norm);
+    for _ in 0..steps {
+        let xxt = matmul(&x, &transpose(&x));
+        let correction = matmul(&xxt, &x);
+        let mut next = x.clone().scale(1.5);
+        next.axpy(-0.5, &correction);
+        x = next;
+    }
+    if transposed {
+        transpose(&x)
+    } else {
+        x
+    }
+}
+
+/// Quintic Newton-Schulz orthogonalization — the Muon update map
+/// (paper Eq. 2). Numerically identical to the python oracle
+/// `ref.ns_orthogonalize_ref`; the disaggregated-vs-fused equivalence
+/// test pins it against the `ns_*` XLA artifacts.
+pub fn ns_orthogonalize(g: &Tensor, steps: usize) -> Tensor {
+    const A: f32 = 3.4445;
+    const B: f32 = -4.7750;
+    const C: f32 = 2.0315;
+    let transposed = g.shape()[0] > g.shape()[1];
+    let mut x = if transposed { transpose(g) } else { g.clone() };
+    let norm = x.frobenius_norm() + 1e-7;
+    x = x.scale(1.0 / norm);
+    for _ in 0..steps {
+        let gram = matmul(&x, &transpose(&x));
+        let gram2 = matmul(&gram, &gram);
+        let mut poly = gram.scale(B);
+        poly.axpy(C, &gram2);
+        let mut next = x.clone().scale(A);
+        next.axpy(1.0, &matmul(&poly, &x));
+        x = next;
+    }
+    if transposed {
+        transpose(&x)
+    } else {
+        x
+    }
+}
+
+/// Largest power of two dividing n (Hadamard block size; matches
+/// ref.pow2_block in python).
+pub fn pow2_block(n: usize) -> usize {
+    n & n.wrapping_neg()
+}
+
+/// Normalized blocked fast Walsh-Hadamard transform along the last axis
+/// of a [rows, n] tensor; the involution used for online FFN rotation and
+/// QuaRot-lite weight pre-rotation. Matches `ref.hadamard_ref`.
+pub fn hadamard_rows(x: &Tensor) -> Tensor {
+    let n = x.cols();
+    let rows = x.rows();
+    let blk = pow2_block(n);
+    let scale = 1.0 / (blk as f32).sqrt();
+    let mut out = x.clone();
+    let data = out.data_mut();
+    for r in 0..rows {
+        let row = &mut data[r * n..(r + 1) * n];
+        for chunk in row.chunks_mut(blk) {
+            let mut h = 1;
+            while h < blk {
+                let mut i = 0;
+                while i < blk {
+                    for j in i..i + h {
+                        let a = chunk[j];
+                        let b = chunk[j + h];
+                        chunk[j] = a + b;
+                        chunk[j + h] = a - b;
+                    }
+                    i += 2 * h;
+                }
+                h *= 2;
+            }
+            for v in chunk.iter_mut() {
+                *v *= scale;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn randn(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Pcg::new(seed, 3);
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(t.data_mut(), 1.0);
+        t
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(vec![2, 2], vec![5., 6., 7., 8.]);
+        assert_eq!(matmul(&a, &b).data(), &[19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = randn(&[7, 5], 1);
+        let i = Tensor::eye(5);
+        let c = matmul(&a, &i);
+        crate::util::prop::all_close(c.data(), a.data(), 1e-6).unwrap();
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = randn(&[4, 9], 2);
+        assert_eq!(transpose(&transpose(&a)), a);
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let g = randn(&[6, 6], 3);
+        let mut a = matmul(&g, &transpose(&g));
+        for i in 0..6 {
+            let v = a.at2(i, i) + 0.5;
+            a.set2(i, i, v);
+        }
+        let l = cholesky(&a).unwrap();
+        let rec = matmul(&l, &transpose(&l));
+        crate::util::prop::all_close(rec.data(), a.data(), 1e-4).unwrap();
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Tensor::new(vec![2, 2], vec![1., 2., 2., 1.]);
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let g = randn(&[5, 5], 4);
+        let mut a = matmul(&g, &transpose(&g));
+        for i in 0..5 {
+            let v = a.at2(i, i) + 1.0;
+            a.set2(i, i, v);
+        }
+        let l = cholesky(&a).unwrap();
+        let b = vec![1., -2., 0.5, 3., -1.];
+        let y = solve_lower(&l, &b);
+        let x = solve_lower_t(&l, &y);
+        // A x should equal b
+        let ax = matvec(&a, &x);
+        crate::util::prop::all_close(&ax, &b, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn spd_inverse_works() {
+        let g = randn(&[4, 4], 5);
+        let mut a = matmul(&g, &transpose(&g));
+        for i in 0..4 {
+            let v = a.at2(i, i) + 1.0;
+            a.set2(i, i, v);
+        }
+        let inv = spd_inverse(&a).unwrap();
+        let prod = matmul(&a, &inv);
+        crate::util::prop::all_close(prod.data(), Tensor::eye(4).data(),
+                                     1e-3).unwrap();
+    }
+
+    #[test]
+    fn qr_orthogonal_and_reconstructs() {
+        let a = randn(&[8, 5], 6);
+        let (q, r) = qr(&a);
+        let qtq = matmul(&transpose(&q), &q);
+        crate::util::prop::all_close(qtq.data(), Tensor::eye(5).data(),
+                                     1e-4).unwrap();
+        let rec = matmul(&q, &r);
+        crate::util::prop::all_close(rec.data(), a.data(), 1e-4).unwrap();
+    }
+
+    #[test]
+    fn random_orthogonal_is_orthogonal() {
+        let mut rng = Pcg::new(7, 0);
+        let q = random_orthogonal(16, &mut rng);
+        let qtq = matmul(&transpose(&q), &q);
+        crate::util::prop::all_close(qtq.data(), Tensor::eye(16).data(),
+                                     1e-4).unwrap();
+    }
+
+    #[test]
+    fn polar_orthogonalizes() {
+        let g = randn(&[12, 12], 8);
+        let p = polar(&g, 40);
+        let ptp = matmul(&transpose(&p), &p);
+        crate::util::prop::all_close(ptp.data(), Tensor::eye(12).data(),
+                                     5e-3).unwrap();
+    }
+
+    #[test]
+    fn ns_orthogonalize_spectrum_in_band() {
+        let g = randn(&[24, 16], 9);
+        let x = ns_orthogonalize(&g, 5);
+        // singular values in ~[0.7, 1.3] => x^T x diagonal in [0.45, 1.8]
+        let gram = matmul(&transpose(&x), &x);
+        for i in 0..16 {
+            let d = gram.at2(i, i);
+            assert!((0.3..2.0).contains(&d), "sigma^2 {d}");
+        }
+    }
+
+    #[test]
+    fn hadamard_involution_and_norm() {
+        let x = randn(&[3, 176], 10); // 176 = 16 * 11: blocked path
+        let y = hadamard_rows(&x);
+        let back = hadamard_rows(&y);
+        crate::util::prop::all_close(back.data(), x.data(), 1e-4).unwrap();
+        // Norm preservation per row
+        for r in 0..3 {
+            let nx: f32 = x.row(r).iter().map(|v| v * v).sum::<f32>().sqrt();
+            let ny: f32 = y.row(r).iter().map(|v| v * v).sum::<f32>().sqrt();
+            crate::util::prop::close(nx, ny, 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    fn pow2_block_values() {
+        assert_eq!(pow2_block(176), 16);
+        assert_eq!(pow2_block(256), 256);
+        assert_eq!(pow2_block(352), 32);
+        assert_eq!(pow2_block(1), 1);
+    }
+}

@@ -1,0 +1,240 @@
+//! Dense f32 tensor library: the host-side math substrate.
+//!
+//! Everything the coordinator does to weights outside the XLA executables
+//! lives here — quantization, rotations, GPTQ's Cholesky solves, the
+//! disaggregated Muon outer loop, and statistics. Row-major layout,
+//! shape-checked operations, no external dependencies.
+
+pub mod linalg;
+pub mod stats;
+
+use std::fmt;
+
+/// Row-major dense f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {shape:?} != data len {}", data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(),
+                 data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(),
+                 data: vec![v; shape.iter().product()] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: (0..n).map(&mut f).collect() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of rows when viewed as a matrix (product of leading dims).
+    pub fn rows(&self) -> usize {
+        assert!(!self.shape.is_empty());
+        self.shape[..self.shape.len() - 1].iter().product()
+    }
+
+    /// Last-dimension size.
+    pub fn cols(&self) -> usize {
+        *self.shape.last().expect("rank-0 tensor has no cols")
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    // ---- elementwise ------------------------------------------------------
+
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Tensor {
+        for v in self.data.iter_mut() {
+            *v = f(*v);
+        }
+        self
+    }
+
+    pub fn scale(self, s: f32) -> Tensor {
+        self.map(|v| v * s)
+    }
+
+    /// self += alpha * other (the optimizer outer-loop workhorse).
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        let mut out = self.clone();
+        out.axpy(1.0, other);
+        out
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        let mut out = self.clone();
+        out.axpy(-1.0, other);
+        out
+    }
+
+    pub fn hadamard_product(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a * b)
+            .collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    // ---- reductions --------------------------------------------------------
+
+    pub fn dot(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum()
+    }
+
+    pub fn frobenius_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.sum() / self.data.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert_eq!(t.at2(1, 2), 6.0);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0; 5]);
+    }
+
+    #[test]
+    fn eye_and_reshape() {
+        let e = Tensor::eye(3);
+        assert_eq!(e.at2(1, 1), 1.0);
+        assert_eq!(e.at2(0, 1), 0.0);
+        let r = e.reshape(&[9]);
+        assert_eq!(r.shape(), &[9]);
+    }
+
+    #[test]
+    fn axpy_and_arith() {
+        let a = Tensor::new(vec![3], vec![1., 2., 3.]);
+        let b = Tensor::new(vec![3], vec![10., 20., 30.]);
+        let mut c = a.clone();
+        c.axpy(0.5, &b);
+        assert_eq!(c.data(), &[6., 12., 18.]);
+        assert_eq!(a.add(&b).data(), &[11., 22., 33.]);
+        assert_eq!(b.sub(&a).data(), &[9., 18., 27.]);
+        assert_eq!(a.hadamard_product(&b).data(), &[10., 40., 90.]);
+        assert_eq!(a.dot(&b), 140.0);
+    }
+
+    #[test]
+    fn norms() {
+        let t = Tensor::new(vec![2, 2], vec![3., 4., 0., 0.]);
+        assert!((t.frobenius_norm() - 5.0).abs() < 1e-6);
+        assert_eq!(t.abs_max(), 4.0);
+        assert_eq!(t.mean(), 1.75);
+    }
+
+    #[test]
+    fn rows_for_3d() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.rows(), 6);
+        assert_eq!(t.cols(), 4);
+    }
+}

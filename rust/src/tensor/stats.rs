@@ -1,0 +1,197 @@
+//! Statistics on tensors: moments, excess kurtosis (the paper's outlier
+//! metric, Eq. 4), and histograms (Figures 2, 8-11).
+
+use super::Tensor;
+
+/// First four central moments in one pass (numerically stable enough in
+/// f64 accumulation for activation-scale data).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Moments {
+    pub n: usize,
+    pub mean: f64,
+    pub var: f64,
+    pub m3: f64,
+    pub m4: f64,
+    pub min: f32,
+    pub max: f32,
+}
+
+pub fn moments(data: &[f32]) -> Moments {
+    let n = data.len();
+    if n == 0 {
+        return Moments::default();
+    }
+    let mean = data.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+    let (mut m2, mut m3, mut m4) = (0.0f64, 0.0f64, 0.0f64);
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &v in data {
+        let d = v as f64 - mean;
+        let d2 = d * d;
+        m2 += d2;
+        m3 += d2 * d;
+        m4 += d2 * d2;
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    Moments {
+        n,
+        mean,
+        var: m2 / n as f64,
+        m3: m3 / n as f64,
+        m4: m4 / n as f64,
+        min: lo,
+        max: hi,
+    }
+}
+
+/// Excess kurtosis E[((x-mu)/sigma)^4] - 3 (paper Eq. 4). Near 0 for a
+/// Gaussian, huge for outlier-bearing activations (Adam: ~1818 in the
+/// paper; OSP: 0.04).
+pub fn excess_kurtosis(data: &[f32]) -> f64 {
+    let m = moments(data);
+    if m.var <= 1e-24 {
+        return 0.0;
+    }
+    m.m4 / (m.var * m.var) - 3.0
+}
+
+pub fn tensor_kurtosis(t: &Tensor) -> f64 {
+    excess_kurtosis(t.data())
+}
+
+/// Fixed-bin histogram over [lo, hi] with out-of-range clamping; the
+/// figure renderers print these as the paper's activation histograms.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f32,
+    pub hi: f32,
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn build(data: &[f32], lo: f32, hi: f32, bins: usize) -> Histogram {
+        assert!(bins > 0 && hi > lo);
+        let mut counts = vec![0u64; bins];
+        let w = (hi - lo) / bins as f32;
+        for &v in data {
+            let idx = (((v - lo) / w) as i64).clamp(0, bins as i64 - 1);
+            counts[idx as usize] += 1;
+        }
+        Histogram { lo, hi, counts, total: data.len() as u64 }
+    }
+
+    /// Symmetric histogram sized from the data's absolute maximum.
+    pub fn auto(data: &[f32], bins: usize) -> Histogram {
+        let m = data.iter().fold(1e-6f32, |m, v| m.max(v.abs()));
+        Histogram::build(data, -m, m, bins)
+    }
+
+    pub fn bin_center(&self, i: usize) -> f32 {
+        let w = (self.hi - self.lo) / self.counts.len() as f32;
+        self.lo + (i as f32 + 0.5) * w
+    }
+
+    /// Fraction of mass beyond `k` standard deviations (the Bondarenko
+    /// et al. 6-sigma outlier criterion used in §5.2).
+    pub fn outlier_fraction(data: &[f32], k: f32) -> f64 {
+        let m = moments(data);
+        let sd = m.var.sqrt() as f32;
+        if sd <= 0.0 {
+            return 0.0;
+        }
+        let count = data
+            .iter()
+            .filter(|&&v| ((v as f64 - m.mean).abs() as f32) > k * sd)
+            .count();
+        count as f64 / data.len().max(1) as f64
+    }
+
+    /// Render as a compact ASCII sparkline (for terminal reports).
+    pub fn sparkline(&self) -> String {
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let max = *self.counts.iter().max().unwrap_or(&1) as f64;
+        self.counts
+            .iter()
+            .map(|&c| {
+                if c == 0 {
+                    ' '
+                } else {
+                    // log scale: outlier tails are invisible linearly
+                    let f = ((c as f64).ln_1p() / max.ln_1p() * 7.0) as usize;
+                    GLYPHS[f.min(7)]
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn gaussian_kurtosis_near_zero() {
+        let mut rng = Pcg::new(0, 0);
+        let data: Vec<f32> = (0..200_000).map(|_| rng.normal()).collect();
+        let k = excess_kurtosis(&data);
+        assert!(k.abs() < 0.1, "{k}");
+    }
+
+    #[test]
+    fn outliers_blow_up_kurtosis() {
+        let mut rng = Pcg::new(1, 0);
+        let mut data: Vec<f32> = (0..100_000).map(|_| rng.normal()).collect();
+        for v in data.iter_mut().take(40) {
+            *v *= 300.0;
+        }
+        assert!(excess_kurtosis(&data) > 1000.0);
+    }
+
+    #[test]
+    fn uniform_kurtosis_negative() {
+        let mut rng = Pcg::new(2, 0);
+        let data: Vec<f32> =
+            (0..100_000).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let k = excess_kurtosis(&data);
+        assert!((-1.4..-1.0).contains(&k), "{k}");
+    }
+
+    #[test]
+    fn moments_known_values() {
+        let m = moments(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((m.mean - 2.5).abs() < 1e-9);
+        assert!((m.var - 1.25).abs() < 1e-9);
+        assert_eq!(m.min, 1.0);
+        assert_eq!(m.max, 4.0);
+    }
+
+    #[test]
+    fn histogram_total_and_bins() {
+        let data = [-1.0f32, -0.5, 0.0, 0.5, 0.99, 5.0];
+        let h = Histogram::build(&data, -1.0, 1.0, 4);
+        assert_eq!(h.total, 6);
+        assert_eq!(h.counts.iter().sum::<u64>(), 6);
+        // 5.0 clamps into the last bin
+        assert!(h.counts[3] >= 2);
+        assert!((h.bin_center(0) + 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn outlier_fraction_sane() {
+        let mut rng = Pcg::new(3, 0);
+        let data: Vec<f32> = (0..100_000).map(|_| rng.normal()).collect();
+        let f6 = Histogram::outlier_fraction(&data, 6.0);
+        assert!(f6 < 1e-4, "{f6}"); // gaussian: essentially none
+        let f1 = Histogram::outlier_fraction(&data, 1.0);
+        assert!((f1 - 0.317).abs() < 0.02, "{f1}");
+    }
+
+    #[test]
+    fn sparkline_renders() {
+        let h = Histogram::build(&[0.0, 0.1, 0.2, 0.9], 0.0, 1.0, 8);
+        let s = h.sparkline();
+        assert_eq!(s.chars().count(), 8);
+    }
+}

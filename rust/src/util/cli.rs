@@ -1,0 +1,159 @@
+//! Tiny CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, and
+//! positional arguments, with generated help text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    present: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv (excluding the binary name). The first non-flag token
+    /// becomes the subcommand when `with_subcommand` is set.
+    pub fn parse(argv: &[String], with_subcommand: bool) -> Args {
+        let mut a = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                    a.present.push(k.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    a.flags.insert(rest.to_string(), v.clone());
+                    a.present.push(rest.to_string());
+                } else {
+                    a.flags.insert(rest.to_string(), "true".to_string());
+                    a.present.push(rest.to_string());
+                }
+            } else if with_subcommand && a.subcommand.is_none() {
+                a.subcommand = Some(tok.clone());
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        a
+    }
+
+    pub fn from_env(with_subcommand: bool) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv, with_subcommand)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{key} expects an integer, got '{v}'")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{key} expects an integer, got '{v}'")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{key} expects a number, got '{v}'")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(v) => panic!("--{key} expects a bool, got '{v}'"),
+            None => default,
+        }
+    }
+
+    /// Comma-separated list value.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = Args::parse(&argv("train --steps 100 --run-dir runs/x --fast"),
+                            true);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.usize_or("steps", 0), 100);
+        assert_eq!(a.str_or("run-dir", ""), "runs/x");
+        assert!(a.has("fast"));
+        assert!(a.bool_or("fast", false));
+    }
+
+    #[test]
+    fn equals_form_and_positional() {
+        let a = Args::parse(&argv("eval ckpt1 --bits=4 ckpt2"), true);
+        assert_eq!(a.subcommand.as_deref(), Some("eval"));
+        assert_eq!(a.positional, vec!["ckpt1", "ckpt2"]);
+        assert_eq!(a.usize_or("bits", 16), 4);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&argv(""), false);
+        assert_eq!(a.f64_or("lr", 1e-3), 1e-3);
+        assert_eq!(a.list_or("opts", &["adam", "muon"]),
+                   vec!["adam", "muon"]);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(&argv("--opts adam,muon,osp"), false);
+        assert_eq!(a.list_or("opts", &[]), vec!["adam", "muon", "osp"]);
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = Args::parse(&argv("--offset=-3.5"), false);
+        assert_eq!(a.f64_or("offset", 0.0), -3.5);
+    }
+}

@@ -1,0 +1,10 @@
+//! Hand-built substrates: the offline build environment vendors only the
+//! `xla` crate's dependency closure, so JSON, RNG, CLI parsing, a thread
+//! pool, and property testing are implemented here (and tested like any
+//! other module).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;

@@ -1,0 +1,112 @@
+//! Seeded property-testing harness (proptest is not in the offline vendor
+//! set). Generates N random cases from a deterministic PCG stream and
+//! reports the failing seed so any failure is reproducible with
+//! `case_seed`.
+
+use super::rng::Pcg;
+
+/// Run `check` over `n` generated cases. On failure, panics with the case
+/// index and per-case seed for reproduction.
+pub fn check<G, T, C>(name: &str, n: usize, seed: u64, gen: G, check: C)
+where
+    G: Fn(&mut Pcg) -> T,
+    C: Fn(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    for i in 0..n {
+        let case_seed = seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Pcg::new(case_seed, 17);
+        let case = gen(&mut rng);
+        if let Err(msg) = check(&case) {
+            panic!(
+                "property '{name}' failed on case {i} (case_seed={case_seed}):\n\
+                 {msg}\ncase: {case:#?}"
+            );
+        }
+    }
+}
+
+/// Reproduce a single case by seed (paste from a failure message).
+pub fn case_seed<G, T>(seed: u64, gen: G) -> T
+where
+    G: Fn(&mut Pcg) -> T,
+{
+    let mut rng = Pcg::new(seed, 17);
+    gen(&mut rng)
+}
+
+/// Convenience assertions returning Result<(), String> for use in checks.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+pub fn close(a: f32, b: f32, tol: f32) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("not close: {a} vs {b} (tol {tol})"))
+    }
+}
+
+pub fn all_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > tol * (1.0 + x.abs().max(y.abs())) {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut count = 0;
+        let counter = std::cell::Cell::new(0);
+        check("counts", 25, 7, |rng| rng.below(10), |_| {
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        count += counter.get();
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn check_reports_failure() {
+        check("fails", 10, 1, |rng| rng.below(100), |&x| {
+            if x < 1000 {
+                Err(format!("x was {x}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-7, 1e-5).is_ok());
+        assert!(close(1.0, 1.1, 1e-5).is_err());
+        assert!(all_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6).is_ok());
+        assert!(all_close(&[1.0], &[1.0, 2.0], 1e-6).is_err());
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let a = case_seed(123, |rng| (0..4).map(|_| rng.below(50))
+                          .collect::<Vec<_>>());
+        let b = case_seed(123, |rng| (0..4).map(|_| rng.below(50))
+                          .collect::<Vec<_>>());
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,57 @@
+//! Shared helpers for integration tests: engine bootstrap (skipping
+//! gracefully when `make artifacts` has not run) and manifest-driven
+//! parameter/token construction.
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use osp::runtime::{Engine, HostValue};
+use osp::tensor::Tensor;
+use osp::util::rng::Pcg;
+
+static ENGINE: OnceLock<Option<Engine>> = OnceLock::new();
+
+/// Artifact directory: $OSP_ARTIFACTS or <repo>/artifacts.
+pub fn artifact_dir() -> PathBuf {
+    std::env::var("OSP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}
+
+/// Open the engine (shared across all tests in the binary — compiled
+/// executables are cached once), or skip when `make artifacts` hasn't
+/// run.
+pub fn engine_or_skip() -> Option<Engine> {
+    ENGINE
+        .get_or_init(|| {
+            let dir = artifact_dir();
+            if !dir.join("manifest.json").exists() {
+                eprintln!("SKIP: no artifacts at {dir:?}; run `make artifacts`");
+                return None;
+            }
+            Some(Engine::open(&dir).expect("engine open"))
+        })
+        .clone()
+}
+
+/// Run the init_<arch> artifact to get flat params.
+pub fn init_params(eng: &Engine, arch: &str, seed: i32) -> Vec<Tensor> {
+    let init = eng.load(&format!("init_{arch}")).unwrap();
+    let out = init
+        .run(&[HostValue::tokens(&[1], vec![seed])])
+        .expect("init run");
+    out.into_iter().map(|v| v.into_f32().unwrap()).collect()
+}
+
+/// Random token batch with the manifest's seq_len.
+pub fn tokens_for(eng: &Engine, batch: usize, seed: u64) -> HostValue {
+    let m = eng.manifest();
+    let mut rng = Pcg::new(seed, 5);
+    let n = batch * m.model.seq_len;
+    let data: Vec<i32> = (0..n)
+        .map(|_| rng.below(m.model.vocab_size as u64) as i32)
+        .collect();
+    HostValue::tokens(&[batch, m.model.seq_len], data)
+}

@@ -1,0 +1,206 @@
+//! Coordinator integration: the three execution modes agree, the
+//! disaggregated optimizer-parallel path is step-equivalent to the host
+//! path, and EmbProj absorption is computationally invariant through the
+//! real executables.
+
+mod common;
+
+use common::{engine_or_skip, init_params, tokens_for};
+
+use osp::coordinator::opt::HostOpt;
+use osp::coordinator::{install_disaggregated_ns, levels_for_bits};
+use osp::quant::absorb;
+use osp::runtime::HostValue;
+use osp::tensor::Tensor;
+use osp::util::threadpool::ThreadPool;
+
+fn run_grad(eng: &osp::runtime::Engine, arch: &str, params: &[Tensor],
+            toks: &HostValue) -> Vec<Tensor> {
+    let grad = eng.load(&format!("grad_{arch}")).unwrap();
+    let mut inputs: Vec<HostValue> =
+        params.iter().cloned().map(HostValue::F32).collect();
+    inputs.push(toks.clone());
+    let out = grad.run(&inputs).unwrap();
+    out[..params.len()]
+        .iter()
+        .map(|v| v.as_f32().unwrap().clone())
+        .collect()
+}
+
+#[test]
+fn fused_and_host_muon_steps_agree() {
+    let Some(eng) = engine_or_skip() else { return };
+    let arch = "ssnorm_embproj";
+    let m = eng.manifest();
+    let toks = tokens_for(&eng, m.batch_train, 77);
+    let lr = 1e-3f32;
+
+    // Fused step through the train artifact.
+    let train = eng.load(&format!("train_muon_{arch}")).unwrap();
+    let params0 = init_params(&eng, arch, 5);
+    let opt_state = osp::runtime::init_opt_state(
+        m.opt_leaves(arch, "muon").unwrap());
+    let n_p = params0.len();
+    let mut inputs: Vec<HostValue> =
+        params0.iter().cloned().map(HostValue::F32).collect();
+    inputs.extend(opt_state.iter().cloned().map(HostValue::F32));
+    inputs.push(toks.clone());
+    inputs.push(HostValue::scalar(lr));
+    let fused_out = train.run(&inputs).unwrap();
+    let fused_params: Vec<Tensor> = fused_out[..n_p]
+        .iter()
+        .map(|v| v.as_f32().unwrap().clone())
+        .collect();
+
+    // Host step: grad artifact + HostOpt (rust-side Muon).
+    let mut host_params = params0.clone();
+    let grads = run_grad(&eng, arch, &host_params, &toks);
+    let mut host_opt = HostOpt::new("muon", m.params(arch).unwrap());
+    host_opt.apply(&mut host_params, &grads, lr).unwrap();
+
+    // Same math on both sides of the PJRT boundary.
+    let specs = m.params(arch).unwrap();
+    for ((spec, f), h) in specs.iter().zip(&fused_params).zip(&host_params)
+    {
+        let scale = f.abs_max().max(1e-3);
+        let max_diff = f
+            .data()
+            .iter()
+            .zip(h.data())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 2e-2 * scale,
+                "param {} diverges: {max_diff} (scale {scale})", spec.name);
+    }
+}
+
+#[test]
+fn disaggregated_ns_matches_host_ns() {
+    let Some(eng) = engine_or_skip() else { return };
+    let arch = "ssnorm_embproj";
+    let m = eng.manifest();
+    let toks = tokens_for(&eng, m.batch_train, 31);
+    let lr = 1e-3f32;
+
+    let params0 = init_params(&eng, arch, 9);
+    let grads = run_grad(&eng, arch, &params0, &toks);
+
+    // Host NS path.
+    let mut p_host = params0.clone();
+    let mut opt_host = HostOpt::new("muon", m.params(arch).unwrap());
+    opt_host.apply(&mut p_host, &grads, lr).unwrap();
+
+    // Disaggregated path: ns_* executables sharded over a pool (the
+    // paper's optimizer-parallel design).
+    let mut p_dis = params0.clone();
+    let mut opt_dis = HostOpt::new("muon", m.params(arch).unwrap());
+    let pool = std::sync::Arc::new(ThreadPool::new(4, 64));
+    install_disaggregated_ns(&eng, &mut opt_dis, pool, 4).unwrap();
+    opt_dis.apply(&mut p_dis, &grads, lr).unwrap();
+
+    for (h, d) in p_host.iter().zip(&p_dis) {
+        let max_diff = h
+            .data()
+            .iter()
+            .zip(d.data())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 5e-3, "disagg vs host diff {max_diff}");
+    }
+}
+
+#[test]
+fn embproj_absorption_invariant_through_executables() {
+    let Some(eng) = engine_or_skip() else { return };
+    let m = eng.manifest();
+    let arch = "ssnorm_embproj";
+    let params = init_params(&eng, arch, 21);
+    let toks = tokens_for(&eng, m.batch_eval, 13);
+    let off = levels_for_bits(16);
+
+    let eval = |arch: &str, params: &[Tensor]| -> f32 {
+        let exe = eng.load(&format!("evalq_{arch}")).unwrap();
+        let mut inputs: Vec<HostValue> =
+            params.iter().cloned().map(HostValue::F32).collect();
+        inputs.push(toks.clone());
+        inputs.push(HostValue::scalar(off));
+        inputs.push(HostValue::scalar(off));
+        inputs.push(HostValue::scalar(0.0));
+        let out = exe.run(&inputs).unwrap();
+        out[0].as_f32().unwrap().data()[0]
+    };
+
+    let nll_embproj = eval(arch, &params);
+    let absorbed = absorb::absorb_embproj(m.params(arch).unwrap(), &params)
+        .unwrap();
+    let nll_plain = eval("ssnorm_plain", &absorbed);
+    // Section 3.3: absorption maintains computational invariance.
+    let rel = (nll_embproj - nll_plain).abs() / nll_embproj.abs();
+    assert!(rel < 1e-3, "absorption changed nll: {nll_embproj} vs \
+                         {nll_plain}");
+}
+
+#[test]
+fn ffn_had_weight_prerotation_invariant_at_fp() {
+    let Some(eng) = engine_or_skip() else { return };
+    let m = eng.manifest();
+    let arch = "rmsnorm_plain";
+    let params = init_params(&eng, arch, 2);
+    let toks = tokens_for(&eng, m.batch_eval, 17);
+    let exe = eng.load(&format!("evalq_{arch}")).unwrap();
+    let off = levels_for_bits(16);
+
+    let run = |params: &[Tensor], had: f32| -> f32 {
+        let mut inputs: Vec<HostValue> =
+            params.iter().cloned().map(HostValue::F32).collect();
+        inputs.push(toks.clone());
+        inputs.push(HostValue::scalar(off));
+        inputs.push(HostValue::scalar(off));
+        inputs.push(HostValue::scalar(had));
+        exe.run(&inputs).unwrap()[0].as_f32().unwrap().data()[0]
+    };
+
+    let base = run(&params, 0.0);
+    // Pre-rotate w_down in rust, enable online Hadamard in the graph: at
+    // fp precision the composition must be exact (H orthogonal).
+    let mut rotated = params.clone();
+    osp::quant::rotate::prerotate_w_down_hadamard(
+        m.params(arch).unwrap(), &mut rotated);
+    let had = run(&rotated, 1.0);
+    let rel = (base - had).abs() / base.abs();
+    assert!(rel < 1e-3, "FFN-Had not invariant: {base} vs {had}");
+}
+
+#[test]
+fn residual_rotation_invariant_through_executables() {
+    let Some(eng) = engine_or_skip() else { return };
+    let m = eng.manifest();
+    // SSNorm arch: scalar gamma commutes with rotations natively (§3.2
+    // payoff) — no scale folding needed.
+    let arch = "ssnorm_plain";
+    let params = init_params(&eng, arch, 8);
+    let toks = tokens_for(&eng, m.batch_eval, 19);
+    let exe = eng.load(&format!("evalq_{arch}")).unwrap();
+    let off = levels_for_bits(16);
+
+    let run = |params: &[Tensor]| -> f32 {
+        let mut inputs: Vec<HostValue> =
+            params.iter().cloned().map(HostValue::F32).collect();
+        inputs.push(toks.clone());
+        inputs.push(HostValue::scalar(off));
+        inputs.push(HostValue::scalar(off));
+        inputs.push(HostValue::scalar(0.0));
+        exe.run(&inputs).unwrap()[0].as_f32().unwrap().data()[0]
+    };
+
+    let base = run(&params);
+    let mut rotated = params.clone();
+    let mut rng = osp::util::rng::Pcg::new(33, 0);
+    let q = osp::tensor::linalg::random_orthogonal(m.model.d_model,
+                                                   &mut rng);
+    osp::quant::rotate::apply_residual_rotation(
+        m.params(arch).unwrap(), &mut rotated, &q).unwrap();
+    let rot = run(&rotated);
+    let rel = (base - rot).abs() / base.abs();
+    assert!(rel < 2e-3, "rotation not invariant: {base} vs {rot}");
+}

@@ -1,0 +1,169 @@
+//! Integration: load real artifacts through the manifest-driven runtime,
+//! execute them on the PJRT CPU client, and check the numerics end to
+//! end (python AOT -> HLO text -> rust compile -> execute).
+//!
+//! All shapes come from the manifest, so these tests pass under any
+//! preset (`make artifacts OSP_PRESET=tiny|small|e2e`).
+
+mod common;
+
+use common::{engine_or_skip, init_params, tokens_for};
+
+use osp::runtime::HostValue;
+use osp::tensor::linalg;
+use osp::tensor::stats::excess_kurtosis;
+
+#[test]
+fn ns_artifact_matches_rust_ns() {
+    let Some(eng) = engine_or_skip() else { return };
+    // Pick any ns_* artifact and compare against the in-tree NS.
+    let name = eng
+        .manifest()
+        .artifacts
+        .keys()
+        .find(|n| n.starts_with("ns_"))
+        .expect("no ns_* artifact")
+        .clone();
+    let exe = eng.load(&name).unwrap();
+    let shape = exe.spec.inputs[0].shape.clone();
+    let mut rng = osp::util::rng::Pcg::new(42, 0);
+    let mut g = osp::tensor::Tensor::zeros(&shape);
+    rng.fill_normal(g.data_mut(), 1.0);
+
+    let out = exe.run(&[HostValue::F32(g.clone())]).unwrap();
+    let got = out[0].as_f32().unwrap();
+    let want = linalg::ns_orthogonalize(&g, 5);
+    osp::util::prop::all_close(got.data(), want.data(), 5e-3)
+        .expect("ns artifact vs rust ns");
+}
+
+#[test]
+fn init_evalq_roundtrip_and_quant_degrades() {
+    let Some(eng) = engine_or_skip() else { return };
+    let arch = "rmsnorm_plain";
+    let params = init_params(&eng, arch, 7);
+    let m = eng.manifest();
+
+    let evalq = eng.load(&format!("evalq_{arch}")).unwrap();
+    let toks = tokens_for(&eng, m.batch_eval, 123);
+
+    let mut run = |a_lv: f32, kv_lv: f32, had: f32| -> (f32, f32) {
+        let mut inputs: Vec<HostValue> =
+            params.iter().cloned().map(HostValue::F32).collect();
+        inputs.push(toks.clone());
+        inputs.push(HostValue::scalar(a_lv));
+        inputs.push(HostValue::scalar(kv_lv));
+        inputs.push(HostValue::scalar(had));
+        let out = evalq.run(&inputs).unwrap();
+        let nll = out[0].as_f32().unwrap().data()[0];
+        let count = out[1].as_f32().unwrap().data()[0];
+        (nll, count)
+    };
+
+    let off = (1u32 << 20) as f32;
+    let (nll_fp, count) = run(off, off, 0.0);
+    assert!(count > 0.0);
+    let ppl_fp = (nll_fp / count).exp();
+    // Random init: perplexity near vocab size.
+    let v = m.model.vocab_size as f32;
+    assert!(ppl_fp > v * 0.3 && ppl_fp < v * 3.0, "ppl {ppl_fp} vocab {v}");
+
+    // 4-bit activations must not *improve* the loss.
+    let (nll_q, _) = run(7.0, 7.0, 0.0);
+    assert!(nll_q >= nll_fp * 0.99, "quant improved nll?! {nll_q} {nll_fp}");
+}
+
+#[test]
+fn train_step_reduces_loss_and_reports_kurtosis() {
+    let Some(eng) = engine_or_skip() else { return };
+    let arch = "rmsnorm_plain";
+    let m = eng.manifest();
+    let opt = "adam";
+    let train = eng.load(&format!("train_{opt}_{arch}")).unwrap();
+
+    let mut params = init_params(&eng, arch, 3);
+    let mut opt_state = osp::runtime::init_opt_state(
+        m.opt_leaves(arch, opt).unwrap());
+
+    let n_p = params.len();
+    let n_o = opt_state.len();
+    let toks = tokens_for(&eng, m.batch_train, 55);
+
+    let mut losses = Vec::new();
+    for _ in 0..3 {
+        let mut inputs: Vec<HostValue> =
+            params.iter().cloned().map(HostValue::F32).collect();
+        inputs.extend(opt_state.iter().cloned().map(HostValue::F32));
+        inputs.push(toks.clone());
+        inputs.push(HostValue::scalar(1e-3));
+        let out = train.run(&inputs).unwrap();
+        params = out[..n_p]
+            .iter()
+            .map(|v| v.as_f32().unwrap().clone())
+            .collect();
+        opt_state = out[n_p..n_p + n_o]
+            .iter()
+            .map(|v| v.as_f32().unwrap().clone())
+            .collect();
+        let loss = out[n_p + n_o].as_f32().unwrap().data()[0];
+        let kurt = out[n_p + n_o + 1].as_f32().unwrap();
+        assert_eq!(kurt.len(), 2 * m.model.n_layers);
+        assert!(loss.is_finite());
+        losses.push(loss);
+    }
+    // Same batch re-fed: loss must drop monotonically-ish.
+    assert!(losses[2] < losses[0],
+            "loss did not decrease: {losses:?}");
+    // Step counter advanced.
+    let step_idx = m
+        .opt_leaves(arch, opt)
+        .unwrap()
+        .iter()
+        .position(|l| l.name == "step")
+        .unwrap();
+    assert_eq!(opt_state[step_idx].data()[0], 3.0);
+}
+
+#[test]
+fn probe_artifact_emits_activation_tensors() {
+    let Some(eng) = engine_or_skip() else { return };
+    let arch = "ssnorm_embproj";
+    let m = eng.manifest();
+    let probe = eng.load(&format!("probe_{arch}")).unwrap();
+    let params = init_params(&eng, arch, 11);
+    let mut inputs: Vec<HostValue> =
+        params.into_iter().map(HostValue::F32).collect();
+    inputs.push(tokens_for(&eng, m.batch_probe, 9));
+    let out = probe.run(&inputs).unwrap();
+    // kurt, mhsa_in, ffn_in, q_mag, k_mag, attn_logits
+    assert_eq!(out.len(), 6);
+    let mhsa_in = out[1].as_f32().unwrap();
+    assert_eq!(mhsa_in.shape()[0], m.probe_layers.len());
+    // At random init the residual stream is approximately gaussian.
+    let k = excess_kurtosis(mhsa_in.data());
+    assert!(k.abs() < 30.0, "init kurtosis implausible: {k}");
+    let logits = out[5].as_f32().unwrap();
+    assert_eq!(logits.shape().len(), 5);
+}
+
+#[test]
+fn grad_artifact_matches_train_direction() {
+    let Some(eng) = engine_or_skip() else { return };
+    let arch = "rmsnorm_plain";
+    let m = eng.manifest();
+    let grad = eng.load(&format!("grad_{arch}")).unwrap();
+    let params = init_params(&eng, arch, 3);
+    let mut inputs: Vec<HostValue> =
+        params.iter().cloned().map(HostValue::F32).collect();
+    let toks = tokens_for(&eng, m.batch_train, 55);
+    inputs.push(toks);
+    let out = grad.run(&inputs).unwrap();
+    let n_p = params.len();
+    assert_eq!(out.len(), n_p + 2);
+    // Gradients finite and not all-zero.
+    let gnorm: f32 = out[..n_p]
+        .iter()
+        .map(|g| g.as_f32().unwrap().frobenius_norm())
+        .sum();
+    assert!(gnorm.is_finite() && gnorm > 1e-4, "grad norm {gnorm}");
+}
