@@ -4,6 +4,12 @@
 //! lines of user code.
 //!
 //!   make artifacts && cargo run --release --example quickstart
+//!
+//! Host-side kernels (Newton-Schulz, rotations, GPTQ, kurtosis) run on
+//! the shared parallel kernel layer (rust/DESIGN.md §6). `OSP_THREADS`
+//! sets its worker count — e.g. `OSP_THREADS=8 cargo run --release
+//! --example quickstart`; `OSP_THREADS=1` forces serial execution, and
+//! the default is the host's available parallelism (capped at 16).
 
 use anyhow::Result;
 

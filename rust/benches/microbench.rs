@@ -1,12 +1,19 @@
 //! Microbenchmarks of the L3 substrates (§Perf): host linalg (the
 //! disaggregated-Muon outer loop), quantization kernels, ring all-reduce,
 //! the data pipeline, and raw executable dispatch overhead.
+//!
+//! The `serial` rows pin the single-thread baseline; the `par(N)` rows
+//! run the same kernel on the shared pool (`N` = `OSP_THREADS`, or the
+//! host's available parallelism capped at 16 when unset). Compare
+//! `OSP_THREADS=1` vs `OSP_THREADS=4` runs to see the speedup the
+//! parallel kernel layer (DESIGN.md §6) buys.
 
 use osp::bench::{bench, Table};
 use osp::coordinator::dp::ring_all_reduce;
 use osp::data::{Split, TokenStream};
 use osp::quant::rtn;
 use osp::tensor::linalg;
+use osp::tensor::par;
 use osp::tensor::Tensor;
 use osp::util::rng::Pcg;
 
@@ -17,28 +24,51 @@ fn randn(shape: &[usize], seed: u64) -> Tensor {
     t
 }
 
+fn gflops(n: usize, secs: f64) -> String {
+    format!("{:.2} GFLOP/s", 2.0 * (n as f64).powi(3) / secs / 1e9)
+}
+
 fn main() -> anyhow::Result<()> {
+    let nw = par::configured_threads();
     let mut table = Table::new(
-        "L3 microbenchmarks",
+        &format!("L3 microbenchmarks (OSP_THREADS={nw})"),
         &["op", "size", "mean (ms)", "throughput"]);
 
-    let a = randn(&[256, 256], 1);
-    let b = randn(&[256, 256], 2);
-    let t = bench(2, 10, || {
-        std::hint::black_box(linalg::matmul(&a, &b));
-    });
-    table.row(vec!["matmul".into(), "256x256".into(),
-                   format!("{:.2}", t.mean_secs * 1e3),
-                   format!("{:.2} GFLOP/s",
-                           2.0 * 256f64.powi(3) / t.mean_secs / 1e9)]);
+    // Matmul: serial baseline vs shared-pool dispatch at the sizes the
+    // Muon outer loop and rotations actually see.
+    for n in [256usize, 512, 1024] {
+        let a = randn(&[n, n], 1);
+        let b = randn(&[n, n], 2);
+        let iters = if n >= 1024 { 3 } else { 10 };
+        let t = bench(1, iters, || {
+            std::hint::black_box(par::matmul_with(None, &a, &b));
+        });
+        table.row(vec!["matmul serial".into(), format!("{n}x{n}"),
+                       format!("{:.2}", t.mean_secs * 1e3),
+                       gflops(n, t.mean_secs)]);
+        let t = bench(1, iters, || {
+            std::hint::black_box(
+                par::matmul_with(par::shared_pool(), &a, &b));
+        });
+        table.row(vec![format!("matmul par({nw})"), format!("{n}x{n}"),
+                       format!("{:.2}", t.mean_secs * 1e3),
+                       gflops(n, t.mean_secs)]);
+    }
 
-    let g = randn(&[256, 256], 3);
-    let t = bench(1, 5, || {
-        std::hint::black_box(linalg::ns_orthogonalize(&g, 5));
-    });
-    table.row(vec!["newton_schulz(5)".into(), "256x256".into(),
-                   format!("{:.2}", t.mean_secs * 1e3),
-                   format!("{:.0} mat/s", t.per_sec())]);
+    // Newton-Schulz: the disaggregated-Muon hot loop. The public entry
+    // point dispatches through the shared pool, so OSP_THREADS governs
+    // it directly (run with OSP_THREADS=1 for the serial baseline).
+    for (n, steps, iters) in [(256usize, 5usize, 5usize), (512, 5, 3),
+                              (1024, 2, 1)] {
+        let g = randn(&[n, n], 3);
+        let label = format!("newton_schulz({steps})");
+        let t = bench(if iters > 1 { 1 } else { 0 }, iters, || {
+            std::hint::black_box(linalg::ns_orthogonalize(&g, steps));
+        });
+        table.row(vec![label, format!("{n}x{n} par({nw})"),
+                       format!("{:.2}", t.mean_secs * 1e3),
+                       format!("{:.1} mat/s", t.per_sec())]);
+    }
 
     let w = randn(&[512, 512], 4);
     let t = bench(1, 10, || {

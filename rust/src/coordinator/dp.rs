@@ -10,6 +10,7 @@
 
 use std::sync::Arc;
 
+use crate::tensor::par;
 use crate::util::threadpool::BoundedChannel;
 
 /// Ring all-reduce (average) over `parts`: each element is one rank's
@@ -63,9 +64,10 @@ pub fn ring_all_reduce(parts: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
                     .map_err(|_| ()).expect("ring send");
                 let (c, chunk) = rx.recv().expect("ring recv");
                 let (b0, _b1) = (bounds[c], bounds[c + 1]);
-                for (i, v) in chunk.iter().enumerate() {
-                    data[b0 + i] += v;
-                }
+                // Accumulate hop: element-wise, so the shared-pool path
+                // is exact for any worker count (rank threads are plain
+                // OS threads, never pool workers, so this may fan out).
+                par::add_assign(&mut data[b0..b0 + chunk.len()], &chunk);
             }
             // All-gather: K-1 hops; rank r now owns the fully reduced
             // chunk (r+1) mod K.
@@ -78,11 +80,8 @@ pub fn ring_all_reduce(parts: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
                 let (b0, _b1) = (bounds[c], bounds[c + 1]);
                 data[b0..b0 + chunk.len()].copy_from_slice(&chunk);
             }
-            // Average.
-            let inv = 1.0 / k as f32;
-            for v in data.iter_mut() {
-                *v *= inv;
-            }
+            // Average (parallel element-wise scale when large).
+            par::scale_in_place(&mut data, 1.0 / k as f32);
             data
         }));
     }

@@ -9,7 +9,7 @@ use anyhow::Result;
 
 use crate::runtime::manifest::ParamSpec;
 use crate::tensor::linalg;
-use crate::tensor::Tensor;
+use crate::tensor::{par, Tensor};
 
 pub const ADAM_B1: f32 = 0.9;
 pub const ADAM_B2: f32 = 0.95;
@@ -89,11 +89,15 @@ impl HostOpt {
             adam_m,
             adam_v,
             step: 0,
+            // Host Newton-Schulz path: one scatter job per Muon leaf on
+            // the shared pool. With a single leaf the map stays on the
+            // caller thread and the inner matmuls parallelize instead
+            // (the kernels' nested-dispatch guard makes the two
+            // arrangements mutually exclusive).
             ns_fn: Box::new(|jobs| {
-                Ok(jobs
-                    .iter()
-                    .map(|(i, g)| (*i, linalg::ns_orthogonalize(g, NS_STEPS)))
-                    .collect())
+                Ok(par::par_map(par::active_pool(), jobs, |_, (i, g)| {
+                    (*i, linalg::ns_orthogonalize(g, NS_STEPS))
+                }))
             }),
         }
     }

@@ -10,7 +10,7 @@
 use anyhow::Result;
 
 use crate::runtime::{Engine, HostValue};
-use crate::tensor::stats;
+use crate::tensor::{par, stats};
 use crate::tensor::Tensor;
 
 /// Per-head sink diagnostics for one probed layer.
@@ -68,10 +68,17 @@ pub fn analyze(engine: &Engine, arch: &str, params: &[Tensor],
     let k_mag = out[4].as_f32()?;
     let attn_logits = out[5].as_f32()?;
 
-    let mut heads = Vec::new();
+    // Layer x head cells are independent reads of the probe captures:
+    // scatter one job per head over the shared pool, collecting in
+    // (layer, head) order.
     let lstride = b * nh * s * s;
-    for (pi, &layer) in probe_layers.iter().enumerate() {
-        for h in 0..nh {
+    let cells: Vec<(usize, usize, usize)> = probe_layers
+        .iter()
+        .enumerate()
+        .flat_map(|(pi, &layer)| (0..nh).map(move |h| (pi, layer, h)))
+        .collect();
+    let heads = par::par_map(
+        par::active_pool(), &cells, |_, &(pi, layer, h)| {
             let mut sink_mass = 0.0f64;
             let mut sink_logits = Vec::new();
             let mut other_logits = Vec::new();
@@ -93,16 +100,15 @@ pub fn analyze(engine: &Engine, arch: &str, params: &[Tensor],
             let n_q = (b * (s - 1)) as f64;
             let sm = stats::moments(&sink_logits);
             let om = stats::moments(&other_logits);
-            heads.push(HeadSink {
+            HeadSink {
                 layer,
                 head: h,
                 sink_mass: sink_mass / n_q,
                 sink_logit_mean: sm.mean,
                 other_logit_mean: om.mean,
                 other_logit_std: om.var.sqrt(),
-            });
-        }
-    }
+            }
+        });
 
     // q/k channel concentration: max |channel| / mean |channel|.
     let mut conc = Vec::new();

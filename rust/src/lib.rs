@@ -7,11 +7,12 @@
 //! evaluation harness that drive AOT-compiled XLA executables (built once
 //! by `make artifacts` from `python/compile/`).
 //!
-//! Module map (see DESIGN.md §3):
+//! Module map (see rust/DESIGN.md §3):
 //! * [`util`] — hand-built substrates (JSON, RNG, CLI, threadpool,
 //!   property testing); the offline build vendors only the `xla` crate.
 //! * [`tensor`] — dense f32 tensor/linalg library (matmul, QR, Cholesky,
-//!   Hadamard, moment statistics).
+//!   Hadamard, moment statistics) plus the shared parallel kernel layer
+//!   ([`tensor::par`], `OSP_THREADS` workers — DESIGN.md §6).
 //! * [`runtime`] — PJRT client wrapper; manifest-driven artifact loading.
 //! * [`data`] — synthetic grammar corpus, sharding, batching.
 //! * [`coordinator`] — the training control plane (fused + disaggregated

@@ -32,6 +32,9 @@ pub fn absorb_embproj(specs: &[ParamSpec], params: &[Tensor])
     let embed = &params[idx("embed")?];
     let unembed = &params[idx("unembed")?];
 
+    // Each product row-blocks across the whole shared pool inside
+    // matmul; running them back-to-back beats a 2-job scatter, which
+    // would pin each product to a single worker (nested-dispatch guard).
     let new_embed = matmul(embed, p_in);
     let new_unembed = matmul(p_out, unembed);
 

@@ -9,7 +9,7 @@
 use anyhow::{anyhow, Result};
 
 use crate::tensor::linalg::{cholesky, spd_inverse, transpose};
-use crate::tensor::Tensor;
+use crate::tensor::{par, Tensor};
 
 use super::rtn;
 
@@ -72,16 +72,37 @@ pub fn gptq_quantize(w: &Tensor, h: &Tensor, bits: u32) -> Result<Tensor> {
             out.set2(i, j, q);
             err[j] = (v - q) / uii;
         }
-        // Propagate to later rows: w[r,:] -= U[i,r] * err.
-        for r in i + 1..rows {
-            let uir = u.at2(i, r);
-            if uir == 0.0 {
-                continue;
+        // Propagate to later rows: w[r,:] -= U[i,r] * err. The rank-1
+        // update is independent per row — chunk the trailing block over
+        // the shared pool when large (row arithmetic is identical in
+        // both paths, so results match the serial loop bitwise).
+        let rows_left = rows - i - 1;
+        if rows_left == 0 || cols == 0 {
+            continue;
+        }
+        let u_row = u.row(i);
+        let tail = &mut work.data_mut()[(i + 1) * cols..];
+        // One body for both paths (bitwise parity by construction):
+        // `r0` is the absolute index of the chunk's first row.
+        let update = |r0: usize, chunk: &mut [f32]| {
+            for (rr, row) in chunk.chunks_mut(cols).enumerate() {
+                let uir = u_row[r0 + rr];
+                if uir == 0.0 {
+                    continue;
+                }
+                for (wv, e) in row.iter_mut().zip(&err) {
+                    *wv -= uir * e;
+                }
             }
-            let row = work.row_mut(r);
-            for (j, e) in err.iter().enumerate() {
-                row[j] -= uir * e;
+        };
+        match par::pool_for_ops(rows_left * cols) {
+            Some(p) if rows_left > 1 => {
+                let rpb = rows_left.div_ceil(p.n_workers() * 4).max(1);
+                p.scatter_chunks(tail, rpb * cols, |ci, chunk| {
+                    update(i + 1 + ci * rpb, chunk)
+                });
             }
+            _ => update(i + 1, tail),
         }
     }
     Ok(out)

@@ -17,7 +17,7 @@ use anyhow::{Context, Result};
 
 use crate::runtime::Engine;
 use crate::tensor::linalg;
-use crate::tensor::Tensor;
+use crate::tensor::{par, Tensor};
 use crate::util::rng::Pcg;
 
 pub use rotate::Rotation;
@@ -123,15 +123,40 @@ pub fn prepare(engine: &Engine, arch: &str, params: &[Tensor],
     } else {
         None
     };
-    for (s, p) in specs.iter().zip(params.iter_mut()) {
-        if p.shape().len() != 2 || s.kind == "norm" {
-            continue;
+    // Each 2-D param quantizes independently: scatter one job per param
+    // over the shared pool (inner kernels fall back to serial on the
+    // workers). The first error, in any param, wins deterministically
+    // only in *whether* we fail — the message may name any failing
+    // param; still-queued jobs then skip their (useless) work.
+    let failed = std::sync::atomic::AtomicBool::new(false);
+    let first_err: std::sync::Mutex<Option<anyhow::Error>> =
+        std::sync::Mutex::new(None);
+    par::par_map_mut(par::active_pool(), &mut params, |i, p| {
+        use std::sync::atomic::Ordering;
+        let s = &specs[i];
+        if failed.load(Ordering::Relaxed)
+            || p.shape().len() != 2
+            || s.kind == "norm"
+        {
+            return;
         }
-        *p = match hessians.as_ref().and_then(|h| h.get(&s.name)) {
-            Some(h) => gptq::gptq_quantize(p, h, cfg.w_bits)
-                .with_context(|| format!("GPTQ on {}", s.name))?,
-            None => rtn::quantize_per_channel(p, cfg.w_bits),
-        };
+        match hessians.as_ref().and_then(|h| h.get(&s.name)) {
+            Some(h) => match gptq::gptq_quantize(p, h, cfg.w_bits) {
+                Ok(q) => *p = q,
+                Err(e) => {
+                    failed.store(true, Ordering::Relaxed);
+                    let mut slot = first_err.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(e.context(format!("GPTQ on {}",
+                                                       s.name)));
+                    }
+                }
+            },
+            None => *p = rtn::quantize_per_channel(p, cfg.w_bits),
+        }
+    });
+    if let Some(e) = first_err.into_inner().unwrap() {
+        return Err(e);
     }
 
     Ok(QuantizedModel {

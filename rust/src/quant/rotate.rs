@@ -17,7 +17,7 @@ use anyhow::{anyhow, Result};
 
 use crate::runtime::manifest::ParamSpec;
 use crate::tensor::linalg::{self, matmul, transpose};
-use crate::tensor::Tensor;
+use crate::tensor::{par, Tensor};
 use crate::util::rng::Pcg;
 
 use super::rtn;
@@ -66,31 +66,35 @@ pub fn fold_norm_scales(specs: &[ParamSpec], params: &mut [Tensor]) {
 
 /// Apply the residual-stream rotation Q (d_model x d_model, orthogonal).
 /// Caller must fold norm scales first (RMSNorm arches) for exactness.
+/// The per-param rotations are independent 2-D matmuls, so they scatter
+/// over the shared pool (one job per param; each job's matmul is the
+/// serial kernel, giving results identical to the sequential loop).
 pub fn apply_residual_rotation(specs: &[ParamSpec], params: &mut [Tensor],
                                q: &Tensor) -> Result<()> {
+    let short_of = |s: &ParamSpec| -> String {
+        s.name.rsplit('.').next().unwrap_or(&s.name).to_string()
+    };
+    if specs.iter().any(|s| {
+        matches!(short_of(s).as_str(), "embproj_in" | "embproj_out")
+    }) {
+        return Err(anyhow!("rotate after absorbing embproj (quant::absorb)"));
+    }
     let qt = transpose(q);
-    for (s, p) in specs.iter().zip(params.iter_mut()) {
-        let short = s.name.rsplit('.').next().unwrap_or(&s.name);
-        match short {
+    par::par_map_mut(par::active_pool(), params, |i, p| {
+        match short_of(&specs[i]).as_str() {
             // Consumers of the residual stream: W' = Q^T W.
             "wq" | "wk" | "wv" | "w_gate" | "w_up" | "unembed" => {
                 *p = matmul(&qt, p);
             }
-            // Producers into the residual stream: W' = W Q.
-            "wo" | "w_down" => {
+            // Producers into the residual stream: W' = W Q. The
+            // embedding emits residual vectors, so its rows rotate the
+            // same way.
+            "wo" | "w_down" | "embed" => {
                 *p = matmul(p, q);
-            }
-            // The embedding emits residual vectors: rows rotate.
-            "embed" => {
-                *p = matmul(p, q);
-            }
-            "embproj_in" | "embproj_out" => {
-                return Err(anyhow!(
-                    "rotate after absorbing embproj (quant::absorb)"));
             }
             _ => {} // norm scalars / folded scales
         }
-    }
+    });
     Ok(())
 }
 
@@ -99,15 +103,16 @@ pub fn apply_residual_rotation(specs: &[ParamSpec], params: &mut [Tensor],
 /// invariance needs w_down' = H w_down (H symmetric involution).
 pub fn prerotate_w_down_hadamard(specs: &[ParamSpec],
                                  params: &mut [Tensor]) {
-    for (s, p) in specs.iter().zip(params.iter_mut()) {
-        if s.name.ends_with("w_down") {
+    // One scatter job per w_down (layers are independent).
+    par::par_map_mut(par::active_pool(), params, |i, p| {
+        if specs[i].name.ends_with("w_down") {
             // H W: rows mix => apply the blocked FWHT to columns, i.e.
             // transpose, row-transform, transpose back.
             let t = transpose(p);
             let rotated = linalg::hadamard_rows(&t);
             *p = transpose(&rotated);
         }
-    }
+    });
 }
 
 /// Rotation selection for Table 4.
@@ -132,13 +137,18 @@ pub fn rotation_objective(specs: &[ParamSpec], params: &[Tensor],
     fold_norm_scales(&specs_v, &mut trial);
     apply_residual_rotation(&mut specs_v.clone(), &mut trial, q).unwrap();
     let _ = &mut specs_v;
-    let mut total = 0.0;
-    for (s, w) in specs.iter().zip(&trial) {
-        if w.shape().len() == 2 && s.kind != "norm" {
-            total += rtn::quant_mse(w, bits) * w.len() as f64;
-        }
-    }
-    total
+    // Per-param MSEs are independent: scatter, then combine in param
+    // order (deterministic — the sum order never depends on scheduling).
+    let quantizable: Vec<&Tensor> = specs
+        .iter()
+        .zip(&trial)
+        .filter(|(s, w)| w.shape().len() == 2 && s.kind != "norm")
+        .map(|(_, w)| w)
+        .collect();
+    par::par_map(par::active_pool(), &quantizable,
+                 |_, &w| rtn::quant_mse(w, bits) * w.len() as f64)
+        .into_iter()
+        .sum()
 }
 
 /// Learn a rotation by best-of-K random starts + greedy Givens refinement.

@@ -1,6 +1,8 @@
-//! Paper-row regeneration: one function per table/figure (DESIGN.md §5
-//! experiment index). Used by the `osp repro` CLI, the examples, and the
-//! bench binaries (quick variants).
+//! Paper-row regeneration: one function per table/figure (rust/DESIGN.md
+//! §5 "Quantization pipeline and paper-row regeneration"). Used by the
+//! `osp repro` CLI, the examples, and the bench binaries (quick
+//! variants). Activation-kurtosis scans run on the shared parallel
+//! reduction (`tensor::stats` over `tensor::par`, DESIGN.md §6).
 
 use std::path::{Path, PathBuf};
 

@@ -5,34 +5,81 @@
 //! These back GPTQ (Cholesky of the damped Hessian), QuaRot-lite /
 //! SpinQuant-lite (orthogonal rotations), EmbProj absorption, and the
 //! disaggregated Muon outer loop.
+//!
+//! The public entry points dispatch serial-vs-parallel by size: above
+//! [`par::PAR_MIN_OPS`] scalar operations they run row-block partitioned
+//! on the shared pool (see [`super::par`]), with bit-exact parity to the
+//! serial path for any worker count.
 
-use super::Tensor;
+use super::{par, Tensor};
 use crate::util::rng::Pcg;
 
-/// Blocked matmul C = A @ B. Panics on shape mismatch.
-pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
-    let (m, k) = (a.shape()[0], a.shape()[1]);
-    let (k2, n) = (b.shape()[0], b.shape()[1]);
-    assert_eq!(k, k2, "matmul {:?} @ {:?}", a.shape(), b.shape());
-    let mut c = Tensor::zeros(&[m, n]);
-    // i-k-j loop order: streams B rows, accumulates into C rows — cache
-    // friendly for row-major without an explicit transpose.
-    let (ad, bd) = (a.data(), b.data());
-    let cd = c.data_mut();
-    for i in 0..m {
-        let arow = &ad[i * k..(i + 1) * k];
-        let crow = &mut cd[i * n..(i + 1) * n];
-        for (kk, &aik) in arow.iter().enumerate() {
-            if aik == 0.0 {
-                continue;
-            }
-            let brow = &bd[kk * n..(kk + 1) * n];
-            for (cv, bv) in crow.iter_mut().zip(brow) {
-                *cv += aik * bv;
-            }
+/// One output row of C = A @ B: crow += arow @ B, in i-k-j order
+/// (streams B rows, accumulates into the C row — cache friendly for
+/// row-major without an explicit transpose). Branch-free over the values
+/// of A so throughput is independent of sparsity; shared by the serial
+/// and parallel paths, which is what makes them bit-identical.
+#[inline]
+pub(crate) fn matmul_row(arow: &[f32], bd: &[f32], n: usize,
+                         crow: &mut [f32]) {
+    for (kk, &aik) in arow.iter().enumerate() {
+        let brow = &bd[kk * n..(kk + 1) * n];
+        for (cv, bv) in crow.iter_mut().zip(brow) {
+            *cv += aik * bv;
         }
     }
-    c
+}
+
+/// One output row of C = A @ B^T: crow[j] = arow · B[j, :], with B
+/// row-major [n, k]. Accumulation order over k matches [`matmul_row`]'s,
+/// so `matmul_transb(a, b)` is bit-identical to
+/// `matmul(a, &transpose(b))`.
+#[inline]
+pub(crate) fn matmul_transb_row(arow: &[f32], bd: &[f32], k: usize,
+                                crow: &mut [f32]) {
+    for (j, cv) in crow.iter_mut().enumerate() {
+        let brow = &bd[j * k..(j + 1) * k];
+        *cv = arow.iter().zip(brow).map(|(x, y)| x * y).sum();
+    }
+}
+
+/// In-place normalized blocked FWHT of one row (block size `blk`, a
+/// power of two; `scale` = blk^-1/2).
+#[inline]
+pub(crate) fn hadamard_row(row: &mut [f32], blk: usize, scale: f32) {
+    for chunk in row.chunks_mut(blk) {
+        let mut h = 1;
+        while h < blk {
+            let mut i = 0;
+            while i < blk {
+                for j in i..i + h {
+                    let a = chunk[j];
+                    let b = chunk[j + h];
+                    chunk[j] = a + b;
+                    chunk[j + h] = a - b;
+                }
+                i += 2 * h;
+            }
+            h *= 2;
+        }
+        for v in chunk.iter_mut() {
+            *v *= scale;
+        }
+    }
+}
+
+/// Blocked matmul C = A @ B. Panics on shape mismatch. Row-block
+/// parallel on the shared pool above the size threshold.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let ops = a.shape()[0] * a.shape()[1] * b.shape()[1];
+    par::matmul_with(par::pool_for_ops(ops), a, b)
+}
+
+/// C = A @ B^T for A [m, k], B [n, k]: the Gram-matrix form used by the
+/// Newton-Schulz iterations; avoids materializing the transpose.
+pub fn matmul_transb(a: &Tensor, b: &Tensor) -> Tensor {
+    let ops = a.shape()[0] * a.shape()[1] * b.shape()[0];
+    par::matmul_transb_with(par::pool_for_ops(ops), a, b)
 }
 
 pub fn transpose(a: &Tensor) -> Tensor {
@@ -47,11 +94,10 @@ pub fn transpose(a: &Tensor) -> Tensor {
     t
 }
 
-/// y = A @ x for a vector x.
+/// y = A @ x for a vector x (row-parallel above the size threshold).
 pub fn matvec(a: &Tensor, x: &[f32]) -> Vec<f32> {
-    let (m, n) = (a.shape()[0], a.shape()[1]);
-    assert_eq!(n, x.len());
-    (0..m).map(|i| a.row(i).iter().zip(x).map(|(p, q)| p * q).sum()).collect()
+    let ops = a.shape()[0] * a.shape()[1];
+    par::matvec_with(par::pool_for_ops(ops), a, x)
 }
 
 /// Cholesky factorization A = L L^T for symmetric positive definite A.
@@ -228,7 +274,7 @@ pub fn polar(g: &Tensor, steps: usize) -> Tensor {
     let norm = x.frobenius_norm() + 1e-7;
     x = x.scale(1.0 / norm);
     for _ in 0..steps {
-        let xxt = matmul(&x, &transpose(&x));
+        let xxt = matmul_transb(&x, &x);
         let correction = matmul(&xxt, &x);
         let mut next = x.clone().scale(1.5);
         next.axpy(-0.5, &correction);
@@ -254,7 +300,7 @@ pub fn ns_orthogonalize(g: &Tensor, steps: usize) -> Tensor {
     let norm = x.frobenius_norm() + 1e-7;
     x = x.scale(1.0 / norm);
     for _ in 0..steps {
-        let gram = matmul(&x, &transpose(&x));
+        let gram = matmul_transb(&x, &x);
         let gram2 = matmul(&gram, &gram);
         let mut poly = gram.scale(B);
         poly.axpy(C, &gram2);
@@ -278,36 +324,10 @@ pub fn pow2_block(n: usize) -> usize {
 /// Normalized blocked fast Walsh-Hadamard transform along the last axis
 /// of a [rows, n] tensor; the involution used for online FFN rotation and
 /// QuaRot-lite weight pre-rotation. Matches `ref.hadamard_ref`.
+/// Row-parallel on the shared pool above the size threshold.
 pub fn hadamard_rows(x: &Tensor) -> Tensor {
-    let n = x.cols();
-    let rows = x.rows();
-    let blk = pow2_block(n);
-    let scale = 1.0 / (blk as f32).sqrt();
-    let mut out = x.clone();
-    let data = out.data_mut();
-    for r in 0..rows {
-        let row = &mut data[r * n..(r + 1) * n];
-        for chunk in row.chunks_mut(blk) {
-            let mut h = 1;
-            while h < blk {
-                let mut i = 0;
-                while i < blk {
-                    for j in i..i + h {
-                        let a = chunk[j];
-                        let b = chunk[j + h];
-                        chunk[j] = a + b;
-                        chunk[j + h] = a - b;
-                    }
-                    i += 2 * h;
-                }
-                h *= 2;
-            }
-            for v in chunk.iter_mut() {
-                *v *= scale;
-            }
-        }
-    }
-    out
+    let ops = x.rows() * x.cols();
+    par::hadamard_rows_with(par::pool_for_ops(ops), x)
 }
 
 #[cfg(test)]
@@ -334,6 +354,29 @@ mod tests {
         let i = Tensor::eye(5);
         let c = matmul(&a, &i);
         crate::util::prop::all_close(c.data(), a.data(), 1e-6).unwrap();
+    }
+
+    #[test]
+    fn matmul_transb_is_matmul_with_transpose() {
+        let a = randn(&[6, 10], 21);
+        let b = randn(&[4, 10], 22);
+        let want = matmul(&a, &transpose(&b));
+        let got = matmul_transb(&a, &b);
+        // Same accumulation order per element: bit-exact, not just close.
+        assert_eq!(want.data(), got.data());
+    }
+
+    #[test]
+    fn matmul_zero_rows_are_exact() {
+        // The dense inner loop is branch-free over A's values; zeros in
+        // A must still produce exact zero contributions.
+        let mut a = randn(&[5, 7], 23);
+        for v in a.row_mut(2) {
+            *v = 0.0;
+        }
+        let b = randn(&[7, 3], 24);
+        let c = matmul(&a, &b);
+        assert_eq!(c.row(2), &[0.0, 0.0, 0.0]);
     }
 
     #[test]

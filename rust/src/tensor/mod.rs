@@ -6,6 +6,7 @@
 //! shape-checked operations, no external dependencies.
 
 pub mod linalg;
+pub mod par;
 pub mod stats;
 
 use std::fmt;

@@ -1,0 +1,418 @@
+//! The parallel kernel layer (DESIGN.md §6): tiled kernels over a
+//! process-wide shared [`ThreadPool`].
+//!
+//! Every hot path of the reproduction — the disaggregated Muon
+//! Newton-Schulz outer loop, QuaRot/SpinQuant-lite rotations, GPTQ's
+//! Hessian pipeline, and kurtosis telemetry — bottoms out in dense,
+//! embarrassingly parallel loops. This module gives them one substrate:
+//!
+//! * a lazily-initialized shared pool sized by the `OSP_THREADS`
+//!   environment variable (default: available parallelism, capped at
+//!   [`MAX_DEFAULT_THREADS`]); `OSP_THREADS=1` disables parallelism,
+//! * row-block partitioned kernels ([`matmul_with`], [`matmul_transb_with`],
+//!   [`matvec_with`], [`hadamard_rows_with`]) plus generic scatter maps
+//!   ([`par_map`], [`par_map_mut`]) and element-wise helpers,
+//! * a worker-thread guard: kernels invoked from inside a pool job fall
+//!   back to serial automatically, so nested parallelism can never starve
+//!   the queue (see [`threadpool::on_worker_thread`]).
+//!
+//! Determinism / parity contract: each output row (or element) is
+//! computed by exactly one job with the *same* per-row arithmetic as the
+//! serial path, and partitioning never reorders accumulation within a
+//! row. Serial and parallel results are therefore bit-identical for any
+//! worker count — `rust/tests/par_properties.rs` pins this property.
+
+use std::sync::OnceLock;
+
+use crate::util::threadpool::{self, ThreadPool};
+
+use super::linalg;
+use super::Tensor;
+
+/// Default cap on the shared pool size when `OSP_THREADS` is unset: the
+/// host kernels saturate memory bandwidth well before high core counts,
+/// and the coordinator's own rank pools want headroom.
+pub const MAX_DEFAULT_THREADS: usize = 16;
+
+/// Below this many scalar operations a kernel stays serial: pool
+/// dispatch costs tens of microseconds, which only amortizes on blocks
+/// of ~10^5 operations and up.
+pub const PAR_MIN_OPS: usize = 1 << 17;
+
+static SHARED: OnceLock<Option<ThreadPool>> = OnceLock::new();
+
+/// Worker count the shared pool is (or would be) built with:
+/// `OSP_THREADS` if set to a positive integer, otherwise the host's
+/// available parallelism capped at [`MAX_DEFAULT_THREADS`].
+pub fn configured_threads() -> usize {
+    match std::env::var("OSP_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+    {
+        Some(n) if n > 0 => n,
+        _ => std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(MAX_DEFAULT_THREADS),
+    }
+}
+
+/// The process-wide shared pool, lazily initialized on first use.
+/// `None` when parallelism is disabled (`OSP_THREADS=1` or a
+/// single-core host).
+pub fn shared_pool() -> Option<&'static ThreadPool> {
+    SHARED
+        .get_or_init(|| {
+            let n = configured_threads();
+            (n > 1).then(|| ThreadPool::new(n, 4 * n.max(4)))
+        })
+        .as_ref()
+}
+
+/// The pool a kernel should use right now: the shared pool, unless the
+/// caller already runs *on* a pool worker (nested scatters would starve
+/// the queue once every worker blocks on sub-jobs).
+pub fn active_pool() -> Option<&'static ThreadPool> {
+    if threadpool::on_worker_thread() {
+        return None;
+    }
+    shared_pool()
+}
+
+/// Dispatch helper: the active pool when the job is worth parallelizing
+/// (`ops` scalar operations ≥ [`PAR_MIN_OPS`]), else `None` (serial).
+pub fn pool_for_ops(ops: usize) -> Option<&'static ThreadPool> {
+    if ops < PAR_MIN_OPS {
+        None
+    } else {
+        active_pool()
+    }
+}
+
+/// Rows per scatter block: ~4 blocks per worker balances load without
+/// drowning the queue in tiny jobs. Deterministic in (rows, workers)
+/// only; parity is unaffected because rows are independent.
+fn rows_per_block(rows: usize, n_workers: usize) -> usize {
+    rows.div_ceil(n_workers.max(1) * 4).max(1)
+}
+
+// ---- tiled kernels --------------------------------------------------------
+
+/// C = A @ B, row-block partitioned over `pool` (serial when `None`).
+/// Bit-identical to the serial path for any worker count.
+pub fn matmul_with(pool: Option<&ThreadPool>, a: &Tensor, b: &Tensor)
+                   -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul {:?} @ {:?}", a.shape(), b.shape());
+    let mut c = Tensor::zeros(&[m, n]);
+    let (ad, bd) = (a.data(), b.data());
+    match pool {
+        Some(p) if m > 1 && n > 0 => {
+            let rpb = rows_per_block(m, p.n_workers());
+            p.scatter_chunks(c.data_mut(), rpb * n, |ci, chunk| {
+                let r0 = ci * rpb;
+                for (ri, crow) in chunk.chunks_mut(n).enumerate() {
+                    let i = r0 + ri;
+                    linalg::matmul_row(&ad[i * k..(i + 1) * k], bd, n, crow);
+                }
+            });
+        }
+        _ => {
+            let cd = c.data_mut();
+            for i in 0..m {
+                linalg::matmul_row(&ad[i * k..(i + 1) * k], bd, n,
+                                   &mut cd[i * n..(i + 1) * n]);
+            }
+        }
+    }
+    c
+}
+
+/// C = A @ B^T for A [m, k], B [n, k] — the Gram/polar workhorse; reads
+/// both operands row-major with no transpose allocation.
+pub fn matmul_transb_with(pool: Option<&ThreadPool>, a: &Tensor, b: &Tensor)
+                          -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (n, k2) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "matmul_transb {:?} @ {:?}^T", a.shape(), b.shape());
+    let mut c = Tensor::zeros(&[m, n]);
+    let (ad, bd) = (a.data(), b.data());
+    match pool {
+        Some(p) if m > 1 && n > 0 => {
+            let rpb = rows_per_block(m, p.n_workers());
+            p.scatter_chunks(c.data_mut(), rpb * n, |ci, chunk| {
+                let r0 = ci * rpb;
+                for (ri, crow) in chunk.chunks_mut(n).enumerate() {
+                    let i = r0 + ri;
+                    linalg::matmul_transb_row(&ad[i * k..(i + 1) * k], bd, k,
+                                              crow);
+                }
+            });
+        }
+        _ => {
+            let cd = c.data_mut();
+            for i in 0..m {
+                linalg::matmul_transb_row(&ad[i * k..(i + 1) * k], bd, k,
+                                          &mut cd[i * n..(i + 1) * n]);
+            }
+        }
+    }
+    c
+}
+
+/// y = A @ x, row-partitioned.
+pub fn matvec_with(pool: Option<&ThreadPool>, a: &Tensor, x: &[f32])
+                   -> Vec<f32> {
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    assert_eq!(n, x.len());
+    let mut y = vec![0.0f32; m];
+    let ad = a.data();
+    let dot = |i: usize| -> f32 {
+        ad[i * n..(i + 1) * n].iter().zip(x).map(|(p, q)| p * q).sum()
+    };
+    match pool {
+        Some(p) if m > 1 => {
+            let rpb = rows_per_block(m, p.n_workers());
+            p.scatter_chunks(&mut y, rpb, |ci, chunk| {
+                let r0 = ci * rpb;
+                for (ri, out) in chunk.iter_mut().enumerate() {
+                    *out = dot(r0 + ri);
+                }
+            });
+        }
+        _ => {
+            for (i, out) in y.iter_mut().enumerate() {
+                *out = dot(i);
+            }
+        }
+    }
+    y
+}
+
+/// Blocked fast Walsh-Hadamard transform along the last axis,
+/// row-partitioned (rows are independent: bit-exact parity).
+pub fn hadamard_rows_with(pool: Option<&ThreadPool>, x: &Tensor) -> Tensor {
+    let n = x.cols();
+    let rows = x.rows();
+    let blk = linalg::pow2_block(n);
+    let scale = 1.0 / (blk as f32).sqrt();
+    let mut out = x.clone();
+    if n == 0 || rows == 0 {
+        return out;
+    }
+    match pool {
+        Some(p) if rows > 1 => {
+            let rpb = rows_per_block(rows, p.n_workers());
+            p.scatter_chunks(out.data_mut(), rpb * n, |_ci, chunk| {
+                for row in chunk.chunks_mut(n) {
+                    linalg::hadamard_row(row, blk, scale);
+                }
+            });
+        }
+        _ => {
+            for row in out.data_mut().chunks_mut(n) {
+                linalg::hadamard_row(row, blk, scale);
+            }
+        }
+    }
+    out
+}
+
+// ---- generic scatter maps -------------------------------------------------
+
+/// Map `f` over `items` on `pool` (serial when `None`), collecting
+/// results in input order. Borrow-friendly: `f` and `items` may
+/// reference the caller's stack, unlike [`ThreadPool::scatter`].
+pub fn par_map<T, R, F>(pool: Option<&ThreadPool>, items: &[T], f: F)
+                        -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    match pool {
+        Some(p) if items.len() > 1 => {
+            let mut out: Vec<Option<R>> =
+                (0..items.len()).map(|_| None).collect();
+            p.scatter_chunks(&mut out, 1, |i, slot| {
+                slot[0] = Some(f(i, &items[i]));
+            });
+            out.into_iter()
+                .map(|r| r.expect("missing par_map result"))
+                .collect()
+        }
+        _ => items.iter().enumerate().map(|(i, t)| f(i, t)).collect(),
+    }
+}
+
+/// Apply `f` to each item in place, one pool job per item (serial when
+/// `pool` is `None`). The workhorse for "quantize / rotate independent
+/// 2-D params" scatters in the quant and optimizer layers.
+pub fn par_map_mut<T, F>(pool: Option<&ThreadPool>, items: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    match pool {
+        Some(p) if items.len() > 1 => {
+            p.scatter_chunks(items, 1, |i, slot| f(i, &mut slot[0]));
+        }
+        _ => {
+            for (i, t) in items.iter_mut().enumerate() {
+                f(i, t);
+            }
+        }
+    }
+}
+
+// ---- element-wise helpers -------------------------------------------------
+
+/// dst += src, element-wise; partition-independent, so bit-exact for any
+/// worker count. Used by the ring all-reduce accumulate hop.
+pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    match pool_for_ops(dst.len()) {
+        Some(p) => {
+            let cl = dst.len().div_ceil(p.n_workers().max(1) * 4).max(1);
+            p.scatter_chunks(dst, cl, |ci, chunk| {
+                let s0 = ci * cl;
+                for (d, s) in chunk.iter_mut()
+                    .zip(&src[s0..s0 + chunk.len()])
+                {
+                    *d += s;
+                }
+            });
+        }
+        None => {
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+        }
+    }
+}
+
+/// data *= s, element-wise (the all-reduce averaging hop).
+pub fn scale_in_place(data: &mut [f32], s: f32) {
+    match pool_for_ops(data.len()) {
+        Some(p) => {
+            let cl = data.len().div_ceil(p.n_workers().max(1) * 4).max(1);
+            p.scatter_chunks(data, cl, |_ci, chunk| {
+                for v in chunk.iter_mut() {
+                    *v *= s;
+                }
+            });
+        }
+        None => {
+            for v in data.iter_mut() {
+                *v *= s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn randn(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Pcg::new(seed, 3);
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(t.data_mut(), 1.0);
+        t
+    }
+
+    #[test]
+    fn matmul_parity_small_pool() {
+        let pool = ThreadPool::new(3, 32);
+        for (m, k, n) in [(1, 5, 4), (7, 1, 3), (5, 4, 1), (13, 9, 11)] {
+            let a = randn(&[m, k], (m * 100 + k) as u64);
+            let b = randn(&[k, n], (k * 100 + n) as u64);
+            let serial = matmul_with(None, &a, &b);
+            let par = matmul_with(Some(&pool), &a, &b);
+            assert_eq!(serial.data(), par.data(), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn matmul_transb_matches_explicit_transpose() {
+        let a = randn(&[6, 9], 1);
+        let b = randn(&[5, 9], 2);
+        let want = matmul_with(None, &a, &linalg::transpose(&b));
+        let got = matmul_transb_with(None, &a, &b);
+        assert_eq!(want.data(), got.data());
+    }
+
+    #[test]
+    fn matvec_parity() {
+        let pool = ThreadPool::new(2, 16);
+        let a = randn(&[17, 13], 3);
+        let x: Vec<f32> = (0..13).map(|i| i as f32 * 0.25 - 1.0).collect();
+        assert_eq!(matvec_with(None, &a, &x),
+                   matvec_with(Some(&pool), &a, &x));
+    }
+
+    #[test]
+    fn hadamard_parity() {
+        let pool = ThreadPool::new(4, 16);
+        let x = randn(&[9, 176], 4);
+        let serial = hadamard_rows_with(None, &x);
+        let par = hadamard_rows_with(Some(&pool), &x);
+        assert_eq!(serial.data(), par.data());
+    }
+
+    #[test]
+    fn par_map_preserves_order_and_borrows() {
+        let pool = ThreadPool::new(4, 16);
+        let base = 7usize; // borrowed by the kernel
+        let items: Vec<usize> = (0..37).collect();
+        let out = par_map(Some(&pool), &items, |i, &x| x * base + i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * base + i);
+        }
+    }
+
+    #[test]
+    fn par_map_mut_touches_every_item_once() {
+        let pool = ThreadPool::new(3, 16);
+        let mut items: Vec<u32> = (0..29).collect();
+        par_map_mut(Some(&pool), &mut items, |i, v| {
+            *v += 1000 * i as u32;
+        });
+        for (i, v) in items.iter().enumerate() {
+            assert_eq!(*v, i as u32 + 1000 * i as u32);
+        }
+    }
+
+    #[test]
+    fn elementwise_helpers() {
+        let mut d: Vec<f32> = (0..300_000).map(|i| i as f32).collect();
+        let s: Vec<f32> = (0..300_000).map(|i| (i % 7) as f32).collect();
+        let mut want = d.clone();
+        for (a, b) in want.iter_mut().zip(&s) {
+            *a += b;
+        }
+        add_assign(&mut d, &s); // large enough to hit the pool path
+        assert_eq!(d, want);
+        scale_in_place(&mut d, 0.5);
+        for (a, b) in d.iter().zip(&want) {
+            assert_eq!(*a, b * 0.5);
+        }
+    }
+
+    #[test]
+    fn nested_kernels_fall_back_to_serial() {
+        // A kernel launched from a pool worker must not scatter again.
+        let pool = ThreadPool::new(2, 8);
+        let flags = par_map(Some(&pool), &[(), ()], |_i, ()| {
+            active_pool().is_none()
+        });
+        assert!(flags.iter().all(|&f| f));
+    }
+
+    #[test]
+    fn configured_threads_is_positive() {
+        assert!(configured_threads() >= 1);
+    }
+}

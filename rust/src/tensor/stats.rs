@@ -1,10 +1,17 @@
 //! Statistics on tensors: moments, excess kurtosis (the paper's outlier
 //! metric, Eq. 4), and histograms (Figures 2, 8-11).
+//!
+//! The moment reduction is *blocked*: data is reduced per fixed
+//! [`MOMENT_BLOCK`]-element block and block partials are combined in
+//! block order. Serial and parallel paths share the exact same block
+//! structure, so kurtosis telemetry is bit-identical for any worker
+//! count (pinned by `rust/tests/par_properties.rs`).
 
-use super::Tensor;
+use super::{par, Tensor};
+use crate::util::threadpool::ThreadPool;
 
-/// First four central moments in one pass (numerically stable enough in
-/// f64 accumulation for activation-scale data).
+/// First four central moments in two blocked passes (numerically stable
+/// enough in f64 accumulation for activation-scale data).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Moments {
     pub n: usize,
@@ -16,22 +23,88 @@ pub struct Moments {
     pub max: f32,
 }
 
-pub fn moments(data: &[f32]) -> Moments {
+/// Fixed reduction block size (elements). Partials are always computed
+/// per block and combined in block order — independent of worker count —
+/// which is what makes the parallel reduction deterministic.
+pub const MOMENT_BLOCK: usize = 4096;
+
+/// Per-block central-moment partial (pass 2).
+#[derive(Clone, Copy, Debug)]
+struct BlockMoments {
+    m2: f64,
+    m3: f64,
+    m4: f64,
+    lo: f32,
+    hi: f32,
+}
+
+/// Reduce each fixed-size block of `data` with `f`, writing partials in
+/// block order; block `i` covers `data[i*MOMENT_BLOCK ..]`. Dispatches
+/// the blocks over `pool` when available.
+fn per_block<R, F>(pool: Option<&ThreadPool>, data: &[f32], out: &mut [R],
+                   f: F)
+where
+    R: Send,
+    F: Fn(&[f32]) -> R + Sync,
+{
+    let block = |bi: usize| {
+        let s0 = bi * MOMENT_BLOCK;
+        let s1 = (s0 + MOMENT_BLOCK).min(data.len());
+        &data[s0..s1]
+    };
+    match pool {
+        Some(p) if out.len() > 1 => {
+            p.scatter_chunks(out, 1, |bi, slot| slot[0] = f(block(bi)));
+        }
+        _ => {
+            for (bi, slot) in out.iter_mut().enumerate() {
+                *slot = f(block(bi));
+            }
+        }
+    }
+}
+
+/// Blocked moment reduction over an explicit pool (`None` = serial).
+/// Bit-identical across worker counts; see module docs.
+pub fn moments_with(pool: Option<&ThreadPool>, data: &[f32]) -> Moments {
     let n = data.len();
     if n == 0 {
         return Moments::default();
     }
-    let mean = data.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+    let nb = n.div_ceil(MOMENT_BLOCK);
+
+    // Pass 1: block sums -> mean (combined in block order).
+    let mut sums = vec![0.0f64; nb];
+    per_block(pool, data, &mut sums,
+              |block| block.iter().map(|&v| v as f64).sum::<f64>());
+    let mean = sums.iter().sum::<f64>() / n as f64;
+
+    // Pass 2: central moments per block, combined in block order.
+    let mut parts = vec![BlockMoments { m2: 0.0, m3: 0.0, m4: 0.0,
+                                        lo: f32::INFINITY,
+                                        hi: f32::NEG_INFINITY }; nb];
+    per_block(pool, data, &mut parts, |block| {
+        let (mut m2, mut m3, mut m4) = (0.0f64, 0.0f64, 0.0f64);
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &v in block {
+            let d = v as f64 - mean;
+            let d2 = d * d;
+            m2 += d2;
+            m3 += d2 * d;
+            m4 += d2 * d2;
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        BlockMoments { m2, m3, m4, lo, hi }
+    });
     let (mut m2, mut m3, mut m4) = (0.0f64, 0.0f64, 0.0f64);
     let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
-    for &v in data {
-        let d = v as f64 - mean;
-        let d2 = d * d;
-        m2 += d2;
-        m3 += d2 * d;
-        m4 += d2 * d2;
-        lo = lo.min(v);
-        hi = hi.max(v);
+    for p in &parts {
+        m2 += p.m2;
+        m3 += p.m3;
+        m4 += p.m4;
+        lo = lo.min(p.lo);
+        hi = hi.max(p.hi);
     }
     Moments {
         n,
@@ -42,6 +115,12 @@ pub fn moments(data: &[f32]) -> Moments {
         min: lo,
         max: hi,
     }
+}
+
+/// Moments over the shared pool when the slice is large enough (the
+/// kurtosis-telemetry hot path), serial otherwise.
+pub fn moments(data: &[f32]) -> Moments {
+    moments_with(par::pool_for_ops(data.len()), data)
 }
 
 /// Excess kurtosis E[((x-mu)/sigma)^4] - 3 (paper Eq. 4). Near 0 for a
@@ -93,18 +172,26 @@ impl Histogram {
     }
 
     /// Fraction of mass beyond `k` standard deviations (the Bondarenko
-    /// et al. 6-sigma outlier criterion used in §5.2).
+    /// et al. 6-sigma outlier criterion used in §5.2). Blocked parallel
+    /// count; integer combination, so exact for any worker count.
     pub fn outlier_fraction(data: &[f32], k: f32) -> f64 {
         let m = moments(data);
         let sd = m.var.sqrt() as f32;
-        if sd <= 0.0 {
+        if sd <= 0.0 || data.is_empty() {
             return 0.0;
         }
-        let count = data
-            .iter()
-            .filter(|&&v| ((v as f64 - m.mean).abs() as f32) > k * sd)
-            .count();
-        count as f64 / data.len().max(1) as f64
+        let nb = data.len().div_ceil(MOMENT_BLOCK);
+        let mut counts = vec![0usize; nb];
+        per_block(par::pool_for_ops(data.len()), data, &mut counts,
+                  |block| {
+                      block
+                          .iter()
+                          .filter(|&&v| {
+                              ((v as f64 - m.mean).abs() as f32) > k * sd
+                          })
+                          .count()
+                  });
+        counts.iter().sum::<usize>() as f64 / data.len() as f64
     }
 
     /// Render as a compact ASCII sparkline (for terminal reports).

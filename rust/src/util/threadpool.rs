@@ -1,16 +1,65 @@
 //! Fixed-size worker thread pool with bounded work queues (backpressure).
 //!
 //! Stands in for tokio in the offline build. Used by the data pipeline's
-//! prefetcher and the coordinator's simulated data-parallel / optimizer-
-//! parallel ranks. Queue bounds give the backpressure property the
-//! coordinator tests rely on: a slow consumer blocks producers instead of
-//! letting queues grow without bound.
+//! prefetcher, the coordinator's simulated data-parallel / optimizer-
+//! parallel ranks, and — through [`crate::tensor::par`] — the shared
+//! parallel kernel layer (DESIGN.md §6). Queue bounds give the
+//! backpressure property the coordinator tests rely on: a slow consumer
+//! blocks producers instead of letting queues grow without bound.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    static IN_POOL_WORKER: std::cell::Cell<bool> =
+        std::cell::Cell::new(false);
+}
+
+/// True when the calling thread is a [`ThreadPool`] worker (of any pool).
+/// The parallel kernels in [`crate::tensor::par`] consult this to fall
+/// back to serial execution instead of issuing a nested scatter: a job
+/// that blocks waiting for sub-jobs on the same pool can starve the queue
+/// once every worker is blocked the same way.
+pub fn on_worker_thread() -> bool {
+    IN_POOL_WORKER.with(|f| f.get())
+}
+
+/// (completed count, any job panicked) shared between a scatter call
+/// and its jobs. The guard increments on drop, so a panicking job still
+/// unblocks the waiting caller, which then re-raises on its own thread.
+type DoneState = (Mutex<(usize, bool)>, Condvar);
+
+struct DoneGuard(Arc<DoneState>);
+
+impl Drop for DoneGuard {
+    fn drop(&mut self) {
+        let (lock, cv) = &*self.0;
+        let mut st = lock.lock().unwrap();
+        st.0 += 1;
+        if std::thread::panicking() {
+            st.1 = true;
+        }
+        drop(st);
+        cv.notify_all();
+    }
+}
+
+/// Block until `n` jobs completed; panic if any of them panicked.
+fn wait_all(done: &DoneState, n: usize, who: &str) {
+    let (lock, cv) = done;
+    let mut st = lock.lock().unwrap();
+    while st.0 < n {
+        st = cv.wait(st).unwrap();
+    }
+    let panicked = st.1;
+    drop(st);
+    if panicked {
+        panic!("{who}: a job panicked");
+    }
+}
 
 struct Queue {
     jobs: Mutex<QueueState>,
@@ -29,6 +78,7 @@ struct QueueState {
 pub struct ThreadPool {
     queue: Arc<Queue>,
     workers: Vec<JoinHandle<()>>,
+    n_workers: usize,
 }
 
 impl ThreadPool {
@@ -52,17 +102,26 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { queue, workers }
+        ThreadPool { queue, workers, n_workers }
+    }
+
+    /// Number of worker threads (partitioning hint for block kernels).
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
     }
 
     /// Submit a job; blocks while the queue is full (backpressure).
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.submit_boxed(Box::new(f));
+    }
+
+    fn submit_boxed(&self, job: Job) {
         let mut st = self.queue.jobs.lock().unwrap();
         while st.deque.len() >= self.queue.capacity {
             st = self.queue.not_full.wait(st).unwrap();
         }
         assert!(!st.shutdown, "submit after shutdown");
-        st.deque.push_back(Box::new(f));
+        st.deque.push_back(job);
         drop(st);
         self.queue.not_empty.notify_one();
     }
@@ -74,6 +133,13 @@ impl ThreadPool {
 
     /// Run `f` over each item on the pool and collect results in input
     /// order. Blocks until all items finish.
+    ///
+    /// Ordering guarantee: `result[i] == f(i, items[i])` for every `i`,
+    /// regardless of completion order. The guarantee is positional by
+    /// construction — each job writes its result into slot `i` of a
+    /// pre-sized buffer — and does **not** depend on any channel or queue
+    /// ordering. `scatter_ordering_under_skew` (tests) pins this down
+    /// with deliberately inverted completion order.
     pub fn scatter<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
@@ -83,26 +149,23 @@ impl ThreadPool {
         let n = items.len();
         let results: Arc<Mutex<Vec<Option<R>>>> =
             Arc::new(Mutex::new((0..n).map(|_| None).collect()));
-        let done = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let done: Arc<DoneState> =
+            Arc::new((Mutex::new((0usize, false)), Condvar::new()));
         let f = Arc::new(f);
         for (i, item) in items.into_iter().enumerate() {
             let results = Arc::clone(&results);
             let done = Arc::clone(&done);
             let f = Arc::clone(&f);
             self.submit(move || {
+                // Drop-guard: a panicking f still advances the counter,
+                // so the caller unblocks and re-raises instead of
+                // hanging forever.
+                let _guard = DoneGuard(done);
                 let r = f(i, item);
                 results.lock().unwrap()[i] = Some(r);
-                let (lock, cv) = &*done;
-                *lock.lock().unwrap() += 1;
-                cv.notify_all();
             });
         }
-        let (lock, cv) = &*done;
-        let mut finished = lock.lock().unwrap();
-        while *finished < n {
-            finished = cv.wait(finished).unwrap();
-        }
-        drop(finished);
+        wait_all(&done, n, "scatter");
         // Workers may still hold their Arc clone for a moment after the
         // final notify; extract through the lock rather than try_unwrap.
         let mut guard = results.lock().unwrap();
@@ -110,6 +173,85 @@ impl ThreadPool {
             .into_iter()
             .map(|r| r.expect("missing scatter result"))
             .collect()
+    }
+
+    /// Run `f(chunk_index, chunk)` over disjoint, contiguous
+    /// `chunk_len`-sized mutable chunks of `out` (the last chunk may be
+    /// shorter), blocking until every chunk completes. Unlike
+    /// [`ThreadPool::scatter`], `out` and `f` may borrow from the
+    /// caller's stack: the method only returns once all chunk jobs have
+    /// finished, so the borrows remain valid for the jobs' whole
+    /// lifetime. This is the shared-handle plumbing behind the parallel
+    /// kernels in [`crate::tensor::par`].
+    ///
+    /// Determinism: chunk boundaries depend only on `out.len()` and
+    /// `chunk_len` (never on worker count or scheduling) and each chunk
+    /// is written by exactly one job, so the result is bit-identical to
+    /// running `f` over the chunks serially in index order.
+    ///
+    /// Panics (after all jobs settle) if any chunk job panicked. Must not
+    /// be called from a job running on the *same* pool — see
+    /// [`on_worker_thread`].
+    pub fn scatter_chunks<T, F>(&self, out: &mut [T], chunk_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(chunk_len > 0, "scatter_chunks: chunk_len must be > 0");
+        let n_chunks = out.len().div_ceil(chunk_len);
+        if n_chunks <= 1 {
+            if !out.is_empty() {
+                f(0, out);
+            }
+            return;
+        }
+
+        // Raw shared view of the output and the (borrowed) kernel. Safe
+        // because chunk ranges are disjoint and we block below until
+        // every job has dropped its access.
+        struct Shared<T, F> {
+            base: *mut T,
+            len: usize,
+            chunk_len: usize,
+            f: *const F,
+        }
+        impl<T, F> Clone for Shared<T, F> {
+            fn clone(&self) -> Self {
+                *self
+            }
+        }
+        impl<T, F> Copy for Shared<T, F> {}
+        unsafe impl<T: Send, F: Sync> Send for Shared<T, F> {}
+
+        let done: Arc<DoneState> =
+            Arc::new((Mutex::new((0usize, false)), Condvar::new()));
+        let shared = Shared {
+            base: out.as_mut_ptr(),
+            len: out.len(),
+            chunk_len,
+            f: &f,
+        };
+        for c in 0..n_chunks {
+            let done = Arc::clone(&done);
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let _guard = DoneGuard(done);
+                let s0 = c * shared.chunk_len;
+                let s1 = (s0 + shared.chunk_len).min(shared.len);
+                // Safety: [s0, s1) ranges are disjoint across jobs and
+                // the caller outlives them (blocks on `done` below).
+                let chunk = unsafe {
+                    std::slice::from_raw_parts_mut(shared.base.add(s0),
+                                                   s1 - s0)
+                };
+                unsafe { (*shared.f)(c, chunk) };
+            });
+            // Safety: lifetime erasure only (the fat-pointer layout is
+            // identical) — we wait for every job before returning, so
+            // the borrows in `job` stay valid.
+            let job: Job = unsafe { std::mem::transmute(job) };
+            self.submit_boxed(job);
+        }
+        wait_all(&done, n_chunks, "scatter_chunks");
     }
 }
 
@@ -127,6 +269,7 @@ impl Drop for ThreadPool {
 }
 
 fn worker_loop(q: Arc<Queue>) {
+    IN_POOL_WORKER.with(|f| f.set(true));
     loop {
         let job = {
             let mut st = q.jobs.lock().unwrap();
@@ -141,7 +284,10 @@ fn worker_loop(q: Arc<Queue>) {
                 st = q.not_empty.wait(st).unwrap();
             }
         };
-        job();
+        // A panicking job must not take the worker down with it: scatter
+        // callers are notified through their completion guards and
+        // re-raise on their own thread.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
     }
 }
 
@@ -264,6 +410,98 @@ mod tests {
             },
         );
         assert_eq!(counter.load(Ordering::SeqCst), n);
+    }
+
+    #[test]
+    fn scatter_ordering_under_skew() {
+        // Make early indices finish *last*: results must still map back
+        // to input indices (the documented positional guarantee).
+        let pool = ThreadPool::new(4, 32);
+        let out = pool.scatter((0..24).collect(), |i, x: u64| {
+            std::thread::sleep(std::time::Duration::from_millis(
+                (24 - i as u64) % 7));
+            x * 10 + 1
+        });
+        assert_eq!(out, (0..24).map(|x| x * 10 + 1).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scatter_chunks_covers_all_chunks_once() {
+        let pool = ThreadPool::new(3, 8);
+        let mut out = vec![0u32; 103]; // non-multiple of chunk_len
+        pool.scatter_chunks(&mut out, 10, |ci, chunk| {
+            assert!(chunk.len() == 10 || ci == 10);
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = (ci * 10 + j) as u32 + 1;
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as u32 + 1);
+        }
+    }
+
+    #[test]
+    fn scatter_chunks_borrows_caller_state() {
+        // The whole point of scatter_chunks: kernels may close over
+        // non-'static stack data.
+        let pool = ThreadPool::new(4, 16);
+        let src: Vec<f32> = (0..256).map(|i| i as f32).collect();
+        let mut dst = vec![0.0f32; 256];
+        pool.scatter_chunks(&mut dst, 32, |ci, chunk| {
+            let s0 = ci * 32;
+            for (d, s) in chunk.iter_mut().zip(&src[s0..s0 + chunk.len()]) {
+                *d = 2.0 * s;
+            }
+        });
+        for (i, v) in dst.iter().enumerate() {
+            assert_eq!(*v, 2.0 * i as f32);
+        }
+    }
+
+    #[test]
+    fn scatter_chunks_propagates_panics() {
+        let pool = ThreadPool::new(2, 8);
+        let mut out = vec![0u8; 64];
+        let r = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                pool.scatter_chunks(&mut out, 8, |ci, _chunk| {
+                    if ci == 3 {
+                        panic!("boom");
+                    }
+                });
+            }));
+        assert!(r.is_err());
+        // Workers survive the panic: the pool still runs jobs.
+        let sum = pool.scatter(vec![1u32, 2, 3], |_i, x| x).iter()
+            .sum::<u32>();
+        assert_eq!(sum, 6);
+    }
+
+    #[test]
+    fn scatter_propagates_panics_instead_of_hanging() {
+        let pool = ThreadPool::new(2, 8);
+        let r = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                let _ = pool.scatter((0..8).collect(), |i, x: u32| {
+                    if i == 5 {
+                        panic!("boom");
+                    }
+                    x
+                });
+            }));
+        assert!(r.is_err());
+        // The pool is still serviceable afterwards.
+        let out = pool.scatter(vec![7u32], |_i, x| x + 1);
+        assert_eq!(out, vec![8]);
+    }
+
+    #[test]
+    fn worker_thread_flag() {
+        assert!(!on_worker_thread());
+        let pool = ThreadPool::new(2, 4);
+        let flags = pool.scatter(vec![(), ()], |_i, ()| on_worker_thread());
+        assert!(flags.iter().all(|&f| f));
+        assert!(!on_worker_thread());
     }
 
     #[test]

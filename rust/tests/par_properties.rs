@@ -1,0 +1,182 @@
+//! Serial/parallel parity properties for the kernel layer (DESIGN.md
+//! §6): for every kernel, every odd shape, and worker counts 1/2/8, the
+//! parallel result must be *bit-identical* to the serial one — the
+//! partitioning contract says each output row / reduction block is
+//! computed by exactly one job with the same arithmetic as the serial
+//! path.
+
+use osp::tensor::linalg;
+use osp::tensor::par;
+use osp::tensor::stats;
+use osp::tensor::Tensor;
+use osp::util::prop;
+use osp::util::rng::Pcg;
+use osp::util::threadpool::ThreadPool;
+
+const WORKER_COUNTS: [usize; 3] = [1, 2, 8];
+
+fn randn(shape: &[usize], rng: &mut Pcg) -> Tensor {
+    let mut t = Tensor::zeros(shape);
+    rng.fill_normal(t.data_mut(), 1.0);
+    t
+}
+
+/// Shapes that stress partition edges: degenerate dims, sizes far from
+/// any block multiple, and one comfortably large case.
+fn odd_dims(rng: &mut Pcg) -> (usize, usize, usize) {
+    let pick = |rng: &mut Pcg| -> usize {
+        match rng.below(6) {
+            0 => 1,
+            1 => 2,
+            2 => 3,
+            3 => 17,
+            4 => 33,
+            _ => 65,
+        }
+    };
+    (pick(rng), pick(rng), pick(rng))
+}
+
+#[test]
+fn matmul_parity_odd_shapes_and_workers() {
+    for &nw in &WORKER_COUNTS {
+        let pool = ThreadPool::new(nw, 4 * nw.max(4));
+        prop::check("matmul parity", 24, 0xA1 + nw as u64, |rng| {
+            let (m, k, n) = odd_dims(rng);
+            (randn(&[m, k], rng), randn(&[k, n], rng))
+        }, |(a, b)| {
+            let serial = par::matmul_with(None, a, b);
+            let parallel = par::matmul_with(Some(&pool), a, b);
+            if serial.data() != parallel.data() {
+                return Err(format!(
+                    "matmul parity broke at {:?} @ {:?} ({nw} workers)",
+                    a.shape(), b.shape()));
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn matmul_transb_parity_and_equivalence() {
+    for &nw in &WORKER_COUNTS {
+        let pool = ThreadPool::new(nw, 4 * nw.max(4));
+        prop::check("matmul_transb parity", 24, 0xB2 + nw as u64, |rng| {
+            let (m, k, n) = odd_dims(rng);
+            (randn(&[m, k], rng), randn(&[n, k], rng))
+        }, |(a, b)| {
+            let serial = par::matmul_transb_with(None, a, b);
+            let parallel = par::matmul_transb_with(Some(&pool), a, b);
+            if serial.data() != parallel.data() {
+                return Err(format!("transb parity broke ({nw} workers)"));
+            }
+            // And the algebraic identity vs an explicit transpose —
+            // same accumulation order, so bit-exact too.
+            let explicit =
+                par::matmul_with(None, a, &linalg::transpose(b));
+            if explicit.data() != serial.data() {
+                return Err("transb != matmul(a, b^T)".to_string());
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn matvec_parity() {
+    for &nw in &WORKER_COUNTS {
+        let pool = ThreadPool::new(nw, 4 * nw.max(4));
+        prop::check("matvec parity", 24, 0xC3 + nw as u64, |rng| {
+            let (m, n, _) = odd_dims(rng);
+            let a = randn(&[m, n], rng);
+            let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            (a, x)
+        }, |(a, x)| {
+            if par::matvec_with(None, a, x)
+                != par::matvec_with(Some(&pool), a, x)
+            {
+                return Err(format!("matvec parity broke ({nw} workers)"));
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn hadamard_parity_including_non_pow2() {
+    for &nw in &WORKER_COUNTS {
+        let pool = ThreadPool::new(nw, 4 * nw.max(4));
+        // 1xN, Nx1, and blocked (non-power-of-two cols) shapes.
+        for shape in [[1usize, 48], [7, 1], [5, 176], [33, 64]] {
+            let mut rng = Pcg::new(0xD4 + nw as u64, shape[1] as u64);
+            let x = randn(&shape, &mut rng);
+            let serial = par::hadamard_rows_with(None, &x);
+            let parallel = par::hadamard_rows_with(Some(&pool), &x);
+            assert_eq!(serial.data(), parallel.data(),
+                       "hadamard parity {shape:?} ({nw} workers)");
+        }
+    }
+}
+
+#[test]
+fn moments_parity_across_workers() {
+    for &nw in &WORKER_COUNTS {
+        let pool = ThreadPool::new(nw, 4 * nw.max(4));
+        // Sizes straddling the 4096-element reduction block boundary.
+        for n in [1usize, 5, 4095, 4096, 4097, 20_000] {
+            let mut rng = Pcg::new(0xE5, n as u64);
+            let data: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let serial = stats::moments_with(None, &data);
+            let parallel = stats::moments_with(Some(&pool), &data);
+            // f64 partials combined in block order: exact equality.
+            assert_eq!(serial.mean.to_bits(), parallel.mean.to_bits(),
+                       "mean n={n} ({nw} workers)");
+            assert_eq!(serial.var.to_bits(), parallel.var.to_bits(),
+                       "var n={n} ({nw} workers)");
+            assert_eq!(serial.m3.to_bits(), parallel.m3.to_bits(),
+                       "m3 n={n} ({nw} workers)");
+            assert_eq!(serial.m4.to_bits(), parallel.m4.to_bits(),
+                       "m4 n={n} ({nw} workers)");
+            assert_eq!(serial.min, parallel.min);
+            assert_eq!(serial.max, parallel.max);
+            assert_eq!(serial.n, parallel.n);
+        }
+    }
+}
+
+#[test]
+fn dispatching_entry_points_match_serial_kernels() {
+    // The public linalg API (auto-dispatch over the shared pool) must
+    // agree bitwise with the explicit serial path, whatever OSP_THREADS
+    // happens to be in this environment.
+    let mut rng = Pcg::new(0xF6, 1);
+    let a = randn(&[96, 80], &mut rng);
+    let b = randn(&[80, 96], &mut rng);
+    assert_eq!(linalg::matmul(&a, &b).data(),
+               par::matmul_with(None, &a, &b).data());
+    let g = randn(&[64, 48], &mut rng);
+    assert_eq!(linalg::matmul_transb(&g, &g).data(),
+               par::matmul_transb_with(None, &g, &g).data());
+    let x = randn(&[65, 176], &mut rng);
+    assert_eq!(linalg::hadamard_rows(&x).data(),
+               par::hadamard_rows_with(None, &x).data());
+    let data: Vec<f32> = (0..300_000).map(|_| rng.normal()).collect();
+    let auto = stats::moments(&data);
+    let serial = stats::moments_with(None, &data);
+    assert_eq!(auto.m4.to_bits(), serial.m4.to_bits());
+    assert_eq!(auto.var.to_bits(), serial.var.to_bits());
+}
+
+#[test]
+fn newton_schulz_unchanged_by_parallel_dispatch() {
+    // ns_orthogonalize now runs on matmul_transb + pool dispatch; its
+    // output must stay within the spectrum band the seed pinned.
+    let mut rng = Pcg::new(0x17, 9);
+    let g = randn(&[24, 16], &mut rng);
+    let x = linalg::ns_orthogonalize(&g, 5);
+    let gram = linalg::matmul(&linalg::transpose(&x), &x);
+    for i in 0..16 {
+        let d = gram.at2(i, i);
+        assert!((0.3..2.0).contains(&d), "sigma^2 {d}");
+    }
+}
