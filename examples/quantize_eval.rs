@@ -63,7 +63,7 @@ fn main() -> Result<()> {
         let mut row = vec![label.to_string()];
         for run in &runs {
             let qm = quant::prepare(&engine, &run.arch, &run.params, &cfg)?;
-            let q = perplexity(&engine, &qm.arch, &qm.params, a_bits,
+            let q = perplexity(&engine, &qm.arch, qm.dense_params(), a_bits,
                                kv_bits, qm.had_flag, 2)?;
             row.push(fmt_ppl(q.ppl));
         }

@@ -7,6 +7,10 @@
 //! host's available parallelism capped at 16 when unset). Compare
 //! `OSP_THREADS=1` vs `OSP_THREADS=4` runs to see the speedup the
 //! parallel kernel layer (DESIGN.md §6) buys.
+//!
+//! `--json` runs only the quantization section and writes
+//! `BENCH_quant.json` (packed-vs-dense matvec ns/op + bytes/param) for
+//! CI's perf trajectory.
 
 use osp::bench::{bench, Table};
 use osp::coordinator::dp::ring_all_reduce;
@@ -15,6 +19,7 @@ use osp::quant::rtn;
 use osp::tensor::linalg;
 use osp::tensor::par;
 use osp::tensor::Tensor;
+use osp::util::json::Json;
 use osp::util::rng::Pcg;
 
 fn randn(shape: &[usize], seed: u64) -> Tensor {
@@ -28,11 +33,74 @@ fn gflops(n: usize, secs: f64) -> String {
     format!("{:.2} GFLOP/s", 2.0 * (n as f64).powi(3) / secs / 1e9)
 }
 
+/// Packed-vs-dense matvec at the weight shapes PTQ actually emits:
+/// table rows + one JSON record per (size, bits).
+fn bench_quant(table: &mut Table, nw: usize) -> Vec<Json> {
+    let mut records = Vec::new();
+    for n in [512usize, 1024] {
+        let w = randn(&[n, n], 6);
+        let x: Vec<f32> = randn(&[n], 7).into_data();
+        let iters = if n >= 1024 { 20 } else { 50 };
+        for bits in [4u32, 8] {
+            let q = rtn::quantize_per_channel_q(&w, bits);
+            let dq = q.dequantize();
+            let td = bench(2, iters, || {
+                std::hint::black_box(par::matvec_with(None, &dq, &x));
+            });
+            let tq = bench(2, iters, || {
+                std::hint::black_box(q.qmatvec_with(None, &x));
+            });
+            let tqp = bench(2, iters, || {
+                std::hint::black_box(q.qmatvec_with(par::shared_pool(), &x));
+            });
+            let dense_bpp = 4.0;
+            let packed_bpp = q.packed_bytes() as f64 / q.numel() as f64;
+            table.row(vec!["matvec dense f32".into(), format!("{n}x{n}"),
+                           format!("{:.3}", td.mean_secs * 1e3),
+                           format!("{dense_bpp:.2} B/param")]);
+            table.row(vec![format!("qmatvec w{bits} packed"),
+                           format!("{n}x{n}"),
+                           format!("{:.3}", tq.mean_secs * 1e3),
+                           format!("{packed_bpp:.2} B/param")]);
+            table.row(vec![format!("qmatvec w{bits} par({nw})"),
+                           format!("{n}x{n}"),
+                           format!("{:.3}", tqp.mean_secs * 1e3),
+                           format!("{packed_bpp:.2} B/param")]);
+            records.push(Json::obj(vec![
+                ("op", Json::str("matvec")),
+                ("size", Json::num(n as f64)),
+                ("w_bits", Json::num(bits as f64)),
+                ("dense_ns_op", Json::num(td.mean_secs * 1e9)),
+                ("packed_ns_op", Json::num(tq.mean_secs * 1e9)),
+                ("packed_par_ns_op", Json::num(tqp.mean_secs * 1e9)),
+                ("dense_bytes_per_param", Json::num(dense_bpp)),
+                ("packed_bytes_per_param", Json::num(packed_bpp)),
+            ]));
+        }
+    }
+    records
+}
+
 fn main() -> anyhow::Result<()> {
+    let json_mode = std::env::args().any(|a| a == "--json");
     let nw = par::configured_threads();
     let mut table = Table::new(
         &format!("L3 microbenchmarks (OSP_THREADS={nw})"),
         &["op", "size", "mean (ms)", "throughput"]);
+
+    if json_mode {
+        // CI path: just the quant section, serialized for trending.
+        let records = bench_quant(&mut table, nw);
+        let doc = Json::obj(vec![
+            ("bench", Json::str("quant")),
+            ("threads", Json::num(nw as f64)),
+            ("rows", Json::Arr(records)),
+        ]);
+        std::fs::write("BENCH_quant.json", doc.dump())?;
+        table.print();
+        println!("wrote BENCH_quant.json");
+        return Ok(());
+    }
 
     // Matmul: serial baseline vs shared-pool dispatch at the sizes the
     // Muon outer loop and rotations actually see.
@@ -78,6 +146,16 @@ fn main() -> anyhow::Result<()> {
                    format!("{:.2}", t.mean_secs * 1e3),
                    format!("{:.1} Melem/s",
                            w.len() as f64 / t.mean_secs / 1e6)]);
+
+    let t = bench(1, 10, || {
+        std::hint::black_box(rtn::quantize_per_channel_q(&w, 4));
+    });
+    table.row(vec!["rtn_emit_codes".into(), "512x512".into(),
+                   format!("{:.2}", t.mean_secs * 1e3),
+                   format!("{:.1} Melem/s",
+                           w.len() as f64 / t.mean_secs / 1e6)]);
+
+    bench_quant(&mut table, nw);
 
     let x = randn(&[512, 512], 5);
     let t = bench(1, 10, || {

@@ -4,12 +4,18 @@
 //! is the little-endian f32 concatenation of the parameter leaves in
 //! manifest order. Optimizer state is stored the same way when requested
 //! (resumable training).
+//!
+//! [`save_packed`]/[`load_packed`] additionally persist weight-quantized
+//! models in their packed-code form (versioned `OSPQ` header, DESIGN.md
+//! §7): a W4 artifact costs ~1/8th of the dense f32 checkpoint.
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::quant::{QParam, QuantizedModel};
 use crate::runtime::manifest::{OptLeafSpec, ParamSpec};
+use crate::tensor::qtensor::{QStorage, QTensor};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 
@@ -133,6 +139,200 @@ pub fn load(dir: &Path) -> Result<Checkpoint> {
     })
 }
 
+// ---- packed quantized models ----------------------------------------------
+
+/// Magic + format version of the packed-model artifact. Bump the version
+/// on any layout change; `load_packed` rejects unknown versions instead
+/// of misreading bytes.
+const QCKPT_MAGIC: [u8; 4] = *b"OSPQ";
+const QCKPT_VERSION: u32 = 1;
+
+/// Per-param record tags in the packed artifact.
+const QTAG_DENSE: u8 = 0; // untouched param: raw f32
+const QTAG_PACKED: u8 = 1; // packed codes + per-column scales
+const QTAG_DENSE_Q: u8 = 2; // quantized but unpackable bits: raw f32
+
+struct ByteWriter(Vec<u8>);
+
+impl ByteWriter {
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f32s(&mut self, vs: &[f32]) {
+        for v in vs {
+            self.0.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.0.extend_from_slice(s.as_bytes());
+    }
+
+    fn shape(&mut self, shape: &[usize]) {
+        self.u32(shape.len() as u32);
+        for &d in shape {
+            self.u32(d as u32);
+        }
+    }
+}
+
+struct ByteReader<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.off.checked_add(n).filter(|&e| e <= self.b.len());
+        let Some(end) = end else {
+            bail!("packed model truncated at byte {}", self.off);
+        };
+        let s = &self.b[self.off..end];
+        self.off = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        Ok(self.take(4 * n)?
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(String::from_utf8(self.take(n)?.to_vec())
+            .context("packed model: non-utf8 string")?)
+    }
+
+    fn shape(&mut self) -> Result<Vec<usize>> {
+        let nd = self.u32()? as usize;
+        if nd > 8 {
+            bail!("packed model: implausible rank {nd}");
+        }
+        (0..nd).map(|_| Ok(self.u32()? as usize)).collect()
+    }
+}
+
+/// Serialize a quantized model in packed-code form (single file).
+pub fn save_packed(path: &Path, qm: &QuantizedModel) -> Result<()> {
+    let mut w = ByteWriter(Vec::with_capacity(qm.packed_bytes() + 256));
+    w.0.extend_from_slice(&QCKPT_MAGIC);
+    w.u32(QCKPT_VERSION);
+    w.str(&qm.arch);
+    w.f32s(&[qm.had_flag]);
+    w.u32(qm.params().len() as u32);
+    for p in qm.params() {
+        match p {
+            QParam::Dense(t) => {
+                w.0.push(QTAG_DENSE);
+                w.shape(t.shape());
+                w.f32s(t.data());
+            }
+            QParam::Packed(q) => match q.storage() {
+                QStorage::Packed(codes) => {
+                    w.0.push(QTAG_PACKED);
+                    w.shape(q.shape());
+                    w.u32(q.bits());
+                    w.f32s(q.scales());
+                    w.u32(codes.len() as u32);
+                    w.0.extend_from_slice(codes);
+                }
+                QStorage::Dense(_) => {
+                    w.0.push(QTAG_DENSE_Q);
+                    w.shape(q.shape());
+                    w.u32(q.bits());
+                    w.u32(q.scales().len() as u32);
+                    w.f32s(q.scales());
+                    w.f32s(q.dequantize().data());
+                }
+            },
+        }
+    }
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, &w.0).with_context(|| format!("writing {path:?}"))
+}
+
+/// Load a packed model saved by [`save_packed`].
+pub fn load_packed(path: &Path) -> Result<QuantizedModel> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("no packed model at {path:?}"))?;
+    let mut r = ByteReader { b: &bytes, off: 0 };
+    if r.take(4)? != QCKPT_MAGIC {
+        bail!("{path:?}: not a packed model (bad magic)");
+    }
+    let version = r.u32()?;
+    if version != QCKPT_VERSION {
+        bail!("{path:?}: packed model version {version}, \
+               this build reads {QCKPT_VERSION}");
+    }
+    let arch = r.str()?;
+    let had_flag = r.f32s(1)?[0];
+    let n_params = r.u32()? as usize;
+    if n_params > 1 << 20 {
+        bail!("{path:?}: implausible param count {n_params}");
+    }
+    let mut params = Vec::with_capacity(n_params);
+    for pi in 0..n_params {
+        let tag = r.take(1)?[0];
+        let shape = r.shape()?;
+        let numel = shape
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .ok_or_else(|| {
+                anyhow::anyhow!("{path:?}: param {pi}: shape {shape:?} \
+                                 overflows")
+            })?;
+        let p = match tag {
+            QTAG_DENSE => {
+                QParam::Dense(Tensor::new(shape, r.f32s(numel)?))
+            }
+            QTAG_PACKED => {
+                let bits = r.u32()?;
+                let cols = *shape.last().unwrap_or(&0);
+                let scales = r.f32s(cols)?;
+                let n_codes = r.u32()? as usize;
+                let codes = r.take(n_codes)?.to_vec();
+                let q = QTensor::from_parts(shape, bits, scales,
+                                            QStorage::Packed(codes))
+                    .map_err(|e| {
+                        anyhow::anyhow!("{path:?}: param {pi}: {e}")
+                    })?;
+                QParam::Packed(q)
+            }
+            QTAG_DENSE_Q => {
+                let bits = r.u32()?;
+                let n_scales = r.u32()? as usize;
+                let scales = r.f32s(n_scales)?;
+                let data = r.f32s(numel)?;
+                let q = QTensor::from_parts(shape, bits, scales,
+                                            QStorage::Dense(data))
+                    .map_err(|e| {
+                        anyhow::anyhow!("{path:?}: param {pi}: {e}")
+                    })?;
+                QParam::Packed(q)
+            }
+            other => bail!("{path:?}: param {pi}: unknown tag {other}"),
+        };
+        params.push(p);
+    }
+    if r.off != bytes.len() {
+        bail!("{path:?}: {} trailing bytes", bytes.len() - r.off);
+    }
+    Ok(QuantizedModel::new(arch, params, had_flag))
+}
+
 /// List checkpoint step dirs under a run, ascending.
 pub fn list_steps(run_dir: &Path) -> Vec<(u64, PathBuf)> {
     let mut out = Vec::new();
@@ -210,6 +410,83 @@ mod tests {
         let steps: Vec<u64> =
             list_steps(&run).into_iter().map(|(s, _)| s).collect();
         assert_eq!(steps, vec![10, 20, 30]);
+    }
+
+    fn toy_quantized_model() -> QuantizedModel {
+        use crate::quant::rtn;
+        use crate::util::rng::Pcg;
+        let mut rng = Pcg::new(42, 1);
+        let mut w = Tensor::zeros(&[64, 48]);
+        rng.fill_normal(w.data_mut(), 1.0);
+        let params = vec![
+            QParam::Packed(rtn::quantize_per_channel_q(&w, 4)),
+            QParam::Dense(Tensor::new(vec![4], vec![1.0, 2.0, 3.0, 4.0])),
+            QParam::Packed(QTensor::from_dense(&Tensor::full(&[2, 2], 0.5))),
+        ];
+        QuantizedModel::new("ssnorm_plain".into(), params, 1.0)
+    }
+
+    #[test]
+    fn packed_model_roundtrip() {
+        let dir = std::env::temp_dir().join("osp_qckpt_test_a");
+        let _ = std::fs::remove_dir_all(&dir);
+        let qm = toy_quantized_model();
+        let path = dir.join("qmodel.bin");
+        save_packed(&path, &qm).unwrap();
+        let back = load_packed(&path).unwrap();
+        assert_eq!(back.arch, "ssnorm_plain");
+        assert_eq!(back.had_flag, 1.0);
+        assert_eq!(back.params().len(), qm.params().len());
+        for (a, b) in qm.params().iter().zip(back.params()) {
+            assert_eq!(a.dequantize(), b.dequantize());
+        }
+    }
+
+    #[test]
+    fn packed_w4_artifact_is_small() {
+        // The point of the format: a W4 model on disk costs well under
+        // 0.3x the dense f32 bytes of its quantized weights.
+        let dir = std::env::temp_dir().join("osp_qckpt_test_b");
+        let _ = std::fs::remove_dir_all(&dir);
+        use crate::quant::rtn;
+        use crate::util::rng::Pcg;
+        let mut rng = Pcg::new(7, 2);
+        let mut w = Tensor::zeros(&[128, 96]);
+        rng.fill_normal(w.data_mut(), 1.0);
+        let qm = QuantizedModel::new(
+            "a".into(),
+            vec![QParam::Packed(rtn::quantize_per_channel_q(&w, 4))],
+            0.0);
+        let path = dir.join("qmodel.bin");
+        save_packed(&path, &qm).unwrap();
+        let file_bytes = std::fs::metadata(&path).unwrap().len() as f64;
+        let dense_bytes = (4 * 128 * 96) as f64;
+        assert!(file_bytes <= 0.3 * dense_bytes,
+                "{file_bytes} vs dense {dense_bytes}");
+    }
+
+    #[test]
+    fn packed_model_rejects_corruption() {
+        let dir = std::env::temp_dir().join("osp_qckpt_test_c");
+        let _ = std::fs::remove_dir_all(&dir);
+        let qm = toy_quantized_model();
+        let path = dir.join("qmodel.bin");
+        save_packed(&path, &qm).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // bad magic
+        let mut evil = bytes.clone();
+        evil[0] = b'X';
+        std::fs::write(&path, &evil).unwrap();
+        assert!(load_packed(&path).is_err());
+        // unknown version
+        let mut evil = bytes.clone();
+        evil[4] = 99;
+        std::fs::write(&path, &evil).unwrap();
+        assert!(load_packed(&path).is_err());
+        // truncation
+        bytes.truncate(bytes.len() - 3);
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_packed(&path).is_err());
     }
 
     #[test]

@@ -8,6 +8,7 @@ use anyhow::Result;
 
 use crate::coordinator::levels_for_bits;
 use crate::data::{Split, TokenStream};
+use crate::quant::QuantizedModel;
 use crate::runtime::{Engine, HostValue};
 use crate::tensor::Tensor;
 
@@ -86,6 +87,15 @@ pub fn perplexity(engine: &Engine, arch: &str, params: &[Tensor],
     let ppl = per_tok.min(60.0).exp();
     Ok(PplResult { ppl, nll_per_token: per_tok, kurt_max: kmax,
                    kurt_mean: kmean })
+}
+
+/// Held-out perplexity of a packed quantized model. The weights stay
+/// packed until the PJRT boundary: `dense_params` dequantizes them
+/// lazily, exactly once, however many batches run.
+pub fn perplexity_packed(engine: &Engine, qm: &QuantizedModel, a_bits: u32,
+                         kv_bits: u32, n_batches: usize) -> Result<PplResult> {
+    perplexity(engine, &qm.arch, qm.dense_params(), a_bits, kv_bits,
+               qm.had_flag, n_batches)
 }
 
 #[cfg(test)]

@@ -17,7 +17,7 @@ use anyhow::{anyhow, bail, Result};
 use osp::checkpoint;
 use osp::config::{TrainConfig, ABLATION_GRID};
 use osp::coordinator::Trainer;
-use osp::eval::{perplexity, tasks};
+use osp::eval::{perplexity, perplexity_packed, tasks};
 use osp::quant::{self, PtqConfig, Rotation, WeightMethod};
 use osp::repro::{self, Effort};
 use osp::runtime::Engine;
@@ -39,6 +39,9 @@ USAGE: osp <subcommand> [flags]
   suite      --ckpt DIR [--a-bits N --kv-bits N]
   quantize   --ckpt DIR [--w-bits N] [--method rtn|gptq]
              [--rotation none|random|learned] [--ffn-had true]
+             [--save-packed FILE]   persist the packed-code model (~8x
+                                    smaller at W4), or
+             --packed FILE          evaluate a previously saved one
   analyze    [--runs-dir DIR] [--tags adam,osp]
 
   common     --artifacts DIR (default: artifacts)
@@ -156,6 +159,21 @@ fn cmd_suite(args: &Args) -> Result<()> {
 
 fn cmd_quantize(args: &Args) -> Result<()> {
     let engine = engine_from(args)?;
+    if let Some(packed) = args.get("packed") {
+        // Evaluate a packed-code model straight from disk: no f32
+        // checkpoint, no re-quantization.
+        let qm = checkpoint::load_packed(&PathBuf::from(packed))?;
+        let a = args.usize_or("a-bits", 4) as u32;
+        let kv = args.usize_or("kv-bits", 4) as u32;
+        let q = perplexity_packed(&engine, &qm, a, kv, 2)?;
+        println!(
+            "packed model {packed} ({} KiB packed, {:.2}x of dense): \
+             ppl {:.2} @ A{a}-KV{kv}",
+            qm.packed_bytes() / 1024,
+            qm.packed_bytes() as f64 / qm.dense_bytes().max(1) as f64,
+            q.ppl);
+        return Ok(());
+    }
     let ckpt = PathBuf::from(
         args.get("ckpt").ok_or_else(|| anyhow!("--ckpt required"))?);
     let ck = checkpoint::load(&ckpt)?;
@@ -175,11 +193,18 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         calib_batches: args.usize_or("calib-batches", 2),
     };
     let qm = quant::prepare(&engine, &ck.arch, &ck.params, &cfg)?;
+    if let Some(out) = args.get("save-packed") {
+        checkpoint::save_packed(&PathBuf::from(out), &qm)?;
+        println!(
+            "saved packed model to {out}: {} KiB vs {} KiB dense ({:.2}x)",
+            qm.packed_bytes() / 1024, qm.dense_bytes() / 1024,
+            qm.packed_bytes() as f64 / qm.dense_bytes().max(1) as f64);
+    }
     let a = args.usize_or("a-bits", 4) as u32;
     let kv = args.usize_or("kv-bits", 4) as u32;
     let fp = perplexity(&engine, &ck.arch, &ck.params, 16, 16, 0.0, 2)?;
-    let q = perplexity(&engine, &qm.arch, &qm.params, a, kv, qm.had_flag,
-                       2)?;
+    let q = perplexity(&engine, &qm.arch, qm.dense_params(), a, kv,
+                       qm.had_flag, 2)?;
     println!("{}: fp16 ppl {:.2} -> quantized ppl {:.2} (kurt_max {:.2})",
              cfg.label(), fp.ppl, q.ppl, fp.kurt_max);
     Ok(())

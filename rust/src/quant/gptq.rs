@@ -9,6 +9,7 @@
 use anyhow::{anyhow, Result};
 
 use crate::tensor::linalg::{cholesky, spd_inverse, transpose};
+use crate::tensor::qtensor::QTensor;
 use crate::tensor::{par, Tensor};
 
 use super::rtn;
@@ -32,44 +33,48 @@ fn inverse_cholesky(h: &Tensor, damp_frac: f64) -> Result<Tensor> {
     Ok(transpose(&l)) // upper factor U with U^T U = H^{-1}
 }
 
-/// GPTQ-quantize a [in, out] weight against Hessian [in, in].
-/// Scales are symmetric per output channel, fixed from the original W
-/// (same grid RTN uses, so improvements are purely from error feedback).
-pub fn gptq_quantize(w: &Tensor, h: &Tensor, bits: u32) -> Result<Tensor> {
+/// GPTQ-quantize a [in, out] weight against Hessian [in, in], emitting
+/// packed codes directly (the deployment path). Scales are symmetric per
+/// output channel, fixed from the original W (same grid RTN uses, so
+/// improvements are purely from error feedback). The dequantized value
+/// each row's error feedback uses is exactly `code * scale`, so
+/// `result.dequantize()` is bit-identical to the f32 round-trip
+/// [`gptq_quantize`] (which is now this + dequantize).
+pub fn gptq_quantize_q(w: &Tensor, h: &Tensor, bits: u32)
+                       -> Result<QTensor> {
     let Some(lv) = rtn::levels(bits) else {
-        return Ok(w.clone());
+        return Ok(QTensor::from_dense(w));
     };
     let (rows, cols) = (w.shape()[0], w.shape()[1]);
     assert_eq!(h.shape(), &[rows, rows], "hessian shape");
 
     let u = inverse_cholesky(h, 0.01)?;
 
-    // Per-output-channel scales from the original weights.
-    let mut scales = vec![0.0f32; cols];
-    for i in 0..rows {
-        for (j, s) in scales.iter_mut().enumerate() {
-            *s = s.max(w.at2(i, j).abs());
-        }
-    }
+    // Per-output-channel scales from the original weights (single-pass
+    // column absmax over contiguous rows, shared with RTN).
+    let mut scales = rtn::column_absmax(w);
     for s in scales.iter_mut() {
         *s /= lv;
     }
 
     let mut work = w.clone();
-    let mut out = Tensor::zeros(&[rows, cols]);
+    let mut codes = vec![0i32; rows * cols];
     for i in 0..rows {
         let uii = u.at2(i, i).max(1e-12);
-        // Quantize row i; compute scaled residual.
+        // Quantize row i in code space; the dequantized value only ever
+        // lives in a register, for the scaled residual.
         let mut err = vec![0.0f32; cols];
-        for j in 0..cols {
-            let v = work.at2(i, j);
+        let wrow = &work.data()[i * cols..(i + 1) * cols];
+        let crow = &mut codes[i * cols..(i + 1) * cols];
+        for (j, (&v, c)) in wrow.iter().zip(crow.iter_mut()).enumerate() {
             let s = scales[j];
-            let q = if s <= 0.0 {
-                0.0
+            let (code, q) = if s <= 0.0 {
+                (0, 0.0)
             } else {
-                (v / s).round().clamp(-lv - 1.0, lv) * s
+                let r = (v / s).round().clamp(-lv - 1.0, lv);
+                (r as i32, r * s)
             };
-            out.set2(i, j, q);
+            *c = code;
             err[j] = (v - q) / uii;
         }
         // Propagate to later rows: w[r,:] -= U[i,r] * err. The rank-1
@@ -97,7 +102,7 @@ pub fn gptq_quantize(w: &Tensor, h: &Tensor, bits: u32) -> Result<Tensor> {
         };
         match par::pool_for_ops(rows_left * cols) {
             Some(p) if rows_left > 1 => {
-                let rpb = rows_left.div_ceil(p.n_workers() * 4).max(1);
+                let rpb = par::rows_per_block(rows_left, p.n_workers());
                 p.scatter_chunks(tail, rpb * cols, |ci, chunk| {
                     update(i + 1 + ci * rpb, chunk)
                 });
@@ -105,7 +110,16 @@ pub fn gptq_quantize(w: &Tensor, h: &Tensor, bits: u32) -> Result<Tensor> {
             _ => update(i + 1, tail),
         }
     }
-    Ok(out)
+    Ok(QTensor::from_codes(w.shape(), bits, &codes, scales))
+}
+
+/// f32 round-trip view of [`gptq_quantize_q`] (bit-identical by the
+/// code-times-scale parity contract).
+pub fn gptq_quantize(w: &Tensor, h: &Tensor, bits: u32) -> Result<Tensor> {
+    if bits >= 16 {
+        return Ok(w.clone());
+    }
+    Ok(gptq_quantize_q(w, h, bits)?.dequantize())
 }
 
 /// Hessian-weighted reconstruction error tr((W-Q)^T H (W-Q)) — the

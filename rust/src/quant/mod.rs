@@ -13,10 +13,13 @@ pub mod gptq;
 pub mod rotate;
 pub mod rtn;
 
+use std::sync::OnceLock;
+
 use anyhow::{Context, Result};
 
 use crate::runtime::Engine;
 use crate::tensor::linalg;
+use crate::tensor::qtensor::QTensor;
 use crate::tensor::{par, Tensor};
 use crate::util::rng::Pcg;
 
@@ -67,14 +70,84 @@ impl PtqConfig {
     }
 }
 
+/// One parameter of a quantized model: packed codes for the quantized
+/// 2-D weights, dense f32 for everything else (norm scalars, passthrough
+/// leaves).
+pub enum QParam {
+    Dense(Tensor),
+    Packed(QTensor),
+}
+
+impl QParam {
+    /// Materialize the dense f32 view (bit-identical to the old f32
+    /// quantize-dequantize output for packed params).
+    pub fn dequantize(&self) -> Tensor {
+        match self {
+            QParam::Dense(t) => t.clone(),
+            QParam::Packed(q) => q.dequantize(),
+        }
+    }
+
+    /// Serialized weight bytes in this representation.
+    pub fn packed_bytes(&self) -> usize {
+        match self {
+            QParam::Dense(t) => 4 * t.len(),
+            QParam::Packed(q) => q.packed_bytes(),
+        }
+    }
+
+    /// What the parameter costs dense (f32).
+    pub fn dense_bytes(&self) -> usize {
+        match self {
+            QParam::Dense(t) => 4 * t.len(),
+            QParam::Packed(q) => q.dense_bytes(),
+        }
+    }
+}
+
 /// A weight-quantized model ready for the evalq/logitsq executables.
+/// Weights stay packed; the dense f32 view the PJRT boundary needs is
+/// dequantized lazily, exactly once, by [`QuantizedModel::dense_params`].
 pub struct QuantizedModel {
     /// Architecture whose executables must be used (embproj arches are
     /// absorbed into their plain counterparts).
     pub arch: String,
-    pub params: Vec<Tensor>,
+    /// Private: `dense_params` caches a snapshot, so post-hoc mutation
+    /// of the leaves would silently serve stale dense weights.
+    params: Vec<QParam>,
     /// had_flag input value (1.0 when ffn_had).
     pub had_flag: f32,
+    dense: OnceLock<Vec<Tensor>>,
+}
+
+impl QuantizedModel {
+    pub fn new(arch: String, params: Vec<QParam>, had_flag: f32)
+               -> QuantizedModel {
+        QuantizedModel { arch, params, had_flag, dense: OnceLock::new() }
+    }
+
+    pub fn params(&self) -> &[QParam] {
+        &self.params
+    }
+
+    /// Dense f32 parameters for the PJRT boundary, dequantized on first
+    /// call (one scatter over the shared pool) and cached.
+    pub fn dense_params(&self) -> &[Tensor] {
+        self.dense.get_or_init(|| {
+            par::par_map(par::active_pool(), &self.params,
+                         |_, p| p.dequantize())
+        })
+    }
+
+    /// Total serialized weight bytes in packed form.
+    pub fn packed_bytes(&self) -> usize {
+        self.params.iter().map(|p| p.packed_bytes()).sum()
+    }
+
+    /// Total weight bytes a dense f32 model would cost.
+    pub fn dense_bytes(&self) -> usize {
+        self.params.iter().map(|p| p.dense_bytes()).sum()
+    }
 }
 
 /// Apply the PTQ recipe to a checkpoint.
@@ -123,47 +196,57 @@ pub fn prepare(engine: &Engine, arch: &str, params: &[Tensor],
     } else {
         None
     };
-    // Each 2-D param quantizes independently: scatter one job per param
-    // over the shared pool (inner kernels fall back to serial on the
-    // workers). The first error, in any param, wins deterministically
-    // only in *whether* we fail — the message may name any failing
-    // param; still-queued jobs then skip their (useless) work.
+    // Each 2-D param quantizes independently into packed codes: scatter
+    // one job per param over the shared pool (inner kernels fall back to
+    // serial on the workers). The first error, in any param, wins
+    // deterministically only in *whether* we fail — the message may name
+    // any failing param; still-queued jobs then skip their (useless)
+    // work.
     let failed = std::sync::atomic::AtomicBool::new(false);
     let first_err: std::sync::Mutex<Option<anyhow::Error>> =
         std::sync::Mutex::new(None);
-    par::par_map_mut(par::active_pool(), &mut params, |i, p| {
-        use std::sync::atomic::Ordering;
-        let s = &specs[i];
-        if failed.load(Ordering::Relaxed)
-            || p.shape().len() != 2
-            || s.kind == "norm"
-        {
-            return;
-        }
-        match hessians.as_ref().and_then(|h| h.get(&s.name)) {
-            Some(h) => match gptq::gptq_quantize(p, h, cfg.w_bits) {
-                Ok(q) => *p = q,
-                Err(e) => {
-                    failed.store(true, Ordering::Relaxed);
-                    let mut slot = first_err.lock().unwrap();
-                    if slot.is_none() {
-                        *slot = Some(e.context(format!("GPTQ on {}",
-                                                       s.name)));
+    let packed: Vec<Option<QTensor>> =
+        par::par_map(par::active_pool(), &params, |i, p| {
+            use std::sync::atomic::Ordering;
+            let s = &specs[i];
+            if failed.load(Ordering::Relaxed)
+                || p.shape().len() != 2
+                || s.kind == "norm"
+            {
+                return None; // stays a dense leaf (moved below, no copy)
+            }
+            match hessians.as_ref().and_then(|h| h.get(&s.name)) {
+                Some(h) => match gptq::gptq_quantize_q(p, h, cfg.w_bits) {
+                    Ok(q) => Some(q),
+                    Err(e) => {
+                        failed.store(true, Ordering::Relaxed);
+                        let mut slot = first_err.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(e.context(format!("GPTQ on {}",
+                                                           s.name)));
+                        }
+                        None
                     }
-                }
-            },
-            None => *p = rtn::quantize_per_channel(p, cfg.w_bits),
-        }
-    });
+                },
+                None => Some(rtn::quantize_per_channel_q(p, cfg.w_bits)),
+            }
+        });
     if let Some(e) = first_err.into_inner().unwrap() {
         return Err(e);
     }
+    // Zip back against the owned params so untouched leaves move into
+    // the model instead of being cloned.
+    let qparams: Vec<QParam> = params
+        .into_iter()
+        .zip(packed)
+        .map(|(p, q)| match q {
+            Some(q) => QParam::Packed(q),
+            None => QParam::Dense(p),
+        })
+        .collect();
 
-    Ok(QuantizedModel {
-        arch,
-        params,
-        had_flag: if cfg.ffn_had { 1.0 } else { 0.0 },
-    })
+    Ok(QuantizedModel::new(arch, qparams,
+                           if cfg.ffn_had { 1.0 } else { 0.0 }))
 }
 
 #[cfg(test)]

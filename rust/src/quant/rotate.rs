@@ -129,7 +129,9 @@ pub enum Rotation {
 /// Objective for SpinQuant-lite: total per-channel 4-bit quantization MSE
 /// of the residual-facing matrices after rotation (a weight-space proxy
 /// for SpinQuant's end-to-end objective; DESIGN.md §2 documents the
-/// substitution).
+/// substitution). Scoring goes through the streaming [`rtn::quant_mse`],
+/// which derives codes in-register — no dequantized copy is ever
+/// materialized across the search's many candidate evaluations.
 pub fn rotation_objective(specs: &[ParamSpec], params: &[Tensor],
                           q: &Tensor, bits: u32) -> f64 {
     let mut trial: Vec<Tensor> = params.to_vec();

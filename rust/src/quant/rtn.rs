@@ -4,6 +4,7 @@
 //! group is the *output channel* = column: one symmetric scale per
 //! column, scale = absmax / (2^(b-1) - 1).
 
+use crate::tensor::qtensor::QTensor;
 use crate::tensor::Tensor;
 
 /// levels = 2^(bits-1) - 1 (7 for 4-bit). bits >= 16 means "off".
@@ -24,28 +25,63 @@ fn rtn(v: f32, scale: f32, lv: f32) -> f32 {
     (v / scale).round().clamp(-lv - 1.0, lv) * scale
 }
 
-/// Per-output-channel (column) symmetric RTN for a [in, out] matrix.
-pub fn quantize_per_channel(w: &Tensor, bits: u32) -> Tensor {
+/// The integer code behind [`rtn`]: `rtn(v, s, lv) == code * s` exactly
+/// (the rounded value is integral, so the i32 round-trip is lossless).
+/// Caveat: a NaN weight maps to code 0 (`NaN as i32` saturates to 0)
+/// where the f32 path propagated NaN — the parity contract assumes
+/// finite weights, as every trained checkpoint has.
+#[inline]
+pub(crate) fn rtn_code(v: f32, scale: f32, lv: f32) -> i32 {
+    if scale <= 0.0 {
+        return 0;
+    }
+    (v / scale).round().clamp(-lv - 1.0, lv) as i32
+}
+
+/// Single-pass per-column absmax over contiguous row slices — the scale
+/// pass shared by RTN, GPTQ, and the streaming quant MSE (replaces the
+/// bounds-checked per-element `at2` walks each had).
+pub fn column_absmax(w: &Tensor) -> Vec<f32> {
+    let cols = w.shape()[1];
+    let mut absmax = vec![0.0f32; cols];
+    if cols == 0 {
+        return absmax;
+    }
+    for row in w.data().chunks_exact(cols) {
+        for (m, v) in absmax.iter_mut().zip(row) {
+            *m = m.max(v.abs());
+        }
+    }
+    absmax
+}
+
+/// Per-output-channel symmetric RTN emitting packed codes directly: the
+/// deployment path. `result.dequantize()` is bit-identical to
+/// [`quantize_per_channel`] (which is now this + dequantize).
+pub fn quantize_per_channel_q(w: &Tensor, bits: u32) -> QTensor {
     let Some(lv) = levels(bits) else {
-        return w.clone();
+        return QTensor::from_dense(w);
     };
     let (rows, cols) = (w.shape()[0], w.shape()[1]);
-    // Column absmax.
-    let mut absmax = vec![0.0f32; cols];
-    for i in 0..rows {
-        for (j, m) in absmax.iter_mut().enumerate() {
-            *m = m.max(w.at2(i, j).abs());
+    let scales: Vec<f32> = column_absmax(w).iter().map(|m| m / lv).collect();
+    let mut codes = vec![0i32; rows * cols];
+    for (wrow, crow) in w.data().chunks_exact(cols.max(1))
+        .zip(codes.chunks_exact_mut(cols.max(1)))
+    {
+        for (j, (&v, c)) in wrow.iter().zip(crow.iter_mut()).enumerate() {
+            *c = rtn_code(v, scales[j], lv);
         }
     }
-    let scales: Vec<f32> = absmax.iter().map(|m| m / lv).collect();
-    let mut out = w.clone();
-    for i in 0..rows {
-        for j in 0..cols {
-            let v = rtn(w.at2(i, j), scales[j], lv);
-            out.set2(i, j, v);
-        }
+    QTensor::from_codes(w.shape(), bits, &codes, scales)
+}
+
+/// Per-output-channel (column) symmetric RTN for a [in, out] matrix
+/// (f32 round-trip view of [`quantize_per_channel_q`]).
+pub fn quantize_per_channel(w: &Tensor, bits: u32) -> Tensor {
+    if bits >= 16 {
+        return w.clone();
     }
-    out
+    quantize_per_channel_q(w, bits).dequantize()
 }
 
 /// Per-tensor symmetric RTN (any shape).
@@ -62,12 +98,26 @@ pub fn quantize_per_tensor(w: &Tensor, bits: u32) -> Tensor {
 }
 
 /// Mean squared quantization error (diagnostics + SpinQuant objective).
+/// Streams codes in-register — scale pass + error pass over contiguous
+/// rows, never materializing the dequantized copy (the rotation search
+/// calls this per candidate per param). Arithmetic is identical to
+/// diffing against [`quantize_per_channel`], so results match bitwise.
 pub fn quant_mse(w: &Tensor, bits: u32) -> f64 {
-    let q = quantize_per_channel(w, bits);
+    let Some(lv) = levels(bits) else {
+        return 0.0;
+    };
+    if w.is_empty() {
+        return 0.0;
+    }
+    let cols = w.shape()[1];
+    let scales: Vec<f32> = column_absmax(w).iter().map(|m| m / lv).collect();
     let mut s = 0.0f64;
-    for (a, b) in w.data().iter().zip(q.data()) {
-        let d = (a - b) as f64;
-        s += d * d;
+    for row in w.data().chunks_exact(cols) {
+        for (j, &v) in row.iter().enumerate() {
+            let q = rtn_code(v, scales[j], lv) as f32 * scales[j];
+            let d = (v - q) as f64;
+            s += d * d;
+        }
     }
     s / w.len() as f64
 }
@@ -149,6 +199,41 @@ mod tests {
         };
         // Non-outlier column 0: per-channel much better than per-tensor.
         assert!(mse_col(&q_pc, 0) < mse_col(&q_pt, 0) / 10.0);
+    }
+
+    #[test]
+    fn column_absmax_matches_at2_walk() {
+        let w = randn(&[13, 7], 9);
+        let got = column_absmax(&w);
+        for j in 0..7 {
+            let want = (0..13).map(|i| w.at2(i, j).abs())
+                .fold(0.0f32, f32::max);
+            assert_eq!(got[j], want);
+        }
+    }
+
+    #[test]
+    fn code_emitting_rtn_dequantizes_identically() {
+        for bits in [2u32, 4, 8] {
+            let w = randn(&[17, 9], 20 + bits as u64);
+            let q = quantize_per_channel_q(&w, bits);
+            assert!(q.is_packed());
+            assert_eq!(q.dequantize().data(),
+                       quantize_per_channel(&w, bits).data());
+        }
+        // bits >= 16: dense passthrough, identical to the f32 identity.
+        let w = randn(&[5, 4], 30);
+        let q = quantize_per_channel_q(&w, 16);
+        assert!(!q.is_packed());
+        assert_eq!(q.dequantize(), w);
+    }
+
+    #[test]
+    fn packed_w4_is_at_most_0p3x_dense() {
+        let w = randn(&[64, 48], 31);
+        let q = quantize_per_channel_q(&w, 4);
+        assert!(q.packed_bytes() as f64 <= 0.3 * q.dense_bytes() as f64,
+                "{} packed vs {} dense", q.packed_bytes(), q.dense_bytes());
     }
 
     #[test]

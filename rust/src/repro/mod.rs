@@ -81,9 +81,9 @@ pub fn eval_bitconfig(engine: &Engine, run: &Run, bits: BitConfig,
         calib_batches: 1,
     };
     let qm = quant::prepare(engine, &run.arch, &run.params, &cfg)?;
-    let ppl = perplexity(engine, &qm.arch, &qm.params, bits.a, bits.kv,
-                         qm.had_flag, effort.ppl_batches)?;
-    let (_rows, avg) = tasks::run_suite(engine, &qm.arch, &qm.params,
+    let ppl = perplexity(engine, &qm.arch, qm.dense_params(), bits.a,
+                         bits.kv, qm.had_flag, effort.ppl_batches)?;
+    let (_rows, avg) = tasks::run_suite(engine, &qm.arch, qm.dense_params(),
                                         effort.n_per_task, bits.a, bits.kv,
                                         qm.had_flag, 99)?;
     Ok((avg, ppl.ppl, ppl.kurt_max))
@@ -152,7 +152,8 @@ pub fn table3(engine: &Engine, runs_dir: &Path, effort: Effort)
     for run in &runs {
         let cfg = PtqConfig::rtn(4);
         let qm = quant::prepare(engine, &run.arch, &run.params, &cfg)?;
-        let (rows, avg) = tasks::run_suite(engine, &qm.arch, &qm.params,
+        let (rows, avg) = tasks::run_suite(engine, &qm.arch,
+                                           qm.dense_params(),
                                            effort.n_per_task, 4, 4,
                                            qm.had_flag, 99)?;
         let mut cells = vec![run.tag.clone()];
@@ -191,7 +192,7 @@ pub fn table4(engine: &Engine, runs_dir: &Path, effort: Effort)
         let mut row = vec![label.to_string()];
         for run in &runs {
             let qm = quant::prepare(engine, &run.arch, &run.params, &cfg)?;
-            let ppl = perplexity(engine, &qm.arch, &qm.params, 4, 4,
+            let ppl = perplexity(engine, &qm.arch, qm.dense_params(), 4, 4,
                                  qm.had_flag, effort.ppl_batches)?;
             row.push(fmt_ppl(ppl.ppl));
         }
@@ -354,8 +355,8 @@ pub fn fig4(engine: &Engine, runs_dir: &Path, tags: &[&str],
             let qm = quant::prepare(engine, &run.arch, &run.params, &cfg)?;
             let mut row = vec![run.tag.clone(), w.to_string()];
             for a in a_bits {
-                let ppl = perplexity(engine, &qm.arch, &qm.params, a, 16,
-                                     0.0, effort.ppl_batches)?;
+                let ppl = perplexity(engine, &qm.arch, qm.dense_params(),
+                                     a, 16, 0.0, effort.ppl_batches)?;
                 row.push(fmt_ppl(ppl.ppl));
             }
             table.row(row);

@@ -180,11 +180,17 @@ pub struct Engine {
     inner: Arc<EngineInner>,
 }
 
+/// One compile cache entry. The per-name mutex is what makes `load`
+/// compile-once under concurrency: the first caller compiles while
+/// holding its slot, same-name callers block on the slot (not on the
+/// whole cache map), other names proceed independently.
+type CacheSlot = Mutex<Option<Arc<Executable>>>;
+
 struct EngineInner {
     client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
-    cache: Mutex<HashMap<String, Arc<Executable>>>,
+    cache: Mutex<HashMap<String, Arc<CacheSlot>>>,
 }
 
 // xla::PjRtClient wraps a thread-safe C++ client; the raw pointer fields
@@ -216,21 +222,38 @@ impl Engine {
     }
 
     /// Load + compile an artifact (cached). Compilation happens once per
-    /// process; the hot path only executes.
+    /// artifact name, even under concurrent first requests: the old
+    /// check-then-insert dropped the cache lock between lookup and
+    /// insert, so two threads racing on an uncached name both compiled
+    /// it. Now each name owns a slot mutex held across compilation —
+    /// the loser of the race blocks on the slot and receives the
+    /// winner's executable; requests for other names never wait.
     pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
-        if let Some(e) = self.inner.cache.lock().unwrap().get(name) {
+        let slot = {
+            let mut cache = self.inner.cache.lock().unwrap();
+            Arc::clone(cache.entry(name.to_string()).or_default())
+        };
+        let mut entry = slot.lock().unwrap();
+        if let Some(e) = entry.as_ref() {
             return Ok(Arc::clone(e));
         }
         let spec = self.inner.manifest.artifact(name)?.clone();
         let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&spec.file)
-            .with_context(|| format!("parsing HLO text {:?}", spec.file))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .inner
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling '{name}'"))?;
+        let exe = {
+            // PJRT entry point: serialize on EXEC_LOCK like `run` (the
+            // wrapper types' internal Rc traffic — see the safety note
+            // on `Executable`).
+            let _lock = EXEC_LOCK.lock().unwrap();
+            let proto = xla::HloModuleProto::from_text_file(&spec.file)
+                .with_context(|| {
+                    format!("parsing HLO text {:?}", spec.file)
+                })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            self.inner
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling '{name}'"))?
+        };
         let compiled = Arc::new(Executable {
             spec,
             exe,
@@ -238,22 +261,31 @@ impl Engine {
         });
         eprintln!("[runtime] compiled {name} in {:.2}s",
                   t0.elapsed().as_secs_f64());
-        self.inner
-            .cache
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), Arc::clone(&compiled));
+        // A failed compile leaves the slot empty, so a later call
+        // retries instead of caching the error.
+        *entry = Some(Arc::clone(&compiled));
         Ok(compiled)
     }
 
-    /// Time spent inside PJRT per loaded artifact (for §Perf).
+    /// Time spent inside PJRT per loaded artifact (for §Perf). Snapshots
+    /// the slot handles first so the cache map is never held while
+    /// waiting on a slot mid-compile (which would stall unrelated
+    /// `load` calls).
     pub fn exec_stats(&self) -> Vec<(String, ExecStats)> {
-        self.inner
+        let slots: Vec<(String, Arc<CacheSlot>)> = self
+            .inner
             .cache
             .lock()
             .unwrap()
             .iter()
-            .map(|(k, v)| (k.clone(), *v.stats.lock().unwrap()))
+            .map(|(k, slot)| (k.clone(), Arc::clone(slot)))
+            .collect();
+        slots
+            .into_iter()
+            .filter_map(|(k, slot)| {
+                let entry = slot.lock().unwrap();
+                entry.as_ref().map(|e| (k, *e.stats.lock().unwrap()))
+            })
             .collect()
     }
 }

@@ -3,10 +3,13 @@
 //! Everything the coordinator does to weights outside the XLA executables
 //! lives here — quantization, rotations, GPTQ's Cholesky solves, the
 //! disaggregated Muon outer loop, and statistics. Row-major layout,
-//! shape-checked operations, no external dependencies.
+//! shape-checked operations, no external dependencies. [`qtensor`] adds
+//! the packed low-bit storage + fused dequant kernels the PTQ pipeline
+//! deploys (DESIGN.md §7).
 
 pub mod linalg;
 pub mod par;
+pub mod qtensor;
 pub mod stats;
 
 use std::fmt;

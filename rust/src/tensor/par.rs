@@ -91,8 +91,10 @@ pub fn pool_for_ops(ops: usize) -> Option<&'static ThreadPool> {
 
 /// Rows per scatter block: ~4 blocks per worker balances load without
 /// drowning the queue in tiny jobs. Deterministic in (rows, workers)
-/// only; parity is unaffected because rows are independent.
-fn rows_per_block(rows: usize, n_workers: usize) -> usize {
+/// only; parity is unaffected because rows are independent. The single
+/// blocking policy for every row-partitioned kernel (here, qtensor's
+/// fused kernels, GPTQ's tail update).
+pub(crate) fn rows_per_block(rows: usize, n_workers: usize) -> usize {
     rows.div_ceil(n_workers.max(1) * 4).max(1)
 }
 

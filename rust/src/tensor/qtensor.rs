@@ -1,0 +1,561 @@
+//! Packed quantized tensors (DESIGN.md §7): integer codes at 2/4/8 bits,
+//! nibble/byte-packed row-major, plus per-output-channel f32 scales.
+//!
+//! This is the storage the PTQ pipeline actually deploys: RTN and GPTQ
+//! emit codes directly (`quant::rtn::quantize_per_channel_q`,
+//! `quant::gptq::gptq_quantize_q`), checkpoints persist them
+//! (`checkpoint::save_packed`), and the fused kernels here consume them
+//! without ever materializing a dense f32 copy. A 4-bit weight costs
+//! 0.5 bytes/param plus one f32 scale per column — ~8x below dense f32.
+//!
+//! Parity contract (pinned by `rust/tests/qtensor_properties.rs`):
+//!
+//! * [`QTensor::dequantize`] is bit-identical to the f32
+//!   quantize-dequantize path it replaces: codes are the exact
+//!   `(v/scale).round().clamp(..)` integers the f32 path multiplied back,
+//!   and `code as f32 * scale` is the same single multiplication.
+//! * [`QTensor::qmatvec`] / [`QTensor::qmatmul`] dequantize in-register
+//!   with the same accumulation order as the dense kernels, so their
+//!   results are bit-identical to running [`linalg::matmul_row`]-shaped
+//!   loops over `self.dequantize()`.
+//! * Serial and pool-parallel kernel paths share one per-row body
+//!   (row-block partitioning on the `OSP_THREADS` pool, DESIGN.md §6),
+//!   so they are bit-identical for any worker count.
+
+use std::fmt;
+
+use crate::util::threadpool::ThreadPool;
+
+use super::{linalg, par, Tensor};
+
+/// Code payload of a [`QTensor`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum QStorage {
+    /// Row-major signed codes, [`codes_per_byte`] codes per byte, each
+    /// row starting on a byte boundary (pad bits are zero).
+    Packed(Vec<u8>),
+    /// Quantization off (bits >= 16): dense f32 passthrough.
+    Dense(Vec<f32>),
+}
+
+/// Storage field width (2/4/8 bits, byte-divisible) for a logical
+/// quantization bit-width: the next packable size up. 3-bit codes live
+/// in 4-bit fields, 5/6/7-bit codes in bytes. `None` when no packed
+/// layout exists (bits 9-15 fall back to [`QStorage::Dense`]).
+pub fn storage_bits(bits: u32) -> Option<u32> {
+    match bits {
+        2 => Some(2),
+        3 | 4 => Some(4),
+        5..=8 => Some(8),
+        _ => None,
+    }
+}
+
+/// Codes per storage byte for a logical bit-width with a packed layout
+/// (4 at 2-bit, 2 at 3/4-bit, 1 at 5..8-bit).
+pub fn codes_per_byte(bits: u32) -> usize {
+    let sbits = storage_bits(bits)
+        .unwrap_or_else(|| panic!("no packed layout for {bits}-bit"));
+    (8 / sbits) as usize
+}
+
+/// Sign-extended code `j` of a packed row (`sbits`-wide fields).
+#[inline(always)]
+fn decode(row: &[u8], sbits: u32, j: usize) -> i32 {
+    let cpb = (8 / sbits) as usize;
+    let byte = row[j / cpb];
+    let sh = 8 - sbits;
+    let field = (byte >> ((j % cpb) as u32 * sbits)) << sh;
+    ((field as i8) >> sh) as i32
+}
+
+/// OR code `j` into a zeroed packed row (two's complement, masked).
+/// Hard-asserts the range: masking an out-of-range code would silently
+/// store a *different* value (e.g. 8 at 4-bit decodes as -8), which is
+/// worse than a panic for a deployment storage format.
+#[inline(always)]
+fn encode(row: &mut [u8], sbits: u32, j: usize, code: i32) {
+    assert!(
+        (-(1i64 << (sbits - 1))..(1i64 << (sbits - 1)))
+            .contains(&(code as i64)),
+        "code {code} out of range for {sbits}-bit storage");
+    let cpb = (8 / sbits) as usize;
+    let mask = ((1u16 << sbits) - 1) as u8;
+    row[j / cpb] |= ((code as u8) & mask) << ((j % cpb) as u32 * sbits);
+}
+
+/// A 2-D quantized tensor: packed integer codes plus one symmetric f32
+/// scale per output channel (= column of the `[in, out]` weight layout).
+/// `dequantize()[i][j] == code(i, j) as f32 * scales[j]`.
+#[derive(Clone, PartialEq)]
+pub struct QTensor {
+    shape: Vec<usize>,
+    bits: u32,
+    /// Per-column scales (empty for the dense passthrough).
+    scales: Vec<f32>,
+    storage: QStorage,
+}
+
+impl fmt::Debug for QTensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "QTensor{:?}[{}b, {} bytes]", self.shape, self.bits,
+               self.storage_bytes())
+    }
+}
+
+impl QTensor {
+    /// Pack signed codes (row-major, one per element) with per-column
+    /// scales. Codes must fit `bits` (two's complement); requires a
+    /// packed layout ([`storage_bits`] is Some).
+    pub fn pack(shape: &[usize], bits: u32, codes: &[i32], scales: Vec<f32>)
+                -> QTensor {
+        assert_eq!(shape.len(), 2, "QTensor::pack wants a 2-D shape");
+        let sbits = storage_bits(bits)
+            .unwrap_or_else(|| panic!("no packed layout for {bits}-bit"));
+        let (rows, cols) = (shape[0], shape[1]);
+        assert_eq!(codes.len(), rows * cols, "codes len != rows*cols");
+        assert_eq!(scales.len(), cols, "one scale per output channel");
+        let stride = row_stride(cols, bits);
+        let mut bytes = vec![0u8; rows * stride];
+        for i in 0..rows {
+            let row = &mut bytes[i * stride..(i + 1) * stride];
+            for j in 0..cols {
+                encode(row, sbits, j, codes[i * cols + j]);
+            }
+        }
+        QTensor { shape: shape.to_vec(), bits, scales,
+                  storage: QStorage::Packed(bytes) }
+    }
+
+    /// Build from producer codes at any bit-width below 16: packs when a
+    /// packed layout exists (bits <= 8), otherwise materializes
+    /// `code * scale` into a dense passthrough (9..15-bit grids, only
+    /// reachable via a user-chosen `osp quantize --w-bits N` — same
+    /// values, no compression).
+    pub fn from_codes(shape: &[usize], bits: u32, codes: &[i32],
+                      scales: Vec<f32>) -> QTensor {
+        if storage_bits(bits).is_some() {
+            return QTensor::pack(shape, bits, codes, scales);
+        }
+        assert_eq!(shape.len(), 2, "QTensor::from_codes wants a 2-D shape");
+        let cols = shape[1];
+        assert_eq!(scales.len(), cols, "one scale per output channel");
+        assert_eq!(codes.len(), shape[0] * cols, "codes len != rows*cols");
+        let data: Vec<f32> = codes
+            .iter()
+            .enumerate()
+            .map(|(e, &c)| c as f32 * scales[e % cols.max(1)])
+            .collect();
+        QTensor { shape: shape.to_vec(), bits, scales,
+                  storage: QStorage::Dense(data) }
+    }
+
+    /// Dense passthrough for bits >= 16 ("quantization off") — keeps the
+    /// 16-bit identity semantics of the f32 paths, any shape.
+    pub fn from_dense(t: &Tensor) -> QTensor {
+        QTensor { shape: t.shape().to_vec(), bits: 16, scales: Vec::new(),
+                  storage: QStorage::Dense(t.data().to_vec()) }
+    }
+
+    /// Storage field width of the packed payload.
+    fn sbits(&self) -> u32 {
+        storage_bits(self.bits).expect("dense storage has no field width")
+    }
+
+    /// Rebuild from serialized parts (checkpoint load). Validates the
+    /// invariants `pack`/`from_dense` establish.
+    pub fn from_parts(shape: Vec<usize>, bits: u32, scales: Vec<f32>,
+                      storage: QStorage) -> Result<QTensor, String> {
+        let numel: usize = shape.iter().product();
+        match &storage {
+            QStorage::Dense(d) => {
+                if d.len() != numel {
+                    return Err(format!("dense payload {} != numel {numel}",
+                                       d.len()));
+                }
+            }
+            QStorage::Packed(bytes) => {
+                if shape.len() != 2 {
+                    return Err("packed storage needs a 2-D shape".into());
+                }
+                if storage_bits(bits).is_none() {
+                    return Err(format!("unpackable bit-width {bits}"));
+                }
+                let want = shape[0] * row_stride(shape[1], bits);
+                if bytes.len() != want {
+                    return Err(format!("packed payload {} != {want} bytes",
+                                       bytes.len()));
+                }
+                if scales.len() != shape[1] {
+                    return Err(format!("{} scales for {} columns",
+                                       scales.len(), shape[1]));
+                }
+                // Pad bits must be zero: `pack` emits that canonical
+                // form and PartialEq/unpack assume it.
+                let cpb = codes_per_byte(bits);
+                let used = shape[1] % cpb;
+                if used != 0 {
+                    let stride = row_stride(shape[1], bits);
+                    let keep = used as u32 * storage_bits(bits).unwrap();
+                    for r in 0..shape[0] {
+                        if bytes[(r + 1) * stride - 1] >> keep != 0 {
+                            return Err(format!(
+                                "row {r}: nonzero pad bits"));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(QTensor { shape, bits, scales, storage })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rows(&self) -> usize {
+        self.shape[..self.shape.len() - 1].iter().product()
+    }
+
+    pub fn cols(&self) -> usize {
+        *self.shape.last().expect("rank-0 QTensor")
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    pub fn storage(&self) -> &QStorage {
+        &self.storage
+    }
+
+    pub fn is_packed(&self) -> bool {
+        matches!(self.storage, QStorage::Packed(_))
+    }
+
+    /// Bytes of the code payload (packed codes, or dense f32 fallback).
+    pub fn storage_bytes(&self) -> usize {
+        match &self.storage {
+            QStorage::Packed(b) => b.len(),
+            QStorage::Dense(d) => 4 * d.len(),
+        }
+    }
+
+    /// Total serialized weight bytes: codes + scales.
+    pub fn packed_bytes(&self) -> usize {
+        self.storage_bytes() + 4 * self.scales.len()
+    }
+
+    /// What the same tensor costs dense (f32).
+    pub fn dense_bytes(&self) -> usize {
+        4 * self.numel()
+    }
+
+    /// The signed integer code at (i, j); dense passthroughs have no
+    /// codes.
+    pub fn code_at(&self, i: usize, j: usize) -> i32 {
+        match &self.storage {
+            QStorage::Packed(bytes) => {
+                let stride = row_stride(self.cols(), self.bits);
+                decode(&bytes[i * stride..(i + 1) * stride], self.sbits(), j)
+            }
+            QStorage::Dense(_) => panic!("code_at on a dense passthrough"),
+        }
+    }
+
+    /// Unpack every code row-major (test/diagnostic helper).
+    pub fn unpack_codes(&self) -> Vec<i32> {
+        let (rows, cols) = (self.rows(), self.cols());
+        let mut out = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                out.push(self.code_at(i, j));
+            }
+        }
+        out
+    }
+
+    /// Materialize the dense f32 tensor. Bit-identical to the f32
+    /// quantize-dequantize output the codes were derived from.
+    pub fn dequantize(&self) -> Tensor {
+        match &self.storage {
+            QStorage::Dense(d) => Tensor::new(self.shape.clone(), d.clone()),
+            QStorage::Packed(bytes) => {
+                let (rows, cols) = (self.rows(), self.cols());
+                let (stride, sbits) = (row_stride(cols, self.bits),
+                                       self.sbits());
+                let mut data = vec![0.0f32; rows * cols];
+                for i in 0..rows {
+                    let row = &bytes[i * stride..(i + 1) * stride];
+                    let out = &mut data[i * cols..(i + 1) * cols];
+                    for (j, v) in out.iter_mut().enumerate() {
+                        *v = decode(row, sbits, j) as f32 * self.scales[j];
+                    }
+                }
+                Tensor::new(self.shape.clone(), data)
+            }
+        }
+    }
+
+    // ---- fused dequant kernels --------------------------------------------
+
+    /// One output row of C = deq(self) @ B: codes decode in-register,
+    /// scale-multiplied, then stream B rows in the same i-k-j order as
+    /// [`linalg::matmul_row`] — bit-identical to the dense kernel on
+    /// `self.dequantize()`, shared by the serial and parallel paths.
+    fn matmul_row(&self, i: usize, bd: &[f32], n: usize, crow: &mut [f32]) {
+        let k = self.cols();
+        match &self.storage {
+            QStorage::Dense(d) => {
+                linalg::matmul_row(&d[i * k..(i + 1) * k], bd, n, crow);
+            }
+            QStorage::Packed(bytes) => {
+                let (stride, sbits) = (row_stride(k, self.bits),
+                                       self.sbits());
+                let row = &bytes[i * stride..(i + 1) * stride];
+                for kk in 0..k {
+                    let aik = decode(row, sbits, kk) as f32
+                        * self.scales[kk];
+                    let brow = &bd[kk * n..(kk + 1) * n];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+
+    /// deq(self)[i] · x with the dense kernel's accumulation order.
+    fn row_dot(&self, i: usize, x: &[f32]) -> f32 {
+        let k = self.cols();
+        match &self.storage {
+            QStorage::Dense(d) => d[i * k..(i + 1) * k]
+                .iter()
+                .zip(x)
+                .map(|(p, q)| p * q)
+                .sum(),
+            QStorage::Packed(bytes) => {
+                let (stride, sbits) = (row_stride(k, self.bits),
+                                       self.sbits());
+                let row = &bytes[i * stride..(i + 1) * stride];
+                let mut acc = 0.0f32;
+                for (j, &xv) in x.iter().enumerate() {
+                    acc += decode(row, sbits, j) as f32
+                        * self.scales[j]
+                        * xv;
+                }
+                acc
+            }
+        }
+    }
+
+    /// C = deq(self) @ B without materializing deq(self); row-block
+    /// parallel on `pool` (serial when `None`), bit-identical either way.
+    pub fn qmatmul_with(&self, pool: Option<&ThreadPool>, b: &Tensor)
+                        -> Tensor {
+        let (m, k) = (self.rows(), self.cols());
+        let (k2, n) = (b.shape()[0], b.shape()[1]);
+        assert_eq!(k, k2, "qmatmul {:?} @ {:?}", self.shape, b.shape());
+        let mut c = Tensor::zeros(&[m, n]);
+        let bd = b.data();
+        match pool {
+            Some(p) if m > 1 && n > 0 => {
+                let rpb = par::rows_per_block(m, p.n_workers());
+                p.scatter_chunks(c.data_mut(), rpb * n, |ci, chunk| {
+                    let r0 = ci * rpb;
+                    for (ri, crow) in chunk.chunks_mut(n).enumerate() {
+                        self.matmul_row(r0 + ri, bd, n, crow);
+                    }
+                });
+            }
+            _ => {
+                let cd = c.data_mut();
+                for i in 0..m {
+                    self.matmul_row(i, bd, n, &mut cd[i * n..(i + 1) * n]);
+                }
+            }
+        }
+        c
+    }
+
+    /// C = deq(self) @ B on the shared pool above the size threshold.
+    pub fn qmatmul(&self, b: &Tensor) -> Tensor {
+        let ops = self.rows() * self.cols() * b.shape()[1];
+        self.qmatmul_with(par::pool_for_ops(ops), b)
+    }
+
+    /// y = deq(self) @ x, row-partitioned, without materializing
+    /// deq(self). Bit-identical to `par::matvec_with` on the dequantized
+    /// tensor, for any worker count.
+    pub fn qmatvec_with(&self, pool: Option<&ThreadPool>, x: &[f32])
+                        -> Vec<f32> {
+        let m = self.rows();
+        assert_eq!(self.cols(), x.len(), "qmatvec {:?} @ [{}]", self.shape,
+                   x.len());
+        let mut y = vec![0.0f32; m];
+        match pool {
+            Some(p) if m > 1 => {
+                let rpb = par::rows_per_block(m, p.n_workers());
+                p.scatter_chunks(&mut y, rpb, |ci, chunk| {
+                    let r0 = ci * rpb;
+                    for (ri, out) in chunk.iter_mut().enumerate() {
+                        *out = self.row_dot(r0 + ri, x);
+                    }
+                });
+            }
+            _ => {
+                for (i, out) in y.iter_mut().enumerate() {
+                    *out = self.row_dot(i, x);
+                }
+            }
+        }
+        y
+    }
+
+    /// y = deq(self) @ x on the shared pool above the size threshold.
+    pub fn qmatvec(&self, x: &[f32]) -> Vec<f32> {
+        self.qmatvec_with(par::pool_for_ops(self.numel()), x)
+    }
+}
+
+/// Bytes per packed row: columns padded up to a whole byte so every row
+/// starts byte-aligned (what makes row-block partitioning trivial).
+pub fn row_stride(cols: usize, bits: u32) -> usize {
+    cols.div_ceil(codes_per_byte(bits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn randn(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Pcg::new(seed, 11);
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(t.data_mut(), 1.0);
+        t
+    }
+
+    fn random_codes(rng: &mut Pcg, n: usize, bits: u32) -> Vec<i32> {
+        let span = 1i64 << bits;
+        (0..n)
+            .map(|_| (rng.below(span as u64) as i64 - (span / 2)) as i32)
+            .collect()
+    }
+
+    #[test]
+    fn pack_roundtrip_all_bits() {
+        let mut rng = Pcg::new(1, 0);
+        for bits in [2u32, 3, 4, 5, 6, 8] {
+            for (rows, cols) in [(1, 1), (3, 5), (7, 16), (4, 33)] {
+                let codes = random_codes(&mut rng, rows * cols, bits);
+                let scales = vec![1.0f32; cols];
+                let q = QTensor::pack(&[rows, cols], bits, &codes, scales);
+                assert_eq!(q.unpack_codes(), codes, "{bits}b {rows}x{cols}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_codes_without_packed_layout_is_dense() {
+        // 10-bit: codes don't fit a byte — dense passthrough, same values.
+        let codes = vec![-512, 511, 100, -7, 0, 3];
+        let q = QTensor::from_codes(&[2, 3], 10, &codes,
+                                    vec![0.5, 1.0, 2.0]);
+        assert!(!q.is_packed());
+        assert_eq!(q.dequantize().data(),
+                   &[-256.0, 511.0, 200.0, -3.5, 0.0, 6.0]);
+    }
+
+    #[test]
+    fn packed_sizes() {
+        assert_eq!(row_stride(5, 4), 3);
+        assert_eq!(row_stride(5, 3), 3); // 3-bit codes in 4-bit fields
+        assert_eq!(row_stride(4, 4), 2);
+        assert_eq!(row_stride(5, 2), 2);
+        assert_eq!(row_stride(5, 8), 5);
+        assert_eq!(row_stride(5, 6), 5); // 6-bit codes in bytes
+        let q = QTensor::pack(&[16, 5], 4, &vec![0; 80], vec![0.5; 5]);
+        assert_eq!(q.storage_bytes(), 16 * 3);
+        assert_eq!(q.packed_bytes(), 16 * 3 + 4 * 5);
+        assert_eq!(q.dense_bytes(), 4 * 80);
+    }
+
+    #[test]
+    fn dequantize_is_code_times_scale() {
+        let codes = vec![-8, 7, 0, 1, -1, 3];
+        let q = QTensor::pack(&[2, 3], 4, &codes, vec![0.5, 2.0, 1.5]);
+        assert_eq!(q.dequantize().data(),
+                   &[-4.0, 14.0, 0.0, 0.5, -2.0, 4.5]);
+        assert_eq!(q.code_at(0, 0), -8);
+        assert_eq!(q.code_at(1, 2), 3);
+    }
+
+    #[test]
+    fn dense_passthrough_identity() {
+        let t = randn(&[4, 6], 2);
+        let q = QTensor::from_dense(&t);
+        assert_eq!(q.bits(), 16);
+        assert!(!q.is_packed());
+        assert_eq!(q.dequantize(), t);
+    }
+
+    #[test]
+    fn qmatmul_matches_dense_kernel_bitwise() {
+        let mut rng = Pcg::new(3, 0);
+        for bits in [2u32, 4, 8] {
+            let (m, k, n) = (7, 13, 5);
+            let codes = random_codes(&mut rng, m * k, bits);
+            let scales: Vec<f32> =
+                (0..k).map(|j| 0.1 + 0.05 * j as f32).collect();
+            let q = QTensor::pack(&[m, k], bits, &codes, scales);
+            let b = randn(&[k, n], 40 + bits as u64);
+            let want = par::matmul_with(None, &q.dequantize(), &b);
+            let got = q.qmatmul_with(None, &b);
+            assert_eq!(want.data(), got.data(), "{bits}-bit");
+        }
+    }
+
+    #[test]
+    fn qmatvec_matches_dense_kernel_bitwise() {
+        let mut rng = Pcg::new(4, 0);
+        let (m, k) = (9, 17);
+        let codes = random_codes(&mut rng, m * k, 4);
+        let scales: Vec<f32> = (0..k).map(|j| 0.3 + 0.01 * j as f32).collect();
+        let q = QTensor::pack(&[m, k], 4, &codes, scales);
+        let x: Vec<f32> = (0..k).map(|i| i as f32 * 0.25 - 2.0).collect();
+        let want = par::matvec_with(None, &q.dequantize(), &x);
+        assert_eq!(want, q.qmatvec_with(None, &x));
+    }
+
+    #[test]
+    fn from_parts_validates() {
+        assert!(QTensor::from_parts(vec![2, 3], 4, vec![1.0; 3],
+                                    QStorage::Packed(vec![0u8; 4]))
+                .is_ok());
+        // wrong payload size
+        assert!(QTensor::from_parts(vec![2, 3], 4, vec![1.0; 3],
+                                    QStorage::Packed(vec![0u8; 5]))
+                .is_err());
+        // wrong scale count
+        assert!(QTensor::from_parts(vec![2, 3], 4, vec![1.0; 2],
+                                    QStorage::Packed(vec![0u8; 4]))
+                .is_err());
+        // unpackable bits (9-bit codes have no packed layout)
+        assert!(QTensor::from_parts(vec![2, 3], 9, vec![1.0; 3],
+                                    QStorage::Packed(vec![0u8; 4]))
+                .is_err());
+        // dense numel mismatch
+        assert!(QTensor::from_parts(vec![2, 3], 16, vec![],
+                                    QStorage::Dense(vec![0.0; 5]))
+                .is_err());
+    }
+}
