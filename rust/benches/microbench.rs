@@ -8,13 +8,18 @@
 //! `OSP_THREADS=1` vs `OSP_THREADS=4` runs to see the speedup the
 //! parallel kernel layer (DESIGN.md §6) buys.
 //!
-//! `--json` runs only the quantization section and writes
-//! `BENCH_quant.json` (packed-vs-dense matvec ns/op + bytes/param) for
-//! CI's perf trajectory.
+//! `--json` runs only the quantization + decode sections and writes
+//! `BENCH_quant.json` (packed-vs-dense matvec ns/op + bytes/param, and
+//! packed-vs-dense decode tokens/sec at batch 8) for CI's perf
+//! trajectory; `osp serve-bench --json` covers the full batch/bit-config
+//! grid in `BENCH_infer.json`.
 
 use osp::bench::{bench, Table};
 use osp::coordinator::dp::ring_all_reduce;
+use osp::data::grammar::{Grammar, LANGUAGE_SEED};
 use osp::data::{Split, TokenStream};
+use osp::eval::tasks;
+use osp::infer::{engine, DecodeParams, InferConfig, InferModel};
 use osp::quant::rtn;
 use osp::tensor::linalg;
 use osp::tensor::par;
@@ -81,6 +86,48 @@ fn bench_quant(table: &mut Table, nw: usize) -> Vec<Json> {
     records
 }
 
+/// Decode throughput on a small synthetic model: dense-f32 weights vs
+/// packed W4 (KV4), batch 8, on the shared pool. The packed row should
+/// trend >= dense at this batch size — column-stripe decode amortizes
+/// the in-register dequant across the batch while reading 1/8th the
+/// weight bytes.
+fn bench_decode(table: &mut Table, nw: usize) -> Vec<Json> {
+    let cfg = InferConfig { vocab_size: 512, d_model: 128, n_layers: 2,
+                            n_heads: 4, d_ff: 352, rope_theta: 10000.0,
+                            norm_ss: true, embproj: false };
+    let dense = InferModel::synthetic(&cfg, 17);
+    let g = Grammar::new(cfg.vocab_size, LANGUAGE_SEED);
+    let (batch, prompt_len, max_new) = (8usize, 4usize, 12usize);
+    let prompts = tasks::grammar_prompts(&g, batch, prompt_len, 1);
+    let pool = par::shared_pool();
+    let tokens = (batch * (prompt_len + max_new - 1)) as f64;
+    let mut records = Vec::new();
+    for (label, w_bits, a, kv) in [("dense f32", 16u32, 16u32, 16u32),
+                                   ("packed w4/kv4", 4, 4, 4)] {
+        let model = dense.quantized(w_bits);
+        let params = DecodeParams::greedy(a, kv, batch);
+        let t = bench(1, 3, || {
+            std::hint::black_box(engine::generate(&model, &prompts,
+                                                  max_new, params, pool));
+        });
+        let tps = tokens / t.mean_secs;
+        table.row(vec![format!("decode {label}"),
+                       format!("b{batch} d{} L{}", cfg.d_model,
+                               cfg.n_layers),
+                       format!("{:.2}", t.mean_secs * 1e3),
+                       format!("{tps:.0} tok/s par({nw})")]);
+        records.push(Json::obj(vec![
+            ("op", Json::str("decode")),
+            ("w_bits", Json::num(w_bits as f64)),
+            ("kv_bits", Json::num(kv as f64)),
+            ("batch", Json::num(batch as f64)),
+            ("tokens_per_sec", Json::num(tps)),
+            ("weight_bytes", Json::num(model.weight_bytes() as f64)),
+        ]));
+    }
+    records
+}
+
 fn main() -> anyhow::Result<()> {
     let json_mode = std::env::args().any(|a| a == "--json");
     let nw = par::configured_threads();
@@ -89,8 +136,10 @@ fn main() -> anyhow::Result<()> {
         &["op", "size", "mean (ms)", "throughput"]);
 
     if json_mode {
-        // CI path: just the quant section, serialized for trending.
-        let records = bench_quant(&mut table, nw);
+        // CI path: the quant section plus decode-throughput rows,
+        // serialized for trending.
+        let mut records = bench_quant(&mut table, nw);
+        records.extend(bench_decode(&mut table, nw));
         let doc = Json::obj(vec![
             ("bench", Json::str("quant")),
             ("threads", Json::num(nw as f64)),
@@ -156,6 +205,7 @@ fn main() -> anyhow::Result<()> {
                            w.len() as f64 / t.mean_secs / 1e6)]);
 
     bench_quant(&mut table, nw);
+    bench_decode(&mut table, nw);
 
     let x = randn(&[512, 512], 5);
     let t = bench(1, 10, || {

@@ -74,12 +74,52 @@ pub struct Trainer {
 /// "off" levels value for the evalq quantization inputs (2^20 ~ fp16+).
 pub const LEVELS_OFF: f32 = (1u32 << 20) as f32;
 
+/// Smallest bit-width with a symmetric integer grid: below 2 bits,
+/// `2^(b-1) - 1` levels is 0 (1-bit) or underflows the shift (0-bit),
+/// and a 0-level scale poisons the evalq graph with a divide-by-zero.
+pub const MIN_QUANT_BITS: u32 = 2;
+
+/// levels = 2^(bits-1) - 1 as f32 (16+ = off). Infallible: bits below
+/// [`MIN_QUANT_BITS`] clamp to the 2-bit grid as a last-resort guard —
+/// validated entry points ([`checked_levels_for_bits`],
+/// `eval::BitConfig::validate`, the CLI) reject them up front instead.
 pub fn levels_for_bits(bits: u32) -> f32 {
     if bits >= 16 {
         LEVELS_OFF
     } else {
-        (1u32 << (bits - 1)) as f32 - 1.0
+        (1u32 << (bits.max(MIN_QUANT_BITS) - 1)) as f32 - 1.0
     }
+}
+
+/// [`levels_for_bits`] that rejects unsupported widths instead of
+/// clamping.
+pub fn checked_levels_for_bits(bits: u32) -> Result<f32> {
+    if bits < MIN_QUANT_BITS {
+        bail!("unsupported bit-width {bits}: quantization needs at least \
+               {MIN_QUANT_BITS} bits (16+ = off)");
+    }
+    Ok(levels_for_bits(bits))
+}
+
+/// Element-wise equal-weight mean of same-length vectors (the cross-rank
+/// kurtosis-telemetry combine). Empty input or empty members yield an
+/// empty vector.
+pub fn mean_vecs(vs: &[Vec<f32>]) -> Vec<f32> {
+    let Some(first) = vs.first() else {
+        return Vec::new();
+    };
+    let mut out = first.clone();
+    for v in &vs[1..] {
+        debug_assert_eq!(v.len(), out.len(), "mean_vecs: ragged input");
+        for (a, b) in out.iter_mut().zip(v) {
+            *a += b;
+        }
+    }
+    let inv = 1.0 / vs.len() as f32;
+    for a in out.iter_mut() {
+        *a *= inv;
+    }
+    out
 }
 
 impl Trainer {
@@ -243,7 +283,11 @@ impl Trainer {
                     pool.scatter(rank_inputs, move |_i, batches| {
                         let mut flat: Option<Vec<f32>> = None;
                         let mut loss_sum = 0.0f64;
-                        let mut kurt: Vec<f32> = Vec::new();
+                        // Kurtosis telemetry averages over *every*
+                        // microbatch (keeping only the last one skewed
+                        // Host-mode kurt_max/kurt_mean away from the
+                        // fused executable's whole-batch semantics).
+                        let mut kurt_sum: Vec<f32> = Vec::new();
                         for tokens in batches {
                             let mut inputs: Vec<HostValue> =
                                 params.as_ref().clone();
@@ -251,7 +295,14 @@ impl Trainer {
                             let out = grad_exe.run(&inputs)?;
                             loss_sum +=
                                 out[n_p].as_f32()?.data()[0] as f64;
-                            kurt = out[n_p + 1].as_f32()?.data().to_vec();
+                            let k = out[n_p + 1].as_f32()?.data();
+                            if kurt_sum.is_empty() {
+                                kurt_sum = k.to_vec();
+                            } else {
+                                for (a, b) in kurt_sum.iter_mut().zip(k) {
+                                    *a += b;
+                                }
+                            }
                             let mut g: Vec<f32> = Vec::new();
                             for v in &out[..n_p] {
                                 g.extend_from_slice(v.as_f32()?.data());
@@ -270,20 +321,29 @@ impl Trainer {
                         for v in g.iter_mut() {
                             *v *= inv;
                         }
-                        Ok((g, loss_sum / accum as f64, kurt))
+                        for v in kurt_sum.iter_mut() {
+                            *v *= inv;
+                        }
+                        Ok((g, loss_sum / accum as f64, kurt_sum))
                     });
                 self.profiler.add("grad_exec", t0.elapsed().as_secs_f64());
 
                 let mut flats = Vec::with_capacity(self.cfg.dp_ranks);
                 let mut loss = 0.0f64;
-                let mut kurt = Vec::new();
+                let mut rank_kurts = Vec::with_capacity(self.cfg.dp_ranks);
                 for r in rank_results {
                     let (g, l, k) = r?;
                     flats.push(g);
                     loss += l;
-                    kurt = k;
+                    rank_kurts.push(k);
                 }
                 loss /= self.cfg.dp_ranks as f64;
+                // Equal-weight mean across ranks (each rank already
+                // averaged its microbatches): kurt telemetry now covers
+                // all dp_ranks * grad_accum microbatches, matching
+                // fused-mode semantics instead of reporting whichever
+                // rank's vector happened to be assigned last.
+                let kurt = mean_vecs(&rank_kurts);
 
                 let t1 = Instant::now();
                 let reduced = dp::ring_all_reduce(flats);
@@ -311,7 +371,9 @@ impl Trainer {
         let _g = self.profiler.span("eval");
         let mut nll = 0.0f64;
         let mut count = 0.0f64;
-        let mut kurt = Vec::new();
+        // Same telemetry semantics as the Host/DP step fix: average the
+        // kurt vector over every eval batch, not just the last one.
+        let mut kurt_batches: Vec<Vec<f32>> = Vec::new();
         for tokens in &self.eval_batches {
             let mut inputs: Vec<HostValue> = self
                 .params
@@ -326,9 +388,9 @@ impl Trainer {
             let out = self.evalq.run(&inputs)?;
             nll += out[0].as_f32()?.data()[0] as f64;
             count += out[1].as_f32()?.data()[0] as f64;
-            kurt = out[2].as_f32()?.data().to_vec();
+            kurt_batches.push(out[2].as_f32()?.data().to_vec());
         }
-        Ok(((nll / count).exp(), kurt))
+        Ok(((nll / count).exp(), mean_vecs(&kurt_batches)))
     }
 
     /// Run the configured number of steps with telemetry + checkpoints.
@@ -471,5 +533,40 @@ mod tests {
         assert_eq!(levels_for_bits(3), 3.0);
         assert_eq!(levels_for_bits(16), LEVELS_OFF);
         assert_eq!(levels_for_bits(32), LEVELS_OFF);
+    }
+
+    /// Regression: bits 0 panicked on shift underflow and bits 1
+    /// produced 0 levels (an evalq divide-by-zero); now both clamp to
+    /// the 2-bit grid while the checked variant rejects them.
+    #[test]
+    fn degenerate_bits_clamp_and_checked_rejects() {
+        assert_eq!(levels_for_bits(0), 1.0);
+        assert_eq!(levels_for_bits(1), 1.0);
+        assert_eq!(levels_for_bits(2), 1.0);
+        assert!(levels_for_bits(0) > 0.0);
+        assert!(checked_levels_for_bits(0).is_err());
+        assert!(checked_levels_for_bits(1).is_err());
+        assert_eq!(checked_levels_for_bits(2).unwrap(), 1.0);
+        assert_eq!(checked_levels_for_bits(16).unwrap(), LEVELS_OFF);
+    }
+
+    /// Regression for the Host/DP kurt telemetry: the step used to keep
+    /// only the last microbatch's kurt per rank and the last rank's
+    /// vector overall. The combine now equal-weight-averages across all
+    /// ranks (each rank pre-averages its microbatches), so the reported
+    /// vector matches the mean over every microbatch — what fused mode's
+    /// whole-batch kurtosis approximates.
+    #[test]
+    fn mean_vecs_averages_across_ranks() {
+        // Two ranks, two microbatches each, already rank-averaged.
+        let r0 = vec![1.0f32, 10.0]; // rank 0: mean of [0,2] and [2,18]
+        let r1 = vec![3.0f32, 30.0];
+        let m = mean_vecs(&[r0.clone(), r1.clone()]);
+        assert_eq!(m, vec![2.0, 20.0]);
+        // Not the last-rank vector the bug reported.
+        assert_ne!(m, r1);
+        // Degenerate shapes.
+        assert_eq!(mean_vecs(&[]), Vec::<f32>::new());
+        assert_eq!(mean_vecs(&[vec![5.0]]), vec![5.0]);
     }
 }

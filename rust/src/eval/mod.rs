@@ -4,9 +4,10 @@
 pub mod sinks;
 pub mod tasks;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::coordinator::levels_for_bits;
+use crate::coordinator::{checked_levels_for_bits, levels_for_bits,
+                         MIN_QUANT_BITS};
 use crate::data::{Split, TokenStream};
 use crate::quant::QuantizedModel;
 use crate::runtime::{Engine, HostValue};
@@ -30,6 +31,20 @@ impl BitConfig {
 
     pub fn label(&self) -> String {
         format!("{}-{}-{}", self.w, self.a, self.kv)
+    }
+
+    /// Reject bit-widths without a symmetric integer grid (0/1 bits used
+    /// to panic or poison the evalq graph with 0 levels). Anything >= 2
+    /// is accepted; 16+ means "off" on that axis.
+    pub fn validate(&self) -> Result<()> {
+        for (axis, bits) in [("w", self.w), ("a", self.a), ("kv", self.kv)]
+        {
+            if bits < MIN_QUANT_BITS {
+                bail!("{axis}-bits {bits} unsupported: quantization needs \
+                       at least {MIN_QUANT_BITS} bits (16+ = off)");
+            }
+        }
+        Ok(())
     }
 
     /// The paper's Table-2 columns.
@@ -58,6 +73,10 @@ pub struct PplResult {
 pub fn perplexity(engine: &Engine, arch: &str, params: &[Tensor],
                   a_bits: u32, kv_bits: u32, had_flag: f32,
                   n_batches: usize) -> Result<PplResult> {
+    // Reject grid-less bit-widths here, not just in the CLI — library
+    // callers would otherwise get silently clamped levels.
+    checked_levels_for_bits(a_bits)?;
+    checked_levels_for_bits(kv_bits)?;
     let m = engine.manifest();
     let evalq = engine.load(&format!("evalq_{arch}"))?;
     let (b, s) = (m.batch_eval, m.model.seq_len);
@@ -65,7 +84,9 @@ pub fn perplexity(engine: &Engine, arch: &str, params: &[Tensor],
                                      0, 1);
     let mut nll = 0.0f64;
     let mut count = 0.0f64;
-    let mut kurt: Vec<f32> = Vec::new();
+    // Like the Host/DP trainer fix: kurt telemetry averages over every
+    // batch instead of keeping whichever ran last.
+    let mut kurt_batches: Vec<Vec<f32>> = Vec::new();
     for i in 0..n_batches {
         let batch = valid.next_batch(b, s, i as u64);
         let mut inputs: Vec<HostValue> =
@@ -77,8 +98,9 @@ pub fn perplexity(engine: &Engine, arch: &str, params: &[Tensor],
         let out = evalq.run(&inputs)?;
         nll += out[0].as_f32()?.data()[0] as f64;
         count += out[1].as_f32()?.data()[0] as f64;
-        kurt = out[2].as_f32()?.data().to_vec();
+        kurt_batches.push(out[2].as_f32()?.data().to_vec());
     }
+    let kurt = crate::coordinator::mean_vecs(&kurt_batches);
     let per_tok = nll / count;
     let kmax = kurt.iter().cloned().fold(f32::MIN, f32::max) as f64;
     let kmean = kurt.iter().sum::<f32>() as f64 / kurt.len().max(1) as f64;
@@ -107,5 +129,17 @@ mod tests {
         assert_eq!(BitConfig::new(4, 4, 4).label(), "4-4-4");
         assert_eq!(BitConfig::FP.label(), "16-16-16");
         assert_eq!(BitConfig::table2_columns().len(), 5);
+    }
+
+    #[test]
+    fn bitconfig_validation() {
+        assert!(BitConfig::new(4, 4, 4).validate().is_ok());
+        assert!(BitConfig::FP.validate().is_ok());
+        assert!(BitConfig::new(0, 4, 4).validate().is_err());
+        assert!(BitConfig::new(4, 1, 4).validate().is_err());
+        assert!(BitConfig::new(4, 4, 1).validate().is_err());
+        for c in BitConfig::table2_columns() {
+            assert!(c.validate().is_ok(), "{}", c.label());
+        }
     }
 }

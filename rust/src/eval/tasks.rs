@@ -14,9 +14,11 @@ use anyhow::Result;
 use crate::coordinator::levels_for_bits;
 use crate::data::grammar::{Class, Grammar, BOS, COLON, EQUALS, LPAREN,
                            N_DIGITS, PLUS, QUERY, RPAREN, SEP};
+use crate::infer::{engine, DecodeParams, InferModel};
 use crate::runtime::{Engine, HostValue};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg;
+use crate::util::threadpool::ThreadPool;
 
 pub const N_OPTIONS: usize = 4;
 
@@ -236,6 +238,8 @@ fn generate_one(g: &Grammar, task: &str, rng: &mut Pcg) -> Instance {
 pub fn accuracy(engine: &Engine, arch: &str, params: &[Tensor],
                 instances: &[Instance], a_bits: u32, kv_bits: u32,
                 had_flag: f32) -> Result<f64> {
+    crate::coordinator::checked_levels_for_bits(a_bits)?;
+    crate::coordinator::checked_levels_for_bits(kv_bits)?;
     let m = engine.manifest();
     let logitsq = engine.load(&format!("logitsq_{arch}"))?;
     let (b, s, v) = (m.batch_eval, m.model.seq_len, m.model.vocab_size);
@@ -277,6 +281,75 @@ pub fn accuracy(engine: &Engine, arch: &str, params: &[Tensor],
         }
     }
     Ok(correct as f64 / total.max(1) as f64)
+}
+
+/// Grammar-document prefixes for decode checks: `n` prompts of
+/// `prompt_len` tokens drawn from the language the model was trained on.
+pub fn grammar_prompts(g: &Grammar, n: usize, prompt_len: usize,
+                       seed: u64) -> Vec<Vec<i32>> {
+    assert!(prompt_len > 0);
+    let mut out = Vec::with_capacity(n);
+    let mut doc_idx = 0u64;
+    while out.len() < n {
+        let mut rng = Pcg::new(seed ^ 0xDEC0DE, doc_idx);
+        doc_idx += 1;
+        let mut doc = g.document(&mut rng);
+        doc.truncate(prompt_len);
+        while doc.len() < prompt_len {
+            doc.push(SEP);
+        }
+        out.push(doc);
+    }
+    out
+}
+
+/// Outcome of [`generation_consistency`].
+#[derive(Clone, Copy, Debug)]
+pub struct ConsistencyReport {
+    pub prompts: usize,
+    pub tokens: usize,
+    pub mismatches: usize,
+}
+
+impl ConsistencyReport {
+    pub fn agreement(&self) -> f64 {
+        if self.tokens == 0 {
+            return 1.0;
+        }
+        (self.tokens - self.mismatches) as f64 / self.tokens as f64
+    }
+}
+
+/// Generation-consistency check: greedy-decode the same grammar prompts
+/// on the packed model and on its dense-f32 twin
+/// ([`InferModel::dequantized`]) under identical runtime bits, and count
+/// token mismatches. The packed kernels and quantized KV cache are
+/// bit-identical to the dense path by construction, so any mismatch is
+/// an engine bug — `osp generate --check` and the property tests gate on
+/// zero.
+pub fn generation_consistency(packed: &InferModel, g: &Grammar, n_prompts: usize,
+                              prompt_len: usize, max_new: usize,
+                              a_bits: u32, kv_bits: u32, seed: u64,
+                              pool: Option<&ThreadPool>)
+                              -> ConsistencyReport {
+    let dense = packed.dequantized();
+    let prompts = grammar_prompts(g, n_prompts, prompt_len, seed);
+    let params = DecodeParams::greedy(a_bits, kv_bits,
+                                      n_prompts.max(1));
+    let a = engine::generate(packed, &prompts, max_new, params, pool);
+    let b = engine::generate(&dense, &prompts, max_new, params, pool);
+    let mut tokens = 0usize;
+    let mut mismatches = 0usize;
+    for (x, y) in a.iter().zip(&b) {
+        tokens += x.len().max(y.len());
+        mismatches += x
+            .iter()
+            .zip(y)
+            .filter(|(p, q)| p != q)
+            .count()
+            + x.len().abs_diff(y.len());
+    }
+    ConsistencyReport { prompts: prompts.len(), tokens, mismatches }
 }
 
 /// Run the full 10-task suite; returns (task, accuracy) pairs + average.
@@ -353,6 +426,32 @@ mod tests {
             let correct = inst.options[inst.answer] - 8;
             assert_eq!((a + b) % N_DIGITS as i32, correct);
         }
+    }
+
+    #[test]
+    fn grammar_prompts_are_sized_and_in_vocab() {
+        let g = grammar();
+        let prompts = grammar_prompts(&g, 6, 9, 3);
+        assert_eq!(prompts.len(), 6);
+        for p in &prompts {
+            assert_eq!(p.len(), 9);
+            assert!(p.iter().all(|&t| (0..512).contains(&t)));
+        }
+        assert_eq!(prompts, grammar_prompts(&g, 6, 9, 3));
+    }
+
+    #[test]
+    fn packed_kv4_decode_is_consistent_with_dense() {
+        use crate::infer::InferConfig;
+        let g = Grammar::new(128, 42);
+        let cfg = InferConfig { vocab_size: 128, d_model: 32, n_layers: 2,
+                                n_heads: 2, d_ff: 48, rope_theta: 10000.0,
+                                norm_ss: true, embproj: false };
+        let packed = InferModel::synthetic(&cfg, 9).quantized(4);
+        let rep = generation_consistency(&packed, &g, 4, 6, 8, 4, 4, 1,
+                                         None);
+        assert_eq!(rep.mismatches, 0, "agreement {}", rep.agreement());
+        assert_eq!(rep.tokens, 4 * 8);
     }
 
     #[test]

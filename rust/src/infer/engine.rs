@@ -1,0 +1,344 @@
+//! Continuous-batching decode scheduler (DESIGN.md §8).
+//!
+//! [`DecodeEngine`] owns a FIFO of [`GenRequest`]s and a set of active
+//! sequences capped at `max_batch`. Every [`DecodeEngine::step`]
+//! processes exactly one token per active sequence — prompt tokens
+//! (prefill) and generated tokens ride the same batched forward pass —
+//! then evicts finished sequences and admits queued ones, so the batch
+//! stays full at *step* granularity.
+//!
+//! Determinism: a sequence's stream depends only on (model, its own
+//! prompt, decode params, its own sampling RNG) — per-row kernels and
+//! per-sequence attention make results independent of batch composition
+//! and worker count, so continuous batching never changes output
+//! (pinned by `rust/tests/infer_properties.rs`).
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::util::rng::Pcg;
+use crate::util::threadpool::ThreadPool;
+
+use super::kv::SeqKv;
+use super::{sample_token, InferModel};
+
+/// Runtime decode configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeParams {
+    /// Activation fake-quant bits (16 = off), like the evalq input.
+    pub a_bits: u32,
+    /// KV-cache storage bits (16 = f32 passthrough).
+    pub kv_bits: u32,
+    /// Active-sequence cap (the batching knob).
+    pub max_batch: usize,
+    /// <= 0 is greedy argmax.
+    pub temperature: f32,
+    /// Base seed; each request samples from `seed ^ request id`.
+    pub seed: u64,
+}
+
+impl DecodeParams {
+    pub fn greedy(a_bits: u32, kv_bits: u32, max_batch: usize)
+                  -> DecodeParams {
+        DecodeParams { a_bits, kv_bits, max_batch, temperature: 0.0,
+                       seed: 0 }
+    }
+}
+
+/// One generation request.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub id: usize,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+}
+
+/// A finished request: the prompt plus `generated` new tokens.
+#[derive(Clone, Debug)]
+pub struct GenResult {
+    pub id: usize,
+    pub prompt_len: usize,
+    pub generated: Vec<i32>,
+}
+
+struct Active {
+    id: usize,
+    /// Prompt followed by generated tokens.
+    tokens: Vec<i32>,
+    prompt_len: usize,
+    max_new: usize,
+    cache: SeqKv,
+    rng: Pcg,
+}
+
+impl Active {
+    fn n_generated(&self) -> usize {
+        self.tokens.len() - self.prompt_len
+    }
+
+    fn done(&self) -> bool {
+        self.n_generated() >= self.max_new
+    }
+}
+
+/// Totals of one engine run (the serve-bench numbers).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DecodeStats {
+    /// Forward tokens processed (prefill + decode positions).
+    pub tokens_processed: u64,
+    /// Newly generated tokens.
+    pub tokens_generated: u64,
+    pub steps: u64,
+    pub wall_secs: f64,
+    /// Peak total KV bytes across concurrently-active sequences.
+    pub peak_kv_bytes: usize,
+}
+
+impl DecodeStats {
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens_processed as f64 / self.wall_secs.max(1e-9)
+    }
+
+    pub fn generated_per_sec(&self) -> f64 {
+        self.tokens_generated as f64 / self.wall_secs.max(1e-9)
+    }
+}
+
+pub struct DecodeEngine<'m, 'p> {
+    model: &'m InferModel,
+    params: DecodeParams,
+    pool: Option<&'p ThreadPool>,
+    queue: VecDeque<GenRequest>,
+    active: Vec<Active>,
+    finished: Vec<GenResult>,
+    pub stats: DecodeStats,
+}
+
+impl<'m, 'p> DecodeEngine<'m, 'p> {
+    pub fn new(model: &'m InferModel, params: DecodeParams,
+               pool: Option<&'p ThreadPool>) -> DecodeEngine<'m, 'p> {
+        assert!(params.max_batch > 0, "max_batch must be positive");
+        DecodeEngine { model, params, pool, queue: VecDeque::new(),
+                       active: Vec::new(), finished: Vec::new(),
+                       stats: DecodeStats::default() }
+    }
+
+    /// Enqueue a request (admitted at the next step with a free slot).
+    /// Empty prompts are given a BOS-like token 0 so position 0 exists.
+    pub fn submit(&mut self, mut req: GenRequest) {
+        if req.prompt.is_empty() {
+            req.prompt.push(0);
+        }
+        self.queue.push_back(req);
+    }
+
+    pub fn n_pending(&self) -> usize {
+        self.queue.len() + self.active.len()
+    }
+
+    fn admit(&mut self) {
+        while self.active.len() < self.params.max_batch {
+            let Some(req) = self.queue.pop_front() else { break };
+            self.active.push(Active {
+                id: req.id,
+                prompt_len: req.prompt.len(),
+                tokens: req.prompt,
+                max_new: req.max_new,
+                cache: self.model.new_cache(self.params.kv_bits),
+                rng: Pcg::new(self.params.seed ^ req.id as u64, 77),
+            });
+        }
+    }
+
+    /// One engine step: admit, run one batched forward token per active
+    /// sequence, sample where the prompt is exhausted, evict finished
+    /// sequences. Returns the number of tokens processed (0 = idle).
+    pub fn step(&mut self) -> usize {
+        let t0 = Instant::now();
+        self.admit();
+        if self.active.is_empty() {
+            return 0;
+        }
+        // Each sequence feeds the token at its cache position; logits
+        // from the last known token produce the next sample. A sequence
+        // samples only while it still owes tokens (`max_new` 0 must
+        // generate nothing), and the logits head is skipped entirely on
+        // pure-prefill steps where nobody will.
+        let tokens: Vec<i32> = self
+            .active
+            .iter()
+            .map(|a| a.tokens[a.cache.n_tokens()])
+            .collect();
+        let will_sample = |a: &Active| {
+            a.cache.n_tokens() + 1 == a.tokens.len()
+                && a.n_generated() < a.max_new
+        };
+        let want_logits = self.active.iter().any(|a| will_sample(a));
+        let logits = {
+            let mut caches: Vec<&mut SeqKv> =
+                self.active.iter_mut().map(|a| &mut a.cache).collect();
+            self.model.decode_step(self.pool, &tokens, &mut caches,
+                                   self.params.a_bits, want_logits)
+        };
+        if let Some(logits) = logits {
+            let vocab = self.model.cfg.vocab_size;
+            for (r, a) in self.active.iter_mut().enumerate() {
+                // After the forward, the cache advanced past the fed
+                // token.
+                if a.cache.n_tokens() == a.tokens.len()
+                    && a.n_generated() < a.max_new
+                {
+                    let row = &logits.data()[r * vocab..(r + 1) * vocab];
+                    let next = sample_token(row, self.params.temperature,
+                                            &mut a.rng);
+                    a.tokens.push(next);
+                }
+            }
+        }
+        let kv_bytes: usize =
+            self.active.iter().map(|a| a.cache.bytes()).sum();
+        self.stats.peak_kv_bytes = self.stats.peak_kv_bytes.max(kv_bytes);
+        let processed = tokens.len();
+        self.stats.tokens_processed += processed as u64;
+        self.stats.steps += 1;
+        // Evict in place, keeping submission order within `finished`
+        // resolution by id later.
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].done() {
+                let a = self.active.remove(i);
+                self.stats.tokens_generated += a.n_generated() as u64;
+                self.finished.push(GenResult {
+                    id: a.id,
+                    prompt_len: a.prompt_len,
+                    generated: a.tokens[a.prompt_len..].to_vec(),
+                });
+            } else {
+                i += 1;
+            }
+        }
+        self.stats.wall_secs += t0.elapsed().as_secs_f64();
+        processed
+    }
+
+    /// Drive until every submitted request finishes; results sorted by
+    /// request id.
+    pub fn run(&mut self) -> Vec<GenResult> {
+        while self.n_pending() > 0 {
+            self.step();
+        }
+        let mut out = std::mem::take(&mut self.finished);
+        out.sort_by_key(|r| r.id);
+        out
+    }
+}
+
+/// Decode `prompts` to completion under `params`; returns the generated
+/// tokens per prompt (order matches input). The one-call entry point the
+/// consistency checks and `osp generate` use.
+pub fn generate(model: &InferModel, prompts: &[Vec<i32>], max_new: usize,
+                params: DecodeParams, pool: Option<&ThreadPool>)
+                -> Vec<Vec<i32>> {
+    let mut eng = DecodeEngine::new(model, params, pool);
+    for (i, p) in prompts.iter().enumerate() {
+        eng.submit(GenRequest { id: i, prompt: p.clone(), max_new });
+    }
+    eng.run().into_iter().map(|r| r.generated).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::InferConfig;
+
+    fn tiny_model() -> InferModel {
+        let cfg = InferConfig { vocab_size: 64, d_model: 16, n_layers: 2,
+                                n_heads: 2, d_ff: 24, rope_theta: 10000.0,
+                                norm_ss: false, embproj: false };
+        InferModel::synthetic(&cfg, 11)
+    }
+
+    #[test]
+    fn generates_requested_token_counts() {
+        let m = tiny_model();
+        let prompts = vec![vec![1, 2, 3], vec![4], vec![5, 6]];
+        let outs = generate(&m, &prompts, 5,
+                            DecodeParams::greedy(16, 16, 2), None);
+        assert_eq!(outs.len(), 3);
+        for o in &outs {
+            assert_eq!(o.len(), 5);
+            for &t in o {
+                assert!((0..64).contains(&t));
+            }
+        }
+    }
+
+    #[test]
+    fn batch_composition_does_not_change_streams() {
+        let m = tiny_model();
+        let prompts = vec![vec![1, 2, 3, 4], vec![9], vec![7, 8, 9, 10, 11]];
+        let solo: Vec<Vec<i32>> = prompts
+            .iter()
+            .map(|p| generate(&m, std::slice::from_ref(p), 6,
+                              DecodeParams::greedy(4, 4, 1), None)
+                 .remove(0))
+            .collect();
+        for max_batch in [1usize, 2, 3] {
+            let together = generate(&m, &prompts, 6,
+                                    DecodeParams::greedy(4, 4, max_batch),
+                                    None);
+            assert_eq!(together, solo, "max_batch={max_batch}");
+        }
+    }
+
+    #[test]
+    fn scheduler_admits_and_evicts_at_step_granularity() {
+        let m = tiny_model();
+        let mut eng = DecodeEngine::new(&m, DecodeParams::greedy(16, 16, 2),
+                                        None);
+        for i in 0..4 {
+            eng.submit(GenRequest { id: i, prompt: vec![1, 2], max_new: 2 });
+        }
+        assert_eq!(eng.n_pending(), 4);
+        // First step admits only max_batch = 2 sequences.
+        assert_eq!(eng.step(), 2);
+        let results = eng.run();
+        assert_eq!(results.len(), 4);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.id, i);
+            assert_eq!(r.generated.len(), 2);
+        }
+        // All requests saw the same prompt => identical greedy streams.
+        for r in &results[1..] {
+            assert_eq!(r.generated, results[0].generated);
+        }
+        assert!(eng.stats.tokens_processed >= 4 * 3);
+        assert!(eng.stats.peak_kv_bytes > 0);
+    }
+
+    #[test]
+    fn max_new_zero_generates_nothing() {
+        let m = tiny_model();
+        let outs = generate(&m, &[vec![1, 2, 3], vec![4]], 0,
+                            DecodeParams::greedy(4, 4, 2), None);
+        assert_eq!(outs, vec![Vec::<i32>::new(), Vec::new()]);
+    }
+
+    #[test]
+    fn empty_prompt_gets_bos() {
+        let m = tiny_model();
+        let outs = generate(&m, &[vec![]], 3,
+                            DecodeParams::greedy(16, 16, 1), None);
+        assert_eq!(outs[0].len(), 3);
+    }
+
+    #[test]
+    fn temperature_sampling_is_seed_deterministic() {
+        let m = tiny_model();
+        let p = DecodeParams { a_bits: 16, kv_bits: 16, max_batch: 2,
+                               temperature: 0.8, seed: 42 };
+        let a = generate(&m, &[vec![1, 2], vec![3]], 4, p, None);
+        let b = generate(&m, &[vec![1, 2], vec![3]], 4, p, None);
+        assert_eq!(a, b);
+    }
+}

@@ -9,7 +9,9 @@
 //!
 //! Module map (see rust/DESIGN.md §3):
 //! * [`util`] — hand-built substrates (JSON, RNG, CLI, threadpool,
-//!   property testing); the offline build vendors only the `xla` crate.
+//!   property testing); this offline build has no external crates beyond
+//!   `anyhow` — the PJRT surface is the fail-fast stub in
+//!   `runtime/xla_stub.rs`.
 //! * [`tensor`] — dense f32 tensor/linalg library (matmul, QR, Cholesky,
 //!   Hadamard, moment statistics) plus the shared parallel kernel layer
 //!   ([`tensor::par`], `OSP_THREADS` workers — DESIGN.md §6).
@@ -19,6 +21,8 @@
 //!   optimizer-parallel modes, simulated data parallelism).
 //! * [`quant`] — RTN / GPTQ / QuaRot-lite / SpinQuant-lite and EmbProj
 //!   absorption.
+//! * [`infer`] — host-side batched decode engine on packed weights with
+//!   a quantized KV cache and continuous batching (DESIGN.md §8).
 //! * [`eval`] — perplexity, the 10-task synthetic benchmark suite, and
 //!   attention-sink analysis.
 //! * [`metrics`] — telemetry registry, histograms, kurtosis tracking.
@@ -32,6 +36,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod infer;
 pub mod metrics;
 pub mod quant;
 pub mod repro;

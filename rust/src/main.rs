@@ -12,16 +12,22 @@
 
 use std::path::PathBuf;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
+use osp::bench::Table;
 use osp::checkpoint;
 use osp::config::{TrainConfig, ABLATION_GRID};
 use osp::coordinator::Trainer;
-use osp::eval::{perplexity, perplexity_packed, tasks};
+use osp::data::grammar::{Grammar, LANGUAGE_SEED};
+use osp::eval::{perplexity, perplexity_packed, tasks, BitConfig};
+use osp::infer::{engine as decode, DecodeEngine, DecodeParams, GenRequest,
+                 InferConfig, InferModel};
 use osp::quant::{self, PtqConfig, Rotation, WeightMethod};
 use osp::repro::{self, Effort};
-use osp::runtime::Engine;
+use osp::runtime::{Engine, Manifest};
+use osp::tensor::par;
 use osp::util::cli::Args;
+use osp::util::json::Json;
 
 const HELP: &str = "\
 osp — Outlier-Safe Pre-Training coordinator (Park et al., ACL 2025 repro)
@@ -42,6 +48,19 @@ USAGE: osp <subcommand> [flags]
              [--save-packed FILE]   persist the packed-code model (~8x
                                     smaller at W4), or
              --packed FILE          evaluate a previously saved one
+  generate   autoregressive decode straight off packed weights
+             --packed FILE [--n-heads N --rope-theta F] |
+             --ckpt DIR [--w-bits N] | --synthetic [--arch A]
+             [--prompt \"1 2 3\"] [--prompts N --prompt-len N]
+             [--max-new N] [--a-bits N] [--kv-bits N] [--max-batch N]
+             [--temperature F] [--seed N]
+             [--check true]         also decode the dense-f32 twin and
+                                    verify the streams match bit-exactly
+  serve-bench  sustained decode throughput on a synthetic model across
+             the Table-2 bit configs
+             [--batches 1,8,32] [--prompt-len N] [--max-new N]
+             [--d-model N --n-layers N --n-heads N --d-ff N --vocab N]
+             [--json [FILE]]        write BENCH_infer.json for CI
   analyze    [--runs-dir DIR] [--tags adam,osp]
 
   common     --artifacts DIR (default: artifacts)
@@ -50,6 +69,15 @@ USAGE: osp <subcommand> [flags]
 fn engine_from(args: &Args) -> Result<Engine> {
     let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
     Engine::open(&dir)
+}
+
+/// Parse a `--*-bits` flag, rejecting widths without a symmetric
+/// integer grid (0/1 bits used to panic or divide-by-zero downstream).
+fn bits_arg(args: &Args, key: &str, default: u32) -> Result<u32> {
+    let bits = args.usize_or(key, default as usize) as u32;
+    osp::coordinator::checked_levels_for_bits(bits)
+        .with_context(|| format!("--{key}"))?;
+    Ok(bits)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -146,8 +174,8 @@ fn cmd_suite(args: &Args) -> Result<()> {
     let ckpt = PathBuf::from(
         args.get("ckpt").ok_or_else(|| anyhow!("--ckpt required"))?);
     let ck = checkpoint::load(&ckpt)?;
-    let a = args.usize_or("a-bits", 16) as u32;
-    let kv = args.usize_or("kv-bits", 16) as u32;
+    let a = bits_arg(args, "a-bits", 16)?;
+    let kv = bits_arg(args, "kv-bits", 16)?;
     let (rows, avg) = tasks::run_suite(&engine, &ck.arch, &ck.params, 24,
                                        a, kv, 0.0, 99)?;
     for (task, acc) in rows {
@@ -163,8 +191,8 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         // Evaluate a packed-code model straight from disk: no f32
         // checkpoint, no re-quantization.
         let qm = checkpoint::load_packed(&PathBuf::from(packed))?;
-        let a = args.usize_or("a-bits", 4) as u32;
-        let kv = args.usize_or("kv-bits", 4) as u32;
+        let a = bits_arg(args, "a-bits", 4)?;
+        let kv = bits_arg(args, "kv-bits", 4)?;
         let q = perplexity_packed(&engine, &qm, a, kv, 2)?;
         println!(
             "packed model {packed} ({} KiB packed, {:.2}x of dense): \
@@ -178,7 +206,7 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         args.get("ckpt").ok_or_else(|| anyhow!("--ckpt required"))?);
     let ck = checkpoint::load(&ckpt)?;
     let cfg = PtqConfig {
-        w_bits: args.usize_or("w-bits", 4) as u32,
+        w_bits: bits_arg(args, "w-bits", 4)?,
         method: match args.str_or("method", "rtn").as_str() {
             "gptq" => WeightMethod::Gptq,
             _ => WeightMethod::Rtn,
@@ -200,13 +228,240 @@ fn cmd_quantize(args: &Args) -> Result<()> {
             qm.packed_bytes() / 1024, qm.dense_bytes() / 1024,
             qm.packed_bytes() as f64 / qm.dense_bytes().max(1) as f64);
     }
-    let a = args.usize_or("a-bits", 4) as u32;
-    let kv = args.usize_or("kv-bits", 4) as u32;
+    let a = bits_arg(args, "a-bits", 4)?;
+    let kv = bits_arg(args, "kv-bits", 4)?;
     let fp = perplexity(&engine, &ck.arch, &ck.params, 16, 16, 0.0, 2)?;
     let q = perplexity(&engine, &qm.arch, qm.dense_params(), a, kv,
                        qm.had_flag, 2)?;
     println!("{}: fp16 ppl {:.2} -> quantized ppl {:.2} (kurt_max {:.2})",
              cfg.label(), fp.ppl, q.ppl, fp.kurt_max);
+    Ok(())
+}
+
+/// Explicit token-id prompt ("1 2 3" or "1,2,3"), vocab-checked.
+fn parse_prompt(s: &str, vocab: usize) -> Result<Vec<i32>> {
+    s.split(|c: char| c == ',' || c.is_whitespace())
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            let v: i64 = t
+                .parse()
+                .map_err(|_| anyhow!("--prompt token '{t}' is not an \
+                                      integer"))?;
+            if v < 0 || v as usize >= vocab {
+                bail!("--prompt token {v} outside vocab 0..{vocab}");
+            }
+            Ok(v as i32)
+        })
+        .collect()
+}
+
+/// Resolve the model `osp generate` decodes: a packed artifact, a dense
+/// checkpoint quantized on the fly, or a synthetic demo model (no
+/// artifacts needed).
+fn generate_model(args: &Args) -> Result<InferModel> {
+    let w_bits = bits_arg(args, "w-bits", 4)?;
+    if let Some(packed) = args.get("packed") {
+        let qm = checkpoint::load_packed(&PathBuf::from(packed))?;
+        // The OSPQ file does not record n_heads/rope_theta: take them
+        // from an explicit --n-heads (artifact-free use), else from the
+        // manifest — cross-checking the scale so a packed model is not
+        // silently decoded against the wrong artifact dir's head count.
+        if args.has("n-heads") {
+            return qm.decoder(args.usize_or("n-heads", 0),
+                              args.f64_or("rope-theta", 10000.0) as f32);
+        }
+        let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+        let m = Manifest::load(&dir).context(
+            "--packed needs artifacts/manifest.json for \
+             n_heads/rope_theta (or pass --n-heads [--rope-theta])")?;
+        let model = qm.decoder(m.model.n_heads,
+                               m.model.rope_theta as f32)?;
+        if model.cfg.d_model != m.model.d_model
+            || model.cfg.vocab_size != m.model.vocab_size
+        {
+            bail!("packed model is d_model={} vocab={}, but {:?} \
+                   describes d_model={} vocab={} — wrong artifact dir \
+                   for this model",
+                  model.cfg.d_model, model.cfg.vocab_size, dir,
+                  m.model.d_model, m.model.vocab_size);
+        }
+        return Ok(model);
+    }
+    if let Some(ckpt) = args.get("ckpt") {
+        let engine = engine_from(args)?;
+        let ck = checkpoint::load(&PathBuf::from(ckpt))?;
+        let cfg = PtqConfig {
+            w_bits,
+            method: match args.str_or("method", "rtn").as_str() {
+                "gptq" => WeightMethod::Gptq,
+                _ => WeightMethod::Rtn,
+            },
+            rotation: Rotation::None,
+            ffn_had: false,
+            seed: args.u64_or("seed", 7),
+            calib_batches: args.usize_or("calib-batches", 2),
+        };
+        let qm = quant::prepare(&engine, &ck.arch, &ck.params, &cfg)?;
+        let m = engine.manifest();
+        return qm.decoder(m.model.n_heads, m.model.rope_theta as f32);
+    }
+    if args.bool_or("synthetic", false) {
+        let (norm_ss, embproj) =
+            InferConfig::arch_knobs(&args.str_or("arch", "ssnorm_plain"))?;
+        let cfg = InferConfig {
+            vocab_size: args.usize_or("vocab", 512),
+            d_model: args.usize_or("d-model", 128),
+            n_layers: args.usize_or("n-layers", 4),
+            n_heads: args.usize_or("n-heads", 4),
+            d_ff: args.usize_or("d-ff", 352),
+            rope_theta: 10000.0,
+            norm_ss,
+            embproj,
+        };
+        cfg.validate()?;
+        let dense = InferModel::synthetic(&cfg, args.u64_or("seed", 7));
+        return Ok(dense.quantized(w_bits));
+    }
+    bail!("generate needs --packed FILE, --ckpt DIR, or --synthetic")
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let model = generate_model(args)?;
+    let vocab = model.cfg.vocab_size;
+    let max_new = args.usize_or("max-new", 32);
+    let params = DecodeParams {
+        a_bits: bits_arg(args, "a-bits", 16)?,
+        kv_bits: bits_arg(args, "kv-bits", 16)?,
+        max_batch: args.usize_or("max-batch", 8).max(1),
+        temperature: args.f64_or("temperature", 0.0) as f32,
+        seed: args.u64_or("seed", 7),
+    };
+    let prompts: Vec<Vec<i32>> = match args.get("prompt") {
+        Some(s) => vec![parse_prompt(s, vocab)?],
+        None => {
+            let g = Grammar::new(vocab, LANGUAGE_SEED);
+            tasks::grammar_prompts(&g, args.usize_or("prompts", 4).max(1),
+                                   args.usize_or("prompt-len", 8).max(1),
+                                   params.seed)
+        }
+    };
+    let pool = par::shared_pool();
+    let mut eng = DecodeEngine::new(&model, params, pool);
+    for (i, p) in prompts.iter().enumerate() {
+        eng.submit(GenRequest { id: i, prompt: p.clone(), max_new });
+    }
+    let results = eng.run();
+    for r in &results {
+        println!("[{}] prompt {:?} -> {:?}", r.id, prompts[r.id],
+                 r.generated);
+    }
+    let st = eng.stats;
+    println!(
+        "{} sequences, {} tokens in {:.2}s: {:.0} tok/s ({:.0} \
+         generated/s), peak KV {} KiB, weights {} KiB",
+        results.len(), st.tokens_processed, st.wall_secs,
+        st.tokens_per_sec(), st.generated_per_sec(),
+        st.peak_kv_bytes / 1024, model.weight_bytes() / 1024);
+    if args.bool_or("check", false) {
+        let dense = model.dequantized();
+        let want = decode::generate(&dense, &prompts, max_new, params, pool);
+        let mut mismatches = 0usize;
+        for (r, w) in results.iter().zip(&want) {
+            if &r.generated != w {
+                mismatches += 1;
+                eprintln!("[{}] packed {:?} != dense {:?}", r.id,
+                          r.generated, w);
+            }
+        }
+        if mismatches > 0 {
+            bail!("{mismatches}/{} streams diverged from the dense-f32 \
+                   twin", results.len());
+        }
+        println!("check: packed and dense-f32 token streams identical \
+                  ({} sequences)", results.len());
+    }
+    Ok(())
+}
+
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    let cfg = InferConfig {
+        vocab_size: args.usize_or("vocab", 512),
+        d_model: args.usize_or("d-model", 256),
+        n_layers: args.usize_or("n-layers", 4),
+        n_heads: args.usize_or("n-heads", 8),
+        d_ff: args.usize_or("d-ff", 688),
+        rope_theta: 10000.0,
+        norm_ss: true,
+        embproj: false,
+    };
+    cfg.validate()?;
+    let prompt_len = args.usize_or("prompt-len", 8).max(1);
+    let max_new = args.usize_or("max-new", 32);
+    let batches: Vec<usize> = args
+        .list_or("batches", &["1", "8", "32"])
+        .iter()
+        .map(|s| s.parse().map_err(|_| anyhow!("--batches wants ints")))
+        .collect::<Result<_>>()?;
+    let dense = InferModel::synthetic(&cfg, args.u64_or("seed", 11));
+    let g = Grammar::new(cfg.vocab_size, LANGUAGE_SEED);
+    let pool = par::shared_pool();
+    let nw = par::configured_threads();
+    let mut table = Table::new(
+        &format!("decode serve-bench (OSP_THREADS={nw}, d={} L={} \
+                  prompt={prompt_len} new={max_new})",
+                 cfg.d_model, cfg.n_layers),
+        &["config", "batch", "tok/s", "gen tok/s", "peak KV KiB",
+          "weights KiB"]);
+    let mut records = Vec::new();
+    for bc in BitConfig::table2_columns() {
+        bc.validate()?;
+        let model = dense.quantized(bc.w);
+        for &batch in &batches {
+            let prompts = tasks::grammar_prompts(&g, batch, prompt_len, 1);
+            let params = DecodeParams::greedy(bc.a, bc.kv, batch.max(1));
+            let mut eng = DecodeEngine::new(&model, params, pool);
+            for (i, p) in prompts.iter().enumerate() {
+                eng.submit(GenRequest { id: i, prompt: p.clone(),
+                                        max_new });
+            }
+            eng.run();
+            let st = eng.stats;
+            table.row(vec![
+                bc.label(), format!("{batch}"),
+                format!("{:.0}", st.tokens_per_sec()),
+                format!("{:.0}", st.generated_per_sec()),
+                format!("{}", st.peak_kv_bytes / 1024),
+                format!("{}", model.weight_bytes() / 1024),
+            ]);
+            records.push(Json::obj(vec![
+                ("config", Json::str(bc.label())),
+                ("w_bits", Json::num(bc.w as f64)),
+                ("a_bits", Json::num(bc.a as f64)),
+                ("kv_bits", Json::num(bc.kv as f64)),
+                ("batch", Json::num(batch as f64)),
+                ("tokens_per_sec", Json::num(st.tokens_per_sec())),
+                ("generated_per_sec", Json::num(st.generated_per_sec())),
+                ("peak_kv_bytes", Json::num(st.peak_kv_bytes as f64)),
+                ("weight_bytes", Json::num(model.weight_bytes() as f64)),
+            ]));
+        }
+    }
+    table.print();
+    if let Some(j) = args.get("json") {
+        let path = if j == "true" { "BENCH_infer.json" } else { j };
+        let doc = Json::obj(vec![
+            ("bench", Json::str("infer")),
+            ("threads", Json::num(nw as f64)),
+            ("d_model", Json::num(cfg.d_model as f64)),
+            ("n_layers", Json::num(cfg.n_layers as f64)),
+            ("prompt_len", Json::num(prompt_len as f64)),
+            ("max_new", Json::num(max_new as f64)),
+            ("rows", Json::Arr(records)),
+        ]);
+        std::fs::write(path, doc.dump())
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 
@@ -227,6 +482,8 @@ fn main() {
         Some("repro") => cmd_repro(&args),
         Some("suite") => cmd_suite(&args),
         Some("quantize") => cmd_quantize(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("serve-bench") => cmd_serve_bench(&args),
         Some("analyze") => cmd_analyze(&args),
         Some("help") | None => {
             print!("{HELP}");

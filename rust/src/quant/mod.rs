@@ -148,6 +148,18 @@ impl QuantizedModel {
     pub fn dense_bytes(&self) -> usize {
         self.params.iter().map(|p| p.dense_bytes()).sum()
     }
+
+    /// Decode-ready view for the host inference engine: reuses the
+    /// packed leaves directly (no `dense_params` round-trip — tokens are
+    /// served straight off the codes). `n_heads` and `rope_theta` come
+    /// from the lowering-time model config (`engine.manifest().model`);
+    /// they are not recoverable from the leaf shapes.
+    pub fn decoder(&self, n_heads: usize, rope_theta: f32)
+                   -> Result<crate::infer::InferModel> {
+        crate::infer::InferModel::from_qparams(
+            &self.arch, &self.params, n_heads, rope_theta,
+            self.had_flag > 0.5)
+    }
 }
 
 /// Apply the PTQ recipe to a checkpoint.

@@ -8,11 +8,14 @@ use crate::tensor::qtensor::QTensor;
 use crate::tensor::Tensor;
 
 /// levels = 2^(bits-1) - 1 (7 for 4-bit). bits >= 16 means "off".
+/// Delegates to the guarded [`crate::coordinator::levels_for_bits`], so
+/// degenerate widths (0/1 bits) clamp to the 2-bit grid instead of
+/// panicking or yielding 0 levels (inf scales, all-NaN dequant).
 pub fn levels(bits: u32) -> Option<f32> {
     if bits >= 16 {
         None
     } else {
-        Some(((1u32 << (bits - 1)) - 1) as f32)
+        Some(crate::coordinator::levels_for_bits(bits))
     }
 }
 
@@ -140,6 +143,9 @@ mod tests {
         assert_eq!(levels(8), Some(127.0));
         assert_eq!(levels(2), Some(1.0));
         assert_eq!(levels(16), None);
+        // Degenerate widths clamp instead of panicking / returning 0.
+        assert_eq!(levels(0), Some(1.0));
+        assert_eq!(levels(1), Some(1.0));
     }
 
     #[test]

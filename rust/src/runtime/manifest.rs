@@ -74,6 +74,7 @@ pub struct ModelCfg {
     pub n_heads: usize,
     pub d_ff: usize,
     pub seq_len: usize,
+    pub rope_theta: f64,
 }
 
 #[derive(Clone, Debug)]
@@ -115,6 +116,12 @@ impl Manifest {
             n_heads: mc.req("n_heads")?.as_usize().context("n_heads")?,
             d_ff: mc.req("d_ff")?.as_usize().context("d_ff")?,
             seq_len: mc.req("seq_len")?.as_usize().context("seq_len")?,
+            // Present in every manifest the compiler writes; default for
+            // hand-rolled test manifests predating the field.
+            rope_theta: mc
+                .get("rope_theta")
+                .and_then(|j| j.as_f64())
+                .unwrap_or(10000.0),
         };
 
         let mut artifacts = BTreeMap::new();

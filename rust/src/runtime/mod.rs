@@ -7,6 +7,13 @@
 
 pub mod manifest;
 
+/// The `xla::` paths below resolve to the offline stub (functional
+/// host-side literals, fail-fast compile/execute) — the vendored PJRT
+/// bindings are not part of this build. See `xla_stub.rs` for the swap
+/// procedure when they are.
+#[path = "xla_stub.rs"]
+mod xla;
+
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};

@@ -60,8 +60,10 @@ pub fn codes_per_byte(bits: u32) -> usize {
 }
 
 /// Sign-extended code `j` of a packed row (`sbits`-wide fields).
+/// Shared with the quantized KV cache (`infer::kv`), which stores its
+/// rows in this exact field layout.
 #[inline(always)]
-fn decode(row: &[u8], sbits: u32, j: usize) -> i32 {
+pub(crate) fn decode(row: &[u8], sbits: u32, j: usize) -> i32 {
     let cpb = (8 / sbits) as usize;
     let byte = row[j / cpb];
     let sh = 8 - sbits;
@@ -74,7 +76,7 @@ fn decode(row: &[u8], sbits: u32, j: usize) -> i32 {
 /// store a *different* value (e.g. 8 at 4-bit decodes as -8), which is
 /// worse than a panic for a deployment storage format.
 #[inline(always)]
-fn encode(row: &mut [u8], sbits: u32, j: usize, code: i32) {
+pub(crate) fn encode(row: &mut [u8], sbits: u32, j: usize, code: i32) {
     assert!(
         (-(1i64 << (sbits - 1))..(1i64 << (sbits - 1)))
             .contains(&(code as i64)),
@@ -424,6 +426,105 @@ impl QTensor {
     pub fn qmatvec(&self, x: &[f32]) -> Vec<f32> {
         self.qmatvec_with(par::pool_for_ops(self.numel()), x)
     }
+
+    /// Dequantize fields `[j0, j1)` of row `i` into `out` (one f32 per
+    /// field, `out.len() == j1 - j0`). The values are bitwise the slice
+    /// `dequantize()[i][j0..j1]` — `code as f32 * scale` is the same
+    /// single multiplication.
+    pub fn dequant_fields(&self, i: usize, j0: usize, j1: usize,
+                          out: &mut [f32]) {
+        debug_assert_eq!(out.len(), j1 - j0);
+        let cols = self.cols();
+        match &self.storage {
+            QStorage::Dense(d) => {
+                out.copy_from_slice(&d[i * cols + j0..i * cols + j1]);
+            }
+            QStorage::Packed(bytes) => {
+                let (stride, sbits) = (row_stride(cols, self.bits),
+                                       self.sbits());
+                let row = &bytes[i * stride..(i + 1) * stride];
+                for (o, j) in out.iter_mut().zip(j0..j1) {
+                    *o = decode(row, sbits, j) as f32 * self.scales[j];
+                }
+            }
+        }
+    }
+
+    /// Dequantize one full row into `out` (`out.len() == cols`). The
+    /// decode engine's embedding-lookup path.
+    pub fn dequant_row_into(&self, i: usize, out: &mut [f32]) {
+        self.dequant_fields(i, 0, self.cols(), out);
+    }
+
+    /// C = A @ deq(self) without materializing deq(self): the decode
+    /// engine's x-@-W orientation, where `self` is a `[in, out]` weight
+    /// and A carries one activation row per batch element.
+    ///
+    /// Partitioning is by *output-column* stripes (not batch rows): each
+    /// stripe decodes every weight row exactly once and amortizes it
+    /// across all batch rows, so the per-element decode cost shrinks by
+    /// the batch size — the reason packed decode overtakes dense f32 at
+    /// batch >= 8. Per output element the accumulation is in ascending-k
+    /// order with `code as f32 * scale` values, identical to
+    /// [`par::matmul_with`] over `(a, self.dequantize())` for any pool on
+    /// either side — bit-exact dense/fused and serial/parallel parity.
+    pub fn qmatmul_rhs_with(&self, pool: Option<&ThreadPool>, a: &Tensor)
+                            -> Tensor {
+        let (m, k) = (a.shape()[0], a.shape()[1]);
+        let (k2, n) = (self.rows(), self.cols());
+        assert_eq!(k, k2, "qmatmul_rhs {:?} @ {:?}", a.shape(), self.shape);
+        let ad = a.data();
+        // One job per column stripe; each job owns a contiguous
+        // [m, stripe] buffer merged into C afterwards (column stripes of
+        // a row-major C are not contiguous, so scatter_chunks does not
+        // apply).
+        let stripe_kernel = |j0: usize, j1: usize, c: &mut [f32]| {
+            let jw = j1 - j0;
+            let mut wrow = vec![0.0f32; jw];
+            for kk in 0..k {
+                self.dequant_fields(kk, j0, j1, &mut wrow);
+                for r in 0..m {
+                    let ark = ad[r * k + kk];
+                    let crow = &mut c[r * jw..(r + 1) * jw];
+                    for (cv, wv) in crow.iter_mut().zip(&wrow) {
+                        *cv += ark * wv;
+                    }
+                }
+            }
+        };
+        let stripes: Vec<(usize, usize)> = match pool {
+            Some(p) if n > 1 => {
+                let sw = n.div_ceil(p.n_workers().max(1) * 4).max(1);
+                (0..n.div_ceil(sw))
+                    .map(|si| (si * sw, ((si + 1) * sw).min(n)))
+                    .collect()
+            }
+            _ => vec![(0, n)],
+        };
+        let parts: Vec<Vec<f32>> = par::par_map(
+            if stripes.len() > 1 { pool } else { None }, &stripes,
+            |_si, &(j0, j1)| {
+                let mut c = vec![0.0f32; m * (j1 - j0)];
+                stripe_kernel(j0, j1, &mut c);
+                c
+            });
+        let mut c = Tensor::zeros(&[m, n]);
+        let cd = c.data_mut();
+        for (&(j0, j1), part) in stripes.iter().zip(&parts) {
+            let jw = j1 - j0;
+            for r in 0..m {
+                cd[r * n + j0..r * n + j1]
+                    .copy_from_slice(&part[r * jw..(r + 1) * jw]);
+            }
+        }
+        c
+    }
+
+    /// C = A @ deq(self) on the shared pool above the size threshold.
+    pub fn qmatmul_rhs(&self, a: &Tensor) -> Tensor {
+        let ops = a.shape()[0] * self.numel();
+        self.qmatmul_rhs_with(par::pool_for_ops(ops), a)
+    }
 }
 
 /// Bytes per packed row: columns padded up to a whole byte so every row
@@ -534,6 +635,50 @@ mod tests {
         let x: Vec<f32> = (0..k).map(|i| i as f32 * 0.25 - 2.0).collect();
         let want = par::matvec_with(None, &q.dequantize(), &x);
         assert_eq!(want, q.qmatvec_with(None, &x));
+    }
+
+    #[test]
+    fn qmatmul_rhs_matches_dense_kernel_bitwise() {
+        let mut rng = Pcg::new(5, 0);
+        for bits in [2u32, 4, 8] {
+            let (m, k, n) = (6, 11, 9);
+            let codes = random_codes(&mut rng, k * n, bits);
+            let scales: Vec<f32> =
+                (0..n).map(|j| 0.2 + 0.03 * j as f32).collect();
+            let q = QTensor::pack(&[k, n], bits, &codes, scales);
+            let a = randn(&[m, k], 70 + bits as u64);
+            let want = par::matmul_with(None, &a, &q.dequantize());
+            let got = q.qmatmul_rhs_with(None, &a);
+            assert_eq!(want.data(), got.data(), "{bits}-bit serial");
+            let pool = ThreadPool::new(3, 32);
+            let got_par = q.qmatmul_rhs_with(Some(&pool), &a);
+            assert_eq!(want.data(), got_par.data(), "{bits}-bit par");
+        }
+        // Dense passthrough storage takes the same path.
+        let t = randn(&[7, 5], 80);
+        let q = QTensor::from_dense(&t);
+        let a = randn(&[3, 7], 81);
+        assert_eq!(par::matmul_with(None, &a, &t).data(),
+                   q.qmatmul_rhs_with(None, &a).data());
+    }
+
+    #[test]
+    fn dequant_row_matches_dequantize() {
+        let mut rng = Pcg::new(6, 0);
+        let (rows, cols) = (5, 13);
+        let codes = random_codes(&mut rng, rows * cols, 4);
+        let scales: Vec<f32> = (0..cols).map(|j| 0.1 + 0.2 * j as f32)
+            .collect();
+        let q = QTensor::pack(&[rows, cols], 4, &codes, scales);
+        let dq = q.dequantize();
+        let mut row = vec![0.0f32; cols];
+        for i in 0..rows {
+            q.dequant_row_into(i, &mut row);
+            assert_eq!(&row[..], dq.row(i), "row {i}");
+        }
+        let mut mid = vec![0.0f32; 6];
+        q.dequant_fields(2, 3, 9, &mut mid);
+        assert_eq!(&mid[..], &dq.row(2)[3..9]);
     }
 
     #[test]

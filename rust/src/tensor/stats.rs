@@ -140,29 +140,47 @@ pub fn tensor_kurtosis(t: &Tensor) -> f64 {
 
 /// Fixed-bin histogram over [lo, hi] with out-of-range clamping; the
 /// figure renderers print these as the paper's activation histograms.
+/// Non-finite values are never binned (NaN used to saturate into bin 0
+/// via the `as i64` cast, silently skewing the left tail); they are
+/// counted in `nonfinite` instead, so `counts` sums to
+/// `total - nonfinite`.
 #[derive(Clone, Debug)]
 pub struct Histogram {
     pub lo: f32,
     pub hi: f32,
     pub counts: Vec<u64>,
+    /// All input values, finite or not.
     pub total: u64,
+    /// NaN/inf inputs skipped during binning.
+    pub nonfinite: u64,
 }
 
 impl Histogram {
     pub fn build(data: &[f32], lo: f32, hi: f32, bins: usize) -> Histogram {
         assert!(bins > 0 && hi > lo);
         let mut counts = vec![0u64; bins];
+        let mut nonfinite = 0u64;
         let w = (hi - lo) / bins as f32;
         for &v in data {
+            if !v.is_finite() {
+                nonfinite += 1;
+                continue;
+            }
             let idx = (((v - lo) / w) as i64).clamp(0, bins as i64 - 1);
             counts[idx as usize] += 1;
         }
-        Histogram { lo, hi, counts, total: data.len() as u64 }
+        Histogram { lo, hi, counts, total: data.len() as u64, nonfinite }
     }
 
-    /// Symmetric histogram sized from the data's absolute maximum.
+    /// Symmetric histogram sized from the data's *finite* absolute
+    /// maximum (an inf bound used to produce NaN bin widths; NaN inputs
+    /// already fell out of the fold and then tripped `build`'s
+    /// `hi > lo` assert on all-NaN data — now both degrade gracefully).
     pub fn auto(data: &[f32], bins: usize) -> Histogram {
-        let m = data.iter().fold(1e-6f32, |m, v| m.max(v.abs()));
+        let m = data
+            .iter()
+            .filter(|v| v.is_finite())
+            .fold(1e-6f32, |m, v| m.max(v.abs()));
         Histogram::build(data, -m, m, bins)
     }
 
@@ -263,6 +281,29 @@ mod tests {
         // 5.0 clamps into the last bin
         assert!(h.counts[3] >= 2);
         assert!((h.bin_center(0) + 0.75).abs() < 1e-6);
+    }
+
+    /// Regression: NaN used to be counted into bin 0 (`as i64`
+    /// saturates to 0) and an inf absmax gave `auto` NaN bin widths.
+    #[test]
+    fn histogram_skips_nonfinite() {
+        let data = [f32::NAN, -0.5, 0.5, f32::INFINITY, f32::NEG_INFINITY];
+        let h = Histogram::build(&data, -1.0, 1.0, 2);
+        assert_eq!(h.total, 5);
+        assert_eq!(h.nonfinite, 3);
+        assert_eq!(h.counts, vec![1, 1]); // NaN no longer inflates bin 0
+        assert_eq!(h.counts.iter().sum::<u64>(), h.total - h.nonfinite);
+
+        // auto ignores non-finite values when sizing bounds.
+        let h = Histogram::auto(&data, 4);
+        assert!(h.hi.is_finite() && h.hi >= 0.5);
+        assert_eq!(h.nonfinite, 3);
+
+        // All-NaN data neither panics nor bins anything.
+        let h = Histogram::auto(&[f32::NAN, f32::NAN], 4);
+        assert_eq!(h.nonfinite, 2);
+        assert_eq!(h.counts.iter().sum::<u64>(), 0);
+        assert!(!h.sparkline().is_empty());
     }
 
     #[test]

@@ -1,0 +1,140 @@
+//! Decode-engine parity properties (DESIGN.md §8): greedy token streams
+//! from packed-W4/KV4 models pinned bit-exactly against their dense-f32
+//! twins on grammar-corpus prompts, serial vs pool-parallel decode
+//! pinned bit-identical across worker counts, and scheduler/batching
+//! invariance.
+
+use osp::data::grammar::Grammar;
+use osp::eval::tasks;
+use osp::infer::engine::generate;
+use osp::infer::{DecodeParams, InferConfig, InferModel};
+use osp::util::prop;
+use osp::util::rng::Pcg;
+use osp::util::threadpool::ThreadPool;
+
+const WORKER_COUNTS: [usize; 3] = [1, 2, 8];
+
+fn cfg_case(rng: &mut Pcg) -> InferConfig {
+    let d_model = [16usize, 32, 48][rng.below(3) as usize];
+    let n_heads = [2usize, 4][rng.below(2) as usize];
+    InferConfig {
+        vocab_size: [64usize, 96, 128][rng.below(3) as usize],
+        d_model,
+        n_layers: 1 + rng.below(2) as usize,
+        n_heads,
+        d_ff: [24usize, 40, 56][rng.below(3) as usize],
+        rope_theta: 10000.0,
+        norm_ss: rng.below(2) == 0,
+        embproj: false,
+    }
+}
+
+#[derive(Debug)]
+struct Case {
+    seed: u64,
+    vocab: usize,
+    prompts: Vec<Vec<i32>>,
+}
+
+fn case(rng: &mut Pcg) -> (InferConfig, Case) {
+    let cfg = cfg_case(rng);
+    let g = Grammar::new(cfg.vocab_size, 42);
+    let n = 1 + rng.below(3) as usize;
+    let plen = 2 + rng.below(6) as usize;
+    let prompts = tasks::grammar_prompts(&g, n, plen, rng.next_u64());
+    (cfg.clone(), Case { seed: rng.next_u64(), vocab: cfg.vocab_size,
+                         prompts })
+}
+
+/// Packed-W4/KV4 greedy decode is bit-identical to the dense-f32 twin
+/// on grammar-corpus prompts — across random shapes and >= 3 seeds.
+#[test]
+fn packed_kv4_matches_dense_decode() {
+    prop::check("packed_kv4_matches_dense", 6, 0xD5C0DE, case, |(cfg, c)| {
+        let dense = InferModel::synthetic(cfg, c.seed);
+        let packed = dense.quantized(4);
+        let params = DecodeParams::greedy(4, 4, c.prompts.len());
+        let a = generate(&packed, &c.prompts, 8, params, None);
+        let b = generate(&packed.dequantized(), &c.prompts, 8, params,
+                         None);
+        if a != b {
+            return Err(format!("packed {a:?} != dense {b:?}"));
+        }
+        for stream in &a {
+            if stream.len() != 8 {
+                return Err(format!("stream len {}", stream.len()));
+            }
+            if stream.iter().any(|&t| t < 0 || t as usize >= c.vocab) {
+                return Err(format!("out-of-vocab token in {stream:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Serial decode and pool-parallel decode (workers 1/2/8) produce
+/// bit-identical streams — on packed and dense models alike.
+#[test]
+fn serial_vs_parallel_decode_bit_identical() {
+    prop::check("serial_vs_parallel_decode", 4, 0xBA7C4, case, |(cfg, c)| {
+        let packed = InferModel::synthetic(cfg, c.seed).quantized(4);
+        let params = DecodeParams::greedy(4, 4, c.prompts.len());
+        let serial = generate(&packed, &c.prompts, 6, params, None);
+        for nw in WORKER_COUNTS {
+            let pool = ThreadPool::new(nw, 8 * nw.max(4));
+            let par = generate(&packed, &c.prompts, 6, params,
+                               Some(&pool));
+            if par != serial {
+                return Err(format!(
+                    "{nw} workers: {par:?} != serial {serial:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The eval-layer consistency check reports zero mismatches for every
+/// Table-2 runtime bit config on a packed-W4 model.
+#[test]
+fn generation_consistency_across_table2_configs() {
+    let cfg = InferConfig { vocab_size: 96, d_model: 32, n_layers: 2,
+                            n_heads: 2, d_ff: 40, rope_theta: 10000.0,
+                            norm_ss: true, embproj: false };
+    let g = Grammar::new(96, 42);
+    for seed in [1u64, 2, 3] {
+        let packed = InferModel::synthetic(&cfg, seed).quantized(4);
+        for bc in osp::eval::BitConfig::table2_columns() {
+            let rep = tasks::generation_consistency(
+                &packed, &g, 3, 5, 6, bc.a, bc.kv, seed, None);
+            assert_eq!(rep.mismatches, 0,
+                       "seed {seed} config {}: agreement {}", bc.label(),
+                       rep.agreement());
+            assert_eq!(rep.tokens, 3 * 6);
+        }
+    }
+}
+
+/// Streams are independent of scheduler batch composition: decoding
+/// sequences together (any max_batch) equals decoding them alone.
+#[test]
+fn continuous_batching_is_stream_invariant() {
+    let cfg = InferConfig { vocab_size: 64, d_model: 16, n_layers: 2,
+                            n_heads: 2, d_ff: 24, rope_theta: 10000.0,
+                            norm_ss: false, embproj: false };
+    let model = InferModel::synthetic(&cfg, 5).quantized(4);
+    let g = Grammar::new(64, 42);
+    let prompts = tasks::grammar_prompts(&g, 5, 4, 9);
+    let solo: Vec<Vec<i32>> = prompts
+        .iter()
+        .map(|p| generate(&model, std::slice::from_ref(p), 7,
+                          DecodeParams::greedy(4, 4, 1), None)
+             .remove(0))
+        .collect();
+    let pool = ThreadPool::new(4, 32);
+    for max_batch in [1usize, 2, 5] {
+        let together = generate(&model, &prompts, 7,
+                                DecodeParams::greedy(4, 4, max_batch),
+                                Some(&pool));
+        assert_eq!(together, solo, "max_batch={max_batch}");
+    }
+}
