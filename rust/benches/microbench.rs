@@ -107,8 +107,9 @@ fn bench_decode(table: &mut Table, nw: usize) -> Vec<Json> {
         let model = dense.quantized(w_bits);
         let params = DecodeParams::greedy(a, kv, batch);
         let t = bench(1, 3, || {
-            std::hint::black_box(engine::generate(&model, &prompts,
-                                                  max_new, params, pool));
+            std::hint::black_box(
+                engine::generate(&model, &prompts, max_new, params, pool)
+                    .expect("decode"));
         });
         let tps = tokens / t.mean_secs;
         table.row(vec![format!("decode {label}"),

@@ -1,0 +1,284 @@
+//! Engine-free evaluation on the host model layer (DESIGN.md §9):
+//! held-out perplexity and the 10-task suite computed by teacher-forced
+//! [`InferModel::forward_block`] passes straight off packed weights — no
+//! PJRT executables, no `dense_params()` materialization — so
+//! `osp eval` and `osp repro table2` work offline on the stub runtime.
+//!
+//! Semantics mirror the evalq/logitsq graphs (`python/compile/model.py`):
+//! the same held-out [`TokenStream`] (seed [`VALID_STREAM_SEED`], Valid
+//! split), next-token NLL over positions `0..seq_len-1` predicting
+//! `tokens[1..]`, the per-token activation/KV fake-quant taps, and
+//! residual-stream excess kurtosis at the MHSA/FFN inputs
+//! ([`KurtProbe`], one probe per batch averaged across batches — the
+//! engine path's `mean_vecs` combine). The logitsq-style task accuracy
+//! scores each multiple-choice option by the logit at the context's
+//! final position.
+//!
+//! Determinism: per-sequence NLL accumulates in ascending position order
+//! regardless of `chunk`, so the result is invariant to the prefill
+//! chunking (logits themselves are bit-identical across chunk sizes —
+//! the block-forward parity contract).
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::checked_levels_for_bits;
+use crate::data::grammar::{Grammar, LANGUAGE_SEED};
+use crate::data::{Split, TokenStream};
+use crate::model::kv::SeqKv;
+use crate::model::{InferModel, KurtProbe, LogitsMode, SeqBlock};
+use crate::util::threadpool::ThreadPool;
+
+use super::tasks::{self, Instance};
+use super::PplResult;
+
+/// Document-sampling seed of the engine path's held-out stream
+/// (`eval::perplexity`); the host path reads the identical data.
+pub const VALID_STREAM_SEED: u64 = 0xE7A1;
+
+/// Default teacher-forcing block size (`--eval-chunk`).
+pub const DEFAULT_EVAL_CHUNK: usize = 64;
+
+/// Shape of one host evaluation pass.
+#[derive(Clone, Copy, Debug)]
+pub struct HostEvalOpts {
+    /// Activation fake-quant bits (16 = off).
+    pub a_bits: u32,
+    /// KV-cache bits (16 = f32 passthrough).
+    pub kv_bits: u32,
+    /// Sequences per held-out batch.
+    pub batch: usize,
+    /// Tokens per sequence (must be >= 2 for next-token targets).
+    pub seq_len: usize,
+    /// Held-out batches to score.
+    pub n_batches: usize,
+    /// Teacher-forcing block size (results are chunk-invariant).
+    pub chunk: usize,
+}
+
+impl HostEvalOpts {
+    pub fn new(a_bits: u32, kv_bits: u32) -> HostEvalOpts {
+        HostEvalOpts { a_bits, kv_bits, batch: 4, seq_len: 64,
+                       n_batches: 2, chunk: DEFAULT_EVAL_CHUNK }
+    }
+}
+
+/// -log softmax(row)[target], accumulated like the graph's
+/// `log_softmax` + `take_along_axis` (f32 reduction, f64 result).
+fn nll_pick(row: &[f32], target: usize) -> f64 {
+    let m = row.iter().cloned().fold(f32::MIN, f32::max);
+    let mut z = 0.0f32;
+    for &v in row {
+        z += (v - m).exp();
+    }
+    (z as f64).ln() - (row[target] - m) as f64
+}
+
+/// Held-out perplexity of a host model under runtime activation/KV
+/// quantization — the engine-free counterpart of [`super::perplexity`].
+/// Weights stay in whatever representation the model carries (packed
+/// leaves are never dequantized).
+pub fn perplexity_host(model: &InferModel, opts: &HostEvalOpts,
+                       pool: Option<&ThreadPool>) -> Result<PplResult> {
+    checked_levels_for_bits(opts.a_bits)?;
+    checked_levels_for_bits(opts.kv_bits)?;
+    if opts.batch == 0 || opts.n_batches == 0 {
+        bail!("host eval needs batch >= 1 and n_batches >= 1");
+    }
+    if opts.seq_len < 2 {
+        bail!("host eval needs seq_len >= 2 (next-token targets)");
+    }
+    let (b, s) = (opts.batch, opts.seq_len);
+    let chunk = opts.chunk.max(1);
+    let mut valid = TokenStream::new(model.cfg.vocab_size,
+                                     VALID_STREAM_SEED, Split::Valid, 0, 1);
+    // One probe per batch, averaged across batches — the engine path's
+    // `mean_vecs` semantics (PR 3's telemetry fix), and it bounds probe
+    // memory to a single batch's activations.
+    let mut kurt_sum = vec![0.0f64; 2 * model.cfg.n_layers];
+    let mut nll = 0.0f64;
+    let mut count = 0.0f64;
+    for bi in 0..opts.n_batches {
+        let mut probe = KurtProbe::new(model.cfg.n_layers);
+        let batch = valid.next_batch(b, s, bi as u64);
+        let rows: Vec<&[i32]> = (0..b)
+            .map(|r| &batch.tokens[r * s..(r + 1) * s])
+            .collect();
+        let mut caches: Vec<SeqKv> =
+            (0..b).map(|_| model.new_cache(opts.kv_bits)).collect();
+        // Per-sequence sums accumulate in ascending position order, so
+        // the total is independent of the chunking.
+        let mut seq_nll = vec![0.0f64; b];
+        let mut c0 = 0usize;
+        while c0 < s {
+            let c1 = (c0 + chunk).min(s);
+            let n = c1 - c0;
+            let logits = {
+                let mut blocks: Vec<SeqBlock> = rows
+                    .iter()
+                    .zip(caches.iter_mut())
+                    .map(|(row, cache)| SeqBlock {
+                        tokens: &row[c0..c1],
+                        cache,
+                    })
+                    .collect();
+                model
+                    .forward_block(pool, &mut blocks, opts.a_bits,
+                                   LogitsMode::All, Some(&mut probe))?
+                    .expect("All mode returns logits")
+            };
+            for (r, snll) in seq_nll.iter_mut().enumerate() {
+                for t in 0..n {
+                    let pos = c0 + t;
+                    if pos + 1 >= s {
+                        continue; // the last position has no target
+                    }
+                    *snll += nll_pick(logits.row(r * n + t),
+                                      rows[r][pos + 1] as usize);
+                }
+            }
+            c0 = c1;
+        }
+        for v in seq_nll {
+            nll += v;
+        }
+        count += (b * (s - 1)) as f64;
+        for (acc, k) in kurt_sum.iter_mut().zip(probe.kurt()) {
+            *acc += k;
+        }
+    }
+    let kurt: Vec<f64> = kurt_sum
+        .iter()
+        .map(|v| v / opts.n_batches as f64)
+        .collect();
+    let per_tok = nll / count;
+    let kmax = kurt.iter().cloned().fold(f64::MIN, f64::max);
+    let kmean = kurt.iter().sum::<f64>() / kurt.len().max(1) as f64;
+    // Perplexities explode under aggressive quantization (the paper's 1e5
+    // cells); clamp the exponent to keep the number printable.
+    let ppl = per_tok.min(60.0).exp();
+    Ok(PplResult { ppl, nll_per_token: per_tok, kurt_max: kmax,
+                   kurt_mean: kmean })
+}
+
+/// Accuracy of the host model on pre-generated MC instances: every
+/// context runs as one sequence of a single block forward, and the
+/// option with the highest last-position logit wins — exactly the
+/// logitsq scoring rule (padding after the context cannot affect
+/// causal positions, so feeding the bare context is equivalent).
+pub fn accuracy_host(model: &InferModel, instances: &[Instance],
+                     a_bits: u32, kv_bits: u32,
+                     pool: Option<&ThreadPool>) -> Result<f64> {
+    checked_levels_for_bits(a_bits)?;
+    checked_levels_for_bits(kv_bits)?;
+    if instances.is_empty() {
+        return Ok(0.0);
+    }
+    let mut caches: Vec<SeqKv> = instances
+        .iter()
+        .map(|_| model.new_cache(kv_bits))
+        .collect();
+    let logits = {
+        let mut blocks: Vec<SeqBlock> = instances
+            .iter()
+            .zip(caches.iter_mut())
+            .map(|(inst, cache)| SeqBlock { tokens: &inst.context[..],
+                                            cache })
+            .collect();
+        model
+            .forward_block(pool, &mut blocks, a_bits, LogitsMode::Last,
+                           None)?
+            .expect("Last mode returns logits")
+    };
+    let mut correct = 0usize;
+    for (r, inst) in instances.iter().enumerate() {
+        let row = logits.row(r);
+        let best = inst
+            .options
+            .iter()
+            .enumerate()
+            .max_by(|(_, &x), (_, &y)| {
+                row[x as usize].total_cmp(&row[y as usize])
+            })
+            .map(|(i, _)| i)
+            .unwrap();
+        if best == inst.answer {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / instances.len() as f64)
+}
+
+/// The 10-task suite on the host model layer; returns (task, accuracy)
+/// pairs + average — the engine-free counterpart of
+/// [`tasks::run_suite`].
+pub fn run_suite_host(model: &InferModel, n_per_task: usize, a_bits: u32,
+                      kv_bits: u32, seed: u64,
+                      pool: Option<&ThreadPool>)
+                      -> Result<(Vec<(String, f64)>, f64)> {
+    // Tasks must be posed in the language the model was trained on.
+    let g = Grammar::new(model.cfg.vocab_size, LANGUAGE_SEED);
+    let mut rows = Vec::new();
+    let mut sum = 0.0;
+    for task in tasks::TASK_NAMES {
+        let instances = tasks::generate(&g, task, n_per_task, seed);
+        let acc = accuracy_host(model, &instances, a_bits, kv_bits, pool)?;
+        sum += acc;
+        rows.push((task.to_string(), acc));
+    }
+    Ok((rows, sum / tasks::TASK_NAMES.len() as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::InferConfig;
+
+    fn tiny_model() -> InferModel {
+        let cfg = InferConfig { vocab_size: 128, d_model: 32, n_layers: 2,
+                                n_heads: 2, d_ff: 48, rope_theta: 10000.0,
+                                norm_ss: true, embproj: false };
+        InferModel::synthetic(&cfg, 13)
+    }
+
+    #[test]
+    fn perplexity_host_is_finite_and_validates() {
+        let m = tiny_model();
+        let mut opts = HostEvalOpts::new(16, 16);
+        opts.batch = 2;
+        opts.seq_len = 24;
+        opts.n_batches = 1;
+        let p = perplexity_host(&m, &opts, None).unwrap();
+        assert!(p.ppl.is_finite() && p.ppl > 1.0, "ppl {}", p.ppl);
+        assert!(p.kurt_max.is_finite());
+        // Degenerate shapes are rejected, not paniced on.
+        let bad = HostEvalOpts { seq_len: 1, ..opts };
+        assert!(perplexity_host(&m, &bad, None).is_err());
+        let bad = HostEvalOpts { a_bits: 1, ..opts };
+        assert!(perplexity_host(&m, &bad, None).is_err());
+    }
+
+    #[test]
+    fn perplexity_host_packed_matches_dense_twin() {
+        let packed = tiny_model().quantized(4);
+        let dense = packed.dequantized();
+        let mut opts = HostEvalOpts::new(4, 4);
+        opts.batch = 2;
+        opts.seq_len = 20;
+        opts.n_batches = 1;
+        let a = perplexity_host(&packed, &opts, None).unwrap();
+        let b = perplexity_host(&dense, &opts, None).unwrap();
+        assert_eq!(a.nll_per_token, b.nll_per_token);
+        assert_eq!(a.ppl, b.ppl);
+    }
+
+    #[test]
+    fn run_suite_host_covers_all_tasks() {
+        let m = tiny_model();
+        let (rows, avg) = run_suite_host(&m, 4, 16, 16, 3, None).unwrap();
+        assert_eq!(rows.len(), tasks::TASK_NAMES.len());
+        for (task, acc) in &rows {
+            assert!((0.0..=1.0).contains(acc), "{task}: {acc}");
+        }
+        assert!((0.0..=1.0).contains(&avg));
+    }
+}

@@ -1,6 +1,16 @@
 //! Evaluation: held-out perplexity under any quantization configuration,
 //! the 10-task synthetic benchmark suite, and attention-sink analysis.
+//!
+//! Two execution paths share the same semantics: the PJRT engine path
+//! ([`perplexity`], [`tasks::run_suite`] — needs compiled evalq/logitsq
+//! artifacts) and the engine-free host path ([`host`] — teacher-forced
+//! [`crate::model::InferModel::forward_block`] passes straight off
+//! packed weights). [`perplexity_packed`] routes packed models to the
+//! host path, so `osp eval` / `osp repro table2` run offline; the engine
+//! path stays available behind [`perplexity_packed_engine`] for parity
+//! tests on builds with the real runtime.
 
+pub mod host;
 pub mod sinks;
 pub mod tasks;
 
@@ -11,7 +21,10 @@ use crate::coordinator::{checked_levels_for_bits, levels_for_bits,
 use crate::data::{Split, TokenStream};
 use crate::quant::QuantizedModel;
 use crate::runtime::{Engine, HostValue};
-use crate::tensor::Tensor;
+use crate::tensor::{par, Tensor};
+
+pub use host::{accuracy_host, perplexity_host, run_suite_host,
+               HostEvalOpts};
 
 /// A `w-a-kv` bit configuration (paper notation; 16 = off). The weight
 /// bits are applied by `quant::prepare` before calling these helpers.
@@ -80,7 +93,8 @@ pub fn perplexity(engine: &Engine, arch: &str, params: &[Tensor],
     let m = engine.manifest();
     let evalq = engine.load(&format!("evalq_{arch}"))?;
     let (b, s) = (m.batch_eval, m.model.seq_len);
-    let mut valid = TokenStream::new(m.model.vocab_size, 0xE7A1, Split::Valid,
+    let mut valid = TokenStream::new(m.model.vocab_size,
+                                     host::VALID_STREAM_SEED, Split::Valid,
                                      0, 1);
     let mut nll = 0.0f64;
     let mut count = 0.0f64;
@@ -111,11 +125,28 @@ pub fn perplexity(engine: &Engine, arch: &str, params: &[Tensor],
                    kurt_mean: kmean })
 }
 
-/// Held-out perplexity of a packed quantized model. The weights stay
-/// packed until the PJRT boundary: `dense_params` dequantizes them
-/// lazily, exactly once, however many batches run.
+/// Held-out perplexity of a packed quantized model, evaluated on the
+/// engine-free host path: the packed leaves are served directly by the
+/// block forward (`dense_params()` is never called), so this works
+/// offline on the stub runtime. The engine is only consulted for its
+/// manifest (eval batch shape, `n_heads`, `rope_theta`).
 pub fn perplexity_packed(engine: &Engine, qm: &QuantizedModel, a_bits: u32,
                          kv_bits: u32, n_batches: usize) -> Result<PplResult> {
+    let m = engine.manifest();
+    let model = qm.decoder(m.model.n_heads, m.model.rope_theta as f32)?;
+    let opts = HostEvalOpts { a_bits, kv_bits, batch: m.batch_eval,
+                              seq_len: m.model.seq_len, n_batches,
+                              chunk: host::DEFAULT_EVAL_CHUNK };
+    perplexity_host(&model, &opts, par::shared_pool())
+}
+
+/// The pre-host behavior of [`perplexity_packed`]: dequantize the packed
+/// leaves once (`dense_params`) and run the compiled evalq executable.
+/// Kept for engine-vs-host parity tests on builds with the real PJRT
+/// runtime; fails fast on the offline stub.
+pub fn perplexity_packed_engine(engine: &Engine, qm: &QuantizedModel,
+                                a_bits: u32, kv_bits: u32,
+                                n_batches: usize) -> Result<PplResult> {
     perplexity(engine, &qm.arch, qm.dense_params(), a_bits, kv_bits,
                qm.had_flag, n_batches)
 }

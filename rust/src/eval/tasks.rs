@@ -336,8 +336,12 @@ pub fn generation_consistency(packed: &InferModel, g: &Grammar, n_prompts: usize
     let prompts = grammar_prompts(g, n_prompts, prompt_len, seed);
     let params = DecodeParams::greedy(a_bits, kv_bits,
                                       n_prompts.max(1));
-    let a = engine::generate(packed, &prompts, max_new, params, pool);
-    let b = engine::generate(&dense, &prompts, max_new, params, pool);
+    // Grammar prompts are vocab-valid by construction, so decode errors
+    // here are engine bugs, not input errors.
+    let a = engine::generate(packed, &prompts, max_new, params, pool)
+        .expect("packed decode");
+    let b = engine::generate(&dense, &prompts, max_new, params, pool)
+        .expect("dense decode");
     let mut tokens = 0usize;
     let mut mismatches = 0usize;
     for (x, y) in a.iter().zip(&b) {

@@ -1,26 +1,40 @@
-//! Continuous-batching decode scheduler (DESIGN.md §8).
+//! Continuous-batching decode scheduler (DESIGN.md §8-§9).
 //!
 //! [`DecodeEngine`] owns a FIFO of [`GenRequest`]s and a set of active
-//! sequences capped at `max_batch`. Every [`DecodeEngine::step`]
-//! processes exactly one token per active sequence — prompt tokens
-//! (prefill) and generated tokens ride the same batched forward pass —
-//! then evicts finished sequences and admits queued ones, so the batch
-//! stays full at *step* granularity.
+//! sequences capped at `max_batch`. Every [`DecodeEngine::step`] feeds
+//! one *block* per active sequence through the shared
+//! [`InferModel::forward_block`]: sequences still consuming their prompt
+//! feed up to [`DecodeParams::prefill_chunk`] tokens at once (chunked
+//! prefill — each packed weight row's in-register dequant is amortized
+//! across the whole chunk, exactly like `qmatmul_rhs` amortizes across
+//! the batch), while sequences that are decoding feed one token. The
+//! step then samples where the prompt is exhausted, evicts finished
+//! sequences, and admits queued ones, so the batch stays full at *step*
+//! granularity.
+//!
+//! Robustness: bad requests are rejected with `Err` instead of a panic —
+//! [`DecodeEngine::submit`] validates prompts against the vocab, and the
+//! model layer itself returns `Err` on empty batches or out-of-vocab
+//! tokens — so one malformed request can never kill the serve loop.
 //!
 //! Determinism: a sequence's stream depends only on (model, its own
 //! prompt, decode params, its own sampling RNG) — per-row kernels and
-//! per-sequence attention make results independent of batch composition
-//! and worker count, so continuous batching never changes output
-//! (pinned by `rust/tests/infer_properties.rs`).
+//! per-sequence attention make results independent of batch composition,
+//! worker count, *and prefill chunk size* (pinned by
+//! `rust/tests/infer_properties.rs` and `rust/tests/model_properties.rs`).
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
+use anyhow::{bail, Result};
+
+use crate::model::kv::SeqKv;
+use crate::model::{sample_token_filtered, InferModel, LogitsMode, SeqBlock};
 use crate::util::rng::Pcg;
 use crate::util::threadpool::ThreadPool;
 
-use super::kv::SeqKv;
-use super::{sample_token, InferModel};
+/// Default prompt-ingestion block size (`--prefill-chunk`).
+pub const DEFAULT_PREFILL_CHUNK: usize = 64;
 
 /// Runtime decode configuration.
 #[derive(Clone, Copy, Debug)]
@@ -33,6 +47,13 @@ pub struct DecodeParams {
     pub max_batch: usize,
     /// <= 0 is greedy argmax.
     pub temperature: f32,
+    /// Keep only the `top_k` highest-probability tokens (0 = off).
+    pub top_k: usize,
+    /// Nucleus truncation: smallest probability mass kept (>= 1.0 = off).
+    pub top_p: f32,
+    /// Max prompt tokens fed per sequence per step (>= 1; chunk 1
+    /// reproduces the old one-token-per-step prefill bit-exactly).
+    pub prefill_chunk: usize,
     /// Base seed; each request samples from `seed ^ request id`.
     pub seed: u64,
 }
@@ -41,7 +62,8 @@ impl DecodeParams {
     pub fn greedy(a_bits: u32, kv_bits: u32, max_batch: usize)
                   -> DecodeParams {
         DecodeParams { a_bits, kv_bits, max_batch, temperature: 0.0,
-                       seed: 0 }
+                       top_k: 0, top_p: 1.0,
+                       prefill_chunk: DEFAULT_PREFILL_CHUNK, seed: 0 }
     }
 }
 
@@ -86,6 +108,8 @@ impl Active {
 pub struct DecodeStats {
     /// Forward tokens processed (prefill + decode positions).
     pub tokens_processed: u64,
+    /// Prompt tokens ingested (the prefill phase of every request).
+    pub tokens_prefilled: u64,
     /// Newly generated tokens.
     pub tokens_generated: u64,
     pub steps: u64,
@@ -101,6 +125,12 @@ impl DecodeStats {
 
     pub fn generated_per_sec(&self) -> f64 {
         self.tokens_generated as f64 / self.wall_secs.max(1e-9)
+    }
+
+    /// Prompt tokens ingested per second (the prefill-throughput
+    /// serve-bench column).
+    pub fn prefill_per_sec(&self) -> f64 {
+        self.tokens_prefilled as f64 / self.wall_secs.max(1e-9)
     }
 }
 
@@ -125,11 +155,22 @@ impl<'m, 'p> DecodeEngine<'m, 'p> {
 
     /// Enqueue a request (admitted at the next step with a free slot).
     /// Empty prompts are given a BOS-like token 0 so position 0 exists.
-    pub fn submit(&mut self, mut req: GenRequest) {
+    /// Prompts carrying out-of-vocab tokens are rejected with `Err`
+    /// before they can enter a batch — already-queued and active
+    /// requests are unaffected.
+    pub fn submit(&mut self, mut req: GenRequest) -> Result<()> {
         if req.prompt.is_empty() {
             req.prompt.push(0);
         }
+        let vocab = self.model.cfg.vocab_size;
+        for &t in &req.prompt {
+            if t < 0 || t as usize >= vocab {
+                bail!("request {}: prompt token {t} outside vocab 0..{vocab}",
+                      req.id);
+            }
+        }
         self.queue.push_back(req);
+        Ok(())
     }
 
     pub fn n_pending(&self) -> usize {
@@ -150,47 +191,66 @@ impl<'m, 'p> DecodeEngine<'m, 'p> {
         }
     }
 
-    /// One engine step: admit, run one batched forward token per active
-    /// sequence, sample where the prompt is exhausted, evict finished
-    /// sequences. Returns the number of tokens processed (0 = idle).
-    pub fn step(&mut self) -> usize {
+    /// One engine step: admit, feed one block per active sequence
+    /// (prefill chunks for prompt tokens, single tokens for decode),
+    /// sample where the prompt is exhausted, evict finished sequences.
+    /// Returns the number of tokens processed (0 = idle).
+    pub fn step(&mut self) -> Result<usize> {
         let t0 = Instant::now();
         self.admit();
         if self.active.is_empty() {
-            return 0;
+            return Ok(0);
         }
-        // Each sequence feeds the token at its cache position; logits
+        let chunk = self.params.prefill_chunk.max(1);
+        // Each sequence feeds the tokens at its cache position: the
+        // remaining known tokens, capped at the prefill chunk. Logits
         // from the last known token produce the next sample. A sequence
         // samples only while it still owes tokens (`max_new` 0 must
-        // generate nothing), and the logits head is skipped entirely on
-        // pure-prefill steps where nobody will.
-        let tokens: Vec<i32> = self
+        // generate nothing), and the logits head runs on last-token rows
+        // only — skipped entirely on pure-prefill steps where nobody
+        // samples.
+        let feeds: Vec<(usize, usize)> = self
             .active
             .iter()
-            .map(|a| a.tokens[a.cache.n_tokens()])
+            .map(|a| {
+                let pos = a.cache.n_tokens();
+                (pos, (a.tokens.len() - pos).min(chunk))
+            })
             .collect();
-        let will_sample = |a: &Active| {
-            a.cache.n_tokens() + 1 == a.tokens.len()
-                && a.n_generated() < a.max_new
-        };
-        let want_logits = self.active.iter().any(|a| will_sample(a));
+        let will: Vec<bool> = self
+            .active
+            .iter()
+            .zip(&feeds)
+            .map(|(a, &(pos, n))| {
+                pos + n == a.tokens.len() && a.n_generated() < a.max_new
+            })
+            .collect();
+        let want_logits = will.iter().any(|&w| w);
+        let (model, pool, a_bits) = (self.model, self.pool,
+                                     self.params.a_bits);
         let logits = {
-            let mut caches: Vec<&mut SeqKv> =
-                self.active.iter_mut().map(|a| &mut a.cache).collect();
-            self.model.decode_step(self.pool, &tokens, &mut caches,
-                                   self.params.a_bits, want_logits)
+            let mut blocks: Vec<SeqBlock> = self
+                .active
+                .iter_mut()
+                .zip(&feeds)
+                .map(|(a, &(pos, n))| SeqBlock {
+                    tokens: &a.tokens[pos..pos + n],
+                    cache: &mut a.cache,
+                })
+                .collect();
+            let mode = if want_logits { LogitsMode::Last } else {
+                LogitsMode::None
+            };
+            model.forward_block(pool, &mut blocks, a_bits, mode, None)?
         };
         if let Some(logits) = logits {
             let vocab = self.model.cfg.vocab_size;
             for (r, a) in self.active.iter_mut().enumerate() {
-                // After the forward, the cache advanced past the fed
-                // token.
-                if a.cache.n_tokens() == a.tokens.len()
-                    && a.n_generated() < a.max_new
-                {
+                if will[r] {
                     let row = &logits.data()[r * vocab..(r + 1) * vocab];
-                    let next = sample_token(row, self.params.temperature,
-                                            &mut a.rng);
+                    let next = sample_token_filtered(
+                        row, self.params.temperature, self.params.top_k,
+                        self.params.top_p, &mut a.rng);
                     a.tokens.push(next);
                 }
             }
@@ -198,8 +258,13 @@ impl<'m, 'p> DecodeEngine<'m, 'p> {
         let kv_bytes: usize =
             self.active.iter().map(|a| a.cache.bytes()).sum();
         self.stats.peak_kv_bytes = self.stats.peak_kv_bytes.max(kv_bytes);
-        let processed = tokens.len();
+        let processed: usize = feeds.iter().map(|&(_pos, n)| n).sum();
         self.stats.tokens_processed += processed as u64;
+        for (a, &(pos, n)) in self.active.iter().zip(&feeds) {
+            // Fed tokens at positions below prompt_len are prompt tokens.
+            self.stats.tokens_prefilled +=
+                a.prompt_len.min(pos + n).saturating_sub(pos) as u64;
+        }
         self.stats.steps += 1;
         // Evict in place, keeping submission order within `finished`
         // resolution by id later.
@@ -218,38 +283,39 @@ impl<'m, 'p> DecodeEngine<'m, 'p> {
             }
         }
         self.stats.wall_secs += t0.elapsed().as_secs_f64();
-        processed
+        Ok(processed)
     }
 
     /// Drive until every submitted request finishes; results sorted by
     /// request id.
-    pub fn run(&mut self) -> Vec<GenResult> {
+    pub fn run(&mut self) -> Result<Vec<GenResult>> {
         while self.n_pending() > 0 {
-            self.step();
+            self.step()?;
         }
         let mut out = std::mem::take(&mut self.finished);
         out.sort_by_key(|r| r.id);
-        out
+        Ok(out)
     }
 }
 
 /// Decode `prompts` to completion under `params`; returns the generated
 /// tokens per prompt (order matches input). The one-call entry point the
-/// consistency checks and `osp generate` use.
+/// consistency checks and `osp generate` use. Errs on malformed prompts
+/// instead of panicking.
 pub fn generate(model: &InferModel, prompts: &[Vec<i32>], max_new: usize,
                 params: DecodeParams, pool: Option<&ThreadPool>)
-                -> Vec<Vec<i32>> {
+                -> Result<Vec<Vec<i32>>> {
     let mut eng = DecodeEngine::new(model, params, pool);
     for (i, p) in prompts.iter().enumerate() {
-        eng.submit(GenRequest { id: i, prompt: p.clone(), max_new });
+        eng.submit(GenRequest { id: i, prompt: p.clone(), max_new })?;
     }
-    eng.run().into_iter().map(|r| r.generated).collect()
+    Ok(eng.run()?.into_iter().map(|r| r.generated).collect())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::infer::InferConfig;
+    use crate::model::InferConfig;
 
     fn tiny_model() -> InferModel {
         let cfg = InferConfig { vocab_size: 64, d_model: 16, n_layers: 2,
@@ -263,7 +329,8 @@ mod tests {
         let m = tiny_model();
         let prompts = vec![vec![1, 2, 3], vec![4], vec![5, 6]];
         let outs = generate(&m, &prompts, 5,
-                            DecodeParams::greedy(16, 16, 2), None);
+                            DecodeParams::greedy(16, 16, 2), None)
+            .unwrap();
         assert_eq!(outs.len(), 3);
         for o in &outs {
             assert_eq!(o.len(), 5);
@@ -281,13 +348,33 @@ mod tests {
             .iter()
             .map(|p| generate(&m, std::slice::from_ref(p), 6,
                               DecodeParams::greedy(4, 4, 1), None)
+                 .unwrap()
                  .remove(0))
             .collect();
         for max_batch in [1usize, 2, 3] {
             let together = generate(&m, &prompts, 6,
                                     DecodeParams::greedy(4, 4, max_batch),
-                                    None);
+                                    None)
+                .unwrap();
             assert_eq!(together, solo, "max_batch={max_batch}");
+        }
+    }
+
+    #[test]
+    fn prefill_chunk_does_not_change_streams() {
+        let m = tiny_model();
+        let prompts = vec![vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 10],
+                           vec![11, 12, 13], vec![5; 17]];
+        let chunk1 = {
+            let mut p = DecodeParams::greedy(4, 4, 3);
+            p.prefill_chunk = 1;
+            generate(&m, &prompts, 6, p, None).unwrap()
+        };
+        for chunk in [2usize, 7, 64] {
+            let mut p = DecodeParams::greedy(4, 4, 3);
+            p.prefill_chunk = chunk;
+            let got = generate(&m, &prompts, 6, p, None).unwrap();
+            assert_eq!(got, chunk1, "prefill_chunk={chunk}");
         }
     }
 
@@ -297,12 +384,13 @@ mod tests {
         let mut eng = DecodeEngine::new(&m, DecodeParams::greedy(16, 16, 2),
                                         None);
         for i in 0..4 {
-            eng.submit(GenRequest { id: i, prompt: vec![1, 2], max_new: 2 });
+            eng.submit(GenRequest { id: i, prompt: vec![1, 2], max_new: 2 })
+                .unwrap();
         }
         assert_eq!(eng.n_pending(), 4);
         // First step admits only max_batch = 2 sequences.
-        assert_eq!(eng.step(), 2);
-        let results = eng.run();
+        assert_eq!(eng.step().unwrap(), 2 * 2);
+        let results = eng.run().unwrap();
         assert_eq!(results.len(), 4);
         for (i, r) in results.iter().enumerate() {
             assert_eq!(r.id, i);
@@ -313,14 +401,37 @@ mod tests {
             assert_eq!(r.generated, results[0].generated);
         }
         assert!(eng.stats.tokens_processed >= 4 * 3);
+        assert_eq!(eng.stats.tokens_prefilled, 4 * 2);
         assert!(eng.stats.peak_kv_bytes > 0);
+    }
+
+    #[test]
+    fn submit_rejects_out_of_vocab_without_killing_the_loop() {
+        let m = tiny_model();
+        let mut eng = DecodeEngine::new(&m, DecodeParams::greedy(16, 16, 2),
+                                        None);
+        eng.submit(GenRequest { id: 0, prompt: vec![1, 2], max_new: 2 })
+            .unwrap();
+        // Bad request is rejected up front...
+        assert!(eng
+            .submit(GenRequest { id: 1, prompt: vec![1, 64], max_new: 2 })
+            .is_err());
+        assert!(eng
+            .submit(GenRequest { id: 2, prompt: vec![-3], max_new: 2 })
+            .is_err());
+        // ...and the loop still serves the good one.
+        let results = eng.run().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].id, 0);
+        assert_eq!(results[0].generated.len(), 2);
     }
 
     #[test]
     fn max_new_zero_generates_nothing() {
         let m = tiny_model();
         let outs = generate(&m, &[vec![1, 2, 3], vec![4]], 0,
-                            DecodeParams::greedy(4, 4, 2), None);
+                            DecodeParams::greedy(4, 4, 2), None)
+            .unwrap();
         assert_eq!(outs, vec![Vec::<i32>::new(), Vec::new()]);
     }
 
@@ -328,17 +439,35 @@ mod tests {
     fn empty_prompt_gets_bos() {
         let m = tiny_model();
         let outs = generate(&m, &[vec![]], 3,
-                            DecodeParams::greedy(16, 16, 1), None);
+                            DecodeParams::greedy(16, 16, 1), None)
+            .unwrap();
         assert_eq!(outs[0].len(), 3);
     }
 
     #[test]
     fn temperature_sampling_is_seed_deterministic() {
         let m = tiny_model();
-        let p = DecodeParams { a_bits: 16, kv_bits: 16, max_batch: 2,
-                               temperature: 0.8, seed: 42 };
-        let a = generate(&m, &[vec![1, 2], vec![3]], 4, p, None);
-        let b = generate(&m, &[vec![1, 2], vec![3]], 4, p, None);
+        let p = DecodeParams { temperature: 0.8, seed: 42,
+                               ..DecodeParams::greedy(16, 16, 2) };
+        let a = generate(&m, &[vec![1, 2], vec![3]], 4, p, None).unwrap();
+        let b = generate(&m, &[vec![1, 2], vec![3]], 4, p, None).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn truncated_sampling_is_seed_deterministic_and_k1_is_greedy() {
+        let m = tiny_model();
+        let prompts = vec![vec![1, 2, 3], vec![4, 5]];
+        let p = DecodeParams { temperature: 0.9, top_k: 4, top_p: 0.9,
+                               seed: 7, ..DecodeParams::greedy(4, 4, 2) };
+        let a = generate(&m, &prompts, 5, p, None).unwrap();
+        let b = generate(&m, &prompts, 5, p, None).unwrap();
+        assert_eq!(a, b);
+        // top_k = 1 collapses to the greedy stream at any temperature.
+        let k1 = DecodeParams { temperature: 0.9, top_k: 1, seed: 7,
+                                ..DecodeParams::greedy(4, 4, 2) };
+        let greedy = DecodeParams::greedy(4, 4, 2);
+        assert_eq!(generate(&m, &prompts, 5, k1, None).unwrap(),
+                   generate(&m, &prompts, 5, greedy, None).unwrap());
     }
 }

@@ -1,736 +1,35 @@
-//! Host-side autoregressive decode engine (DESIGN.md §8): batched
-//! greedy/temperature generation **directly on packed [`QTensor`]
-//! weights** via the fused `qmatmul_rhs` kernels — no dense
-//! dequantization — with a per-sequence quantized KV cache ([`kv`]) and
-//! a continuous-batching scheduler ([`engine`]).
+//! Inference serving layer (DESIGN.md §8-§9): the continuous-batching
+//! decode scheduler ([`engine`]) on top of the shared host model layer
+//! ([`crate::model`]).
 //!
-//! The forward pass mirrors the evalq graph semantics
-//! (`python/compile/model.py`): RMSNorm/SSNorm, RoPE on q/k, per-token
-//! RTN fake-quantization of every linear input activation (`a_bits`),
-//! KV-cache quantization after RoPE (`kv_bits`), and the optional online
-//! Hadamard on the FFN hidden state (`had_flag`, paired with the
-//! pre-rotated `w_down` the PTQ pipeline emits). Bit-widths follow the
-//! same `levels = 2^(bits-1) - 1` mapping as the executables.
+//! The forward pass itself — [`InferModel::forward_block`] and its
+//! single-token [`InferModel::decode_step`] wrapper, the quantized KV
+//! cache, and the per-row kernels — lives in `rust/src/model/` and is
+//! shared with the engine-free evaluator (`eval::host`). This module
+//! keeps the serving-specific machinery: request queueing, step-level
+//! admission/eviction, chunked prefill, and sampling parameters. The
+//! historical `infer::...` paths for the model types remain valid via
+//! the re-exports below.
 //!
-//! Parity contract (pinned by `rust/tests/infer_properties.rs`):
+//! Parity contract (pinned by `rust/tests/infer_properties.rs` and
+//! `rust/tests/model_properties.rs`):
 //!
 //! * Decoding on packed weights is bit-identical to decoding on their
-//!   [`QTensor::dequantize`]d f32 twins — the fused kernels share the
-//!   dense kernels' accumulation order, and the packed KV cache stores
-//!   exactly the fake-quantized values the dense cache holds.
+//!   dequantized f32 twins — the fused kernels share the dense kernels'
+//!   accumulation order, and the packed KV cache stores exactly the
+//!   fake-quantized values the dense cache holds.
 //! * Serial and pool-parallel decode are bit-identical for any worker
-//!   count: batch rows, column stripes, and per-sequence attention jobs
-//!   each compute with the same per-element arithmetic.
-//! * A sequence's token stream is independent of batch composition, so
-//!   the continuous-batching scheduler never changes results.
+//!   count, and a sequence's token stream is independent of batch
+//!   composition, so the continuous-batching scheduler never changes
+//!   results.
+//! * Prefill chunk size never changes results: admitting a prompt in
+//!   blocks of 64 yields the same KV contents and token streams as one
+//!   token per step.
 
 pub mod engine;
 pub mod kv;
 
-use anyhow::{anyhow, bail, Result};
-
-use crate::coordinator::levels_for_bits;
-use crate::quant::QParam;
-use crate::tensor::linalg;
-use crate::tensor::qtensor::QTensor;
-use crate::tensor::{par, Tensor};
-use crate::util::rng::Pcg;
-use crate::util::threadpool::ThreadPool;
-
-use kv::SeqKv;
-
+pub use crate::model::{argmax, sample_token, sample_token_filtered,
+                       InferConfig, InferModel, KurtProbe, Linear,
+                       LogitsMode, SeqBlock};
 pub use engine::{DecodeEngine, DecodeParams, GenRequest, GenResult};
-
-/// The decoder shape the engine runs (subset of the lowering-time model
-/// config, plus the norm/embproj knobs the arch name encodes).
-#[derive(Clone, Debug)]
-pub struct InferConfig {
-    pub vocab_size: usize,
-    pub d_model: usize,
-    pub n_layers: usize,
-    pub n_heads: usize,
-    pub d_ff: usize,
-    pub rope_theta: f32,
-    /// Single-Scale RMSNorm (scalar gamma) vs per-channel RMSNorm.
-    pub norm_ss: bool,
-    pub embproj: bool,
-}
-
-impl InferConfig {
-    pub fn head_dim(&self) -> usize {
-        self.d_model / self.n_heads
-    }
-
-    /// Decode the norm/embproj knobs from an arch tag
-    /// (`{rms|ss}norm_{plain|embproj}`).
-    pub fn arch_knobs(arch: &str) -> Result<(bool, bool)> {
-        let norm_ss = match arch.split("norm_").next() {
-            Some("rms") => false,
-            Some("ss") => true,
-            _ => bail!("unknown arch '{arch}' (want {{rms|ss}}norm_...)"),
-        };
-        let embproj = match arch.split("norm_").nth(1) {
-            Some("plain") => false,
-            Some("embproj") => true,
-            _ => bail!("unknown arch '{arch}' (want ..._{{plain|embproj}})"),
-        };
-        Ok((norm_ss, embproj))
-    }
-
-    pub fn validate(&self) -> Result<()> {
-        if self.n_heads == 0 || self.d_model % self.n_heads != 0 {
-            bail!("n_heads {} must divide d_model {}", self.n_heads,
-                  self.d_model);
-        }
-        if self.head_dim() % 2 != 0 {
-            bail!("head_dim {} must be even (RoPE pairs channels)",
-                  self.head_dim());
-        }
-        Ok(())
-    }
-}
-
-/// One weight matrix of the decode model: packed codes (the deployment
-/// path) or a dense f32 fallback. All kernels are bit-identical across
-/// the two representations of the same dequantized values.
-pub enum Linear {
-    Dense(Tensor),
-    Packed(QTensor),
-}
-
-impl Linear {
-    fn shape(&self) -> &[usize] {
-        match self {
-            Linear::Dense(t) => t.shape(),
-            Linear::Packed(q) => q.shape(),
-        }
-    }
-
-    /// C = A @ deq(self); `self` is `[in, out]`, A is `[batch, in]`.
-    fn matmul(&self, pool: Option<&ThreadPool>, a: &Tensor) -> Tensor {
-        match self {
-            Linear::Dense(t) => par::matmul_with(pool, a, t),
-            Linear::Packed(q) => q.qmatmul_rhs_with(pool, a),
-        }
-    }
-
-    /// Row `i` dequantized into `out` (the embedding lookup).
-    fn row_into(&self, i: usize, out: &mut [f32]) {
-        match self {
-            Linear::Dense(t) => out.copy_from_slice(t.row(i)),
-            Linear::Packed(q) => q.dequant_row_into(i, out),
-        }
-    }
-
-    /// Serialized weight bytes in this representation.
-    pub fn packed_bytes(&self) -> usize {
-        match self {
-            Linear::Dense(t) => 4 * t.len(),
-            Linear::Packed(q) => q.packed_bytes(),
-        }
-    }
-
-    fn dequantized(&self) -> Linear {
-        match self {
-            Linear::Dense(t) => Linear::Dense(t.clone()),
-            Linear::Packed(q) => Linear::Dense(q.dequantize()),
-        }
-    }
-
-    fn quantized(&self, bits: u32) -> Linear {
-        match self {
-            Linear::Dense(t) if bits < 16 => {
-                Linear::Packed(crate::quant::rtn::quantize_per_channel_q(
-                    t, bits))
-            }
-            Linear::Dense(t) => Linear::Dense(t.clone()),
-            Linear::Packed(q) => Linear::Packed(q.clone()),
-        }
-    }
-}
-
-struct LayerWeights {
-    attn_norm: Tensor,
-    wq: Linear,
-    wk: Linear,
-    wv: Linear,
-    wo: Linear,
-    ffn_norm: Tensor,
-    w_gate: Linear,
-    w_up: Linear,
-    w_down: Linear,
-}
-
-/// A decode-ready model: the packed leaves of a
-/// [`crate::quant::QuantizedModel`] (or dense f32 weights) arranged for
-/// the per-token forward pass.
-pub struct InferModel {
-    pub cfg: InferConfig,
-    /// Online FFN Hadamard (must match the weight preparation).
-    pub had_flag: bool,
-    embed: Linear,
-    embproj_in: Option<Linear>,
-    embproj_out: Option<Linear>,
-    layers: Vec<LayerWeights>,
-    final_norm: Tensor,
-    unembed: Linear,
-    /// Precomputed RoPE frequencies `theta^(-j/half)`, one per
-    /// channel pair — keeps `powf` out of the per-token hot loop.
-    rope_inv_freq: Vec<f32>,
-}
-
-fn rope_inv_freq(cfg: &InferConfig) -> Vec<f32> {
-    let half = cfg.head_dim() / 2;
-    (0..half)
-        .map(|j| cfg.rope_theta.powf(-(j as f32) / half as f32))
-        .collect()
-}
-
-fn norm_leaf(p: &QParam) -> Tensor {
-    match p {
-        QParam::Dense(t) => t.clone(),
-        QParam::Packed(q) => q.dequantize(),
-    }
-}
-
-fn linear_leaf(p: &QParam) -> Linear {
-    match p {
-        QParam::Dense(t) => Linear::Dense(t.clone()),
-        QParam::Packed(q) => Linear::Packed(q.clone()),
-    }
-}
-
-impl InferModel {
-    /// Build from quantized-model leaves in manifest parameter order
-    /// (embed, [embproj_in, embproj_out], per layer {attn_norm, wq, wk,
-    /// wv, wo, ffn_norm, w_gate, w_up, w_down}, final_norm, unembed).
-    /// `n_heads` and `rope_theta` come from the lowering-time config —
-    /// they are not recoverable from the leaf shapes.
-    pub fn from_qparams(arch: &str, params: &[QParam], n_heads: usize,
-                        rope_theta: f32, had_flag: bool)
-                        -> Result<InferModel> {
-        let (norm_ss, embproj) = InferConfig::arch_knobs(arch)?;
-        let head = 1 + if embproj { 2 } else { 0 };
-        let tail = 2; // final_norm, unembed
-        let body = params
-            .len()
-            .checked_sub(head + tail)
-            .ok_or_else(|| anyhow!("{} leaves is too few for '{arch}'",
-                                   params.len()))?;
-        if body % 9 != 0 {
-            bail!("{} leaves does not match '{arch}' (9 per layer)",
-                  params.len());
-        }
-        let n_layers = body / 9;
-        if n_layers == 0 {
-            bail!("'{arch}' model with zero layers");
-        }
-        let embed = linear_leaf(&params[0]);
-        if embed.shape().len() != 2 {
-            bail!("embed leaf is not 2-D");
-        }
-        let (vocab_size, d_model) = (embed.shape()[0], embed.shape()[1]);
-        let (embproj_in, embproj_out) = if embproj {
-            (Some(linear_leaf(&params[1])), Some(linear_leaf(&params[2])))
-        } else {
-            (None, None)
-        };
-        let mut layers = Vec::with_capacity(n_layers);
-        for li in 0..n_layers {
-            let b = head + li * 9;
-            layers.push(LayerWeights {
-                attn_norm: norm_leaf(&params[b]),
-                wq: linear_leaf(&params[b + 1]),
-                wk: linear_leaf(&params[b + 2]),
-                wv: linear_leaf(&params[b + 3]),
-                wo: linear_leaf(&params[b + 4]),
-                ffn_norm: norm_leaf(&params[b + 5]),
-                w_gate: linear_leaf(&params[b + 6]),
-                w_up: linear_leaf(&params[b + 7]),
-                w_down: linear_leaf(&params[b + 8]),
-            });
-        }
-        let d_ff = layers[0].w_gate.shape()[1];
-        let final_norm = norm_leaf(&params[head + body]);
-        let unembed = linear_leaf(&params[head + body + 1]);
-        if unembed.shape() != &[d_model, vocab_size] {
-            bail!("unembed shape {:?} != [{d_model}, {vocab_size}]",
-                  unembed.shape());
-        }
-        let want_norm = if norm_ss { 1 } else { d_model };
-        for (what, len) in [("attn_norm", layers[0].attn_norm.len()),
-                            ("ffn_norm", layers[0].ffn_norm.len()),
-                            ("final_norm", final_norm.len())] {
-            if len != want_norm {
-                bail!("{what} has {len} scales, '{arch}' wants \
-                       {want_norm}");
-            }
-        }
-        let cfg = InferConfig { vocab_size, d_model, n_layers, n_heads,
-                                d_ff, rope_theta, norm_ss, embproj };
-        cfg.validate()?;
-        let rope_inv_freq = rope_inv_freq(&cfg);
-        Ok(InferModel { cfg, had_flag, embed, embproj_in, embproj_out,
-                        layers, final_norm, unembed, rope_inv_freq })
-    }
-
-    /// Wrap dense f32 checkpoint leaves (same ordering) — the unquantized
-    /// baseline the consistency checks decode against.
-    pub fn from_dense_params(arch: &str, params: &[Tensor], n_heads: usize,
-                             rope_theta: f32) -> Result<InferModel> {
-        let qp: Vec<QParam> =
-            params.iter().cloned().map(QParam::Dense).collect();
-        InferModel::from_qparams(arch, &qp, n_heads, rope_theta, false)
-    }
-
-    /// The dense-f32 twin: every packed leaf dequantized, everything
-    /// else cloned. Same token streams bit-for-bit (the parity
-    /// contract); used by `osp generate --check` and the property tests.
-    pub fn dequantized(&self) -> InferModel {
-        InferModel {
-            cfg: self.cfg.clone(),
-            had_flag: self.had_flag,
-            embed: self.embed.dequantized(),
-            embproj_in: self.embproj_in.as_ref().map(|l| l.dequantized()),
-            embproj_out: self.embproj_out.as_ref().map(|l| l.dequantized()),
-            layers: self
-                .layers
-                .iter()
-                .map(|l| LayerWeights {
-                    attn_norm: l.attn_norm.clone(),
-                    wq: l.wq.dequantized(),
-                    wk: l.wk.dequantized(),
-                    wv: l.wv.dequantized(),
-                    wo: l.wo.dequantized(),
-                    ffn_norm: l.ffn_norm.clone(),
-                    w_gate: l.w_gate.dequantized(),
-                    w_up: l.w_up.dequantized(),
-                    w_down: l.w_down.dequantized(),
-                })
-                .collect(),
-            final_norm: self.final_norm.clone(),
-            unembed: self.unembed.dequantized(),
-            rope_inv_freq: self.rope_inv_freq.clone(),
-        }
-    }
-
-    /// RTN-quantize every matrix leaf to `w_bits` packed codes (norm
-    /// leaves stay dense) — the synthetic-model path serve-bench and the
-    /// property tests use; real checkpoints go through `quant::prepare`.
-    pub fn quantized(&self, w_bits: u32) -> InferModel {
-        InferModel {
-            cfg: self.cfg.clone(),
-            had_flag: self.had_flag,
-            embed: self.embed.quantized(w_bits),
-            embproj_in: self.embproj_in.as_ref()
-                .map(|l| l.quantized(w_bits)),
-            embproj_out: self.embproj_out.as_ref()
-                .map(|l| l.quantized(w_bits)),
-            layers: self
-                .layers
-                .iter()
-                .map(|l| LayerWeights {
-                    attn_norm: l.attn_norm.clone(),
-                    wq: l.wq.quantized(w_bits),
-                    wk: l.wk.quantized(w_bits),
-                    wv: l.wv.quantized(w_bits),
-                    wo: l.wo.quantized(w_bits),
-                    ffn_norm: l.ffn_norm.clone(),
-                    w_gate: l.w_gate.quantized(w_bits),
-                    w_up: l.w_up.quantized(w_bits),
-                    w_down: l.w_down.quantized(w_bits),
-                })
-                .collect(),
-            final_norm: self.final_norm.clone(),
-            unembed: self.unembed.quantized(w_bits),
-            rope_inv_freq: self.rope_inv_freq.clone(),
-        }
-    }
-
-    /// A random dense model at `cfg` (normal init, residual-branch
-    /// scaling like the init artifact) — the no-artifacts path for
-    /// serve-bench, the examples, and the property tests.
-    pub fn synthetic(cfg: &InferConfig, seed: u64) -> InferModel {
-        cfg.validate().expect("synthetic: invalid InferConfig");
-        let mut rng = Pcg::new(seed, 23);
-        let std = 0.05f32;
-        let res = std / (2.0 * cfg.n_layers as f32).sqrt();
-        let mut randn = |shape: &[usize], s: f32| -> Linear {
-            let mut t = Tensor::zeros(shape);
-            rng.fill_normal(t.data_mut(), s);
-            Linear::Dense(t)
-        };
-        let (d, f, v) = (cfg.d_model, cfg.d_ff, cfg.vocab_size);
-        let norm = |ss: bool| -> Tensor {
-            if ss {
-                Tensor::full(&[1], (d as f32).sqrt())
-            } else {
-                Tensor::full(&[d], 1.0)
-            }
-        };
-        let embed = randn(&[v, d], std);
-        let (embproj_in, embproj_out) = if cfg.embproj {
-            (Some(randn(&[d, d], 1.0 / (d as f32).sqrt())),
-             Some(randn(&[d, d], 1.0 / (d as f32).sqrt())))
-        } else {
-            (None, None)
-        };
-        let layers = (0..cfg.n_layers)
-            .map(|_| LayerWeights {
-                attn_norm: norm(cfg.norm_ss),
-                wq: randn(&[d, d], std),
-                wk: randn(&[d, d], std),
-                wv: randn(&[d, d], std),
-                wo: randn(&[d, d], res),
-                ffn_norm: norm(cfg.norm_ss),
-                w_gate: randn(&[d, f], std),
-                w_up: randn(&[d, f], std),
-                w_down: randn(&[f, d], res),
-            })
-            .collect();
-        let final_norm = norm(cfg.norm_ss);
-        let unembed = randn(&[d, v], std);
-        InferModel { cfg: cfg.clone(), had_flag: false, embed, embproj_in,
-                     embproj_out, layers, final_norm, unembed,
-                     rope_inv_freq: rope_inv_freq(cfg) }
-    }
-
-    /// Serialized weight bytes in the current representation.
-    pub fn weight_bytes(&self) -> usize {
-        let mut b = self.embed.packed_bytes() + self.unembed.packed_bytes();
-        for l in [&self.embproj_in, &self.embproj_out].into_iter().flatten() {
-            b += l.packed_bytes();
-        }
-        for l in &self.layers {
-            b += 4 * (l.attn_norm.len() + l.ffn_norm.len())
-                + l.wq.packed_bytes() + l.wk.packed_bytes()
-                + l.wv.packed_bytes() + l.wo.packed_bytes()
-                + l.w_gate.packed_bytes() + l.w_up.packed_bytes()
-                + l.w_down.packed_bytes();
-        }
-        b + 4 * self.final_norm.len()
-    }
-
-    /// Fresh per-sequence KV cache for this model.
-    pub fn new_cache(&self, kv_bits: u32) -> SeqKv {
-        SeqKv::new(self.cfg.n_layers, self.cfg.n_heads,
-                   self.cfg.head_dim(), kv_bits)
-    }
-
-    /// One decode step for a batch of sequences: feed `tokens[r]` at
-    /// position `caches[r].n_tokens()` and return next-token logits
-    /// `[batch, vocab]`. Linear layers run batched across sequences (the
-    /// decode-amortization win); attention runs per sequence over its
-    /// quantized cache, one pool job each.
-    pub fn forward_step(&self, pool: Option<&ThreadPool>, tokens: &[i32],
-                        caches: &mut [SeqKv], a_bits: u32) -> Tensor {
-        let mut refs: Vec<&mut SeqKv> = caches.iter_mut().collect();
-        self.forward_step_refs(pool, tokens, &mut refs, a_bits)
-    }
-
-    /// [`InferModel::forward_step`] over a scattered view of caches (the
-    /// scheduler's sequences own theirs individually).
-    pub fn forward_step_refs(&self, pool: Option<&ThreadPool>,
-                             tokens: &[i32], caches: &mut [&mut SeqKv],
-                             a_bits: u32) -> Tensor {
-        self.decode_step(pool, tokens, caches, a_bits, true)
-            .expect("want_logits")
-    }
-
-    /// The scheduler's entry point: like [`InferModel::forward_step_refs`]
-    /// but with `want_logits = false` the final-norm/EmbProj/unembed head
-    /// — the model's largest matmul — is skipped and `None` returned.
-    /// Only valid for steps where no sequence samples (pure prefill);
-    /// the trunk and every cache update are identical either way.
-    pub fn decode_step(&self, pool: Option<&ThreadPool>, tokens: &[i32],
-                       caches: &mut [&mut SeqKv], a_bits: u32,
-                       want_logits: bool) -> Option<Tensor> {
-        let bsz = tokens.len();
-        assert_eq!(bsz, caches.len(), "one cache per sequence");
-        assert!(bsz > 0, "empty decode batch");
-        let d = self.cfg.d_model;
-        let a_levels = levels_for_bits(a_bits);
-
-        // Embedding lookup (+ EmbProj input projection).
-        let mut x = Tensor::zeros(&[bsz, d]);
-        for (r, &t) in tokens.iter().enumerate() {
-            assert!((t as usize) < self.cfg.vocab_size,
-                    "token {t} out of vocab");
-            self.embed.row_into(t as usize, x.row_mut(r));
-        }
-        if let Some(p_in) = &self.embproj_in {
-            x = p_in.matmul(pool, &x);
-        }
-
-        for (li, lw) in self.layers.iter().enumerate() {
-            // ---- MHSA ----
-            let mut h = x.clone();
-            for row in h.data_mut().chunks_mut(d) {
-                norm_row(row, &lw.attn_norm, self.cfg.norm_ss);
-                fake_quant_row(row, a_levels);
-            }
-            let q = lw.wq.matmul(pool, &h);
-            let k = lw.wk.matmul(pool, &h);
-            let v = lw.wv.matmul(pool, &h);
-            let mut attn_out = Tensor::zeros(&[bsz, d]);
-            {
-                let (qd, kd, vd) = (q.data(), k.data(), v.data());
-                let mut jobs: Vec<(&mut SeqKv, &mut [f32])> = caches
-                    .iter_mut()
-                    .map(|c| &mut **c)
-                    .zip(attn_out.data_mut().chunks_mut(d))
-                    .collect();
-                par::par_map_mut(pool, &mut jobs, |r, (cache, out)| {
-                    self.attend_one(li, &qd[r * d..(r + 1) * d],
-                                    &kd[r * d..(r + 1) * d],
-                                    &vd[r * d..(r + 1) * d], cache, out);
-                });
-            }
-            for row in attn_out.data_mut().chunks_mut(d) {
-                fake_quant_row(row, a_levels);
-            }
-            x = x.add(&lw.wo.matmul(pool, &attn_out));
-
-            // ---- FFN (SwiGLU) ----
-            let mut h = x.clone();
-            for row in h.data_mut().chunks_mut(d) {
-                norm_row(row, &lw.ffn_norm, self.cfg.norm_ss);
-                fake_quant_row(row, a_levels);
-            }
-            let gate = lw.w_gate.matmul(pool, &h);
-            let mut g = lw.w_up.matmul(pool, &h);
-            for (gv, xv) in g.data_mut().iter_mut().zip(gate.data()) {
-                *gv *= silu(*xv);
-            }
-            let f = self.cfg.d_ff;
-            let (blk, hscale) = (linalg::pow2_block(f),
-                                 1.0 / (linalg::pow2_block(f) as f32).sqrt());
-            for row in g.data_mut().chunks_mut(f) {
-                if self.had_flag {
-                    linalg::hadamard_row(row, blk, hscale);
-                }
-                fake_quant_row(row, a_levels);
-            }
-            x = x.add(&lw.w_down.matmul(pool, &g));
-        }
-
-        // Advance every cache once per decoded token.
-        for cache in caches.iter_mut() {
-            cache.advance();
-        }
-        if !want_logits {
-            return None;
-        }
-
-        let mut h = x;
-        for row in h.data_mut().chunks_mut(d) {
-            norm_row(row, &self.final_norm, self.cfg.norm_ss);
-        }
-        if let Some(p_out) = &self.embproj_out {
-            h = p_out.matmul(pool, &h);
-        }
-        for row in h.data_mut().chunks_mut(d) {
-            fake_quant_row(row, a_levels);
-        }
-        Some(self.unembed.matmul(pool, &h))
-    }
-
-    /// Per-sequence attention at layer `li`: RoPE q/k at the sequence's
-    /// position, quantize-and-append k/v to the cache, then causal
-    /// softmax attention over the cached rows into `out` (`[d_model]`,
-    /// heads merged).
-    fn attend_one(&self, li: usize, qrow: &[f32], krow: &[f32],
-                  vrow: &[f32], cache: &mut SeqKv, out: &mut [f32]) {
-        let (nh, hd) = (self.cfg.n_heads, self.cfg.head_dim());
-        let pos = cache.n_tokens();
-        let shd = (hd as f32).sqrt();
-        // One scratch set per call (not per head): this runs per
-        // sequence per layer per token, so allocations are hoisted out
-        // of the head loop.
-        let mut weights = vec![0.0f32; pos + 1];
-        let mut qh = vec![0.0f32; hd];
-        let mut kh = vec![0.0f32; hd];
-        for h in 0..nh {
-            qh.copy_from_slice(&qrow[h * hd..(h + 1) * hd]);
-            kh.copy_from_slice(&krow[h * hd..(h + 1) * hd]);
-            rope_in_place(&mut qh, pos, &self.rope_inv_freq);
-            rope_in_place(&mut kh, pos, &self.rope_inv_freq);
-            let lay = cache.layer_mut(li);
-            lay.k.push(&kh);
-            lay.v.push(&vrow[h * hd..(h + 1) * hd]);
-            for (t, w) in weights.iter_mut().enumerate() {
-                *w = lay.k.dot(t * nh + h, &qh) / shd;
-            }
-            softmax_in_place(&mut weights);
-            let out_h = &mut out[h * hd..(h + 1) * hd];
-            for (t, &w) in weights.iter().enumerate() {
-                lay.v.axpy_into(t * nh + h, w, out_h);
-            }
-        }
-    }
-}
-
-// ---- per-row math shared by every engine path -----------------------------
-
-/// RMSNorm (per-channel scale) or SSNorm (scalar gamma), matching the
-/// graph kernels' formulas (`ref.rmsnorm_ref` / `ref.ssnorm_ref`).
-fn norm_row(row: &mut [f32], scale: &Tensor, ss: bool) {
-    if ss {
-        let norm = (row.iter().map(|v| v * v).sum::<f32>() + 1e-6).sqrt();
-        let g = scale.data()[0];
-        for v in row.iter_mut() {
-            *v = g * *v / norm;
-        }
-    } else {
-        let ms = row.iter().map(|v| v * v).sum::<f32>()
-            / row.len() as f32;
-        let inv = 1.0 / (ms + 1e-6).sqrt();
-        for (v, s) in row.iter_mut().zip(scale.data()) {
-            *v *= s * inv;
-        }
-    }
-}
-
-/// Per-token RTN fake-quantization (the evalq activation tap):
-/// `scale = absmax / levels + 1e-8`, values snapped to the symmetric
-/// grid through the one shared [`crate::quant::rtn::rtn_code`] helper
-/// (the parity contract depends on every snap site agreeing). With the
-/// "off" levels (2^20) this is numerically the identity, exactly like
-/// the graph.
-fn fake_quant_row(row: &mut [f32], levels: f32) {
-    let absmax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
-    let scale = absmax / levels + kv::KV_EPS;
-    for v in row.iter_mut() {
-        *v = crate::quant::rtn::rtn_code(*v, scale, levels) as f32 * scale;
-    }
-}
-
-/// Rotary embedding of one head row at absolute position `pos`
-/// (half-split layout, matching `model._rope`; frequencies come from
-/// the model's precomputed `theta^(-j/half)` table).
-fn rope_in_place(head: &mut [f32], pos: usize, inv_freq: &[f32]) {
-    let half = head.len() / 2;
-    debug_assert_eq!(inv_freq.len(), half);
-    for j in 0..half {
-        let angle = pos as f32 * inv_freq[j];
-        let (sin, cos) = angle.sin_cos();
-        let (a, b) = (head[j], head[half + j]);
-        head[j] = a * cos - b * sin;
-        head[half + j] = a * sin + b * cos;
-    }
-}
-
-fn softmax_in_place(w: &mut [f32]) {
-    let m = w.iter().cloned().fold(f32::MIN, f32::max);
-    let mut z = 0.0f32;
-    for v in w.iter_mut() {
-        *v = (*v - m).exp();
-        z += *v;
-    }
-    for v in w.iter_mut() {
-        *v /= z;
-    }
-}
-
-fn silu(v: f32) -> f32 {
-    v / (1.0 + (-v).exp())
-}
-
-/// Greedy argmax over a logits row (lowest index wins ties —
-/// deterministic).
-pub fn argmax(row: &[f32]) -> i32 {
-    let mut best = 0usize;
-    for (i, &v) in row.iter().enumerate().skip(1) {
-        if v > row[best] {
-            best = i;
-        }
-    }
-    best as i32
-}
-
-/// Sample from softmax(logits / temperature); `temperature <= 0` is
-/// greedy.
-pub fn sample_token(row: &[f32], temperature: f32, rng: &mut Pcg) -> i32 {
-    if temperature <= 0.0 {
-        return argmax(row);
-    }
-    let mut probs: Vec<f32> = row.iter().map(|v| v / temperature).collect();
-    softmax_in_place(&mut probs);
-    let u = rng.uniform() as f32;
-    let mut acc = 0.0f32;
-    for (i, &p) in probs.iter().enumerate() {
-        acc += p;
-        if u < acc {
-            return i as i32;
-        }
-    }
-    (probs.len() - 1) as i32
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn tiny_cfg() -> InferConfig {
-        InferConfig { vocab_size: 96, d_model: 32, n_layers: 2, n_heads: 2,
-                      d_ff: 48, rope_theta: 10000.0, norm_ss: true,
-                      embproj: false }
-    }
-
-    #[test]
-    fn arch_knobs_parse() {
-        assert_eq!(InferConfig::arch_knobs("rmsnorm_plain").unwrap(),
-                   (false, false));
-        assert_eq!(InferConfig::arch_knobs("ssnorm_embproj").unwrap(),
-                   (true, true));
-        assert!(InferConfig::arch_knobs("bogus").is_err());
-    }
-
-    #[test]
-    fn synthetic_roundtrip_through_qparams() {
-        let m = InferModel::synthetic(&tiny_cfg(), 3);
-        assert_eq!(m.cfg.vocab_size, 96);
-        let q = m.quantized(4);
-        assert!(q.weight_bytes() * 3 < m.weight_bytes(),
-                "{} vs {}", q.weight_bytes(), m.weight_bytes());
-    }
-
-    #[test]
-    fn forward_step_shapes_and_cache_growth() {
-        let m = InferModel::synthetic(&tiny_cfg(), 5);
-        let mut caches = vec![m.new_cache(4), m.new_cache(4)];
-        let logits = m.forward_step(None, &[1, 2], &mut caches, 4);
-        assert_eq!(logits.shape(), &[2, 96]);
-        assert_eq!(caches[0].n_tokens(), 1);
-        let logits = m.forward_step(None, &[3, 4], &mut caches, 4);
-        assert_eq!(logits.shape(), &[2, 96]);
-        assert_eq!(caches[1].n_tokens(), 2);
-    }
-
-    #[test]
-    fn argmax_breaks_ties_low() {
-        assert_eq!(argmax(&[0.5, 1.0, 1.0, 0.1]), 1);
-        assert_eq!(argmax(&[2.0]), 0);
-    }
-
-    #[test]
-    fn sample_greedy_at_zero_temperature() {
-        let mut rng = Pcg::new(1, 0);
-        let row = [0.1f32, 3.0, -1.0];
-        assert_eq!(sample_token(&row, 0.0, &mut rng), 1);
-        // Positive temperature samples valid indices.
-        for _ in 0..50 {
-            let t = sample_token(&row, 1.0, &mut rng);
-            assert!((0..3).contains(&t));
-        }
-    }
-
-    #[test]
-    fn from_qparams_rejects_bad_counts() {
-        // 5 leaves cannot be 1 embed + 9k layer leaves + 2 tail.
-        let dense: Vec<Tensor> = vec![Tensor::zeros(&[4, 4]); 5];
-        assert!(InferModel::from_dense_params("rmsnorm_plain", &dense, 2,
-                                              1e4)
-                .is_err());
-    }
-}

@@ -21,10 +21,14 @@
 //!   optimizer-parallel modes, simulated data parallelism).
 //! * [`quant`] — RTN / GPTQ / QuaRot-lite / SpinQuant-lite and EmbProj
 //!   absorption.
-//! * [`infer`] — host-side batched decode engine on packed weights with
-//!   a quantized KV cache and continuous batching (DESIGN.md §8).
-//! * [`eval`] — perplexity, the 10-task synthetic benchmark suite, and
-//!   attention-sink analysis.
+//! * [`model`] — the shared host model layer: multi-token block forward
+//!   on packed weights, quantized KV cache, row kernels, and sampling
+//!   (DESIGN.md §9).
+//! * [`infer`] — the continuous-batching decode scheduler with chunked
+//!   prefill on top of [`model`] (DESIGN.md §8).
+//! * [`eval`] — perplexity and the 10-task synthetic benchmark suite on
+//!   both the engine and engine-free host paths, plus attention-sink
+//!   analysis.
 //! * [`metrics`] — telemetry registry, histograms, kurtosis tracking.
 //! * [`checkpoint`] — binary parameter store.
 //! * [`bench`] — the bench harness used by `rust/benches/*` (no criterion
@@ -38,6 +42,7 @@ pub mod data;
 pub mod eval;
 pub mod infer;
 pub mod metrics;
+pub mod model;
 pub mod quant;
 pub mod repro;
 pub mod runtime;

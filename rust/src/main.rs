@@ -6,9 +6,14 @@
 //!   repro      regenerate a paper table or figure from recorded runs
 //!   suite      run the 10-task benchmark suite on a checkpoint
 //!   quantize   apply a PTQ recipe to a checkpoint and report perplexity
+//!   eval       engine-free host evaluation straight off packed weights
+//!   generate   autoregressive decode on the host model layer
+//!   serve-bench  decode + chunked-prefill throughput sweeps
 //!   analyze    attention-sink / massive-activation analysis (§5.2)
 //!
-//! Everything is manifest-driven; run `make artifacts` first.
+//! Training/repro paths are manifest-driven (`make artifacts` first);
+//! `eval`, `generate`, and `serve-bench` also run fully offline
+//! (`--synthetic`, or `--packed` with explicit `--n-heads`).
 
 use std::path::PathBuf;
 
@@ -19,7 +24,8 @@ use osp::checkpoint;
 use osp::config::{TrainConfig, ABLATION_GRID};
 use osp::coordinator::Trainer;
 use osp::data::grammar::{Grammar, LANGUAGE_SEED};
-use osp::eval::{perplexity, perplexity_packed, tasks, BitConfig};
+use osp::eval::{host, perplexity, perplexity_packed, tasks, BitConfig,
+                HostEvalOpts};
 use osp::infer::{engine as decode, DecodeEngine, DecodeParams, GenRequest,
                  InferConfig, InferModel};
 use osp::quant::{self, PtqConfig, Rotation, WeightMethod};
@@ -48,17 +54,29 @@ USAGE: osp <subcommand> [flags]
              [--save-packed FILE]   persist the packed-code model (~8x
                                     smaller at W4), or
              --packed FILE          evaluate a previously saved one
+  eval       engine-free held-out perplexity + task suite, teacher-forced
+             on the host model layer straight off packed weights (works
+             offline — no compiled artifacts needed)
+             --packed FILE [--n-heads N --rope-theta F] |
+             --ckpt DIR [--w-bits N] | --synthetic [--arch A]
+             [--a-bits N] [--kv-bits N] [--batches N] [--batch N]
+             [--seq-len N] [--eval-chunk N] [--suite false]
+             [--n-per-task N]
   generate   autoregressive decode straight off packed weights
              --packed FILE [--n-heads N --rope-theta F] |
              --ckpt DIR [--w-bits N] | --synthetic [--arch A]
              [--prompt \"1 2 3\"] [--prompts N --prompt-len N]
              [--max-new N] [--a-bits N] [--kv-bits N] [--max-batch N]
-             [--temperature F] [--seed N]
+             [--prefill-chunk N]    prompt tokens per sequence per step
+                                    (default 64; 1 = token-at-a-time)
+             [--temperature F] [--top-k N] [--top-p F] [--seed N]
              [--check true]         also decode the dense-f32 twin and
                                     verify the streams match bit-exactly
-  serve-bench  sustained decode throughput on a synthetic model across
-             the Table-2 bit configs
+  serve-bench  sustained decode + chunked-prefill throughput on a
+             synthetic model across the Table-2 bit configs
              [--batches 1,8,32] [--prompt-len N] [--max-new N]
+             [--prefill-chunks 1,16,64] [--prefill-len N]
+             [--prefill-batch N]
              [--d-model N --n-layers N --n-heads N --d-ff N --vocab N]
              [--json [FILE]]        write BENCH_infer.json for CI
   analyze    [--runs-dir DIR] [--tags adam,osp]
@@ -334,6 +352,11 @@ fn cmd_generate(args: &Args) -> Result<()> {
         kv_bits: bits_arg(args, "kv-bits", 16)?,
         max_batch: args.usize_or("max-batch", 8).max(1),
         temperature: args.f64_or("temperature", 0.0) as f32,
+        top_k: args.usize_or("top-k", 0),
+        top_p: args.f64_or("top-p", 1.0) as f32,
+        prefill_chunk: args
+            .usize_or("prefill-chunk", decode::DEFAULT_PREFILL_CHUNK)
+            .max(1),
         seed: args.u64_or("seed", 7),
     };
     let prompts: Vec<Vec<i32>> = match args.get("prompt") {
@@ -348,23 +371,26 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let pool = par::shared_pool();
     let mut eng = DecodeEngine::new(&model, params, pool);
     for (i, p) in prompts.iter().enumerate() {
-        eng.submit(GenRequest { id: i, prompt: p.clone(), max_new });
+        eng.submit(GenRequest { id: i, prompt: p.clone(), max_new })?;
     }
-    let results = eng.run();
+    let results = eng.run()?;
     for r in &results {
         println!("[{}] prompt {:?} -> {:?}", r.id, prompts[r.id],
                  r.generated);
     }
     let st = eng.stats;
     println!(
-        "{} sequences, {} tokens in {:.2}s: {:.0} tok/s ({:.0} \
-         generated/s), peak KV {} KiB, weights {} KiB",
-        results.len(), st.tokens_processed, st.wall_secs,
-        st.tokens_per_sec(), st.generated_per_sec(),
-        st.peak_kv_bytes / 1024, model.weight_bytes() / 1024);
+        "{} sequences, {} tokens ({} prefill) in {:.2}s: {:.0} tok/s \
+         ({:.0} generated/s, {:.0} prefill/s), peak KV {} KiB, weights \
+         {} KiB",
+        results.len(), st.tokens_processed, st.tokens_prefilled,
+        st.wall_secs, st.tokens_per_sec(), st.generated_per_sec(),
+        st.prefill_per_sec(), st.peak_kv_bytes / 1024,
+        model.weight_bytes() / 1024);
     if args.bool_or("check", false) {
         let dense = model.dequantized();
-        let want = decode::generate(&dense, &prompts, max_new, params, pool);
+        let want = decode::generate(&dense, &prompts, max_new, params,
+                                    pool)?;
         let mut mismatches = 0usize;
         for (r, w) in results.iter().zip(&want) {
             if &r.generated != w {
@@ -379,6 +405,40 @@ fn cmd_generate(args: &Args) -> Result<()> {
         }
         println!("check: packed and dense-f32 token streams identical \
                   ({} sequences)", results.len());
+    }
+    Ok(())
+}
+
+/// Engine-free evaluation on the host model layer: teacher-forced
+/// perplexity over the held-out stream plus (optionally) the 10-task
+/// suite — straight off packed weights, no compiled artifacts.
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = generate_model(args)?;
+    let a = bits_arg(args, "a-bits", 4)?;
+    let kv = bits_arg(args, "kv-bits", 4)?;
+    let opts = HostEvalOpts {
+        a_bits: a,
+        kv_bits: kv,
+        batch: args.usize_or("batch", 4).max(1),
+        seq_len: args.usize_or("seq-len", 64).max(2),
+        n_batches: args.usize_or("batches", 2).max(1),
+        chunk: args.usize_or("eval-chunk", host::DEFAULT_EVAL_CHUNK).max(1),
+    };
+    let pool = par::shared_pool();
+    let p = host::perplexity_host(&model, &opts, pool)?;
+    println!(
+        "host eval (engine-free, chunk {}): ppl {:.2} @ A{a}-KV{kv} \
+         (nll/tok {:.4}, kurt_max {:.2}, kurt_mean {:.2}, weights {} KiB)",
+        opts.chunk, p.ppl, p.nll_per_token, p.kurt_max, p.kurt_mean,
+        model.weight_bytes() / 1024);
+    if args.bool_or("suite", true) {
+        let (rows, avg) = host::run_suite_host(
+            &model, args.usize_or("n-per-task", 8).max(1), a, kv,
+            args.u64_or("task-seed", 99), pool)?;
+        for (task, acc) in rows {
+            println!("{task:16} {:.1}", 100.0 * acc);
+        }
+        println!("{:16} {:.1}", "AVERAGE", 100.0 * avg);
     }
     Ok(())
 }
@@ -422,9 +482,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             let mut eng = DecodeEngine::new(&model, params, pool);
             for (i, p) in prompts.iter().enumerate() {
                 eng.submit(GenRequest { id: i, prompt: p.clone(),
-                                        max_new });
+                                        max_new })?;
             }
-            eng.run();
+            eng.run()?;
             let st = eng.stats;
             table.row(vec![
                 bc.label(), format!("{batch}"),
@@ -434,6 +494,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 format!("{}", model.weight_bytes() / 1024),
             ]);
             records.push(Json::obj(vec![
+                ("phase", Json::str("decode")),
                 ("config", Json::str(bc.label())),
                 ("w_bits", Json::num(bc.w as f64)),
                 ("a_bits", Json::num(bc.a as f64)),
@@ -447,6 +508,62 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         }
     }
     table.print();
+
+    // Prefill sweep: prompt-ingestion throughput at chunk 1/16/64 per
+    // bit config (max_new 1, so the run is prefill-dominated). Chunk 1
+    // is the old token-at-a-time prefill; larger chunks amortize each
+    // weight row's in-register dequant across the whole block.
+    let prefill_len = args.usize_or("prefill-len", 64).max(2);
+    let prefill_batch = args.usize_or("prefill-batch", 8).max(1);
+    let prefill_chunks: Vec<usize> = args
+        .list_or("prefill-chunks", &["1", "16", "64"])
+        .iter()
+        .map(|s| s.parse().map_err(|_| anyhow!("--prefill-chunks wants \
+                                                ints")))
+        .collect::<Result<_>>()?;
+    let mut ptable = Table::new(
+        &format!("prefill serve-bench (prompt={prefill_len} \
+                  batch={prefill_batch}, OSP_THREADS={nw})"),
+        &["config", "chunk", "prompt tok/s", "tok/s", "steps"]);
+    // One prompt set for the whole sweep: every config and chunk is
+    // measured on identical inputs.
+    let prefill_prompts =
+        tasks::grammar_prompts(&g, prefill_batch, prefill_len, 2);
+    for bc in BitConfig::table2_columns() {
+        let model = dense.quantized(bc.w);
+        for &chunk in &prefill_chunks {
+            let mut params =
+                DecodeParams::greedy(bc.a, bc.kv, prefill_batch);
+            params.prefill_chunk = chunk.max(1);
+            let mut eng = DecodeEngine::new(&model, params, pool);
+            for (i, p) in prefill_prompts.iter().enumerate() {
+                eng.submit(GenRequest { id: i, prompt: p.clone(),
+                                        max_new: 1 })?;
+            }
+            eng.run()?;
+            let st = eng.stats;
+            ptable.row(vec![
+                bc.label(), format!("{chunk}"),
+                format!("{:.0}", st.prefill_per_sec()),
+                format!("{:.0}", st.tokens_per_sec()),
+                format!("{}", st.steps),
+            ]);
+            records.push(Json::obj(vec![
+                ("phase", Json::str("prefill")),
+                ("config", Json::str(bc.label())),
+                ("w_bits", Json::num(bc.w as f64)),
+                ("a_bits", Json::num(bc.a as f64)),
+                ("kv_bits", Json::num(bc.kv as f64)),
+                ("batch", Json::num(prefill_batch as f64)),
+                ("chunk", Json::num(chunk as f64)),
+                ("prompt_len", Json::num(prefill_len as f64)),
+                ("prompt_tokens_per_sec", Json::num(st.prefill_per_sec())),
+                ("tokens_per_sec", Json::num(st.tokens_per_sec())),
+                ("steps", Json::num(st.steps as f64)),
+            ]));
+        }
+    }
+    ptable.print();
     if let Some(j) = args.get("json") {
         let path = if j == "true" { "BENCH_infer.json" } else { j };
         let doc = Json::obj(vec![
@@ -482,6 +599,7 @@ fn main() {
         Some("repro") => cmd_repro(&args),
         Some("suite") => cmd_suite(&args),
         Some("quantize") => cmd_quantize(&args),
+        Some("eval") => cmd_eval(&args),
         Some("generate") => cmd_generate(&args),
         Some("serve-bench") => cmd_serve_bench(&args),
         Some("analyze") => cmd_analyze(&args),

@@ -1,0 +1,388 @@
+//! Quantized KV cache for the host model layer (DESIGN.md §8-§9).
+//!
+//! Each sequence owns one [`SeqKv`]: per layer, one append-only
+//! [`QRows`] store for keys and one for values, one row per
+//! (position, head) in position-major order. Rows are quantized with the
+//! evalq graph's per-token RTN tap — `scale = absmax / levels + 1e-8`,
+//! `code = clip(round(v / scale), -levels-1, levels)` — and stored as
+//! packed two's-complement codes in the *same field layout as
+//! [`QTensor`]* (`qtensor::encode`/`decode`) when the bit-width packs
+//! (2..=8 bits), or as the fake-quantized f32 values otherwise
+//! (bits >= 9, including the 16-bit "off" passthrough).
+//!
+//! The multi-token block forward ([`super::InferModel::forward_block`])
+//! appends whole groups of rows at once ([`QRows::append_block`]) and
+//! advances the position counter by the block length
+//! ([`SeqKv::advance_by`]); single-token decode is the block-size-1
+//! special case.
+//!
+//! Parity contract (pinned by `rust/tests/infer_properties.rs` and
+//! `rust/tests/model_properties.rs`): `code as f32 * scale` is bitwise
+//! the fake-quantized value the dense f32 store would hold, and
+//! [`QRows::dot`] / [`QRows::axpy_into`] accumulate in the same element
+//! order either way — so attention over a packed KV4 cache is
+//! bit-identical to attention over a dense cache holding the
+//! fake-quantized rows.
+//!
+//! [`QTensor`]: crate::tensor::qtensor::QTensor
+
+use crate::coordinator::levels_for_bits;
+use crate::quant::rtn::rtn_code;
+use crate::tensor::qtensor::{codes_per_byte, decode, encode, storage_bits};
+
+/// The eps the evalq fake-quant kernel adds to every row scale
+/// (`python/compile/kernels/fake_quant.py`).
+pub const KV_EPS: f32 = 1e-8;
+
+/// Append-only store of quantized `dim`-sized rows.
+pub struct QRows {
+    bits: u32,
+    dim: usize,
+    levels: f32,
+    /// Some(storage field width) when rows pack; None = f32 passthrough.
+    sbits: Option<u32>,
+    /// Bytes per packed row.
+    stride: usize,
+    codes: Vec<u8>,
+    scales: Vec<f32>,
+    dense: Vec<f32>,
+    n_rows: usize,
+}
+
+impl QRows {
+    pub fn new(dim: usize, bits: u32) -> QRows {
+        let sbits = if bits < 16 { storage_bits(bits) } else { None };
+        let stride = match sbits {
+            Some(_) => dim.div_ceil(codes_per_byte(bits)),
+            None => 0,
+        };
+        QRows { bits, dim, levels: levels_for_bits(bits), sbits, stride,
+                codes: Vec::new(), scales: Vec::new(), dense: Vec::new(),
+                n_rows: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_rows == 0
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Row width (one K/V head row).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn is_packed(&self) -> bool {
+        self.sbits.is_some()
+    }
+
+    /// Bytes this store currently occupies (codes + scales, or dense
+    /// f32) — the serve-bench KV-memory column.
+    pub fn bytes(&self) -> usize {
+        self.codes.len() + 4 * self.scales.len() + 4 * self.dense.len()
+    }
+
+    /// Quantize-and-append one row (the per-(position, head) KV tap).
+    /// Codes come from the one shared [`rtn_code`] snap helper, so the
+    /// packed/dense parity contract has a single source of truth.
+    pub fn push(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.dim);
+        let absmax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let scale = absmax / self.levels + KV_EPS;
+        let lv = self.levels;
+        match self.sbits {
+            Some(sbits) => {
+                let base = self.codes.len();
+                self.codes.resize(base + self.stride, 0);
+                let out = &mut self.codes[base..];
+                for (j, &v) in row.iter().enumerate() {
+                    encode(out, sbits, j, rtn_code(v, scale, lv));
+                }
+                self.scales.push(scale);
+            }
+            None => {
+                for &v in row {
+                    self.dense.push(rtn_code(v, scale, lv) as f32 * scale);
+                }
+            }
+        }
+        self.n_rows += 1;
+    }
+
+    /// Quantize-and-append a contiguous group of rows (`data.len()` a
+    /// multiple of `dim`) — the block-forward path appends one token's
+    /// head rows (or a whole chunk) in one call. Each row is quantized
+    /// independently with its own scale, exactly like repeated
+    /// [`QRows::push`] calls.
+    pub fn append_block(&mut self, data: &[f32]) {
+        debug_assert_eq!(data.len() % self.dim, 0,
+                         "append_block wants whole rows");
+        for row in data.chunks_exact(self.dim) {
+            self.push(row);
+        }
+    }
+
+    /// Dequantized element `j` of row `i` (test/diagnostic helper).
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        match self.sbits {
+            Some(sbits) => {
+                let row = &self.codes[i * self.stride..(i + 1) * self.stride];
+                decode(row, sbits, j) as f32 * self.scales[i]
+            }
+            None => self.dense[i * self.dim + j],
+        }
+    }
+
+    /// deq(row i) · x, accumulated in ascending element order — the
+    /// attention-logit kernel. Bit-identical between packed and dense
+    /// storage of the same fake-quantized row.
+    pub fn dot(&self, i: usize, x: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), self.dim);
+        match self.sbits {
+            Some(sbits) => {
+                let row = &self.codes[i * self.stride..(i + 1) * self.stride];
+                let s = self.scales[i];
+                let mut acc = 0.0f32;
+                for (j, &xv) in x.iter().enumerate() {
+                    acc += decode(row, sbits, j) as f32 * s * xv;
+                }
+                acc
+            }
+            None => {
+                let row = &self.dense[i * self.dim..(i + 1) * self.dim];
+                let mut acc = 0.0f32;
+                for (kv, &xv) in row.iter().zip(x) {
+                    acc += kv * xv;
+                }
+                acc
+            }
+        }
+    }
+
+    /// out += w * deq(row i) — the attention value-mix kernel, same
+    /// element order and parity as [`QRows::dot`].
+    pub fn axpy_into(&self, i: usize, w: f32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim);
+        match self.sbits {
+            Some(sbits) => {
+                let row = &self.codes[i * self.stride..(i + 1) * self.stride];
+                let s = self.scales[i];
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o += w * (decode(row, sbits, j) as f32 * s);
+                }
+            }
+            None => {
+                let row = &self.dense[i * self.dim..(i + 1) * self.dim];
+                for (o, &v) in out.iter_mut().zip(row) {
+                    *o += w * v;
+                }
+            }
+        }
+    }
+}
+
+/// One layer's key and value stores.
+pub struct LayerKv {
+    pub k: QRows,
+    pub v: QRows,
+}
+
+/// Per-sequence KV cache: `n_layers` layer stores of (position, head)
+/// rows, position-major (`row = pos * n_heads + head`).
+pub struct SeqKv {
+    layers: Vec<LayerKv>,
+    n_heads: usize,
+    n_tokens: usize,
+}
+
+impl SeqKv {
+    pub fn new(n_layers: usize, n_heads: usize, head_dim: usize,
+               kv_bits: u32) -> SeqKv {
+        let layers = (0..n_layers)
+            .map(|_| LayerKv { k: QRows::new(head_dim, kv_bits),
+                               v: QRows::new(head_dim, kv_bits) })
+            .collect();
+        SeqKv { layers, n_heads, n_tokens: 0 }
+    }
+
+    /// Positions cached so far (the next token decodes at this position).
+    pub fn n_tokens(&self) -> usize {
+        self.n_tokens
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.n_heads
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn layer(&self, l: usize) -> &LayerKv {
+        &self.layers[l]
+    }
+
+    pub fn layer_mut(&mut self, l: usize) -> &mut LayerKv {
+        &mut self.layers[l]
+    }
+
+    /// Called once per decoded token, after every layer pushed its
+    /// `n_heads` K and V rows.
+    pub fn advance(&mut self) {
+        self.advance_by(1);
+    }
+
+    /// Advance the position counter past a whole block of `n` tokens
+    /// (every layer must already hold their K/V rows). The block-forward
+    /// path calls this once per chunk instead of once per token.
+    pub fn advance_by(&mut self, n: usize) {
+        self.n_tokens += n;
+        for lay in &self.layers {
+            debug_assert_eq!(lay.k.len(), self.n_tokens * self.n_heads);
+            debug_assert_eq!(lay.v.len(), self.n_tokens * self.n_heads);
+        }
+    }
+
+    /// Total cache bytes across layers (K + V).
+    pub fn bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.k.bytes() + l.v.bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn fake_quant_ref(row: &[f32], bits: u32) -> Vec<f32> {
+        let lv = levels_for_bits(bits);
+        let absmax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let scale = absmax / lv + KV_EPS;
+        row.iter()
+            .map(|&v| (v / scale).round().clamp(-lv - 1.0, lv) * scale)
+            .collect()
+    }
+
+    #[test]
+    fn packed_rows_hold_fake_quant_values_bitwise() {
+        let mut rng = Pcg::new(1, 0);
+        for bits in [2u32, 4, 8] {
+            let mut rows = QRows::new(16, bits);
+            assert!(rows.is_packed());
+            for r in 0..5 {
+                let row: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+                rows.push(&row);
+                let want = fake_quant_ref(&row, bits);
+                for (j, w) in want.iter().enumerate() {
+                    assert_eq!(rows.at(r, j), *w, "{bits}b r{r} j{j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn passthrough_rows_apply_the_off_tap() {
+        let mut rows = QRows::new(8, 16);
+        assert!(!rows.is_packed());
+        let row: Vec<f32> = (0..8).map(|i| i as f32 * 0.3 - 1.0).collect();
+        rows.push(&row);
+        let want = fake_quant_ref(&row, 16);
+        for (j, w) in want.iter().enumerate() {
+            assert_eq!(rows.at(0, j), *w, "j{j}");
+        }
+    }
+
+    #[test]
+    fn append_block_equals_repeated_push() {
+        let mut rng = Pcg::new(9, 0);
+        let dim = 10;
+        for bits in [4u32, 16] {
+            let flat: Vec<f32> = (0..3 * dim).map(|_| rng.normal()).collect();
+            let mut blk = QRows::new(dim, bits);
+            blk.append_block(&flat);
+            let mut one = QRows::new(dim, bits);
+            for row in flat.chunks_exact(dim) {
+                one.push(row);
+            }
+            assert_eq!(blk.len(), 3);
+            for i in 0..3 {
+                for j in 0..dim {
+                    assert_eq!(blk.at(i, j), one.at(i, j),
+                               "{bits}b r{i} j{j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot_and_axpy_match_dense_reference_bitwise() {
+        let mut rng = Pcg::new(2, 0);
+        let dim = 12;
+        let mut packed = QRows::new(dim, 4);
+        let mut dense: Vec<Vec<f32>> = Vec::new();
+        for _ in 0..7 {
+            let row: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+            packed.push(&row);
+            dense.push(fake_quant_ref(&row, 4));
+        }
+        let x: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+        for (i, drow) in dense.iter().enumerate() {
+            let mut want = 0.0f32;
+            for (kv, &xv) in drow.iter().zip(&x) {
+                want += kv * xv;
+            }
+            assert_eq!(packed.dot(i, &x), want, "dot row {i}");
+            let mut a = vec![0.5f32; dim];
+            let mut b = a.clone();
+            packed.axpy_into(i, 0.25, &mut a);
+            for (o, &v) in b.iter_mut().zip(drow) {
+                *o += 0.25 * v;
+            }
+            assert_eq!(a, b, "axpy row {i}");
+        }
+    }
+
+    #[test]
+    fn kv4_cache_is_much_smaller_than_f32() {
+        let mut q4 = QRows::new(64, 4);
+        let mut q16 = QRows::new(64, 16);
+        let row = vec![0.5f32; 64];
+        for _ in 0..32 {
+            q4.push(&row);
+            q16.push(&row);
+        }
+        // 4-bit rows: 32 bytes codes + 4 bytes scale vs 256 bytes f32.
+        assert!(q4.bytes() * 4 < q16.bytes(),
+                "{} vs {}", q4.bytes(), q16.bytes());
+    }
+
+    #[test]
+    fn seq_kv_row_accounting() {
+        let mut kv = SeqKv::new(2, 4, 8, 4);
+        assert_eq!(kv.n_tokens(), 0);
+        let row = vec![0.1f32; 8];
+        for l in 0..2 {
+            for _h in 0..4 {
+                kv.layer_mut(l).k.push(&row);
+                kv.layer_mut(l).v.push(&row);
+            }
+        }
+        kv.advance();
+        assert_eq!(kv.n_tokens(), 1);
+        assert!(kv.bytes() > 0);
+        // A 3-token block advances in one call.
+        let block = vec![0.2f32; 3 * 4 * 8];
+        for l in 0..2 {
+            kv.layer_mut(l).k.append_block(&block);
+            kv.layer_mut(l).v.append_block(&block);
+        }
+        kv.advance_by(3);
+        assert_eq!(kv.n_tokens(), 4);
+    }
+}

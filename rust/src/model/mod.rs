@@ -1,0 +1,876 @@
+//! Host model layer (DESIGN.md §9): the one forward pass every
+//! engine-free path shares — batched decode, chunked multi-token
+//! prefill, and teacher-forced evaluation all run through
+//! [`InferModel::forward_block`] straight off packed [`QTensor`] weights
+//! with a quantized KV cache ([`kv`]).
+//!
+//! The block forward takes `[n_tokens, d_model]` activations per
+//! sequence and runs the trunk as `qmatmul` matrix-matrix calls: every
+//! linear layer batches across *all tokens of all sequences*, so each
+//! packed weight row is dequantized in-register once per block instead
+//! of once per token — the same amortization `qmatmul_rhs` applies
+//! across the batch. Attention is causally masked per sequence over the
+//! packed KV cache, which grows whole blocks at a time
+//! ([`kv::QRows::append_block`] / [`kv::SeqKv::advance_by`]).
+//!
+//! The forward mirrors the evalq graph semantics
+//! (`python/compile/model.py`): RMSNorm/SSNorm, RoPE on q/k, per-token
+//! RTN fake-quantization of every linear input activation (`a_bits`),
+//! KV-cache quantization after RoPE (`kv_bits`), and the optional online
+//! Hadamard on the FFN hidden state (`had_flag`, paired with the
+//! pre-rotated `w_down` the PTQ pipeline emits). Bit-widths follow the
+//! same `levels = 2^(bits-1) - 1` mapping as the executables.
+//!
+//! Parity contract (pinned by `rust/tests/infer_properties.rs` and
+//! `rust/tests/model_properties.rs`):
+//!
+//! * Forwarding on packed weights is bit-identical to forwarding on
+//!   their [`QTensor::dequantize`]d f32 twins — the fused kernels share
+//!   the dense kernels' accumulation order, and the packed KV cache
+//!   stores exactly the fake-quantized values the dense cache holds.
+//! * Block size never changes results: feeding a prompt in chunks of 1
+//!   or 64 yields bit-identical logits and KV contents, because every
+//!   per-token operation is row-local and attention reads the same
+//!   cached rows in the same order either way.
+//! * Serial and pool-parallel forwards are bit-identical for any worker
+//!   count: batch rows, column stripes, and per-sequence attention jobs
+//!   each compute with the same per-element arithmetic.
+
+pub mod kv;
+pub mod ops;
+pub mod sample;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::levels_for_bits;
+use crate::quant::QParam;
+use crate::tensor::linalg;
+use crate::tensor::qtensor::QTensor;
+use crate::tensor::{par, Tensor};
+use crate::util::rng::Pcg;
+use crate::util::threadpool::ThreadPool;
+
+use kv::SeqKv;
+
+pub use sample::{argmax, sample_token, sample_token_filtered};
+
+/// The decoder shape the host layer runs (subset of the lowering-time
+/// model config, plus the norm/embproj knobs the arch name encodes).
+#[derive(Clone, Debug)]
+pub struct InferConfig {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub rope_theta: f32,
+    /// Single-Scale RMSNorm (scalar gamma) vs per-channel RMSNorm.
+    pub norm_ss: bool,
+    pub embproj: bool,
+}
+
+impl InferConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Decode the norm/embproj knobs from an arch tag
+    /// (`{rms|ss}norm_{plain|embproj}`).
+    pub fn arch_knobs(arch: &str) -> Result<(bool, bool)> {
+        let norm_ss = match arch.split("norm_").next() {
+            Some("rms") => false,
+            Some("ss") => true,
+            _ => bail!("unknown arch '{arch}' (want {{rms|ss}}norm_...)"),
+        };
+        let embproj = match arch.split("norm_").nth(1) {
+            Some("plain") => false,
+            Some("embproj") => true,
+            _ => bail!("unknown arch '{arch}' (want ..._{{plain|embproj}})"),
+        };
+        Ok((norm_ss, embproj))
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_heads == 0 || self.d_model % self.n_heads != 0 {
+            bail!("n_heads {} must divide d_model {}", self.n_heads,
+                  self.d_model);
+        }
+        if self.head_dim() % 2 != 0 {
+            bail!("head_dim {} must be even (RoPE pairs channels)",
+                  self.head_dim());
+        }
+        Ok(())
+    }
+}
+
+/// One weight matrix of the host model: packed codes (the deployment
+/// path) or a dense f32 fallback. All kernels are bit-identical across
+/// the two representations of the same dequantized values.
+pub enum Linear {
+    Dense(Tensor),
+    Packed(QTensor),
+}
+
+impl Linear {
+    fn shape(&self) -> &[usize] {
+        match self {
+            Linear::Dense(t) => t.shape(),
+            Linear::Packed(q) => q.shape(),
+        }
+    }
+
+    /// C = A @ deq(self); `self` is `[in, out]`, A is `[batch, in]`.
+    fn matmul(&self, pool: Option<&ThreadPool>, a: &Tensor) -> Tensor {
+        match self {
+            Linear::Dense(t) => par::matmul_with(pool, a, t),
+            Linear::Packed(q) => q.qmatmul_rhs_with(pool, a),
+        }
+    }
+
+    /// Row `i` dequantized into `out` (the embedding lookup).
+    fn row_into(&self, i: usize, out: &mut [f32]) {
+        match self {
+            Linear::Dense(t) => out.copy_from_slice(t.row(i)),
+            Linear::Packed(q) => q.dequant_row_into(i, out),
+        }
+    }
+
+    /// Serialized weight bytes in this representation.
+    pub fn packed_bytes(&self) -> usize {
+        match self {
+            Linear::Dense(t) => 4 * t.len(),
+            Linear::Packed(q) => q.packed_bytes(),
+        }
+    }
+
+    fn dequantized(&self) -> Linear {
+        match self {
+            Linear::Dense(t) => Linear::Dense(t.clone()),
+            Linear::Packed(q) => Linear::Dense(q.dequantize()),
+        }
+    }
+
+    fn quantized(&self, bits: u32) -> Linear {
+        match self {
+            Linear::Dense(t) if bits < 16 => {
+                Linear::Packed(crate::quant::rtn::quantize_per_channel_q(
+                    t, bits))
+            }
+            Linear::Dense(t) => Linear::Dense(t.clone()),
+            Linear::Packed(q) => Linear::Packed(q.clone()),
+        }
+    }
+}
+
+struct LayerWeights {
+    attn_norm: Tensor,
+    wq: Linear,
+    wk: Linear,
+    wv: Linear,
+    wo: Linear,
+    ffn_norm: Tensor,
+    w_gate: Linear,
+    w_up: Linear,
+    w_down: Linear,
+}
+
+/// What [`InferModel::forward_block`] should run the logits head on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LogitsMode {
+    /// Skip the final-norm/EmbProj/unembed head (the model's largest
+    /// matmul) entirely — pure prefill steps.
+    None,
+    /// Logits for the *last* token of each sequence only
+    /// (`[n_seqs, vocab]`) — the decode/sampling path. Head ops are
+    /// row-local, so this is bitwise the matching rows of `All`.
+    Last,
+    /// Logits for every fed token (`[total_tokens, vocab]`, sequences
+    /// concatenated in order) — the teacher-forced eval path.
+    All,
+}
+
+/// One sequence's slice of a block forward: the tokens to feed this call
+/// and the KV cache they extend (positions `cache.n_tokens()..+len`).
+pub struct SeqBlock<'a> {
+    pub tokens: &'a [i32],
+    pub cache: &'a mut SeqKv,
+}
+
+/// Residual-stream kurtosis accumulator, mirroring the evalq graph's
+/// `kurt` output: tap `2*li` samples the MHSA input of layer `li`,
+/// tap `2*li + 1` the FFN input. Samples concatenate across every
+/// [`InferModel::forward_block`] call that carries the probe; callers
+/// scope one probe per evaluation batch (and average the per-batch
+/// kurtosis, like the engine path's `mean_vecs`) so probe memory stays
+/// bounded by a single batch's activations.
+pub struct KurtProbe {
+    taps: Vec<Vec<f32>>,
+}
+
+impl KurtProbe {
+    pub fn new(n_layers: usize) -> KurtProbe {
+        KurtProbe { taps: vec![Vec::new(); 2 * n_layers] }
+    }
+
+    fn tap(&mut self, idx: usize, data: &[f32]) {
+        self.taps[idx].extend_from_slice(data);
+    }
+
+    /// Excess kurtosis per tap (`[2 * n_layers]`, MHSA-in then FFN-in
+    /// per layer — the paper's Fig-2/3 measurement points).
+    pub fn kurt(&self) -> Vec<f64> {
+        self.taps
+            .iter()
+            .map(|t| crate::tensor::stats::excess_kurtosis(t))
+            .collect()
+    }
+}
+
+/// A decode-ready model: the packed leaves of a
+/// [`crate::quant::QuantizedModel`] (or dense f32 weights) arranged for
+/// the block forward pass.
+pub struct InferModel {
+    pub cfg: InferConfig,
+    /// Online FFN Hadamard (must match the weight preparation).
+    pub had_flag: bool,
+    embed: Linear,
+    embproj_in: Option<Linear>,
+    embproj_out: Option<Linear>,
+    layers: Vec<LayerWeights>,
+    final_norm: Tensor,
+    unembed: Linear,
+    /// Precomputed RoPE frequencies `theta^(-j/half)`, one per
+    /// channel pair — keeps `powf` out of the per-token hot loop.
+    rope_inv_freq: Vec<f32>,
+}
+
+fn rope_inv_freq(cfg: &InferConfig) -> Vec<f32> {
+    let half = cfg.head_dim() / 2;
+    (0..half)
+        .map(|j| cfg.rope_theta.powf(-(j as f32) / half as f32))
+        .collect()
+}
+
+fn norm_leaf(p: &QParam) -> Tensor {
+    match p {
+        QParam::Dense(t) => t.clone(),
+        QParam::Packed(q) => q.dequantize(),
+    }
+}
+
+fn linear_leaf(p: &QParam) -> Linear {
+    match p {
+        QParam::Dense(t) => Linear::Dense(t.clone()),
+        QParam::Packed(q) => Linear::Packed(q.clone()),
+    }
+}
+
+impl InferModel {
+    /// Build from quantized-model leaves in manifest parameter order
+    /// (embed, [embproj_in, embproj_out], per layer {attn_norm, wq, wk,
+    /// wv, wo, ffn_norm, w_gate, w_up, w_down}, final_norm, unembed).
+    /// `n_heads` and `rope_theta` come from the lowering-time config —
+    /// they are not recoverable from the leaf shapes.
+    pub fn from_qparams(arch: &str, params: &[QParam], n_heads: usize,
+                        rope_theta: f32, had_flag: bool)
+                        -> Result<InferModel> {
+        let (norm_ss, embproj) = InferConfig::arch_knobs(arch)?;
+        let head = 1 + if embproj { 2 } else { 0 };
+        let tail = 2; // final_norm, unembed
+        let body = params
+            .len()
+            .checked_sub(head + tail)
+            .ok_or_else(|| anyhow!("{} leaves is too few for '{arch}'",
+                                   params.len()))?;
+        if body % 9 != 0 {
+            bail!("{} leaves does not match '{arch}' (9 per layer)",
+                  params.len());
+        }
+        let n_layers = body / 9;
+        if n_layers == 0 {
+            bail!("'{arch}' model with zero layers");
+        }
+        let embed = linear_leaf(&params[0]);
+        if embed.shape().len() != 2 {
+            bail!("embed leaf is not 2-D");
+        }
+        let (vocab_size, d_model) = (embed.shape()[0], embed.shape()[1]);
+        let (embproj_in, embproj_out) = if embproj {
+            (Some(linear_leaf(&params[1])), Some(linear_leaf(&params[2])))
+        } else {
+            (None, None)
+        };
+        let mut layers = Vec::with_capacity(n_layers);
+        for li in 0..n_layers {
+            let b = head + li * 9;
+            layers.push(LayerWeights {
+                attn_norm: norm_leaf(&params[b]),
+                wq: linear_leaf(&params[b + 1]),
+                wk: linear_leaf(&params[b + 2]),
+                wv: linear_leaf(&params[b + 3]),
+                wo: linear_leaf(&params[b + 4]),
+                ffn_norm: norm_leaf(&params[b + 5]),
+                w_gate: linear_leaf(&params[b + 6]),
+                w_up: linear_leaf(&params[b + 7]),
+                w_down: linear_leaf(&params[b + 8]),
+            });
+        }
+        let d_ff = layers[0].w_gate.shape()[1];
+        let final_norm = norm_leaf(&params[head + body]);
+        let unembed = linear_leaf(&params[head + body + 1]);
+        if unembed.shape() != &[d_model, vocab_size] {
+            bail!("unembed shape {:?} != [{d_model}, {vocab_size}]",
+                  unembed.shape());
+        }
+        let want_norm = if norm_ss { 1 } else { d_model };
+        for (what, len) in [("attn_norm", layers[0].attn_norm.len()),
+                            ("ffn_norm", layers[0].ffn_norm.len()),
+                            ("final_norm", final_norm.len())] {
+            if len != want_norm {
+                bail!("{what} has {len} scales, '{arch}' wants \
+                       {want_norm}");
+            }
+        }
+        let cfg = InferConfig { vocab_size, d_model, n_layers, n_heads,
+                                d_ff, rope_theta, norm_ss, embproj };
+        cfg.validate()?;
+        let rope_inv_freq = rope_inv_freq(&cfg);
+        Ok(InferModel { cfg, had_flag, embed, embproj_in, embproj_out,
+                        layers, final_norm, unembed, rope_inv_freq })
+    }
+
+    /// Wrap dense f32 checkpoint leaves (same ordering) — the unquantized
+    /// baseline the consistency checks decode against, and the FP rows of
+    /// the host-eval tables.
+    pub fn from_dense_params(arch: &str, params: &[Tensor], n_heads: usize,
+                             rope_theta: f32) -> Result<InferModel> {
+        let qp: Vec<QParam> =
+            params.iter().cloned().map(QParam::Dense).collect();
+        InferModel::from_qparams(arch, &qp, n_heads, rope_theta, false)
+    }
+
+    /// The dense-f32 twin: every packed leaf dequantized, everything
+    /// else cloned. Same token streams bit-for-bit (the parity
+    /// contract); used by `osp generate --check` and the property tests.
+    pub fn dequantized(&self) -> InferModel {
+        InferModel {
+            cfg: self.cfg.clone(),
+            had_flag: self.had_flag,
+            embed: self.embed.dequantized(),
+            embproj_in: self.embproj_in.as_ref().map(|l| l.dequantized()),
+            embproj_out: self.embproj_out.as_ref().map(|l| l.dequantized()),
+            layers: self
+                .layers
+                .iter()
+                .map(|l| LayerWeights {
+                    attn_norm: l.attn_norm.clone(),
+                    wq: l.wq.dequantized(),
+                    wk: l.wk.dequantized(),
+                    wv: l.wv.dequantized(),
+                    wo: l.wo.dequantized(),
+                    ffn_norm: l.ffn_norm.clone(),
+                    w_gate: l.w_gate.dequantized(),
+                    w_up: l.w_up.dequantized(),
+                    w_down: l.w_down.dequantized(),
+                })
+                .collect(),
+            final_norm: self.final_norm.clone(),
+            unembed: self.unembed.dequantized(),
+            rope_inv_freq: self.rope_inv_freq.clone(),
+        }
+    }
+
+    /// RTN-quantize every matrix leaf to `w_bits` packed codes (norm
+    /// leaves stay dense) — the synthetic-model path serve-bench and the
+    /// property tests use; real checkpoints go through `quant::prepare`.
+    pub fn quantized(&self, w_bits: u32) -> InferModel {
+        InferModel {
+            cfg: self.cfg.clone(),
+            had_flag: self.had_flag,
+            embed: self.embed.quantized(w_bits),
+            embproj_in: self.embproj_in.as_ref()
+                .map(|l| l.quantized(w_bits)),
+            embproj_out: self.embproj_out.as_ref()
+                .map(|l| l.quantized(w_bits)),
+            layers: self
+                .layers
+                .iter()
+                .map(|l| LayerWeights {
+                    attn_norm: l.attn_norm.clone(),
+                    wq: l.wq.quantized(w_bits),
+                    wk: l.wk.quantized(w_bits),
+                    wv: l.wv.quantized(w_bits),
+                    wo: l.wo.quantized(w_bits),
+                    ffn_norm: l.ffn_norm.clone(),
+                    w_gate: l.w_gate.quantized(w_bits),
+                    w_up: l.w_up.quantized(w_bits),
+                    w_down: l.w_down.quantized(w_bits),
+                })
+                .collect(),
+            final_norm: self.final_norm.clone(),
+            unembed: self.unembed.quantized(w_bits),
+            rope_inv_freq: self.rope_inv_freq.clone(),
+        }
+    }
+
+    /// A random dense model at `cfg` (normal init, residual-branch
+    /// scaling like the init artifact) — the no-artifacts path for
+    /// serve-bench, the examples, and the property tests.
+    pub fn synthetic(cfg: &InferConfig, seed: u64) -> InferModel {
+        cfg.validate().expect("synthetic: invalid InferConfig");
+        let mut rng = Pcg::new(seed, 23);
+        let std = 0.05f32;
+        let res = std / (2.0 * cfg.n_layers as f32).sqrt();
+        let mut randn = |shape: &[usize], s: f32| -> Linear {
+            let mut t = Tensor::zeros(shape);
+            rng.fill_normal(t.data_mut(), s);
+            Linear::Dense(t)
+        };
+        let (d, f, v) = (cfg.d_model, cfg.d_ff, cfg.vocab_size);
+        let norm = |ss: bool| -> Tensor {
+            if ss {
+                Tensor::full(&[1], (d as f32).sqrt())
+            } else {
+                Tensor::full(&[d], 1.0)
+            }
+        };
+        let embed = randn(&[v, d], std);
+        let (embproj_in, embproj_out) = if cfg.embproj {
+            (Some(randn(&[d, d], 1.0 / (d as f32).sqrt())),
+             Some(randn(&[d, d], 1.0 / (d as f32).sqrt())))
+        } else {
+            (None, None)
+        };
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerWeights {
+                attn_norm: norm(cfg.norm_ss),
+                wq: randn(&[d, d], std),
+                wk: randn(&[d, d], std),
+                wv: randn(&[d, d], std),
+                wo: randn(&[d, d], res),
+                ffn_norm: norm(cfg.norm_ss),
+                w_gate: randn(&[d, f], std),
+                w_up: randn(&[d, f], std),
+                w_down: randn(&[f, d], res),
+            })
+            .collect();
+        let final_norm = norm(cfg.norm_ss);
+        let unembed = randn(&[d, v], std);
+        InferModel { cfg: cfg.clone(), had_flag: false, embed, embproj_in,
+                     embproj_out, layers, final_norm, unembed,
+                     rope_inv_freq: rope_inv_freq(cfg) }
+    }
+
+    /// Serialized weight bytes in the current representation.
+    pub fn weight_bytes(&self) -> usize {
+        let mut b = self.embed.packed_bytes() + self.unembed.packed_bytes();
+        for l in [&self.embproj_in, &self.embproj_out].into_iter().flatten() {
+            b += l.packed_bytes();
+        }
+        for l in &self.layers {
+            b += 4 * (l.attn_norm.len() + l.ffn_norm.len())
+                + l.wq.packed_bytes() + l.wk.packed_bytes()
+                + l.wv.packed_bytes() + l.wo.packed_bytes()
+                + l.w_gate.packed_bytes() + l.w_up.packed_bytes()
+                + l.w_down.packed_bytes();
+        }
+        b + 4 * self.final_norm.len()
+    }
+
+    /// Fresh per-sequence KV cache for this model.
+    pub fn new_cache(&self, kv_bits: u32) -> SeqKv {
+        SeqKv::new(self.cfg.n_layers, self.cfg.n_heads,
+                   self.cfg.head_dim(), kv_bits)
+    }
+
+    /// The core op of the host layer: feed each sequence's token block
+    /// (any per-sequence length >= 1) at its cache position and run the
+    /// trunk once over the concatenated `[total_tokens, d_model]`
+    /// activations. Linear layers batch across every token of every
+    /// sequence (the prefill-amortization win); attention runs per
+    /// sequence, causally, over its quantized cache — one pool job each.
+    ///
+    /// Rejects empty batches, empty per-sequence blocks, and
+    /// out-of-vocab tokens with `Err` (never panics), so one bad request
+    /// cannot kill a serve loop. On success every cache has advanced by
+    /// its block length and the logits selected by `mode` are returned.
+    pub fn forward_block(&self, pool: Option<&ThreadPool>,
+                         seqs: &mut [SeqBlock<'_>], a_bits: u32,
+                         mode: LogitsMode,
+                         mut probe: Option<&mut KurtProbe>)
+                         -> Result<Option<Tensor>> {
+        if seqs.is_empty() {
+            bail!("forward_block: empty batch");
+        }
+        for (si, sb) in seqs.iter().enumerate() {
+            if sb.tokens.is_empty() {
+                bail!("forward_block: sequence {si} feeds no tokens");
+            }
+            for &t in sb.tokens {
+                if t < 0 || t as usize >= self.cfg.vocab_size {
+                    bail!("forward_block: sequence {si} token {t} outside \
+                           vocab 0..{}", self.cfg.vocab_size);
+                }
+            }
+        }
+        let d = self.cfg.d_model;
+        let a_levels = levels_for_bits(a_bits);
+        let total: usize = seqs.iter().map(|s| s.tokens.len()).sum();
+
+        // Embedding lookup (+ EmbProj input projection), sequences
+        // concatenated in order.
+        let mut x = Tensor::zeros(&[total, d]);
+        {
+            let xd = x.data_mut();
+            let mut r = 0usize;
+            for sb in seqs.iter() {
+                for &t in sb.tokens {
+                    self.embed.row_into(t as usize,
+                                        &mut xd[r * d..(r + 1) * d]);
+                    r += 1;
+                }
+            }
+        }
+        if let Some(p_in) = &self.embproj_in {
+            x = p_in.matmul(pool, &x);
+        }
+
+        for (li, lw) in self.layers.iter().enumerate() {
+            // ---- MHSA ----
+            if let Some(p) = probe.as_deref_mut() {
+                p.tap(2 * li, x.data());
+            }
+            let mut h = x.clone();
+            for row in h.data_mut().chunks_mut(d) {
+                ops::norm_row(row, &lw.attn_norm, self.cfg.norm_ss);
+                ops::fake_quant_row(row, a_levels);
+            }
+            let q = lw.wq.matmul(pool, &h);
+            let k = lw.wk.matmul(pool, &h);
+            let v = lw.wv.matmul(pool, &h);
+            let mut attn_out = Tensor::zeros(&[total, d]);
+            {
+                let (qd, kd, vd) = (q.data(), k.data(), v.data());
+                let mut jobs: Vec<(usize, &mut SeqKv, &mut [f32])> =
+                    Vec::with_capacity(seqs.len());
+                let mut rest = attn_out.data_mut();
+                let mut row0 = 0usize;
+                for sb in seqs.iter_mut() {
+                    let n = sb.tokens.len();
+                    // `take` moves the remainder out so the split halves
+                    // keep the full borrow lifetime across iterations.
+                    let (chunk, tail) =
+                        std::mem::take(&mut rest).split_at_mut(n * d);
+                    rest = tail;
+                    jobs.push((row0, &mut *sb.cache, chunk));
+                    row0 += n;
+                }
+                par::par_map_mut(pool, &mut jobs, |_ji, (row0, cache, out)| {
+                    self.attend_block(li, *row0, qd, kd, vd, cache, out);
+                });
+            }
+            for row in attn_out.data_mut().chunks_mut(d) {
+                ops::fake_quant_row(row, a_levels);
+            }
+            x = x.add(&lw.wo.matmul(pool, &attn_out));
+
+            // ---- FFN (SwiGLU) ----
+            if let Some(p) = probe.as_deref_mut() {
+                p.tap(2 * li + 1, x.data());
+            }
+            let mut h = x.clone();
+            for row in h.data_mut().chunks_mut(d) {
+                ops::norm_row(row, &lw.ffn_norm, self.cfg.norm_ss);
+                ops::fake_quant_row(row, a_levels);
+            }
+            let gate = lw.w_gate.matmul(pool, &h);
+            let mut g = lw.w_up.matmul(pool, &h);
+            for (gv, xv) in g.data_mut().iter_mut().zip(gate.data()) {
+                *gv *= ops::silu(*xv);
+            }
+            let f = self.cfg.d_ff;
+            let (blk, hscale) = (linalg::pow2_block(f),
+                                 1.0 / (linalg::pow2_block(f) as f32).sqrt());
+            for row in g.data_mut().chunks_mut(f) {
+                if self.had_flag {
+                    linalg::hadamard_row(row, blk, hscale);
+                }
+                ops::fake_quant_row(row, a_levels);
+            }
+            x = x.add(&lw.w_down.matmul(pool, &g));
+        }
+
+        // Advance every cache past its whole block.
+        for sb in seqs.iter_mut() {
+            sb.cache.advance_by(sb.tokens.len());
+        }
+
+        let mut h = match mode {
+            LogitsMode::None => return Ok(None),
+            LogitsMode::All => x,
+            LogitsMode::Last => {
+                // Head ops are row-local, so gathering last rows first is
+                // bitwise the matching rows of the All head.
+                let mut last = Tensor::zeros(&[seqs.len(), d]);
+                let mut r = 0usize;
+                for (si, sb) in seqs.iter().enumerate() {
+                    r += sb.tokens.len();
+                    last.row_mut(si)
+                        .copy_from_slice(&x.data()[(r - 1) * d..r * d]);
+                }
+                last
+            }
+        };
+        for row in h.data_mut().chunks_mut(d) {
+            ops::norm_row(row, &self.final_norm, self.cfg.norm_ss);
+        }
+        if let Some(p_out) = &self.embproj_out {
+            h = p_out.matmul(pool, &h);
+        }
+        for row in h.data_mut().chunks_mut(d) {
+            ops::fake_quant_row(row, a_levels);
+        }
+        Ok(Some(self.unembed.matmul(pool, &h)))
+    }
+
+    /// One decode step for a batch of sequences: feed `tokens[r]` at
+    /// position `caches[r].n_tokens()` and return next-token logits
+    /// `[batch, vocab]` — the block forward with every block of length
+    /// one. Returns `Err` (instead of the old panic) on empty batches
+    /// and out-of-vocab tokens.
+    pub fn forward_step(&self, pool: Option<&ThreadPool>, tokens: &[i32],
+                        caches: &mut [SeqKv], a_bits: u32)
+                        -> Result<Tensor> {
+        let mut refs: Vec<&mut SeqKv> = caches.iter_mut().collect();
+        self.forward_step_refs(pool, tokens, &mut refs, a_bits)
+    }
+
+    /// [`InferModel::forward_step`] over a scattered view of caches (the
+    /// scheduler's sequences own theirs individually).
+    pub fn forward_step_refs(&self, pool: Option<&ThreadPool>,
+                             tokens: &[i32], caches: &mut [&mut SeqKv],
+                             a_bits: u32) -> Result<Tensor> {
+        Ok(self
+            .decode_step(pool, tokens, caches, a_bits, true)?
+            .expect("want_logits"))
+    }
+
+    /// The single-token compat entry point: like
+    /// [`InferModel::forward_step_refs`] but with `want_logits = false`
+    /// the final-norm/EmbProj/unembed head is skipped and `None`
+    /// returned. Only valid for steps where no sequence samples (pure
+    /// prefill); the trunk and every cache update are identical either
+    /// way.
+    pub fn decode_step(&self, pool: Option<&ThreadPool>, tokens: &[i32],
+                       caches: &mut [&mut SeqKv], a_bits: u32,
+                       want_logits: bool) -> Result<Option<Tensor>> {
+        if tokens.len() != caches.len() {
+            bail!("decode_step: {} tokens for {} caches", tokens.len(),
+                  caches.len());
+        }
+        let mut blocks: Vec<SeqBlock> = tokens
+            .iter()
+            .zip(caches.iter_mut())
+            .map(|(t, c)| SeqBlock { tokens: std::slice::from_ref(t),
+                                     cache: &mut **c })
+            .collect();
+        let mode = if want_logits { LogitsMode::All } else {
+            LogitsMode::None
+        };
+        self.forward_block(pool, &mut blocks, a_bits, mode, None)
+    }
+
+    /// Per-sequence causal attention at layer `li` over one block:
+    /// token-by-token, RoPE q/k at the absolute position, append the
+    /// token's quantized K/V head rows ([`kv::QRows::append_block`]),
+    /// then softmax-attend over every cached row up to and including the
+    /// token itself into `out` (`[n_tokens, d_model]`, heads merged).
+    fn attend_block(&self, li: usize, row0: usize, qd: &[f32], kd: &[f32],
+                    vd: &[f32], cache: &mut SeqKv, out: &mut [f32]) {
+        let (nh, hd) = (self.cfg.n_heads, self.cfg.head_dim());
+        let d = self.cfg.d_model;
+        let n = out.len() / d;
+        let base = cache.n_tokens();
+        let shd = (hd as f32).sqrt();
+        // One scratch set per call (not per head): this runs once per
+        // sequence per layer per block, so allocations are hoisted out
+        // of the token and head loops.
+        let mut qh = vec![0.0f32; hd];
+        let mut kbuf = vec![0.0f32; d];
+        let mut weights = vec![0.0f32; base + n];
+        for i in 0..n {
+            let pos = base + i;
+            let r = row0 + i;
+            let qrow = &qd[r * d..(r + 1) * d];
+            kbuf.copy_from_slice(&kd[r * d..(r + 1) * d]);
+            for h in 0..nh {
+                ops::rope_in_place(&mut kbuf[h * hd..(h + 1) * hd], pos,
+                                   &self.rope_inv_freq);
+            }
+            let lay = cache.layer_mut(li);
+            lay.k.append_block(&kbuf);
+            lay.v.append_block(&vd[r * d..(r + 1) * d]);
+            for h in 0..nh {
+                qh.copy_from_slice(&qrow[h * hd..(h + 1) * hd]);
+                ops::rope_in_place(&mut qh, pos, &self.rope_inv_freq);
+                let w = &mut weights[..pos + 1];
+                for (t, wv) in w.iter_mut().enumerate() {
+                    *wv = lay.k.dot(t * nh + h, &qh) / shd;
+                }
+                ops::softmax_in_place(w);
+                let out_h = &mut out[i * d + h * hd..i * d + (h + 1) * hd];
+                for (t, &wv) in w.iter().enumerate() {
+                    lay.v.axpy_into(t * nh + h, wv, out_h);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> InferConfig {
+        InferConfig { vocab_size: 96, d_model: 32, n_layers: 2, n_heads: 2,
+                      d_ff: 48, rope_theta: 10000.0, norm_ss: true,
+                      embproj: false }
+    }
+
+    #[test]
+    fn arch_knobs_parse() {
+        assert_eq!(InferConfig::arch_knobs("rmsnorm_plain").unwrap(),
+                   (false, false));
+        assert_eq!(InferConfig::arch_knobs("ssnorm_embproj").unwrap(),
+                   (true, true));
+        assert!(InferConfig::arch_knobs("bogus").is_err());
+    }
+
+    #[test]
+    fn synthetic_roundtrip_through_qparams() {
+        let m = InferModel::synthetic(&tiny_cfg(), 3);
+        assert_eq!(m.cfg.vocab_size, 96);
+        let q = m.quantized(4);
+        assert!(q.weight_bytes() * 3 < m.weight_bytes(),
+                "{} vs {}", q.weight_bytes(), m.weight_bytes());
+    }
+
+    #[test]
+    fn forward_step_shapes_and_cache_growth() {
+        let m = InferModel::synthetic(&tiny_cfg(), 5);
+        let mut caches = vec![m.new_cache(4), m.new_cache(4)];
+        let logits = m.forward_step(None, &[1, 2], &mut caches, 4).unwrap();
+        assert_eq!(logits.shape(), &[2, 96]);
+        assert_eq!(caches[0].n_tokens(), 1);
+        let logits = m.forward_step(None, &[3, 4], &mut caches, 4).unwrap();
+        assert_eq!(logits.shape(), &[2, 96]);
+        assert_eq!(caches[1].n_tokens(), 2);
+    }
+
+    #[test]
+    fn forward_block_multi_token_shapes() {
+        let m = InferModel::synthetic(&tiny_cfg(), 5);
+        let mut c0 = m.new_cache(4);
+        let mut c1 = m.new_cache(4);
+        let t0 = [1i32, 2, 3];
+        let t1 = [4i32, 5];
+        let mut blocks = vec![SeqBlock { tokens: &t0, cache: &mut c0 },
+                              SeqBlock { tokens: &t1, cache: &mut c1 }];
+        let all = m
+            .forward_block(None, &mut blocks, 4, LogitsMode::All, None)
+            .unwrap()
+            .unwrap();
+        assert_eq!(all.shape(), &[5, 96]);
+        assert_eq!(c0.n_tokens(), 3);
+        assert_eq!(c1.n_tokens(), 2);
+    }
+
+    #[test]
+    fn last_mode_matches_all_mode_rows_bitwise() {
+        let m = InferModel::synthetic(&tiny_cfg(), 7).quantized(4);
+        let t0 = [1i32, 2, 3];
+        let t1 = [4i32, 5];
+        let run = |mode: LogitsMode| -> Tensor {
+            let mut c0 = m.new_cache(4);
+            let mut c1 = m.new_cache(4);
+            let mut blocks =
+                vec![SeqBlock { tokens: &t0, cache: &mut c0 },
+                     SeqBlock { tokens: &t1, cache: &mut c1 }];
+            m.forward_block(None, &mut blocks, 4, mode, None)
+                .unwrap()
+                .unwrap()
+        };
+        let all = run(LogitsMode::All);
+        let last = run(LogitsMode::Last);
+        assert_eq!(last.shape(), &[2, 96]);
+        assert_eq!(last.row(0), all.row(2), "seq 0 last-token logits");
+        assert_eq!(last.row(1), all.row(4), "seq 1 last-token logits");
+    }
+
+    #[test]
+    fn forward_block_rejects_bad_inputs() {
+        let m = InferModel::synthetic(&tiny_cfg(), 5);
+        // Empty batch.
+        let mut none: Vec<SeqBlock> = Vec::new();
+        assert!(m.forward_block(None, &mut none, 4, LogitsMode::All, None)
+                .is_err());
+        // Empty per-sequence block.
+        let mut c = m.new_cache(4);
+        let empty: [i32; 0] = [];
+        let mut blocks = vec![SeqBlock { tokens: &empty, cache: &mut c }];
+        assert!(m.forward_block(None, &mut blocks, 4, LogitsMode::All, None)
+                .is_err());
+        // Out-of-vocab token (vocab is 96) and negative token.
+        for bad in [96i32, 1000, -1] {
+            let toks = [bad];
+            let mut c = m.new_cache(4);
+            let mut blocks = vec![SeqBlock { tokens: &toks, cache: &mut c }];
+            let err = m
+                .forward_block(None, &mut blocks, 4, LogitsMode::All, None)
+                .unwrap_err();
+            assert!(format!("{err}").contains("vocab"), "{err}");
+            // The rejected block never touched the cache.
+            assert_eq!(c.n_tokens(), 0);
+        }
+    }
+
+    #[test]
+    fn decode_step_errs_instead_of_panicking() {
+        let m = InferModel::synthetic(&tiny_cfg(), 5);
+        // Empty batch.
+        let mut no_caches: Vec<&mut SeqKv> = Vec::new();
+        assert!(m.decode_step(None, &[], &mut no_caches, 4, true).is_err());
+        // Out-of-vocab token through the step API.
+        let mut c = m.new_cache(4);
+        let mut refs = vec![&mut c];
+        assert!(m.decode_step(None, &[1234], &mut refs, 4, true).is_err());
+        // Length mismatch.
+        let mut c2 = m.new_cache(4);
+        let mut refs = vec![&mut c2];
+        assert!(m.decode_step(None, &[1, 2], &mut refs, 4, true).is_err());
+    }
+
+    #[test]
+    fn kurt_probe_collects_both_taps_per_layer() {
+        let m = InferModel::synthetic(&tiny_cfg(), 5);
+        let mut probe = KurtProbe::new(m.cfg.n_layers);
+        let mut c = m.new_cache(16);
+        let toks = [1i32, 2, 3, 4];
+        let mut blocks = vec![SeqBlock { tokens: &toks, cache: &mut c }];
+        m.forward_block(None, &mut blocks, 16, LogitsMode::None,
+                        Some(&mut probe))
+            .unwrap();
+        let kurt = probe.kurt();
+        assert_eq!(kurt.len(), 2 * m.cfg.n_layers);
+        assert!(kurt.iter().all(|v| v.is_finite()), "{kurt:?}");
+    }
+
+    #[test]
+    fn from_qparams_rejects_bad_counts() {
+        // 5 leaves cannot be 1 embed + 9k layer leaves + 2 tail.
+        let dense: Vec<Tensor> = vec![Tensor::zeros(&[4, 4]); 5];
+        assert!(InferModel::from_dense_params("rmsnorm_plain", &dense, 2,
+                                              1e4)
+                .is_err());
+    }
+}

@@ -1,0 +1,128 @@
+//! Per-row math shared by every host forward path (DESIGN.md §9):
+//! norms, the per-token activation fake-quant tap, RoPE, softmax, and
+//! SiLU. Extracted from the decode engine so the block forward, the
+//! single-token decode path, and the engine-free evaluator all snap
+//! through the exact same kernels — the bit-parity contracts depend on
+//! every call site agreeing.
+
+use crate::tensor::Tensor;
+
+use super::kv::KV_EPS;
+
+/// RMSNorm (per-channel scale) or SSNorm (scalar gamma), matching the
+/// graph kernels' formulas (`ref.rmsnorm_ref` / `ref.ssnorm_ref`).
+pub fn norm_row(row: &mut [f32], scale: &Tensor, ss: bool) {
+    if ss {
+        let norm = (row.iter().map(|v| v * v).sum::<f32>() + 1e-6).sqrt();
+        let g = scale.data()[0];
+        for v in row.iter_mut() {
+            *v = g * *v / norm;
+        }
+    } else {
+        let ms = row.iter().map(|v| v * v).sum::<f32>()
+            / row.len() as f32;
+        let inv = 1.0 / (ms + 1e-6).sqrt();
+        for (v, s) in row.iter_mut().zip(scale.data()) {
+            *v *= s * inv;
+        }
+    }
+}
+
+/// Per-token RTN fake-quantization (the evalq activation tap):
+/// `scale = absmax / levels + 1e-8`, values snapped to the symmetric
+/// grid through the one shared [`crate::quant::rtn::rtn_code`] helper
+/// (the parity contract depends on every snap site agreeing). With the
+/// "off" levels (2^20) this is numerically the identity, exactly like
+/// the graph.
+pub fn fake_quant_row(row: &mut [f32], levels: f32) {
+    let absmax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let scale = absmax / levels + KV_EPS;
+    for v in row.iter_mut() {
+        *v = crate::quant::rtn::rtn_code(*v, scale, levels) as f32 * scale;
+    }
+}
+
+/// Rotary embedding of one head row at absolute position `pos`
+/// (half-split layout, matching `model._rope`; frequencies come from
+/// the model's precomputed `theta^(-j/half)` table).
+pub fn rope_in_place(head: &mut [f32], pos: usize, inv_freq: &[f32]) {
+    let half = head.len() / 2;
+    debug_assert_eq!(inv_freq.len(), half);
+    for j in 0..half {
+        let angle = pos as f32 * inv_freq[j];
+        let (sin, cos) = angle.sin_cos();
+        let (a, b) = (head[j], head[half + j]);
+        head[j] = a * cos - b * sin;
+        head[half + j] = a * sin + b * cos;
+    }
+}
+
+/// Numerically-stable in-place softmax over one weight row.
+pub fn softmax_in_place(w: &mut [f32]) {
+    let m = w.iter().cloned().fold(f32::MIN, f32::max);
+    let mut z = 0.0f32;
+    for v in w.iter_mut() {
+        *v = (*v - m).exp();
+        z += *v;
+    }
+    for v in w.iter_mut() {
+        *v /= z;
+    }
+}
+
+pub fn silu(v: f32) -> f32 {
+    v / (1.0 + (-v).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut w = vec![0.5f32, 1.5, -2.0, 0.0];
+        softmax_in_place(&mut w);
+        let z: f32 = w.iter().sum();
+        assert!((z - 1.0).abs() < 1e-6, "sum {z}");
+        assert!(w.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn fake_quant_off_levels_is_identity() {
+        // 2^20 levels (the "off" tap) leaves typical activations intact.
+        let mut row = vec![0.125f32, -1.0, 0.75, 2.5];
+        let want = row.clone();
+        fake_quant_row(&mut row, (1u32 << 20) as f32);
+        assert_eq!(row, want);
+    }
+
+    #[test]
+    fn norm_row_rms_and_ss() {
+        let scale = Tensor::full(&[4], 1.0);
+        let mut row = vec![1.0f32, -1.0, 1.0, -1.0];
+        norm_row(&mut row, &scale, false);
+        for v in &row {
+            assert!((v.abs() - 1.0).abs() < 1e-3, "{row:?}");
+        }
+        let g = Tensor::full(&[1], 2.0);
+        let mut row = vec![3.0f32, 4.0];
+        norm_row(&mut row, &g, true);
+        // |x| = 5, so x -> 2 * x / 5.
+        assert!((row[0] - 1.2).abs() < 1e-5 && (row[1] - 1.6).abs() < 1e-5,
+                "{row:?}");
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let inv_freq = [1.0f32, 0.1];
+        let mut head = vec![1.0f32, 2.0, 3.0, 4.0];
+        let norm0: f32 = head.iter().map(|v| v * v).sum();
+        rope_in_place(&mut head, 7, &inv_freq);
+        let norm1: f32 = head.iter().map(|v| v * v).sum();
+        assert!((norm0 - norm1).abs() < 1e-4, "{norm0} vs {norm1}");
+        // Position 0 is the identity rotation.
+        let mut h0 = vec![1.0f32, 2.0, 3.0, 4.0];
+        rope_in_place(&mut h0, 0, &inv_freq);
+        assert_eq!(h0, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

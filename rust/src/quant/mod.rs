@@ -105,9 +105,11 @@ impl QParam {
     }
 }
 
-/// A weight-quantized model ready for the evalq/logitsq executables.
+/// A weight-quantized model ready for the evalq/logitsq executables and
+/// for the engine-free host paths ([`QuantizedModel::decoder`]).
 /// Weights stay packed; the dense f32 view the PJRT boundary needs is
-/// dequantized lazily, exactly once, by [`QuantizedModel::dense_params`].
+/// dequantized lazily, exactly once, by [`QuantizedModel::dense_params`]
+/// — the host decode/eval paths never call it.
 pub struct QuantizedModel {
     /// Architecture whose executables must be used (embproj arches are
     /// absorbed into their plain counterparts).
@@ -149,14 +151,16 @@ impl QuantizedModel {
         self.params.iter().map(|p| p.dense_bytes()).sum()
     }
 
-    /// Decode-ready view for the host inference engine: reuses the
-    /// packed leaves directly (no `dense_params` round-trip — tokens are
-    /// served straight off the codes). `n_heads` and `rope_theta` come
-    /// from the lowering-time model config (`engine.manifest().model`);
-    /// they are not recoverable from the leaf shapes.
+    /// Host-model view for decode *and* engine-free evaluation: reuses
+    /// the packed leaves directly (no `dense_params` round-trip — tokens
+    /// and teacher-forced eval logits are served straight off the codes
+    /// by [`crate::model::InferModel::forward_block`]). `n_heads` and
+    /// `rope_theta` come from the lowering-time model config
+    /// (`engine.manifest().model`); they are not recoverable from the
+    /// leaf shapes.
     pub fn decoder(&self, n_heads: usize, rope_theta: f32)
-                   -> Result<crate::infer::InferModel> {
-        crate::infer::InferModel::from_qparams(
+                   -> Result<crate::model::InferModel> {
+        crate::model::InferModel::from_qparams(
             &self.arch, &self.params, n_heads, rope_theta,
             self.had_flag > 0.5)
     }

@@ -3,6 +3,14 @@
 //! `osp repro` CLI, the examples, and the bench binaries (quick
 //! variants). Activation-kurtosis scans run on the shared parallel
 //! reduction (`tensor::stats` over `tensor::par`, DESIGN.md §6).
+//!
+//! Table 2 — the paper's headline W4A4KV4 claim — evaluates on the
+//! engine-free host path (DESIGN.md §9): packed leaves go straight into
+//! [`crate::model::InferModel::forward_block`] with no `dense_params()`
+//! materialization and no compiled executables, so `osp repro table2`
+//! works offline on the stub runtime. The remaining tables/figures keep
+//! the PJRT engine path (GPTQ calibration and the probe artifacts have
+//! no host equivalent yet).
 
 use std::path::{Path, PathBuf};
 
@@ -12,12 +20,14 @@ use crate::bench::{fmt_pct, fmt_ppl, Table};
 use crate::checkpoint;
 use crate::config::ABLATION_GRID;
 use crate::data::{Split, TokenStream};
-use crate::eval::{perplexity, sinks, tasks, BitConfig};
+use crate::eval::{host, perplexity, sinks, tasks, BitConfig,
+                  HostEvalOpts};
 use crate::metrics::read_telemetry;
+use crate::model::InferModel;
 use crate::quant::{self, PtqConfig, Rotation, WeightMethod};
 use crate::runtime::{Engine, HostValue};
 use crate::tensor::stats::Histogram;
-use crate::tensor::Tensor;
+use crate::tensor::{par, Tensor};
 
 /// Evaluation effort knob (benches use Quick).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -67,8 +77,22 @@ pub fn ablation_tags() -> Vec<&'static str> {
     ABLATION_GRID.iter().map(|&(tag, _, _)| tag).collect()
 }
 
+/// Host-eval shape for one engine manifest (batch/seq from the eval
+/// executables' lowering, quantization bits from the caller).
+fn host_opts(engine: &Engine, bits_a: u32, bits_kv: u32,
+             effort: Effort) -> HostEvalOpts {
+    let m = engine.manifest();
+    HostEvalOpts { a_bits: bits_a, kv_bits: bits_kv, batch: m.batch_eval,
+                   seq_len: m.model.seq_len,
+                   n_batches: effort.ppl_batches,
+                   chunk: host::DEFAULT_EVAL_CHUNK }
+}
+
 /// Evaluate one run under one bit configuration (weights quantized here;
-/// activations/KV at runtime). Returns (avg_score, ppl, kurt_max).
+/// activations/KV at runtime) on the engine-free host path: the packed
+/// leaves are served by the block forward directly — no `dense_params()`
+/// round-trip, no compiled executables. Returns (avg_score, ppl,
+/// kurt_max).
 pub fn eval_bitconfig(engine: &Engine, run: &Run, bits: BitConfig,
                       ffn_had: bool, effort: Effort)
                       -> Result<(f64, f64, f64)> {
@@ -81,11 +105,13 @@ pub fn eval_bitconfig(engine: &Engine, run: &Run, bits: BitConfig,
         calib_batches: 1,
     };
     let qm = quant::prepare(engine, &run.arch, &run.params, &cfg)?;
-    let ppl = perplexity(engine, &qm.arch, qm.dense_params(), bits.a,
-                         bits.kv, qm.had_flag, effort.ppl_batches)?;
-    let (_rows, avg) = tasks::run_suite(engine, &qm.arch, qm.dense_params(),
-                                        effort.n_per_task, bits.a, bits.kv,
-                                        qm.had_flag, 99)?;
+    let m = engine.manifest();
+    let model = qm.decoder(m.model.n_heads, m.model.rope_theta as f32)?;
+    let opts = host_opts(engine, bits.a, bits.kv, effort);
+    let ppl = host::perplexity_host(&model, &opts, par::shared_pool())?;
+    let (_rows, avg) = host::run_suite_host(&model, effort.n_per_task,
+                                            bits.a, bits.kv, 99,
+                                            par::shared_pool())?;
     Ok((avg, ppl.ppl, ppl.kurt_max))
 }
 
@@ -109,10 +135,16 @@ pub fn table2_tags(engine: &Engine, runs_dir: &Path, effort: Effort,
     let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
     let mut table = Table::new(
         "Table 2 — ablation x quantization (RTN / +FFN-Had)", &hdr_refs);
+    let m = engine.manifest();
     for run in &runs {
-        let fp = perplexity(engine, &absorbed_arch(engine, run)?.0,
-                            &absorbed_arch(engine, run)?.1, 16, 16, 0.0,
-                            effort.ppl_batches)?;
+        // FP reference on the host path too: dense leaves wrapped as a
+        // host model, kurtosis from the block forward's residual taps.
+        let fp_model = InferModel::from_dense_params(
+            &run.arch, &run.params, m.model.n_heads,
+            m.model.rope_theta as f32)?;
+        let fp = host::perplexity_host(
+            &fp_model, &host_opts(engine, 16, 16, effort),
+            par::shared_pool())?;
         for &had in &[false, true] {
             let mut row = vec![run.tag.clone(),
                                if had { "yes" } else { "no" }.to_string(),
@@ -127,15 +159,6 @@ pub fn table2_tags(engine: &Engine, runs_dir: &Path, effort: Effort,
         }
     }
     Ok(table)
-}
-
-fn absorbed_arch(engine: &Engine, run: &Run) -> Result<(String, Vec<Tensor>)> {
-    // FP evaluation of embproj arches can use the native artifacts.
-    Ok((run.arch.clone(), run.params.clone()))
-        .map(|(a, p)| {
-            let _ = engine;
-            (a, p)
-        })
 }
 
 /// Table 3: per-task scores at 4-4-4 (our from-scratch rows; ablation

@@ -54,9 +54,10 @@ fn packed_kv4_matches_dense_decode() {
         let dense = InferModel::synthetic(cfg, c.seed);
         let packed = dense.quantized(4);
         let params = DecodeParams::greedy(4, 4, c.prompts.len());
-        let a = generate(&packed, &c.prompts, 8, params, None);
+        let a = generate(&packed, &c.prompts, 8, params, None).unwrap();
         let b = generate(&packed.dequantized(), &c.prompts, 8, params,
-                         None);
+                         None)
+            .unwrap();
         if a != b {
             return Err(format!("packed {a:?} != dense {b:?}"));
         }
@@ -79,11 +80,13 @@ fn serial_vs_parallel_decode_bit_identical() {
     prop::check("serial_vs_parallel_decode", 4, 0xBA7C4, case, |(cfg, c)| {
         let packed = InferModel::synthetic(cfg, c.seed).quantized(4);
         let params = DecodeParams::greedy(4, 4, c.prompts.len());
-        let serial = generate(&packed, &c.prompts, 6, params, None);
+        let serial = generate(&packed, &c.prompts, 6, params, None)
+            .unwrap();
         for nw in WORKER_COUNTS {
             let pool = ThreadPool::new(nw, 8 * nw.max(4));
             let par = generate(&packed, &c.prompts, 6, params,
-                               Some(&pool));
+                               Some(&pool))
+                .unwrap();
             if par != serial {
                 return Err(format!(
                     "{nw} workers: {par:?} != serial {serial:?}"));
@@ -128,13 +131,15 @@ fn continuous_batching_is_stream_invariant() {
         .iter()
         .map(|p| generate(&model, std::slice::from_ref(p), 7,
                           DecodeParams::greedy(4, 4, 1), None)
+             .unwrap()
              .remove(0))
         .collect();
     let pool = ThreadPool::new(4, 32);
     for max_batch in [1usize, 2, 5] {
         let together = generate(&model, &prompts, 7,
                                 DecodeParams::greedy(4, 4, max_batch),
-                                Some(&pool));
+                                Some(&pool))
+            .unwrap();
         assert_eq!(together, solo, "max_batch={max_batch}");
     }
 }

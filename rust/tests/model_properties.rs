@@ -1,0 +1,459 @@
+//! Host model layer properties (DESIGN.md §9): the block forward pinned
+//! bit-exactly against an independent no-KV-cache reference
+//! implementation across the W{4,8} x A{4,16} x KV{4,16} grid,
+//! prefill-chunk invariance (bit-identical logits *and* KV cache
+//! contents for chunk 1 vs 64), chunk-invariant host perplexity, and
+//! the fail-safe rejection paths of the model/scheduler stack.
+
+use osp::coordinator::levels_for_bits;
+use osp::data::{Split, TokenStream};
+use osp::eval::host::{perplexity_host, HostEvalOpts, VALID_STREAM_SEED};
+use osp::model::kv::SeqKv;
+use osp::model::ops::{fake_quant_row, norm_row, rope_in_place, silu,
+                      softmax_in_place};
+use osp::model::{InferConfig, InferModel, LogitsMode, SeqBlock};
+use osp::quant::rtn::quantize_per_channel_q;
+use osp::tensor::{par, Tensor};
+use osp::util::rng::Pcg;
+
+// ---- independent reference implementation ---------------------------------
+//
+// A teacher-forced forward with *no KV cache and no batching*: every
+// sequence runs alone, K/V are stored as plain fake-quantized f32 rows,
+// and attention walks the full causal prefix per position. It shares
+// only the per-row primitives (`model::ops`) and the dense matmul with
+// the production path — the cache, packing, chunking, and batching
+// machinery under test is completely absent.
+
+struct RefLayer {
+    attn_norm: Tensor,
+    wq: Tensor,
+    wk: Tensor,
+    wv: Tensor,
+    wo: Tensor,
+    ffn_norm: Tensor,
+    w_gate: Tensor,
+    w_up: Tensor,
+    w_down: Tensor,
+}
+
+struct RefModel {
+    d: usize,
+    nh: usize,
+    f: usize,
+    embed: Tensor,
+    layers: Vec<RefLayer>,
+    final_norm: Tensor,
+    unembed: Tensor,
+    inv_freq: Vec<f32>,
+}
+
+/// Random dense leaves in manifest order for `ssnorm_plain`.
+fn make_params(v: usize, d: usize, l: usize, f: usize, seed: u64)
+               -> Vec<Tensor> {
+    let mut rng = Pcg::new(seed, 3);
+    let mut randn = |shape: &[usize], s: f32| {
+        let mut t = Tensor::zeros(shape);
+        rng.fill_normal(t.data_mut(), s);
+        t
+    };
+    let mut params = vec![randn(&[v, d], 0.05)];
+    for _ in 0..l {
+        params.push(Tensor::full(&[1], (d as f32).sqrt())); // attn_norm
+        params.push(randn(&[d, d], 0.05)); // wq
+        params.push(randn(&[d, d], 0.05)); // wk
+        params.push(randn(&[d, d], 0.05)); // wv
+        params.push(randn(&[d, d], 0.03)); // wo
+        params.push(Tensor::full(&[1], (d as f32).sqrt())); // ffn_norm
+        params.push(randn(&[d, f], 0.05)); // w_gate
+        params.push(randn(&[d, f], 0.05)); // w_up
+        params.push(randn(&[f, d], 0.03)); // w_down
+    }
+    params.push(Tensor::full(&[1], (d as f32).sqrt())); // final_norm
+    params.push(randn(&[d, v], 0.05)); // unembed
+    params
+}
+
+/// W-quantize a 2-D leaf exactly like `InferModel::quantized` does
+/// (RTN per-channel packed codes, dequantized back to the snapped f32
+/// values the fused kernels serve).
+fn wq_deq(t: &Tensor, w_bits: u32) -> Tensor {
+    quantize_per_channel_q(t, w_bits).dequantize()
+}
+
+fn ref_model(params: &[Tensor], nh: usize, rope_theta: f32, w_bits: u32)
+             -> RefModel {
+    let d = params[0].shape()[1];
+    let l = (params.len() - 3) / 9;
+    let f = params[7].shape()[1];
+    let layers = (0..l)
+        .map(|li| {
+            let b = 1 + li * 9;
+            RefLayer {
+                attn_norm: params[b].clone(),
+                wq: wq_deq(&params[b + 1], w_bits),
+                wk: wq_deq(&params[b + 2], w_bits),
+                wv: wq_deq(&params[b + 3], w_bits),
+                wo: wq_deq(&params[b + 4], w_bits),
+                ffn_norm: params[b + 5].clone(),
+                w_gate: wq_deq(&params[b + 6], w_bits),
+                w_up: wq_deq(&params[b + 7], w_bits),
+                w_down: wq_deq(&params[b + 8], w_bits),
+            }
+        })
+        .collect();
+    let half = (d / nh) / 2;
+    RefModel {
+        d,
+        nh,
+        f,
+        embed: wq_deq(&params[0], w_bits),
+        layers,
+        final_norm: params[params.len() - 2].clone(),
+        unembed: wq_deq(&params[params.len() - 1], w_bits),
+        inv_freq: (0..half)
+            .map(|j| rope_theta.powf(-(j as f32) / half as f32))
+            .collect(),
+    }
+}
+
+/// Teacher-forced logits `[s, vocab]` for one sequence.
+fn ref_logits(p: &RefModel, tokens: &[i32], a_bits: u32, kv_bits: u32)
+              -> Tensor {
+    let (d, nh, f) = (p.d, p.nh, p.f);
+    let hd = d / nh;
+    let a_lv = levels_for_bits(a_bits);
+    let kv_lv = levels_for_bits(kv_bits);
+    let s = tokens.len();
+    let mut x = Tensor::zeros(&[s, d]);
+    for (t, &tok) in tokens.iter().enumerate() {
+        x.row_mut(t).copy_from_slice(p.embed.row(tok as usize));
+    }
+    for lw in &p.layers {
+        // ---- MHSA ----
+        let mut h = x.clone();
+        for row in h.data_mut().chunks_mut(d) {
+            norm_row(row, &lw.attn_norm, true);
+            fake_quant_row(row, a_lv);
+        }
+        let q = par::matmul_with(None, &h, &lw.wq);
+        let k = par::matmul_with(None, &h, &lw.wk);
+        let v = par::matmul_with(None, &h, &lw.wv);
+        // The KV tap: rope'd K rows and raw V rows per (pos, head),
+        // fake-quantized like the cache stores them.
+        let mut kst = vec![vec![0.0f32; hd]; s * nh];
+        let mut vst = vec![vec![0.0f32; hd]; s * nh];
+        for pos in 0..s {
+            for hh in 0..nh {
+                let mut kh = k.row(pos)[hh * hd..(hh + 1) * hd].to_vec();
+                rope_in_place(&mut kh, pos, &p.inv_freq);
+                fake_quant_row(&mut kh, kv_lv);
+                kst[pos * nh + hh] = kh;
+                let mut vh = v.row(pos)[hh * hd..(hh + 1) * hd].to_vec();
+                fake_quant_row(&mut vh, kv_lv);
+                vst[pos * nh + hh] = vh;
+            }
+        }
+        let mut attn = Tensor::zeros(&[s, d]);
+        let shd = (hd as f32).sqrt();
+        for pos in 0..s {
+            for hh in 0..nh {
+                let mut qh = q.row(pos)[hh * hd..(hh + 1) * hd].to_vec();
+                rope_in_place(&mut qh, pos, &p.inv_freq);
+                let mut w = vec![0.0f32; pos + 1];
+                for (t, wv) in w.iter_mut().enumerate() {
+                    let mut acc = 0.0f32;
+                    for (kv, qv) in kst[t * nh + hh].iter().zip(&qh) {
+                        acc += kv * qv;
+                    }
+                    *wv = acc / shd;
+                }
+                softmax_in_place(&mut w);
+                let out_h = &mut attn.row_mut(pos)[hh * hd..(hh + 1) * hd];
+                for (t, &wv) in w.iter().enumerate() {
+                    for (o, &vv) in out_h.iter_mut().zip(&vst[t * nh + hh])
+                    {
+                        *o += wv * vv;
+                    }
+                }
+            }
+        }
+        for row in attn.data_mut().chunks_mut(d) {
+            fake_quant_row(row, a_lv);
+        }
+        x = x.add(&par::matmul_with(None, &attn, &lw.wo));
+
+        // ---- FFN ----
+        let mut h = x.clone();
+        for row in h.data_mut().chunks_mut(d) {
+            norm_row(row, &lw.ffn_norm, true);
+            fake_quant_row(row, a_lv);
+        }
+        let gate = par::matmul_with(None, &h, &lw.w_gate);
+        let mut g = par::matmul_with(None, &h, &lw.w_up);
+        for (gv, xv) in g.data_mut().iter_mut().zip(gate.data()) {
+            *gv *= silu(*xv);
+        }
+        for row in g.data_mut().chunks_mut(f) {
+            fake_quant_row(row, a_lv);
+        }
+        x = x.add(&par::matmul_with(None, &g, &lw.w_down));
+    }
+    let mut hfin = x;
+    for row in hfin.data_mut().chunks_mut(d) {
+        norm_row(row, &p.final_norm, true);
+    }
+    for row in hfin.data_mut().chunks_mut(d) {
+        fake_quant_row(row, a_lv);
+    }
+    par::matmul_with(None, &hfin, &p.unembed)
+}
+
+// ---- helpers --------------------------------------------------------------
+
+const V: usize = 64;
+const D: usize = 16;
+const L: usize = 2;
+const NH: usize = 2;
+const F: usize = 24;
+const S: usize = 12;
+const THETA: f32 = 10000.0;
+
+fn build_models(seed: u64, w_bits: u32)
+                -> (Vec<Tensor>, InferModel, RefModel) {
+    let params = make_params(V, D, L, F, seed);
+    let model = InferModel::from_dense_params("ssnorm_plain", &params, NH,
+                                              THETA)
+        .unwrap()
+        .quantized(w_bits);
+    let rm = ref_model(&params, NH, THETA, w_bits);
+    (params, model, rm)
+}
+
+fn random_tokens(rng: &mut Pcg, n: usize) -> Vec<i32> {
+    (0..n).map(|_| rng.below(V as u64) as i32).collect()
+}
+
+/// Feed `tokens` through `forward_block` in blocks of `chunk`, stacking
+/// all-position logits.
+fn chunked_logits(model: &InferModel, tokens: &[i32], cache: &mut SeqKv,
+                  a_bits: u32, chunk: usize) -> Tensor {
+    let vocab = model.cfg.vocab_size;
+    let mut out = Tensor::zeros(&[tokens.len(), vocab]);
+    let mut c0 = 0usize;
+    while c0 < tokens.len() {
+        let c1 = (c0 + chunk).min(tokens.len());
+        let mut blocks = vec![SeqBlock { tokens: &tokens[c0..c1],
+                                         cache: &mut *cache }];
+        let logits = model
+            .forward_block(None, &mut blocks, a_bits, LogitsMode::All,
+                           None)
+            .unwrap()
+            .unwrap();
+        out.data_mut()[c0 * vocab..c1 * vocab]
+            .copy_from_slice(logits.data());
+        c0 = c1;
+    }
+    out
+}
+
+fn assert_caches_equal(a: &SeqKv, b: &SeqKv, what: &str) {
+    assert_eq!(a.n_tokens(), b.n_tokens(), "{what}: n_tokens");
+    for li in 0..a.n_layers() {
+        let (la, lb) = (a.layer(li), b.layer(li));
+        assert_eq!(la.k.len(), lb.k.len(), "{what}: L{li} K rows");
+        assert_eq!(la.v.len(), lb.v.len(), "{what}: L{li} V rows");
+        for i in 0..la.k.len() {
+            for j in 0..la.k.dim() {
+                assert_eq!(la.k.at(i, j), lb.k.at(i, j),
+                           "{what}: L{li} K[{i}][{j}]");
+                assert_eq!(la.v.at(i, j), lb.v.at(i, j),
+                           "{what}: L{li} V[{i}][{j}]");
+            }
+        }
+    }
+}
+
+/// Independent next-token NLL over one sequence's reference logits:
+/// positions `0..s-1` predict `tokens[1..]` (the evalq `nll` rule).
+fn ref_nll_per_token(rm: &RefModel, rows: &[&[i32]], a_bits: u32,
+                     kv_bits: u32) -> f64 {
+    let mut total = 0.0f64;
+    let mut count = 0.0f64;
+    for row in rows {
+        let logits = ref_logits(rm, row, a_bits, kv_bits);
+        let mut snll = 0.0f64;
+        for pos in 0..row.len() - 1 {
+            let lr = logits.row(pos);
+            let m = lr.iter().cloned().fold(f32::MIN, f32::max);
+            let mut z = 0.0f32;
+            for &v in lr {
+                z += (v - m).exp();
+            }
+            snll += (z as f64).ln() - (lr[row[pos + 1] as usize] - m) as f64;
+        }
+        total += snll;
+        count += (row.len() - 1) as f64;
+    }
+    total / count
+}
+
+// ---- properties -----------------------------------------------------------
+
+/// The packed block forward is bit-identical to the independent
+/// reference across the whole W x A x KV grid — single sequences and
+/// batched sequences alike.
+#[test]
+fn forward_block_matches_reference_across_bit_grid() {
+    let mut rng = Pcg::new(0xB10C, 1);
+    let t0 = random_tokens(&mut rng, S);
+    let t1 = random_tokens(&mut rng, S);
+    for w_bits in [4u32, 8] {
+        let (_params, model, rm) = build_models(77, w_bits);
+        for a_bits in [4u32, 16] {
+            for kv_bits in [4u32, 16] {
+                let tag = format!("W{w_bits}-A{a_bits}-KV{kv_bits}");
+                let want0 = ref_logits(&rm, &t0, a_bits, kv_bits);
+                let want1 = ref_logits(&rm, &t1, a_bits, kv_bits);
+                // Single sequence, whole block.
+                let mut c = model.new_cache(kv_bits);
+                let got = chunked_logits(&model, &t0, &mut c, a_bits, S);
+                assert_eq!(got.data(), want0.data(), "{tag}: solo seq");
+                // Two sequences in one batched block call.
+                let mut c0 = model.new_cache(kv_bits);
+                let mut c1 = model.new_cache(kv_bits);
+                let mut blocks =
+                    vec![SeqBlock { tokens: &t0, cache: &mut c0 },
+                         SeqBlock { tokens: &t1, cache: &mut c1 }];
+                let both = model
+                    .forward_block(None, &mut blocks, a_bits,
+                                   LogitsMode::All, None)
+                    .unwrap()
+                    .unwrap();
+                assert_eq!(&both.data()[..S * V], want0.data(),
+                           "{tag}: batched seq 0");
+                assert_eq!(&both.data()[S * V..], want1.data(),
+                           "{tag}: batched seq 1");
+            }
+        }
+    }
+}
+
+/// Chunk 1 vs 64 (and ragged sizes in between): bit-identical logits
+/// and bit-identical KV cache contents — the prefill-chunk invariance
+/// the scheduler's `--prefill-chunk` knob relies on.
+#[test]
+fn prefill_chunk_invariance_logits_and_kv() {
+    let mut rng = Pcg::new(0xC407, 2);
+    let tokens = random_tokens(&mut rng, S);
+    let (_params, model, _rm) = build_models(31, 4);
+    for kv_bits in [4u32, 16] {
+        let mut base_cache = model.new_cache(kv_bits);
+        let base = chunked_logits(&model, &tokens, &mut base_cache, 4, 1);
+        for chunk in [2usize, 5, 64] {
+            let mut cache = model.new_cache(kv_bits);
+            let got = chunked_logits(&model, &tokens, &mut cache, 4, chunk);
+            assert_eq!(got.data(), base.data(),
+                       "kv{kv_bits} chunk {chunk}: logits");
+            assert_caches_equal(&cache, &base_cache,
+                                &format!("kv{kv_bits} chunk {chunk}"));
+        }
+    }
+}
+
+/// Host perplexity agrees with reference values computed by the
+/// independent forward on the same held-out batch — pinning the NLL
+/// target alignment (`tokens[pos+1]`) and the token count, not just the
+/// logits — across W{4,8} x A{4,16} x KV{4,16}.
+#[test]
+fn host_perplexity_matches_reference_values() {
+    let mut stream = TokenStream::new(V, VALID_STREAM_SEED, Split::Valid,
+                                      0, 1);
+    let batch = stream.next_batch(2, S, 0);
+    let rows: Vec<&[i32]> = (0..2)
+        .map(|r| &batch.tokens[r * S..(r + 1) * S])
+        .collect();
+    for w_bits in [4u32, 8] {
+        let (_params, model, rm) = build_models(55, w_bits);
+        for a_bits in [4u32, 16] {
+            for kv_bits in [4u32, 16] {
+                let tag = format!("W{w_bits}-A{a_bits}-KV{kv_bits}");
+                let want = ref_nll_per_token(&rm, &rows, a_bits, kv_bits);
+                let opts = HostEvalOpts { a_bits, kv_bits, batch: 2,
+                                          seq_len: S, n_batches: 1,
+                                          chunk: 5 };
+                let got = perplexity_host(&model, &opts, None).unwrap();
+                let tol = 1e-9 * (1.0 + want.abs());
+                assert!((got.nll_per_token - want).abs() <= tol,
+                        "{tag}: host nll/tok {} vs reference {}",
+                        got.nll_per_token, want);
+                let want_ppl = want.min(60.0).exp();
+                assert!((got.ppl - want_ppl).abs() <= 1e-6 * want_ppl,
+                        "{tag}: host ppl {} vs reference {want_ppl}",
+                        got.ppl);
+            }
+        }
+    }
+}
+
+/// Host perplexity is invariant to the teacher-forcing chunk size and
+/// to packing (packed model == dense twin), and reads the same held-out
+/// stream the engine path reads.
+#[test]
+fn host_perplexity_chunk_and_packing_invariance() {
+    let cfg = InferConfig { vocab_size: 96, d_model: 32, n_layers: 2,
+                            n_heads: 2, d_ff: 40, rope_theta: 10000.0,
+                            norm_ss: true, embproj: false };
+    let packed = InferModel::synthetic(&cfg, 5).quantized(4);
+    let mut opts = HostEvalOpts::new(4, 4);
+    opts.batch = 2;
+    opts.seq_len = 24;
+    opts.n_batches = 1;
+    opts.chunk = 1;
+    let base = perplexity_host(&packed, &opts, None).unwrap();
+    for chunk in [3usize, 24, 64] {
+        let got = perplexity_host(&packed,
+                                  &HostEvalOpts { chunk, ..opts }, None)
+            .unwrap();
+        assert_eq!(got.nll_per_token, base.nll_per_token,
+                   "chunk {chunk} nll");
+        assert_eq!(got.ppl, base.ppl, "chunk {chunk} ppl");
+    }
+    let dense = packed.dequantized();
+    let got = perplexity_host(&dense, &HostEvalOpts { chunk: 64, ..opts },
+                              None)
+        .unwrap();
+    assert_eq!(got.nll_per_token, base.nll_per_token, "dense twin");
+    // The held-out stream is the engine path's: same seed, Valid split.
+    let mut s = TokenStream::new(96, VALID_STREAM_SEED, Split::Valid, 0, 1);
+    let b = s.next_batch(2, 24, 0);
+    assert!(b.tokens.iter().all(|&t| (0..96).contains(&t)));
+}
+
+/// Rejection paths: malformed inputs surface as `Err` at every level of
+/// the stack (block forward, step API) and never panic.
+#[test]
+fn rejection_paths_return_err() {
+    let cfg = InferConfig { vocab_size: 32, d_model: 16, n_layers: 1,
+                            n_heads: 2, d_ff: 24, rope_theta: 10000.0,
+                            norm_ss: false, embproj: false };
+    let model = InferModel::synthetic(&cfg, 9);
+    // Empty batch through the step API.
+    let mut none: Vec<&mut SeqKv> = Vec::new();
+    assert!(model.decode_step(None, &[], &mut none, 4, true).is_err());
+    // Out-of-vocab token through the step API leaves the cache intact.
+    let mut c = model.new_cache(4);
+    {
+        let mut refs = vec![&mut c];
+        assert!(model
+            .decode_step(None, &[99], &mut refs, 4, true)
+            .is_err());
+    }
+    assert_eq!(c.n_tokens(), 0);
+    // A valid step afterwards still works (the model is unpoisoned).
+    let mut refs = vec![&mut c];
+    let logits = model
+        .forward_step_refs(None, &[1], &mut refs, 4)
+        .unwrap();
+    assert_eq!(logits.shape(), &[1, 32]);
+}
