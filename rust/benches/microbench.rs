@@ -9,10 +9,12 @@
 //! parallel kernel layer (DESIGN.md §6) buys.
 //!
 //! `--json` runs only the quantization + decode sections and writes
-//! `BENCH_quant.json` (packed-vs-dense matvec ns/op + bytes/param, and
-//! packed-vs-dense decode tokens/sec at batch 8) for CI's perf
+//! `BENCH_quant.json` (packed-vs-dense matvec ns/op + bytes/param,
+//! LUT-vs-legacy `scalar_ns_op` kernel rows for the §10 microkernels,
+//! and packed-vs-dense decode tokens/sec at batch 8) for CI's perf
 //! trajectory; `osp serve-bench --json` covers the full batch/bit-config
-//! grid in `BENCH_infer.json`.
+//! grid in `BENCH_infer.json`, and `osp bench-diff OLD NEW` trends any
+//! two of these artifacts against each other.
 
 use osp::bench::{bench, Table};
 use osp::coordinator::dp::ring_all_reduce;
@@ -38,8 +40,11 @@ fn gflops(n: usize, secs: f64) -> String {
     format!("{:.2} GFLOP/s", 2.0 * (n as f64).powi(3) / secs / 1e9)
 }
 
-/// Packed-vs-dense matvec at the weight shapes PTQ actually emits:
-/// table rows + one JSON record per (size, bits).
+/// Packed-vs-dense matvec at the weight shapes PTQ actually emits, plus
+/// LUT-vs-legacy kernel rows (the tiled microkernels of DESIGN.md §10
+/// against the pre-LUT per-element `decode()` kernels kept as
+/// `qmatvec_scalar`/`qmatmul_scalar`): table rows + one JSON record per
+/// (op, size, bits) for `osp bench-diff` trending.
 fn bench_quant(table: &mut Table, nw: usize) -> Vec<Json> {
     let mut records = Vec::new();
     for n in [512usize, 1024] {
@@ -58,15 +63,23 @@ fn bench_quant(table: &mut Table, nw: usize) -> Vec<Json> {
             let tqp = bench(2, iters, || {
                 std::hint::black_box(q.qmatvec_with(par::shared_pool(), &x));
             });
+            let ts = bench(2, iters, || {
+                std::hint::black_box(q.qmatvec_scalar(&x));
+            });
             let dense_bpp = 4.0;
             let packed_bpp = q.packed_bytes() as f64 / q.numel() as f64;
             table.row(vec!["matvec dense f32".into(), format!("{n}x{n}"),
                            format!("{:.3}", td.mean_secs * 1e3),
                            format!("{dense_bpp:.2} B/param")]);
-            table.row(vec![format!("qmatvec w{bits} packed"),
+            table.row(vec![format!("qmatvec w{bits} lut"),
                            format!("{n}x{n}"),
                            format!("{:.3}", tq.mean_secs * 1e3),
                            format!("{packed_bpp:.2} B/param")]);
+            table.row(vec![format!("qmatvec w{bits} scalar(legacy)"),
+                           format!("{n}x{n}"),
+                           format!("{:.3}", ts.mean_secs * 1e3),
+                           format!("{:.2}x vs lut",
+                                   ts.mean_secs / tq.mean_secs.max(1e-12))]);
             table.row(vec![format!("qmatvec w{bits} par({nw})"),
                            format!("{n}x{n}"),
                            format!("{:.3}", tqp.mean_secs * 1e3),
@@ -78,8 +91,37 @@ fn bench_quant(table: &mut Table, nw: usize) -> Vec<Json> {
                 ("dense_ns_op", Json::num(td.mean_secs * 1e9)),
                 ("packed_ns_op", Json::num(tq.mean_secs * 1e9)),
                 ("packed_par_ns_op", Json::num(tqp.mean_secs * 1e9)),
+                ("scalar_ns_op", Json::num(ts.mean_secs * 1e9)),
                 ("dense_bytes_per_param", Json::num(dense_bpp)),
                 ("packed_bytes_per_param", Json::num(packed_bpp)),
+            ]));
+
+            // qmatmul at a decode-ish [n, n] @ [n, 32] shape: the tiled
+            // LUT kernel vs the legacy per-element kernel.
+            let b = randn(&[n, 32], 9 + n as u64);
+            let miters = if n >= 1024 { 5 } else { 20 };
+            let tml = bench(1, miters, || {
+                std::hint::black_box(q.qmatmul_with(None, &b));
+            });
+            let tms = bench(1, miters, || {
+                std::hint::black_box(q.qmatmul_scalar(&b));
+            });
+            table.row(vec![format!("qmatmul w{bits} lut"),
+                           format!("{n}x{n}x32"),
+                           format!("{:.3}", tml.mean_secs * 1e3),
+                           format!("{packed_bpp:.2} B/param")]);
+            table.row(vec![format!("qmatmul w{bits} scalar(legacy)"),
+                           format!("{n}x{n}x32"),
+                           format!("{:.3}", tms.mean_secs * 1e3),
+                           format!("{:.2}x vs lut",
+                                   tms.mean_secs
+                                   / tml.mean_secs.max(1e-12))]);
+            records.push(Json::obj(vec![
+                ("op", Json::str("matmul")),
+                ("size", Json::num(n as f64)),
+                ("w_bits", Json::num(bits as f64)),
+                ("packed_ns_op", Json::num(tml.mean_secs * 1e9)),
+                ("scalar_ns_op", Json::num(tms.mean_secs * 1e9)),
             ]));
         }
     }

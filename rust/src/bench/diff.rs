@@ -1,0 +1,241 @@
+//! Bench-report differ behind `osp bench-diff OLD.json NEW.json`:
+//! row-by-row comparison of two `BENCH_quant.json` / `BENCH_infer.json`
+//! artifacts so CI (and humans) can see per-kernel speedups and catch
+//! throughput regressions between pushes.
+//!
+//! Rows are matched on their *identity fields* (the sweep coordinates:
+//! op/phase/config/size/bit-widths/batch/chunk); every shared numeric
+//! field that looks like a metric — `*_ns_op` timings (lower is better)
+//! or `*per_sec*` rates (higher is better) — is compared and normalized
+//! into a speedup where `> 1.0` means NEW is faster. Context fields
+//! (byte counts, step counts) are ignored, and rows present in only one
+//! file are reported but never fail the diff, so adding or removing
+//! bench rows does not break the gate.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// Fields that locate a row in the sweep grid. Only the subset present
+/// on a row participates in its key.
+const IDENTITY_FIELDS: [&str; 11] = [
+    "op", "phase", "config", "size", "w_bits", "a_bits", "kv_bits", "bits",
+    "batch", "chunk", "prompt_len",
+];
+
+fn is_time_metric(key: &str) -> bool {
+    key.ends_with("_ns_op")
+}
+
+fn is_rate_metric(key: &str) -> bool {
+    key.contains("per_sec")
+}
+
+/// One compared metric of one matched row.
+#[derive(Clone, Debug)]
+pub struct MetricDiff {
+    /// Human-readable identity key, e.g. `op=matvec size=512 w_bits=4`.
+    pub row: String,
+    pub metric: String,
+    pub old: f64,
+    pub new: f64,
+    /// Normalized across metric polarity: `> 1.0` = NEW is faster.
+    pub speedup: f64,
+}
+
+/// Full diff of two bench reports.
+#[derive(Clone, Debug, Default)]
+pub struct DiffReport {
+    pub metrics: Vec<MetricDiff>,
+    /// Row keys present in only one of the files (not compared).
+    pub only_old: Vec<String>,
+    pub only_new: Vec<String>,
+    /// Set when the two runs used different worker counts — speedups
+    /// then mix kernel changes with thread-count changes.
+    pub thread_note: Option<String>,
+}
+
+impl DiffReport {
+    /// Metrics slower than `1 - threshold` (e.g. threshold 0.10 flags
+    /// anything more than 10% slower in NEW).
+    pub fn regressions(&self, threshold: f64) -> Vec<&MetricDiff> {
+        self.metrics
+            .iter()
+            .filter(|m| m.speedup < 1.0 - threshold)
+            .collect()
+    }
+}
+
+fn row_key(row: &Json) -> String {
+    let mut parts = Vec::new();
+    for f in IDENTITY_FIELDS {
+        match row.get(f) {
+            Some(Json::Str(s)) => parts.push(format!("{f}={s}")),
+            Some(Json::Num(n)) => parts.push(format!("{f}={n}")),
+            _ => {}
+        }
+    }
+    parts.join(" ")
+}
+
+fn rows_by_key(doc: &Json, which: &str)
+               -> Result<BTreeMap<String, Json>> {
+    let rows = doc
+        .get("rows")
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| anyhow!(
+            "{which}: no 'rows' array — not a BENCH_*.json artifact"))?;
+    let mut map = BTreeMap::new();
+    for r in rows {
+        map.insert(row_key(r), r.clone());
+    }
+    Ok(map)
+}
+
+/// Diff two parsed bench artifacts (see module docs for matching and
+/// metric polarity rules).
+pub fn diff_reports(old: &Json, new: &Json) -> Result<DiffReport> {
+    let old_rows = rows_by_key(old, "OLD")?;
+    let new_rows = rows_by_key(new, "NEW")?;
+    let mut report = DiffReport::default();
+    let (ot, nt) = (old.get("threads").and_then(|t| t.as_f64()),
+                    new.get("threads").and_then(|t| t.as_f64()));
+    if let (Some(ot), Some(nt)) = (ot, nt) {
+        if ot != nt {
+            report.thread_note = Some(format!(
+                "thread counts differ (OLD {ot} vs NEW {nt}); speedups \
+                 mix kernel and parallelism changes"));
+        }
+    }
+    for (key, orow) in &old_rows {
+        let Some(nrow) = new_rows.get(key) else {
+            report.only_old.push(key.clone());
+            continue;
+        };
+        let Some(fields) = orow.as_obj() else { continue };
+        for (metric, oval) in fields {
+            let time = is_time_metric(metric);
+            if !time && !is_rate_metric(metric) {
+                continue;
+            }
+            let (Some(ov), Some(nv)) = (
+                oval.as_f64(),
+                nrow.get(metric).and_then(|v| v.as_f64()),
+            ) else {
+                continue;
+            };
+            if !(ov > 0.0 && nv > 0.0) {
+                continue; // degenerate or non-finite sample
+            }
+            let speedup = if time { ov / nv } else { nv / ov };
+            report.metrics.push(MetricDiff {
+                row: key.clone(),
+                metric: metric.clone(),
+                old: ov,
+                new: nv,
+                speedup,
+            });
+        }
+    }
+    for key in new_rows.keys() {
+        if !old_rows.contains_key(key) {
+            report.only_new.push(key.clone());
+        }
+    }
+    Ok(report)
+}
+
+/// Compact metric formatting for the diff table (ns and tok/s both span
+/// several orders of magnitude).
+pub fn fmt_metric(v: f64) -> String {
+    if v >= 1000.0 {
+        format!("{v:.0}")
+    } else if v >= 10.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(threads: f64, rows: Vec<Json>) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str("quant")),
+            ("threads", Json::num(threads)),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+
+    fn matvec_row(size: f64, bits: f64, ns: f64, tps: f64) -> Json {
+        Json::obj(vec![
+            ("op", Json::str("matvec")),
+            ("size", Json::num(size)),
+            ("w_bits", Json::num(bits)),
+            ("packed_ns_op", Json::num(ns)),
+            ("tokens_per_sec", Json::num(tps)),
+            ("weight_bytes", Json::num(1234.0)), // context: never compared
+        ])
+    }
+
+    #[test]
+    fn speedups_normalize_metric_polarity() {
+        let old = report(4.0, vec![matvec_row(512.0, 4.0, 2000.0, 100.0)]);
+        let new = report(4.0, vec![matvec_row(512.0, 4.0, 1000.0, 150.0)]);
+        let d = diff_reports(&old, &new).unwrap();
+        assert_eq!(d.metrics.len(), 2, "{:?}", d.metrics);
+        for m in &d.metrics {
+            match m.metric.as_str() {
+                "packed_ns_op" => assert!((m.speedup - 2.0).abs() < 1e-12),
+                "tokens_per_sec" => {
+                    assert!((m.speedup - 1.5).abs() < 1e-12)
+                }
+                other => panic!("unexpected metric {other}"),
+            }
+        }
+        assert!(d.regressions(0.10).is_empty());
+        assert!(d.thread_note.is_none());
+    }
+
+    #[test]
+    fn regressions_flag_beyond_threshold_only() {
+        let old = report(1.0, vec![matvec_row(512.0, 4.0, 1000.0, 100.0)]);
+        let new = report(1.0, vec![matvec_row(512.0, 4.0, 1080.0, 85.0)]);
+        let d = diff_reports(&old, &new).unwrap();
+        // ns: 1.08x slower (within 10%); tok/s: 15% slower (beyond).
+        let regs = d.regressions(0.10);
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert_eq!(regs[0].metric, "tokens_per_sec");
+        assert_eq!(d.regressions(0.20).len(), 0);
+    }
+
+    #[test]
+    fn unmatched_rows_and_thread_skew_are_reported_not_fatal() {
+        let old = report(1.0, vec![matvec_row(512.0, 4.0, 1000.0, 100.0),
+                                   matvec_row(256.0, 4.0, 500.0, 50.0)]);
+        let new = report(4.0, vec![matvec_row(512.0, 4.0, 900.0, 120.0),
+                                   matvec_row(512.0, 8.0, 800.0, 90.0)]);
+        let d = diff_reports(&old, &new).unwrap();
+        assert_eq!(d.only_old.len(), 1);
+        assert_eq!(d.only_new.len(), 1);
+        assert!(d.thread_note.is_some());
+        assert_eq!(d.metrics.len(), 2); // only the matched row compares
+    }
+
+    #[test]
+    fn rejects_non_bench_documents() {
+        let bogus = Json::obj(vec![("hello", Json::str("world"))]);
+        assert!(diff_reports(&bogus, &bogus).is_err());
+    }
+
+    #[test]
+    fn fmt_metric_scales() {
+        assert_eq!(fmt_metric(123456.0), "123456");
+        assert_eq!(fmt_metric(42.5), "42.5");
+        assert_eq!(fmt_metric(1.25), "1.250");
+    }
+}

@@ -1,6 +1,9 @@
 //! Bench harness (criterion is not in the offline vendor set): warmup +
 //! timed iterations with mean/min/max, and paper-style table rendering
-//! shared by `rust/benches/*` and the `osp repro` subcommands.
+//! shared by `rust/benches/*` and the `osp repro` subcommands. [`diff`]
+//! compares two recorded bench artifacts (`osp bench-diff`).
+
+pub mod diff;
 
 use std::time::Instant;
 

@@ -3,6 +3,11 @@
 //! [`InferModel::forward_block`] passes straight off packed weights — no
 //! PJRT executables, no `dense_params()` materialization — so
 //! `osp eval` and `osp repro table2` work offline on the stub runtime.
+//! Teacher-forced chunks ride the §10 microkernels end to end: weight
+//! matmuls decode through the byte LUTs and attention block-dequantizes
+//! each cached KV row once per `--eval-chunk` block (instead of once
+//! per evaluated position), so large-chunk eval is where the
+//! block-dequant win is biggest.
 //!
 //! Semantics mirror the evalq/logitsq graphs (`python/compile/model.py`):
 //! the same held-out [`TokenStream`] (seed [`VALID_STREAM_SEED`], Valid

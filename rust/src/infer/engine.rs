@@ -7,7 +7,9 @@
 //! feed up to [`DecodeParams::prefill_chunk`] tokens at once (chunked
 //! prefill — each packed weight row's in-register dequant is amortized
 //! across the whole chunk, exactly like `qmatmul_rhs` amortizes across
-//! the batch), while sequences that are decoding feed one token. The
+//! the batch, and block-dequant attention decodes each cached KV row
+//! once per chunk instead of once per prompt token — DESIGN.md §10),
+//! while sequences that are decoding feed one token. The
 //! step then samples where the prompt is exhausted, evicts finished
 //! sequences, and admits queued ones, so the batch stays full at *step*
 //! granularity.

@@ -9,6 +9,7 @@
 //!   eval       engine-free host evaluation straight off packed weights
 //!   generate   autoregressive decode on the host model layer
 //!   serve-bench  decode + chunked-prefill throughput sweeps
+//!   bench-diff  per-row speedup diff of two bench JSON artifacts
 //!   analyze    attention-sink / massive-activation analysis (§5.2)
 //!
 //! Training/repro paths are manifest-driven (`make artifacts` first);
@@ -19,7 +20,7 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use osp::bench::Table;
+use osp::bench::{diff as bench_diff, Table};
 use osp::checkpoint;
 use osp::config::{TrainConfig, ABLATION_GRID};
 use osp::coordinator::Trainer;
@@ -79,6 +80,11 @@ USAGE: osp <subcommand> [flags]
              [--prefill-batch N]
              [--d-model N --n-layers N --n-heads N --d-ff N --vocab N]
              [--json [FILE]]        write BENCH_infer.json for CI
+  bench-diff OLD.json NEW.json     diff two BENCH_quant.json /
+             [--threshold F]        BENCH_infer.json artifacts: print
+                                    per-row speedups, exit 1 on any
+                                    metric more than F slower
+                                    (default 0.10 = 10%)
   analyze    [--runs-dir DIR] [--tags adam,osp]
 
   common     --artifacts DIR (default: artifacts)
@@ -582,6 +588,60 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `osp bench-diff OLD.json NEW.json`: per-row speedup table between
+/// two bench artifacts, nonzero exit on a metric regressing more than
+/// `--threshold` (default 10%). CI runs it advisory against the
+/// previous run's uploaded artifact.
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    let [old_path, new_path] = match args.positional.as_slice() {
+        [a, b] => [a.clone(), b.clone()],
+        _ => bail!("bench-diff wants exactly two positional arguments: \
+                    OLD.json NEW.json"),
+    };
+    let threshold = args.f64_or("threshold", 0.10);
+    if !(0.0..1.0).contains(&threshold) {
+        bail!("--threshold wants a fraction in [0, 1), got {threshold}");
+    }
+    let load = |path: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?;
+        Json::parse(&text).with_context(|| format!("parsing {path}"))
+    };
+    let report = bench_diff::diff_reports(&load(&old_path)?,
+                                          &load(&new_path)?)?;
+    let mut table = Table::new(
+        &format!("bench diff: {old_path} -> {new_path}"),
+        &["row", "metric", "old", "new", "speedup"]);
+    for m in &report.metrics {
+        table.row(vec![m.row.clone(), m.metric.clone(),
+                       bench_diff::fmt_metric(m.old),
+                       bench_diff::fmt_metric(m.new),
+                       format!("{:.2}x", m.speedup)]);
+    }
+    table.print();
+    if let Some(note) = &report.thread_note {
+        println!("note: {note}");
+    }
+    if !report.only_old.is_empty() || !report.only_new.is_empty() {
+        println!("unmatched rows: {} only in OLD, {} only in NEW",
+                 report.only_old.len(), report.only_new.len());
+    }
+    let regs = report.regressions(threshold);
+    if !regs.is_empty() {
+        for m in &regs {
+            eprintln!("REGRESSION {:.1}%: {} {} ({} -> {})",
+                      100.0 * (1.0 - m.speedup), m.row, m.metric,
+                      bench_diff::fmt_metric(m.old),
+                      bench_diff::fmt_metric(m.new));
+        }
+        bail!("{} metric(s) regressed more than {:.0}%", regs.len(),
+              100.0 * threshold);
+    }
+    println!("no regressions beyond {:.0}% ({} metrics compared)",
+             100.0 * threshold, report.metrics.len());
+    Ok(())
+}
+
 fn cmd_analyze(args: &Args) -> Result<()> {
     let engine = engine_from(args)?;
     let runs_dir = PathBuf::from(args.str_or("runs-dir", "runs"));
@@ -602,6 +662,7 @@ fn main() {
         Some("eval") => cmd_eval(&args),
         Some("generate") => cmd_generate(&args),
         Some("serve-bench") => cmd_serve_bench(&args),
+        Some("bench-diff") => cmd_bench_diff(&args),
         Some("analyze") => cmd_analyze(&args),
         Some("help") | None => {
             print!("{HELP}");

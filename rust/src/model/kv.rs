@@ -14,7 +14,11 @@
 //! appends whole groups of rows at once ([`QRows::append_block`]) and
 //! advances the position counter by the block length
 //! ([`SeqKv::advance_by`]); single-token decode is the block-size-1
-//! special case.
+//! special case. On the read side, block-dequant attention
+//! ([`QRows::dequant_block_into`], DESIGN.md §10) decodes every cached
+//! row exactly once per query block into a per-worker scratch tile via
+//! the byte LUTs; [`QRows::dot`] / [`QRows::axpy_into`] remain as the
+//! element-wise reference kernels the tiles are pinned against.
 //!
 //! Parity contract (pinned by `rust/tests/infer_properties.rs` and
 //! `rust/tests/model_properties.rs`): `code as f32 * scale` is bitwise
@@ -28,6 +32,7 @@
 
 use crate::coordinator::levels_for_bits;
 use crate::quant::rtn::rtn_code;
+use crate::tensor::lut;
 use crate::tensor::qtensor::{codes_per_byte, decode, encode, storage_bits};
 
 /// The eps the evalq fake-quant kernel adds to every row scale
@@ -128,6 +133,39 @@ impl QRows {
         }
     }
 
+    /// Dequantize rows `[i0, i1)` into `out` (`[i1 - i0, dim]`
+    /// row-major) through the byte LUTs — the block-dequant attention
+    /// kernel's cache read: each packed KV row decodes exactly once per
+    /// query block into a scratch tile, instead of once per query
+    /// token. `out[r][j]` is bitwise `self.at(i0 + r, j)`, so dense
+    /// tile ops over the output are bit-identical to the element-wise
+    /// [`QRows::dot`] / [`QRows::axpy_into`] reference kernels.
+    pub fn dequant_block_into(&self, i0: usize, i1: usize,
+                              out: &mut [f32]) {
+        debug_assert!(i0 <= i1 && i1 <= self.n_rows,
+                      "dequant_block_into rows {i0}..{i1} of a {}-row \
+                       cache", self.n_rows);
+        debug_assert_eq!(out.len(), (i1 - i0) * self.dim,
+                         "dequant_block_into wants {} f32s", (i1 - i0)
+                         * self.dim);
+        match self.sbits {
+            Some(sbits) => {
+                for (i, orow) in (i0..i1)
+                    .zip(out.chunks_exact_mut(self.dim))
+                {
+                    let row = &self.codes
+                        [i * self.stride..(i + 1) * self.stride];
+                    lut::dequant_uniform(row, sbits, self.scales[i], 0,
+                                         self.dim, orow);
+                }
+            }
+            None => {
+                out.copy_from_slice(
+                    &self.dense[i0 * self.dim..i1 * self.dim]);
+            }
+        }
+    }
+
     /// Dequantized element `j` of row `i` (test/diagnostic helper).
     pub fn at(&self, i: usize, j: usize) -> f32 {
         match self.sbits {
@@ -140,9 +178,12 @@ impl QRows {
     }
 
     /// deq(row i) · x, accumulated in ascending element order — the
-    /// attention-logit kernel. Bit-identical between packed and dense
-    /// storage of the same fake-quantized row.
+    /// element-wise attention-logit reference kernel (the hot path now
+    /// reads [`QRows::dequant_block_into`] tiles). Bit-identical
+    /// between packed and dense storage of the same fake-quantized row.
     pub fn dot(&self, i: usize, x: &[f32]) -> f32 {
+        debug_assert!(i < self.n_rows, "QRows::dot row {i} of a {}-row \
+                                        cache", self.n_rows);
         debug_assert_eq!(x.len(), self.dim);
         match self.sbits {
             Some(sbits) => {
@@ -165,9 +206,12 @@ impl QRows {
         }
     }
 
-    /// out += w * deq(row i) — the attention value-mix kernel, same
-    /// element order and parity as [`QRows::dot`].
+    /// out += w * deq(row i) — the element-wise attention value-mix
+    /// reference kernel, same element order and parity as
+    /// [`QRows::dot`].
     pub fn axpy_into(&self, i: usize, w: f32, out: &mut [f32]) {
+        debug_assert!(i < self.n_rows, "QRows::axpy_into row {i} of a \
+                                        {}-row cache", self.n_rows);
         debug_assert_eq!(out.len(), self.dim);
         match self.sbits {
             Some(sbits) => {
@@ -346,6 +390,50 @@ mod tests {
             }
             assert_eq!(a, b, "axpy row {i}");
         }
+    }
+
+    #[test]
+    fn dequant_block_matches_element_accessor() {
+        // Packed widths (2..8, including the 3/5-bit field-sharing
+        // cases) and the f32 passthrough, over interior [i0, i1) spans.
+        let mut rng = Pcg::new(21, 0);
+        let dim = 9;
+        for bits in [2u32, 3, 4, 5, 8, 16] {
+            let mut rows = QRows::new(dim, bits);
+            for _ in 0..7 {
+                let row: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+                rows.push(&row);
+            }
+            for (i0, i1) in [(0usize, 7usize), (2, 5), (3, 3), (6, 7)] {
+                let mut out = vec![0.0f32; (i1 - i0) * dim];
+                rows.dequant_block_into(i0, i1, &mut out);
+                for (r, i) in (i0..i1).enumerate() {
+                    for j in 0..dim {
+                        assert_eq!(out[r * dim + j], rows.at(i, j),
+                                   "{bits}b [{i0},{i1}) row {i} j{j}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "row")]
+    #[cfg(debug_assertions)]
+    fn dot_out_of_range_fails_loudly() {
+        let mut rows = QRows::new(4, 4);
+        rows.push(&[1.0, 2.0, 3.0, 4.0]);
+        rows.dot(3, &[0.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "rows")]
+    #[cfg(debug_assertions)]
+    fn dequant_block_out_of_range_fails_loudly() {
+        let mut rows = QRows::new(4, 4);
+        rows.push(&[1.0, 2.0, 3.0, 4.0]);
+        let mut out = vec![0.0f32; 8];
+        rows.dequant_block_into(0, 2, &mut out);
     }
 
     #[test]

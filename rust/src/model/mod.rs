@@ -11,7 +11,11 @@
 //! of once per token — the same amortization `qmatmul_rhs` applies
 //! across the batch. Attention is causally masked per sequence over the
 //! packed KV cache, which grows whole blocks at a time
-//! ([`kv::QRows::append_block`] / [`kv::SeqKv::advance_by`]).
+//! ([`kv::QRows::append_block`] / [`kv::SeqKv::advance_by`]) and is
+//! read by block-dequant (DESIGN.md §10): each cached K/V row decodes
+//! exactly once per query block into a per-thread [`scratch`] tile
+//! through the byte LUTs, with scores and value mixes then running as
+//! dense tile ops — killing the old per-(query, row) re-decode.
 //!
 //! The forward mirrors the evalq graph semantics
 //! (`python/compile/model.py`): RMSNorm/SSNorm, RoPE on q/k, per-token
@@ -39,6 +43,7 @@
 pub mod kv;
 pub mod ops;
 pub mod sample;
+pub mod scratch;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -535,12 +540,17 @@ impl InferModel {
             x = p_in.matmul(pool, &x);
         }
 
+        // Layer-loop scratch, allocated once per block instead of once
+        // per layer: the norm/fake-quant staging and the attention
+        // accumulator (re-zeroed per layer — its writers accumulate).
+        let mut h = Tensor::zeros(&[total, d]);
+        let mut attn_out = Tensor::zeros(&[total, d]);
         for (li, lw) in self.layers.iter().enumerate() {
             // ---- MHSA ----
             if let Some(p) = probe.as_deref_mut() {
                 p.tap(2 * li, x.data());
             }
-            let mut h = x.clone();
+            h.data_mut().copy_from_slice(x.data());
             for row in h.data_mut().chunks_mut(d) {
                 ops::norm_row(row, &lw.attn_norm, self.cfg.norm_ss);
                 ops::fake_quant_row(row, a_levels);
@@ -548,7 +558,7 @@ impl InferModel {
             let q = lw.wq.matmul(pool, &h);
             let k = lw.wk.matmul(pool, &h);
             let v = lw.wv.matmul(pool, &h);
-            let mut attn_out = Tensor::zeros(&[total, d]);
+            attn_out.data_mut().fill(0.0);
             {
                 let (qd, kd, vd) = (q.data(), k.data(), v.data());
                 let mut jobs: Vec<(usize, &mut SeqKv, &mut [f32])> =
@@ -578,7 +588,7 @@ impl InferModel {
             if let Some(p) = probe.as_deref_mut() {
                 p.tap(2 * li + 1, x.data());
             }
-            let mut h = x.clone();
+            h.data_mut().copy_from_slice(x.data());
             for row in h.data_mut().chunks_mut(d) {
                 ops::norm_row(row, &lw.ffn_norm, self.cfg.norm_ss);
                 ops::fake_quant_row(row, a_levels);
@@ -680,50 +690,93 @@ impl InferModel {
         self.forward_block(pool, &mut blocks, a_bits, mode, None)
     }
 
-    /// Per-sequence causal attention at layer `li` over one block:
-    /// token-by-token, RoPE q/k at the absolute position, append the
-    /// token's quantized K/V head rows ([`kv::QRows::append_block`]),
-    /// then softmax-attend over every cached row up to and including the
-    /// token itself into `out` (`[n_tokens, d_model]`, heads merged).
+    /// Per-sequence causal attention at layer `li` over one block, in
+    /// three passes (DESIGN.md §10): (1) RoPE + quantize-append the
+    /// whole block's K/V head rows ([`kv::QRows::append_block`]) — same
+    /// values and append order as the old per-token path; (2)
+    /// block-dequant every cached row exactly once into the calling
+    /// thread's head-major scratch tiles
+    /// ([`kv::QRows::dequant_block_into`]); (3) softmax-attend each
+    /// (token, head) causally over the dense tiles into `out`
+    /// (`[n_tokens, d_model]`, heads merged). Scores and value mixes
+    /// accumulate in the same ascending element/position order as the
+    /// element-wise [`kv::QRows::dot`] / [`kv::QRows::axpy_into`]
+    /// kernels over the packed rows, so the rewrite is bit-identical to
+    /// the per-(query, row) re-decoding path it replaced.
     fn attend_block(&self, li: usize, row0: usize, qd: &[f32], kd: &[f32],
                     vd: &[f32], cache: &mut SeqKv, out: &mut [f32]) {
         let (nh, hd) = (self.cfg.n_heads, self.cfg.head_dim());
         let d = self.cfg.d_model;
         let n = out.len() / d;
         let base = cache.n_tokens();
+        let p = base + n;
         let shd = (hd as f32).sqrt();
-        // One scratch set per call (not per head): this runs once per
-        // sequence per layer per block, so allocations are hoisted out
-        // of the token and head loops.
-        let mut qh = vec![0.0f32; hd];
-        let mut kbuf = vec![0.0f32; d];
-        let mut weights = vec![0.0f32; base + n];
-        for i in 0..n {
-            let pos = base + i;
-            let r = row0 + i;
-            let qrow = &qd[r * d..(r + 1) * d];
-            kbuf.copy_from_slice(&kd[r * d..(r + 1) * d]);
-            for h in 0..nh {
-                ops::rope_in_place(&mut kbuf[h * hd..(h + 1) * hd], pos,
-                                   &self.rope_inv_freq);
-            }
-            let lay = cache.layer_mut(li);
-            lay.k.append_block(&kbuf);
-            lay.v.append_block(&vd[r * d..(r + 1) * d]);
-            for h in 0..nh {
-                qh.copy_from_slice(&qrow[h * hd..(h + 1) * hd]);
-                ops::rope_in_place(&mut qh, pos, &self.rope_inv_freq);
-                let w = &mut weights[..pos + 1];
-                for (t, wv) in w.iter_mut().enumerate() {
-                    *wv = lay.k.dot(t * nh + h, &qh) / shd;
-                }
-                ops::softmax_in_place(w);
-                let out_h = &mut out[i * d + h * hd..i * d + (h + 1) * hd];
-                for (t, &wv) in w.iter().enumerate() {
-                    lay.v.axpy_into(t * nh + h, wv, out_h);
+        scratch::with_attn(|s| {
+            s.reserve(nh, hd, p);
+            // (1) RoPE + append this block's K/V rows. Attention for
+            // token i only reads positions 0..=base+i, so appending the
+            // whole block up front is causally equivalent to the old
+            // interleaved append/attend.
+            {
+                let lay = cache.layer_mut(li);
+                let kbuf = &mut s.kbuf[..d];
+                for i in 0..n {
+                    let r = row0 + i;
+                    kbuf.copy_from_slice(&kd[r * d..(r + 1) * d]);
+                    for h in 0..nh {
+                        ops::rope_in_place(&mut kbuf[h * hd..(h + 1) * hd],
+                                           base + i, &self.rope_inv_freq);
+                    }
+                    lay.k.append_block(kbuf);
+                    lay.v.append_block(&vd[r * d..(r + 1) * d]);
                 }
             }
-        }
+            // (2) Block-dequant the whole visible cache into head-major
+            // tiles: row (pos, h) lands at tile offset (h * p + pos) so
+            // each head's score/mix loops stream contiguously.
+            let lay = cache.layer(li);
+            for pos in 0..p {
+                for h in 0..nh {
+                    let src = pos * nh + h;
+                    let dst = (h * p + pos) * hd;
+                    lay.k.dequant_block_into(src, src + 1,
+                                             &mut s.k[dst..dst + hd]);
+                    lay.v.dequant_block_into(src, src + 1,
+                                             &mut s.v[dst..dst + hd]);
+                }
+            }
+            // (3) Scores + softmax + value mix on the dense tiles.
+            let qh = &mut s.qh[..hd];
+            for i in 0..n {
+                let pos = base + i;
+                let r = row0 + i;
+                let qrow = &qd[r * d..(r + 1) * d];
+                for h in 0..nh {
+                    qh.copy_from_slice(&qrow[h * hd..(h + 1) * hd]);
+                    ops::rope_in_place(qh, pos, &self.rope_inv_freq);
+                    let ktile = &s.k[h * p * hd..(h + 1) * p * hd];
+                    let w = &mut s.w[..pos + 1];
+                    for (t, wv) in w.iter_mut().enumerate() {
+                        let krow = &ktile[t * hd..(t + 1) * hd];
+                        let mut acc = 0.0f32;
+                        for (kv, qv) in krow.iter().zip(qh.iter()) {
+                            acc += kv * qv;
+                        }
+                        *wv = acc / shd;
+                    }
+                    ops::softmax_in_place(w);
+                    let vtile = &s.v[h * p * hd..(h + 1) * p * hd];
+                    let out_h =
+                        &mut out[i * d + h * hd..i * d + (h + 1) * hd];
+                    for (t, &wv) in w.iter().enumerate() {
+                        let vrow = &vtile[t * hd..(t + 1) * hd];
+                        for (o, &vv) in out_h.iter_mut().zip(vrow) {
+                            *o += wv * vv;
+                        }
+                    }
+                }
+            }
+        });
     }
 }
 

@@ -57,8 +57,13 @@ pub fn rope_in_place(head: &mut [f32], pos: usize, inv_freq: &[f32]) {
     }
 }
 
-/// Numerically-stable in-place softmax over one weight row.
+/// Numerically-stable in-place softmax over one weight row. An empty
+/// row is a no-op (the normalizer would otherwise be 0 and the old
+/// 0/0 path minted NaNs for every later read of the buffer).
 pub fn softmax_in_place(w: &mut [f32]) {
+    if w.is_empty() {
+        return;
+    }
     let m = w.iter().cloned().fold(f32::MIN, f32::max);
     let mut z = 0.0f32;
     for v in w.iter_mut() {
@@ -77,6 +82,13 @@ pub fn silu(v: f32) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn softmax_empty_slice_is_a_noop() {
+        let mut w: Vec<f32> = Vec::new();
+        softmax_in_place(&mut w); // must not panic or divide 0/0
+        assert!(w.is_empty());
+    }
 
     #[test]
     fn softmax_sums_to_one() {

@@ -1,0 +1,93 @@
+//! Per-thread scratch arenas for the block-dequant attention kernel
+//! (DESIGN.md §10).
+//!
+//! [`InferModel::forward_block`] runs one attention job per sequence —
+//! serially on the caller, or scattered across `OSP_THREADS` workers.
+//! Each job needs the same transient buffers every call: the dense K/V
+//! tiles the packed cache block-dequantizes into, a softmax score row,
+//! and RoPE staging. Allocating them per (layer, sequence, block) call
+//! put several `Vec` allocations on the hottest loop in the serving
+//! stack; instead every thread owns one lazily-created [`AttnScratch`]
+//! that grows to its high-water mark and is reused across layers,
+//! blocks, sequences, and engine steps.
+//!
+//! Lifetime: the arena lives for the thread (workers of the shared pool
+//! live for the process), holds `2 * positions * d_model` f32 for the
+//! K/V tiles of the longest sequence it has served, and is only ever
+//! touched between [`with_attn`]'s borrow — attention jobs never nest,
+//! so the `RefCell` borrow cannot conflict. Contents are *not* zeroed
+//! between uses; every kernel fully overwrites the ranges it reads.
+//!
+//! [`InferModel::forward_block`]: super::InferModel::forward_block
+
+use std::cell::RefCell;
+
+/// Reusable attention scratch (one per thread; see module docs).
+pub struct AttnScratch {
+    /// Head-major dequantized K tile: `[n_heads, positions, head_dim]`.
+    pub k: Vec<f32>,
+    /// Head-major dequantized V tile, same layout as `k`.
+    pub v: Vec<f32>,
+    /// Softmax score row (one query's weights over all positions).
+    pub w: Vec<f32>,
+    /// RoPE'd query staging for one head.
+    pub qh: Vec<f32>,
+    /// RoPE'd key staging for one token (all heads).
+    pub kbuf: Vec<f32>,
+}
+
+fn grow(buf: &mut Vec<f32>, len: usize) {
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+    }
+}
+
+impl AttnScratch {
+    fn new() -> AttnScratch {
+        AttnScratch { k: Vec::new(), v: Vec::new(), w: Vec::new(),
+                      qh: Vec::new(), kbuf: Vec::new() }
+    }
+
+    /// Ensure capacity for a block over `p` cache positions of an
+    /// `nh`-head, `hd`-wide model (grow-only; buffers may stay larger
+    /// than the current block needs).
+    pub fn reserve(&mut self, nh: usize, hd: usize, p: usize) {
+        grow(&mut self.k, nh * p * hd);
+        grow(&mut self.v, nh * p * hd);
+        grow(&mut self.w, p);
+        grow(&mut self.qh, hd);
+        grow(&mut self.kbuf, nh * hd);
+    }
+}
+
+thread_local! {
+    static SCRATCH: RefCell<AttnScratch> = RefCell::new(AttnScratch::new());
+}
+
+/// Run `f` with the calling thread's arena (created on first use). The
+/// closure must not re-enter `with_attn` — attention jobs don't nest.
+pub fn with_attn<R>(f: impl FnOnce(&mut AttnScratch) -> R) -> R {
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_grows_and_is_reused() {
+        let first = with_attn(|s| {
+            s.reserve(2, 8, 5);
+            assert!(s.k.len() >= 2 * 8 * 5 && s.v.len() >= 2 * 8 * 5);
+            assert!(s.w.len() >= 5 && s.qh.len() >= 8);
+            s.k.as_ptr() as usize
+        });
+        // Same thread, smaller request: no shrink, same allocation.
+        let second = with_attn(|s| {
+            s.reserve(2, 8, 3);
+            assert!(s.k.len() >= 2 * 8 * 5, "grow-only");
+            s.k.as_ptr() as usize
+        });
+        assert_eq!(first, second, "arena reused across calls");
+    }
+}

@@ -1,0 +1,189 @@
+//! Byte-granular decode lookup tables (DESIGN.md §10): the microkernel
+//! substrate that replaces per-element shift/mask/sign-extend decoding
+//! of packed codes with one table lookup per storage *byte*.
+//!
+//! A 256-entry table maps each packed byte directly to its sign-extended
+//! codes: [`LUT4`] yields the 2 nibble codes of a 4-bit-field byte (also
+//! used by 3-bit grids, which pack into 4-bit fields), [`LUT2`] the 4
+//! crumb codes of a 2-bit-field byte. 8-bit fields need no table — a
+//! plain `as i8` cast loop sign-extends them. Entries are `i8` so a
+//! whole table is 512 B / 1 KiB and stays L1-resident.
+//!
+//! Parity contract: for every byte and field position the table entry
+//! equals [`super::qtensor::decode`]'s sign-extended code (pinned by the
+//! tests below for all 256 bytes), and the dequant helpers multiply
+//! `code as f32 * scale` exactly like the per-element path — so every
+//! kernel built on these tables is bit-identical to its pre-LUT
+//! predecessor. The helpers walk `[j0, j1)` windows byte-granularly:
+//! scalar head until the window is byte-aligned, whole-byte body, scalar
+//! tail — required because `QTensor::qmatmul_rhs` stripes start
+//! mid-byte.
+
+/// Sign-extend the low `sbits` of `field` (const-evaluable twin of the
+/// shift pair inside `qtensor::decode`).
+const fn sext(field: u8, sbits: u32) -> i8 {
+    let sh = 8 - sbits;
+    ((field << sh) as i8) >> sh
+}
+
+const fn build_lut2() -> [[i8; 4]; 256] {
+    let mut t = [[0i8; 4]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        let mut j = 0usize;
+        while j < 4 {
+            t[b][j] = sext(((b as u8) >> (2 * j as u32)) & 0x3, 2);
+            j += 1;
+        }
+        b += 1;
+    }
+    t
+}
+
+const fn build_lut4() -> [[i8; 2]; 256] {
+    let mut t = [[0i8; 2]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        t[b][0] = sext((b as u8) & 0xF, 4);
+        t[b][1] = sext((b as u8) >> 4, 4);
+        b += 1;
+    }
+    t
+}
+
+/// byte -> 4 sign-extended 2-bit codes, low crumb first.
+pub static LUT2: [[i8; 4]; 256] = build_lut2();
+
+/// byte -> 2 sign-extended 4-bit codes, low nibble first.
+pub static LUT4: [[i8; 2]; 256] = build_lut4();
+
+/// Core tiled dequant: fields `[j0, j1)` of a packed row into `out`
+/// (`out.len() == j1 - j0`), each value `code as f32 * scale(j)`.
+/// Monomorphized per scale source so the per-column (weights) and
+/// uniform-scale (KV rows) variants both inline the lookup body.
+#[inline]
+fn dequant_with<S: Fn(usize) -> f32>(row: &[u8], sbits: u32, j0: usize,
+                                     j1: usize, out: &mut [f32], scale: S) {
+    debug_assert_eq!(out.len(), j1 - j0);
+    match sbits {
+        8 => {
+            for (o, j) in out.iter_mut().zip(j0..j1) {
+                *o = (row[j] as i8) as f32 * scale(j);
+            }
+        }
+        4 => {
+            let mut j = j0;
+            let mut o = 0usize;
+            if j < j1 && (j & 1) == 1 {
+                out[o] = LUT4[row[j >> 1] as usize][1] as f32 * scale(j);
+                j += 1;
+                o += 1;
+            }
+            while j + 2 <= j1 {
+                let c = &LUT4[row[j >> 1] as usize];
+                out[o] = c[0] as f32 * scale(j);
+                out[o + 1] = c[1] as f32 * scale(j + 1);
+                j += 2;
+                o += 2;
+            }
+            if j < j1 {
+                out[o] = LUT4[row[j >> 1] as usize][0] as f32 * scale(j);
+            }
+        }
+        2 => {
+            let mut j = j0;
+            let mut o = 0usize;
+            while j < j1 && (j & 3) != 0 {
+                out[o] = LUT2[row[j >> 2] as usize][j & 3] as f32 * scale(j);
+                j += 1;
+                o += 1;
+            }
+            while j + 4 <= j1 {
+                let c = &LUT2[row[j >> 2] as usize];
+                out[o] = c[0] as f32 * scale(j);
+                out[o + 1] = c[1] as f32 * scale(j + 1);
+                out[o + 2] = c[2] as f32 * scale(j + 2);
+                out[o + 3] = c[3] as f32 * scale(j + 3);
+                j += 4;
+                o += 4;
+            }
+            while j < j1 {
+                out[o] = LUT2[row[j >> 2] as usize][j & 3] as f32 * scale(j);
+                j += 1;
+                o += 1;
+            }
+        }
+        _ => unreachable!("no LUT layout for {sbits}-bit storage"),
+    }
+}
+
+/// Dequantize fields `[j0, j1)` of one packed row with per-column
+/// scales (`out[t] = code(j0 + t) as f32 * scales[j0 + t]`) — the
+/// weight-tensor variant ([`super::qtensor::QTensor`] kernels).
+#[inline]
+pub fn dequant_cols(row: &[u8], sbits: u32, scales: &[f32], j0: usize,
+                    j1: usize, out: &mut [f32]) {
+    dequant_with(row, sbits, j0, j1, out, |j| scales[j]);
+}
+
+/// Dequantize fields `[j0, j1)` of one packed row with a single row
+/// scale — the quantized-KV-cache variant (`model::kv::QRows`).
+#[inline]
+pub fn dequant_uniform(row: &[u8], sbits: u32, scale: f32, j0: usize,
+                       j1: usize, out: &mut [f32]) {
+    dequant_with(row, sbits, j0, j1, out, |_| scale);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::qtensor::decode;
+    use super::*;
+
+    #[test]
+    fn luts_match_decode_for_every_byte() {
+        for b in 0u16..256 {
+            let row = [b as u8];
+            for j in 0..4 {
+                assert_eq!(LUT2[b as usize][j] as i32, decode(&row, 2, j),
+                           "LUT2 byte {b} field {j}");
+            }
+            for j in 0..2 {
+                assert_eq!(LUT4[b as usize][j] as i32, decode(&row, 4, j),
+                           "LUT4 byte {b} field {j}");
+            }
+            assert_eq!((b as u8 as i8) as i32, decode(&row, 8, 0),
+                       "8-bit byte {b}");
+        }
+    }
+
+    #[test]
+    fn dequant_windows_match_per_element_decode() {
+        // A 23-field row at every storage width, every [j0, j1) window:
+        // heads, bodies, and tails all agree with decode().
+        let bytes: Vec<u8> = (0..23).map(|i| (37 * i + 11) as u8).collect();
+        for sbits in [2u32, 4, 8] {
+            let cpb = (8 / sbits) as usize;
+            let cols = bytes.len() * cpb;
+            let scales: Vec<f32> =
+                (0..cols).map(|j| 0.25 + 0.5 * j as f32).collect();
+            for j0 in 0..cols {
+                for j1 in j0..=cols {
+                    let mut out = vec![0.0f32; j1 - j0];
+                    dequant_cols(&bytes, sbits, &scales, j0, j1, &mut out);
+                    for (t, j) in (j0..j1).enumerate() {
+                        let want =
+                            decode(&bytes, sbits, j) as f32 * scales[j];
+                        assert_eq!(out[t], want, "{sbits}b [{j0},{j1}) @{j}");
+                    }
+                    let mut uni = vec![0.0f32; j1 - j0];
+                    dequant_uniform(&bytes, sbits, 0.625, j0, j1, &mut uni);
+                    for (t, j) in (j0..j1).enumerate() {
+                        let want = decode(&bytes, sbits, j) as f32 * 0.625;
+                        assert_eq!(uni[t], want,
+                                   "{sbits}b uniform [{j0},{j1}) @{j}");
+                    }
+                }
+            }
+        }
+    }
+}

@@ -8,6 +8,7 @@
 //! deploys (DESIGN.md §7).
 
 pub mod linalg;
+pub mod lut;
 pub mod par;
 pub mod qtensor;
 pub mod stats;

@@ -21,12 +21,33 @@
 //! * Serial and pool-parallel kernel paths share one per-row body
 //!   (row-block partitioning on the `OSP_THREADS` pool, DESIGN.md §6),
 //!   so they are bit-identical for any worker count.
+//!
+//! Kernel structure (DESIGN.md §10): the fused kernels decode through
+//! the byte-granular lookup tables in [`super::lut`] — one table hit
+//! per packed *byte* instead of a shift/mask/sign-extend per element —
+//! into [`KTILE`]-column dequant tiles swept [`RBLOCK`] rows at a time,
+//! so every streamed B row (or x window) is reused across the register
+//! block. Accumulation per output element stays single-accumulator
+//! ascending-k, which is what keeps the LUT kernels bit-identical to
+//! both the dense kernels and the pre-LUT per-element kernels
+//! ([`QTensor::qmatvec_scalar`] / [`QTensor::qmatmul_scalar`], kept as
+//! the independent oracle and the `microbench` baseline).
 
 use std::fmt;
 
 use crate::util::threadpool::ThreadPool;
 
-use super::{linalg, par, Tensor};
+use super::{linalg, lut, par, Tensor};
+
+/// Columns per dequant scratch tile: 256 f32 = 1 KiB per row keeps an
+/// [`RBLOCK`]-row tile sweep (4 KiB of dequantized codes plus the B/x
+/// window) L1-resident.
+pub const KTILE: usize = 256;
+
+/// Rows per register block: each K-tile sweep carries `RBLOCK`
+/// accumulator rows so a streamed B row (or x tile) loads once per
+/// block instead of once per output row.
+pub const RBLOCK: usize = 4;
 
 /// Code payload of a [`QTensor`].
 #[derive(Clone, Debug, PartialEq)]
@@ -298,9 +319,8 @@ impl QTensor {
                 for i in 0..rows {
                     let row = &bytes[i * stride..(i + 1) * stride];
                     let out = &mut data[i * cols..(i + 1) * cols];
-                    for (j, v) in out.iter_mut().enumerate() {
-                        *v = decode(row, sbits, j) as f32 * self.scales[j];
-                    }
+                    lut::dequant_cols(row, sbits, &self.scales, 0, cols,
+                                      out);
                 }
                 Tensor::new(self.shape.clone(), data)
             }
@@ -309,52 +329,116 @@ impl QTensor {
 
     // ---- fused dequant kernels --------------------------------------------
 
-    /// One output row of C = deq(self) @ B: codes decode in-register,
-    /// scale-multiplied, then stream B rows in the same i-k-j order as
-    /// [`linalg::matmul_row`] — bit-identical to the dense kernel on
-    /// `self.dequantize()`, shared by the serial and parallel paths.
-    fn matmul_row(&self, i: usize, bd: &[f32], n: usize, crow: &mut [f32]) {
+    /// C rows `[i0, i0 + rows)` of C = deq(self) @ B into `cblock`
+    /// (`[rows, n]` row-major): the tiled LUT microkernel. Packed rows
+    /// dequantize [`KTILE`] columns at a time into a stack tile shared
+    /// by an [`RBLOCK`]-row register block, then every B row in the
+    /// tile streams once across the whole block. Per output element the
+    /// accumulation is single-accumulator ascending-k — bit-identical
+    /// to [`linalg::matmul_row`] on `self.dequantize()` and to the
+    /// pre-LUT per-element kernel, for any row partitioning (so serial
+    /// and pool-parallel paths agree bitwise).
+    fn matmul_rows_into(&self, i0: usize, bd: &[f32], n: usize,
+                        cblock: &mut [f32]) {
+        if n == 0 {
+            return;
+        }
         let k = self.cols();
+        let rows = cblock.len() / n;
         match &self.storage {
             QStorage::Dense(d) => {
-                linalg::matmul_row(&d[i * k..(i + 1) * k], bd, n, crow);
+                for (ri, crow) in cblock.chunks_mut(n).enumerate() {
+                    let i = i0 + ri;
+                    linalg::matmul_row(&d[i * k..(i + 1) * k], bd, n, crow);
+                }
             }
             QStorage::Packed(bytes) => {
                 let (stride, sbits) = (row_stride(k, self.bits),
                                        self.sbits());
-                let row = &bytes[i * stride..(i + 1) * stride];
-                for kk in 0..k {
-                    let aik = decode(row, sbits, kk) as f32
-                        * self.scales[kk];
-                    let brow = &bd[kk * n..(kk + 1) * n];
-                    for (cv, bv) in crow.iter_mut().zip(brow) {
-                        *cv += aik * bv;
+                let mut wtile = [0.0f32; RBLOCK * KTILE];
+                let mut r0 = 0usize;
+                while r0 < rows {
+                    let rb = RBLOCK.min(rows - r0);
+                    let mut k0 = 0usize;
+                    while k0 < k {
+                        let kt = KTILE.min(k - k0);
+                        for r in 0..rb {
+                            let i = i0 + r0 + r;
+                            let row = &bytes[i * stride..(i + 1) * stride];
+                            lut::dequant_cols(
+                                row, sbits, &self.scales, k0, k0 + kt,
+                                &mut wtile[r * KTILE..r * KTILE + kt]);
+                        }
+                        for t in 0..kt {
+                            let brow = &bd[(k0 + t) * n..(k0 + t + 1) * n];
+                            for r in 0..rb {
+                                let aik = wtile[r * KTILE + t];
+                                let crow = &mut cblock
+                                    [(r0 + r) * n..(r0 + r + 1) * n];
+                                for (cv, bv) in crow.iter_mut().zip(brow) {
+                                    *cv += aik * bv;
+                                }
+                            }
+                        }
+                        k0 += kt;
                     }
+                    r0 += rb;
                 }
             }
         }
     }
 
-    /// deq(self)[i] · x with the dense kernel's accumulation order.
-    fn row_dot(&self, i: usize, x: &[f32]) -> f32 {
+    /// y rows `[i0, i0 + out.len())` of y = deq(self) @ x: the matvec
+    /// twin of [`QTensor::matmul_rows_into`] — [`RBLOCK`] accumulators
+    /// sweep shared [`KTILE`]-wide dequant tiles against the matching x
+    /// window. Each accumulator runs ascending-k, so the result is
+    /// bit-identical to the dense dot and the per-element kernel.
+    fn dot_rows_into(&self, i0: usize, x: &[f32], out: &mut [f32]) {
         let k = self.cols();
         match &self.storage {
-            QStorage::Dense(d) => d[i * k..(i + 1) * k]
-                .iter()
-                .zip(x)
-                .map(|(p, q)| p * q)
-                .sum(),
+            QStorage::Dense(d) => {
+                for (ri, o) in out.iter_mut().enumerate() {
+                    let i = i0 + ri;
+                    *o = d[i * k..(i + 1) * k]
+                        .iter()
+                        .zip(x)
+                        .map(|(p, q)| p * q)
+                        .sum();
+                }
+            }
             QStorage::Packed(bytes) => {
                 let (stride, sbits) = (row_stride(k, self.bits),
                                        self.sbits());
-                let row = &bytes[i * stride..(i + 1) * stride];
-                let mut acc = 0.0f32;
-                for (j, &xv) in x.iter().enumerate() {
-                    acc += decode(row, sbits, j) as f32
-                        * self.scales[j]
-                        * xv;
+                let rows = out.len();
+                let mut wtile = [0.0f32; RBLOCK * KTILE];
+                let mut r0 = 0usize;
+                while r0 < rows {
+                    let rb = RBLOCK.min(rows - r0);
+                    let mut acc = [0.0f32; RBLOCK];
+                    let mut k0 = 0usize;
+                    while k0 < k {
+                        let kt = KTILE.min(k - k0);
+                        for r in 0..rb {
+                            let i = i0 + r0 + r;
+                            let row = &bytes[i * stride..(i + 1) * stride];
+                            lut::dequant_cols(
+                                row, sbits, &self.scales, k0, k0 + kt,
+                                &mut wtile[r * KTILE..r * KTILE + kt]);
+                        }
+                        let xt = &x[k0..k0 + kt];
+                        for (r, a) in acc.iter_mut().enumerate().take(rb) {
+                            let wt = &wtile[r * KTILE..r * KTILE + kt];
+                            let mut s = *a;
+                            for (wv, xv) in wt.iter().zip(xt) {
+                                s += wv * xv;
+                            }
+                            *a = s;
+                        }
+                        k0 += kt;
+                    }
+                    out[r0..r0 + rb].copy_from_slice(&acc[..rb]);
+                    r0 += rb;
                 }
-                acc
             }
         }
     }
@@ -372,17 +456,11 @@ impl QTensor {
             Some(p) if m > 1 && n > 0 => {
                 let rpb = par::rows_per_block(m, p.n_workers());
                 p.scatter_chunks(c.data_mut(), rpb * n, |ci, chunk| {
-                    let r0 = ci * rpb;
-                    for (ri, crow) in chunk.chunks_mut(n).enumerate() {
-                        self.matmul_row(r0 + ri, bd, n, crow);
-                    }
+                    self.matmul_rows_into(ci * rpb, bd, n, chunk);
                 });
             }
             _ => {
-                let cd = c.data_mut();
-                for i in 0..m {
-                    self.matmul_row(i, bd, n, &mut cd[i * n..(i + 1) * n]);
-                }
+                self.matmul_rows_into(0, bd, n, c.data_mut());
             }
         }
         c
@@ -407,19 +485,88 @@ impl QTensor {
             Some(p) if m > 1 => {
                 let rpb = par::rows_per_block(m, p.n_workers());
                 p.scatter_chunks(&mut y, rpb, |ci, chunk| {
-                    let r0 = ci * rpb;
-                    for (ri, out) in chunk.iter_mut().enumerate() {
-                        *out = self.row_dot(r0 + ri, x);
-                    }
+                    self.dot_rows_into(ci * rpb, x, chunk);
                 });
             }
             _ => {
+                self.dot_rows_into(0, x, &mut y);
+            }
+        }
+        y
+    }
+
+    /// y = deq(self) @ x with the pre-LUT per-element `decode()` kernel
+    /// (serial). Kept as the independent bit-parity oracle for the
+    /// property tests and the `scalar` baseline of the microbench's
+    /// LUT-vs-legacy rows — not a production path.
+    pub fn qmatvec_scalar(&self, x: &[f32]) -> Vec<f32> {
+        let (m, k) = (self.rows(), self.cols());
+        assert_eq!(k, x.len(), "qmatvec_scalar {:?} @ [{}]", self.shape,
+                   x.len());
+        let mut y = vec![0.0f32; m];
+        match &self.storage {
+            QStorage::Dense(d) => {
                 for (i, out) in y.iter_mut().enumerate() {
-                    *out = self.row_dot(i, x);
+                    *out = d[i * k..(i + 1) * k]
+                        .iter()
+                        .zip(x)
+                        .map(|(p, q)| p * q)
+                        .sum();
+                }
+            }
+            QStorage::Packed(bytes) => {
+                let (stride, sbits) = (row_stride(k, self.bits),
+                                       self.sbits());
+                for (i, out) in y.iter_mut().enumerate() {
+                    let row = &bytes[i * stride..(i + 1) * stride];
+                    let mut acc = 0.0f32;
+                    for (j, &xv) in x.iter().enumerate() {
+                        acc += decode(row, sbits, j) as f32
+                            * self.scales[j]
+                            * xv;
+                    }
+                    *out = acc;
                 }
             }
         }
         y
+    }
+
+    /// C = deq(self) @ B with the pre-LUT per-element `decode()` kernel
+    /// (serial); see [`QTensor::qmatvec_scalar`].
+    pub fn qmatmul_scalar(&self, b: &Tensor) -> Tensor {
+        let (m, k) = (self.rows(), self.cols());
+        let (k2, n) = (b.shape()[0], b.shape()[1]);
+        assert_eq!(k, k2, "qmatmul_scalar {:?} @ {:?}", self.shape,
+                   b.shape());
+        let mut c = Tensor::zeros(&[m, n]);
+        let bd = b.data();
+        let cd = c.data_mut();
+        match &self.storage {
+            QStorage::Dense(d) => {
+                for i in 0..m {
+                    linalg::matmul_row(&d[i * k..(i + 1) * k], bd, n,
+                                       &mut cd[i * n..(i + 1) * n]);
+                }
+            }
+            QStorage::Packed(bytes) => {
+                let (stride, sbits) = (row_stride(k, self.bits),
+                                       self.sbits());
+                for i in 0..m {
+                    let row = &bytes[i * stride..(i + 1) * stride];
+                    let crow = &mut cd[i * n..(i + 1) * n];
+                    for kk in 0..k {
+                        let aik = decode(row, sbits, kk) as f32
+                            * self.scales[kk];
+                        let brow = &bd[kk * n..(kk + 1) * n];
+                        for (cv, bv) in crow.iter_mut().zip(brow) {
+                            *cv += aik * bv;
+                        }
+                    }
+                }
+            }
+        }
+        c
     }
 
     /// y = deq(self) @ x on the shared pool above the size threshold.
@@ -430,7 +577,9 @@ impl QTensor {
     /// Dequantize fields `[j0, j1)` of row `i` into `out` (one f32 per
     /// field, `out.len() == j1 - j0`). The values are bitwise the slice
     /// `dequantize()[i][j0..j1]` — `code as f32 * scale` is the same
-    /// single multiplication.
+    /// single multiplication, now decoded through the byte LUTs
+    /// ([`super::lut::dequant_cols`]; mid-byte `j0` stripes take a
+    /// scalar head, whole bytes after that).
     pub fn dequant_fields(&self, i: usize, j0: usize, j1: usize,
                           out: &mut [f32]) {
         debug_assert_eq!(out.len(), j1 - j0);
@@ -443,9 +592,7 @@ impl QTensor {
                 let (stride, sbits) = (row_stride(cols, self.bits),
                                        self.sbits());
                 let row = &bytes[i * stride..(i + 1) * stride];
-                for (o, j) in out.iter_mut().zip(j0..j1) {
-                    *o = decode(row, sbits, j) as f32 * self.scales[j];
-                }
+                lut::dequant_cols(row, sbits, &self.scales, j0, j1, out);
             }
         }
     }
@@ -679,6 +826,31 @@ mod tests {
         let mut mid = vec![0.0f32; 6];
         q.dequant_fields(2, 3, 9, &mut mid);
         assert_eq!(&mid[..], &dq.row(2)[3..9]);
+    }
+
+    #[test]
+    fn lut_kernels_match_scalar_kernels_across_tile_edges() {
+        // Shapes that cross both microkernel boundaries: rows off the
+        // RBLOCK multiple and cols past KTILE, at every storage width
+        // (3- and 5-bit ride the 4- and 8-bit field layouts).
+        let mut rng = Pcg::new(7, 0);
+        for bits in [2u32, 3, 4, 5, 8] {
+            for (m, k) in [(1, 1), (RBLOCK + 1, KTILE + 7),
+                           (2 * RBLOCK + 3, 2 * KTILE + 1), (9, 300)] {
+                let codes = random_codes(&mut rng, m * k, bits);
+                let scales: Vec<f32> =
+                    (0..k).map(|j| 0.05 + 0.01 * j as f32).collect();
+                let q = QTensor::pack(&[m, k], bits, &codes, scales);
+                let x: Vec<f32> =
+                    (0..k).map(|i| (i as f32).sin()).collect();
+                assert_eq!(q.qmatvec_with(None, &x), q.qmatvec_scalar(&x),
+                           "{bits}b {m}x{k} matvec");
+                let b = randn(&[k, 3], 90 + bits as u64);
+                assert_eq!(q.qmatmul_with(None, &b).data(),
+                           q.qmatmul_scalar(&b).data(),
+                           "{bits}b {m}x{k} matmul");
+            }
+        }
     }
 
     #[test]

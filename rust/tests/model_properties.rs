@@ -8,7 +8,7 @@
 use osp::coordinator::levels_for_bits;
 use osp::data::{Split, TokenStream};
 use osp::eval::host::{perplexity_host, HostEvalOpts, VALID_STREAM_SEED};
-use osp::model::kv::SeqKv;
+use osp::model::kv::{QRows, SeqKv};
 use osp::model::ops::{fake_quant_row, norm_row, rope_in_place, silu,
                       softmax_in_place};
 use osp::model::{InferConfig, InferModel, LogitsMode, SeqBlock};
@@ -428,6 +428,67 @@ fn host_perplexity_chunk_and_packing_invariance() {
     let mut s = TokenStream::new(96, VALID_STREAM_SEED, Split::Valid, 0, 1);
     let b = s.next_batch(2, 24, 0);
     assert!(b.tokens.iter().all(|&t| (0..96).contains(&t)));
+}
+
+/// The block-dequant attention kernels (DESIGN.md §10) are bit-exact
+/// against the element-wise KV reference: a scratch tile filled by
+/// `QRows::dequant_block_into` and swept with plain dense loops yields
+/// the same scores and value mixes as per-(query, row) `QRows::dot` /
+/// `QRows::axpy_into` decoding — across every packed KV width, the f32
+/// passthrough, and interior block ranges. This is the equivalence the
+/// attention rewrite in `InferModel::attend_block` relies on.
+#[test]
+fn block_dequant_attention_matches_elementwise_reference() {
+    let mut rng = Pcg::new(0xA77E, 4);
+    let dim = 10;
+    let n_rows = 13;
+    for bits in [2u32, 3, 4, 5, 8, 16] {
+        let mut kstore = QRows::new(dim, bits);
+        let mut vstore = QRows::new(dim, bits);
+        for _ in 0..n_rows {
+            let kr: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+            let vr: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+            kstore.push(&kr);
+            vstore.push(&vr);
+        }
+        // Dequantize the whole store once (the per-block scratch tile).
+        let mut ktile = vec![0.0f32; n_rows * dim];
+        let mut vtile = vec![0.0f32; n_rows * dim];
+        kstore.dequant_block_into(0, n_rows, &mut ktile);
+        vstore.dequant_block_into(0, n_rows, &mut vtile);
+        // Interior ranges agree with the full-range tile bitwise.
+        let (i0, i1) = (3usize, 9usize);
+        let mut part = vec![0.0f32; (i1 - i0) * dim];
+        kstore.dequant_block_into(i0, i1, &mut part);
+        assert_eq!(&part[..], &ktile[i0 * dim..i1 * dim], "{bits}b range");
+        for q in 0..4 {
+            let query: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+            // Scores: dense tile dot vs element-wise QRows::dot.
+            let mut weights = Vec::with_capacity(n_rows);
+            for t in 0..n_rows {
+                let krow = &ktile[t * dim..(t + 1) * dim];
+                let mut acc = 0.0f32;
+                for (kv, qv) in krow.iter().zip(&query) {
+                    acc += kv * qv;
+                }
+                assert_eq!(acc, kstore.dot(t, &query),
+                           "{bits}b q{q} score row {t}");
+                weights.push(acc);
+            }
+            softmax_in_place(&mut weights);
+            // Value mix: dense tile sweep vs element-wise axpy_into.
+            let mut dense_mix = vec![0.0f32; dim];
+            let mut ref_mix = vec![0.0f32; dim];
+            for (t, &wv) in weights.iter().enumerate() {
+                let vrow = &vtile[t * dim..(t + 1) * dim];
+                for (o, &vv) in dense_mix.iter_mut().zip(vrow) {
+                    *o += wv * vv;
+                }
+                vstore.axpy_into(t, wv, &mut ref_mix);
+            }
+            assert_eq!(dense_mix, ref_mix, "{bits}b q{q} value mix");
+        }
+    }
 }
 
 /// Rejection paths: malformed inputs surface as `Err` at every level of

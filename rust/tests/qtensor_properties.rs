@@ -1,9 +1,10 @@
-//! Packed-tensor parity properties (DESIGN.md §7): pack/unpack
+//! Packed-tensor parity properties (DESIGN.md §7, §10): pack/unpack
 //! roundtrips, `dequantize()` pinned bit-exactly against in-test copies
-//! of the seed's f32 RTN/GPTQ quantize-dequantize paths, and fused
+//! of the seed's f32 RTN/GPTQ quantize-dequantize paths, fused
 //! qmatvec/qmatmul kernels pinned against the dense kernels on the
-//! dequantized tensor — across odd shapes, bits {2, 4, 8, 16}, and
-//! worker counts 1/2/8.
+//! dequantized tensor, and the tiled LUT microkernels pinned against
+//! per-element `decode()` oracles — across odd shapes, bits
+//! {2, 3, 4, 5, 8, 16}, and worker counts 1/2/8.
 
 use osp::quant::{gptq, rtn};
 use osp::tensor::linalg;
@@ -16,6 +17,9 @@ use osp::util::threadpool::ThreadPool;
 
 const WORKER_COUNTS: [usize; 3] = [1, 2, 8];
 const BITS: [u32; 4] = [2, 4, 8, 16];
+/// Every bit-width with a packed storage layout (3-bit codes ride 4-bit
+/// fields, 5-bit codes ride bytes) — the LUT decode paths.
+const LUT_BITS: [u32; 5] = [2, 3, 4, 5, 8];
 
 fn randn(shape: &[usize], rng: &mut Pcg) -> Tensor {
     let mut t = Tensor::zeros(shape);
@@ -283,6 +287,99 @@ fn qmatmul_parity_workers_and_bits() {
             if parallel.data() != serial.data() {
                 return Err(format!("par != serial at {:?} ({nw} workers)",
                                    q.shape()));
+            }
+            Ok(())
+        });
+    }
+}
+
+/// Random codes spanning the full two's-complement range of `bits`.
+fn random_codes(rng: &mut Pcg, n: usize, bits: u32) -> Vec<i32> {
+    let span = 1i64 << bits;
+    (0..n)
+        .map(|_| (rng.below(span as u64) as i64 - span / 2) as i32)
+        .collect()
+}
+
+/// The LUT dequant paths (`dequantize`, `dequant_fields`) are bitwise
+/// the per-element `decode()` oracle (`code_at(i, j) * scales[j]`) for
+/// every packed bit-width, odd shape, and unaligned field window —
+/// including the mid-byte stripe starts `qmatmul_rhs` takes.
+#[test]
+fn lut_dequant_matches_per_element_decode() {
+    prop::check("lut dequant == decode", 40, 0x60, |rng| {
+        let (rows, cols) = odd_dims(rng);
+        let bits = LUT_BITS[rng.below_usize(LUT_BITS.len())];
+        let codes = random_codes(rng, rows * cols, bits);
+        let scales: Vec<f32> =
+            (0..cols).map(|_| rng.range_f32(0.01, 2.0)).collect();
+        let j0 = rng.below_usize(cols);
+        let j1 = j0 + rng.below_usize(cols - j0 + 1);
+        (rows, cols, bits, codes, scales, j0, j1)
+    }, |(rows, cols, bits, codes, scales, j0, j1)| {
+        let q = QTensor::pack(&[*rows, *cols], *bits, codes,
+                              scales.clone());
+        let deq = q.dequantize();
+        for i in 0..*rows {
+            for j in 0..*cols {
+                let want = q.code_at(i, j) as f32 * scales[j];
+                if deq.at2(i, j) != want {
+                    return Err(format!(
+                        "dequantize ({i},{j}) {} != {want} at \
+                         {rows}x{cols} {bits}b", deq.at2(i, j)));
+                }
+            }
+            let mut window = vec![0.0f32; j1 - j0];
+            q.dequant_fields(i, *j0, *j1, &mut window);
+            for (t, j) in (*j0..*j1).enumerate() {
+                let want = q.code_at(i, j) as f32 * scales[j];
+                if window[t] != want {
+                    return Err(format!(
+                        "dequant_fields row {i} [{j0},{j1}) @{j}: {} != \
+                         {want} ({bits}b)", window[t]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The tiled LUT qmatvec/qmatmul kernels are bitwise the pre-LUT
+/// per-element kernels (`qmatvec_scalar`/`qmatmul_scalar`) and
+/// serial == parallel for worker counts 1/2/8, across every packed
+/// bit-width and odd shape.
+#[test]
+fn lut_kernels_match_scalar_oracle_workers_and_bits() {
+    for &nw in &WORKER_COUNTS {
+        let pool = ThreadPool::new(nw, 4 * nw.max(4));
+        prop::check("lut kernels == scalar", 16, 0x61 + nw as u64, |rng| {
+            let (m, k) = odd_dims(rng);
+            let n = 1 + rng.below_usize(9);
+            let bits = LUT_BITS[rng.below_usize(LUT_BITS.len())];
+            let codes = random_codes(rng, m * k, bits);
+            let scales: Vec<f32> =
+                (0..k).map(|_| rng.range_f32(0.01, 2.0)).collect();
+            let q = QTensor::pack(&[m, k], bits, &codes, scales);
+            let x: Vec<f32> = (0..k).map(|_| rng.normal()).collect();
+            (q, x, randn(&[k, n], rng))
+        }, |(q, x, b)| {
+            let want = q.qmatvec_scalar(x);
+            if q.qmatvec_with(None, x) != want {
+                return Err(format!("qmatvec lut != scalar at {:?} {}b",
+                                   q.shape(), q.bits()));
+            }
+            if q.qmatvec_with(Some(&pool), x) != want {
+                return Err(format!("qmatvec par != scalar at {:?} \
+                                    ({nw} workers)", q.shape()));
+            }
+            let wantm = q.qmatmul_scalar(b);
+            if q.qmatmul_with(None, b).data() != wantm.data() {
+                return Err(format!("qmatmul lut != scalar at {:?} {}b",
+                                   q.shape(), q.bits()));
+            }
+            if q.qmatmul_with(Some(&pool), b).data() != wantm.data() {
+                return Err(format!("qmatmul par != scalar at {:?} \
+                                    ({nw} workers)", q.shape()));
             }
             Ok(())
         });
