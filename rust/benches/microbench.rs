@@ -11,6 +11,7 @@
 //! `--json` runs only the quantization + decode sections and writes
 //! `BENCH_quant.json` (packed-vs-dense matvec ns/op + bytes/param,
 //! LUT-vs-legacy `scalar_ns_op` kernel rows for the §10 microkernels,
+//! `int_ns_op`/`int_scalar_ns_op` rows for the §11 integer rhs kernels,
 //! and packed-vs-dense decode tokens/sec at batch 8) for CI's perf
 //! trajectory; `osp serve-bench --json` covers the full batch/bit-config
 //! grid in `BENCH_infer.json`, and `osp bench-diff OLD NEW` trends any
@@ -22,7 +23,9 @@ use osp::data::grammar::{Grammar, LANGUAGE_SEED};
 use osp::data::{Split, TokenStream};
 use osp::eval::tasks;
 use osp::infer::{engine, DecodeParams, InferConfig, InferModel};
+use osp::model::ops;
 use osp::quant::rtn;
+use osp::tensor::intkern;
 use osp::tensor::linalg;
 use osp::tensor::par;
 use osp::tensor::Tensor;
@@ -123,6 +126,61 @@ fn bench_quant(table: &mut Table, nw: usize) -> Vec<Json> {
                 ("packed_ns_op", Json::num(tml.mean_secs * 1e9)),
                 ("scalar_ns_op", Json::num(tms.mean_secs * 1e9)),
             ]));
+
+            // rhs-orientation integer kernels (DESIGN.md §11): the A4
+            // activation tap emits i8 codes + one scale per row, and
+            // the packed linear accumulates i8*i8 -> i32 instead of
+            // dequantizing weights to f32. `int_ns_op` is the detected
+            // SIMD backend, `int_scalar_ns_op` the scalar integer
+            // oracle, both against the f32 LUT kernel consuming the
+            // tap's bit-identical write-back.
+            let be = intkern::active();
+            for (op, m) in [("matvec_rhs", 1usize), ("matmul_rhs", 8)] {
+                let mut a = randn(&[m, n], 11 + (m * n) as u64);
+                let acts = ops::quant_rows_i8(a.data_mut(), n, 7.0);
+                let riters = if m > 1 { iters / 2 } else { iters }.max(3);
+                let tf = bench(1, riters, || {
+                    std::hint::black_box(q.qmatmul_rhs_with(None, &a));
+                });
+                let ti = bench(1, riters, || {
+                    std::hint::black_box(
+                        q.qmatmul_rhs_int_with(None, &acts, be));
+                });
+                let tis = bench(1, riters, || {
+                    std::hint::black_box(q.qmatmul_rhs_int_with(
+                        None, &acts, intkern::Backend::Scalar));
+                });
+                let shape = format!("{m}x{n}x{n}");
+                table.row(vec![format!("{op} w{bits} f32 lut"),
+                               shape.clone(),
+                               format!("{:.3}", tf.mean_secs * 1e3),
+                               format!("{packed_bpp:.2} B/param")]);
+                table.row(vec![format!("{op} w{bits} int {}",
+                                       be.label()),
+                               shape.clone(),
+                               format!("{:.3}", ti.mean_secs * 1e3),
+                               format!("{:.2}x vs f32",
+                                       tf.mean_secs
+                                       / ti.mean_secs.max(1e-12))]);
+                table.row(vec![format!("{op} w{bits} int scalar"),
+                               shape,
+                               format!("{:.3}", tis.mean_secs * 1e3),
+                               format!("{:.2}x vs f32",
+                                       tf.mean_secs
+                                       / tis.mean_secs.max(1e-12))]);
+                records.push(Json::obj(vec![
+                    ("op", Json::str(op)),
+                    ("size", Json::num(n as f64)),
+                    ("w_bits", Json::num(bits as f64)),
+                    ("a_bits", Json::num(4.0)),
+                    ("batch", Json::num(m as f64)),
+                    ("kernel", Json::str(be.label())),
+                    ("packed_ns_op", Json::num(tf.mean_secs * 1e9)),
+                    ("int_ns_op", Json::num(ti.mean_secs * 1e9)),
+                    ("int_scalar_ns_op",
+                     Json::num(tis.mean_secs * 1e9)),
+                ]));
+            }
         }
     }
     records

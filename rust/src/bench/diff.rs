@@ -226,6 +226,40 @@ mod tests {
         assert_eq!(d.metrics.len(), 2); // only the matched row compares
     }
 
+    /// The §11 integer-kernel rows: `int_ns_op` / `int_scalar_ns_op`
+    /// must diff as timings (lower = faster) and the `kernel` field is
+    /// context, not identity — a run on an AVX2 box still matches a
+    /// scalar-only run's rows.
+    #[test]
+    fn int_kernel_rows_diff_as_time_metrics() {
+        assert!(is_time_metric("int_ns_op"));
+        assert!(is_time_metric("int_scalar_ns_op"));
+        let int_row = |kernel: &str, ns: f64, sns: f64| {
+            Json::obj(vec![
+                ("op", Json::str("matvec_rhs")),
+                ("size", Json::num(512.0)),
+                ("w_bits", Json::num(4.0)),
+                ("a_bits", Json::num(4.0)),
+                ("batch", Json::num(1.0)),
+                ("kernel", Json::str(kernel)),
+                ("int_ns_op", Json::num(ns)),
+                ("int_scalar_ns_op", Json::num(sns)),
+            ])
+        };
+        let old = report(1.0, vec![int_row("scalar", 4000.0, 4000.0)]);
+        let new = report(1.0, vec![int_row("avx2", 1000.0, 4000.0)]);
+        let d = diff_reports(&old, &new).unwrap();
+        assert!(d.only_old.is_empty() && d.only_new.is_empty(),
+                "kernel must not split row identity: {:?}", d.only_old);
+        let int = d.metrics.iter().find(|m| m.metric == "int_ns_op")
+            .expect("int_ns_op compared");
+        assert!((int.speedup - 4.0).abs() < 1e-12, "{:?}", int);
+        let sc = d.metrics.iter()
+            .find(|m| m.metric == "int_scalar_ns_op")
+            .expect("int_scalar_ns_op compared");
+        assert!((sc.speedup - 1.0).abs() < 1e-12, "{:?}", sc);
+    }
+
     #[test]
     fn rejects_non_bench_documents() {
         let bogus = Json::obj(vec![("hello", Json::str("world"))]);

@@ -118,6 +118,9 @@ pub struct DecodeStats {
     pub wall_secs: f64,
     /// Peak total KV bytes across concurrently-active sequences.
     pub peak_kv_bytes: usize,
+    /// Integer-kernel backend the model's linears resolved to for this
+    /// run's `a_bits` (None = f32 LUT path).
+    pub int_kernel: Option<&'static str>,
 }
 
 impl DecodeStats {
@@ -150,9 +153,12 @@ impl<'m, 'p> DecodeEngine<'m, 'p> {
     pub fn new(model: &'m InferModel, params: DecodeParams,
                pool: Option<&'p ThreadPool>) -> DecodeEngine<'m, 'p> {
         assert!(params.max_batch > 0, "max_batch must be positive");
+        let stats = DecodeStats {
+            int_kernel: model.int_kernel_label(params.a_bits),
+            ..DecodeStats::default()
+        };
         DecodeEngine { model, params, pool, queue: VecDeque::new(),
-                       active: Vec::new(), finished: Vec::new(),
-                       stats: DecodeStats::default() }
+                       active: Vec::new(), finished: Vec::new(), stats }
     }
 
     /// Enqueue a request (admitted at the next step with a free slot).

@@ -10,6 +10,7 @@
 //!   generate   autoregressive decode on the host model layer
 //!   serve-bench  decode + chunked-prefill throughput sweeps
 //!   bench-diff  per-row speedup diff of two bench JSON artifacts
+//!   simd-info  detected CPU features + integer-kernel backend
 //!   analyze    attention-sink / massive-activation analysis (§5.2)
 //!
 //! Training/repro paths are manifest-driven (`make artifacts` first);
@@ -32,7 +33,7 @@ use osp::infer::{engine as decode, DecodeEngine, DecodeParams, GenRequest,
 use osp::quant::{self, PtqConfig, Rotation, WeightMethod};
 use osp::repro::{self, Effort};
 use osp::runtime::{Engine, Manifest};
-use osp::tensor::par;
+use osp::tensor::{intkern, par};
 use osp::util::cli::Args;
 use osp::util::json::Json;
 
@@ -71,13 +72,20 @@ USAGE: osp <subcommand> [flags]
              [--prefill-chunk N]    prompt tokens per sequence per step
                                     (default 64; 1 = token-at-a-time)
              [--temperature F] [--top-k N] [--top-p F] [--seed N]
-             [--check true]         also decode the dense-f32 twin and
-                                    verify the streams match bit-exactly
+             [--int off|scalar|auto]  integer i8xi8 kernels for the
+                                    packed linears when A-bits <= 8
+                                    (default $OSP_INT else auto; auto
+                                    picks AVX2/NEON when the CPU has
+                                    it, OSP_SIMD=off forces scalar)
+             [--check true]         verify bit-parity: SIMD vs scalar
+                                    integer streams (when --int is
+                                    active), then packed f32 vs the
+                                    dense-f32 twin
   serve-bench  sustained decode + chunked-prefill throughput on a
              synthetic model across the Table-2 bit configs
              [--batches 1,8,32] [--prompt-len N] [--max-new N]
              [--prefill-chunks 1,16,64] [--prefill-len N]
-             [--prefill-batch N]
+             [--prefill-batch N] [--int off|scalar|auto]
              [--d-model N --n-layers N --n-heads N --d-ff N --vocab N]
              [--json [FILE]]        write BENCH_infer.json for CI
   bench-diff OLD.json NEW.json     diff two BENCH_quant.json /
@@ -85,6 +93,8 @@ USAGE: osp <subcommand> [flags]
                                     per-row speedups, exit 1 on any
                                     metric more than F slower
                                     (default 0.10 = 10%)
+  simd-info  print the detected CPU features and which integer
+             microkernel backend (scalar / AVX2 / NEON) will run
   analyze    [--runs-dir DIR] [--tags adam,osp]
 
   common     --artifacts DIR (default: artifacts)
@@ -102,6 +112,17 @@ fn bits_arg(args: &Args, key: &str, default: u32) -> Result<u32> {
     osp::coordinator::checked_levels_for_bits(bits)
         .with_context(|| format!("--{key}"))?;
     Ok(bits)
+}
+
+/// Parse `--int off|scalar|auto` (integer-kernel dispatch for the
+/// packed linears). The flag defaults to `$OSP_INT`, else `auto`: the
+/// library-level default is `off` so tests keep the exact f32 parity
+/// contract, but the CLI opts into the fast path unless told otherwise.
+fn int_mode_arg(args: &Args) -> Result<intkern::IntMode> {
+    let default = std::env::var("OSP_INT").unwrap_or_else(|_| "auto".into());
+    let s = args.str_or("int", &default);
+    intkern::IntMode::parse(&s)
+        .ok_or_else(|| anyhow!("--int wants off|scalar|auto, got '{s}'"))
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -350,7 +371,8 @@ fn generate_model(args: &Args) -> Result<InferModel> {
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
-    let model = generate_model(args)?;
+    let mut model = generate_model(args)?;
+    model.set_int_mode(int_mode_arg(args)?);
     let vocab = model.cfg.vocab_size;
     let max_new = args.usize_or("max-new", 32);
     let params = DecodeParams {
@@ -393,16 +415,54 @@ fn cmd_generate(args: &Args) -> Result<()> {
         st.wall_secs, st.tokens_per_sec(), st.generated_per_sec(),
         st.prefill_per_sec(), st.peak_kv_bytes / 1024,
         model.weight_bytes() / 1024);
+    if let Some(kernel) = st.int_kernel {
+        println!("int kernel: {kernel} ({})", intkern::describe());
+    }
     if args.bool_or("check", false) {
+        drop(eng);
+        let int_active = st.int_kernel.is_some();
+        // 1) With the integer path active, re-decode through the scalar
+        //    integer oracle: SIMD and scalar int kernels share one
+        //    parity contract, so the streams must match bit for bit.
+        if int_active {
+            model.set_int_mode(intkern::IntMode::Scalar);
+            let scalar = decode::generate(&model, &prompts, max_new,
+                                          params, pool)?;
+            let mut diverged = 0usize;
+            for (r, s) in results.iter().zip(&scalar) {
+                if &r.generated != s {
+                    diverged += 1;
+                    eprintln!("[{}] {} {:?} != scalar-int {:?}", r.id,
+                              st.int_kernel.unwrap_or("int"),
+                              r.generated, s);
+                }
+            }
+            if diverged > 0 {
+                bail!("{diverged}/{} streams diverged between the SIMD \
+                       and scalar integer kernels", results.len());
+            }
+            println!("check: SIMD and scalar integer kernels produced \
+                      identical streams ({} sequences)", results.len());
+        }
+        // 2) The original exact contract, unchanged: with the integer
+        //    path off, packed f32 decode matches the dense-f32 twin.
+        //    (Int and f32 streams are NOT compared — the integer path
+        //    rounds each dot product once instead of per fused step,
+        //    a deliberate last-ulp difference; see DESIGN.md §11.)
+        model.set_int_mode(intkern::IntMode::Off);
+        let packed_f32: Vec<Vec<i32>> = if int_active {
+            decode::generate(&model, &prompts, max_new, params, pool)?
+        } else {
+            results.iter().map(|r| r.generated.clone()).collect()
+        };
         let dense = model.dequantized();
         let want = decode::generate(&dense, &prompts, max_new, params,
                                     pool)?;
         let mut mismatches = 0usize;
-        for (r, w) in results.iter().zip(&want) {
-            if &r.generated != w {
+        for (i, (p, w)) in packed_f32.iter().zip(&want).enumerate() {
+            if p != w {
                 mismatches += 1;
-                eprintln!("[{}] packed {:?} != dense {:?}", r.id,
-                          r.generated, w);
+                eprintln!("[{i}] packed {p:?} != dense {w:?}");
             }
         }
         if mismatches > 0 {
@@ -469,6 +529,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         .map(|s| s.parse().map_err(|_| anyhow!("--batches wants ints")))
         .collect::<Result<_>>()?;
     let dense = InferModel::synthetic(&cfg, args.u64_or("seed", 11));
+    let int_mode = int_mode_arg(args)?;
     let g = Grammar::new(cfg.vocab_size, LANGUAGE_SEED);
     let pool = par::shared_pool();
     let nw = par::configured_threads();
@@ -476,12 +537,13 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         &format!("decode serve-bench (OSP_THREADS={nw}, d={} L={} \
                   prompt={prompt_len} new={max_new})",
                  cfg.d_model, cfg.n_layers),
-        &["config", "batch", "tok/s", "gen tok/s", "peak KV KiB",
-          "weights KiB"]);
+        &["config", "batch", "kernel", "tok/s", "gen tok/s",
+          "peak KV KiB", "weights KiB"]);
     let mut records = Vec::new();
     for bc in BitConfig::table2_columns() {
         bc.validate()?;
-        let model = dense.quantized(bc.w);
+        let model = dense.quantized(bc.w).with_int_mode(int_mode);
+        let kernel = model.int_kernel_label(bc.a).unwrap_or("f32");
         for &batch in &batches {
             let prompts = tasks::grammar_prompts(&g, batch, prompt_len, 1);
             let params = DecodeParams::greedy(bc.a, bc.kv, batch.max(1));
@@ -493,7 +555,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             eng.run()?;
             let st = eng.stats;
             table.row(vec![
-                bc.label(), format!("{batch}"),
+                bc.label(), format!("{batch}"), kernel.to_string(),
                 format!("{:.0}", st.tokens_per_sec()),
                 format!("{:.0}", st.generated_per_sec()),
                 format!("{}", st.peak_kv_bytes / 1024),
@@ -506,6 +568,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 ("a_bits", Json::num(bc.a as f64)),
                 ("kv_bits", Json::num(bc.kv as f64)),
                 ("batch", Json::num(batch as f64)),
+                ("kernel", Json::str(kernel)),
                 ("tokens_per_sec", Json::num(st.tokens_per_sec())),
                 ("generated_per_sec", Json::num(st.generated_per_sec())),
                 ("peak_kv_bytes", Json::num(st.peak_kv_bytes as f64)),
@@ -536,7 +599,8 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let prefill_prompts =
         tasks::grammar_prompts(&g, prefill_batch, prefill_len, 2);
     for bc in BitConfig::table2_columns() {
-        let model = dense.quantized(bc.w);
+        let model = dense.quantized(bc.w).with_int_mode(int_mode);
+        let kernel = model.int_kernel_label(bc.a).unwrap_or("f32");
         for &chunk in &prefill_chunks {
             let mut params =
                 DecodeParams::greedy(bc.a, bc.kv, prefill_batch);
@@ -561,6 +625,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 ("a_bits", Json::num(bc.a as f64)),
                 ("kv_bits", Json::num(bc.kv as f64)),
                 ("batch", Json::num(prefill_batch as f64)),
+                ("kernel", Json::str(kernel)),
                 ("chunk", Json::num(chunk as f64)),
                 ("prompt_len", Json::num(prefill_len as f64)),
                 ("prompt_tokens_per_sec", Json::num(st.prefill_per_sec())),
@@ -642,6 +707,16 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `osp simd-info`: one line naming the host arch, the CPU features the
+/// integer microkernels probe for, and the backend `--int auto` would
+/// dispatch to (honoring `OSP_SIMD=off`). CI logs this before the test
+/// runs so every green build records which kernels it actually covered.
+fn cmd_simd_info(args: &Args) -> Result<()> {
+    println!("{}", intkern::describe());
+    println!("--int default: {}", int_mode_arg(args)?.label());
+    Ok(())
+}
+
 fn cmd_analyze(args: &Args) -> Result<()> {
     let engine = engine_from(args)?;
     let runs_dir = PathBuf::from(args.str_or("runs-dir", "runs"));
@@ -663,6 +738,7 @@ fn main() {
         Some("generate") => cmd_generate(&args),
         Some("serve-bench") => cmd_serve_bench(&args),
         Some("bench-diff") => cmd_bench_diff(&args),
+        Some("simd-info") => cmd_simd_info(&args),
         Some("analyze") => cmd_analyze(&args),
         Some("help") | None => {
             print!("{HELP}");

@@ -36,8 +36,10 @@ use crate::tensor::lut;
 use crate::tensor::qtensor::{codes_per_byte, decode, encode, storage_bits};
 
 /// The eps the evalq fake-quant kernel adds to every row scale
-/// (`python/compile/kernels/fake_quant.py`).
-pub const KV_EPS: f32 = 1e-8;
+/// (`python/compile/kernels/fake_quant.py`). One constant shared with
+/// the activation tap and the integer quantizer — see
+/// [`crate::quant::rtn::ACT_EPS`].
+pub const KV_EPS: f32 = crate::quant::rtn::ACT_EPS;
 
 /// Append-only store of quantized `dim`-sized rows.
 pub struct QRows {
@@ -98,8 +100,7 @@ impl QRows {
     /// packed/dense parity contract has a single source of truth.
     pub fn push(&mut self, row: &[f32]) {
         debug_assert_eq!(row.len(), self.dim);
-        let absmax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
-        let scale = absmax / self.levels + KV_EPS;
+        let scale = crate::quant::rtn::act_scale(row, self.levels);
         let lv = self.levels;
         match self.sbits {
             Some(sbits) => {

@@ -49,6 +49,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::levels_for_bits;
 use crate::quant::QParam;
+use crate::tensor::intkern::{Backend, IntMode, QuantActs};
 use crate::tensor::linalg;
 use crate::tensor::qtensor::QTensor;
 use crate::tensor::{par, Tensor};
@@ -130,6 +131,22 @@ impl Linear {
             Linear::Dense(t) => par::matmul_with(pool, a, t),
             Linear::Packed(q) => q.qmatmul_rhs_with(pool, a),
         }
+    }
+
+    /// [`Self::matmul`] with an optional integer-tap side channel: when
+    /// the tap carries i8 activation codes and this leaf is packed, the
+    /// product runs on the integer kernels
+    /// ([`QTensor::qmatmul_rhs_int_with`]); every other combination
+    /// falls back to the f32 path on the *same* `a` (the tap's
+    /// write-back), so routing never changes which values are consumed.
+    fn matmul_tap(&self, pool: Option<&ThreadPool>, a: &Tensor,
+                  tap: Option<&(QuantActs, Backend)>) -> Tensor {
+        if let (Linear::Packed(q), Some((acts, be))) = (self, tap) {
+            if q.is_packed() {
+                return q.qmatmul_rhs_int_with(pool, acts, *be);
+            }
+        }
+        self.matmul(pool, a)
     }
 
     /// Row `i` dequantized into `out` (the embedding lookup).
@@ -247,6 +264,10 @@ pub struct InferModel {
     /// Precomputed RoPE frequencies `theta^(-j/half)`, one per
     /// channel pair — keeps `powf` out of the per-token hot loop.
     rope_inv_freq: Vec<f32>,
+    /// Integer-kernel dispatch for A≤8 packed linears (DESIGN.md §11).
+    /// Defaults to [`IntMode::Off`] so library callers keep the exact
+    /// packed-vs-dense f32 parity; the CLI opts into `Auto`.
+    int_mode: IntMode,
 }
 
 fn rope_inv_freq(cfg: &InferConfig) -> Vec<f32> {
@@ -341,7 +362,8 @@ impl InferModel {
         cfg.validate()?;
         let rope_inv_freq = rope_inv_freq(&cfg);
         Ok(InferModel { cfg, had_flag, embed, embproj_in, embproj_out,
-                        layers, final_norm, unembed, rope_inv_freq })
+                        layers, final_norm, unembed, rope_inv_freq,
+                        int_mode: IntMode::default() })
     }
 
     /// Wrap dense f32 checkpoint leaves (same ordering) — the unquantized
@@ -382,6 +404,7 @@ impl InferModel {
             final_norm: self.final_norm.clone(),
             unembed: self.unembed.dequantized(),
             rope_inv_freq: self.rope_inv_freq.clone(),
+            int_mode: self.int_mode,
         }
     }
 
@@ -415,6 +438,7 @@ impl InferModel {
             final_norm: self.final_norm.clone(),
             unembed: self.unembed.quantized(w_bits),
             rope_inv_freq: self.rope_inv_freq.clone(),
+            int_mode: self.int_mode,
         }
     }
 
@@ -463,7 +487,41 @@ impl InferModel {
         let unembed = randn(&[d, v], std);
         InferModel { cfg: cfg.clone(), had_flag: false, embed, embproj_in,
                      embproj_out, layers, final_norm, unembed,
-                     rope_inv_freq: rope_inv_freq(cfg) }
+                     rope_inv_freq: rope_inv_freq(cfg),
+                     int_mode: IntMode::default() }
+    }
+
+    /// Select the integer-kernel dispatch mode (see [`IntMode`]).
+    pub fn set_int_mode(&mut self, mode: IntMode) {
+        self.int_mode = mode;
+    }
+
+    /// Builder form of [`Self::set_int_mode`].
+    pub fn with_int_mode(mut self, mode: IntMode) -> InferModel {
+        self.int_mode = mode;
+        self
+    }
+
+    pub fn int_mode(&self) -> IntMode {
+        self.int_mode
+    }
+
+    /// The kernel backend A`a_bits` linears will actually run on:
+    /// `Some` only when the mode opts in *and* the activation grid is
+    /// i8-representable (A≤8).
+    pub fn int_kernel(&self, a_bits: u32) -> Option<Backend> {
+        match self.int_mode.backend() {
+            Some(be) if crate::quant::rtn::int_levels(a_bits).is_some() => {
+                Some(be)
+            }
+            _ => None,
+        }
+    }
+
+    /// Label for stats/bench rows: the resolved backend, or None when
+    /// the integer path is off for this activation width.
+    pub fn int_kernel_label(&self, a_bits: u32) -> Option<&'static str> {
+        self.int_kernel(a_bits).map(Backend::label)
     }
 
     /// Serialized weight bytes in the current representation.
@@ -520,6 +578,10 @@ impl InferModel {
         }
         let d = self.cfg.d_model;
         let a_levels = levels_for_bits(a_bits);
+        // Resolved once per block: Some(backend) routes every packed
+        // linear whose input passes an activation tap through the
+        // integer kernels; None is the legacy f32 path everywhere.
+        let int_be = self.int_kernel(a_bits);
         let total: usize = seqs.iter().map(|s| s.tokens.len()).sum();
 
         // Embedding lookup (+ EmbProj input projection), sequences
@@ -553,11 +615,13 @@ impl InferModel {
             h.data_mut().copy_from_slice(x.data());
             for row in h.data_mut().chunks_mut(d) {
                 ops::norm_row(row, &lw.attn_norm, self.cfg.norm_ss);
-                ops::fake_quant_row(row, a_levels);
             }
-            let q = lw.wq.matmul(pool, &h);
-            let k = lw.wk.matmul(pool, &h);
-            let v = lw.wv.matmul(pool, &h);
+            // One tap feeds all three projections: the rows are
+            // quantized exactly once and the codes shared.
+            let tap = ops::quant_tap(h.data_mut(), d, a_levels, int_be);
+            let q = lw.wq.matmul_tap(pool, &h, tap.as_ref());
+            let k = lw.wk.matmul_tap(pool, &h, tap.as_ref());
+            let v = lw.wv.matmul_tap(pool, &h, tap.as_ref());
             attn_out.data_mut().fill(0.0);
             {
                 let (qd, kd, vd) = (q.data(), k.data(), v.data());
@@ -579,10 +643,9 @@ impl InferModel {
                     self.attend_block(li, *row0, qd, kd, vd, cache, out);
                 });
             }
-            for row in attn_out.data_mut().chunks_mut(d) {
-                ops::fake_quant_row(row, a_levels);
-            }
-            x = x.add(&lw.wo.matmul(pool, &attn_out));
+            let tap = ops::quant_tap(attn_out.data_mut(), d, a_levels,
+                                     int_be);
+            x = x.add(&lw.wo.matmul_tap(pool, &attn_out, tap.as_ref()));
 
             // ---- FFN (SwiGLU) ----
             if let Some(p) = probe.as_deref_mut() {
@@ -591,23 +654,23 @@ impl InferModel {
             h.data_mut().copy_from_slice(x.data());
             for row in h.data_mut().chunks_mut(d) {
                 ops::norm_row(row, &lw.ffn_norm, self.cfg.norm_ss);
-                ops::fake_quant_row(row, a_levels);
             }
-            let gate = lw.w_gate.matmul(pool, &h);
-            let mut g = lw.w_up.matmul(pool, &h);
+            let tap = ops::quant_tap(h.data_mut(), d, a_levels, int_be);
+            let gate = lw.w_gate.matmul_tap(pool, &h, tap.as_ref());
+            let mut g = lw.w_up.matmul_tap(pool, &h, tap.as_ref());
             for (gv, xv) in g.data_mut().iter_mut().zip(gate.data()) {
                 *gv *= ops::silu(*xv);
             }
             let f = self.cfg.d_ff;
             let (blk, hscale) = (linalg::pow2_block(f),
                                  1.0 / (linalg::pow2_block(f) as f32).sqrt());
-            for row in g.data_mut().chunks_mut(f) {
-                if self.had_flag {
+            if self.had_flag {
+                for row in g.data_mut().chunks_mut(f) {
                     linalg::hadamard_row(row, blk, hscale);
                 }
-                ops::fake_quant_row(row, a_levels);
             }
-            x = x.add(&lw.w_down.matmul(pool, &g));
+            let tap = ops::quant_tap(g.data_mut(), f, a_levels, int_be);
+            x = x.add(&lw.w_down.matmul_tap(pool, &g, tap.as_ref()));
         }
 
         // Advance every cache past its whole block.
@@ -637,10 +700,8 @@ impl InferModel {
         if let Some(p_out) = &self.embproj_out {
             h = p_out.matmul(pool, &h);
         }
-        for row in h.data_mut().chunks_mut(d) {
-            ops::fake_quant_row(row, a_levels);
-        }
-        Ok(Some(self.unembed.matmul(pool, &h)))
+        let tap = ops::quant_tap(h.data_mut(), d, a_levels, int_be);
+        Ok(Some(self.unembed.matmul_tap(pool, &h, tap.as_ref())))
     }
 
     /// One decode step for a batch of sequences: feed `tokens[r]` at

@@ -5,9 +5,9 @@
 //! through the exact same kernels — the bit-parity contracts depend on
 //! every call site agreeing.
 
+use crate::quant::rtn;
+use crate::tensor::intkern::{Backend, QuantActs};
 use crate::tensor::Tensor;
-
-use super::kv::KV_EPS;
 
 /// RMSNorm (per-channel scale) or SSNorm (scalar gamma), matching the
 /// graph kernels' formulas (`ref.rmsnorm_ref` / `ref.ssnorm_ref`).
@@ -29,16 +29,66 @@ pub fn norm_row(row: &mut [f32], scale: &Tensor, ss: bool) {
 }
 
 /// Per-token RTN fake-quantization (the evalq activation tap):
-/// `scale = absmax / levels + 1e-8`, values snapped to the symmetric
-/// grid through the one shared [`crate::quant::rtn::rtn_code`] helper
-/// (the parity contract depends on every snap site agreeing). With the
-/// "off" levels (2^20) this is numerically the identity, exactly like
-/// the graph.
+/// `scale = absmax / levels + 1e-8` ([`rtn::act_scale`]), values
+/// snapped to the symmetric grid through the one shared
+/// [`rtn::rtn_code`] helper (the parity contract depends on every snap
+/// site agreeing). For i8-representable grids (A≤8) this is literally
+/// codes-times-scale through the i8 type — the integer tap
+/// ([`quant_rows_i8`]) emits the very same codes. With the "off" levels
+/// (2^20) this is numerically the identity, exactly like the graph.
 pub fn fake_quant_row(row: &mut [f32], levels: f32) {
-    let absmax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
-    let scale = absmax / levels + KV_EPS;
-    for v in row.iter_mut() {
-        *v = crate::quant::rtn::rtn_code(*v, scale, levels) as f32 * scale;
+    let scale = rtn::act_scale(row, levels);
+    if rtn::i8_representable(levels) {
+        for v in row.iter_mut() {
+            *v = rtn::rtn_code(*v, scale, levels) as i8 as f32 * scale;
+        }
+    } else {
+        for v in row.iter_mut() {
+            *v = rtn::rtn_code(*v, scale, levels) as f32 * scale;
+        }
+    }
+}
+
+/// Integer form of the activation tap: quantize every row of `data`
+/// (row width `k`) to i8 codes + one scale via
+/// [`rtn::quantize_row_i8`], writing the fake-quant values back in
+/// place. The write-back is bitwise [`fake_quant_row`]'s output, so the
+/// f32 fallback kernels, probes, and residual reads see exactly what
+/// they always saw — the codes are a lossless side channel for the
+/// integer kernels.
+pub fn quant_rows_i8(data: &mut [f32], k: usize, levels: f32) -> QuantActs {
+    let m = if k == 0 { 0 } else { data.len() / k };
+    debug_assert_eq!(m * k, data.len());
+    let mut codes = vec![0i8; data.len()];
+    let mut scales = vec![0.0f32; m];
+    for (r, row) in data.chunks_exact_mut(k.max(1)).enumerate() {
+        let crow = &mut codes[r * k..(r + 1) * k];
+        let scale = rtn::quantize_row_i8(row, levels, crow);
+        scales[r] = scale;
+        for (v, &c) in row.iter_mut().zip(crow.iter()) {
+            *v = c as f32 * scale;
+        }
+    }
+    QuantActs::from_parts(codes, scales, m, k)
+}
+
+/// One activation tap site: fake-quantize every row of `data` in
+/// place, and when an integer backend is active also emit the i8
+/// codes/scales for the downstream packed linears. `None` (integer
+/// path off, or the grid is not i8-representable) leaves behavior
+/// exactly as before — plain [`fake_quant_row`] per row.
+pub fn quant_tap(data: &mut [f32], k: usize, levels: f32,
+                 int_be: Option<Backend>) -> Option<(QuantActs, Backend)> {
+    match int_be {
+        Some(be) if rtn::i8_representable(levels) => {
+            Some((quant_rows_i8(data, k, levels), be))
+        }
+        _ => {
+            for row in data.chunks_exact_mut(k.max(1)) {
+                fake_quant_row(row, levels);
+            }
+            None
+        }
     }
 }
 
@@ -106,6 +156,92 @@ mod tests {
         let want = row.clone();
         fake_quant_row(&mut row, (1u32 << 20) as f32);
         assert_eq!(row, want);
+    }
+
+    /// The pre-refactor tap, verbatim: inline absmax/scale plus the
+    /// rtn_code snap. The rewrite through `rtn::act_scale` /
+    /// `rtn::quantize_row_i8` must reproduce it bit for bit.
+    fn fake_quant_row_old(row: &mut [f32], levels: f32) {
+        let absmax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let scale = absmax / levels + super::super::kv::KV_EPS;
+        for v in row.iter_mut() {
+            *v = crate::quant::rtn::rtn_code(*v, scale, levels) as f32
+                * scale;
+        }
+    }
+
+    #[test]
+    fn fake_quant_rewrite_is_bitwise_the_old_impl() {
+        let mut rng = crate::util::rng::Pcg::new(31, 2);
+        for levels in [1.0f32, 3.0, 7.0, 127.0, 16383.0,
+                       (1u32 << 20) as f32] {
+            for len in [1usize, 5, 64] {
+                let mut row = vec![0.0f32; len];
+                rng.fill_normal(&mut row, 2.0);
+                let mut old = row.clone();
+                fake_quant_row_old(&mut old, levels);
+                fake_quant_row(&mut row, levels);
+                assert_eq!(row.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                           old.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                           "levels {levels} len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn quant_rows_i8_writes_back_fake_quant_bitwise() {
+        let mut rng = crate::util::rng::Pcg::new(57, 2);
+        for (m, k) in [(1usize, 17usize), (4, 8), (3, 33)] {
+            for levels in [7.0f32, 127.0] {
+                let mut data = vec![0.0f32; m * k];
+                rng.fill_normal(&mut data, 1.0);
+                let mut want = data.clone();
+                for row in want.chunks_exact_mut(k) {
+                    fake_quant_row(row, levels);
+                }
+                let acts = quant_rows_i8(&mut data, k, levels);
+                assert_eq!(data, want, "write-back m {m} k {k}");
+                for r in 0..m {
+                    for (t, &c) in acts.row_codes(r).iter().enumerate() {
+                        let deq = c as f32 * acts.scale(r);
+                        assert_eq!(deq.to_bits(),
+                                   want[r * k + t].to_bits(),
+                                   "codes×scale r {r} t {t}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_tap_without_backend_equals_plain_rows() {
+        let mut rng = crate::util::rng::Pcg::new(91, 2);
+        let mut data = vec![0.0f32; 3 * 16];
+        rng.fill_normal(&mut data, 1.0);
+        let mut want = data.clone();
+        for row in want.chunks_exact_mut(16) {
+            fake_quant_row(row, 7.0);
+        }
+        assert!(quant_tap(&mut data, 16, 7.0, None).is_none());
+        assert_eq!(data, want);
+        // A non-i8 grid must refuse the integer side even when asked.
+        let mut wide = want.clone();
+        assert!(quant_tap(&mut wide, 16, 16383.0,
+                          Some(Backend::Scalar)).is_none());
+        // And an i8 grid with a backend returns codes matching the
+        // written-back values.
+        let mut data2 = want.clone();
+        let (acts, be) = quant_tap(&mut data2, 16, 7.0,
+                                   Some(Backend::Scalar)).unwrap();
+        assert_eq!(be, Backend::Scalar);
+        assert_eq!(acts.m(), 3);
+        assert_eq!(acts.k(), 16);
+        for r in 0..3 {
+            for (t, &c) in acts.row_codes(r).iter().enumerate() {
+                assert_eq!((c as f32 * acts.scale(r)).to_bits(),
+                           data2[r * 16 + t].to_bits());
+            }
+        }
     }
 
     #[test]

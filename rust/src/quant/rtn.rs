@@ -41,6 +41,52 @@ pub(crate) fn rtn_code(v: f32, scale: f32, lv: f32) -> i32 {
     (v / scale).round().clamp(-lv - 1.0, lv) as i32
 }
 
+/// Epsilon folded into every runtime activation/KV scale so an all-zero
+/// row still gets a positive scale (`model::kv` re-exports this as
+/// `KV_EPS`). One shared constant: the activation tap, the KV cache,
+/// and the integer activation quantizer must agree bitwise.
+pub const ACT_EPS: f32 = 1e-8;
+
+/// The per-row runtime activation scale shared by every tap site:
+/// `absmax / levels + ACT_EPS`. Extracting it here (rather than
+/// repeating the fold at each site) is what lets the integer path prove
+/// `codes × scale == fake_quant_row` bitwise.
+#[inline]
+pub fn act_scale(row: &[f32], levels: f32) -> f32 {
+    let absmax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    absmax / levels + ACT_EPS
+}
+
+/// True when every code on the `levels` grid fits an i8. The clamp in
+/// [`rtn_code`] bounds codes to `[-levels-1, levels]`, so grids up to
+/// 127 levels (A≤8 configs) are exactly i8-representable.
+#[inline]
+pub fn i8_representable(levels: f32) -> bool {
+    levels <= 127.0
+}
+
+/// [`levels`] restricted to the i8-representable grids — `Some` exactly
+/// when the integer kernel path may serve this activation width.
+pub fn int_levels(bits: u32) -> Option<f32> {
+    levels(bits).filter(|&lv| i8_representable(lv))
+}
+
+/// Quantize one activation row to i8 codes + its scale (the integer
+/// half of the runtime tap). `codes[i] as f32 * scale` is bitwise what
+/// [`crate::model::ops::fake_quant_row`] writes back — both snap
+/// through [`act_scale`] and [`rtn_code`], and the i8 round-trip is
+/// lossless for any [`i8_representable`] grid.
+pub fn quantize_row_i8(row: &[f32], levels: f32, codes: &mut [i8]) -> f32 {
+    assert!(i8_representable(levels),
+            "levels {levels} does not fit i8 codes");
+    debug_assert_eq!(row.len(), codes.len());
+    let scale = act_scale(row, levels);
+    for (c, &v) in codes.iter_mut().zip(row) {
+        *c = rtn_code(v, scale, levels) as i8;
+    }
+    scale
+}
+
 /// Single-pass per-column absmax over contiguous row slices — the scale
 /// pass shared by RTN, GPTQ, and the streaming quant MSE (replaces the
 /// bounds-checked per-element `at2` walks each had).
@@ -240,6 +286,42 @@ mod tests {
         let q = quantize_per_channel_q(&w, 4);
         assert!(q.packed_bytes() as f64 <= 0.3 * q.dense_bytes() as f64,
                 "{} packed vs {} dense", q.packed_bytes(), q.dense_bytes());
+    }
+
+    #[test]
+    fn int_levels_gate() {
+        assert_eq!(int_levels(4), Some(7.0));
+        assert_eq!(int_levels(8), Some(127.0));
+        // 9..15-bit grids need codes beyond i8; 16+ is "off".
+        assert_eq!(int_levels(9), None);
+        assert_eq!(int_levels(16), None);
+    }
+
+    #[test]
+    fn quantize_row_i8_is_codes_times_scale() {
+        let mut rng = Pcg::new(77, 4);
+        for bits in [2u32, 4, 8] {
+            let lv = levels(bits).unwrap();
+            let mut row = vec![0.0f32; 33];
+            rng.fill_normal(&mut row, 1.5);
+            let mut codes = vec![0i8; row.len()];
+            let scale = quantize_row_i8(&row, lv, &mut codes);
+            assert_eq!(scale, act_scale(&row, lv));
+            for (&v, &c) in row.iter().zip(&codes) {
+                assert!((c as f32) >= -lv - 1.0 && (c as f32) <= lv);
+                assert_eq!(c as f32 * scale,
+                           rtn_code(v, scale, lv) as f32 * scale);
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_row_i8_zero_row_has_positive_scale() {
+        let row = [0.0f32; 8];
+        let mut codes = [0i8; 8];
+        let scale = quantize_row_i8(&row, 7.0, &mut codes);
+        assert!(scale > 0.0);
+        assert!(codes.iter().all(|&c| c == 0));
     }
 
     #[test]

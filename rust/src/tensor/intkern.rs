@@ -1,0 +1,832 @@
+//! Integer i8×i8→i32 microkernels for the packed serving path
+//! (DESIGN.md §11).
+//!
+//! The runtime activation tap snaps each row to `code × scale` with
+//! codes on a grid of at most 255 points — i8-representable for every
+//! A≤8 config (`quant::rtn::quantize_row_i8`). This module keeps those
+//! codes as integers: it accumulates exact i32 dot products against the
+//! packed weight codes and applies `act_scale × weight_scale` once per
+//! output element, instead of dequantizing every weight code to f32
+//! first. The inner loops have explicit SIMD bodies (`core::arch` AVX2
+//! and NEON) behind runtime feature detection plus an `OSP_SIMD=off`
+//! override, and a plain-scalar oracle.
+//!
+//! Parity contract: integer accumulation in ascending-k order is
+//! exactly associative, and every backend computes the same i32 sums
+//! before a single shared scalar finalize — so the SIMD kernels are
+//! bit-identical to the scalar oracle for any worker count, window
+//! alignment, or chunking (pinned in `qtensor_properties.rs`). The
+//! integer path differs from the f32 LUT path only in last-ulp
+//! rounding: f32 rounds once per accumulation step, the integer path
+//! rounds once at the end (see DESIGN.md §11 for why that is the
+//! *better*-rounded answer).
+
+use std::sync::OnceLock;
+
+use super::lut;
+
+/// Kernel backend for the integer path and the SIMD f32 decode tiles.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Plain-Rust loops: the oracle every SIMD body must match bitwise.
+    Scalar,
+    /// x86-64 AVX2: `vpmaddwd` against interleaved weight row pairs.
+    Avx2,
+    /// AArch64 NEON: `smull` widening multiplies per weight row.
+    Neon,
+}
+
+impl Backend {
+    pub fn label(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
+        }
+    }
+}
+
+/// `OSP_SIMD=off|0|false` forces [`Backend::Scalar`] everywhere.
+/// Read once per process; tests that need both paths in one process
+/// force a backend programmatically instead of racing the env.
+pub fn simd_disabled() -> bool {
+    static OFF: OnceLock<bool> = OnceLock::new();
+    *OFF.get_or_init(|| {
+        std::env::var("OSP_SIMD").is_ok_and(|v| {
+            matches!(v.to_ascii_lowercase().as_str(), "off" | "0" | "false")
+        })
+    })
+}
+
+/// Best backend the host supports, cached per process: AVX2 / NEON when
+/// detected at runtime, otherwise scalar. `OSP_SIMD=off` pins scalar.
+pub fn active() -> Backend {
+    static ACTIVE: OnceLock<Backend> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        if simd_disabled() {
+            Backend::Scalar
+        } else {
+            detect()
+        }
+    })
+}
+
+fn detect() -> Backend {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return Backend::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Backend::Neon;
+        }
+    }
+    Backend::Scalar
+}
+
+/// One-line CPU feature summary for `osp simd-info` and the CI log.
+pub fn describe() -> String {
+    let mut feats: Vec<&str> = Vec::new();
+    #[cfg(target_arch = "x86_64")]
+    for (name, on) in [
+        ("sse2", is_x86_feature_detected!("sse2")),
+        ("sse4.1", is_x86_feature_detected!("sse4.1")),
+        ("avx", is_x86_feature_detected!("avx")),
+        ("avx2", is_x86_feature_detected!("avx2")),
+        ("avx512f", is_x86_feature_detected!("avx512f")),
+    ] {
+        if on {
+            feats.push(name);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        feats.push("neon");
+    }
+    format!("arch={} features=[{}] backend={}{}",
+            std::env::consts::ARCH,
+            feats.join(","),
+            active().label(),
+            if simd_disabled() { " (OSP_SIMD=off)" } else { "" })
+}
+
+/// Where the model-level dispatch sends A≤8-bit linears. The library
+/// default is [`IntMode::Off`] so every existing packed-vs-dense parity
+/// contract is untouched; the CLI opts into `Auto` (see `osp generate
+/// --int`, env `OSP_INT`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum IntMode {
+    /// Legacy f32 LUT path only.
+    #[default]
+    Off,
+    /// Integer path pinned to the scalar oracle (parity baselines).
+    Scalar,
+    /// Integer path on the best detected backend.
+    Auto,
+}
+
+impl IntMode {
+    pub fn parse(s: &str) -> Option<IntMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "f32" => Some(IntMode::Off),
+            "scalar" => Some(IntMode::Scalar),
+            "auto" | "on" | "simd" | "int" => Some(IntMode::Auto),
+            _ => None,
+        }
+    }
+
+    /// Kernel backend this mode resolves to (None = integer path off).
+    pub fn backend(self) -> Option<Backend> {
+        match self {
+            IntMode::Off => None,
+            IntMode::Scalar => Some(Backend::Scalar),
+            IntMode::Auto => Some(active()),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            IntMode::Off => "off",
+            IntMode::Scalar => "scalar",
+            IntMode::Auto => "auto",
+        }
+    }
+}
+
+/// A batch of activation rows quantized exactly once: i8 codes
+/// (row-major `[m, k]`) plus one f32 scale per row.
+/// `codes[r][c] as f32 * scales[r]` is bitwise the fake-quant value the
+/// f32 path sees for the same row (`quant::rtn::quantize_row_i8`).
+#[derive(Clone, Debug)]
+pub struct QuantActs {
+    codes: Vec<i8>,
+    scales: Vec<f32>,
+    m: usize,
+    k: usize,
+}
+
+impl QuantActs {
+    pub fn from_parts(codes: Vec<i8>, scales: Vec<f32>, m: usize,
+                      k: usize) -> QuantActs {
+        assert_eq!(codes.len(), m * k, "codes len vs [{m}, {k}]");
+        assert_eq!(scales.len(), m, "one scale per row");
+        QuantActs { codes, scales, m, k }
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn row_codes(&self, r: usize) -> &[i8] {
+        &self.codes[r * self.k..(r + 1) * self.k]
+    }
+
+    pub fn scale(&self, r: usize) -> f32 {
+        self.scales[r]
+    }
+}
+
+/// Largest contraction depth with a static no-overflow guarantee:
+/// |code| <= 128 on both sides bounds each term by 2^14, so k < 2^17
+/// keeps every running i32 sum under 2^31.
+pub const MAX_INT_K: usize = 1 << 17;
+
+/// Integer stripe accumulator: for every activation row `r` and column
+/// `t` in the window `[j0, j1)` of a packed `[k, n]` weight block,
+/// `acc[r * (j1-j0) + t] += Σ_kk act_codes[r][kk] * w_code[kk][j0+t]`.
+/// `bytes`/`stride`/`sbits` describe the packed storage (one packed row
+/// per contraction index). All backends produce bit-identical `acc`:
+/// exact i32 sums, ascending-k order.
+pub fn accumulate_stripe(bytes: &[u8], stride: usize, sbits: u32, k: usize,
+                         j0: usize, j1: usize, acts: &QuantActs,
+                         backend: Backend, acc: &mut [i32]) {
+    let jw = j1 - j0;
+    debug_assert_eq!(acts.k, k);
+    debug_assert_eq!(acc.len(), acts.m * jw);
+    assert!(k < MAX_INT_K, "contraction depth {k} risks i32 overflow");
+    if jw == 0 || acts.m == 0 {
+        return;
+    }
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => {
+            debug_assert!(is_x86_feature_detected!("avx2"));
+            let mut w0 = vec![0i8; jw];
+            let mut w1 = vec![0i8; jw];
+            let mut kk = 0usize;
+            while kk + 2 <= k {
+                let row0 = &bytes[kk * stride..(kk + 1) * stride];
+                let row1 = &bytes[(kk + 1) * stride..(kk + 2) * stride];
+                decode_window_i8(row0, sbits, j0, j1, backend, &mut w0);
+                decode_window_i8(row1, sbits, j0, j1, backend, &mut w1);
+                for r in 0..acts.m {
+                    let ca0 = acts.codes[r * k + kk] as i16;
+                    let ca1 = acts.codes[r * k + kk + 1] as i16;
+                    if ca0 == 0 && ca1 == 0 {
+                        continue;
+                    }
+                    let arow = &mut acc[r * jw..(r + 1) * jw];
+                    // SAFETY: this arm only runs with AVX2 detected
+                    // (asserted above); the pointers cover jw valid
+                    // elements and madd_pair touches at most the first
+                    // 16-aligned prefix it reports back.
+                    let done = unsafe {
+                        avx2::madd_pair(w0.as_ptr(), w1.as_ptr(), ca0, ca1,
+                                        arow.as_mut_ptr(), jw)
+                    };
+                    for t in done..jw {
+                        arow[t] += ca0 as i32 * w0[t] as i32
+                            + ca1 as i32 * w1[t] as i32;
+                    }
+                }
+                kk += 2;
+            }
+            if kk < k {
+                let row = &bytes[kk * stride..(kk + 1) * stride];
+                decode_window_i8(row, sbits, j0, j1, backend, &mut w0);
+                scalar_k_row(&w0, acts, kk, acc);
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => {
+            let mut wrow = vec![0i8; jw];
+            for kk in 0..k {
+                let row = &bytes[kk * stride..(kk + 1) * stride];
+                decode_window_i8(row, sbits, j0, j1, backend, &mut wrow);
+                for r in 0..acts.m {
+                    let ca = acts.codes[r * k + kk];
+                    if ca == 0 {
+                        continue;
+                    }
+                    let arow = &mut acc[r * jw..(r + 1) * jw];
+                    // SAFETY: NEON is baseline on aarch64; pointers
+                    // cover jw valid elements.
+                    let done = unsafe {
+                        neon::madd_row(wrow.as_ptr(), ca, arow.as_mut_ptr(),
+                                       jw)
+                    };
+                    for t in done..jw {
+                        arow[t] += ca as i32 * wrow[t] as i32;
+                    }
+                }
+            }
+        }
+        _ => {
+            let mut wrow = vec![0i8; jw];
+            for kk in 0..k {
+                let row = &bytes[kk * stride..(kk + 1) * stride];
+                lut::decode_cols_i8(row, sbits, j0, j1, &mut wrow);
+                scalar_k_row(&wrow, acts, kk, acc);
+            }
+        }
+    }
+}
+
+/// Scalar oracle for one contraction row: `acc[r][·] += ca_r * wrow`.
+/// Skipping `ca == 0` rows is a pure shortcut (adds of zero), so it
+/// cannot perturb parity with the SIMD arms.
+fn scalar_k_row(wrow: &[i8], acts: &QuantActs, kk: usize, acc: &mut [i32]) {
+    let (k, jw) = (acts.k, wrow.len());
+    for r in 0..acts.m {
+        let ca = acts.codes[r * k + kk] as i32;
+        if ca == 0 {
+            continue;
+        }
+        let arow = &mut acc[r * jw..(r + 1) * jw];
+        for (a, &wc) in arow.iter_mut().zip(wrow) {
+            *a += ca * wc as i32;
+        }
+    }
+}
+
+/// Decode one packed-row window to i8 codes, with a SIMD body for the
+/// 4-bit layout (the W4 hot path). Exact: integer decode is the same
+/// bits on every backend (pinned against `lut::decode_cols_i8`).
+fn decode_window_i8(row: &[u8], sbits: u32, j0: usize, j1: usize,
+                    backend: Backend, out: &mut [i8]) {
+    #[cfg(target_arch = "x86_64")]
+    if backend == Backend::Avx2 && sbits == 4 {
+        let mut j = j0;
+        let mut o = 0usize;
+        if j < j1 && (j & 1) == 1 {
+            out[o] = lut::LUT4[row[j >> 1] as usize][1];
+            j += 1;
+            o += 1;
+        }
+        while j + 16 <= j1 {
+            // SAFETY: AVX2 detected by the caller; 8 source bytes and
+            // 16 destination slots are in bounds (j + 16 <= j1 and the
+            // row holds ceil(j1 / 2) packed bytes).
+            unsafe {
+                avx2::codes16_4bit_i8(row.as_ptr().add(j >> 1),
+                                      out.as_mut_ptr().add(o));
+            }
+            j += 16;
+            o += 16;
+        }
+        while j < j1 {
+            out[o] = lut::LUT4[row[j >> 1] as usize][j & 1];
+            j += 1;
+            o += 1;
+        }
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if backend == Backend::Neon && sbits == 4 {
+        let mut j = j0;
+        let mut o = 0usize;
+        if j < j1 && (j & 1) == 1 {
+            out[o] = lut::LUT4[row[j >> 1] as usize][1];
+            j += 1;
+            o += 1;
+        }
+        while j + 16 <= j1 {
+            // SAFETY: NEON is baseline on aarch64; 8 source bytes and
+            // 16 destination slots are in bounds.
+            unsafe {
+                neon::codes16_4bit_i8(row.as_ptr().add(j >> 1),
+                                      out.as_mut_ptr().add(o));
+            }
+            j += 16;
+            o += 16;
+        }
+        while j < j1 {
+            out[o] = lut::LUT4[row[j >> 1] as usize][j & 1];
+            j += 1;
+            o += 1;
+        }
+        return;
+    }
+    let _ = backend;
+    lut::decode_cols_i8(row, sbits, j0, j1, out);
+}
+
+/// Decode the `[j0, j1)` window of one packed row into *unscaled* f32
+/// codes using the active SIMD backend. Returns false when no SIMD body
+/// applies (scalar backend, 2-bit storage) and the caller should keep
+/// its scalar LUT walk. Exact: each output is one int→f32 convert, so
+/// the caller's per-element scale multiply is bitwise the fused scalar
+/// path.
+pub(crate) fn simd_decode_codes_f32(row: &[u8], sbits: u32, j0: usize,
+                                    j1: usize, out: &mut [f32]) -> bool {
+    debug_assert_eq!(out.len(), j1 - j0);
+    #[cfg(target_arch = "x86_64")]
+    if active() == Backend::Avx2 && (sbits == 4 || sbits == 8) {
+        let mut j = j0;
+        let mut o = 0usize;
+        if sbits == 4 && j < j1 && (j & 1) == 1 {
+            out[o] = lut::LUT4[row[j >> 1] as usize][1] as f32;
+            j += 1;
+            o += 1;
+        }
+        while j + 16 <= j1 {
+            // SAFETY: AVX2 active; source bytes (8 packed / 16 dense)
+            // and 16 output slots are in bounds.
+            unsafe {
+                if sbits == 4 {
+                    avx2::codes16_4bit_f32(row.as_ptr().add(j >> 1),
+                                           out.as_mut_ptr().add(o));
+                } else {
+                    avx2::codes16_8bit_f32(row.as_ptr().add(j),
+                                           out.as_mut_ptr().add(o));
+                }
+            }
+            j += 16;
+            o += 16;
+        }
+        while j < j1 {
+            out[o] = if sbits == 4 {
+                lut::LUT4[row[j >> 1] as usize][j & 1] as f32
+            } else {
+                (row[j] as i8) as f32
+            };
+            j += 1;
+            o += 1;
+        }
+        return true;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if active() == Backend::Neon && (sbits == 4 || sbits == 8) {
+        let mut j = j0;
+        let mut o = 0usize;
+        if sbits == 4 && j < j1 && (j & 1) == 1 {
+            out[o] = lut::LUT4[row[j >> 1] as usize][1] as f32;
+            j += 1;
+            o += 1;
+        }
+        while j + 16 <= j1 {
+            // SAFETY: NEON is baseline on aarch64; source bytes and 16
+            // output slots are in bounds.
+            unsafe {
+                if sbits == 4 {
+                    neon::codes16_4bit_f32(row.as_ptr().add(j >> 1),
+                                           out.as_mut_ptr().add(o));
+                } else {
+                    neon::codes16_8bit_f32(row.as_ptr().add(j),
+                                           out.as_mut_ptr().add(o));
+                }
+            }
+            j += 16;
+            o += 16;
+        }
+        while j < j1 {
+            out[o] = if sbits == 4 {
+                lut::LUT4[row[j >> 1] as usize][j & 1] as f32
+            } else {
+                (row[j] as i8) as f32
+            };
+            j += 1;
+            o += 1;
+        }
+        return true;
+    }
+    let _ = (row, sbits, j0, j1, out);
+    false
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Decode 8 packed bytes into 16 sign-extended 4-bit codes in field
+    /// order (low nibble first): mask the two nibble planes, interleave
+    /// them byte-wise, then sign-extend via `(x ^ 8) - 8`.
+    ///
+    /// # Safety
+    /// Requires AVX2; `src` must have 8 readable bytes, `dst` 16
+    /// writable lanes.
+    #[target_feature(enable = "avx2")]
+    unsafe fn decode16_4bit(src: *const u8) -> __m128i {
+        unsafe {
+            let v = _mm_loadl_epi64(src as *const __m128i);
+            let mask = _mm_set1_epi8(0x0F);
+            let lo = _mm_and_si128(v, mask);
+            let hi = _mm_and_si128(_mm_srli_epi16::<4>(v), mask);
+            let codes = _mm_unpacklo_epi8(lo, hi);
+            let k8 = _mm_set1_epi8(8);
+            _mm_sub_epi8(_mm_xor_si128(codes, k8), k8)
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2; 8 readable source bytes, 16 writable i8 lanes.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn codes16_4bit_i8(src: *const u8, dst: *mut i8) {
+        unsafe {
+            let s = decode16_4bit(src);
+            _mm_storeu_si128(dst as *mut __m128i, s);
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2; 8 readable source bytes, 16 writable f32 lanes.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn codes16_4bit_f32(src: *const u8, dst: *mut f32) {
+        unsafe {
+            let s = decode16_4bit(src);
+            let f0 = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(s));
+            let s_hi = _mm_srli_si128::<8>(s);
+            let f1 = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(s_hi));
+            _mm256_storeu_ps(dst, f0);
+            _mm256_storeu_ps(dst.add(8), f1);
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2; 16 readable source bytes, 16 writable f32 lanes.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn codes16_8bit_f32(src: *const u8, dst: *mut f32) {
+        unsafe {
+            let v = _mm_loadu_si128(src as *const __m128i);
+            let f0 = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(v));
+            let v_hi = _mm_srli_si128::<8>(v);
+            let f1 = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(v_hi));
+            _mm256_storeu_ps(dst, f0);
+            _mm256_storeu_ps(dst.add(8), f1);
+        }
+    }
+
+    /// `acc[t] += ca0 * w0[t] + ca1 * w1[t]` for the 16-aligned column
+    /// prefix; returns how many columns were handled (the caller
+    /// finishes the tail in scalar). Interleaves the two weight rows
+    /// byte-wise so one `vpmaddwd` against the broadcast [ca0, ca1]
+    /// pair yields both products summed per column — exact in i16/i32
+    /// (|code| <= 128 bounds each product by 2^14, the pair sum by
+    /// 2^15).
+    ///
+    /// # Safety
+    /// Requires AVX2; `w0`/`w1`/`acc` must each have `jw` valid lanes.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn madd_pair(w0: *const i8, w1: *const i8, ca0: i16,
+                            ca1: i16, acc: *mut i32, jw: usize) -> usize {
+        unsafe {
+            let pair_bits =
+                ((ca1 as u16 as u32) << 16) | (ca0 as u16 as u32);
+            let pair = _mm256_set1_epi32(pair_bits as i32);
+            let mut j = 0usize;
+            while j + 16 <= jw {
+                let a = _mm_loadu_si128(w0.add(j) as *const __m128i);
+                let b = _mm_loadu_si128(w1.add(j) as *const __m128i);
+                let lo = _mm256_cvtepi8_epi16(_mm_unpacklo_epi8(a, b));
+                let hi = _mm256_cvtepi8_epi16(_mm_unpackhi_epi8(a, b));
+                let s0 = _mm256_madd_epi16(lo, pair);
+                let s1 = _mm256_madd_epi16(hi, pair);
+                let p0 = acc.add(j) as *mut __m256i;
+                let p1 = acc.add(j + 8) as *mut __m256i;
+                _mm256_storeu_si256(
+                    p0, _mm256_add_epi32(_mm256_loadu_si256(p0), s0));
+                _mm256_storeu_si256(
+                    p1, _mm256_add_epi32(_mm256_loadu_si256(p1), s1));
+                j += 16;
+            }
+            j
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// Decode 8 packed bytes into 16 sign-extended 4-bit codes in field
+    /// order (low nibble first).
+    ///
+    /// # Safety
+    /// `src` must have 8 readable bytes.
+    #[target_feature(enable = "neon")]
+    unsafe fn decode16_4bit(src: *const u8) -> int8x16_t {
+        unsafe {
+            let v = vld1_u8(src);
+            let lo = vand_u8(v, vdup_n_u8(0x0F));
+            let hi = vshr_n_u8::<4>(v);
+            let z0 = vzip1_u8(lo, hi);
+            let z1 = vzip2_u8(lo, hi);
+            let codes = vreinterpretq_s8_u8(vcombine_u8(z0, z1));
+            let k8 = vdupq_n_s8(8);
+            vsubq_s8(veorq_s8(codes, k8), k8)
+        }
+    }
+
+    /// # Safety
+    /// 8 readable source bytes, 16 writable i8 lanes.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn codes16_4bit_i8(src: *const u8, dst: *mut i8) {
+        unsafe {
+            vst1q_s8(dst, decode16_4bit(src));
+        }
+    }
+
+    /// # Safety
+    /// 8 readable source bytes, 16 writable f32 lanes.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn codes16_4bit_f32(src: *const u8, dst: *mut f32) {
+        unsafe {
+            let s = decode16_4bit(src);
+            store16_f32(s, dst);
+        }
+    }
+
+    /// # Safety
+    /// 16 readable source bytes, 16 writable f32 lanes.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn codes16_8bit_f32(src: *const u8, dst: *mut f32) {
+        unsafe {
+            let v = vld1q_s8(src as *const i8);
+            store16_f32(v, dst);
+        }
+    }
+
+    /// # Safety
+    /// `dst` must have 16 writable f32 lanes.
+    #[target_feature(enable = "neon")]
+    unsafe fn store16_f32(codes: int8x16_t, dst: *mut f32) {
+        unsafe {
+            let w0 = vmovl_s8(vget_low_s8(codes));
+            let w1 = vmovl_s8(vget_high_s8(codes));
+            vst1q_f32(dst, vcvtq_f32_s32(vmovl_s16(vget_low_s16(w0))));
+            vst1q_f32(dst.add(4),
+                      vcvtq_f32_s32(vmovl_s16(vget_high_s16(w0))));
+            vst1q_f32(dst.add(8),
+                      vcvtq_f32_s32(vmovl_s16(vget_low_s16(w1))));
+            vst1q_f32(dst.add(12),
+                      vcvtq_f32_s32(vmovl_s16(vget_high_s16(w1))));
+        }
+    }
+
+    /// `acc[t] += ca * w[t]` for the 16-aligned column prefix; returns
+    /// how many columns were handled. `smull` keeps every single
+    /// product exact in i16 (|product| <= 2^14), then widening adds
+    /// accumulate in i32.
+    ///
+    /// # Safety
+    /// `w`/`acc` must each have `jw` valid lanes.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn madd_row(w: *const i8, ca: i8, acc: *mut i32,
+                           jw: usize) -> usize {
+        unsafe {
+            let cav = vdup_n_s8(ca);
+            let mut j = 0usize;
+            while j + 16 <= jw {
+                let v = vld1q_s8(w.add(j));
+                let p0 = vmull_s8(vget_low_s8(v), cav);
+                let p1 = vmull_s8(vget_high_s8(v), cav);
+                let a0 = vaddw_s16(vld1q_s32(acc.add(j)),
+                                   vget_low_s16(p0));
+                let a1 = vaddw_s16(vld1q_s32(acc.add(j + 4)),
+                                   vget_high_s16(p0));
+                let a2 = vaddw_s16(vld1q_s32(acc.add(j + 8)),
+                                   vget_low_s16(p1));
+                let a3 = vaddw_s16(vld1q_s32(acc.add(j + 12)),
+                                   vget_high_s16(p1));
+                vst1q_s32(acc.add(j), a0);
+                vst1q_s32(acc.add(j + 4), a1);
+                vst1q_s32(acc.add(j + 8), a2);
+                vst1q_s32(acc.add(j + 12), a3);
+                j += 16;
+            }
+            j
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::qtensor::{encode, row_stride, storage_bits};
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn pack_rows(codes: &[Vec<i32>], bits: u32) -> (Vec<u8>, usize, u32) {
+        let sbits = storage_bits(bits).unwrap();
+        let cols = codes[0].len();
+        let stride = row_stride(cols, bits);
+        let mut bytes = vec![0u8; codes.len() * stride];
+        for (kk, row) in codes.iter().enumerate() {
+            let out = &mut bytes[kk * stride..(kk + 1) * stride];
+            for (j, &c) in row.iter().enumerate() {
+                encode(out, sbits, j, c);
+            }
+        }
+        (bytes, stride, sbits)
+    }
+
+    fn random_codes(rng: &mut Pcg, n: usize, bits: u32) -> Vec<i32> {
+        let lv = (1i32 << (bits - 1)) - 1;
+        (0..n).map(|_| rng.below((2 * lv + 2) as u64) as i32 - lv - 1)
+            .collect()
+    }
+
+    fn random_acts(rng: &mut Pcg, m: usize, k: usize) -> QuantActs {
+        // Full i8 range including -128 to stress the SIMD bodies harder
+        // than the runtime tap (which never emits below -(levels+1)).
+        let codes: Vec<i8> =
+            (0..m * k).map(|_| rng.below(256) as i32 as u8 as i8).collect();
+        let scales: Vec<f32> =
+            (0..m).map(|r| 0.01 + 0.1 * r as f32).collect();
+        QuantActs::from_parts(codes, scales, m, k)
+    }
+
+    /// Plain nested-loop reference, no LUTs, no stripe walk.
+    fn reference(wcodes: &[Vec<i32>], acts: &QuantActs, j0: usize,
+                 j1: usize) -> Vec<i32> {
+        let jw = j1 - j0;
+        let mut acc = vec![0i32; acts.m() * jw];
+        for r in 0..acts.m() {
+            for (kk, wrow) in wcodes.iter().enumerate() {
+                let ca = acts.row_codes(r)[kk] as i32;
+                for t in 0..jw {
+                    acc[r * jw + t] += ca * wrow[j0 + t];
+                }
+            }
+        }
+        acc
+    }
+
+    #[test]
+    fn scalar_stripe_matches_reference_across_windows() {
+        let mut rng = Pcg::new(11, 3);
+        for bits in [2u32, 3, 4, 5, 8] {
+            for (m, k, n) in [(1usize, 7usize, 33usize), (3, 8, 19),
+                              (4, 5, 48)] {
+                let wcodes: Vec<Vec<i32>> =
+                    (0..k).map(|_| random_codes(&mut rng, n, bits))
+                    .collect();
+                let (bytes, stride, sbits) = pack_rows(&wcodes, bits);
+                let acts = random_acts(&mut rng, m, k);
+                for (j0, j1) in [(0, n), (1, n), (0, n - 1), (3, n / 2 + 3),
+                                 (n - 1, n)] {
+                    let mut acc = vec![0i32; m * (j1 - j0)];
+                    accumulate_stripe(&bytes, stride, sbits, k, j0, j1,
+                                      &acts, Backend::Scalar, &mut acc);
+                    assert_eq!(acc, reference(&wcodes, &acts, j0, j1),
+                               "bits {bits} m {m} k {k} [{j0},{j1})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_stripe_is_bitwise_scalar() {
+        let be = detect();
+        if be == Backend::Scalar {
+            eprintln!("no SIMD backend on this host; skipping");
+            return;
+        }
+        let mut rng = Pcg::new(29, 3);
+        for bits in [2u32, 4, 8] {
+            // Shapes chosen to hit the 16-wide body, the column tail,
+            // odd k (AVX2 pair remainder), and mid-byte windows.
+            for (m, k, n) in [(1usize, 1usize, 16usize), (1, 9, 61),
+                              (2, 16, 40), (5, 7, 17), (3, 31, 129)] {
+                let wcodes: Vec<Vec<i32>> =
+                    (0..k).map(|_| random_codes(&mut rng, n, bits))
+                    .collect();
+                let (bytes, stride, sbits) = pack_rows(&wcodes, bits);
+                let acts = random_acts(&mut rng, m, k);
+                for (j0, j1) in [(0, n), (1, n), (0, n - 1),
+                                 (n / 3, n / 3 + 16.min(n - n / 3))] {
+                    let jw = j1 - j0;
+                    let mut a = vec![0i32; m * jw];
+                    let mut b = vec![0i32; m * jw];
+                    accumulate_stripe(&bytes, stride, sbits, k, j0, j1,
+                                      &acts, Backend::Scalar, &mut a);
+                    accumulate_stripe(&bytes, stride, sbits, k, j0, j1,
+                                      &acts, be, &mut b);
+                    assert_eq!(a, b,
+                               "bits {bits} m {m} k {k} [{j0},{j1})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_stripe_survives_extreme_codes() {
+        let be = detect();
+        if be == Backend::Scalar {
+            return;
+        }
+        // All-(-128) against all-(-128): the worst-case magnitude for
+        // the i16 intermediates in both SIMD schemes.
+        let k = 33usize;
+        let n = 37usize;
+        let wcodes: Vec<Vec<i32>> = (0..k).map(|_| vec![-128i32; n])
+            .collect();
+        let (bytes, stride, sbits) = pack_rows(&wcodes, 8);
+        let acts = QuantActs::from_parts(vec![-128i8; 2 * k],
+                                         vec![1.0, 1.0], 2, k);
+        let mut a = vec![0i32; 2 * n];
+        let mut b = vec![0i32; 2 * n];
+        accumulate_stripe(&bytes, stride, sbits, k, 0, n, &acts,
+                          Backend::Scalar, &mut a);
+        accumulate_stripe(&bytes, stride, sbits, k, 0, n, &acts, be,
+                          &mut b);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&v| v == 128 * 128 * k as i32));
+    }
+
+    #[test]
+    fn decode_window_i8_matches_lut_on_every_backend() {
+        let bytes: Vec<u8> = (0..40).map(|i| (29 * i + 3) as u8).collect();
+        for sbits in [2u32, 4, 8] {
+            let cols = bytes.len() * (8 / sbits as usize);
+            for be in [Backend::Scalar, detect()] {
+                for (j0, j1) in [(0, cols), (1, cols), (5, cols - 2),
+                                 (0, 15), (17, 33)] {
+                    let mut want = vec![0i8; j1 - j0];
+                    lut::decode_cols_i8(&bytes, sbits, j0, j1, &mut want);
+                    let mut got = vec![0i8; j1 - j0];
+                    decode_window_i8(&bytes, sbits, j0, j1, be, &mut got);
+                    assert_eq!(got, want,
+                               "{sbits}b {be:?} [{j0},{j1})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mode_parsing_and_labels() {
+        assert_eq!(IntMode::parse("off"), Some(IntMode::Off));
+        assert_eq!(IntMode::parse("Scalar"), Some(IntMode::Scalar));
+        assert_eq!(IntMode::parse("AUTO"), Some(IntMode::Auto));
+        assert_eq!(IntMode::parse("on"), Some(IntMode::Auto));
+        assert_eq!(IntMode::parse("bogus"), None);
+        assert_eq!(IntMode::default(), IntMode::Off);
+        assert_eq!(IntMode::Off.backend(), None);
+        assert_eq!(IntMode::Scalar.backend(), Some(Backend::Scalar));
+        assert!(IntMode::Auto.backend().is_some());
+        assert_eq!(Backend::Scalar.label(), "scalar");
+    }
+
+    #[test]
+    fn describe_names_the_active_backend() {
+        let d = describe();
+        assert!(d.contains("backend="), "{d}");
+        assert!(d.contains(std::env::consts::ARCH), "{d}");
+    }
+}

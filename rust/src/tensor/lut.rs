@@ -117,12 +117,66 @@ fn dequant_with<S: Fn(usize) -> f32>(row: &[u8], sbits: u32, j0: usize,
     }
 }
 
+/// Decode fields `[j0, j1)` of one packed row into raw sign-extended i8
+/// codes (no scale) — the integer-kernel decode
+/// ([`super::intkern::accumulate_stripe`]). Same byte-granular
+/// head/body/tail walk as [`dequant_cols`]; exact by construction.
+pub fn decode_cols_i8(row: &[u8], sbits: u32, j0: usize, j1: usize,
+                      out: &mut [i8]) {
+    debug_assert_eq!(out.len(), j1 - j0);
+    match sbits {
+        8 => {
+            for (o, j) in out.iter_mut().zip(j0..j1) {
+                *o = row[j] as i8;
+            }
+        }
+        4 => {
+            let mut j = j0;
+            let mut o = 0usize;
+            if j < j1 && (j & 1) == 1 {
+                out[o] = LUT4[row[j >> 1] as usize][1];
+                j += 1;
+                o += 1;
+            }
+            while j + 2 <= j1 {
+                let c = &LUT4[row[j >> 1] as usize];
+                out[o] = c[0];
+                out[o + 1] = c[1];
+                j += 2;
+                o += 2;
+            }
+            if j < j1 {
+                out[o] = LUT4[row[j >> 1] as usize][0];
+            }
+        }
+        2 => {
+            let mut j = j0;
+            let mut o = 0usize;
+            while j < j1 {
+                out[o] = LUT2[row[j >> 2] as usize][j & 3];
+                j += 1;
+                o += 1;
+            }
+        }
+        _ => unreachable!("no LUT layout for {sbits}-bit storage"),
+    }
+}
+
 /// Dequantize fields `[j0, j1)` of one packed row with per-column
 /// scales (`out[t] = code(j0 + t) as f32 * scales[j0 + t]`) — the
-/// weight-tensor variant ([`super::qtensor::QTensor`] kernels).
+/// weight-tensor variant ([`super::qtensor::QTensor`] kernels). When
+/// the active SIMD backend has a body for this storage width, codes are
+/// decoded vector-wide and scaled in a second pass — bitwise identical
+/// (same integer codes, same single f32 multiply per element).
 #[inline]
 pub fn dequant_cols(row: &[u8], sbits: u32, scales: &[f32], j0: usize,
                     j1: usize, out: &mut [f32]) {
+    if super::intkern::simd_decode_codes_f32(row, sbits, j0, j1, out) {
+        for (o, &s) in out.iter_mut().zip(&scales[j0..j1]) {
+            *o *= s;
+        }
+        return;
+    }
     dequant_with(row, sbits, j0, j1, out, |j| scales[j]);
 }
 
@@ -131,6 +185,12 @@ pub fn dequant_cols(row: &[u8], sbits: u32, scales: &[f32], j0: usize,
 #[inline]
 pub fn dequant_uniform(row: &[u8], sbits: u32, scale: f32, j0: usize,
                        j1: usize, out: &mut [f32]) {
+    if super::intkern::simd_decode_codes_f32(row, sbits, j0, j1, out) {
+        for o in out.iter_mut() {
+            *o *= scale;
+        }
+        return;
+    }
     dequant_with(row, sbits, j0, j1, out, |_| scale);
 }
 
@@ -153,6 +213,25 @@ mod tests {
             }
             assert_eq!((b as u8 as i8) as i32, decode(&row, 8, 0),
                        "8-bit byte {b}");
+        }
+    }
+
+    #[test]
+    fn decode_i8_windows_match_per_element_decode() {
+        let bytes: Vec<u8> = (0..23).map(|i| (41 * i + 7) as u8).collect();
+        for sbits in [2u32, 4, 8] {
+            let cpb = (8 / sbits) as usize;
+            let cols = bytes.len() * cpb;
+            for j0 in 0..cols {
+                for j1 in j0..=cols {
+                    let mut out = vec![0i8; j1 - j0];
+                    decode_cols_i8(&bytes, sbits, j0, j1, &mut out);
+                    for (t, j) in (j0..j1).enumerate() {
+                        assert_eq!(out[t] as i32, decode(&bytes, sbits, j),
+                                   "{sbits}b [{j0},{j1}) @{j}");
+                    }
+                }
+            }
         }
     }
 

@@ -7,6 +7,7 @@
 //! the packed low-bit storage + fused dequant kernels the PTQ pipeline
 //! deploys (DESIGN.md §7).
 
+pub mod intkern;
 pub mod linalg;
 pub mod lut;
 pub mod par;

@@ -37,7 +37,7 @@ use std::fmt;
 
 use crate::util::threadpool::ThreadPool;
 
-use super::{linalg, lut, par, Tensor};
+use super::{intkern, linalg, lut, par, Tensor};
 
 /// Columns per dequant scratch tile: 256 f32 = 1 KiB per row keeps an
 /// [`RBLOCK`]-row tile sweep (4 KiB of dequantized codes plus the B/x
@@ -671,6 +671,69 @@ impl QTensor {
     pub fn qmatmul_rhs(&self, a: &Tensor) -> Tensor {
         let ops = a.shape()[0] * self.numel();
         self.qmatmul_rhs_with(par::pool_for_ops(ops), a)
+    }
+
+    /// Integer twin of [`Self::qmatmul_rhs_with`]: C = A @ deq(self)
+    /// where A arrives as pre-quantized i8 codes + per-row scales
+    /// ([`intkern::QuantActs`], emitted once per activation tap). Each
+    /// output element is one exact i8×i8→i32 dot product rescaled once
+    /// by `act_scale × weight_scale` — no per-element weight dequant.
+    /// Same column-stripe partitioning as the f32 kernel, and the i32
+    /// sums are backend- and stripe-exact, so results are bit-identical
+    /// across Scalar/AVX2/NEON, worker counts, and stripe boundaries
+    /// (DESIGN.md §11). Only defined for packed storage.
+    pub fn qmatmul_rhs_int_with(&self, pool: Option<&ThreadPool>,
+                                acts: &intkern::QuantActs,
+                                backend: intkern::Backend) -> Tensor {
+        let (m, k) = (acts.m(), acts.k());
+        let (k2, n) = (self.rows(), self.cols());
+        assert_eq!(k, k2, "qmatmul_rhs_int [{m}, {k}] @ {:?}", self.shape);
+        let QStorage::Packed(bytes) = &self.storage else {
+            panic!("qmatmul_rhs_int needs packed storage");
+        };
+        let (stride, sbits) = (row_stride(n, self.bits), self.sbits());
+        let stripe_kernel = |j0: usize, j1: usize, c: &mut [f32]| {
+            let jw = j1 - j0;
+            let mut acc = vec![0i32; m * jw];
+            intkern::accumulate_stripe(bytes, stride, sbits, k, j0, j1,
+                                       acts, backend, &mut acc);
+            for r in 0..m {
+                let sa = acts.scale(r);
+                let arow = &acc[r * jw..(r + 1) * jw];
+                let crow = &mut c[r * jw..(r + 1) * jw];
+                for ((cv, &av), &sw) in crow.iter_mut().zip(arow)
+                    .zip(&self.scales[j0..j1])
+                {
+                    *cv = av as f32 * (sa * sw);
+                }
+            }
+        };
+        let stripes: Vec<(usize, usize)> = match pool {
+            Some(p) if n > 1 => {
+                let sw = n.div_ceil(p.n_workers().max(1) * 4).max(1);
+                (0..n.div_ceil(sw))
+                    .map(|si| (si * sw, ((si + 1) * sw).min(n)))
+                    .collect()
+            }
+            _ => vec![(0, n)],
+        };
+        let parts: Vec<Vec<f32>> = par::par_map(
+            if stripes.len() > 1 { pool } else { None }, &stripes,
+            |_si, &(j0, j1)| {
+                let mut c = vec![0.0f32; m * (j1 - j0)];
+                stripe_kernel(j0, j1, &mut c);
+                c
+            });
+        let mut c = Tensor::zeros(&[m, n]);
+        let cd = c.data_mut();
+        for (&(j0, j1), part) in stripes.iter().zip(&parts) {
+            let jw = j1 - j0;
+            for r in 0..m {
+                cd[r * n + j0..r * n + j1]
+                    .copy_from_slice(&part[r * jw..(r + 1) * jw]);
+            }
+        }
+        c
     }
 }
 

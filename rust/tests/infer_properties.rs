@@ -8,6 +8,7 @@ use osp::data::grammar::Grammar;
 use osp::eval::tasks;
 use osp::infer::engine::generate;
 use osp::infer::{DecodeParams, InferConfig, InferModel};
+use osp::tensor::intkern::IntMode;
 use osp::util::prop;
 use osp::util::rng::Pcg;
 use osp::util::threadpool::ThreadPool;
@@ -115,6 +116,52 @@ fn generation_consistency_across_table2_configs() {
             assert_eq!(rep.tokens, 3 * 6);
         }
     }
+}
+
+/// End-to-end integer-kernel parity (DESIGN.md §11): with the integer
+/// activation path enabled, `IntMode::Auto` (detected SIMD) and
+/// `IntMode::Scalar` (integer oracle) decode bit-identical greedy
+/// streams — serially and across worker counts 1/2/8.
+/// `InferModel::synthetic(..).quantized(4)` is deterministic, so two
+/// builds from one seed are the same model.
+#[test]
+fn int_simd_and_scalar_decode_bit_identical() {
+    prop::check("int_simd_vs_scalar_decode", 4, 0x147C0DE, case,
+                |(cfg, c)| {
+        let build = |mode: IntMode| {
+            InferModel::synthetic(cfg, c.seed)
+                .quantized(4)
+                .with_int_mode(mode)
+        };
+        let scalar_m = build(IntMode::Scalar);
+        let auto_m = build(IntMode::Auto);
+        let params = DecodeParams::greedy(4, 4, c.prompts.len());
+        let want = generate(&scalar_m, &c.prompts, 6, params, None)
+            .unwrap();
+        let got = generate(&auto_m, &c.prompts, 6, params, None)
+            .unwrap();
+        if got != want {
+            return Err(format!("auto {got:?} != scalar int {want:?}"));
+        }
+        for nw in WORKER_COUNTS {
+            let pool = ThreadPool::new(nw, 8 * nw.max(4));
+            let par = generate(&auto_m, &c.prompts, 6, params,
+                               Some(&pool))
+                .unwrap();
+            if par != want {
+                return Err(format!(
+                    "{nw} workers: auto {par:?} != scalar int serial"));
+            }
+            let spar = generate(&scalar_m, &c.prompts, 6, params,
+                                Some(&pool))
+                .unwrap();
+            if spar != want {
+                return Err(format!(
+                    "{nw} workers: scalar int par != serial"));
+            }
+        }
+        Ok(())
+    });
 }
 
 /// Streams are independent of scheduler batch composition: decoding

@@ -13,6 +13,7 @@ use osp::model::ops::{fake_quant_row, norm_row, rope_in_place, silu,
                       softmax_in_place};
 use osp::model::{InferConfig, InferModel, LogitsMode, SeqBlock};
 use osp::quant::rtn::quantize_per_channel_q;
+use osp::tensor::intkern::{self, Backend, IntMode};
 use osp::tensor::{par, Tensor};
 use osp::util::rng::Pcg;
 
@@ -489,6 +490,56 @@ fn block_dequant_attention_matches_elementwise_reference() {
             assert_eq!(dense_mix, ref_mix, "{bits}b q{q} value mix");
         }
     }
+}
+
+/// The integer activation path (DESIGN.md §11): `IntMode::Auto` (the
+/// detected SIMD backend) and `IntMode::Scalar` (the integer oracle)
+/// produce bit-identical logits and KV caches through the full block
+/// forward, the int forward is prefill-chunk invariant, and with
+/// `a_bits = 16` the int path disengages (no i8 grid), matching the
+/// default `Off` model bitwise.
+#[test]
+fn int_mode_auto_matches_scalar_and_stays_chunk_invariant() {
+    let mut rng = Pcg::new(0x1417, 6);
+    let tokens = random_tokens(&mut rng, S);
+    // build_models(seed, ..) is deterministic: three calls give three
+    // identical models (InferModel is not Clone).
+    let build = |mode: IntMode| {
+        let (_p, model, _rm) = build_models(77, 4);
+        model.with_int_mode(mode)
+    };
+    let m_scalar = build(IntMode::Scalar);
+    assert_eq!(m_scalar.int_kernel(4), Some(Backend::Scalar));
+    assert_eq!(m_scalar.int_kernel(16), None, "A16 has no i8 grid");
+    let mut c_scalar = m_scalar.new_cache(4);
+    let base = chunked_logits(&m_scalar, &tokens, &mut c_scalar, 4, S);
+    // Auto (whatever backend this host detects) == scalar, bitwise —
+    // logits and cache contents.
+    let m_auto = build(IntMode::Auto);
+    assert_eq!(m_auto.int_kernel(4), Some(intkern::active()));
+    let mut c_auto = m_auto.new_cache(4);
+    let got = chunked_logits(&m_auto, &tokens, &mut c_auto, 4, S);
+    assert_eq!(got.data(), base.data(),
+               "auto ({}) != scalar int logits",
+               intkern::active().label());
+    assert_caches_equal(&c_auto, &c_scalar, "auto vs scalar int");
+    // Prefill-chunk invariance holds on the int path too.
+    for chunk in [1usize, 5, 64] {
+        let mut c = m_scalar.new_cache(4);
+        let got = chunked_logits(&m_scalar, &tokens, &mut c, 4, chunk);
+        assert_eq!(got.data(), base.data(), "int chunk {chunk}: logits");
+        assert_caches_equal(&c, &c_scalar,
+                            &format!("int chunk {chunk}"));
+    }
+    // At A16 the grid is not i8-representable: the int-mode model must
+    // take the plain f32 path and match the Off model exactly.
+    let m_off = build(IntMode::Off);
+    let mut c16_int = m_scalar.new_cache(16);
+    let a16_int = chunked_logits(&m_scalar, &tokens, &mut c16_int, 16, S);
+    let mut c16_off = m_off.new_cache(16);
+    let a16_off = chunked_logits(&m_off, &tokens, &mut c16_off, 16, S);
+    assert_eq!(a16_int.data(), a16_off.data(), "A16 int == off");
+    assert_caches_equal(&c16_int, &c16_off, "A16 int vs off");
 }
 
 /// Rejection paths: malformed inputs surface as `Err` at every level of

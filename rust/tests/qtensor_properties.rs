@@ -2,11 +2,14 @@
 //! roundtrips, `dequantize()` pinned bit-exactly against in-test copies
 //! of the seed's f32 RTN/GPTQ quantize-dequantize paths, fused
 //! qmatvec/qmatmul kernels pinned against the dense kernels on the
-//! dequantized tensor, and the tiled LUT microkernels pinned against
-//! per-element `decode()` oracles — across odd shapes, bits
-//! {2, 3, 4, 5, 8, 16}, and worker counts 1/2/8.
+//! dequantized tensor, the tiled LUT microkernels pinned against
+//! per-element `decode()` oracles, and the §11 integer rhs kernels
+//! (scalar + detected SIMD backend) pinned against a plain nested-loop
+//! i32 oracle — across odd shapes, bits {2, 3, 4, 5, 8, 16}, and
+//! worker counts 1/2/8.
 
 use osp::quant::{gptq, rtn};
+use osp::tensor::intkern::{self, Backend, QuantActs};
 use osp::tensor::linalg;
 use osp::tensor::par;
 use osp::tensor::qtensor::QTensor;
@@ -383,6 +386,122 @@ fn lut_kernels_match_scalar_oracle_workers_and_bits() {
             }
             Ok(())
         });
+    }
+}
+
+/// Random activation codes spanning the full i8 range (including
+/// -128) plus positive per-row scales.
+fn random_acts(rng: &mut Pcg, m: usize, k: usize) -> QuantActs {
+    let codes: Vec<i8> =
+        (0..m * k).map(|_| rng.below(256) as u8 as i8).collect();
+    let scales: Vec<f32> =
+        (0..m).map(|_| rng.range_f32(0.001, 1.0)).collect();
+    QuantActs::from_parts(codes, scales, m, k)
+}
+
+/// Plain nested-loop oracle for the integer rhs matmul (DESIGN.md
+/// §11): exact i32 accumulation over the full contraction, then ONE
+/// f32 rescale `sum * (act_scale * col_scale)` per output element.
+fn int_rhs_ref(q: &QTensor, acts: &QuantActs) -> Vec<f32> {
+    let (m, k) = (acts.m(), acts.k());
+    let n = q.shape()[1];
+    let mut out = vec![0.0f32; m * n];
+    for r in 0..m {
+        let ca = acts.row_codes(r);
+        for j in 0..n {
+            let mut s = 0i32;
+            for (kk, &c) in ca.iter().enumerate().take(k) {
+                s += c as i32 * q.code_at(kk, j);
+            }
+            out[r * n + j] = s as f32 * (acts.scale(r) * q.scales()[j]);
+        }
+    }
+    out
+}
+
+/// The integer rhs kernels (`qmatmul_rhs_int_with`) are bitwise the
+/// plain nested-loop oracle for every packed bit-width and odd shape;
+/// the detected SIMD backend is bitwise the scalar integer backend;
+/// and serial == parallel for worker counts 1/2/8 (mid-byte column
+/// stripes included — narrow stripes at 8 workers start mid-nibble
+/// for the 2/4-bit layouts).
+#[test]
+fn int_rhs_kernels_match_plain_oracle_workers_and_bits() {
+    let simd = intkern::active();
+    for &nw in &WORKER_COUNTS {
+        let pool = ThreadPool::new(nw, 4 * nw.max(4));
+        prop::check("int rhs kernels == oracle", 16, 0x71 + nw as u64,
+                    |rng| {
+            let (k, n) = odd_dims(rng);
+            let m = 1 + rng.below_usize(9);
+            let bits = LUT_BITS[rng.below_usize(LUT_BITS.len())];
+            let codes = random_codes(rng, k * n, bits);
+            let scales: Vec<f32> =
+                (0..n).map(|_| rng.range_f32(0.01, 2.0)).collect();
+            let q = QTensor::pack(&[k, n], bits, &codes, scales);
+            let acts = random_acts(rng, m, k);
+            (q, acts)
+        }, |(q, acts)| {
+            let want = int_rhs_ref(q, acts);
+            let serial =
+                q.qmatmul_rhs_int_with(None, acts, Backend::Scalar);
+            if serial.data() != want.as_slice() {
+                return Err(format!("scalar int != oracle at {:?} {}b",
+                                   q.shape(), q.bits()));
+            }
+            let parallel =
+                q.qmatmul_rhs_int_with(Some(&pool), acts,
+                                       Backend::Scalar);
+            if parallel.data() != serial.data() {
+                return Err(format!("int par != serial at {:?} \
+                                    ({nw} workers)", q.shape()));
+            }
+            if simd != Backend::Scalar {
+                let sv = q.qmatmul_rhs_int_with(None, acts, simd);
+                if sv.data() != serial.data() {
+                    return Err(format!("{} int != scalar int at {:?} \
+                                        {}b", simd.label(), q.shape(),
+                                       q.bits()));
+                }
+                let svp =
+                    q.qmatmul_rhs_int_with(Some(&pool), acts, simd);
+                if svp.data() != serial.data() {
+                    return Err(format!("{} int par != scalar int at \
+                                        {:?} ({nw} workers)",
+                                       simd.label(), q.shape()));
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+/// A contraction dim crossing the f32 path's KTILE (256) and shapes
+/// off every RBLOCK multiple: the int kernels accumulate straight
+/// through tile boundaries without splitting the i32 sum.
+#[test]
+fn int_rhs_kernels_cross_ktile_boundaries() {
+    let mut rng = Pcg::new(0x72, 0);
+    let simd = intkern::active();
+    for (m, k, n) in [(3usize, 300usize, 20usize), (5, 257, 7),
+                      (1, 512, 33)] {
+        for bits in [4u32, 8] {
+            let codes = random_codes(&mut rng, k * n, bits);
+            let scales: Vec<f32> =
+                (0..n).map(|_| rng.range_f32(0.01, 2.0)).collect();
+            let q = QTensor::pack(&[k, n], bits, &codes, scales);
+            let acts = random_acts(&mut rng, m, k);
+            let want = int_rhs_ref(&q, &acts);
+            let got = q.qmatmul_rhs_int_with(None, &acts,
+                                             Backend::Scalar);
+            assert_eq!(got.data(), want.as_slice(),
+                       "scalar {m}x{k}x{n} {bits}b");
+            if simd != Backend::Scalar {
+                let gs = q.qmatmul_rhs_int_with(None, &acts, simd);
+                assert_eq!(gs.data(), got.data(),
+                           "{} {m}x{k}x{n} {bits}b", simd.label());
+            }
+        }
     }
 }
 
