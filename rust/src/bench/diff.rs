@@ -19,14 +19,19 @@ use anyhow::{anyhow, Result};
 use crate::util::json::Json;
 
 /// Fields that locate a row in the sweep grid. Only the subset present
-/// on a row participates in its key.
-const IDENTITY_FIELDS: [&str; 11] = [
+/// on a row participates in its key. `clients`/`chaos` key the
+/// `BENCH_serve.json` rows: the same serve sweep under a different
+/// client count or fault mix is a different experiment, not a
+/// regression candidate.
+const IDENTITY_FIELDS: [&str; 13] = [
     "op", "phase", "config", "size", "w_bits", "a_bits", "kv_bits", "bits",
-    "batch", "chunk", "prompt_len",
+    "batch", "chunk", "prompt_len", "clients", "chaos",
 ];
 
+/// Lower-is-better metrics: `*_ns_op` kernel timings and the serve
+/// bench's `*_ms` latency percentiles.
 fn is_time_metric(key: &str) -> bool {
-    key.ends_with("_ns_op")
+    key.ends_with("_ns_op") || key.ends_with("_ms")
 }
 
 fn is_rate_metric(key: &str) -> bool {
@@ -258,6 +263,66 @@ mod tests {
             .find(|m| m.metric == "int_scalar_ns_op")
             .expect("int_scalar_ns_op compared");
         assert!((sc.speedup - 1.0).abs() < 1e-12, "{:?}", sc);
+    }
+
+    /// The §12 serve rows: `clients`/`chaos` are identity (a 4-client
+    /// chaos run must not be compared against an 8-client clean run),
+    /// `*_ms` latency percentiles diff as timings (lower = faster),
+    /// and counters like `completed` stay context-only.
+    #[test]
+    fn serve_rows_key_on_clients_and_chaos_and_diff_ms() {
+        assert!(is_time_metric("p99_token_ms"));
+        assert!(is_time_metric("first_token_p50_ms"));
+        assert!(!is_time_metric("wall_secs"));
+        let serve_row = |clients: f64, chaos: &str, p99: f64,
+                         tps: f64| {
+            Json::obj(vec![
+                ("phase", Json::str("serve")),
+                ("config", Json::str("4-4-4")),
+                ("clients", Json::num(clients)),
+                ("chaos", Json::str(chaos)),
+                ("p99_token_ms", Json::num(p99)),
+                ("gen_tokens_per_sec", Json::num(tps)),
+                ("completed", Json::num(30.0)), // context: not compared
+            ])
+        };
+        let old = report(4.0, vec![serve_row(8.0, "default", 20.0,
+                                             500.0)]);
+        let new = report(4.0, vec![serve_row(8.0, "default", 10.0,
+                                             600.0),
+                                   serve_row(16.0, "off", 8.0, 900.0)]);
+        let d = diff_reports(&old, &new).unwrap();
+        assert_eq!(d.only_new.len(), 1, "{:?}", d.only_new);
+        assert!(d.only_new[0].contains("clients=16"), "{:?}",
+                d.only_new);
+        assert!(d.only_new[0].contains("chaos=off"), "{:?}", d.only_new);
+        assert_eq!(d.metrics.len(), 2, "{:?}", d.metrics);
+        for m in &d.metrics {
+            match m.metric.as_str() {
+                "p99_token_ms" => {
+                    assert!((m.speedup - 2.0).abs() < 1e-12, "{m:?}")
+                }
+                "gen_tokens_per_sec" => {
+                    assert!((m.speedup - 1.2).abs() < 1e-12, "{m:?}")
+                }
+                other => panic!("unexpected metric {other}"),
+            }
+        }
+    }
+
+    /// Added/removed rows are informational: a NEW-only artifact (e.g.
+    /// the first `BENCH_serve.json`) produces no comparisons and no
+    /// regressions — the gate must not fail on it.
+    #[test]
+    fn new_only_rows_never_regress() {
+        let old = report(1.0, vec![]);
+        let new = report(1.0, vec![matvec_row(512.0, 4.0, 1000.0,
+                                              100.0)]);
+        let d = diff_reports(&old, &new).unwrap();
+        assert!(d.metrics.is_empty());
+        assert_eq!(d.only_new.len(), 1);
+        assert!(d.only_old.is_empty());
+        assert!(d.regressions(0.0).is_empty());
     }
 
     #[test]

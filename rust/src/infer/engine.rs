@@ -18,6 +18,11 @@
 //! [`DecodeEngine::submit`] validates prompts against the vocab, and the
 //! model layer itself returns `Err` on empty batches or out-of-vocab
 //! tokens — so one malformed request can never kill the serve loop.
+//! [`DecodeEngine::cancel`] evicts a request mid-decode (deadline
+//! expiry, client disconnect — DESIGN.md §12) without disturbing its
+//! batchmates: per-sequence caches and RNGs mean the survivors' streams
+//! are bit-identical to a run where the cancelled request was never
+//! admitted (pinned by `rust/tests/infer_properties.rs`).
 //!
 //! Determinism: a sequence's stream depends only on (model, its own
 //! prompt, decode params, its own sampling RNG) — per-row kernels and
@@ -116,6 +121,9 @@ pub struct DecodeStats {
     pub tokens_generated: u64,
     pub steps: u64,
     pub wall_secs: f64,
+    /// Requests evicted via [`DecodeEngine::cancel`] (deadline expiry or
+    /// client disconnect), queued or active.
+    pub cancelled: u64,
     /// Peak total KV bytes across concurrently-active sequences.
     pub peak_kv_bytes: usize,
     /// Integer-kernel backend the model's linears resolved to for this
@@ -146,6 +154,9 @@ pub struct DecodeEngine<'m, 'p> {
     queue: VecDeque<GenRequest>,
     active: Vec<Active>,
     finished: Vec<GenResult>,
+    /// `(request id, token)` pairs sampled by the most recent step, in
+    /// batch order — the per-token streaming surface `osp serve` reads.
+    emitted: Vec<(usize, i32)>,
     pub stats: DecodeStats,
 }
 
@@ -158,7 +169,8 @@ impl<'m, 'p> DecodeEngine<'m, 'p> {
             ..DecodeStats::default()
         };
         DecodeEngine { model, params, pool, queue: VecDeque::new(),
-                       active: Vec::new(), finished: Vec::new(), stats }
+                       active: Vec::new(), finished: Vec::new(),
+                       emitted: Vec::new(), stats }
     }
 
     /// Enqueue a request (admitted at the next step with a free slot).
@@ -185,6 +197,53 @@ impl<'m, 'p> DecodeEngine<'m, 'p> {
         self.queue.len() + self.active.len()
     }
 
+    /// Sequences currently occupying a batch slot.
+    pub fn n_active(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Requests admitted to the engine but not yet in a batch slot.
+    pub fn n_queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Evict a request wherever it lives — still queued, or active
+    /// mid-decode. Its batch slot and KV cache are freed immediately; no
+    /// [`GenResult`] is produced. Batchmates are untouched: per-sequence
+    /// caches, RNGs, and attention mean the survivors' streams stay
+    /// bit-identical to a run where this request was never admitted.
+    /// Returns false when the id is unknown (already finished or never
+    /// submitted) — cancelling twice is harmless.
+    pub fn cancel(&mut self, id: usize) -> bool {
+        if let Some(i) = self.queue.iter().position(|r| r.id == id) {
+            self.queue.remove(i);
+            self.stats.cancelled += 1;
+            return true;
+        }
+        if let Some(i) = self.active.iter().position(|a| a.id == id) {
+            self.active.remove(i);
+            self.stats.cancelled += 1;
+            return true;
+        }
+        false
+    }
+
+    /// Tokens sampled by the most recent [`DecodeEngine::step`], as
+    /// `(request id, token)` in batch order. Draining is optional —
+    /// the buffer is rebuilt each step — but a streaming serve loop
+    /// calls this after every step to push tokens out as they are
+    /// sampled.
+    pub fn take_emitted(&mut self) -> Vec<(usize, i32)> {
+        std::mem::take(&mut self.emitted)
+    }
+
+    /// Requests that finished since the last drain (unsorted — eviction
+    /// order). [`DecodeEngine::run`] drains the same buffer, so use one
+    /// or the other.
+    pub fn take_finished(&mut self) -> Vec<GenResult> {
+        std::mem::take(&mut self.finished)
+    }
+
     fn admit(&mut self) {
         while self.active.len() < self.params.max_batch {
             let Some(req) = self.queue.pop_front() else { break };
@@ -205,6 +264,7 @@ impl<'m, 'p> DecodeEngine<'m, 'p> {
     /// Returns the number of tokens processed (0 = idle).
     pub fn step(&mut self) -> Result<usize> {
         let t0 = Instant::now();
+        self.emitted.clear();
         self.admit();
         if self.active.is_empty() {
             return Ok(0);
@@ -260,6 +320,7 @@ impl<'m, 'p> DecodeEngine<'m, 'p> {
                         row, self.params.temperature, self.params.top_k,
                         self.params.top_p, &mut a.rng);
                     a.tokens.push(next);
+                    self.emitted.push((a.id, next));
                 }
             }
         }
@@ -432,6 +493,56 @@ mod tests {
         assert_eq!(results.len(), 1);
         assert_eq!(results[0].id, 0);
         assert_eq!(results[0].generated.len(), 2);
+    }
+
+    #[test]
+    fn cancel_frees_slots_queued_and_active() {
+        let m = tiny_model();
+        let mut eng = DecodeEngine::new(&m, DecodeParams::greedy(16, 16, 2),
+                                        None);
+        for i in 0..4 {
+            eng.submit(GenRequest { id: i, prompt: vec![1, 2], max_new: 4 })
+                .unwrap();
+        }
+        eng.step().unwrap();
+        assert_eq!((eng.n_active(), eng.n_queued()), (2, 2));
+        // Cancel one active and one still-queued request.
+        assert!(eng.cancel(0));
+        assert!(eng.cancel(3));
+        assert!(!eng.cancel(0), "double-cancel is a no-op");
+        assert!(!eng.cancel(99), "unknown id is a no-op");
+        assert_eq!((eng.n_active(), eng.n_queued()), (1, 1));
+        let results = eng.run().unwrap();
+        let ids: Vec<usize> = results.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 2]);
+        assert_eq!(eng.stats.cancelled, 2);
+        assert_eq!((eng.n_active(), eng.n_queued()), (0, 0));
+    }
+
+    #[test]
+    fn emitted_tokens_stream_the_finished_results() {
+        let m = tiny_model();
+        let mut eng = DecodeEngine::new(&m, DecodeParams::greedy(16, 16, 2),
+                                        None);
+        for i in 0..2 {
+            eng.submit(GenRequest { id: i, prompt: vec![1, 2 + i as i32],
+                                    max_new: 3 })
+                .unwrap();
+        }
+        let mut streams = vec![Vec::new(), Vec::new()];
+        while eng.n_pending() > 0 {
+            eng.step().unwrap();
+            for (id, tok) in eng.take_emitted() {
+                streams[id].push(tok);
+            }
+        }
+        let mut fin = eng.take_finished();
+        fin.sort_by_key(|r| r.id);
+        assert_eq!(fin.len(), 2);
+        for (r, s) in fin.iter().zip(&streams) {
+            assert_eq!(&r.generated, s,
+                       "per-step emission must equal the final stream");
+        }
     }
 
     #[test]

@@ -26,6 +26,9 @@
 //!   (DESIGN.md §9).
 //! * [`infer`] — the continuous-batching decode scheduler with chunked
 //!   prefill on top of [`model`] (DESIGN.md §8).
+//! * [`serve`] — the fault-tolerant streaming HTTP front-end around
+//!   [`infer`]: std-only threads + `std::net`, bounded admission,
+//!   deadlines, cancellation, chaos testing (DESIGN.md §12).
 //! * [`eval`] — perplexity and the 10-task synthetic benchmark suite on
 //!   both the engine and engine-free host paths, plus attention-sink
 //!   analysis.
@@ -46,5 +49,6 @@ pub mod model;
 pub mod quant;
 pub mod repro;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;

@@ -8,6 +8,8 @@
 //!   quantize   apply a PTQ recipe to a checkpoint and report perplexity
 //!   eval       engine-free host evaluation straight off packed weights
 //!   generate   autoregressive decode on the host model layer
+//!   serve      streaming HTTP front-end on the decode engine
+//!   serve-load chaos-capable load generator against a running serve
 //!   serve-bench  decode + chunked-prefill throughput sweeps
 //!   bench-diff  per-row speedup diff of two bench JSON artifacts
 //!   simd-info  detected CPU features + integer-kernel backend
@@ -33,6 +35,9 @@ use osp::infer::{engine as decode, DecodeEngine, DecodeParams, GenRequest,
 use osp::quant::{self, PtqConfig, Rotation, WeightMethod};
 use osp::repro::{self, Effort};
 use osp::runtime::{Engine, Manifest};
+use osp::serve::chaos::ChaosSpec;
+use osp::serve::load::{self as serve_load, LoadOpts};
+use osp::serve::{ServeOpts, Server};
 use osp::tensor::{intkern, par};
 use osp::util::cli::Args;
 use osp::util::json::Json;
@@ -81,6 +86,28 @@ USAGE: osp <subcommand> [flags]
                                     integer streams (when --int is
                                     active), then packed f32 vs the
                                     dense-f32 twin
+  serve      streaming HTTP/1.1 front-end on the decode engine:
+             POST /generate (chunked NDJSON token stream), GET /metrics,
+             GET /healthz, POST /admin/drain (graceful shutdown)
+             --packed FILE | --ckpt DIR | --synthetic  (as generate)
+             [--addr HOST:PORT]      default 127.0.0.1:8080 (port 0 =
+                                     ephemeral, printed at startup)
+             [--max-batch N] [--queue-cap N]  admission bound; overflow
+                                     is rejected 503 + Retry-After
+             [--a-bits N] [--kv-bits N] [--prefill-chunk N] [--seed N]
+             [--temperature F] [--top-k N] [--top-p F]
+             [--max-new-cap N] [--timeout-ms N] [--timeout-cap-ms N]
+             [--header-timeout-ms N] [--int off|scalar|auto]
+  serve-load built-in load generator + chaos harness for osp serve
+             [--addr HOST:PORT] [--clients N] [--requests N per client]
+             [--prompt-len N] [--max-new N] [--timeout-ms N] [--seed N]
+             [--chaos SPEC]          off|default|[preset,]k=v,... with
+                                     keys abort/delay/oversize/malformed/
+                                     slowloris/tiny_deadline (probs),
+                                     seed/delay_ms/hold_ms
+             [--json [FILE]]         write BENCH_serve.json (diffable
+                                     with osp bench-diff)
+             [--drain true]          POST /admin/drain afterwards
   serve-bench  sustained decode + chunked-prefill throughput on a
              synthetic model across the Table-2 bit configs
              [--batches 1,8,32] [--prompt-len N] [--max-new N]
@@ -401,11 +428,38 @@ fn cmd_generate(args: &Args) -> Result<()> {
     for (i, p) in prompts.iter().enumerate() {
         eng.submit(GenRequest { id: i, prompt: p.clone(), max_new })?;
     }
-    let results = eng.run()?;
-    for r in &results {
-        println!("[{}] prompt {:?} -> {:?}", r.id, prompts[r.id],
-                 r.generated);
+    // Stream results as they finish instead of eng.run(): writing
+    // through the io::Write path (println! panics on EPIPE) lets a
+    // closed stdout — `osp generate | head` — stop the decode early
+    // and exit 0 instead of dying with a broken-pipe panic.
+    let mut results = Vec::new();
+    {
+        use std::io::Write;
+        let stdout = std::io::stdout();
+        let mut out = stdout.lock();
+        let mut broken = false;
+        'decode: while eng.n_pending() > 0 {
+            eng.step()?;
+            for r in eng.take_finished() {
+                let wrote = writeln!(out, "[{}] prompt {:?} -> {:?}",
+                                     r.id, prompts[r.id], r.generated);
+                results.push(r);
+                if let Err(e) = wrote {
+                    if e.kind() == std::io::ErrorKind::BrokenPipe {
+                        broken = true;
+                        break 'decode;
+                    }
+                    return Err(e.into());
+                }
+            }
+        }
+        if broken || out.flush().is_err() {
+            // Reader went away: stop decoding, exit cleanly. (The
+            // stats println below would EPIPE-panic on a dead pipe.)
+            return Ok(());
+        }
     }
+    results.sort_by_key(|r| r.id);
     let st = eng.stats;
     println!(
         "{} sequences, {} tokens ({} prefill) in {:.2}s: {:.0} tok/s \
@@ -688,8 +742,15 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
         println!("note: {note}");
     }
     if !report.only_old.is_empty() || !report.only_new.is_empty() {
-        println!("unmatched rows: {} only in OLD, {} only in NEW",
+        println!("unmatched rows (informational, never fatal): \
+                  {} only in OLD, {} only in NEW",
                  report.only_old.len(), report.only_new.len());
+        for key in &report.only_old {
+            println!("  - removed (only in OLD): {key}");
+        }
+        for key in &report.only_new {
+            println!("  + added   (only in NEW): {key}");
+        }
     }
     let regs = report.regressions(threshold);
     if !regs.is_empty() {
@@ -704,6 +765,120 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
     }
     println!("no regressions beyond {:.0}% ({} metrics compared)",
              100.0 * threshold, report.metrics.len());
+    Ok(())
+}
+
+/// `osp serve`: spawn the streaming HTTP front-end on the resolved
+/// model and block until a drain (`POST /admin/drain`) completes.
+/// Exits 0 after in-flight sequences finish — the graceful path.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut model = generate_model(args)?;
+    model.set_int_mode(int_mode_arg(args)?);
+    let defaults = ServeOpts::default();
+    let opts = ServeOpts {
+        addr: args.str_or("addr", &defaults.addr),
+        max_batch: args.usize_or("max-batch", defaults.max_batch)
+            .max(1),
+        queue_cap: args.usize_or("queue-cap", defaults.queue_cap)
+            .max(1),
+        a_bits: bits_arg(args, "a-bits", 4)?,
+        kv_bits: bits_arg(args, "kv-bits", 4)?,
+        prefill_chunk: args
+            .usize_or("prefill-chunk", decode::DEFAULT_PREFILL_CHUNK)
+            .max(1),
+        temperature: args.f64_or("temperature", 0.0) as f32,
+        top_k: args.usize_or("top-k", 0),
+        top_p: args.f64_or("top-p", 1.0) as f32,
+        seed: args.u64_or("seed", 7),
+        max_new_default: args
+            .usize_or("max-new", defaults.max_new_default)
+            .max(1),
+        max_new_cap: args.usize_or("max-new-cap", defaults.max_new_cap)
+            .max(1),
+        max_prompt: args.usize_or("max-prompt", defaults.max_prompt)
+            .max(1),
+        default_timeout_ms: args
+            .u64_or("timeout-ms", defaults.default_timeout_ms)
+            .max(1),
+        timeout_cap_ms: args
+            .u64_or("timeout-cap-ms", defaults.timeout_cap_ms)
+            .max(1),
+        header_timeout_ms: args
+            .u64_or("header-timeout-ms", defaults.header_timeout_ms)
+            .max(1),
+        write_timeout_ms: args
+            .u64_or("write-timeout-ms", defaults.write_timeout_ms)
+            .max(1),
+        max_body_bytes: defaults.max_body_bytes,
+        max_conns: args.usize_or("max-conns", defaults.max_conns)
+            .max(1),
+    };
+    let server = Server::spawn(model, opts)?;
+    println!(
+        "osp serve listening on {} (max_batch {}, queue_cap {}; \
+         POST /generate, GET /metrics, GET /healthz, \
+         POST /admin/drain to stop)",
+        server.addr(),
+        args.usize_or("max-batch", defaults.max_batch).max(1),
+        args.usize_or("queue-cap", defaults.queue_cap).max(1));
+    server.join();
+    println!("drained; all batch slots returned, exiting");
+    Ok(())
+}
+
+/// `osp serve-load`: drive a running `osp serve` with N chaos-seeded
+/// client threads and write the diffable `BENCH_serve.json` report.
+fn cmd_serve_load(args: &Args) -> Result<()> {
+    let chaos_label = args.str_or("chaos", "off");
+    let defaults = LoadOpts::default();
+    let opts = LoadOpts {
+        addr: args.str_or("addr", &defaults.addr),
+        clients: args.usize_or("clients", defaults.clients).max(1),
+        requests: args.usize_or("requests", defaults.requests).max(1),
+        prompt_len: args.usize_or("prompt-len", defaults.prompt_len)
+            .max(1),
+        max_new: args.usize_or("max-new", defaults.max_new).max(1),
+        timeout_ms: args.u64_or("timeout-ms", defaults.timeout_ms)
+            .max(1),
+        chaos: ChaosSpec::parse(&chaos_label)?,
+        chaos_label: chaos_label.clone(),
+        seed: args.u64_or("seed", 7),
+    };
+    let doc = serve_load::run_load(&opts)?;
+    let row = doc
+        .get("rows")
+        .and_then(|r| r.as_arr())
+        .and_then(|r| r.first())
+        .ok_or_else(|| anyhow!("load run produced no rows"))?;
+    let f = |key: &str| {
+        row.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0)
+    };
+    println!(
+        "serve-load vs {} (chaos {}): {} clients x {} requests -> \
+         {:.0} completed, {:.0} rejected, {:.0} deadline, {:.0} \
+         aborted, {:.0} errors; {:.0} tokens, p50 {:.2} ms/token, \
+         p99 {:.2} ms/token, first-token p50 {:.2} ms",
+        opts.addr, chaos_label, opts.clients, opts.requests,
+        f("completed"), f("rejected"), f("deadline"), f("aborted"),
+        f("errors"), f("tokens"), f("p50_token_ms"), f("p99_token_ms"),
+        f("first_token_p50_ms"));
+    println!(
+        "server counters: admitted {:.0}, completed {:.0}, timed_out \
+         {:.0}, cancelled {:.0}, failed {:.0}, in_flight {:.0}",
+        f("server_admitted"), f("server_completed"),
+        f("server_timed_out"), f("server_cancelled"),
+        f("server_failed"), f("server_in_flight"));
+    if let Some(j) = args.get("json") {
+        let path = if j == "true" { "BENCH_serve.json" } else { j };
+        std::fs::write(path, doc.dump())
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+    if args.bool_or("drain", false) {
+        let (status, _) =
+            serve_load::http_post(&opts.addr, "/admin/drain", "")?;
+        println!("drain requested ({status})");
+    }
     Ok(())
 }
 
@@ -736,6 +911,8 @@ fn main() {
         Some("quantize") => cmd_quantize(&args),
         Some("eval") => cmd_eval(&args),
         Some("generate") => cmd_generate(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("serve-load") => cmd_serve_load(&args),
         Some("serve-bench") => cmd_serve_bench(&args),
         Some("bench-diff") => cmd_bench_diff(&args),
         Some("simd-info") => cmd_simd_info(&args),

@@ -540,6 +540,25 @@ impl InferModel {
         b + 4 * self.final_norm.len()
     }
 
+    /// Storage bit-width of the packed weight leaves (the serve-layer
+    /// "W" in a `W4A4KV4` label): the widest packed leaf, or 16 when
+    /// every leaf is dense f32. Stats plumbing for `/metrics` and
+    /// `BENCH_serve.json` rows — not used by any kernel.
+    pub fn weight_bits(&self) -> u32 {
+        let leaf = |l: &Linear| match l {
+            Linear::Packed(q) if q.is_packed() => q.bits(),
+            _ => 16,
+        };
+        let mut bits = 0u32;
+        for l in &self.layers {
+            for w in [&l.wq, &l.wk, &l.wv, &l.wo, &l.w_gate, &l.w_up,
+                      &l.w_down] {
+                bits = bits.max(leaf(w));
+            }
+        }
+        if bits == 0 { 16 } else { bits }
+    }
+
     /// Fresh per-sequence KV cache for this model.
     pub fn new_cache(&self, kv_bits: u32) -> SeqKv {
         SeqKv::new(self.cfg.n_layers, self.cfg.n_heads,

@@ -1,0 +1,241 @@
+//! Deterministic fault injection for the serve front-end
+//! (DESIGN.md §12). Chaos lives in the *client* (the load generator and
+//! the integration tests): the server under test is always the real
+//! server, and the spec decides how each request misbehaves — so every
+//! failure path the handler/service threads must survive is exercised
+//! reproducibly from a seed.
+//!
+//! Spec grammar (the `--chaos` flag):
+//!
+//! ```text
+//! spec    := "off" | "default" | [preset ","] pair ("," pair)*
+//! preset  := "off" | "default"
+//! pair    := key "=" value
+//! key     := seed | abort | delay | oversize | malformed
+//!          | slowloris | tiny_deadline | delay_ms | hold_ms
+//! ```
+//!
+//! Probability keys take values in `[0,1]` and their sum must be <= 1
+//! (the remainder is the well-behaved-request probability). The draw
+//! for (client c, request r) depends only on `(seed, c, r)` — chaos
+//! schedules replay exactly across runs, which is what lets the
+//! bit-parity acceptance test compare a chaos run against an
+//! unperturbed run.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Pcg;
+
+/// What one request does to the server.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Well-behaved request.
+    None,
+    /// Disconnect after reading `after_tokens` streamed tokens
+    /// (0 = right after sending the request).
+    Abort { after_tokens: usize },
+    /// Sleep `delay_ms` before reading the response (slow consumer).
+    DelayedRead,
+    /// Declare an absurd Content-Length; expect 413.
+    Oversize,
+    /// Send a syntactically broken request; expect 400.
+    Malformed,
+    /// Send a partial header then stall `hold_ms`; expect the server
+    /// to shed the connection (408 or a hangup), never to wedge.
+    Slowloris,
+    /// Ask for `timeout_ms=1`; expect a deadline eviction (504 or a
+    /// truncated stream), batchmates unaffected.
+    TinyDeadline,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosSpec {
+    pub seed: u64,
+    pub abort: f64,
+    pub delay: f64,
+    pub oversize: f64,
+    pub malformed: f64,
+    pub slowloris: f64,
+    pub tiny_deadline: f64,
+    /// Slow-consumer pause before reads.
+    pub delay_ms: u64,
+    /// Slow-loris stall length (must exceed the server header timeout
+    /// for the fault to actually trigger a 408).
+    pub hold_ms: u64,
+}
+
+impl ChaosSpec {
+    pub fn off() -> ChaosSpec {
+        ChaosSpec { seed: 0, abort: 0.0, delay: 0.0, oversize: 0.0,
+                    malformed: 0.0, slowloris: 0.0, tiny_deadline: 0.0,
+                    delay_ms: 40, hold_ms: 3000 }
+    }
+
+    /// The CI preset: every failure class is present, a majority of
+    /// requests are still well-behaved.
+    pub fn default_preset() -> ChaosSpec {
+        ChaosSpec { abort: 0.20, delay: 0.10, oversize: 0.05,
+                    malformed: 0.10, slowloris: 0.05,
+                    tiny_deadline: 0.10, ..ChaosSpec::off() }
+    }
+
+    pub fn is_off(&self) -> bool {
+        self.abort + self.delay + self.oversize + self.malformed
+            + self.slowloris + self.tiny_deadline
+            == 0.0
+    }
+
+    /// Parse a `--chaos` spec string (grammar above).
+    pub fn parse(spec: &str) -> Result<ChaosSpec> {
+        let mut out = ChaosSpec::off();
+        for (i, part) in spec.split(',').enumerate() {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            match part {
+                "off" | "default" if i == 0 => {
+                    if part == "default" {
+                        out = ChaosSpec::default_preset();
+                    }
+                    continue;
+                }
+                _ => {}
+            }
+            let Some((k, v)) = part.split_once('=') else {
+                bail!("chaos: expected key=value, got '{part}' \
+                       (presets 'off'/'default' must come first)");
+            };
+            let (k, v) = (k.trim(), v.trim());
+            let prob = |v: &str| -> Result<f64> {
+                let p: f64 = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!(
+                        "chaos: bad probability '{v}' for '{k}'"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    bail!("chaos: probability '{k}={p}' outside [0,1]");
+                }
+                Ok(p)
+            };
+            match k {
+                "seed" => out.seed = v.parse()?,
+                "abort" => out.abort = prob(v)?,
+                "delay" => out.delay = prob(v)?,
+                "oversize" => out.oversize = prob(v)?,
+                "malformed" => out.malformed = prob(v)?,
+                "slowloris" => out.slowloris = prob(v)?,
+                "tiny_deadline" => out.tiny_deadline = prob(v)?,
+                "delay_ms" => out.delay_ms = v.parse()?,
+                "hold_ms" => out.hold_ms = v.parse()?,
+                _ => bail!("chaos: unknown key '{k}'"),
+            }
+        }
+        let sum = out.abort + out.delay + out.oversize + out.malformed
+            + out.slowloris
+            + out.tiny_deadline;
+        if sum > 1.0 + 1e-9 {
+            bail!("chaos: fault probabilities sum to {sum:.3} > 1");
+        }
+        Ok(out)
+    }
+
+    /// Deterministic fault for `(client, request)` under this spec.
+    pub fn draw(&self, client: u64, request: u64) -> Fault {
+        let mut rng = Pcg::new(
+            self.seed ^ client.wrapping_mul(0x9E3779B97F4A7C15),
+            1000 + request);
+        let x = rng.uniform();
+        let mut acc = 0.0;
+        let classes = [
+            (self.abort, 0usize),
+            (self.delay, 1),
+            (self.oversize, 2),
+            (self.malformed, 3),
+            (self.slowloris, 4),
+            (self.tiny_deadline, 5),
+        ];
+        for (p, tag) in classes {
+            acc += p;
+            if x < acc {
+                return match tag {
+                    0 => Fault::Abort {
+                        after_tokens: rng.below_usize(4),
+                    },
+                    1 => Fault::DelayedRead,
+                    2 => Fault::Oversize,
+                    3 => Fault::Malformed,
+                    4 => Fault::Slowloris,
+                    _ => Fault::TinyDeadline,
+                };
+            }
+        }
+        Fault::None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_and_overrides() {
+        assert!(ChaosSpec::parse("off").unwrap().is_off());
+        let d = ChaosSpec::parse("default").unwrap();
+        assert!(!d.is_off());
+        assert_eq!(d.abort, 0.20);
+        let c =
+            ChaosSpec::parse("default,seed=42,abort=0.5,delay=0")
+                .unwrap();
+        assert_eq!(c.seed, 42);
+        assert_eq!(c.abort, 0.5);
+        assert_eq!(c.delay, 0.0);
+        assert_eq!(c.malformed, 0.10);
+        let bare = ChaosSpec::parse("abort=1").unwrap();
+        assert_eq!(bare.abort, 1.0);
+        assert_eq!(bare.malformed, 0.0);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(ChaosSpec::parse("abort=1.5").is_err());
+        assert!(ChaosSpec::parse("abort=-0.1").is_err());
+        assert!(ChaosSpec::parse("abort=0.7,delay=0.7").is_err());
+        assert!(ChaosSpec::parse("wibble=0.5").is_err());
+        assert!(ChaosSpec::parse("abort").is_err());
+        assert!(ChaosSpec::parse("abort=0.1,default").is_err());
+    }
+
+    #[test]
+    fn draws_are_deterministic_and_seed_sensitive() {
+        let spec = ChaosSpec::parse("default,seed=7").unwrap();
+        for client in 0..4u64 {
+            for req in 0..16u64 {
+                assert_eq!(spec.draw(client, req),
+                           spec.draw(client, req));
+            }
+        }
+        let other = ChaosSpec::parse("default,seed=8").unwrap();
+        let differs = (0..64u64)
+            .any(|r| spec.draw(0, r) != other.draw(0, r));
+        assert!(differs, "seed change never altered the schedule");
+    }
+
+    #[test]
+    fn draw_frequencies_roughly_match_probabilities() {
+        let spec = ChaosSpec::parse("abort=0.5,seed=3").unwrap();
+        let n = 2000u64;
+        let aborts = (0..n)
+            .filter(|&r| matches!(spec.draw(1, r), Fault::Abort { .. }))
+            .count();
+        let frac = aborts as f64 / n as f64;
+        assert!((0.42..0.58).contains(&frac), "abort frac {frac}");
+    }
+
+    #[test]
+    fn certain_fault_always_fires() {
+        let spec = ChaosSpec::parse("malformed=1").unwrap();
+        for r in 0..32u64 {
+            assert_eq!(spec.draw(0, r), Fault::Malformed);
+        }
+    }
+}

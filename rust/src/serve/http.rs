@@ -1,0 +1,464 @@
+//! Minimal hand-rolled HTTP/1.1 (DESIGN.md §12): just enough protocol
+//! for the streaming serve front-end — request-head + Content-Length
+//! body parsing on the server side, chunked transfer encoding for the
+//! per-token response stream, and a small blocking client used by the
+//! load generator and the integration tests.
+//!
+//! The offline toolchain has no async runtime and no HTTP crates, so
+//! everything here is `std` over blocking sockets. Robustness rules:
+//! every malformed input maps to a typed [`HttpError`] (never a panic),
+//! head and body sizes are hard-capped, and read timeouts installed on
+//! the socket surface as [`HttpError::Timeout`] so slow-loris clients
+//! are shed instead of pinning a handler thread.
+
+use std::io::{self, Read, Write};
+
+/// Upper bound on the request head (request line + headers).
+pub const MAX_HEAD_BYTES: usize = 8192;
+
+/// A parsed request. Header names are lowercased; values are trimmed.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Why a request could not be read. Each variant maps to one well-formed
+/// rejection response (see [`HttpError::status`]).
+#[derive(Debug)]
+pub enum HttpError {
+    /// Clean EOF before any request byte — client connected and left.
+    Closed,
+    /// Socket read timed out mid-head or mid-body (slow-loris).
+    Timeout,
+    /// Request head exceeded [`MAX_HEAD_BYTES`].
+    HeadTooLarge,
+    /// Declared Content-Length beyond the server's body cap.
+    BodyTooLarge(usize),
+    /// Body-carrying request without a Content-Length.
+    LengthRequired,
+    /// Anything else unparseable.
+    BadRequest(String),
+    Io(io::Error),
+}
+
+impl HttpError {
+    /// The response this error earns, or None when the peer is simply
+    /// gone and no response can be delivered.
+    pub fn status(&self) -> Option<(u16, &'static str)> {
+        match self {
+            HttpError::Closed | HttpError::Io(_) => None,
+            HttpError::Timeout => Some((408, "request timed out")),
+            HttpError::HeadTooLarge => {
+                Some((431, "request head too large"))
+            }
+            HttpError::BodyTooLarge(_) => Some((413, "body too large")),
+            HttpError::LengthRequired => {
+                Some((411, "Content-Length required"))
+            }
+            HttpError::BadRequest(_) => Some((400, "malformed request")),
+        }
+    }
+}
+
+fn timeout_kind(k: io::ErrorKind) -> bool {
+    matches!(k, io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// Read and parse one request from `r`. The transport is expected to
+/// carry a read timeout (set on the socket by the caller); timeouts
+/// surface as [`HttpError::Timeout`]. Bodies are only read for
+/// Content-Length-framed requests and only up to `max_body` bytes —
+/// an oversized declaration is rejected *before* the body is consumed.
+pub fn read_request<R: Read>(r: &mut R, max_body: usize)
+                             -> Result<Request, HttpError> {
+    let mut buf: Vec<u8> = Vec::with_capacity(512);
+    let mut tmp = [0u8; 1024];
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() >= MAX_HEAD_BYTES {
+            return Err(HttpError::HeadTooLarge);
+        }
+        match r.read(&mut tmp) {
+            Ok(0) if buf.is_empty() => return Err(HttpError::Closed),
+            Ok(0) => {
+                return Err(HttpError::BadRequest(
+                    "eof inside request head".into()))
+            }
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e) if timeout_kind(e.kind()) => {
+                return Err(HttpError::Timeout)
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(HttpError::Io(e)),
+        }
+    };
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| HttpError::BadRequest("non-utf8 head".into()))?;
+    let mut lines = head.split("\r\n");
+    let reqline = lines.next().unwrap_or("");
+    let mut parts = reqline.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| HttpError::BadRequest("empty request line".into()))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| HttpError::BadRequest("missing path".into()))?
+        .to_string();
+    match parts.next() {
+        Some(v) if v.starts_with("HTTP/1.") => {}
+        _ => {
+            return Err(HttpError::BadRequest(
+                "missing HTTP/1.x version".into()))
+        }
+    }
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((k, v)) = line.split_once(':') else {
+            return Err(HttpError::BadRequest(
+                format!("malformed header line '{line}'")));
+        };
+        headers.push((k.trim().to_ascii_lowercase(),
+                      v.trim().to_string()));
+    }
+    let mut req =
+        Request { method, path, headers, body: Vec::new() };
+    let content_len = match req.header("content-length") {
+        Some(v) => Some(v.parse::<usize>().map_err(|_| {
+            HttpError::BadRequest("bad Content-Length".into())
+        })?),
+        None => None,
+    };
+    // Only POSTs carry bodies here; a POST without framing is 411.
+    if req.method == "POST" {
+        let len = content_len.ok_or(HttpError::LengthRequired)?;
+        if len > max_body {
+            return Err(HttpError::BodyTooLarge(len));
+        }
+        let mut body = buf[head_end + 4..].to_vec();
+        while body.len() < len {
+            match r.read(&mut tmp) {
+                Ok(0) => {
+                    return Err(HttpError::BadRequest(
+                        "eof inside body".into()))
+                }
+                Ok(n) => body.extend_from_slice(&tmp[..n]),
+                Err(e) if timeout_kind(e.kind()) => {
+                    return Err(HttpError::Timeout)
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(HttpError::Io(e)),
+            }
+        }
+        body.truncate(len);
+        req.body = body;
+    }
+    Ok(req)
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "",
+    }
+}
+
+/// Write a complete (non-streamed) JSON response. Every connection is
+/// single-request (`Connection: close`) — the serve front-end trades
+/// keep-alive for a radically simpler lifecycle.
+pub fn write_response(w: &mut impl Write, status: u16,
+                      extra: &[(&str, &str)], body: &str)
+                      -> io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n",
+        reason(status), body.len());
+    for (k, v) in extra {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+/// Start a chunked (streaming) response; each subsequent
+/// [`write_chunk`] delivers one newline-terminated JSON event.
+pub fn start_chunked(w: &mut impl Write, status: u16) -> io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/x-ndjson\r\n\
+         Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+        reason(status));
+    w.write_all(head.as_bytes())?;
+    w.flush()
+}
+
+/// One chunk of a streamed response (a single token/event line).
+pub fn write_chunk(w: &mut impl Write, line: &str) -> io::Result<()> {
+    let framed = format!("{:x}\r\n{line}\r\n", line.len());
+    w.write_all(framed.as_bytes())?;
+    w.flush()
+}
+
+/// Terminate a chunked response.
+pub fn end_chunked(w: &mut impl Write) -> io::Result<()> {
+    w.write_all(b"0\r\n\r\n")?;
+    w.flush()
+}
+
+/// Blocking single-request HTTP client (load generator + tests): sends
+/// one request, then reads the status line, headers, and — for chunked
+/// responses — one chunk at a time so per-token arrival times are
+/// observable.
+pub struct ClientConn<S: Read + Write> {
+    stream: S,
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+impl<S: Read + Write> ClientConn<S> {
+    pub fn new(stream: S) -> ClientConn<S> {
+        ClientConn { stream, buf: Vec::new(), pos: 0 }
+    }
+
+    pub fn stream_mut(&mut self) -> &mut S {
+        &mut self.stream
+    }
+
+    /// Write a request with an optional body (Content-Length framed).
+    pub fn send_request(&mut self, method: &str, path: &str, body: &str)
+                        -> io::Result<()> {
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: osp\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n",
+            body.len());
+        self.stream.write_all(head.as_bytes())?;
+        self.stream.write_all(body.as_bytes())?;
+        self.stream.flush()
+    }
+
+    fn fill(&mut self) -> io::Result<usize> {
+        let mut tmp = [0u8; 1024];
+        let n = self.stream.read(&mut tmp)?;
+        self.buf.extend_from_slice(&tmp[..n]);
+        Ok(n)
+    }
+
+    fn take_until(&mut self, pat: &[u8]) -> io::Result<Vec<u8>> {
+        loop {
+            if self.buf.len() > self.pos {
+                let window = &self.buf[self.pos..];
+                if let Some(i) =
+                    window.windows(pat.len()).position(|w| w == pat)
+                {
+                    let out = window[..i].to_vec();
+                    self.pos += i + pat.len();
+                    return Ok(out);
+                }
+            }
+            if self.fill()? == 0 {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "eof before delimiter"));
+            }
+        }
+    }
+
+    fn take_exact(&mut self, n: usize) -> io::Result<Vec<u8>> {
+        while self.buf.len() - self.pos < n {
+            if self.fill()? == 0 {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof, "eof inside payload"));
+            }
+        }
+        let out = self.buf[self.pos..self.pos + n].to_vec();
+        self.pos += n;
+        Ok(out)
+    }
+
+    /// Read the status line + headers. Returns (status, headers).
+    pub fn read_head(&mut self)
+                     -> io::Result<(u16, Vec<(String, String)>)> {
+        let head = self.take_until(b"\r\n\r\n")?;
+        let text = String::from_utf8_lossy(&head).into_owned();
+        let mut lines = text.split("\r\n");
+        let status_line = lines.next().unwrap_or("");
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("bad status line '{status_line}'")))?;
+        let mut headers = Vec::new();
+        for line in lines {
+            if let Some((k, v)) = line.split_once(':') {
+                headers.push((k.trim().to_ascii_lowercase(),
+                              v.trim().to_string()));
+            }
+        }
+        Ok((status, headers))
+    }
+
+    /// Next chunk of a chunked response; `None` after the final chunk.
+    pub fn next_chunk(&mut self) -> io::Result<Option<String>> {
+        let size_line = self.take_until(b"\r\n")?;
+        let text = String::from_utf8_lossy(&size_line).into_owned();
+        let n = usize::from_str_radix(text.trim(), 16).map_err(|_| {
+            io::Error::new(io::ErrorKind::InvalidData,
+                           format!("bad chunk size '{text}'"))
+        })?;
+        if n == 0 {
+            let _ = self.take_until(b"\r\n");
+            return Ok(None);
+        }
+        let data = self.take_exact(n)?;
+        let _ = self.take_until(b"\r\n")?;
+        Ok(Some(String::from_utf8_lossy(&data).into_owned()))
+    }
+
+    /// Read a Content-Length-framed body of `n` bytes.
+    pub fn read_body(&mut self, n: usize) -> io::Result<String> {
+        Ok(String::from_utf8_lossy(&self.take_exact(n)?).into_owned())
+    }
+}
+
+/// Header lookup on a client-side header list.
+pub fn header<'h>(headers: &'h [(String, String)], name: &str)
+                  -> Option<&'h str> {
+    headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /generate HTTP/1.1\r\nHost: x\r\n\
+                    Content-Length: 5\r\n\r\nhello";
+        let req = read_request(&mut Cursor::new(&raw[..]), 64).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/generate");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.body, b"hello");
+    }
+
+    #[test]
+    fn get_needs_no_length() {
+        let raw = b"GET /healthz HTTP/1.1\r\n\r\n";
+        let req = read_request(&mut Cursor::new(&raw[..]), 64).unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_heads() {
+        for raw in ["\r\n\r\n", "POST\r\n\r\n", "POST /x FTP/9\r\n\r\n",
+                    "POST /x HTTP/1.1\r\nnocolon\r\n\r\n"] {
+            let got =
+                read_request(&mut Cursor::new(raw.as_bytes()), 64);
+            assert!(matches!(got, Err(HttpError::BadRequest(_))),
+                    "{raw:?} -> {got:?}");
+        }
+    }
+
+    #[test]
+    fn empty_connection_is_closed_not_bad() {
+        let got = read_request(&mut Cursor::new(&b""[..]), 64);
+        assert!(matches!(got, Err(HttpError::Closed)));
+    }
+
+    #[test]
+    fn oversized_declaration_rejected_before_body_read() {
+        let raw = b"POST /g HTTP/1.1\r\nContent-Length: 999\r\n\r\n";
+        let got = read_request(&mut Cursor::new(&raw[..]), 64);
+        assert!(matches!(got, Err(HttpError::BodyTooLarge(999))));
+    }
+
+    #[test]
+    fn post_without_length_is_411() {
+        let raw = b"POST /g HTTP/1.1\r\n\r\n";
+        let got = read_request(&mut Cursor::new(&raw[..]), 64);
+        assert!(matches!(got, Err(HttpError::LengthRequired)));
+        assert_eq!(HttpError::LengthRequired.status().unwrap().0, 411);
+    }
+
+    #[test]
+    fn head_cap_is_enforced() {
+        let mut raw = b"GET /x HTTP/1.1\r\n".to_vec();
+        raw.extend(std::iter::repeat(b'a').take(MAX_HEAD_BYTES + 10));
+        let got = read_request(&mut Cursor::new(&raw[..]), 64);
+        assert!(matches!(got, Err(HttpError::HeadTooLarge)));
+    }
+
+    /// A duplex-in-memory round trip: chunked writer framing is readable
+    /// by the client chunk reader.
+    #[test]
+    fn chunked_round_trip() {
+        let mut wire = Vec::new();
+        start_chunked(&mut wire, 200).unwrap();
+        write_chunk(&mut wire, "{\"token\":1}\n").unwrap();
+        write_chunk(&mut wire, "{\"done\":true}\n").unwrap();
+        end_chunked(&mut wire).unwrap();
+        let mut client = ClientConn::new(Cursor::new(wire));
+        let (status, headers) = client.read_head().unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(header(&headers, "transfer-encoding"),
+                   Some("chunked"));
+        assert_eq!(client.next_chunk().unwrap().as_deref(),
+                   Some("{\"token\":1}\n"));
+        assert_eq!(client.next_chunk().unwrap().as_deref(),
+                   Some("{\"done\":true}\n"));
+        assert_eq!(client.next_chunk().unwrap(), None);
+    }
+
+    #[test]
+    fn simple_response_round_trip() {
+        let mut wire = Vec::new();
+        write_response(&mut wire, 503, &[("Retry-After", "1")],
+                       "{\"error\":\"queue full\"}")
+            .unwrap();
+        let mut client = ClientConn::new(Cursor::new(wire));
+        let (status, headers) = client.read_head().unwrap();
+        assert_eq!(status, 503);
+        assert_eq!(header(&headers, "retry-after"), Some("1"));
+        let n: usize = header(&headers, "content-length")
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert_eq!(client.read_body(n).unwrap(),
+                   "{\"error\":\"queue full\"}");
+    }
+}

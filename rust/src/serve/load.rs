@@ -1,0 +1,439 @@
+//! `osp serve-load` — the built-in load generator (DESIGN.md §12).
+//!
+//! Drives a running `osp serve` with N client threads, each issuing a
+//! deterministic request schedule whose misbehavior is drawn from a
+//! seeded [`ChaosSpec`]. Records exact client-side latency percentiles
+//! (per-token gaps and time-to-first-token) plus outcome counts, pulls
+//! the server's own counters from `/metrics`, and emits a bench-style
+//! `BENCH_serve.json` document diffable with `osp bench-diff`.
+//!
+//! The client is also the test harness: `tests/serve_properties.rs`
+//! reuses [`http_get`]/[`http_post`] and the per-fault request logic
+//! through [`run_load`].
+
+use std::net::TcpStream;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+
+use super::chaos::{ChaosSpec, Fault};
+use super::http::{header, ClientConn};
+
+#[derive(Clone, Debug)]
+pub struct LoadOpts {
+    /// Server address, e.g. `127.0.0.1:8080`.
+    pub addr: String,
+    pub clients: usize,
+    /// Requests per client.
+    pub requests: usize,
+    pub prompt_len: usize,
+    pub max_new: usize,
+    pub timeout_ms: u64,
+    pub chaos: ChaosSpec,
+    /// The raw `--chaos` spec string (bench-row identity).
+    pub chaos_label: String,
+    pub seed: u64,
+}
+
+impl Default for LoadOpts {
+    fn default() -> LoadOpts {
+        LoadOpts { addr: "127.0.0.1:8080".into(), clients: 4,
+                   requests: 8, prompt_len: 12, max_new: 16,
+                   timeout_ms: 10_000, chaos: ChaosSpec::off(),
+                   chaos_label: "off".into(), seed: 7 }
+    }
+}
+
+/// Per-client tallies, merged after the run.
+#[derive(Clone, Debug, Default)]
+pub struct ClientStats {
+    pub requests: u64,
+    pub completed: u64,
+    /// 4xx/5xx before any token (queue full, malformed, oversize,
+    /// slow-loris shed, draining).
+    pub rejected: u64,
+    /// Deadline evictions (504 or a mid-stream deadline chunk).
+    pub deadline: u64,
+    /// Connections we dropped on purpose (chaos aborts).
+    pub aborted: u64,
+    /// Anything else: transport errors, truncated streams.
+    pub errors: u64,
+    pub tokens: u64,
+    pub token_gaps_us: Vec<u64>,
+    pub first_token_us: Vec<u64>,
+}
+
+impl ClientStats {
+    fn merge(&mut self, other: ClientStats) {
+        self.requests += other.requests;
+        self.completed += other.completed;
+        self.rejected += other.rejected;
+        self.deadline += other.deadline;
+        self.aborted += other.aborted;
+        self.errors += other.errors;
+        self.tokens += other.tokens;
+        self.token_gaps_us.extend(other.token_gaps_us);
+        self.first_token_us.extend(other.first_token_us);
+    }
+}
+
+fn connect(addr: &str, read_timeout: Duration) -> Result<TcpStream> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connect {addr}"))?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(read_timeout))?;
+    stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+    Ok(stream)
+}
+
+/// Blocking GET returning (status, parsed body). Used for `/metrics`
+/// and `/healthz`.
+pub fn http_get(addr: &str, path: &str) -> Result<(u16, Json)> {
+    let stream = connect(addr, Duration::from_secs(10))?;
+    let mut conn = ClientConn::new(stream);
+    conn.send_request("GET", path, "")?;
+    read_framed_json(&mut conn)
+}
+
+/// Blocking POST returning (status, parsed body). Used for
+/// `/admin/drain` and non-streaming error paths.
+pub fn http_post(addr: &str, path: &str, body: &str)
+                 -> Result<(u16, Json)> {
+    let stream = connect(addr, Duration::from_secs(10))?;
+    let mut conn = ClientConn::new(stream);
+    conn.send_request("POST", path, body)?;
+    read_framed_json(&mut conn)
+}
+
+fn read_framed_json(conn: &mut ClientConn<TcpStream>)
+                    -> Result<(u16, Json)> {
+    let (status, headers) = conn.read_head()?;
+    let n: usize = header(&headers, "content-length")
+        .ok_or_else(|| anyhow!("response without Content-Length"))?
+        .parse()?;
+    let body = conn.read_body(n)?;
+    let doc = Json::parse(&body)
+        .map_err(|e| anyhow!("bad response JSON: {e}"))?;
+    Ok((status, doc))
+}
+
+/// Outcome of one streamed `/generate` exchange.
+enum Outcome {
+    Completed,
+    Rejected,
+    Deadline,
+    Aborted,
+    Error,
+}
+
+fn deterministic_prompt(opts: &LoadOpts, vocab: usize, client: u64,
+                        req: u64) -> Vec<i32> {
+    let mut rng = Pcg::new(opts.seed ^ (client * 100_000 + req), 500);
+    (0..opts.prompt_len.max(1))
+        .map(|_| rng.below_usize(vocab.max(1)) as i32)
+        .collect()
+}
+
+fn one_request(opts: &LoadOpts, vocab: usize, client: u64, req: u64,
+               fault: Fault, st: &mut ClientStats) -> Outcome {
+    let read_timeout =
+        Duration::from_millis(opts.timeout_ms + 15_000);
+    match fault {
+        Fault::Malformed => {
+            let Ok(stream) = connect(&opts.addr, read_timeout) else {
+                return Outcome::Error;
+            };
+            let mut conn = ClientConn::new(stream);
+            if conn
+                .send_request("POST", "/generate", "{not json")
+                .is_err()
+            {
+                return Outcome::Error;
+            }
+            match conn.read_head() {
+                Ok((400, _)) => Outcome::Rejected,
+                Ok(_) => Outcome::Error,
+                Err(_) => Outcome::Error,
+            }
+        }
+        Fault::Oversize => {
+            let Ok(stream) = connect(&opts.addr, read_timeout) else {
+                return Outcome::Error;
+            };
+            let mut conn = ClientConn::new(stream);
+            // Declare an absurd length; send only a sliver. The server
+            // must reject on the declaration alone.
+            let head = format!(
+                "POST /generate HTTP/1.1\r\nHost: osp\r\n\
+                 Content-Length: {}\r\nConnection: close\r\n\r\nxx",
+                1usize << 30);
+            use std::io::Write;
+            if conn.stream_mut().write_all(head.as_bytes()).is_err() {
+                return Outcome::Error;
+            }
+            match conn.read_head() {
+                Ok((413, _)) => Outcome::Rejected,
+                Ok(_) => Outcome::Error,
+                Err(_) => Outcome::Error,
+            }
+        }
+        Fault::Slowloris => {
+            let Ok(stream) = connect(&opts.addr, read_timeout) else {
+                return Outcome::Error;
+            };
+            let mut conn = ClientConn::new(stream);
+            use std::io::Write;
+            let partial = "POST /generate HTTP/1.1\r\nHost: osp\r\n";
+            if conn
+                .stream_mut()
+                .write_all(partial.as_bytes())
+                .is_err()
+            {
+                return Outcome::Error;
+            }
+            thread::sleep(Duration::from_millis(opts.chaos.hold_ms));
+            // Either a 408 or a hangup counts as the server correctly
+            // shedding us; a wedge would surface as a read timeout.
+            match conn.read_head() {
+                Ok((408, _)) => Outcome::Rejected,
+                Ok(_) => Outcome::Error,
+                Err(_) => Outcome::Rejected,
+            }
+        }
+        Fault::None
+        | Fault::DelayedRead
+        | Fault::TinyDeadline
+        | Fault::Abort { .. } => {
+            let prompt = deterministic_prompt(opts, vocab, client, req);
+            let timeout_ms = if fault == Fault::TinyDeadline {
+                1
+            } else {
+                opts.timeout_ms
+            };
+            let body = format!(
+                "{{\"prompt\":{},\"max_new\":{},\"timeout_ms\":{}}}",
+                Json::Arr(prompt
+                    .iter()
+                    .map(|&t| Json::num(t as f64))
+                    .collect())
+                .dump(),
+                opts.max_new, timeout_ms);
+            let Ok(stream) = connect(&opts.addr, read_timeout) else {
+                return Outcome::Error;
+            };
+            let mut conn = ClientConn::new(stream);
+            let t_send = Instant::now();
+            if conn.send_request("POST", "/generate", &body).is_err() {
+                return Outcome::Error;
+            }
+            if let Fault::Abort { after_tokens: 0 } = fault {
+                return Outcome::Aborted;
+            }
+            if fault == Fault::DelayedRead {
+                thread::sleep(Duration::from_millis(
+                    opts.chaos.delay_ms));
+            }
+            let (status, _headers) = match conn.read_head() {
+                Ok(h) => h,
+                Err(_) => return Outcome::Error,
+            };
+            match status {
+                200 => {}
+                503 | 400 | 413 | 408 => return Outcome::Rejected,
+                504 => return Outcome::Deadline,
+                _ => return Outcome::Error,
+            }
+            let abort_after = match fault {
+                Fault::Abort { after_tokens } => Some(after_tokens),
+                _ => None,
+            };
+            let mut got = 0u64;
+            let mut prev: Option<Instant> = None;
+            loop {
+                let line = match conn.next_chunk() {
+                    Ok(Some(line)) => line,
+                    Ok(None) => {
+                        // Stream ended without a terminal event.
+                        return Outcome::Error;
+                    }
+                    Err(_) => return Outcome::Error,
+                };
+                let now = Instant::now();
+                let Ok(ev) = Json::parse(line.trim()) else {
+                    return Outcome::Error;
+                };
+                if ev.get("token").is_some() {
+                    got += 1;
+                    st.tokens += 1;
+                    match prev {
+                        None => st.first_token_us.push(
+                            now.duration_since(t_send).as_micros()
+                                as u64),
+                        Some(p) => st.token_gaps_us.push(
+                            now.duration_since(p).as_micros() as u64),
+                    }
+                    prev = Some(now);
+                    if let Some(k) = abort_after {
+                        if got as usize >= k.max(1) {
+                            return Outcome::Aborted;
+                        }
+                    }
+                    continue;
+                }
+                if ev
+                    .get("done")
+                    .and_then(|d| d.as_bool())
+                    .unwrap_or(false)
+                {
+                    return Outcome::Completed;
+                }
+                match ev.get("error").and_then(|e| e.as_str()) {
+                    Some("deadline") => return Outcome::Deadline,
+                    _ => return Outcome::Error,
+                }
+            }
+        }
+    }
+}
+
+fn run_client(opts: &LoadOpts, vocab: usize, client: u64)
+              -> ClientStats {
+    let mut st = ClientStats::default();
+    for r in 0..opts.requests as u64 {
+        let fault = opts.chaos.draw(client, r);
+        st.requests += 1;
+        match one_request(opts, vocab, client, r, fault, &mut st) {
+            Outcome::Completed => st.completed += 1,
+            Outcome::Rejected => st.rejected += 1,
+            Outcome::Deadline => st.deadline += 1,
+            Outcome::Aborted => st.aborted += 1,
+            Outcome::Error => st.errors += 1,
+        }
+    }
+    st
+}
+
+/// Exact percentile over raw samples (client side keeps every sample,
+/// unlike the server's bucketed histogram).
+fn percentile_ms(samples: &mut [u64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_unstable();
+    let idx = ((q * (samples.len() - 1) as f64).round() as usize)
+        .min(samples.len() - 1);
+    samples[idx] as f64 / 1000.0
+}
+
+/// Drive the server at `opts.addr` and return a `BENCH_serve.json`
+/// document (bench-style: `{"bench":"serve","threads":N,"rows":[...]}`
+/// — one row keyed by config/clients/chaos, diffable with
+/// `osp bench-diff`).
+pub fn run_load(opts: &LoadOpts) -> Result<Json> {
+    let (status, info) = http_get(&opts.addr, "/metrics")
+        .with_context(|| format!("fetch {}/metrics", opts.addr))?;
+    if status != 200 {
+        bail!("/metrics returned {status}");
+    }
+    let vocab = info
+        .get("vocab")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("/metrics missing 'vocab'"))?;
+    let t0 = Instant::now();
+    let mut total = ClientStats::default();
+    thread::scope(|s| {
+        let handles: Vec<_> = (0..opts.clients as u64)
+            .map(|c| s.spawn(move || run_client(opts, vocab, c)))
+            .collect();
+        for h in handles {
+            if let Ok(st) = h.join() {
+                total.merge(st);
+            }
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let (_, after) = http_get(&opts.addr, "/metrics")
+        .context("fetch final /metrics")?;
+    let server = |key: &str| {
+        after
+            .get("metrics")
+            .and_then(|m| m.get(key))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0)
+    };
+    let mut gaps = total.token_gaps_us.clone();
+    let mut firsts = total.first_token_us.clone();
+    let row = Json::obj(vec![
+        ("phase", Json::str("serve")),
+        ("config",
+         Json::str(info
+             .get("config")
+             .and_then(|c| c.as_str())
+             .unwrap_or("?"))),
+        ("w_bits", info.get("w_bits").cloned().unwrap_or(Json::Null)),
+        ("a_bits", info.get("a_bits").cloned().unwrap_or(Json::Null)),
+        ("kv_bits",
+         info.get("kv_bits").cloned().unwrap_or(Json::Null)),
+        ("clients", Json::num(opts.clients as f64)),
+        ("chaos", Json::str(opts.chaos_label.clone())),
+        ("prompt_len", Json::num(opts.prompt_len as f64)),
+        ("requests", Json::num(total.requests as f64)),
+        ("completed", Json::num(total.completed as f64)),
+        ("rejected", Json::num(total.rejected as f64)),
+        ("deadline", Json::num(total.deadline as f64)),
+        ("aborted", Json::num(total.aborted as f64)),
+        ("errors", Json::num(total.errors as f64)),
+        ("tokens", Json::num(total.tokens as f64)),
+        ("p50_token_ms", Json::num(percentile_ms(&mut gaps, 0.50))),
+        ("p99_token_ms", Json::num(percentile_ms(&mut gaps, 0.99))),
+        ("first_token_p50_ms",
+         Json::num(percentile_ms(&mut firsts, 0.50))),
+        ("gen_tokens_per_sec",
+         Json::num(total.tokens as f64 / wall.max(1e-9))),
+        ("wall_secs", Json::num(wall)),
+        ("server_admitted", Json::num(server("admitted"))),
+        ("server_completed", Json::num(server("completed"))),
+        ("server_timed_out", Json::num(server("timed_out"))),
+        ("server_cancelled", Json::num(server("cancelled"))),
+        ("server_failed", Json::num(server("failed"))),
+        ("server_rejected_full", Json::num(server("rejected_full"))),
+        ("server_rejected_bad", Json::num(server("rejected_bad"))),
+        ("server_queue_depth", Json::num(server("queue_depth"))),
+        ("server_in_flight", Json::num(server("in_flight"))),
+    ]);
+    Ok(Json::obj(vec![
+        ("bench", Json::str("serve")),
+        ("threads", Json::num(opts.clients as f64)),
+        ("rows", Json::Arr(vec![row])),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_are_exact_on_sorted_samples() {
+        let mut xs: Vec<u64> = (1..=100).map(|i| i * 1000).collect();
+        let p50 = percentile_ms(&mut xs.clone(), 0.50);
+        let p99 = percentile_ms(&mut xs, 0.99);
+        assert!((p50 - 50.0).abs() <= 1.0, "p50={p50}");
+        assert!((p99 - 99.0).abs() <= 1.0, "p99={p99}");
+        assert_eq!(percentile_ms(&mut [], 0.5), 0.0);
+    }
+
+    #[test]
+    fn prompts_are_deterministic_per_client_request() {
+        let opts = LoadOpts::default();
+        let a = deterministic_prompt(&opts, 128, 3, 7);
+        let b = deterministic_prompt(&opts, 128, 3, 7);
+        let c = deterministic_prompt(&opts, 128, 3, 8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.iter().all(|&t| (0..128).contains(&t)));
+    }
+}

@@ -1,0 +1,195 @@
+//! Serve-side counters and latency tracking (DESIGN.md §12).
+//!
+//! Everything here is lock-free: handler threads and the service thread
+//! bump `AtomicU64`s, and `GET /metrics` snapshots them without
+//! coordination. The one structural invariant — checked by
+//! `tests/serve_properties.rs` — is conservation over terminal states:
+//!
+//! ```text
+//! admitted == completed + timed_out + cancelled + failed  (at drain)
+//! ```
+//!
+//! i.e. every request that enters the engine leaves it through exactly
+//! one of the four doors, so batch slots cannot leak.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+const REL: Ordering = Ordering::Relaxed;
+
+/// Monotonic counters + gauges for the serve front-end.
+#[derive(Default)]
+pub struct ServeMetrics {
+    // Handler-side rejections (request never reached the engine).
+    pub rejected_full: AtomicU64,
+    pub rejected_bad: AtomicU64,
+    pub rejected_oversize: AtomicU64,
+    pub rejected_slow: AtomicU64,
+    pub rejected_draining: AtomicU64,
+    // Service-side terminal states (request was admitted).
+    pub admitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub timed_out: AtomicU64,
+    pub cancelled: AtomicU64,
+    pub failed: AtomicU64,
+    // Volume + gauges.
+    pub tokens_streamed: AtomicU64,
+    pub connections: AtomicU64,
+    pub queue_depth: AtomicI64,
+    pub active_seqs: AtomicI64,
+    /// Inter-token latency as observed by the service thread.
+    pub token_lat: LatHist,
+}
+
+impl ServeMetrics {
+    pub fn rejected_total(&self) -> u64 {
+        self.rejected_full.load(REL)
+            + self.rejected_bad.load(REL)
+            + self.rejected_oversize.load(REL)
+            + self.rejected_slow.load(REL)
+            + self.rejected_draining.load(REL)
+    }
+
+    /// `admitted - (completed + timed_out + cancelled + failed)`;
+    /// zero once the engine is idle, positive while requests are in
+    /// flight, and never negative.
+    pub fn in_flight(&self) -> i64 {
+        self.admitted.load(REL) as i64
+            - self.completed.load(REL) as i64
+            - self.timed_out.load(REL) as i64
+            - self.cancelled.load(REL) as i64
+            - self.failed.load(REL) as i64
+    }
+
+    pub fn to_json(&self) -> Json {
+        let n = |v: &AtomicU64| Json::num(v.load(REL) as f64);
+        let g = |v: &AtomicI64| Json::num(v.load(REL) as f64);
+        Json::obj(vec![
+            ("admitted", n(&self.admitted)),
+            ("completed", n(&self.completed)),
+            ("timed_out", n(&self.timed_out)),
+            ("cancelled", n(&self.cancelled)),
+            ("failed", n(&self.failed)),
+            ("rejected_full", n(&self.rejected_full)),
+            ("rejected_bad", n(&self.rejected_bad)),
+            ("rejected_oversize", n(&self.rejected_oversize)),
+            ("rejected_slow", n(&self.rejected_slow)),
+            ("rejected_draining", n(&self.rejected_draining)),
+            ("tokens_streamed", n(&self.tokens_streamed)),
+            ("connections", n(&self.connections)),
+            ("queue_depth", g(&self.queue_depth)),
+            ("active_seqs", g(&self.active_seqs)),
+            ("in_flight", Json::num(self.in_flight() as f64)),
+            ("token_p50_ms",
+             Json::num(self.token_lat.quantile(0.50).unwrap_or(0.0))),
+            ("token_p99_ms",
+             Json::num(self.token_lat.quantile(0.99).unwrap_or(0.0))),
+            ("token_lat_count",
+             Json::num(self.token_lat.count() as f64)),
+        ])
+    }
+}
+
+/// Log2-microsecond-bucket histogram: bucket `i` holds samples in
+/// `[2^i, 2^(i+1))` µs. 48 buckets cover ~1 µs to ~8.9 years, which is
+/// enough dynamic range that clamping never matters in practice.
+/// Quantiles are approximate (geometric bucket midpoint) but
+/// allocation-free and safe to hammer from any thread.
+pub struct LatHist {
+    buckets: [AtomicU64; 48],
+}
+
+impl Default for LatHist {
+    fn default() -> LatHist {
+        LatHist { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+}
+
+impl LatHist {
+    pub fn record(&self, d: Duration) {
+        let us = (d.as_micros() as u64).max(1);
+        let idx = (63 - us.leading_zeros() as usize).min(47);
+        self.buckets[idx].fetch_add(1, REL);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(REL)).sum()
+    }
+
+    /// Approximate quantile in milliseconds, `None` when empty.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        let total = self.count();
+        if total == 0 {
+            return None;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64)
+            .max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(REL);
+            if seen >= target {
+                // Geometric midpoint of [2^i, 2^(i+1)) µs, in ms.
+                return Some((1u64 << i) as f64 * 1.5 / 1000.0);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = LatHist::default();
+        assert_eq!(h.quantile(0.5), None);
+        // 90 samples near 1ms, 10 near 16ms: p50 in the 1ms bucket,
+        // p99 in the 16ms bucket.
+        for _ in 0..90 {
+            h.record(Duration::from_micros(1100));
+        }
+        for _ in 0..10 {
+            h.record(Duration::from_micros(17_000));
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile(0.50).unwrap();
+        let p99 = h.quantile(0.99).unwrap();
+        assert!((1.0..3.1).contains(&p50), "p50={p50}");
+        assert!((16.0..50.0).contains(&p99), "p99={p99}");
+        assert!(p50 < p99);
+    }
+
+    #[test]
+    fn zero_duration_lands_in_first_bucket() {
+        let h = LatHist::default();
+        h.record(Duration::from_nanos(0));
+        assert_eq!(h.count(), 1);
+        assert!(h.quantile(1.0).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn conservation_and_json_snapshot() {
+        let m = ServeMetrics::default();
+        m.admitted.store(10, REL);
+        m.completed.store(6, REL);
+        m.timed_out.store(2, REL);
+        m.cancelled.store(1, REL);
+        m.failed.store(1, REL);
+        m.rejected_full.store(3, REL);
+        m.rejected_bad.store(2, REL);
+        assert_eq!(m.in_flight(), 0);
+        assert_eq!(m.rejected_total(), 5);
+        let j = m.to_json();
+        assert_eq!(j.get("admitted").and_then(|v| v.as_f64()),
+                   Some(10.0));
+        assert_eq!(j.get("in_flight").and_then(|v| v.as_f64()),
+                   Some(0.0));
+        // Round-trips through the serializer.
+        let back = Json::parse(&j.dump()).unwrap();
+        assert_eq!(back.get("completed").and_then(|v| v.as_f64()),
+                   Some(6.0));
+    }
+}

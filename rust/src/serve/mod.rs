@@ -1,0 +1,569 @@
+//! `osp serve` — a fault-tolerant streaming HTTP front-end for the
+//! continuous-batching decode engine (DESIGN.md §12, ROADMAP Open
+//! item 1 adapted to the offline std-only toolchain: threads +
+//! `std::net`, no async runtime, no HTTP crates).
+//!
+//! Thread ownership:
+//!
+//! ```text
+//! acceptor (serve_loop thread)
+//!   ├── service thread: owns the DecodeEngine, drains the bounded
+//!   │   admission queue between steps, fans tokens out per request
+//!   └── handler thread per connection: parses HTTP, validates,
+//!       try_sends an Admission, relays Events to the socket
+//! ```
+//!
+//! Robustness contract (pinned by `tests/serve_properties.rs`):
+//! malformed requests → 400, queue full → 503 + `Retry-After`,
+//! oversized bodies → 413, slow-loris heads → 408, deadline expiry →
+//! eviction mid-decode, client disconnect → cancellation next step,
+//! per-request engine errors → 500 while the loop keeps serving, and
+//! `/admin/drain` stops admissions, finishes in-flight work, and shuts
+//! the server down cleanly with zero occupied batch slots.
+//!
+//! Endpoints: `POST /generate` (chunked NDJSON token stream),
+//! `GET /metrics`, `GET /healthz`, `POST /admin/drain`.
+
+pub mod chaos;
+pub mod http;
+pub mod load;
+pub mod metrics;
+mod service;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::Ordering::{Relaxed, SeqCst};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicUsize};
+use std::sync::mpsc::{self, RecvTimeoutError, SyncSender,
+                      TrySendError};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::infer::DecodeParams;
+use crate::model::InferModel;
+use crate::tensor::par;
+use crate::util::json::Json;
+
+use http::HttpError;
+use metrics::ServeMetrics;
+use service::{Admission, Event};
+
+/// Everything tunable about the server. CLI flags in `main.rs` map
+/// onto this 1:1; tests shrink the timeouts.
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    pub addr: String,
+    /// Engine batching knob (active-sequence cap).
+    pub max_batch: usize,
+    /// Bounded admission queue depth; overflow → 503.
+    pub queue_cap: usize,
+    pub a_bits: u32,
+    pub kv_bits: u32,
+    pub prefill_chunk: usize,
+    pub temperature: f32,
+    pub top_k: usize,
+    pub top_p: f32,
+    pub seed: u64,
+    /// `max_new` when the request omits it.
+    pub max_new_default: usize,
+    /// Server-side ceiling on requested `max_new`.
+    pub max_new_cap: usize,
+    /// Prompt-length ceiling (tokens).
+    pub max_prompt: usize,
+    /// Deadline when the request omits `timeout_ms`.
+    pub default_timeout_ms: u64,
+    /// Server-side ceiling on requested `timeout_ms`.
+    pub timeout_cap_ms: u64,
+    /// Socket read timeout while parsing the request (slow-loris cap).
+    pub header_timeout_ms: u64,
+    /// Socket write timeout (slow-consumer cap).
+    pub write_timeout_ms: u64,
+    /// Request body cap; larger declared lengths → 413.
+    pub max_body_bytes: usize,
+    /// Concurrent-connection cap; overflow → immediate 503.
+    pub max_conns: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts {
+            addr: "127.0.0.1:8080".into(),
+            max_batch: 8,
+            queue_cap: 32,
+            a_bits: 4,
+            kv_bits: 4,
+            prefill_chunk: 64,
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            seed: 7,
+            max_new_default: 16,
+            max_new_cap: 256,
+            max_prompt: 4096,
+            default_timeout_ms: 10_000,
+            timeout_cap_ms: 60_000,
+            header_timeout_ms: 2_000,
+            write_timeout_ms: 10_000,
+            max_body_bytes: 1 << 16,
+            max_conns: 256,
+        }
+    }
+}
+
+/// Immutable model facts snapshotted at spawn for `/metrics` (the load
+/// generator keys its bench rows off these).
+pub struct ServeInfo {
+    pub w_bits: u32,
+    pub a_bits: u32,
+    pub kv_bits: u32,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub int_kernel: Option<&'static str>,
+}
+
+impl ServeInfo {
+    /// `"w-a-kv"`, the bit-config row label shared with the bench
+    /// harness (e.g. `"4-4-4"`).
+    pub fn config_label(&self) -> String {
+        format!("{}-{}-{}", self.w_bits, self.a_bits, self.kv_bits)
+    }
+}
+
+/// Shared control block: handlers, the service thread, and the
+/// acceptor all hold `&Ctl` (via `Arc` at the top).
+pub(crate) struct Ctl {
+    pub draining: AtomicBool,
+    pub service_done: AtomicBool,
+    pub conns: AtomicI64,
+    pub metrics: ServeMetrics,
+    pub opts: ServeOpts,
+    pub info: ServeInfo,
+}
+
+impl Ctl {
+    fn status_json(&self) -> Json {
+        Json::obj(vec![
+            ("config", Json::str(self.info.config_label())),
+            ("w_bits", Json::num(self.info.w_bits as f64)),
+            ("a_bits", Json::num(self.info.a_bits as f64)),
+            ("kv_bits", Json::num(self.info.kv_bits as f64)),
+            ("vocab", Json::num(self.info.vocab as f64)),
+            ("d_model", Json::num(self.info.d_model as f64)),
+            ("n_layers", Json::num(self.info.n_layers as f64)),
+            ("int_kernel",
+             match self.info.int_kernel {
+                 Some(k) => Json::str(k),
+                 None => Json::Null,
+             }),
+            ("max_batch", Json::num(self.opts.max_batch as f64)),
+            ("queue_cap", Json::num(self.opts.queue_cap as f64)),
+            ("threads", Json::num(par::configured_threads() as f64)),
+            ("draining", Json::Bool(self.draining.load(SeqCst))),
+            ("metrics", self.metrics.to_json()),
+        ])
+    }
+}
+
+/// A running server. Owns the model (moved into the serve thread);
+/// `drain()` + `join()` is the clean shutdown path.
+pub struct Server {
+    addr: SocketAddr,
+    ctl: Arc<Ctl>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `opts.addr` (port 0 picks an ephemeral port — the bound
+    /// address is available via [`Server::addr`]) and start the
+    /// acceptor + service threads.
+    pub fn spawn(model: InferModel, opts: ServeOpts) -> Result<Server> {
+        let listener = TcpListener::bind(&opts.addr)
+            .with_context(|| format!("bind {}", opts.addr))?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let info = ServeInfo {
+            w_bits: model.weight_bits(),
+            a_bits: opts.a_bits,
+            kv_bits: opts.kv_bits,
+            vocab: model.cfg.vocab_size,
+            d_model: model.cfg.d_model,
+            n_layers: model.cfg.n_layers,
+            int_kernel: model.int_kernel_label(opts.a_bits),
+        };
+        let ctl = Arc::new(Ctl {
+            draining: AtomicBool::new(false),
+            service_done: AtomicBool::new(false),
+            conns: AtomicI64::new(0),
+            metrics: ServeMetrics::default(),
+            opts,
+            info,
+        });
+        let ctl2 = Arc::clone(&ctl);
+        let handle = thread::Builder::new()
+            .name("osp-serve".into())
+            .spawn(move || serve_loop(model, listener, &ctl2))?;
+        Ok(Server { addr, ctl, handle: Some(handle) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop admissions; in-flight sequences finish, then the server
+    /// exits (same effect as `POST /admin/drain`).
+    pub fn drain(&self) {
+        self.ctl.draining.store(true, SeqCst);
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.ctl.service_done.load(SeqCst)
+    }
+
+    /// Wait for the serve thread to exit (requires a prior drain).
+    pub fn join(mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Acceptor + thread nursery. Runs on the dedicated serve thread; the
+/// scope guarantees the service thread and every handler exit before
+/// the model (borrowed by all of them) is dropped.
+fn serve_loop(model: InferModel, listener: TcpListener, ctl: &Ctl) {
+    let params = DecodeParams {
+        a_bits: ctl.opts.a_bits,
+        kv_bits: ctl.opts.kv_bits,
+        max_batch: ctl.opts.max_batch,
+        temperature: ctl.opts.temperature,
+        top_k: ctl.opts.top_k,
+        top_p: ctl.opts.top_p,
+        prefill_chunk: ctl.opts.prefill_chunk.max(1),
+        seed: ctl.opts.seed,
+    };
+    // Declared before the scope so scoped threads may borrow them.
+    let (adm_tx, adm_rx) = mpsc::sync_channel::<Admission>(
+        ctl.opts.queue_cap);
+    let next_id = AtomicUsize::new(0);
+    let model_ref = &model;
+    let next_id_ref = &next_id;
+    thread::scope(|s| {
+        thread::Builder::new()
+            .name("osp-service".into())
+            .spawn_scoped(s, move || {
+                service::service_loop(model_ref, params, adm_rx, ctl);
+            })
+            .expect("spawn service thread");
+        loop {
+            if ctl.service_done.load(SeqCst) {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    ctl.metrics.connections.fetch_add(1, Relaxed);
+                    if ctl.conns.fetch_add(1, SeqCst)
+                        >= ctl.opts.max_conns as i64
+                    {
+                        ctl.conns.fetch_sub(1, SeqCst);
+                        ctl.metrics.rejected_full.fetch_add(1, Relaxed);
+                        let mut stream = stream;
+                        let _ = http::write_response(
+                            &mut stream, 503,
+                            &[("Retry-After", "1")],
+                            "{\"error\":\"connection limit\"}");
+                        continue;
+                    }
+                    let tx = adm_tx.clone();
+                    let spawned = thread::Builder::new()
+                        .name("osp-handler".into())
+                        .spawn_scoped(s, move || {
+                            handle_conn(stream, tx, ctl, next_id_ref);
+                            ctl.conns.fetch_sub(1, SeqCst);
+                        });
+                    if spawned.is_err() {
+                        ctl.conns.fetch_sub(1, SeqCst);
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    thread::sleep(Duration::from_millis(2));
+                }
+                Err(_) => thread::sleep(Duration::from_millis(2)),
+            }
+        }
+    });
+}
+
+fn err_body(msg: &str) -> String {
+    Json::obj(vec![("error", Json::str(msg))]).dump()
+}
+
+/// One connection, one request (Connection: close). Never panics on
+/// client input; every early return maps to a well-formed response or
+/// a deliberate hangup.
+fn handle_conn(mut stream: TcpStream, adm_tx: SyncSender<Admission>,
+               ctl: &Ctl, next_id: &AtomicUsize) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(
+        ctl.opts.header_timeout_ms.max(1))));
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(
+        ctl.opts.write_timeout_ms.max(1))));
+    let req = match http::read_request(&mut stream,
+                                       ctl.opts.max_body_bytes) {
+        Ok(r) => r,
+        Err(e) => {
+            match &e {
+                HttpError::Timeout => {
+                    ctl.metrics.rejected_slow.fetch_add(1, Relaxed);
+                }
+                HttpError::BodyTooLarge(_) => {
+                    ctl.metrics.rejected_oversize.fetch_add(1, Relaxed);
+                }
+                HttpError::Closed | HttpError::Io(_) => {}
+                _ => {
+                    ctl.metrics.rejected_bad.fetch_add(1, Relaxed);
+                }
+            }
+            if let Some((status, msg)) = e.status() {
+                let _ = http::write_response(&mut stream, status, &[],
+                                             &err_body(msg));
+            }
+            return;
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let body = Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("draining",
+                 Json::Bool(ctl.draining.load(SeqCst))),
+            ])
+            .dump();
+            let _ = http::write_response(&mut stream, 200, &[], &body);
+        }
+        ("GET", "/metrics") => {
+            let _ = http::write_response(&mut stream, 200, &[],
+                                         &ctl.status_json().dump());
+        }
+        ("POST", "/admin/drain") => {
+            ctl.draining.store(true, SeqCst);
+            let body = Json::obj(vec![("draining", Json::Bool(true))])
+                .dump();
+            let _ = http::write_response(&mut stream, 200, &[], &body);
+        }
+        ("POST", "/generate") => {
+            handle_generate(stream, &req, adm_tx, ctl, next_id);
+        }
+        _ => {
+            ctl.metrics.rejected_bad.fetch_add(1, Relaxed);
+            let _ = http::write_response(&mut stream, 404, &[],
+                                         &err_body("no such endpoint"));
+        }
+    }
+}
+
+struct GenParams {
+    prompt: Vec<i32>,
+    max_new: usize,
+    timeout: Duration,
+}
+
+/// Validate a `/generate` body against the server caps. Every failure
+/// is a handler-side 400 — nothing invalid reaches the engine.
+fn parse_generate(body: &[u8], ctl: &Ctl)
+                  -> std::result::Result<GenParams, String> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| "body is not UTF-8".to_string())?;
+    let doc = Json::parse(text).map_err(|e| format!("bad JSON: {e}"))?;
+    let arr = doc
+        .get("prompt")
+        .and_then(|p| p.as_arr())
+        .ok_or_else(|| "missing 'prompt' array".to_string())?;
+    if arr.len() > ctl.opts.max_prompt {
+        return Err(format!("prompt len {} > cap {}", arr.len(),
+                           ctl.opts.max_prompt));
+    }
+    let vocab = ctl.info.vocab as i64;
+    let mut prompt = Vec::with_capacity(arr.len());
+    for v in arr {
+        let t = v
+            .as_f64()
+            .filter(|x| x.fract() == 0.0)
+            .map(|x| x as i64)
+            .ok_or_else(|| "prompt tokens must be integers"
+                .to_string())?;
+        if t < 0 || t >= vocab {
+            return Err(format!(
+                "prompt token {t} outside vocab 0..{vocab}"));
+        }
+        prompt.push(t as i32);
+    }
+    let max_new = match doc.get("max_new") {
+        None => ctl.opts.max_new_default,
+        Some(v) => v
+            .as_usize()
+            .filter(|&n| n > 0)
+            .ok_or_else(|| "'max_new' must be a positive integer"
+                .to_string())?,
+    }
+    .min(ctl.opts.max_new_cap);
+    let timeout_ms = match doc.get("timeout_ms") {
+        None => ctl.opts.default_timeout_ms,
+        Some(v) => v
+            .as_f64()
+            .filter(|&x| x >= 0.0 && x.fract() == 0.0)
+            .map(|x| x as u64)
+            .ok_or_else(|| "'timeout_ms' must be a non-negative \
+                            integer"
+                .to_string())?,
+    }
+    .min(ctl.opts.timeout_cap_ms);
+    Ok(GenParams { prompt, max_new,
+                   timeout: Duration::from_millis(timeout_ms.max(1)) })
+}
+
+/// The streaming request path: admit, then relay events until a
+/// terminal one. The HTTP status line is deferred until the first
+/// event so rejections and pre-stream deadlines get real status codes;
+/// once streaming starts, failures become error chunks.
+fn handle_generate(mut stream: TcpStream, req: &http::Request,
+                   adm_tx: SyncSender<Admission>, ctl: &Ctl,
+                   next_id: &AtomicUsize) {
+    let gp = match parse_generate(&req.body, ctl) {
+        Ok(gp) => gp,
+        Err(msg) => {
+            ctl.metrics.rejected_bad.fetch_add(1, Relaxed);
+            let _ = http::write_response(&mut stream, 400, &[],
+                                         &err_body(&msg));
+            return;
+        }
+    };
+    if ctl.draining.load(SeqCst) {
+        ctl.metrics.rejected_draining.fetch_add(1, Relaxed);
+        let _ = http::write_response(&mut stream, 503,
+                                     &[("Retry-After", "1")],
+                                     &err_body("draining"));
+        return;
+    }
+    // Event capacity max_new + 4: every token plus the terminal event
+    // fit without the service thread ever blocking on this client.
+    let (ev_tx, ev_rx) = mpsc::sync_channel::<Event>(gp.max_new + 4);
+    let id = next_id.fetch_add(1, SeqCst);
+    let deadline = Instant::now() + gp.timeout;
+    let adm = Admission { id, prompt: gp.prompt, max_new: gp.max_new,
+                          deadline, events: ev_tx };
+    match adm_tx.try_send(adm) {
+        Ok(()) => {
+            ctl.metrics.queue_depth.fetch_add(1, Relaxed);
+        }
+        Err(TrySendError::Full(_)) => {
+            ctl.metrics.rejected_full.fetch_add(1, Relaxed);
+            let _ = http::write_response(&mut stream, 503,
+                                         &[("Retry-After", "1")],
+                                         &err_body("queue full"));
+            return;
+        }
+        Err(TrySendError::Disconnected(_)) => {
+            ctl.metrics.rejected_draining.fetch_add(1, Relaxed);
+            let _ = http::write_response(&mut stream, 503, &[],
+                                         &err_body("shutting down"));
+            return;
+        }
+    }
+    // Relay loop. Dropping ev_rx (any early return) is the
+    // cancellation signal: the service thread's next try_send fails
+    // and it evicts the sequence.
+    let grace = Duration::from_millis(2_000);
+    let mut streaming = false;
+    let mut sent = 0usize;
+    loop {
+        let wait = deadline
+            .saturating_duration_since(Instant::now())
+            + grace;
+        let ev = match ev_rx.recv_timeout(wait) {
+            Ok(ev) => ev,
+            Err(RecvTimeoutError::Timeout)
+            | Err(RecvTimeoutError::Disconnected) => {
+                // Service silent past deadline + grace (or gone):
+                // answer something well-formed and let the drop of
+                // ev_rx cancel the sequence.
+                if streaming {
+                    let _ = http::write_chunk(
+                        &mut stream,
+                        &format!("{{\"error\":\"deadline\",\
+                                  \"tokens\":{sent}}}\n"));
+                    let _ = http::end_chunked(&mut stream);
+                } else {
+                    let _ = http::write_response(
+                        &mut stream, 504, &[],
+                        &err_body("deadline exceeded"));
+                }
+                return;
+            }
+        };
+        match ev {
+            Event::Token(t) => {
+                if !streaming {
+                    if http::start_chunked(&mut stream, 200).is_err() {
+                        return;
+                    }
+                    streaming = true;
+                }
+                sent += 1;
+                let line = format!("{{\"token\":{t}}}\n");
+                if http::write_chunk(&mut stream, &line).is_err() {
+                    return;
+                }
+            }
+            Event::Done { tokens } => {
+                if !streaming
+                    && http::start_chunked(&mut stream, 200).is_err()
+                {
+                    return;
+                }
+                let _ = http::write_chunk(
+                    &mut stream,
+                    &format!("{{\"done\":true,\"tokens\":{tokens}}}\n"));
+                let _ = http::end_chunked(&mut stream);
+                return;
+            }
+            Event::Deadline { tokens } => {
+                if streaming {
+                    let _ = http::write_chunk(
+                        &mut stream,
+                        &format!("{{\"error\":\"deadline\",\
+                                  \"tokens\":{tokens}}}\n"));
+                    let _ = http::end_chunked(&mut stream);
+                } else {
+                    let _ = http::write_response(
+                        &mut stream, 504, &[],
+                        &err_body("deadline exceeded"));
+                }
+                return;
+            }
+            Event::Rejected { status, msg } => {
+                let retry = [("Retry-After", "1")];
+                let extra: &[(&str, &str)] =
+                    if status == 503 { &retry } else { &[] };
+                let _ = http::write_response(&mut stream, status, extra,
+                                             &err_body(&msg));
+                return;
+            }
+            Event::Failed { msg } => {
+                if streaming {
+                    let _ = http::write_chunk(
+                        &mut stream,
+                        &format!("{{\"error\":{}}}\n",
+                                 Json::str(msg).dump()));
+                    let _ = http::end_chunked(&mut stream);
+                } else {
+                    let _ = http::write_response(&mut stream, 500, &[],
+                                                 &err_body(&msg));
+                }
+                return;
+            }
+        }
+    }
+}

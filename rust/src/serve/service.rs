@@ -1,0 +1,223 @@
+//! The engine-owner service thread (DESIGN.md §12).
+//!
+//! Exactly one thread touches the [`DecodeEngine`]; handler threads
+//! talk to it through two kinds of channels:
+//!
+//! * a single bounded **admission** channel (`sync_channel(queue_cap)`)
+//!   carrying [`Admission`]s in — `try_send` failure is the 503
+//!   backpressure signal, so the queue can never grow without bound;
+//! * one bounded **event** channel per request carrying [`Event`]s out.
+//!   Its capacity is `max_new + 4`, enough for every token plus the
+//!   terminal event, so the service thread can *never* block on a slow
+//!   client: `try_send` either succeeds immediately or fails with
+//!   `Disconnected`, and a disconnect (the handler dropped its receiver
+//!   because the socket write failed) cancels the sequence via
+//!   [`DecodeEngine::cancel`] without disturbing batchmates.
+//!
+//! Loop order per iteration: admit → deadline sweep → step → fan out
+//! emitted tokens → retire finished sequences. Any `Err` from
+//! [`DecodeEngine::step`] fails the in-flight requests with a 500-class
+//! event and keeps serving — the loop itself must never panic or exit
+//! on request-induced errors. The only clean exit is drain: admissions
+//! stop, in-flight sequences finish, and the thread sets
+//! `Ctl::service_done`.
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering::{Relaxed, SeqCst};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender,
+                      TryRecvError};
+use std::time::{Duration, Instant};
+
+use crate::infer::{DecodeEngine, DecodeParams, GenRequest};
+use crate::model::InferModel;
+use crate::tensor::par;
+
+use super::Ctl;
+
+/// A validated request handed from a handler thread to the service
+/// thread. The handler keeps the receiving end of `events`.
+pub(crate) struct Admission {
+    pub id: usize,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+    pub deadline: Instant,
+    pub events: SyncSender<Event>,
+}
+
+/// Service → handler stream. At most one terminal event
+/// (`Done`/`Deadline`/`Rejected`/`Failed`) is sent per request.
+pub(crate) enum Event {
+    Token(i32),
+    Done { tokens: usize },
+    Deadline { tokens: usize },
+    Rejected { status: u16, msg: String },
+    Failed { msg: String },
+}
+
+struct InFlight {
+    events: SyncSender<Event>,
+    deadline: Instant,
+    tokens: usize,
+}
+
+/// How long the service thread parks on the admission channel when the
+/// engine is idle.
+const IDLE_WAIT: Duration = Duration::from_millis(5);
+
+fn admit_one(eng: &mut DecodeEngine,
+             inflight: &mut HashMap<usize, InFlight>, adm: Admission,
+             ctl: &Ctl) {
+    let m = &ctl.metrics;
+    m.queue_depth.fetch_sub(1, Relaxed);
+    if ctl.draining.load(SeqCst) {
+        let _ = adm.events.try_send(Event::Rejected {
+            status: 503,
+            msg: "draining".into(),
+        });
+        m.rejected_draining.fetch_add(1, Relaxed);
+        return;
+    }
+    let req = GenRequest { id: adm.id, prompt: adm.prompt,
+                           max_new: adm.max_new };
+    match eng.submit(req) {
+        Ok(()) => {
+            m.admitted.fetch_add(1, Relaxed);
+            inflight.insert(adm.id, InFlight {
+                events: adm.events,
+                deadline: adm.deadline,
+                tokens: 0,
+            });
+        }
+        // Handlers validate prompts, so this is belt-and-braces: an
+        // unsubmittable request is a handler-side rejection, never an
+        // admitted one (keeps the conservation invariant).
+        Err(e) => {
+            let _ = adm.events.try_send(Event::Rejected {
+                status: 400,
+                msg: e.to_string(),
+            });
+            m.rejected_bad.fetch_add(1, Relaxed);
+        }
+    }
+}
+
+pub(crate) fn service_loop(model: &InferModel, params: DecodeParams,
+                           adm_rx: Receiver<Admission>, ctl: &Ctl) {
+    let pool = par::shared_pool();
+    let mut eng = DecodeEngine::new(model, params, pool);
+    let mut inflight: HashMap<usize, InFlight> = HashMap::new();
+    let m = &ctl.metrics;
+
+    'serve: loop {
+        // 1. Admit while slots are free; never block here.
+        while eng.n_pending() < params.max_batch {
+            match adm_rx.try_recv() {
+                Ok(adm) => {
+                    admit_one(&mut eng, &mut inflight, adm, ctl)
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    if eng.n_pending() == 0 {
+                        break 'serve;
+                    }
+                    break;
+                }
+            }
+        }
+
+        // 2. Deadline sweep: evict expired sequences (queued or
+        // active) before spending a step on them.
+        let now = Instant::now();
+        let expired: Vec<usize> = inflight
+            .iter()
+            .filter(|(_, st)| now >= st.deadline)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in expired {
+            let st = inflight.remove(&id).unwrap();
+            eng.cancel(id);
+            let _ = st.events.try_send(Event::Deadline {
+                tokens: st.tokens,
+            });
+            m.timed_out.fetch_add(1, Relaxed);
+        }
+
+        // 3. Idle: park briefly on the admission channel instead of
+        // spinning; drain exits here once the engine is empty.
+        if eng.n_pending() == 0 {
+            if ctl.draining.load(SeqCst) {
+                break 'serve;
+            }
+            match adm_rx.recv_timeout(IDLE_WAIT) {
+                Ok(adm) => {
+                    admit_one(&mut eng, &mut inflight, adm, ctl)
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break 'serve,
+            }
+            m.active_seqs.store(eng.n_pending() as i64, Relaxed);
+            continue;
+        }
+
+        // 4. Step. A request-induced error must not kill the loop:
+        // fail everything in flight, reset, keep serving.
+        let t0 = Instant::now();
+        if let Err(e) = eng.step() {
+            let msg = e.to_string();
+            for (id, st) in inflight.drain() {
+                eng.cancel(id);
+                let _ = st.events.try_send(Event::Failed {
+                    msg: msg.clone(),
+                });
+                m.failed.fetch_add(1, Relaxed);
+            }
+            m.active_seqs.store(eng.n_pending() as i64, Relaxed);
+            continue;
+        }
+        let step_dt = t0.elapsed();
+
+        // 5. Fan out this step's tokens. A dead receiver means the
+        // handler saw a socket failure and dropped it: cancel that
+        // sequence, batchmates keep streaming.
+        let mut dropped: Vec<usize> = Vec::new();
+        for (id, tok) in eng.take_emitted() {
+            let Some(st) = inflight.get_mut(&id) else { continue };
+            st.tokens += 1;
+            m.tokens_streamed.fetch_add(1, Relaxed);
+            m.token_lat.record(step_dt);
+            if st.events.try_send(Event::Token(tok)).is_err() {
+                dropped.push(id);
+            }
+        }
+        for id in dropped {
+            inflight.remove(&id);
+            eng.cancel(id);
+            m.cancelled.fetch_add(1, Relaxed);
+        }
+
+        // 6. Retire finished sequences.
+        for r in eng.take_finished() {
+            if let Some(st) = inflight.remove(&r.id) {
+                let _ = st.events.try_send(Event::Done {
+                    tokens: r.generated.len(),
+                });
+                m.completed.fetch_add(1, Relaxed);
+            }
+        }
+        m.active_seqs.store(eng.n_pending() as i64, Relaxed);
+    }
+
+    // Final sweep: reject admissions that raced in while we were
+    // deciding to exit, so no handler is left waiting on its channel.
+    while let Ok(adm) = adm_rx.try_recv() {
+        m.queue_depth.fetch_sub(1, Relaxed);
+        let _ = adm.events.try_send(Event::Rejected {
+            status: 503,
+            msg: "draining".into(),
+        });
+        m.rejected_draining.fetch_add(1, Relaxed);
+    }
+    m.active_seqs.store(0, Relaxed);
+    debug_assert_eq!(eng.n_pending(), 0, "drain leaked batch slots");
+    ctl.service_done.store(true, SeqCst);
+}

@@ -164,6 +164,92 @@ fn int_simd_and_scalar_decode_bit_identical() {
     });
 }
 
+/// Eviction mid-decode (DESIGN.md §12): cancelling one sequence — via
+/// `DecodeEngine::cancel`, the serve layer's deadline/disconnect path —
+/// leaves every surviving batchmate's token stream bit-identical to a
+/// run where the cancelled request was never admitted, and returns the
+/// victim's batch slot. Exercised with nonzero temperature so the
+/// per-request RNG path is covered too, and across random victim
+/// choices (queued and active alike).
+#[test]
+fn cancel_mid_decode_leaves_survivors_bit_identical() {
+    prop::check("cancel_mid_decode_invariant", 6, 0xCA7CE1,
+                |rng: &mut Pcg| {
+        let cfg = cfg_case(rng);
+        let g = Grammar::new(cfg.vocab_size, 42);
+        let n = 3 + rng.below(3) as usize;
+        let plen = 2 + rng.below(5) as usize;
+        let prompts = tasks::grammar_prompts(&g, n, plen,
+                                             rng.next_u64());
+        let victim = rng.below_usize(n);
+        let steps_before = 1 + rng.below_usize(3);
+        (cfg, prompts, victim, steps_before, rng.next_u64())
+    }, |(cfg, prompts, victim, steps_before, seed)| {
+        use osp::infer::{DecodeEngine, GenRequest};
+        let model = InferModel::synthetic(cfg, *seed).quantized(4);
+        let mut params = DecodeParams::greedy(4, 4, 2);
+        params.temperature = 0.9;
+        params.seed = 0x5EED ^ *seed;
+        let max_new = 8usize;
+        // Run A: admit everyone, step a little, cancel the victim,
+        // finish. steps_before <= 3 < max_new, so an active victim
+        // cannot have finished before the cancel.
+        let mut eng = DecodeEngine::new(&model, params, None);
+        for (i, p) in prompts.iter().enumerate() {
+            eng.submit(GenRequest { id: i, prompt: p.clone(), max_new })
+                .unwrap();
+        }
+        for _ in 0..*steps_before {
+            eng.step().map_err(|e| format!("step: {e}"))?;
+        }
+        if !eng.cancel(*victim) {
+            return Err(format!("victim {victim} not cancellable"));
+        }
+        if eng.cancel(*victim) {
+            return Err("double-cancel succeeded".into());
+        }
+        let mut got = eng.run().map_err(|e| format!("run: {e}"))?;
+        if eng.n_active() != 0 || eng.n_queued() != 0 {
+            return Err(format!("leaked slots: {} active {} queued",
+                               eng.n_active(), eng.n_queued()));
+        }
+        if eng.stats.cancelled != 1 {
+            return Err(format!("stats.cancelled = {}",
+                               eng.stats.cancelled));
+        }
+        got.sort_by_key(|r| r.id);
+        if got.iter().any(|r| r.id == *victim) {
+            return Err("cancelled request still finished".into());
+        }
+        if got.len() != prompts.len() - 1 {
+            return Err(format!("{} survivors of {}", got.len(),
+                               prompts.len() - 1));
+        }
+        // Run B: the victim is never admitted; same ids, so each
+        // survivor keeps its sampling RNG stream.
+        let mut base = DecodeEngine::new(&model, params, None);
+        for (i, p) in prompts.iter().enumerate() {
+            if i == *victim {
+                continue;
+            }
+            base.submit(GenRequest { id: i, prompt: p.clone(),
+                                     max_new })
+                .unwrap();
+        }
+        let mut want = base.run().map_err(|e| format!("run: {e}"))?;
+        want.sort_by_key(|r| r.id);
+        for (g, w) in got.iter().zip(&want) {
+            if g.id != w.id || g.generated != w.generated {
+                return Err(format!(
+                    "survivor {} diverged after cancel of {victim}: \
+                     {:?} != {:?}",
+                    g.id, g.generated, w.generated));
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Streams are independent of scheduler batch composition: decoding
 /// sequences together (any max_batch) equals decoding them alone.
 #[test]

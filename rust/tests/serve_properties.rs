@@ -1,0 +1,427 @@
+//! Serve front-end robustness contract (DESIGN.md §12, ISSUE 7
+//! acceptance): under seeded chaos — client aborts, malformed and
+//! oversized requests, slow-loris headers, tiny deadlines, queue-full
+//! floods — the server never panics or leaks batch slots, every
+//! rejection is a well-formed HTTP response, `/metrics` reconciles
+//! with client-observed outcomes, surviving streams are bit-identical
+//! to an unperturbed run, and `/admin/drain` terminates cleanly.
+//!
+//! All servers bind 127.0.0.1:0 (ephemeral ports), so the suite can
+//! run in parallel with itself and with CI neighbors.
+
+use std::net::TcpStream;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use osp::infer::{InferConfig, InferModel};
+use osp::serve::chaos::ChaosSpec;
+use osp::serve::http::{header, ClientConn};
+use osp::serve::load::{self, LoadOpts};
+use osp::serve::{ServeOpts, Server};
+use osp::util::json::Json;
+
+fn tiny_cfg() -> InferConfig {
+    InferConfig { vocab_size: 96, d_model: 32, n_layers: 2, n_heads: 2,
+                  d_ff: 40, rope_theta: 10000.0, norm_ss: true,
+                  embproj: false }
+}
+
+/// Synthetic quantized model + server on an ephemeral port. The model
+/// is deterministic from (cfg, seed): two spawns with the same inputs
+/// serve bit-identical engines, which is what the parity tests lean on.
+fn spawn_server(cfg: &InferConfig, model_seed: u64,
+                tweak: impl FnOnce(&mut ServeOpts)) -> Server {
+    let model = InferModel::synthetic(cfg, model_seed).quantized(4);
+    let mut opts = ServeOpts {
+        addr: "127.0.0.1:0".into(),
+        header_timeout_ms: 400,
+        write_timeout_ms: 2_000,
+        ..ServeOpts::default()
+    };
+    tweak(&mut opts);
+    Server::spawn(model, opts).expect("spawn server")
+}
+
+#[derive(Debug)]
+struct GenOutcome {
+    status: u16,
+    retry_after: bool,
+    tokens: Vec<i64>,
+    /// `"done"`, `"deadline"`, another error string, or None if the
+    /// stream ended without a terminal event.
+    terminal: Option<String>,
+}
+
+/// One well-behaved streamed /generate exchange.
+fn gen_stream(addr: &str, prompt: &[i32], max_new: usize,
+              timeout_ms: u64) -> Result<GenOutcome, String> {
+    let stream =
+        TcpStream::connect(addr).map_err(|e| e.to_string())?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .map_err(|e| e.to_string())?;
+    stream.set_nodelay(true).ok();
+    let mut conn = ClientConn::new(stream);
+    let body = format!(
+        "{{\"prompt\":{prompt:?},\"max_new\":{max_new},\
+         \"timeout_ms\":{timeout_ms}}}");
+    conn.send_request("POST", "/generate", &body)
+        .map_err(|e| e.to_string())?;
+    let (status, headers) = conn.read_head().map_err(|e| {
+        e.to_string()
+    })?;
+    let retry_after = header(&headers, "retry-after").is_some();
+    let mut out = GenOutcome { status, retry_after, tokens: Vec::new(),
+                               terminal: None };
+    if status != 200 {
+        return Ok(out);
+    }
+    loop {
+        let Some(line) =
+            conn.next_chunk().map_err(|e| e.to_string())?
+        else {
+            return Ok(out);
+        };
+        let ev = Json::parse(line.trim()).map_err(|e| {
+            format!("bad event '{line}': {e}")
+        })?;
+        if let Some(t) = ev.get("token").and_then(|v| v.as_f64()) {
+            out.tokens.push(t as i64);
+        } else if ev.get("done").is_some() {
+            out.terminal = Some("done".into());
+        } else if let Some(e) =
+            ev.get("error").and_then(|v| v.as_str())
+        {
+            out.terminal = Some(e.to_string());
+        }
+    }
+}
+
+fn metric(doc: &Json, key: &str) -> f64 {
+    doc.get("metrics")
+        .and_then(|m| m.get(key))
+        .and_then(|v| v.as_f64())
+        .unwrap_or(f64::NAN)
+}
+
+/// Poll /metrics until nothing is in flight (aborted sequences are
+/// cancelled lazily, on their next emission attempt).
+fn settle(addr: &str) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (st, doc) =
+            load::http_get(addr, "/metrics").expect("GET /metrics");
+        assert_eq!(st, 200);
+        if metric(&doc, "in_flight") == 0.0
+            && metric(&doc, "queue_depth") == 0.0
+        {
+            return doc;
+        }
+        assert!(Instant::now() < deadline,
+                "in-flight work never drained: {}", doc.dump());
+        thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// The chaos matrix: seeded faults of every class against one server.
+/// Afterwards the server is still live, counters obey conservation
+/// (admitted == completed + timed_out + cancelled + failed, in-flight
+/// 0 — i.e. no leaked batch slots), server and client tallies
+/// reconcile, and drain exits cleanly.
+#[test]
+fn chaos_matrix_server_survives_and_metrics_reconcile() {
+    let cfg = tiny_cfg();
+    let server = spawn_server(&cfg, 11, |o| {
+        o.max_batch = 4;
+        o.queue_cap = 4;
+    });
+    let addr = server.addr().to_string();
+    let (st, health) =
+        load::http_get(&addr, "/healthz").expect("healthz");
+    assert_eq!(st, 200);
+    assert_eq!(health.get("ok").and_then(|v| v.as_bool()), Some(true));
+
+    let chaos = ChaosSpec::parse(
+        "seed=5,abort=0.25,malformed=0.15,oversize=0.1,slowloris=0.1,\
+         tiny_deadline=0.15,hold_ms=900")
+        .expect("chaos spec");
+    let opts = LoadOpts { addr: addr.clone(), clients: 6, requests: 6,
+                          prompt_len: 6, max_new: 8,
+                          timeout_ms: 10_000, chaos,
+                          chaos_label: "matrix".into(), seed: 3 };
+    let doc = load::run_load(&opts).expect("run_load");
+    let row = doc.get("rows").and_then(|r| r.as_arr()).unwrap()[0]
+        .clone();
+    let client = |k: &str| {
+        row.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0)
+    };
+    assert_eq!(client("requests"), 36.0, "{}", row.dump());
+    assert!(client("completed") > 0.0,
+            "chaos drowned every request: {}", row.dump());
+    assert_eq!(client("errors"), 0.0,
+               "ill-formed server responses: {}", row.dump());
+
+    // Server still live and every slot returned.
+    let after = settle(&addr);
+    let g = |k: &str| metric(&after, k);
+    assert_eq!(g("admitted"),
+               g("completed") + g("timed_out") + g("cancelled")
+                   + g("failed"),
+               "conservation violated: {}", after.dump());
+    assert_eq!(g("failed"), 0.0, "{}", after.dump());
+    assert_eq!(g("active_seqs"), 0.0, "{}", after.dump());
+
+    // Client/server reconciliation. Client-side aborts may still
+    // complete server-side (the stream fit the event buffer), so the
+    // relations are one-sided where the race allows it.
+    let server_rejected = g("rejected_full") + g("rejected_bad")
+        + g("rejected_oversize")
+        + g("rejected_slow")
+        + g("rejected_draining");
+    assert_eq!(server_rejected, client("rejected"),
+               "rejections disagree: client row {} server {}",
+               row.dump(), after.dump());
+    assert!(g("completed") >= client("completed"),
+            "client saw more completions than the server recorded");
+    assert!(g("timed_out") + g("cancelled")
+                >= client("deadline"),
+            "client deadlines unaccounted: {}", after.dump());
+    assert!(g("cancelled") + g("completed") + g("timed_out")
+                >= client("aborted"),
+            "aborted requests unaccounted: {}", after.dump());
+
+    // Drain terminates cleanly.
+    let (st, drain) =
+        load::http_post(&addr, "/admin/drain", "").expect("drain");
+    assert_eq!(st, 200);
+    assert_eq!(drain.get("draining").and_then(|v| v.as_bool()),
+               Some(true));
+    server.join();
+}
+
+/// Acceptance bit-parity: streams served while chaos clients abort,
+/// flood, and time out around them are bit-identical to the same
+/// requests against an unperturbed server over the same model.
+#[test]
+fn surviving_streams_bit_identical_under_chaos() {
+    let cfg = tiny_cfg();
+    let probes: Vec<Vec<i32>> = (0..4)
+        .map(|i| vec![1 + i, 2 + i, 3, 5])
+        .collect();
+
+    // Unperturbed run.
+    let baseline: Vec<Vec<i64>> = {
+        let server = spawn_server(&cfg, 23, |o| {
+            o.max_batch = 4;
+            o.queue_cap = 8;
+        });
+        let addr = server.addr().to_string();
+        let streams = probes
+            .iter()
+            .map(|p| {
+                let out =
+                    gen_stream(&addr, p, 8, 20_000).expect("probe");
+                assert_eq!(out.status, 200, "{out:?}");
+                assert_eq!(out.terminal.as_deref(), Some("done"),
+                           "{out:?}");
+                out.tokens
+            })
+            .collect();
+        server.drain();
+        server.join();
+        streams
+    };
+
+    // Same model, same probes — now with a chaos load alongside.
+    let server = spawn_server(&cfg, 23, |o| {
+        o.max_batch = 4;
+        o.queue_cap = 8;
+    });
+    let addr = server.addr().to_string();
+    let chaos_addr = addr.clone();
+    let chaos_thread = thread::spawn(move || {
+        let chaos = ChaosSpec::parse(
+            "seed=9,abort=0.4,malformed=0.2,tiny_deadline=0.2")
+            .expect("chaos spec");
+        let opts = LoadOpts { addr: chaos_addr, clients: 4,
+                              requests: 5, prompt_len: 5, max_new: 6,
+                              timeout_ms: 8_000, chaos,
+                              chaos_label: "parity".into(), seed: 4 };
+        load::run_load(&opts).expect("chaos load")
+    });
+    let got: Vec<Vec<i64>> = probes
+        .iter()
+        .map(|p| loop {
+            let out = gen_stream(&addr, p, 8, 20_000).expect("probe");
+            if out.status == 200
+                && out.terminal.as_deref() == Some("done")
+            {
+                break out.tokens;
+            }
+            // Under flood a probe may catch a full queue; anything
+            // else well-formed would be a deadline, which the long
+            // timeout rules out.
+            assert_eq!(out.status, 503, "unexpected probe outcome \
+                                         {out:?}");
+            thread::sleep(Duration::from_millis(30));
+        })
+        .collect();
+    chaos_thread.join().expect("chaos thread");
+    assert_eq!(got, baseline,
+               "chaos perturbed surviving token streams");
+    server.drain();
+    server.join();
+}
+
+/// A 10-way simultaneous flood against max_batch 1 / queue_cap 1:
+/// every response is well-formed, the overflow gets 503s with a
+/// Retry-After header, and nothing wedges or panics.
+#[test]
+fn queue_full_flood_gets_well_formed_503s() {
+    let cfg = tiny_cfg();
+    let server = spawn_server(&cfg, 31, |o| {
+        o.max_batch = 1;
+        o.queue_cap = 1;
+        o.max_new_cap = 512;
+    });
+    let addr = server.addr().to_string();
+    let outcomes: Vec<GenOutcome> = thread::scope(|s| {
+        let handles: Vec<_> = (0..10)
+            .map(|i| {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    gen_stream(&addr, &[1, 2, 3, (i % 7) as i32], 128,
+                               30_000)
+                        .expect("flood request")
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let full: usize =
+        outcomes.iter().filter(|o| o.status == 503).count();
+    let done = outcomes
+        .iter()
+        .filter(|o| {
+            o.status == 200 && o.terminal.as_deref() == Some("done")
+        })
+        .count();
+    assert_eq!(full + done, outcomes.len(),
+               "unexpected outcomes: {outcomes:?}");
+    assert!(full >= 1,
+            "10-way flood against a 2-slot server produced no 503s");
+    for o in outcomes.iter().filter(|o| o.status == 503) {
+        assert!(o.retry_after, "503 without Retry-After: {o:?}");
+    }
+    let after = settle(&addr);
+    assert_eq!(metric(&after, "rejected_full"), full as f64, "{}",
+               after.dump());
+    server.drain();
+    server.join();
+}
+
+/// Deadline expiry evicts a sequence mid-decode (504 or a mid-stream
+/// deadline event), counts as timed_out, and leaves a concurrent
+/// batchmate's stream bit-identical to an unperturbed run.
+#[test]
+fn deadline_evicts_mid_decode_without_disturbing_batchmates() {
+    let cfg = InferConfig { vocab_size: 128, d_model: 96, n_layers: 3,
+                            n_heads: 4, d_ff: 128,
+                            rope_theta: 10000.0, norm_ss: true,
+                            embproj: false };
+    let mate_prompt = vec![7, 8, 9, 10];
+
+    let baseline = {
+        let server = spawn_server(&cfg, 47, |o| o.max_batch = 4);
+        let addr = server.addr().to_string();
+        let out = gen_stream(&addr, &mate_prompt, 12, 30_000)
+            .expect("baseline");
+        assert_eq!(out.terminal.as_deref(), Some("done"), "{out:?}");
+        server.drain();
+        server.join();
+        out.tokens
+    };
+
+    let server = spawn_server(&cfg, 47, |o| {
+        o.max_batch = 4;
+        o.max_new_cap = 10_000;
+    });
+    let addr = server.addr().to_string();
+    let victim_addr = addr.clone();
+    // An 8000-token request under a 25 ms deadline cannot finish: it
+    // must be evicted mid-decode.
+    let victim = thread::spawn(move || {
+        gen_stream(&victim_addr, &[1, 2, 3], 8000, 25)
+            .expect("victim request")
+    });
+    thread::sleep(Duration::from_millis(5));
+    let mate = gen_stream(&addr, &mate_prompt, 12, 30_000)
+        .expect("batchmate");
+    let vout = victim.join().expect("victim thread");
+    let deadline_seen = vout.status == 504
+        || vout.terminal.as_deref() == Some("deadline");
+    assert!(deadline_seen, "victim was not evicted: {vout:?}");
+    assert_eq!(mate.terminal.as_deref(), Some("done"), "{mate:?}");
+    assert_eq!(mate.tokens, baseline,
+               "deadline eviction disturbed a batchmate's stream");
+    let after = settle(&addr);
+    assert_eq!(metric(&after, "timed_out"), 1.0, "{}", after.dump());
+    server.drain();
+    server.join();
+}
+
+/// Malformed inputs of several shapes: every one gets a well-formed
+/// 4xx and the server keeps answering afterwards.
+#[test]
+fn malformed_requests_get_400s_never_panics() {
+    let cfg = tiny_cfg();
+    let server = spawn_server(&cfg, 13, |o| o.max_batch = 2);
+    let addr = server.addr().to_string();
+    let cases: &[(&str, u16)] = &[
+        ("{not json", 400),
+        ("{\"max_new\":4}", 400),                   // missing prompt
+        ("{\"prompt\":[1,2],\"max_new\":0}", 400),  // zero max_new
+        ("{\"prompt\":[99999]}", 400),              // out of vocab
+        ("{\"prompt\":[-1]}", 400),                 // negative token
+        ("{\"prompt\":[1.5]}", 400),                // non-integer
+        ("{\"prompt\":\"hi\"}", 400),               // wrong type
+    ];
+    for (body, want) in cases {
+        let (st, err) = load::http_post(&addr, "/generate", body)
+            .expect("post");
+        assert_eq!(st, *want, "body {body}: {}", err.dump());
+        assert!(err.get("error").is_some(), "{}", err.dump());
+    }
+    let (st, _) =
+        load::http_post(&addr, "/nope", "{}").expect("post 404");
+    assert_eq!(st, 404);
+    // Still serving real work afterwards.
+    let out = gen_stream(&addr, &[1, 2, 3], 4, 10_000).expect("gen");
+    assert_eq!(out.terminal.as_deref(), Some("done"), "{out:?}");
+    assert_eq!(out.tokens.len(), 4, "{out:?}");
+    let after = settle(&addr);
+    assert_eq!(metric(&after, "rejected_bad"),
+               cases.len() as f64 + 1.0, "{}", after.dump());
+    server.drain();
+    server.join();
+}
+
+/// Draining rejects new work with a 503 while finishing nothing is
+/// in flight, and join() returns promptly.
+#[test]
+fn drain_rejects_new_work_then_exits() {
+    let cfg = tiny_cfg();
+    let server = spawn_server(&cfg, 17, |o| o.max_batch = 2);
+    let addr = server.addr().to_string();
+    let out = gen_stream(&addr, &[3, 1, 4], 4, 10_000).expect("gen");
+    assert_eq!(out.terminal.as_deref(), Some("done"));
+    let (st, _) =
+        load::http_post(&addr, "/admin/drain", "").expect("drain");
+    assert_eq!(st, 200);
+    // The acceptor may already have exited; if it still answers, the
+    // answer must be a draining 503.
+    if let Ok(after) = gen_stream(&addr, &[3, 1, 4], 4, 10_000) {
+        assert_eq!(after.status, 503, "{after:?}");
+    }
+    server.join();
+}
