@@ -4,13 +4,15 @@
 //! throughput regressions between pushes.
 //!
 //! Rows are matched on their *identity fields* (the sweep coordinates:
-//! op/phase/config/size/bit-widths/batch/chunk); every shared numeric
-//! field that looks like a metric — `*_ns_op` timings (lower is better)
-//! or `*per_sec*` rates (higher is better) — is compared and normalized
-//! into a speedup where `> 1.0` means NEW is faster. Context fields
-//! (byte counts, step counts) are ignored, and rows present in only one
-//! file are reported but never fail the diff, so adding or removing
-//! bench rows does not break the gate.
+//! op/phase/config/size/bit-widths/batch/chunk/page geometry); every
+//! shared numeric field that looks like a metric — `*_ns_op` timings
+//! (lower is better), `*per_sec*` rates (higher is better), or
+//! `*_bytes*`/`*_pages*` memory footprints (lower is better) — is
+//! compared and normalized into a speedup where `> 1.0` means NEW is
+//! faster (or smaller). Other context fields (step counts, outcome
+//! tallies) are ignored, and rows present in only one file are
+//! reported but never fail the diff, so adding or removing bench rows
+//! does not break the gate.
 
 use std::collections::BTreeMap;
 
@@ -22,10 +24,14 @@ use crate::util::json::Json;
 /// on a row participates in its key. `clients`/`chaos` key the
 /// `BENCH_serve.json` rows: the same serve sweep under a different
 /// client count or fault mix is a different experiment, not a
-/// regression candidate.
-const IDENTITY_FIELDS: [&str; 13] = [
+/// regression candidate. Likewise `kv_page_rows`/`share_prefix`
+/// (DESIGN.md §13): page geometry and prefix sharing change the
+/// memory-footprint metrics by design, so runs under different KV
+/// layouts must not be diffed against each other.
+const IDENTITY_FIELDS: [&str; 15] = [
     "op", "phase", "config", "size", "w_bits", "a_bits", "kv_bits", "bits",
-    "batch", "chunk", "prompt_len", "clients", "chaos",
+    "batch", "chunk", "prompt_len", "clients", "chaos", "kv_page_rows",
+    "share_prefix",
 ];
 
 /// Lower-is-better metrics: `*_ns_op` kernel timings and the serve
@@ -36,6 +42,13 @@ fn is_time_metric(key: &str) -> bool {
 
 fn is_rate_metric(key: &str) -> bool {
     key.contains("per_sec")
+}
+
+/// Lower-is-better memory metrics: byte and page footprints
+/// (`weight_bytes`, `kv_bytes_peak`, `kv_pages_shared`, ...). Counted
+/// like timings: `speedup > 1.0` means NEW uses less memory.
+fn is_mem_metric(key: &str) -> bool {
+    key.contains("_bytes") || key.contains("_pages")
 }
 
 /// One compared metric of one matched row.
@@ -121,8 +134,9 @@ pub fn diff_reports(old: &Json, new: &Json) -> Result<DiffReport> {
         };
         let Some(fields) = orow.as_obj() else { continue };
         for (metric, oval) in fields {
-            let time = is_time_metric(metric);
-            if !time && !is_rate_metric(metric) {
+            // Time and memory share polarity: lower is better.
+            let lower = is_time_metric(metric) || is_mem_metric(metric);
+            if !lower && !is_rate_metric(metric) {
                 continue;
             }
             let (Some(ov), Some(nv)) = (
@@ -134,7 +148,7 @@ pub fn diff_reports(old: &Json, new: &Json) -> Result<DiffReport> {
             if !(ov > 0.0 && nv > 0.0) {
                 continue; // degenerate or non-finite sample
             }
-            let speedup = if time { ov / nv } else { nv / ov };
+            let speedup = if lower { ov / nv } else { nv / ov };
             report.metrics.push(MetricDiff {
                 row: key.clone(),
                 metric: metric.clone(),
@@ -183,7 +197,7 @@ mod tests {
             ("w_bits", Json::num(bits)),
             ("packed_ns_op", Json::num(ns)),
             ("tokens_per_sec", Json::num(tps)),
-            ("weight_bytes", Json::num(1234.0)), // context: never compared
+            ("weight_bytes", Json::num(1234.0)), // memory: lower wins
         ])
     }
 
@@ -192,12 +206,15 @@ mod tests {
         let old = report(4.0, vec![matvec_row(512.0, 4.0, 2000.0, 100.0)]);
         let new = report(4.0, vec![matvec_row(512.0, 4.0, 1000.0, 150.0)]);
         let d = diff_reports(&old, &new).unwrap();
-        assert_eq!(d.metrics.len(), 2, "{:?}", d.metrics);
+        assert_eq!(d.metrics.len(), 3, "{:?}", d.metrics);
         for m in &d.metrics {
             match m.metric.as_str() {
                 "packed_ns_op" => assert!((m.speedup - 2.0).abs() < 1e-12),
                 "tokens_per_sec" => {
                     assert!((m.speedup - 1.5).abs() < 1e-12)
+                }
+                "weight_bytes" => {
+                    assert!((m.speedup - 1.0).abs() < 1e-12)
                 }
                 other => panic!("unexpected metric {other}"),
             }
@@ -228,7 +245,7 @@ mod tests {
         assert_eq!(d.only_old.len(), 1);
         assert_eq!(d.only_new.len(), 1);
         assert!(d.thread_note.is_some());
-        assert_eq!(d.metrics.len(), 2); // only the matched row compares
+        assert_eq!(d.metrics.len(), 3); // only the matched row compares
     }
 
     /// The §11 integer-kernel rows: `int_ns_op` / `int_scalar_ns_op`
@@ -308,6 +325,50 @@ mod tests {
                 other => panic!("unexpected metric {other}"),
             }
         }
+    }
+
+    /// The §13 paged-KV fields: `*_bytes*`/`*_pages*` footprints diff
+    /// as lower-is-better memory metrics, and `kv_page_rows` /
+    /// `share_prefix` are identity — a run under a different page
+    /// geometry or sharing mode is a different experiment.
+    #[test]
+    fn memory_metrics_are_lower_is_better_and_kv_layout_is_identity() {
+        assert!(is_mem_metric("kv_bytes_peak"));
+        assert!(is_mem_metric("kv_pages_peak"));
+        assert!(is_mem_metric("kv_pages_shared"));
+        assert!(is_mem_metric("weight_bytes"));
+        assert!(!is_mem_metric("tokens"));
+        assert!(!is_mem_metric("completed"));
+        assert!(IDENTITY_FIELDS.contains(&"kv_page_rows"));
+        assert!(IDENTITY_FIELDS.contains(&"share_prefix"));
+        let kv_row = |page_rows: f64, share: &str, bytes: f64| {
+            Json::obj(vec![
+                ("phase", Json::str("serve")),
+                ("config", Json::str("4-4-4")),
+                ("clients", Json::num(8.0)),
+                ("kv_page_rows", Json::num(page_rows)),
+                ("share_prefix", Json::str(share)),
+                ("kv_bytes_peak", Json::num(bytes)),
+            ])
+        };
+        // Same layout, halved footprint: speedup 2.0 on the memory
+        // metric. A different page size must split row identity.
+        let old = report(4.0, vec![kv_row(64.0, "on", 4096.0)]);
+        let new = report(4.0, vec![kv_row(64.0, "on", 2048.0),
+                                   kv_row(16.0, "on", 2048.0)]);
+        let d = diff_reports(&old, &new).unwrap();
+        assert_eq!(d.metrics.len(), 1, "{:?}", d.metrics);
+        assert_eq!(d.metrics[0].metric, "kv_bytes_peak");
+        assert!((d.metrics[0].speedup - 2.0).abs() < 1e-12);
+        assert_eq!(d.only_new.len(), 1, "{:?}", d.only_new);
+        assert!(d.only_new[0].contains("kv_page_rows=16"),
+                "{:?}", d.only_new);
+        // Sharing mode splits identity the same way.
+        let off = report(4.0, vec![kv_row(64.0, "off", 4096.0)]);
+        let d2 = diff_reports(&old, &off).unwrap();
+        assert!(d2.metrics.is_empty(), "{:?}", d2.metrics);
+        assert_eq!(d2.only_old.len(), 1);
+        assert_eq!(d2.only_new.len(), 1);
     }
 
     /// Added/removed rows are informational: a NEW-only artifact (e.g.

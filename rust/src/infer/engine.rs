@@ -31,11 +31,12 @@
 //! `rust/tests/infer_properties.rs` and `rust/tests/model_properties.rs`).
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::model::kv::SeqKv;
+use crate::model::kv::{PagePool, PoolGauges, SeqKv, DEFAULT_PAGE_ROWS};
 use crate::model::{sample_token_filtered, InferModel, LogitsMode, SeqBlock};
 use crate::util::rng::Pcg;
 use crate::util::threadpool::ThreadPool;
@@ -63,6 +64,17 @@ pub struct DecodeParams {
     pub prefill_chunk: usize,
     /// Base seed; each request samples from `seed ^ request id`.
     pub seed: u64,
+    /// Rows per KV page (`--kv-page-rows`; DESIGN.md §13). Any value
+    /// >= 1 is bit-identical; sharing needs `n_heads` to divide it.
+    pub kv_page_rows: usize,
+    /// Soft KV pool budget in MiB (`--kv-pool-mb`; 0 = unbounded).
+    /// Enforced by admission control, never by allocation.
+    pub kv_pool_mb: usize,
+    /// Copy-on-write prefix sharing across requests
+    /// (`--share-prefix`). Off by default: shared streams are pinned
+    /// bit-identical to unshared ones, but the library default stays
+    /// conservative like `IntMode`.
+    pub share_prefix: bool,
 }
 
 impl DecodeParams {
@@ -70,7 +82,9 @@ impl DecodeParams {
                   -> DecodeParams {
         DecodeParams { a_bits, kv_bits, max_batch, temperature: 0.0,
                        top_k: 0, top_p: 1.0,
-                       prefill_chunk: DEFAULT_PREFILL_CHUNK, seed: 0 }
+                       prefill_chunk: DEFAULT_PREFILL_CHUNK, seed: 0,
+                       kv_page_rows: DEFAULT_PAGE_ROWS, kv_pool_mb: 0,
+                       share_prefix: false }
     }
 }
 
@@ -98,6 +112,8 @@ struct Active {
     max_new: usize,
     cache: SeqKv,
     rng: Pcg,
+    /// Prefix pages offered to the pool registry (once per request).
+    registered: bool,
 }
 
 impl Active {
@@ -124,8 +140,14 @@ pub struct DecodeStats {
     /// Requests evicted via [`DecodeEngine::cancel`] (deadline expiry or
     /// client disconnect), queued or active.
     pub cancelled: u64,
-    /// Peak total KV bytes across concurrently-active sequences.
+    /// Peak physical KV bytes in the page pool (shared pages counted
+    /// once — DESIGN.md §13).
     pub peak_kv_bytes: usize,
+    /// Peak distinct physical KV pages in the pool.
+    pub kv_pages_peak: usize,
+    /// Peak page references saved by prefix sharing
+    /// (`refs_live - pages_live` high-water mark; 0 with sharing off).
+    pub kv_pages_shared: usize,
     /// Integer-kernel backend the model's linears resolved to for this
     /// run's `a_bits` (None = f32 LUT path).
     pub int_kernel: Option<&'static str>,
@@ -151,6 +173,10 @@ pub struct DecodeEngine<'m, 'p> {
     model: &'m InferModel,
     params: DecodeParams,
     pool: Option<&'p ThreadPool>,
+    /// Page pool every admitted sequence's cache draws from
+    /// (DESIGN.md §13). Private to this engine, so the `Drop` balance
+    /// assert can demand zero outstanding refs.
+    kv_pool: Arc<PagePool>,
     queue: VecDeque<GenRequest>,
     active: Vec<Active>,
     finished: Vec<GenResult>,
@@ -168,9 +194,53 @@ impl<'m, 'p> DecodeEngine<'m, 'p> {
             int_kernel: model.int_kernel_label(params.a_bits),
             ..DecodeStats::default()
         };
-        DecodeEngine { model, params, pool, queue: VecDeque::new(),
-                       active: Vec::new(), finished: Vec::new(),
-                       emitted: Vec::new(), stats }
+        let kv_pool = PagePool::with_budget_mb(
+            model.cfg.head_dim(), params.kv_bits,
+            params.kv_page_rows.max(1), params.kv_pool_mb);
+        DecodeEngine { model, params, pool, kv_pool,
+                       queue: VecDeque::new(), active: Vec::new(),
+                       finished: Vec::new(), emitted: Vec::new(),
+                       stats }
+    }
+
+    /// The engine's KV page pool (page-size/sharing-aware tests build
+    /// caches against it; serve reads gauges via
+    /// [`DecodeEngine::pool_gauges`]).
+    pub fn kv_pool(&self) -> &Arc<PagePool> {
+        &self.kv_pool
+    }
+
+    /// Instantaneous page-pool gauges (`/metrics`, serve-bench rows).
+    pub fn pool_gauges(&self) -> PoolGauges {
+        self.kv_pool.gauges()
+    }
+
+    /// Drop the prefix-sharing registry, returning its page refs to
+    /// the pool — drain-time leak accounting calls this before
+    /// demanding `refs_live == pages_live == 0`.
+    pub fn clear_prefix_cache(&self) {
+        self.kv_pool.clear_prefixes();
+    }
+
+    /// Worst-case whole-lifetime page footprint of a `tokens`-token
+    /// sequence (one K and one V store per layer; ignores sharing, so
+    /// admission control stays conservative).
+    fn pages_needed(&self, tokens: usize) -> usize {
+        let rows = tokens * self.model.cfg.n_heads;
+        2 * self.model.cfg.n_layers * self.kv_pool.pages_for_rows(rows)
+    }
+
+    /// Whether the pool can hold a whole `(prompt + max_new)`-token
+    /// sequence *right now*. Always true without a `--kv-pool-mb`
+    /// budget; serve turns `false` into 503 backpressure while other
+    /// sequences are running (an idle engine admits regardless — see
+    /// [`DecodeEngine::step`]'s registry-reclaim progress guarantee).
+    pub fn pool_has_room(&self, prompt_len: usize, max_new: usize)
+                         -> bool {
+        let g = self.kv_pool.gauges();
+        g.cap_pages == 0
+            || g.pages_live + self.pages_needed(prompt_len + max_new)
+                <= g.cap_pages
     }
 
     /// Enqueue a request (admitted at the next step with a free slot).
@@ -187,6 +257,14 @@ impl<'m, 'p> DecodeEngine<'m, 'p> {
             if t < 0 || t as usize >= vocab {
                 bail!("request {}: prompt token {t} outside vocab 0..{vocab}",
                       req.id);
+            }
+        }
+        let cap = self.kv_pool.gauges().cap_pages;
+        if cap > 0 {
+            let need = self.pages_needed(req.prompt.len() + req.max_new);
+            if need > cap {
+                bail!("request {}: worst case needs {need} KV pages, \
+                       pool budget is {cap} pages", req.id);
             }
         }
         self.queue.push_back(req);
@@ -221,11 +299,30 @@ impl<'m, 'p> DecodeEngine<'m, 'p> {
             return true;
         }
         if let Some(i) = self.active.iter().position(|a| a.id == id) {
-            self.active.remove(i);
+            let a = self.active.remove(i);
+            Self::teardown(a);
             self.stats.cancelled += 1;
             return true;
         }
         false
+    }
+
+    /// The one sequence-teardown path (DESIGN.md §13): every way an
+    /// active sequence leaves the engine — finishing, `cancel`
+    /// (deadline expiry or client disconnect), or engine drop —
+    /// funnels its `Active` through here, so the batch slot and every
+    /// KV page ref it holds are returned at a single point and pool
+    /// balance is provable from any exit path. Returns
+    /// `(id, prompt_len, generated)` for the finish path; cancel
+    /// paths drop the triple.
+    fn teardown(a: Active) -> (usize, usize, Vec<i32>) {
+        let Active { id, prompt_len, tokens, cache, .. } = a;
+        // Dropping the cache releases its page refs through the pool
+        // (see `QRows::drop`) — eagerly, so slot and pages free
+        // together.
+        drop(cache);
+        let generated = tokens[prompt_len.min(tokens.len())..].to_vec();
+        (id, prompt_len, generated)
     }
 
     /// Tokens sampled by the most recent [`DecodeEngine::step`], as
@@ -246,14 +343,44 @@ impl<'m, 'p> DecodeEngine<'m, 'p> {
 
     fn admit(&mut self) {
         while self.active.len() < self.params.max_batch {
-            let Some(req) = self.queue.pop_front() else { break };
+            let Some(req) = self.queue.front() else { break };
+            let g = self.kv_pool.gauges();
+            if g.cap_pages > 0 {
+                let need =
+                    self.pages_needed(req.prompt.len() + req.max_new);
+                if g.pages_live + need > g.cap_pages {
+                    if !self.active.is_empty() {
+                        // Defer: running sequences will finish and
+                        // return pages.
+                        break;
+                    }
+                    // Engine is idle, so nothing will free pages on
+                    // its own — reclaim the prefix registry and admit
+                    // anyway (the budget is soft; `submit` already
+                    // rejected requests that can never fit).
+                    self.kv_pool.clear_prefixes();
+                }
+            }
+            let req = self.queue.pop_front().expect("front checked");
+            let mut cache =
+                self.model.new_cache_in(self.params.kv_bits,
+                                        &self.kv_pool);
+            if self.params.share_prefix {
+                if let Some((tok, groups)) = self
+                    .kv_pool
+                    .lookup_prefix(&req.prompt, self.model.cfg.n_heads)
+                {
+                    cache.adopt_prefix(tok, groups);
+                }
+            }
             self.active.push(Active {
                 id: req.id,
                 prompt_len: req.prompt.len(),
                 tokens: req.prompt,
                 max_new: req.max_new,
-                cache: self.model.new_cache(self.params.kv_bits),
+                cache,
                 rng: Pcg::new(self.params.seed ^ req.id as u64, 77),
+                registered: false,
             });
         }
     }
@@ -324,9 +451,35 @@ impl<'m, 'p> DecodeEngine<'m, 'p> {
                 }
             }
         }
-        let kv_bytes: usize =
-            self.active.iter().map(|a| a.cache.bytes()).sum();
-        self.stats.peak_kv_bytes = self.stats.peak_kv_bytes.max(kv_bytes);
+        // Offer fully-prefilled whole-page prefixes to the pool
+        // registry so later requests with the same prompt head adopt
+        // the pages instead of re-prefilling (DESIGN.md §13). Prefill
+        // is deterministic, so a registered page's bytes equal what
+        // the adopter would have computed — the bit-parity contract.
+        if self.params.share_prefix {
+            let nh = self.model.cfg.n_heads;
+            for a in &mut self.active {
+                if a.registered {
+                    continue;
+                }
+                let share = self
+                    .kv_pool
+                    .shareable_prefix_len(a.prompt_len, nh);
+                if share == 0 {
+                    a.registered = true;
+                    continue;
+                }
+                if a.cache.n_tokens() >= share {
+                    a.cache.register_prefix(&a.tokens[..share]);
+                    a.registered = true;
+                }
+            }
+        }
+        let g = self.kv_pool.gauges();
+        self.stats.peak_kv_bytes =
+            self.stats.peak_kv_bytes.max(g.bytes_peak);
+        self.stats.kv_pages_peak = g.pages_peak;
+        self.stats.kv_pages_shared = g.shared_peak;
         let processed: usize = feeds.iter().map(|&(_pos, n)| n).sum();
         self.stats.tokens_processed += processed as u64;
         for (a, &(pos, n)) in self.active.iter().zip(&feeds) {
@@ -341,12 +494,10 @@ impl<'m, 'p> DecodeEngine<'m, 'p> {
         while i < self.active.len() {
             if self.active[i].done() {
                 let a = self.active.remove(i);
-                self.stats.tokens_generated += a.n_generated() as u64;
-                self.finished.push(GenResult {
-                    id: a.id,
-                    prompt_len: a.prompt_len,
-                    generated: a.tokens[a.prompt_len..].to_vec(),
-                });
+                let (id, prompt_len, generated) = Self::teardown(a);
+                self.stats.tokens_generated += generated.len() as u64;
+                self.finished.push(GenResult { id, prompt_len,
+                                               generated });
             } else {
                 i += 1;
             }
@@ -364,6 +515,25 @@ impl<'m, 'p> DecodeEngine<'m, 'p> {
         let mut out = std::mem::take(&mut self.finished);
         out.sort_by_key(|r| r.id);
         Ok(out)
+    }
+}
+
+impl Drop for DecodeEngine<'_, '_> {
+    /// Tear down all remaining sequences through the one shared path
+    /// and assert pool balance: with every cache dropped and the
+    /// prefix registry cleared, the engine-private pool must hold zero
+    /// live refs and zero live pages, or some exit path leaked.
+    fn drop(&mut self) {
+        for a in std::mem::take(&mut self.active) {
+            Self::teardown(a);
+        }
+        self.queue.clear();
+        self.kv_pool.clear_prefixes();
+        let g = self.kv_pool.gauges();
+        debug_assert_eq!(
+            (g.refs_live, g.pages_live), (0, 0),
+            "engine drop leaked KV pages: {} refs, {} live",
+            g.refs_live, g.pages_live);
     }
 }
 
@@ -561,6 +731,84 @@ mod tests {
                             DecodeParams::greedy(16, 16, 1), None)
             .unwrap();
         assert_eq!(outs[0].len(), 3);
+    }
+
+    #[test]
+    fn kv_pool_balances_after_run_and_drop() {
+        let m = tiny_model();
+        let mut eng = DecodeEngine::new(&m, DecodeParams::greedy(4, 4, 2),
+                                        None);
+        for i in 0..3 {
+            eng.submit(GenRequest { id: i, prompt: vec![1, 2, 3],
+                                    max_new: 4 })
+                .unwrap();
+        }
+        eng.step().unwrap();
+        assert!(eng.pool_gauges().pages_live > 0,
+                "active sequences hold pages");
+        // Cancel one active sequence mid-decode, finish the rest.
+        assert!(eng.cancel(0));
+        eng.run().unwrap();
+        let g = eng.pool_gauges();
+        assert_eq!((g.refs_live, g.pages_live), (0, 0),
+                   "every teardown path returns its pages");
+        assert!(g.pages_peak > 0, "peak gauge saw the live pages");
+        // Drop re-checks balance via its debug_assert.
+    }
+
+    #[test]
+    fn pool_budget_bounds_submission() {
+        let m = tiny_model();
+        let mut p = DecodeParams::greedy(4, 4, 2);
+        p.kv_page_rows = 4;
+        p.kv_pool_mb = 1;
+        let mut eng = DecodeEngine::new(&m, p, None);
+        let cap = eng.pool_gauges().cap_pages;
+        assert!(cap > 0, "1 MiB budget maps to a positive page cap");
+        // A request whose worst case can never fit is rejected at
+        // submit time...
+        assert!(eng
+            .submit(GenRequest { id: 0, prompt: vec![1],
+                                 max_new: 1_000_000 })
+            .is_err());
+        // ...while a sane one runs to completion under the budget.
+        eng.submit(GenRequest { id: 1, prompt: vec![1, 2], max_new: 3 })
+            .unwrap();
+        let results = eng.run().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].generated.len(), 3);
+    }
+
+    #[test]
+    fn prefix_sharing_stores_common_pages_once() {
+        let m = tiny_model();
+        // nh = 2, page_rows = 4 => 2 tokens per page. A 9-token prompt
+        // shares its first 8 tokens (whole pages below the last prompt
+        // token). max_batch = 1 keeps admissions serial so request 1
+        // is admitted after request 0 registered its prefix.
+        let prompt: Vec<i32> = (1..=9).collect();
+        let run = |share: bool| {
+            let mut p = DecodeParams::greedy(4, 4, 1);
+            p.kv_page_rows = 4;
+            p.share_prefix = share;
+            let mut eng = DecodeEngine::new(&m, p, None);
+            for id in 0..2 {
+                eng.submit(GenRequest { id, prompt: prompt.clone(),
+                                        max_new: 4 })
+                    .unwrap();
+            }
+            let results = eng.run().unwrap();
+            let shared = eng.stats.kv_pages_shared;
+            let streams: Vec<Vec<i32>> =
+                results.into_iter().map(|r| r.generated).collect();
+            (streams, shared)
+        };
+        let (unshared, s0) = run(false);
+        let (shared, s1) = run(true);
+        assert_eq!(shared, unshared,
+                   "shared-prefix streams are bit-identical");
+        assert_eq!(s0, 0, "sharing off never aliases pages");
+        assert!(s1 > 0, "request 1 adopted request 0's prefix pages");
     }
 
     #[test]

@@ -77,6 +77,12 @@ USAGE: osp <subcommand> [flags]
              [--prefill-chunk N]    prompt tokens per sequence per step
                                     (default 64; 1 = token-at-a-time)
              [--temperature F] [--top-k N] [--top-p F] [--seed N]
+             [--kv-page-rows N]     rows per KV page (default 64; any
+                                    value is bit-identical)
+             [--kv-pool-mb N]       soft KV pool budget (0 = unbounded)
+             [--share-prefix on|off]  copy-on-write prompt-prefix
+                                    sharing across requests (default
+                                    off here, on for serve)
              [--int off|scalar|auto]  integer i8xi8 kernels for the
                                     packed linears when A-bits <= 8
                                     (default $OSP_INT else auto; auto
@@ -98,9 +104,16 @@ USAGE: osp <subcommand> [flags]
              [--temperature F] [--top-k N] [--top-p F]
              [--max-new-cap N] [--timeout-ms N] [--timeout-cap-ms N]
              [--header-timeout-ms N] [--int off|scalar|auto]
+             [--kv-page-rows N] [--kv-pool-mb N]  paged KV pool; pool
+                                     exhaustion is a retryable 503
+             [--share-prefix on|off] store identical prompt prefixes
+                                     once across requests (default on)
   serve-load built-in load generator + chaos harness for osp serve
              [--addr HOST:PORT] [--clients N] [--requests N per client]
              [--prompt-len N] [--max-new N] [--timeout-ms N] [--seed N]
+             [--prefix-len N]        shared system-prompt tokens
+                                     prepended to every request
+                                     (exercises --share-prefix)
              [--chaos SPEC]          off|default|[preset,]k=v,... with
                                      keys abort/delay/oversize/malformed/
                                      slowloris/tiny_deadline (probs),
@@ -139,6 +152,19 @@ fn bits_arg(args: &Args, key: &str, default: u32) -> Result<u32> {
     osp::coordinator::checked_levels_for_bits(bits)
         .with_context(|| format!("--{key}"))?;
     Ok(bits)
+}
+
+/// Parse `--share-prefix on|off` (copy-on-write prompt-prefix sharing,
+/// DESIGN.md §13). The library default is off; `osp serve` flips its
+/// own default to on, so each caller passes its default in.
+fn share_prefix_arg(args: &Args, default: bool) -> Result<bool> {
+    let raw = args.str_or("share-prefix",
+                          if default { "on" } else { "off" });
+    match raw.as_str() {
+        "on" | "true" => Ok(true),
+        "off" | "false" => Ok(false),
+        other => bail!("--share-prefix wants on|off, got {other}"),
+    }
 }
 
 /// Parse `--int off|scalar|auto` (integer-kernel dispatch for the
@@ -413,6 +439,11 @@ fn cmd_generate(args: &Args) -> Result<()> {
             .usize_or("prefill-chunk", decode::DEFAULT_PREFILL_CHUNK)
             .max(1),
         seed: args.u64_or("seed", 7),
+        kv_page_rows: args
+            .usize_or("kv-page-rows", osp::infer::kv::DEFAULT_PAGE_ROWS)
+            .max(1),
+        kv_pool_mb: args.usize_or("kv-pool-mb", 0),
+        share_prefix: share_prefix_arg(args, false)?,
     };
     let prompts: Vec<Vec<i32>> = match args.get("prompt") {
         Some(s) => vec![parse_prompt(s, vocab)?],
@@ -625,7 +656,16 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
                 ("kernel", Json::str(kernel)),
                 ("tokens_per_sec", Json::num(st.tokens_per_sec())),
                 ("generated_per_sec", Json::num(st.generated_per_sec())),
-                ("peak_kv_bytes", Json::num(st.peak_kv_bytes as f64)),
+                ("kv_page_rows",
+                 Json::num(params.kv_page_rows as f64)),
+                ("share_prefix",
+                 Json::str(if params.share_prefix { "on" } else {
+                     "off"
+                 })),
+                ("kv_bytes_peak", Json::num(st.peak_kv_bytes as f64)),
+                ("kv_pages_peak", Json::num(st.kv_pages_peak as f64)),
+                ("kv_pages_shared",
+                 Json::num(st.kv_pages_shared as f64)),
                 ("weight_bytes", Json::num(model.weight_bytes() as f64)),
             ]));
         }
@@ -812,6 +852,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_body_bytes: defaults.max_body_bytes,
         max_conns: args.usize_or("max-conns", defaults.max_conns)
             .max(1),
+        kv_page_rows: args
+            .usize_or("kv-page-rows", defaults.kv_page_rows)
+            .max(1),
+        kv_pool_mb: args.usize_or("kv-pool-mb", defaults.kv_pool_mb),
+        share_prefix: share_prefix_arg(args, defaults.share_prefix)?,
     };
     let server = Server::spawn(model, opts)?;
     println!(
@@ -837,6 +882,7 @@ fn cmd_serve_load(args: &Args) -> Result<()> {
         requests: args.usize_or("requests", defaults.requests).max(1),
         prompt_len: args.usize_or("prompt-len", defaults.prompt_len)
             .max(1),
+        prefix_len: args.usize_or("prefix-len", defaults.prefix_len),
         max_new: args.usize_or("max-new", defaults.max_new).max(1),
         timeout_ms: args.u64_or("timeout-ms", defaults.timeout_ms)
             .max(1),
@@ -868,6 +914,11 @@ fn cmd_serve_load(args: &Args) -> Result<()> {
         f("server_admitted"), f("server_completed"),
         f("server_timed_out"), f("server_cancelled"),
         f("server_failed"), f("server_in_flight"));
+    println!(
+        "kv pool: peak {:.0} bytes over {:.0} pages, {:.0} page(s) \
+         saved by prefix sharing, {:.0} live at scrape",
+        f("kv_bytes_peak"), f("kv_pages_peak"), f("kv_pages_shared"),
+        f("kv_pages_live"));
     if let Some(j) = args.get("json") {
         let path = if j == "true" { "BENCH_serve.json" } else { j };
         std::fs::write(path, doc.dump())

@@ -1,4 +1,5 @@
-//! Quantized KV cache for the host model layer (DESIGN.md §8-§9).
+//! Paged quantized KV cache for the host model layer (DESIGN.md
+//! §8-§9, paging §13).
 //!
 //! Each sequence owns one [`SeqKv`]: per layer, one append-only
 //! [`QRows`] store for keys and one for values, one row per
@@ -10,15 +11,30 @@
 //! (2..=8 bits), or as the fake-quantized f32 values otherwise
 //! (bits >= 9, including the 16-bit "off" passthrough).
 //!
-//! The multi-token block forward ([`super::InferModel::forward_block`])
-//! appends whole groups of rows at once ([`QRows::append_block`]) and
-//! advances the position counter by the block length
-//! ([`SeqKv::advance_by`]); single-token decode is the block-size-1
-//! special case. On the read side, block-dequant attention
-//! ([`QRows::dequant_block_into`], DESIGN.md §10) decodes every cached
-//! row exactly once per query block into a per-worker scratch tile via
-//! the byte LUTs; [`QRows::dot`] / [`QRows::axpy_into`] remain as the
-//! element-wise reference kernels the tiles are pinned against.
+//! Storage is paged (DESIGN.md §13): rows live in fixed-size
+//! [`PageBuf`] slabs of [`PagePool::page_rows`] rows each — a packed
+//! page is `rows * stride` code bytes plus `rows` f32 scales; a
+//! passthrough page is `rows * dim` f32s. A [`QRows`] holds a page
+//! *table* (`Vec<PageRef>`) instead of contiguous vectors; row `i`
+//! lives in page `i / R` at slot `i % R`. Pages are refcounted
+//! (`Arc`) and owned by a [`PagePool`] with a free list; every
+//! retain/release goes through the pool so its gauges (live pages,
+//! outstanding refs, peaks) are exact and a dropped cache provably
+//! returns every page. Copy-on-write: writes land in the last
+//! (private) page; if the tail page is shared — its refcount is > 1 —
+//! the writer first copies it into a fresh page, so bytes of a shared
+//! page are never mutated in place.
+//!
+//! Prefix sharing: the pool keeps a small registry of hashed
+//! token-aligned prompt prefixes at page granularity
+//! ([`PagePool::register_prefix_boundary`] /
+//! [`PagePool::lookup_prefix`]); identical prefixes across sequences
+//! adopt the same physical pages ([`SeqKv::adopt_prefix`]), so a
+//! system prompt is stored once per pool rather than once per request.
+//! Only *full* pages covering at most `prompt_len - 1` tokens are ever
+//! shared — the last prompt token is always fed by the adopter (it
+//! produces the first logits) and the tail partial page is always
+//! private.
 //!
 //! Parity contract (pinned by `rust/tests/infer_properties.rs` and
 //! `rust/tests/model_properties.rs`): `code as f32 * scale` is bitwise
@@ -26,9 +42,15 @@
 //! [`QRows::dot`] / [`QRows::axpy_into`] accumulate in the same element
 //! order either way — so attention over a packed KV4 cache is
 //! bit-identical to attention over a dense cache holding the
-//! fake-quantized rows.
+//! fake-quantized rows. Paging adds a second contract: because a page
+//! holds a whole number of rows and every per-row kernel reads exactly
+//! one page, the paged store is bit-identical to the old contiguous
+//! layout for *any* page size, and an adopted prefix is bit-identical
+//! to re-prefilling it (prefill is deterministic).
 //!
 //! [`QTensor`]: crate::tensor::qtensor::QTensor
+
+use std::sync::{Arc, Mutex};
 
 use crate::coordinator::levels_for_bits;
 use crate::quant::rtn::rtn_code;
@@ -41,7 +63,351 @@ use crate::tensor::qtensor::{codes_per_byte, decode, encode, storage_bits};
 /// [`crate::quant::rtn::ACT_EPS`].
 pub const KV_EPS: f32 = crate::quant::rtn::ACT_EPS;
 
-/// Append-only store of quantized `dim`-sized rows.
+/// Default rows per page (one layer-side page = 64 roped (pos, head)
+/// rows). Divides every supported head count, so page boundaries are
+/// token-aligned and prefix sharing engages out of the box.
+pub const DEFAULT_PAGE_ROWS: usize = 64;
+
+/// Max prefix-registry entries per pool (one entry per token-aligned
+/// page boundary); oldest entries are evicted FIFO and their page
+/// refs returned to the pool.
+const PREFIX_CAP: usize = 64;
+
+const FNV_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// One fixed-size slab of quantized rows. Packed pools fill `codes` +
+/// `scales`; passthrough pools fill `dense`. Buffers are allocated at
+/// full page size up front and zeroed on (re)allocation, so a slot is
+/// deterministic before its row is written.
+pub struct PageBuf {
+    codes: Vec<u8>,
+    scales: Vec<f32>,
+    dense: Vec<f32>,
+}
+
+/// Shared handle to one physical page. The `Arc` strong count *is*
+/// the refcount; all clones and drops must go through
+/// [`PagePool::retain`] / [`PagePool::release`] so the pool gauges
+/// stay exact.
+pub type PageRef = Arc<PageBuf>;
+
+struct PrefixEntry {
+    hash: u64,
+    tokens: Vec<i32>,
+    /// The physical pages holding this boundary's page index, ordered
+    /// `[layer0.k, layer0.v, layer1.k, layer1.v, ...]`.
+    group: Vec<PageRef>,
+}
+
+struct PoolInner {
+    free: Vec<PageBuf>,
+    pages_live: usize,
+    refs_live: usize,
+    pages_peak: usize,
+    shared_peak: usize,
+    /// Soft budget in pages (0 = unbounded). Never enforced at alloc
+    /// time — admission control in the decode engine consults it, so
+    /// `push` stays infallible.
+    cap_pages: usize,
+    prefix: Vec<PrefixEntry>,
+}
+
+fn release_locked(g: &mut PoolInner, page: PageRef) {
+    debug_assert!(g.refs_live > 0, "PagePool::release with 0 refs");
+    g.refs_live -= 1;
+    if let Ok(buf) = Arc::try_unwrap(page) {
+        debug_assert!(g.pages_live > 0, "page freed with 0 live");
+        g.pages_live -= 1;
+        g.free.push(buf);
+    }
+}
+
+fn note_shared(g: &mut PoolInner) {
+    debug_assert!(g.refs_live >= g.pages_live,
+                  "every live page holds >= 1 ref");
+    g.shared_peak = g.shared_peak.max(g.refs_live - g.pages_live);
+}
+
+/// Instantaneous pool gauges plus high-water marks — the `/metrics`
+/// and `DecodeStats` KV-memory columns.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolGauges {
+    /// Distinct physical pages currently allocated.
+    pub pages_live: usize,
+    /// Outstanding page references (cache tables + prefix registry).
+    pub refs_live: usize,
+    /// `refs_live - pages_live`: references saved by sharing, now.
+    pub pages_shared: usize,
+    /// High-water mark of `pages_live`.
+    pub pages_peak: usize,
+    /// High-water mark of `pages_shared`.
+    pub shared_peak: usize,
+    /// `pages_live * page_bytes`.
+    pub bytes_live: usize,
+    /// `pages_peak * page_bytes`.
+    pub bytes_peak: usize,
+    /// Recycled pages parked on the free list.
+    pub free_pages: usize,
+    /// Soft page budget (0 = unbounded).
+    pub cap_pages: usize,
+}
+
+/// Global page allocator for one KV geometry (`dim`, `bits`): free
+/// list, refcount gauges, soft budget, and the prefix-sharing
+/// registry. One pool serves every `QRows` of every sequence admitted
+/// to a decode engine; standalone `QRows::new` / `SeqKv::new` create
+/// a private uncapped pool so library callers and tests see exactly
+/// the old contiguous-cache behavior.
+pub struct PagePool {
+    dim: usize,
+    bits: u32,
+    sbits: Option<u32>,
+    stride: usize,
+    page_rows: usize,
+    page_bytes: usize,
+    inner: Mutex<PoolInner>,
+}
+
+impl PagePool {
+    /// `cap_pages` is a *soft* budget consulted by admission control
+    /// (0 = unbounded); allocation itself never fails.
+    pub fn new(dim: usize, bits: u32, page_rows: usize,
+               cap_pages: usize) -> Arc<PagePool> {
+        assert!(page_rows > 0, "page_rows must be positive");
+        assert!(dim > 0, "dim must be positive");
+        let sbits = if bits < 16 { storage_bits(bits) } else { None };
+        let stride = match sbits {
+            Some(_) => dim.div_ceil(codes_per_byte(bits)),
+            None => 0,
+        };
+        let page_bytes = match sbits {
+            Some(_) => page_rows * stride + 4 * page_rows,
+            None => 4 * page_rows * dim,
+        };
+        Arc::new(PagePool {
+            dim, bits, sbits, stride, page_rows, page_bytes,
+            inner: Mutex::new(PoolInner {
+                free: Vec::new(), pages_live: 0, refs_live: 0,
+                pages_peak: 0, shared_peak: 0, cap_pages,
+                prefix: Vec::new() }),
+        })
+    }
+
+    /// Pool with a soft byte budget: `mb` MiB translated to whole
+    /// pages (`mb` 0 = unbounded). The decode engine's constructor —
+    /// the `--kv-pool-mb` knob lands here.
+    pub fn with_budget_mb(dim: usize, bits: u32, page_rows: usize,
+                          mb: usize) -> Arc<PagePool> {
+        let pool = PagePool::new(dim, bits, page_rows, 0);
+        if mb > 0 {
+            let cap = ((mb << 20) / pool.page_bytes).max(1);
+            pool.inner.lock().unwrap().cap_pages = cap;
+        }
+        pool
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Rows per page (the `--kv-page-rows` knob).
+    pub fn page_rows(&self) -> usize {
+        self.page_rows
+    }
+
+    /// Physical bytes of one page (codes + scales, or dense f32).
+    pub fn page_bytes(&self) -> usize {
+        self.page_bytes
+    }
+
+    /// Pages needed to hold `rows` rows.
+    pub fn pages_for_rows(&self, rows: usize) -> usize {
+        rows.div_ceil(self.page_rows)
+    }
+
+    /// Tokens covered by one page of an `n_heads`-head cache — `None`
+    /// when page boundaries are not token-aligned (sharing disabled).
+    pub fn tokens_per_page(&self, n_heads: usize) -> Option<usize> {
+        if n_heads > 0 && self.page_rows % n_heads == 0 {
+            Some(self.page_rows / n_heads)
+        } else {
+            None
+        }
+    }
+
+    /// Longest registerable prefix of a `prompt_len`-token prompt:
+    /// whole token-aligned pages covering at most `prompt_len - 1`
+    /// tokens (the adopter always feeds the last prompt token itself).
+    pub fn shareable_prefix_len(&self, prompt_len: usize,
+                                n_heads: usize) -> usize {
+        match self.tokens_per_page(n_heads) {
+            Some(tpp) if prompt_len > 1 => {
+                ((prompt_len - 1) / tpp) * tpp
+            }
+            _ => 0,
+        }
+    }
+
+    /// Allocate one zeroed page (recycled from the free list when
+    /// possible). Infallible by design: the soft cap is enforced by
+    /// admission control, not here.
+    pub fn alloc(&self) -> PageRef {
+        let mut g = self.inner.lock().unwrap();
+        let buf = match g.free.pop() {
+            Some(mut b) => {
+                b.codes.fill(0);
+                b.scales.fill(0.0);
+                b.dense.fill(0.0);
+                b
+            }
+            None => PageBuf {
+                codes: vec![0u8; self.page_rows * self.stride],
+                scales: vec![0.0f32; if self.sbits.is_some() {
+                    self.page_rows
+                } else {
+                    0
+                }],
+                dense: vec![0.0f32; if self.sbits.is_some() {
+                    0
+                } else {
+                    self.page_rows * self.dim
+                }],
+            },
+        };
+        g.pages_live += 1;
+        g.refs_live += 1;
+        g.pages_peak = g.pages_peak.max(g.pages_live);
+        note_shared(&mut g);
+        Arc::new(buf)
+    }
+
+    /// Add one reference to a live page (copy-on-write sharing).
+    pub fn retain(&self, page: &PageRef) -> PageRef {
+        let mut g = self.inner.lock().unwrap();
+        g.refs_live += 1;
+        note_shared(&mut g);
+        Arc::clone(page)
+    }
+
+    /// Drop one reference; the last release recycles the page onto
+    /// the free list.
+    pub fn release(&self, page: PageRef) {
+        let mut g = self.inner.lock().unwrap();
+        release_locked(&mut g, page);
+    }
+
+    pub fn gauges(&self) -> PoolGauges {
+        let g = self.inner.lock().unwrap();
+        PoolGauges {
+            pages_live: g.pages_live,
+            refs_live: g.refs_live,
+            pages_shared: g.refs_live - g.pages_live,
+            pages_peak: g.pages_peak,
+            shared_peak: g.shared_peak,
+            bytes_live: g.pages_live * self.page_bytes,
+            bytes_peak: g.pages_peak * self.page_bytes,
+            free_pages: g.free.len(),
+            cap_pages: g.cap_pages,
+        }
+    }
+
+    /// Register the physical pages backing one token-aligned prefix
+    /// boundary. `group` must hold refs already retained through this
+    /// pool (ownership transfers here); if the boundary is already
+    /// registered the refs are released back.
+    pub fn register_prefix_boundary(&self, tokens: &[i32],
+                                    group: Vec<PageRef>) {
+        let mut hash = FNV_SEED;
+        for &t in tokens {
+            hash = fnv1a(hash, &t.to_le_bytes());
+        }
+        let mut g = self.inner.lock().unwrap();
+        if g.prefix.iter().any(|e| e.hash == hash
+                               && e.tokens[..] == tokens[..]) {
+            for p in group {
+                release_locked(&mut g, p);
+            }
+            return;
+        }
+        g.prefix.push(PrefixEntry { hash, tokens: tokens.to_vec(),
+                                    group });
+        while g.prefix.len() > PREFIX_CAP {
+            let e = g.prefix.remove(0);
+            for p in e.group {
+                release_locked(&mut g, p);
+            }
+        }
+    }
+
+    /// Longest registered prefix of `prompt` at page granularity:
+    /// returns `(tokens_covered, page groups)` with one retained ref
+    /// per page for the caller (feed to [`SeqKv::adopt_prefix`]).
+    /// Hash-chained per boundary and verified against the stored
+    /// tokens, so collisions cannot alias prefixes. Never covers the
+    /// whole prompt — the adopter must feed >= 1 token for logits.
+    pub fn lookup_prefix(&self, prompt: &[i32], n_heads: usize)
+                         -> Option<(usize, Vec<Vec<PageRef>>)> {
+        let tpp = self.tokens_per_page(n_heads)?;
+        let mut g = self.inner.lock().unwrap();
+        let mut hash = FNV_SEED;
+        let mut groups: Vec<Vec<PageRef>> = Vec::new();
+        let mut covered = 0usize;
+        while covered + tpp < prompt.len() {
+            for &t in &prompt[covered..covered + tpp] {
+                hash = fnv1a(hash, &t.to_le_bytes());
+            }
+            let want = &prompt[..covered + tpp];
+            let Some(pi) = g.prefix.iter().position(
+                |e| e.hash == hash && e.tokens[..] == want[..])
+            else {
+                break;
+            };
+            let group: Vec<PageRef> =
+                g.prefix[pi].group.iter().map(Arc::clone).collect();
+            g.refs_live += group.len();
+            note_shared(&mut g);
+            groups.push(group);
+            covered += tpp;
+        }
+        if groups.is_empty() {
+            None
+        } else {
+            Some((covered, groups))
+        }
+    }
+
+    /// Number of prefix boundaries currently registered.
+    pub fn n_prefixes(&self) -> usize {
+        self.inner.lock().unwrap().prefix.len()
+    }
+
+    /// Drop the prefix registry, returning its page refs to the pool
+    /// (engine teardown, or to reclaim budget when admission stalls).
+    pub fn clear_prefixes(&self) {
+        let mut g = self.inner.lock().unwrap();
+        let entries = std::mem::take(&mut g.prefix);
+        for e in entries {
+            for p in e.group {
+                release_locked(&mut g, p);
+            }
+        }
+    }
+}
+
+/// Append-only store of quantized `dim`-sized rows, backed by a page
+/// table over a [`PagePool`].
 pub struct QRows {
     bits: u32,
     dim: usize,
@@ -50,22 +416,26 @@ pub struct QRows {
     sbits: Option<u32>,
     /// Bytes per packed row.
     stride: usize,
-    codes: Vec<u8>,
-    scales: Vec<f32>,
-    dense: Vec<f32>,
+    /// Rows per page (cached from the pool for the hot paths).
+    prows: usize,
+    pool: Arc<PagePool>,
+    pages: Vec<PageRef>,
     n_rows: usize,
 }
 
 impl QRows {
+    /// Standalone store with a private uncapped pool at the default
+    /// page size — behaviorally identical to the old contiguous store.
     pub fn new(dim: usize, bits: u32) -> QRows {
-        let sbits = if bits < 16 { storage_bits(bits) } else { None };
-        let stride = match sbits {
-            Some(_) => dim.div_ceil(codes_per_byte(bits)),
-            None => 0,
-        };
-        QRows { bits, dim, levels: levels_for_bits(bits), sbits, stride,
-                codes: Vec::new(), scales: Vec::new(), dense: Vec::new(),
-                n_rows: 0 }
+        QRows::with_pool(PagePool::new(dim, bits, DEFAULT_PAGE_ROWS, 0))
+    }
+
+    /// Store whose pages come from (and return to) `pool`.
+    pub fn with_pool(pool: Arc<PagePool>) -> QRows {
+        QRows { bits: pool.bits, dim: pool.dim,
+                levels: levels_for_bits(pool.bits), sbits: pool.sbits,
+                stride: pool.stride, prows: pool.page_rows,
+                pool, pages: Vec::new(), n_rows: 0 }
     }
 
     pub fn len(&self) -> usize {
@@ -89,10 +459,66 @@ impl QRows {
         self.sbits.is_some()
     }
 
-    /// Bytes this store currently occupies (codes + scales, or dense
-    /// f32) — the serve-bench KV-memory column.
+    /// Rows per page of the backing pool (page-run walks in the
+    /// attention kernel).
+    pub fn page_rows(&self) -> usize {
+        self.prows
+    }
+
+    /// Pages currently referenced by this store's table.
+    pub fn n_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Physical bytes this store's page table references (whole
+    /// pages; shared pages count once per referencing table) — the
+    /// serve-bench KV-memory column. Pool gauges carry the
+    /// deduplicated physical truth.
     pub fn bytes(&self) -> usize {
-        self.codes.len() + 4 * self.scales.len() + 4 * self.dense.len()
+        self.pages.len() * self.pool.page_bytes
+    }
+
+    /// One retained ref to page `p` of this store's table (prefix
+    /// registration).
+    pub fn page_ref(&self, p: usize) -> PageRef {
+        self.pool.retain(&self.pages[p])
+    }
+
+    /// Append one already-populated *full* page to the table (prefix
+    /// adoption). Ownership of the (retained) ref transfers here.
+    pub fn adopt_page(&mut self, page: PageRef) {
+        debug_assert_eq!(self.n_rows % self.prows, 0,
+                         "adopt_page after a partial page");
+        self.pages.push(page);
+        self.n_rows += self.prows;
+    }
+
+    /// Tail page ready for writing slot `n_rows % prows`. Allocates on
+    /// a page boundary; copies-on-write when the tail page is shared,
+    /// so shared page bytes are never mutated in place.
+    fn tail_for_write(&mut self) -> (&mut PageBuf, usize) {
+        let slot = self.n_rows % self.prows;
+        if slot == 0 {
+            let p = self.pool.alloc();
+            self.pages.push(p);
+        }
+        let idx = self.pages.len() - 1;
+        if Arc::get_mut(&mut self.pages[idx]).is_none() {
+            let mut fresh = self.pool.alloc();
+            {
+                let dst = Arc::get_mut(&mut fresh)
+                    .expect("fresh page is private");
+                let src = &self.pages[idx];
+                dst.codes.copy_from_slice(&src.codes);
+                dst.scales.copy_from_slice(&src.scales);
+                dst.dense.copy_from_slice(&src.dense);
+            }
+            let old = std::mem::replace(&mut self.pages[idx], fresh);
+            self.pool.release(old);
+        }
+        let page = Arc::get_mut(&mut self.pages[idx])
+            .expect("tail page is private after CoW");
+        (page, slot)
     }
 
     /// Quantize-and-append one row (the per-(position, head) KV tap).
@@ -102,19 +528,22 @@ impl QRows {
         debug_assert_eq!(row.len(), self.dim);
         let scale = crate::quant::rtn::act_scale(row, self.levels);
         let lv = self.levels;
-        match self.sbits {
+        let (dim, stride, sbits) = (self.dim, self.stride, self.sbits);
+        let (page, slot) = self.tail_for_write();
+        match sbits {
             Some(sbits) => {
-                let base = self.codes.len();
-                self.codes.resize(base + self.stride, 0);
-                let out = &mut self.codes[base..];
+                let out =
+                    &mut page.codes[slot * stride..(slot + 1) * stride];
                 for (j, &v) in row.iter().enumerate() {
                     encode(out, sbits, j, rtn_code(v, scale, lv));
                 }
-                self.scales.push(scale);
+                page.scales[slot] = scale;
             }
             None => {
-                for &v in row {
-                    self.dense.push(rtn_code(v, scale, lv) as f32 * scale);
+                let out =
+                    &mut page.dense[slot * dim..(slot + 1) * dim];
+                for (o, &v) in out.iter_mut().zip(row) {
+                    *o = rtn_code(v, scale, lv) as f32 * scale;
                 }
             }
         }
@@ -138,9 +567,11 @@ impl QRows {
     /// row-major) through the byte LUTs — the block-dequant attention
     /// kernel's cache read: each packed KV row decodes exactly once per
     /// query block into a scratch tile, instead of once per query
-    /// token. `out[r][j]` is bitwise `self.at(i0 + r, j)`, so dense
-    /// tile ops over the output are bit-identical to the element-wise
-    /// [`QRows::dot`] / [`QRows::axpy_into`] reference kernels.
+    /// token. Walks the page table one page run at a time; because
+    /// every row lives entirely in one page, `out[r][j]` is bitwise
+    /// `self.at(i0 + r, j)` for any page size, so dense tile ops over
+    /// the output are bit-identical to the element-wise [`QRows::dot`]
+    /// / [`QRows::axpy_into`] reference kernels.
     pub fn dequant_block_into(&self, i0: usize, i1: usize,
                               out: &mut [f32]) {
         debug_assert!(i0 <= i1 && i1 <= self.n_rows,
@@ -149,32 +580,48 @@ impl QRows {
         debug_assert_eq!(out.len(), (i1 - i0) * self.dim,
                          "dequant_block_into wants {} f32s", (i1 - i0)
                          * self.dim);
-        match self.sbits {
-            Some(sbits) => {
-                for (i, orow) in (i0..i1)
-                    .zip(out.chunks_exact_mut(self.dim))
-                {
-                    let row = &self.codes
-                        [i * self.stride..(i + 1) * self.stride];
-                    lut::dequant_uniform(row, sbits, self.scales[i], 0,
-                                         self.dim, orow);
+        let dim = self.dim;
+        let mut i = i0;
+        while i < i1 {
+            let p = i / self.prows;
+            let end = ((p + 1) * self.prows).min(i1);
+            let page = &self.pages[p];
+            let o0 = (i - i0) * dim;
+            match self.sbits {
+                Some(sbits) => {
+                    let orun = &mut out[o0..o0 + (end - i) * dim];
+                    for (r, orow) in (i..end)
+                        .zip(orun.chunks_exact_mut(dim))
+                    {
+                        let slot = r % self.prows;
+                        let row = &page.codes
+                            [slot * self.stride..(slot + 1) * self.stride];
+                        lut::dequant_uniform(row, sbits,
+                                             page.scales[slot], 0, dim,
+                                             orow);
+                    }
+                }
+                None => {
+                    let s0 = (i % self.prows) * dim;
+                    out[o0..o0 + (end - i) * dim].copy_from_slice(
+                        &page.dense[s0..s0 + (end - i) * dim]);
                 }
             }
-            None => {
-                out.copy_from_slice(
-                    &self.dense[i0 * self.dim..i1 * self.dim]);
-            }
+            i = end;
         }
     }
 
     /// Dequantized element `j` of row `i` (test/diagnostic helper).
     pub fn at(&self, i: usize, j: usize) -> f32 {
+        let page = &self.pages[i / self.prows];
+        let slot = i % self.prows;
         match self.sbits {
             Some(sbits) => {
-                let row = &self.codes[i * self.stride..(i + 1) * self.stride];
-                decode(row, sbits, j) as f32 * self.scales[i]
+                let row = &page.codes
+                    [slot * self.stride..(slot + 1) * self.stride];
+                decode(row, sbits, j) as f32 * page.scales[slot]
             }
-            None => self.dense[i * self.dim + j],
+            None => page.dense[slot * self.dim + j],
         }
     }
 
@@ -186,10 +633,13 @@ impl QRows {
         debug_assert!(i < self.n_rows, "QRows::dot row {i} of a {}-row \
                                         cache", self.n_rows);
         debug_assert_eq!(x.len(), self.dim);
+        let page = &self.pages[i / self.prows];
+        let slot = i % self.prows;
         match self.sbits {
             Some(sbits) => {
-                let row = &self.codes[i * self.stride..(i + 1) * self.stride];
-                let s = self.scales[i];
+                let row = &page.codes
+                    [slot * self.stride..(slot + 1) * self.stride];
+                let s = page.scales[slot];
                 let mut acc = 0.0f32;
                 for (j, &xv) in x.iter().enumerate() {
                     acc += decode(row, sbits, j) as f32 * s * xv;
@@ -197,7 +647,8 @@ impl QRows {
                 acc
             }
             None => {
-                let row = &self.dense[i * self.dim..(i + 1) * self.dim];
+                let row = &page.dense
+                    [slot * self.dim..(slot + 1) * self.dim];
                 let mut acc = 0.0f32;
                 for (kv, &xv) in row.iter().zip(x) {
                     acc += kv * xv;
@@ -214,20 +665,36 @@ impl QRows {
         debug_assert!(i < self.n_rows, "QRows::axpy_into row {i} of a \
                                         {}-row cache", self.n_rows);
         debug_assert_eq!(out.len(), self.dim);
+        let page = &self.pages[i / self.prows];
+        let slot = i % self.prows;
         match self.sbits {
             Some(sbits) => {
-                let row = &self.codes[i * self.stride..(i + 1) * self.stride];
-                let s = self.scales[i];
+                let row = &page.codes
+                    [slot * self.stride..(slot + 1) * self.stride];
+                let s = page.scales[slot];
                 for (j, o) in out.iter_mut().enumerate() {
                     *o += w * (decode(row, sbits, j) as f32 * s);
                 }
             }
             None => {
-                let row = &self.dense[i * self.dim..(i + 1) * self.dim];
+                let row = &page.dense
+                    [slot * self.dim..(slot + 1) * self.dim];
                 for (o, &v) in out.iter_mut().zip(row) {
                     *o += w * v;
                 }
             }
+        }
+    }
+}
+
+impl Drop for QRows {
+    /// Return every page ref to the pool — the one teardown path for
+    /// finished, cancelled, and deadline-evicted sequences alike, so
+    /// pool balance (`refs_live`, `pages_live`) is provable from any
+    /// drop site.
+    fn drop(&mut self) {
+        for p in self.pages.drain(..) {
+            self.pool.release(p);
         }
     }
 }
@@ -239,21 +706,40 @@ pub struct LayerKv {
 }
 
 /// Per-sequence KV cache: `n_layers` layer stores of (position, head)
-/// rows, position-major (`row = pos * n_heads + head`).
+/// rows, position-major (`row = pos * n_heads + head`), all paged out
+/// of one shared [`PagePool`].
 pub struct SeqKv {
     layers: Vec<LayerKv>,
+    pool: Arc<PagePool>,
     n_heads: usize,
     n_tokens: usize,
 }
 
 impl SeqKv {
+    /// Cache with a private uncapped pool at the default page size —
+    /// behaviorally identical to the old contiguous cache.
     pub fn new(n_layers: usize, n_heads: usize, head_dim: usize,
                kv_bits: u32) -> SeqKv {
+        let pool = PagePool::new(head_dim, kv_bits, DEFAULT_PAGE_ROWS,
+                                 0);
+        SeqKv::new_in(n_layers, n_heads, pool)
+    }
+
+    /// Cache whose pages come from (and return to) `pool` — the
+    /// decode engine's path, one pool across all admitted sequences.
+    pub fn new_in(n_layers: usize, n_heads: usize,
+                  pool: Arc<PagePool>) -> SeqKv {
         let layers = (0..n_layers)
-            .map(|_| LayerKv { k: QRows::new(head_dim, kv_bits),
-                               v: QRows::new(head_dim, kv_bits) })
+            .map(|_| LayerKv {
+                k: QRows::with_pool(Arc::clone(&pool)),
+                v: QRows::with_pool(Arc::clone(&pool)),
+            })
             .collect();
-        SeqKv { layers, n_heads, n_tokens: 0 }
+        SeqKv { layers, pool, n_heads, n_tokens: 0 }
+    }
+
+    pub fn pool(&self) -> &Arc<PagePool> {
+        &self.pool
     }
 
     /// Positions cached so far (the next token decodes at this position).
@@ -294,9 +780,62 @@ impl SeqKv {
         }
     }
 
-    /// Total cache bytes across layers (K + V).
+    /// Total cache bytes across layers (K + V), counting whole pages;
+    /// adopted shared pages count once per referencing cache (the
+    /// pool's gauges carry the deduplicated physical bytes).
     pub fn bytes(&self) -> usize {
         self.layers.iter().map(|l| l.k.bytes() + l.v.bytes()).sum()
+    }
+
+    /// Map an already-registered prefix's physical pages into this
+    /// *fresh* cache: `groups[p]` holds page index `p`'s pages in
+    /// `[l0.k, l0.v, l1.k, l1.v, ...]` order with refs retained by
+    /// [`PagePool::lookup_prefix`]; ownership transfers here. After
+    /// adoption the cache reads exactly as if it had prefilled
+    /// `n_tokens` tokens itself (prefill is deterministic), and its
+    /// next write opens a fresh private page.
+    pub fn adopt_prefix(&mut self, n_tokens: usize,
+                        groups: Vec<Vec<PageRef>>) {
+        debug_assert_eq!(self.n_tokens, 0,
+                         "adopt_prefix into a used cache");
+        for group in groups {
+            debug_assert_eq!(group.len(), 2 * self.layers.len(),
+                             "page group is one K + one V per layer");
+            let mut it = group.into_iter();
+            for lay in &mut self.layers {
+                lay.k.adopt_page(it.next().unwrap());
+                lay.v.adopt_page(it.next().unwrap());
+            }
+        }
+        self.n_tokens = n_tokens;
+        for lay in &self.layers {
+            debug_assert_eq!(lay.k.len(), self.n_tokens * self.n_heads,
+                             "adopted prefix is token-aligned");
+        }
+    }
+
+    /// Register this cache's full token-aligned prefix pages with the
+    /// pool so later identical prompts can adopt them. `prefix` must
+    /// be a whole number of pages this cache has already prefilled
+    /// (see [`PagePool::shareable_prefix_len`]).
+    pub fn register_prefix(&self, prefix: &[i32]) {
+        let Some(tpp) = self.pool.tokens_per_page(self.n_heads) else {
+            return;
+        };
+        debug_assert_eq!(prefix.len() % tpp, 0,
+                         "register_prefix wants whole pages");
+        debug_assert!(prefix.len() <= self.n_tokens,
+                      "register_prefix beyond the cached tokens");
+        let n_pages = prefix.len() / tpp;
+        for p in 0..n_pages {
+            let mut group = Vec::with_capacity(2 * self.layers.len());
+            for lay in &self.layers {
+                group.push(lay.k.page_ref(p));
+                group.push(lay.v.page_ref(p));
+            }
+            self.pool.register_prefix_boundary(
+                &prefix[..(p + 1) * tpp], group);
+        }
     }
 }
 
@@ -396,22 +935,30 @@ mod tests {
     #[test]
     fn dequant_block_matches_element_accessor() {
         // Packed widths (2..8, including the 3/5-bit field-sharing
-        // cases) and the f32 passthrough, over interior [i0, i1) spans.
+        // cases) and the f32 passthrough, over interior [i0, i1) spans
+        // — with a 3-row page size so every span crosses a page
+        // boundary, plus the default page size.
         let mut rng = Pcg::new(21, 0);
         let dim = 9;
         for bits in [2u32, 3, 4, 5, 8, 16] {
-            let mut rows = QRows::new(dim, bits);
-            for _ in 0..7 {
-                let row: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
-                rows.push(&row);
-            }
-            for (i0, i1) in [(0usize, 7usize), (2, 5), (3, 3), (6, 7)] {
-                let mut out = vec![0.0f32; (i1 - i0) * dim];
-                rows.dequant_block_into(i0, i1, &mut out);
-                for (r, i) in (i0..i1).enumerate() {
-                    for j in 0..dim {
-                        assert_eq!(out[r * dim + j], rows.at(i, j),
-                                   "{bits}b [{i0},{i1}) row {i} j{j}");
+            for prows in [3usize, DEFAULT_PAGE_ROWS] {
+                let pool = PagePool::new(dim, bits, prows, 0);
+                let mut rows = QRows::with_pool(pool);
+                for _ in 0..7 {
+                    let row: Vec<f32> =
+                        (0..dim).map(|_| rng.normal()).collect();
+                    rows.push(&row);
+                }
+                for (i0, i1) in [(0usize, 7usize), (2, 5), (3, 3),
+                                 (6, 7)] {
+                    let mut out = vec![0.0f32; (i1 - i0) * dim];
+                    rows.dequant_block_into(i0, i1, &mut out);
+                    for (r, i) in (i0..i1).enumerate() {
+                        for j in 0..dim {
+                            assert_eq!(out[r * dim + j], rows.at(i, j),
+                                       "{bits}b/{prows}r [{i0},{i1}) \
+                                        row {i} j{j}");
+                        }
                     }
                 }
             }
@@ -446,7 +993,8 @@ mod tests {
             q4.push(&row);
             q16.push(&row);
         }
-        // 4-bit rows: 32 bytes codes + 4 bytes scale vs 256 bytes f32.
+        // One 4-bit page: 64*32 code bytes + 64 scales vs one f32
+        // page: 64*64 f32s.
         assert!(q4.bytes() * 4 < q16.bytes(),
                 "{} vs {}", q4.bytes(), q16.bytes());
     }
@@ -473,5 +1021,198 @@ mod tests {
         }
         kv.advance_by(3);
         assert_eq!(kv.n_tokens(), 4);
+    }
+
+    #[test]
+    fn page_size_does_not_change_stored_values() {
+        // The paged store is bit-identical across page sizes — the
+        // "paged == contiguous" contract, with page_rows = 1 as the
+        // degenerate one-row-per-page case and a page larger than the
+        // store as the old contiguous layout.
+        let mut rng = Pcg::new(31, 0);
+        let dim = 11;
+        let n = 13;
+        let data: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..dim).map(|_| rng.normal()).collect())
+            .collect();
+        for bits in [4u32, 16] {
+            let stores: Vec<QRows> = [1usize, 4, 64, 1024]
+                .iter()
+                .map(|&pr| {
+                    let mut q = QRows::with_pool(
+                        PagePool::new(dim, bits, pr, 0));
+                    for row in &data {
+                        q.push(row);
+                    }
+                    q
+                })
+                .collect();
+            for i in 0..n {
+                for j in 0..dim {
+                    let want = stores[0].at(i, j);
+                    for s in &stores[1..] {
+                        assert_eq!(s.at(i, j), want,
+                                   "{bits}b row {i} j {j}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_recycles_pages_and_tracks_gauges() {
+        let pool = PagePool::new(8, 4, 4, 0);
+        let mut q = QRows::with_pool(Arc::clone(&pool));
+        let row = vec![1.0f32; 8];
+        for _ in 0..9 {
+            q.push(&row); // 9 rows -> 3 pages
+        }
+        let g = pool.gauges();
+        assert_eq!(g.pages_live, 3);
+        assert_eq!(g.refs_live, 3);
+        assert_eq!(g.pages_shared, 0);
+        assert_eq!(q.n_pages(), 3);
+        drop(q);
+        let g = pool.gauges();
+        assert_eq!(g.pages_live, 0);
+        assert_eq!(g.refs_live, 0);
+        assert_eq!(g.free_pages, 3);
+        assert_eq!(g.pages_peak, 3);
+        // A new store reuses the freed pages: no new allocations.
+        let mut q2 = QRows::with_pool(Arc::clone(&pool));
+        for _ in 0..8 {
+            q2.push(&row);
+        }
+        let g = pool.gauges();
+        assert_eq!(g.pages_live, 2);
+        assert_eq!(g.free_pages, 1);
+        assert_eq!(g.pages_peak, 3, "peak is a high-water mark");
+    }
+
+    #[test]
+    fn cow_never_mutates_a_shared_page() {
+        // Two stores share a full page; the second keeps appending.
+        // Its writes must land in private pages and the shared page's
+        // decoded values must stay bitwise intact.
+        let pool = PagePool::new(6, 4, 4, 0);
+        let mut rng = Pcg::new(77, 0);
+        let mut a = QRows::with_pool(Arc::clone(&pool));
+        for _ in 0..4 {
+            let row: Vec<f32> = (0..6).map(|_| rng.normal()).collect();
+            a.push(&row);
+        }
+        let before: Vec<f32> =
+            (0..4).flat_map(|i| (0..6).map(move |j| (i, j)))
+                  .map(|(i, j)| a.at(i, j))
+                  .collect();
+        let mut b = QRows::with_pool(Arc::clone(&pool));
+        b.adopt_page(a.page_ref(0));
+        assert_eq!(pool.gauges().pages_shared, 1);
+        // Appends by the adopter open fresh pages past the shared one.
+        for _ in 0..5 {
+            let row: Vec<f32> = (0..6).map(|_| rng.normal()).collect();
+            b.push(&row);
+        }
+        for i in 0..4 {
+            for j in 0..6 {
+                assert_eq!(a.at(i, j), before[i * 6 + j],
+                           "shared page mutated at {i},{j}");
+                assert_eq!(b.at(i, j), before[i * 6 + j],
+                           "adopted view diverged at {i},{j}");
+            }
+        }
+        drop(b);
+        drop(a);
+        let g = pool.gauges();
+        assert_eq!((g.refs_live, g.pages_live), (0, 0), "leak");
+    }
+
+    #[test]
+    fn cow_copies_a_shared_partial_tail() {
+        // A *partial* shared tail page (possible through the raw page
+        // API, not the engine path) is copied before the write: the
+        // holder of the original ref sees unchanged bytes.
+        let pool = PagePool::new(5, 4, 4, 0);
+        let mut a = QRows::with_pool(Arc::clone(&pool));
+        a.push(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        a.push(&[5.0, 4.0, 3.0, 2.0, 1.0]);
+        let held = a.page_ref(0); // tail page now shared
+        let a01 = [a.at(0, 0), a.at(1, 4)];
+        a.push(&[9.0, 9.0, 9.0, 9.0, 9.0]); // triggers CoW
+        assert_eq!([a.at(0, 0), a.at(1, 4)], a01,
+                   "copied rows survive the CoW");
+        assert!(a.at(2, 0) != 0.0, "new row landed");
+        let g = pool.gauges();
+        assert_eq!(g.pages_live, 2, "original + private copy");
+        pool.release(held);
+        drop(a);
+        let g = pool.gauges();
+        assert_eq!((g.refs_live, g.pages_live), (0, 0), "leak");
+    }
+
+    #[test]
+    fn prefix_registry_round_trips_and_releases() {
+        // Register a 2-layer cache's first page boundary, adopt it
+        // into a fresh cache, decode both bitwise-equal, then clear
+        // and verify the pool balances to zero.
+        let (nl, nh, hd) = (2usize, 2usize, 4usize);
+        let pool = PagePool::new(hd, 4, 4, 0); // tpp = 2 tokens
+        let mut rng = Pcg::new(5, 0);
+        let mut src = SeqKv::new_in(nl, nh, Arc::clone(&pool));
+        let prompt: Vec<i32> = (0..5).map(|t| t as i32).collect();
+        for _pos in 0..4 {
+            for l in 0..nl {
+                for _h in 0..nh {
+                    let row: Vec<f32> =
+                        (0..hd).map(|_| rng.normal()).collect();
+                    src.layer_mut(l).k.push(&row);
+                    let row: Vec<f32> =
+                        (0..hd).map(|_| rng.normal()).collect();
+                    src.layer_mut(l).v.push(&row);
+                }
+            }
+            src.advance();
+        }
+        let share = pool.shareable_prefix_len(prompt.len(), nh);
+        assert_eq!(share, 4, "5-token prompt shares 2 full 2-token \
+                              pages");
+        src.register_prefix(&prompt[..share]);
+        assert_eq!(pool.n_prefixes(), 2, "one entry per boundary");
+        // Unknown prompt: no match. Matching prompt: both boundaries.
+        assert!(pool.lookup_prefix(&[9, 9, 9, 9, 9], nh).is_none());
+        let (tok, groups) = pool.lookup_prefix(&prompt, nh).unwrap();
+        assert_eq!((tok, groups.len()), (4, 2));
+        let mut dst = SeqKv::new_in(nl, nh, Arc::clone(&pool));
+        dst.adopt_prefix(tok, groups);
+        assert_eq!(dst.n_tokens(), 4);
+        for l in 0..nl {
+            for i in 0..4 * nh {
+                for j in 0..hd {
+                    assert_eq!(dst.layer(l).k.at(i, j),
+                               src.layer(l).k.at(i, j),
+                               "L{l} K[{i}][{j}]");
+                    assert_eq!(dst.layer(l).v.at(i, j),
+                               src.layer(l).v.at(i, j),
+                               "L{l} V[{i}][{j}]");
+                }
+            }
+        }
+        // A shorter prompt only matches the first boundary (the last
+        // token is never covered by a shared page).
+        let (tok, groups) = pool.lookup_prefix(&prompt[..3], nh)
+            .unwrap();
+        assert_eq!((tok, groups.len()), (2, 1));
+        for grp in groups {
+            for p in grp {
+                pool.release(p);
+            }
+        }
+        assert!(pool.gauges().pages_shared > 0);
+        drop(dst);
+        drop(src);
+        pool.clear_prefixes();
+        let g = pool.gauges();
+        assert_eq!((g.refs_live, g.pages_live), (0, 0), "leak");
+        assert_eq!(pool.n_prefixes(), 0);
     }
 }

@@ -56,7 +56,9 @@ use crate::tensor::{par, Tensor};
 use crate::util::rng::Pcg;
 use crate::util::threadpool::ThreadPool;
 
-use kv::SeqKv;
+use std::sync::Arc;
+
+use kv::{PagePool, SeqKv};
 
 pub use sample::{argmax, sample_token, sample_token_filtered};
 
@@ -559,10 +561,25 @@ impl InferModel {
         if bits == 0 { 16 } else { bits }
     }
 
-    /// Fresh per-sequence KV cache for this model.
+    /// Fresh per-sequence KV cache for this model (private page pool
+    /// — the standalone/eval path).
     pub fn new_cache(&self, kv_bits: u32) -> SeqKv {
         SeqKv::new(self.cfg.n_layers, self.cfg.n_heads,
                    self.cfg.head_dim(), kv_bits)
+    }
+
+    /// Fresh per-sequence KV cache drawing its pages from a shared
+    /// [`PagePool`] (the decode-engine path, DESIGN.md §13). The
+    /// pool's geometry must match this model's head width and the
+    /// requested KV bit-width.
+    pub fn new_cache_in(&self, kv_bits: u32, pool: &Arc<PagePool>)
+                        -> SeqKv {
+        assert_eq!(pool.dim(), self.cfg.head_dim(),
+                   "pool page geometry != model head_dim");
+        assert_eq!(pool.bits(), kv_bits,
+                   "pool bit-width != requested kv_bits");
+        SeqKv::new_in(self.cfg.n_layers, self.cfg.n_heads,
+                      Arc::clone(pool))
     }
 
     /// The core op of the host layer: feed each sequence's token block
@@ -812,18 +829,42 @@ impl InferModel {
                 }
             }
             // (2) Block-dequant the whole visible cache into head-major
-            // tiles: row (pos, h) lands at tile offset (h * p + pos) so
-            // each head's score/mix loops stream contiguously.
+            // tiles, one page run at a time (DESIGN.md §13): each run
+            // of position-major rows living in one physical page
+            // decodes in a single sweep into the page staging buffer,
+            // then scatters row-by-row so (pos, h) lands at tile
+            // offset (h * p + pos) and each head's score/mix loops
+            // stream contiguously. The scatter copies whole decoded
+            // rows, so the tiles are bitwise what the per-row
+            // dequant_block_into calls produced for any page size.
             let lay = cache.layer(li);
-            for pos in 0..p {
-                for h in 0..nh {
-                    let src = pos * nh + h;
-                    let dst = (h * p + pos) * hd;
-                    lay.k.dequant_block_into(src, src + 1,
-                                             &mut s.k[dst..dst + hd]);
-                    lay.v.dequant_block_into(src, src + 1,
-                                             &mut s.v[dst..dst + hd]);
+            let rows = p * nh;
+            let prun = lay.k.page_rows();
+            s.reserve_run(prun.min(rows) * hd);
+            let mut r0 = 0usize;
+            while r0 < rows {
+                let r1 = ((r0 / prun + 1) * prun).min(rows);
+                {
+                    let stage = &mut s.pg[..(r1 - r0) * hd];
+                    lay.k.dequant_block_into(r0, r1, stage);
+                    for (ri, srow) in (r0..r1)
+                        .zip(stage.chunks_exact(hd))
+                    {
+                        let dst = ((ri % nh) * p + ri / nh) * hd;
+                        s.k[dst..dst + hd].copy_from_slice(srow);
+                    }
                 }
+                {
+                    let stage = &mut s.pg[..(r1 - r0) * hd];
+                    lay.v.dequant_block_into(r0, r1, stage);
+                    for (ri, srow) in (r0..r1)
+                        .zip(stage.chunks_exact(hd))
+                    {
+                        let dst = ((ri % nh) * p + ri / nh) * hd;
+                        s.v[dst..dst + hd].copy_from_slice(srow);
+                    }
+                }
+                r0 = r1;
             }
             // (3) Scores + softmax + value mix on the dense tiles.
             let qh = &mut s.qh[..hd];

@@ -34,6 +34,9 @@ pub struct AttnScratch {
     pub qh: Vec<f32>,
     /// RoPE'd key staging for one token (all heads).
     pub kbuf: Vec<f32>,
+    /// Page-run staging for the paged-cache dequant scatter
+    /// (DESIGN.md §13): one physical page's rows, position-major.
+    pub pg: Vec<f32>,
 }
 
 fn grow(buf: &mut Vec<f32>, len: usize) {
@@ -45,7 +48,8 @@ fn grow(buf: &mut Vec<f32>, len: usize) {
 impl AttnScratch {
     fn new() -> AttnScratch {
         AttnScratch { k: Vec::new(), v: Vec::new(), w: Vec::new(),
-                      qh: Vec::new(), kbuf: Vec::new() }
+                      qh: Vec::new(), kbuf: Vec::new(),
+                      pg: Vec::new() }
     }
 
     /// Ensure capacity for a block over `p` cache positions of an
@@ -57,6 +61,12 @@ impl AttnScratch {
         grow(&mut self.w, p);
         grow(&mut self.qh, hd);
         grow(&mut self.kbuf, nh * hd);
+    }
+
+    /// Ensure the page-run staging buffer holds `len` f32s (one page
+    /// of decoded rows at most).
+    pub fn reserve_run(&mut self, len: usize) {
+        grow(&mut self.pg, len);
     }
 }
 

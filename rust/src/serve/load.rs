@@ -31,6 +31,11 @@ pub struct LoadOpts {
     /// Requests per client.
     pub requests: usize,
     pub prompt_len: usize,
+    /// Tokens of a common "system prompt" prepended to every request
+    /// (`--prefix-len`; 0 = off). Drawn from the seed alone, so all
+    /// clients share it bit-identically — the prefix-sharing
+    /// (`--share-prefix`) exercise path.
+    pub prefix_len: usize,
     pub max_new: usize,
     pub timeout_ms: u64,
     pub chaos: ChaosSpec,
@@ -42,8 +47,9 @@ pub struct LoadOpts {
 impl Default for LoadOpts {
     fn default() -> LoadOpts {
         LoadOpts { addr: "127.0.0.1:8080".into(), clients: 4,
-                   requests: 8, prompt_len: 12, max_new: 16,
-                   timeout_ms: 10_000, chaos: ChaosSpec::off(),
+                   requests: 8, prompt_len: 12, prefix_len: 0,
+                   max_new: 16, timeout_ms: 10_000,
+                   chaos: ChaosSpec::off(),
                    chaos_label: "off".into(), seed: 7 }
     }
 }
@@ -132,10 +138,19 @@ enum Outcome {
 
 fn deterministic_prompt(opts: &LoadOpts, vocab: usize, client: u64,
                         req: u64) -> Vec<i32> {
+    let mut out =
+        Vec::with_capacity(opts.prefix_len + opts.prompt_len.max(1));
+    // Shared prefix first: seeded from the run seed alone, so every
+    // client and request agrees on it token for token.
+    let mut pre = Pcg::new(opts.seed, 501);
+    for _ in 0..opts.prefix_len {
+        out.push(pre.below_usize(vocab.max(1)) as i32);
+    }
     let mut rng = Pcg::new(opts.seed ^ (client * 100_000 + req), 500);
-    (0..opts.prompt_len.max(1))
-        .map(|_| rng.below_usize(vocab.max(1)) as i32)
-        .collect()
+    for _ in 0..opts.prompt_len.max(1) {
+        out.push(rng.below_usize(vocab.max(1)) as i32);
+    }
+    out
 }
 
 fn one_request(opts: &LoadOpts, vocab: usize, client: u64, req: u64,
@@ -381,6 +396,11 @@ pub fn run_load(opts: &LoadOpts) -> Result<Json> {
         ("clients", Json::num(opts.clients as f64)),
         ("chaos", Json::str(opts.chaos_label.clone())),
         ("prompt_len", Json::num(opts.prompt_len as f64)),
+        ("prefix_len", Json::num(opts.prefix_len as f64)),
+        ("kv_page_rows",
+         info.get("kv_page_rows").cloned().unwrap_or(Json::Null)),
+        ("share_prefix",
+         info.get("share_prefix").cloned().unwrap_or(Json::Null)),
         ("requests", Json::num(total.requests as f64)),
         ("completed", Json::num(total.completed as f64)),
         ("rejected", Json::num(total.rejected as f64)),
@@ -404,6 +424,10 @@ pub fn run_load(opts: &LoadOpts) -> Result<Json> {
         ("server_rejected_bad", Json::num(server("rejected_bad"))),
         ("server_queue_depth", Json::num(server("queue_depth"))),
         ("server_in_flight", Json::num(server("in_flight"))),
+        ("kv_bytes_peak", Json::num(server("kv_bytes_peak"))),
+        ("kv_pages_peak", Json::num(server("kv_pages_peak"))),
+        ("kv_pages_shared", Json::num(server("kv_pages_shared"))),
+        ("kv_pages_live", Json::num(server("kv_pages_live"))),
     ]);
     Ok(Json::obj(vec![
         ("bench", Json::str("serve")),
@@ -424,6 +448,18 @@ mod tests {
         assert!((p50 - 50.0).abs() <= 1.0, "p50={p50}");
         assert!((p99 - 99.0).abs() <= 1.0, "p99={p99}");
         assert_eq!(percentile_ms(&mut [], 0.5), 0.0);
+    }
+
+    #[test]
+    fn shared_prefix_is_identical_across_clients() {
+        let mut opts = LoadOpts::default();
+        opts.prefix_len = 16;
+        let a = deterministic_prompt(&opts, 128, 0, 0);
+        let b = deterministic_prompt(&opts, 128, 5, 3);
+        assert_eq!(a.len(), 16 + opts.prompt_len);
+        assert_eq!(&a[..16], &b[..16],
+                   "prefix is shared across clients and requests");
+        assert_ne!(&a[16..], &b[16..], "suffixes stay per-request");
     }
 
     #[test]

@@ -39,6 +39,14 @@ pub struct ServeMetrics {
     pub connections: AtomicU64,
     pub queue_depth: AtomicI64,
     pub active_seqs: AtomicI64,
+    // KV page-pool gauges mirrored from the engine each service-loop
+    // iteration (DESIGN.md §13). Shared pages are counted once in
+    // live/peak; `kv_pages_shared` is the aliasing high-water mark
+    // (`refs_live - pages_live`), 0 with `--share-prefix off`.
+    pub kv_pages_live: AtomicI64,
+    pub kv_pages_shared: AtomicU64,
+    pub kv_pages_peak: AtomicU64,
+    pub kv_bytes_peak: AtomicU64,
     /// Inter-token latency as observed by the service thread.
     pub token_lat: LatHist,
 }
@@ -81,6 +89,10 @@ impl ServeMetrics {
             ("connections", n(&self.connections)),
             ("queue_depth", g(&self.queue_depth)),
             ("active_seqs", g(&self.active_seqs)),
+            ("kv_pages_live", g(&self.kv_pages_live)),
+            ("kv_pages_shared", n(&self.kv_pages_shared)),
+            ("kv_pages_peak", n(&self.kv_pages_peak)),
+            ("kv_bytes_peak", n(&self.kv_bytes_peak)),
             ("in_flight", Json::num(self.in_flight() as f64)),
             ("token_p50_ms",
              Json::num(self.token_lat.quantile(0.50).unwrap_or(0.0))),

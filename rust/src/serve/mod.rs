@@ -84,6 +84,15 @@ pub struct ServeOpts {
     pub max_body_bytes: usize,
     /// Concurrent-connection cap; overflow → immediate 503.
     pub max_conns: usize,
+    /// Rows per KV page (`--kv-page-rows`; DESIGN.md §13).
+    pub kv_page_rows: usize,
+    /// Soft KV pool budget in MiB (`--kv-pool-mb`; 0 = unbounded).
+    /// Exhaustion → 503 + `Retry-After` while sequences are running.
+    pub kv_pool_mb: usize,
+    /// Copy-on-write prefix sharing (`--share-prefix on|off`). On by
+    /// default in serve: shared streams are pinned bit-identical to
+    /// unshared, and repeated system prompts are the serving norm.
+    pub share_prefix: bool,
 }
 
 impl Default for ServeOpts {
@@ -108,6 +117,9 @@ impl Default for ServeOpts {
             write_timeout_ms: 10_000,
             max_body_bytes: 1 << 16,
             max_conns: 256,
+            kv_page_rows: crate::model::kv::DEFAULT_PAGE_ROWS,
+            kv_pool_mb: 0,
+            share_prefix: true,
         }
     }
 }
@@ -160,6 +172,12 @@ impl Ctl {
              }),
             ("max_batch", Json::num(self.opts.max_batch as f64)),
             ("queue_cap", Json::num(self.opts.queue_cap as f64)),
+            ("kv_page_rows",
+             Json::num(self.opts.kv_page_rows as f64)),
+            ("share_prefix",
+             Json::str(if self.opts.share_prefix { "on" } else {
+                 "off"
+             })),
             ("threads", Json::num(par::configured_threads() as f64)),
             ("draining", Json::Bool(self.draining.load(SeqCst))),
             ("metrics", self.metrics.to_json()),
@@ -243,6 +261,9 @@ fn serve_loop(model: InferModel, listener: TcpListener, ctl: &Ctl) {
         top_p: ctl.opts.top_p,
         prefill_chunk: ctl.opts.prefill_chunk.max(1),
         seed: ctl.opts.seed,
+        kv_page_rows: ctl.opts.kv_page_rows.max(1),
+        kv_pool_mb: ctl.opts.kv_pool_mb,
+        share_prefix: ctl.opts.share_prefix,
     };
     // Declared before the scope so scoped threads may borrow them.
     let (adm_tx, adm_rx) = mpsc::sync_channel::<Admission>(

@@ -32,6 +32,7 @@ use crate::infer::{DecodeEngine, DecodeParams, GenRequest};
 use crate::model::InferModel;
 use crate::tensor::par;
 
+use super::metrics::ServeMetrics;
 use super::Ctl;
 
 /// A validated request handed from a handler thread to the service
@@ -64,6 +65,17 @@ struct InFlight {
 /// engine is idle.
 const IDLE_WAIT: Duration = Duration::from_millis(5);
 
+/// Mirror the engine's KV page-pool gauges into the `/metrics`
+/// atomics (DESIGN.md §13). Called once per service-loop step and at
+/// drain, so scrapes see at-most-one-step-old values.
+fn mirror_pool(eng: &DecodeEngine, m: &ServeMetrics) {
+    let g = eng.pool_gauges();
+    m.kv_pages_live.store(g.pages_live as i64, Relaxed);
+    m.kv_pages_shared.store(g.shared_peak as u64, Relaxed);
+    m.kv_pages_peak.store(g.pages_peak as u64, Relaxed);
+    m.kv_bytes_peak.store(g.bytes_peak as u64, Relaxed);
+}
+
 fn admit_one(eng: &mut DecodeEngine,
              inflight: &mut HashMap<usize, InFlight>, adm: Admission,
              ctl: &Ctl) {
@@ -79,6 +91,21 @@ fn admit_one(eng: &mut DecodeEngine,
     }
     let req = GenRequest { id: adm.id, prompt: adm.prompt,
                            max_new: adm.max_new };
+    // Pool backpressure (DESIGN.md §13): with a `--kv-pool-mb` budget
+    // and other sequences holding pages, a request that cannot fit
+    // right now is shed with a retryable 503 instead of queueing
+    // behind memory we don't have. An idle engine admits regardless —
+    // it reclaims the prefix registry, so progress is guaranteed.
+    if eng.n_active() > 0
+        && !eng.pool_has_room(req.prompt.len(), req.max_new)
+    {
+        let _ = adm.events.try_send(Event::Rejected {
+            status: 503,
+            msg: "kv pool exhausted".into(),
+        });
+        m.rejected_full.fetch_add(1, Relaxed);
+        return;
+    }
     match eng.submit(req) {
         Ok(()) => {
             m.admitted.fetch_add(1, Relaxed);
@@ -204,6 +231,7 @@ pub(crate) fn service_loop(model: &InferModel, params: DecodeParams,
                 m.completed.fetch_add(1, Relaxed);
             }
         }
+        mirror_pool(&eng, m);
         m.active_seqs.store(eng.n_pending() as i64, Relaxed);
     }
 
@@ -219,5 +247,15 @@ pub(crate) fn service_loop(model: &InferModel, params: DecodeParams,
     }
     m.active_seqs.store(0, Relaxed);
     debug_assert_eq!(eng.n_pending(), 0, "drain leaked batch slots");
+    // Return prefix-registry refs and prove pool balance before
+    // exiting: a drained engine must hold zero pages. CI greps the
+    // printed line.
+    eng.clear_prefix_cache();
+    mirror_pool(&eng, m);
+    let g = eng.pool_gauges();
+    println!("kv pool balance after drain: {} pages live, {} refs live",
+             g.pages_live, g.refs_live);
+    debug_assert_eq!((g.refs_live, g.pages_live), (0, 0),
+                     "drain leaked KV pages");
     ctl.service_done.store(true, SeqCst);
 }

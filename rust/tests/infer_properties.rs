@@ -276,3 +276,80 @@ fn continuous_batching_is_stream_invariant() {
         assert_eq!(together, solo, "max_batch={max_batch}");
     }
 }
+
+/// Prefix sharing (DESIGN.md §13) is invisible in the token streams:
+/// prompts that agree on every token but the last decode bit-identical
+/// greedy streams with `share_prefix` on and off, across batch sizes
+/// (serial admission adopts registered pages; simultaneous admission
+/// mostly doesn't — both must match the unshared baseline). A serial
+/// shared run actually shares pages, an unshared run never does, and
+/// the pool balances to zero once the registry is cleared.
+#[test]
+fn prefix_sharing_is_stream_invariant() {
+    prop::check("prefix_sharing_invariant", 5, 0x5A4ED, |rng: &mut Pcg| {
+        let cfg = cfg_case(rng);
+        // Token-aligned pages, 1-3 tokens each; prompts share all but
+        // the final token, so each request's shareable region (whole
+        // pages over the first plen-1 tokens) lies inside the common
+        // run and the first finisher's registration is adoptable.
+        let tpp = 1 + rng.below_usize(3);
+        let page_rows = cfg.n_heads * tpp;
+        let plen = 2 * tpp + 1;
+        let common: Vec<i32> = (0..plen - 1)
+            .map(|_| rng.below(cfg.vocab_size as u64) as i32)
+            .collect();
+        let n = 2 + rng.below_usize(3);
+        let prompts: Vec<Vec<i32>> = (0..n)
+            .map(|i| {
+                let mut p = common.clone();
+                p.push((i % cfg.vocab_size) as i32);
+                p
+            })
+            .collect();
+        (cfg, prompts, page_rows, rng.next_u64())
+    }, |(cfg, prompts, page_rows, seed)| {
+        use osp::infer::{DecodeEngine, GenRequest};
+        let model = InferModel::synthetic(cfg, *seed).quantized(4);
+        let run = |share: bool, max_batch: usize|
+                  -> Result<(Vec<Vec<i32>>, usize), String> {
+            let mut params = DecodeParams::greedy(4, 4, max_batch);
+            params.kv_page_rows = *page_rows;
+            params.share_prefix = share;
+            let mut eng = DecodeEngine::new(&model, params, None);
+            for (i, p) in prompts.iter().enumerate() {
+                eng.submit(GenRequest { id: i, prompt: p.clone(),
+                                        max_new: 6 })
+                    .map_err(|e| format!("submit {i}: {e}"))?;
+            }
+            let mut out = eng.run().map_err(|e| format!("run: {e}"))?;
+            let shared = eng.stats.kv_pages_shared;
+            eng.clear_prefix_cache();
+            let g = eng.pool_gauges();
+            if (g.refs_live, g.pages_live) != (0, 0) {
+                return Err(format!(
+                    "share={share} mb={max_batch}: pool holds {} refs \
+                     / {} pages after drain", g.refs_live,
+                    g.pages_live));
+            }
+            out.sort_by_key(|r| r.id);
+            Ok((out.into_iter().map(|r| r.generated).collect(), shared))
+        };
+        let (base, s_off) = run(false, prompts.len())?;
+        if s_off != 0 {
+            return Err(format!("sharing off but {s_off} pages shared"));
+        }
+        for mb in [1usize, 2, prompts.len()] {
+            let (got, _) = run(true, mb)?;
+            if got != base {
+                return Err(format!(
+                    "share on, max_batch {mb}: {got:?} != unshared \
+                     {base:?}"));
+            }
+        }
+        let (_, s_serial) = run(true, 1)?;
+        if s_serial == 0 {
+            return Err("serial shared run shared no pages".into());
+        }
+        Ok(())
+    });
+}

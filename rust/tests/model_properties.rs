@@ -5,10 +5,12 @@
 //! contents for chunk 1 vs 64), chunk-invariant host perplexity, and
 //! the fail-safe rejection paths of the model/scheduler stack.
 
+use std::sync::Arc;
+
 use osp::coordinator::levels_for_bits;
 use osp::data::{Split, TokenStream};
 use osp::eval::host::{perplexity_host, HostEvalOpts, VALID_STREAM_SEED};
-use osp::model::kv::{QRows, SeqKv};
+use osp::model::kv::{PagePool, PageRef, QRows, SeqKv};
 use osp::model::ops::{fake_quant_row, norm_row, rope_in_place, silu,
                       softmax_in_place};
 use osp::model::{InferConfig, InferModel, LogitsMode, SeqBlock};
@@ -16,6 +18,7 @@ use osp::quant::rtn::quantize_per_channel_q;
 use osp::tensor::intkern::{self, Backend, IntMode};
 use osp::tensor::{par, Tensor};
 use osp::util::rng::Pcg;
+use osp::util::threadpool::ThreadPool;
 
 // ---- independent reference implementation ---------------------------------
 //
@@ -248,6 +251,29 @@ fn chunked_logits(model: &InferModel, tokens: &[i32], cache: &mut SeqKv,
                                          cache: &mut *cache }];
         let logits = model
             .forward_block(None, &mut blocks, a_bits, LogitsMode::All,
+                           None)
+            .unwrap()
+            .unwrap();
+        out.data_mut()[c0 * vocab..c1 * vocab]
+            .copy_from_slice(logits.data());
+        c0 = c1;
+    }
+    out
+}
+
+/// `chunked_logits` with a worker pool: the A4 forward in blocks of 5,
+/// stacking all-position logits.
+fn pooled_logits(model: &InferModel, tokens: &[i32], cache: &mut SeqKv,
+                 tp: &ThreadPool) -> Tensor {
+    let vocab = model.cfg.vocab_size;
+    let mut out = Tensor::zeros(&[tokens.len(), vocab]);
+    let mut c0 = 0usize;
+    while c0 < tokens.len() {
+        let c1 = (c0 + 5).min(tokens.len());
+        let mut blocks = vec![SeqBlock { tokens: &tokens[c0..c1],
+                                         cache: &mut *cache }];
+        let logits = model
+            .forward_block(Some(tp), &mut blocks, 4, LogitsMode::All,
                            None)
             .unwrap()
             .unwrap();
@@ -568,4 +594,132 @@ fn rejection_paths_return_err() {
         .forward_step_refs(None, &[1], &mut refs, 4)
         .unwrap();
     assert_eq!(logits.shape(), &[1, 32]);
+}
+
+/// DESIGN.md §13 parity contract, sharing off: a paged cache drawn
+/// from a shared `PagePool` yields bit-identical logits *and* KV
+/// contents to the default private-pool cache for any page size (one
+/// row per page up to one giant page) and any worker count, and every
+/// page returns to the pool when the cache drops.
+#[test]
+fn paged_cache_is_bitwise_invariant_to_page_size_and_workers() {
+    let mut rng = Pcg::new(0x9A6E, 8);
+    let tokens = random_tokens(&mut rng, S);
+    let (_params, model, _rm) = build_models(77, 4);
+    let hd = D / NH;
+    for kv_bits in [4u32, 16] {
+        let mut base_cache = model.new_cache(kv_bits);
+        let base = chunked_logits(&model, &tokens, &mut base_cache, 4, 5);
+        for prows in [1usize, 3, 64, 1024] {
+            let pool = PagePool::new(hd, kv_bits, prows, 0);
+            {
+                let mut cache = model.new_cache_in(kv_bits, &pool);
+                let got =
+                    chunked_logits(&model, &tokens, &mut cache, 4, 5);
+                assert_eq!(got.data(), base.data(),
+                           "kv{kv_bits} page_rows {prows}: logits");
+                assert_caches_equal(&cache, &base_cache,
+                                    &format!("kv{kv_bits} R{prows}"));
+            }
+            let g = pool.gauges();
+            assert_eq!((g.refs_live, g.pages_live), (0, 0),
+                       "kv{kv_bits} page_rows {prows}: pages leaked \
+                        after cache drop");
+        }
+        // Worker count is orthogonal to paging: a pooled forward over
+        // an awkward page size still matches the serial baseline.
+        for nw in [2usize, 8] {
+            let tp = ThreadPool::new(nw, 8 * nw);
+            let pool = PagePool::new(hd, kv_bits, 3, 0);
+            let mut cache = model.new_cache_in(kv_bits, &pool);
+            let got = pooled_logits(&model, &tokens, &mut cache, &tp);
+            assert_eq!(got.data(), base.data(),
+                       "kv{kv_bits} {nw} workers: logits");
+            assert_caches_equal(&cache, &base_cache,
+                                &format!("kv{kv_bits} {nw} workers"));
+        }
+    }
+}
+
+/// `PagePool` bookkeeping under a seeded random op soup: pushes into
+/// several stores, snapshot-shares of random pages, releases, and
+/// whole-store drops. Invariants checked per op (refs >= live pages,
+/// peak >= live) and at the end (shared snapshots still decode to
+/// their captured bytes — copy-on-write never mutated a shared page —
+/// and the drained pool balances to zero with `free == peak`, i.e. no
+/// double-free and no leak).
+#[test]
+fn page_pool_invariants_under_random_ops() {
+    const PROWS: usize = 4;
+    const DIM: usize = 8;
+    let pool = PagePool::new(DIM, 4, PROWS, 0);
+    // Decode all PROWS rows of one raw page through a throwaway
+    // adopter table — the only window onto page bytes from out here.
+    let read_page = |pr: &PageRef| -> Vec<f32> {
+        let mut t = QRows::with_pool(Arc::clone(&pool));
+        t.adopt_page(pool.retain(pr));
+        let mut out = vec![0.0f32; PROWS * DIM];
+        t.dequant_block_into(0, PROWS, &mut out);
+        out
+    };
+    let mut rng = Pcg::new(0xF001 ^ 0x9E37, 13);
+    let mut stores: Vec<QRows> = (0..3)
+        .map(|_| QRows::with_pool(Arc::clone(&pool)))
+        .collect();
+    let mut held: Vec<(PageRef, Vec<f32>)> = Vec::new();
+    for op in 0..400 {
+        match rng.below(5) {
+            // Biased toward growth so pages actually turn over.
+            0 | 1 | 2 => {
+                let s = rng.below_usize(stores.len());
+                let row: Vec<f32> =
+                    (0..DIM).map(|_| rng.normal()).collect();
+                stores[s].push(&row);
+            }
+            3 => {
+                // Snapshot-share a random page of a random store.
+                let s = rng.below_usize(stores.len());
+                if stores[s].n_pages() > 0 {
+                    let p = rng.below_usize(stores[s].n_pages());
+                    let pr = stores[s].page_ref(p);
+                    let bytes = read_page(&pr);
+                    held.push((pr, bytes));
+                } else if !held.is_empty() {
+                    let h = held.swap_remove(
+                        rng.below_usize(held.len()));
+                    pool.release(h.0);
+                }
+            }
+            _ => {
+                // Drop-and-replace a whole store: its table releases
+                // every page it references.
+                let s = rng.below_usize(stores.len());
+                stores[s] = QRows::with_pool(Arc::clone(&pool));
+            }
+        }
+        let g = pool.gauges();
+        assert!(g.refs_live >= g.pages_live,
+                "op {op}: refs {} < live pages {}", g.refs_live,
+                g.pages_live);
+        assert!(g.pages_peak >= g.pages_live,
+                "op {op}: peak below live");
+        assert_eq!(g.pages_shared, g.refs_live - g.pages_live,
+                   "op {op}: shared gauge out of step");
+    }
+    // Copy-on-write proof: despite every push and drop above, each
+    // held snapshot still decodes to the exact bytes captured when
+    // the share was taken.
+    for (i, (pr, bytes)) in held.iter().enumerate() {
+        assert_eq!(&read_page(pr), bytes,
+                   "held snapshot {i} mutated in place");
+    }
+    for (pr, _) in held.drain(..) {
+        pool.release(pr);
+    }
+    stores.clear();
+    let g = pool.gauges();
+    assert_eq!((g.refs_live, g.pages_live), (0, 0),
+               "drained pool still holds refs/pages");
+    assert_eq!(g.free_pages, g.pages_peak,
+               "every buffer ever created is parked on the free list");
 }
