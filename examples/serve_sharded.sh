@@ -1,0 +1,64 @@
+#!/bin/sh
+# Two-worker row-parallel sharded serving quickstart (DESIGN.md §14).
+#
+# Cuts a synthetic packed W4 model into 2 shard artifacts, boots a
+# coordinator plus two `osp worker` processes that fetch their shards
+# from the coordinator (checksummed, chunked, resumable), streams a
+# few generations — bit-identical to a single-process server — and
+# drains everything cleanly.
+#
+#   cd rust && cargo build --release && sh ../examples/serve_sharded.sh
+#
+# Swap `--synthetic ...` for `--packed qmodel.bin --n-heads N` to
+# shard a real PTQ artifact (`osp quantize --ckpt DIR --save-packed
+# qmodel.bin`). Sharded serving requires the integer kernel path
+# (`--int scalar|auto`, A-bits <= 8): integer partial sums recombine
+# exactly, f32 sums would not.
+set -eu
+
+OSP=${OSP:-./target/release/osp}
+MODEL="--synthetic --w-bits 4 --a-bits 4 --kv-bits 4 \
+  --d-model 64 --n-layers 2 --n-heads 4 --d-ff 96"
+COORD=127.0.0.1:8230
+W0=127.0.0.1:8231
+W1=127.0.0.1:8232
+DIR=$(mktemp -d)
+trap 'rm -rf "$DIR"' EXIT
+
+# 1. Publish the shard artifacts + manifest.
+$OSP shard $MODEL --shards 2 --out "$DIR/shards"
+
+# 2. Coordinator first: it serves GET /shards immediately and gates
+#    /generate until the fleet reports ready.
+$OSP serve $MODEL --int auto --addr "$COORD" \
+  --workers "$W0,$W1" --shard-dir "$DIR/shards" &
+COORD_PID=$!
+
+until curl -sf "http://$COORD/healthz" > /dev/null; do sleep 0.2; done
+
+# 3. Workers fetch their shard from the coordinator and come up.
+$OSP worker --shard 0 --n-shards 2 --int auto --addr "$W0" \
+  --coordinator "$COORD" --spool "$DIR/shard_0.part" &
+W0_PID=$!
+$OSP worker --shard 1 --n-shards 2 --int auto --addr "$W1" \
+  --coordinator "$COORD" --spool "$DIR/shard_1.part" &
+W1_PID=$!
+
+until curl -sf "http://$COORD/healthz" | grep -q '"ready":true'; do
+  sleep 0.2
+done
+
+# 4. Generate: trunk matmuls fan out to both workers per step; the
+#    token stream is bit-identical to a single-process server.
+curl -s -X POST "http://$COORD/generate" \
+  -d '{"prompt":[1,2,3,5],"max_new":12}'
+echo
+curl -s "http://$COORD/status"
+echo
+
+# 5. Drain: the coordinator finishes in-flight work, then propagates
+#    the drain to the fleet; every process exits 0 with zero leaked
+#    slots / stripes.
+curl -s -X POST "http://$COORD/admin/drain" > /dev/null
+wait "$COORD_PID" "$W0_PID" "$W1_PID"
+echo "sharded fleet drained cleanly"

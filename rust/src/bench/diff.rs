@@ -27,11 +27,14 @@ use crate::util::json::Json;
 /// regression candidate. Likewise `kv_page_rows`/`share_prefix`
 /// (DESIGN.md §13): page geometry and prefix sharing change the
 /// memory-footprint metrics by design, so runs under different KV
-/// layouts must not be diffed against each other.
-const IDENTITY_FIELDS: [&str; 15] = [
+/// layouts must not be diffed against each other. `workers`/`shards`
+/// key the row-parallel sharded serve rows (DESIGN.md §14): a 2-worker
+/// run pays rpc latency a single-process run does not, so the two are
+/// different experiments, never regression candidates.
+const IDENTITY_FIELDS: [&str; 17] = [
     "op", "phase", "config", "size", "w_bits", "a_bits", "kv_bits", "bits",
     "batch", "chunk", "prompt_len", "clients", "chaos", "kv_page_rows",
-    "share_prefix",
+    "share_prefix", "workers", "shards",
 ];
 
 /// Lower-is-better metrics: `*_ns_op` kernel timings and the serve
@@ -47,8 +50,12 @@ fn is_rate_metric(key: &str) -> bool {
 /// Lower-is-better memory metrics: byte and page footprints
 /// (`weight_bytes`, `kv_bytes_peak`, `kv_pages_shared`, ...). Counted
 /// like timings: `speedup > 1.0` means NEW uses less memory.
+/// `bytes_streamed` (shard distribution volume, DESIGN.md §14) is
+/// named prefix-first so the substring rules miss it — listed
+/// explicitly.
 fn is_mem_metric(key: &str) -> bool {
     key.contains("_bytes") || key.contains("_pages")
+        || key == "bytes_streamed"
 }
 
 /// One compared metric of one matched row.
@@ -369,6 +376,42 @@ mod tests {
         assert!(d2.metrics.is_empty(), "{:?}", d2.metrics);
         assert_eq!(d2.only_old.len(), 1);
         assert_eq!(d2.only_new.len(), 1);
+    }
+
+    /// The §14 sharded-serve rows: `workers`/`shards` are identity (a
+    /// 2-worker run never diffs against single-process), `fetch_ms`
+    /// diffs as a timing, and `bytes_streamed` /
+    /// `worker_weight_bytes_max` as lower-is-better memory metrics.
+    #[test]
+    fn sharded_rows_key_on_workers_and_diff_fetch_metrics() {
+        assert!(IDENTITY_FIELDS.contains(&"workers"));
+        assert!(IDENTITY_FIELDS.contains(&"shards"));
+        assert!(is_time_metric("fetch_ms"));
+        assert!(is_mem_metric("bytes_streamed"));
+        assert!(is_mem_metric("worker_weight_bytes_max"));
+        assert!(!is_mem_metric("tokens"));
+        let sharded_row = |workers: f64, fetch: f64, streamed: f64| {
+            Json::obj(vec![
+                ("phase", Json::str("serve")),
+                ("config", Json::str("4-4-4")),
+                ("clients", Json::num(8.0)),
+                ("workers", Json::num(workers)),
+                ("shards", Json::num(workers)),
+                ("fetch_ms", Json::num(fetch)),
+                ("bytes_streamed", Json::num(streamed)),
+            ])
+        };
+        let old = report(4.0, vec![sharded_row(2.0, 300.0, 8192.0)]);
+        let new = report(4.0, vec![sharded_row(2.0, 150.0, 4096.0),
+                                   sharded_row(4.0, 200.0, 8192.0)]);
+        let d = diff_reports(&old, &new).unwrap();
+        assert_eq!(d.only_new.len(), 1, "{:?}", d.only_new);
+        assert!(d.only_new[0].contains("workers=4"), "{:?}",
+                d.only_new);
+        assert_eq!(d.metrics.len(), 2, "{:?}", d.metrics);
+        for m in &d.metrics {
+            assert!((m.speedup - 2.0).abs() < 1e-12, "{m:?}");
+        }
     }
 
     /// Added/removed rows are informational: a NEW-only artifact (e.g.

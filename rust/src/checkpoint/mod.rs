@@ -13,6 +13,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::model::remote::{ShardEntry, ShardKind, ShardSet};
 use crate::quant::{QParam, QuantizedModel};
 use crate::runtime::manifest::{OptLeafSpec, ParamSpec};
 use crate::tensor::qtensor::{QStorage, QTensor};
@@ -333,6 +334,116 @@ pub fn load_packed(path: &Path) -> Result<QuantizedModel> {
     Ok(QuantizedModel::new(arch, params, had_flag))
 }
 
+// ---- per-worker shard artifacts (DESIGN.md §14) ---------------------------
+
+/// Magic + format version of a per-worker shard artifact (`osp shard`
+/// output, fetched by workers over the storage backend). Versioned the
+/// same way as `OSPQ`: any layout change bumps the version, and
+/// [`load_shard`] rejects unknown versions instead of misreading.
+const SHARD_MAGIC: [u8; 4] = *b"OSPS";
+const SHARD_VERSION: u32 = 1;
+
+/// A loaded shard artifact: worker `shard` of `n_shards`, carrying its
+/// slice of every trunk linear.
+pub struct ShardArtifact {
+    pub shard: usize,
+    pub n_shards: usize,
+    pub arch: String,
+    pub entries: ShardSet,
+}
+
+/// Serialize one worker's shard set (single file). Every entry must be
+/// packed — shard extraction only emits packed pieces.
+pub fn save_shard(path: &Path, shard: usize, n_shards: usize, arch: &str,
+                  set: &ShardSet) -> Result<()> {
+    let mut w = ByteWriter(Vec::new());
+    w.0.extend_from_slice(&SHARD_MAGIC);
+    w.u32(SHARD_VERSION);
+    w.u32(shard as u32);
+    w.u32(n_shards as u32);
+    w.str(arch);
+    w.u32(set.len() as u32);
+    for e in set {
+        let QStorage::Packed(codes) = e.q.storage() else {
+            bail!("shard entry '{}' is not packed", e.name);
+        };
+        w.str(&e.name);
+        w.0.push(e.kind.tag());
+        w.u32(e.full_k as u32);
+        w.u32(e.full_n as u32);
+        w.u32(e.off as u32);
+        w.u32(e.q.bits());
+        w.shape(e.q.shape());
+        w.f32s(e.q.scales());
+        w.u32(codes.len() as u32);
+        w.0.extend_from_slice(codes);
+    }
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, &w.0).with_context(|| format!("writing {path:?}"))
+}
+
+/// Parse a shard artifact from raw bytes (the worker's fetch path —
+/// bytes may arrive over HTTP rather than from a file). Validates the
+/// magic, version, entry geometry (via [`QTensor::from_parts`]), and
+/// that no bytes trail the last entry.
+pub fn parse_shard(bytes: &[u8], what: &str) -> Result<ShardArtifact> {
+    let mut r = ByteReader { b: bytes, off: 0 };
+    if r.take(4)? != SHARD_MAGIC {
+        bail!("{what}: not a shard artifact (bad magic)");
+    }
+    let version = r.u32()?;
+    if version != SHARD_VERSION {
+        bail!("{what}: shard artifact version {version}, this build \
+               reads {SHARD_VERSION}");
+    }
+    let shard = r.u32()? as usize;
+    let n_shards = r.u32()? as usize;
+    if n_shards == 0 || shard >= n_shards {
+        bail!("{what}: shard {shard} of {n_shards} is inconsistent");
+    }
+    let arch = r.str()?;
+    let n_entries = r.u32()? as usize;
+    if n_entries > 1 << 20 {
+        bail!("{what}: implausible entry count {n_entries}");
+    }
+    let mut entries = Vec::with_capacity(n_entries);
+    for ei in 0..n_entries {
+        let name = r.str()?;
+        let kind = ShardKind::from_tag(r.take(1)?[0])
+            .map_err(|e| anyhow::anyhow!("{what}: entry {ei}: {e}"))?;
+        let full_k = r.u32()? as usize;
+        let full_n = r.u32()? as usize;
+        let off = r.u32()? as usize;
+        let bits = r.u32()?;
+        let shape = r.shape()?;
+        if shape.len() != 2 {
+            bail!("{what}: entry '{name}' has rank {}", shape.len());
+        }
+        let scales = r.f32s(shape[1])?;
+        let n_codes = r.u32()? as usize;
+        let codes = r.take(n_codes)?.to_vec();
+        let q = QTensor::from_parts(shape, bits, scales,
+                                    QStorage::Packed(codes))
+            .map_err(|e| anyhow::anyhow!("{what}: entry '{name}': {e}"))?;
+        entries.push(ShardEntry { name, kind, full_k, full_n, off, q });
+    }
+    if r.off != bytes.len() {
+        bail!("{what}: {} trailing bytes", bytes.len() - r.off);
+    }
+    Ok(ShardArtifact { shard, n_shards, arch, entries })
+}
+
+/// Load a shard artifact saved by [`save_shard`].
+pub fn load_shard(path: &Path) -> Result<ShardArtifact> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("no shard artifact at {path:?}"))?;
+    parse_shard(&bytes, &format!("{path:?}"))
+}
+
 /// List checkpoint step dirs under a run, ascending.
 pub fn list_steps(run_dir: &Path) -> Vec<(u64, PathBuf)> {
     let mut out = Vec::new();
@@ -487,6 +598,79 @@ mod tests {
         bytes.truncate(bytes.len() - 3);
         std::fs::write(&path, &bytes).unwrap();
         assert!(load_packed(&path).is_err());
+    }
+
+    fn toy_shard_set() -> ShardSet {
+        use crate::quant::rtn;
+        use crate::util::rng::Pcg;
+        let mut rng = Pcg::new(9, 3);
+        let mut w = Tensor::zeros(&[24, 20]);
+        rng.fill_normal(w.data_mut(), 1.0);
+        let q = rtn::quantize_per_channel_q(&w, 4);
+        vec![
+            ShardEntry { name: "L0.wq".into(), kind: ShardKind::Col,
+                         full_k: 24, full_n: 40, off: 20,
+                         q: q.shard_cols(0, 20) },
+            ShardEntry { name: "L0.wo".into(), kind: ShardKind::Row,
+                         full_k: 48, full_n: 20, off: 24,
+                         q: q.shard_rows(0, 24) },
+        ]
+    }
+
+    #[test]
+    fn shard_artifact_roundtrip() {
+        let dir = std::env::temp_dir().join("osp_shard_test_a");
+        let _ = std::fs::remove_dir_all(&dir);
+        let set = toy_shard_set();
+        let path = dir.join("shard_1.bin");
+        save_shard(&path, 1, 2, "ssnorm_plain", &set).unwrap();
+        let back = load_shard(&path).unwrap();
+        assert_eq!((back.shard, back.n_shards), (1, 2));
+        assert_eq!(back.arch, "ssnorm_plain");
+        assert_eq!(back.entries.len(), 2);
+        for (a, b) in set.iter().zip(&back.entries) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!((a.full_k, a.full_n, a.off),
+                       (b.full_k, b.full_n, b.off));
+            assert_eq!(a.q, b.q, "'{}' payload", a.name);
+        }
+    }
+
+    /// The satellite robustness matrix: bad magic, unknown version,
+    /// inconsistent shard index, and truncation all fail cleanly (an
+    /// `Err`, never a panic or a silently-wrong tensor).
+    #[test]
+    fn shard_artifact_rejects_corruption() {
+        let dir = std::env::temp_dir().join("osp_shard_test_b");
+        let _ = std::fs::remove_dir_all(&dir);
+        let set = toy_shard_set();
+        let path = dir.join("shard_0.bin");
+        save_shard(&path, 0, 2, "a", &set).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // bad magic
+        let mut evil = bytes.clone();
+        evil[0] = b'X';
+        assert!(parse_shard(&evil, "t").is_err());
+        // unknown version
+        let mut evil = bytes.clone();
+        evil[4] = 99;
+        let err = parse_shard(&evil, "t").unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+        // shard index out of range (byte 8 is the shard u32)
+        let mut evil = bytes.clone();
+        evil[8] = 7;
+        assert!(parse_shard(&evil, "t").is_err());
+        // truncation at any tail point
+        for cut in [bytes.len() - 1, bytes.len() / 2, 10] {
+            assert!(parse_shard(&bytes[..cut], "t").is_err(),
+                    "cut at {cut}");
+        }
+        // flipped payload bit that breaks pad-bit canonicalization is
+        // caught by from_parts; a mid-scale flip still parses (scales
+        // are opaque f32s) — integrity beyond structure is the storage
+        // layer's checksum job (serve::storage).
+        assert!(load_shard(&path).is_ok());
     }
 
     #[test]

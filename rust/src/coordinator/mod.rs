@@ -14,6 +14,7 @@
 pub mod dp;
 pub mod lr;
 pub mod opt;
+pub mod shard;
 
 
 use std::sync::Arc;

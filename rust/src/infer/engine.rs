@@ -29,6 +29,12 @@
 //! per-sequence attention make results independent of batch composition,
 //! worker count, *and prefill chunk size* (pinned by
 //! `rust/tests/infer_properties.rs` and `rust/tests/model_properties.rs`).
+//! That independence extends across *processes*: a model whose trunk
+//! linears were swapped for row-parallel remote stubs
+//! ([`InferModel::shard_remote`], DESIGN.md §14) produces bit-identical
+//! streams for any shard count, because col shards concatenate exact
+//! f32 stripes and row shards sum exact i32 partials before the single
+//! rescale (pinned by `rust/tests/shard_properties.rs`).
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -151,6 +157,9 @@ pub struct DecodeStats {
     /// Integer-kernel backend the model's linears resolved to for this
     /// run's `a_bits` (None = f32 LUT path).
     pub int_kernel: Option<&'static str>,
+    /// Row-parallel worker count when the model's trunk linears are
+    /// remote stubs (DESIGN.md §14); 0 = all weights local.
+    pub remote_workers: usize,
 }
 
 impl DecodeStats {
@@ -192,6 +201,7 @@ impl<'m, 'p> DecodeEngine<'m, 'p> {
         assert!(params.max_batch > 0, "max_batch must be positive");
         let stats = DecodeStats {
             int_kernel: model.int_kernel_label(params.a_bits),
+            remote_workers: model.remote_workers(),
             ..DecodeStats::default()
         };
         let kv_pool = PagePool::with_budget_mb(

@@ -9,6 +9,8 @@
 //!   eval       engine-free host evaluation straight off packed weights
 //!   generate   autoregressive decode on the host model layer
 //!   serve      streaming HTTP front-end on the decode engine
+//!   shard      partition a packed model into per-worker artifacts
+//!   worker     row-parallel shard worker for a sharded serve
 //!   serve-load chaos-capable load generator against a running serve
 //!   serve-bench  decode + chunked-prefill throughput sweeps
 //!   bench-diff  per-row speedup diff of two bench JSON artifacts
@@ -37,6 +39,7 @@ use osp::repro::{self, Effort};
 use osp::runtime::{Engine, Manifest};
 use osp::serve::chaos::ChaosSpec;
 use osp::serve::load::{self as serve_load, LoadOpts};
+use osp::serve::worker::{ShardSource, WorkerOpts, WorkerServer};
 use osp::serve::{ServeOpts, Server};
 use osp::tensor::{intkern, par};
 use osp::util::cli::Args;
@@ -108,6 +111,29 @@ USAGE: osp <subcommand> [flags]
                                      exhaustion is a retryable 503
              [--share-prefix on|off] store identical prompt prefixes
                                      once across requests (default on)
+             [--workers A:P1,A:P2]   row-parallel sharded mode: route
+                                     trunk matmuls to these osp worker
+                                     processes (token streams stay
+                                     bit-identical to single-process)
+             [--shard-dir DIR]       osp shard output served to the
+                                     workers over GET /shards/...
+  shard      partition a packed model into per-worker row/col shard
+             artifacts + manifest.json for sharded serving
+             --packed FILE | --ckpt DIR | --synthetic  (as generate)
+             [--shards N]            fleet size (default 2)
+             [--out DIR]             output directory (default shards)
+  worker     serve one shard of the trunk for a sharded osp serve:
+             POST /matmul, GET /metrics, GET /healthz,
+             POST /admin/drain (graceful shutdown)
+             --artifact FILE         load a local osp shard artifact, or
+             --coordinator HOST:PORT checksummed resumable fetch from
+                                     the coordinator's /shards endpoints
+             [--shard N] [--n-shards N] [--addr HOST:PORT]
+             [--spool FILE]          fetch spool path (resume point,
+                                     default shard_N.part)
+             [--fetch-budget BYTES]  abort the fetch after this many
+                                     wire bytes (testing; rerun resumes)
+             [--int scalar|auto]     integer kernels are required here
   serve-load built-in load generator + chaos harness for osp serve
              [--addr HOST:PORT] [--clients N] [--requests N per client]
              [--prompt-len N] [--max-new N] [--timeout-ms N] [--seed N]
@@ -857,17 +883,102 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .max(1),
         kv_pool_mb: args.usize_or("kv-pool-mb", defaults.kv_pool_mb),
         share_prefix: share_prefix_arg(args, defaults.share_prefix)?,
+        workers: args
+            .list_or("workers", &[])
+            .into_iter()
+            .filter(|w| !w.is_empty())
+            .collect(),
+        shard_dir: args.str_or("shard-dir", &defaults.shard_dir),
     };
+    let n_workers = opts.workers.len();
     let server = Server::spawn(model, opts)?;
+    if n_workers > 0 {
+        println!("sharded: trunk matmuls routed to {n_workers} \
+                  worker(s); GET /shards serves their artifacts");
+    }
     println!(
         "osp serve listening on {} (max_batch {}, queue_cap {}; \
-         POST /generate, GET /metrics, GET /healthz, \
+         POST /generate, GET /metrics, GET /status, GET /healthz, \
          POST /admin/drain to stop)",
         server.addr(),
         args.usize_or("max-batch", defaults.max_batch).max(1),
         args.usize_or("queue-cap", defaults.queue_cap).max(1));
     server.join();
     println!("drained; all batch slots returned, exiting");
+    Ok(())
+}
+
+/// `osp shard`: partition the resolved packed model into per-worker
+/// row/col shard artifacts plus a manifest (DESIGN.md §14). The output
+/// directory is what a sharded `osp serve --shard-dir` streams to its
+/// workers, and what `osp worker --artifact` loads directly.
+fn cmd_shard(args: &Args) -> Result<()> {
+    let model = generate_model(args)?;
+    let shards = args.usize_or("shards", 2).max(1);
+    let arch = args.str_or("arch", "ssnorm_plain");
+    let dir = PathBuf::from(args.str_or("out", "shards"));
+    let report =
+        osp::coordinator::shard::write_shards(&model, shards, &arch,
+                                              &dir)?;
+    let total: usize = report.bytes.iter().sum();
+    for (w, b) in report.bytes.iter().enumerate() {
+        println!("  shard_{w}.bin  {:>8} KiB", b / 1024);
+    }
+    println!(
+        "wrote {} shard(s) + manifest.json to {:?}: {} KiB total \
+         (full model {} KiB; dense embed/norms stay coordinator-side)",
+        report.shards, dir, total / 1024,
+        model.weight_bytes() / 1024);
+    Ok(())
+}
+
+/// `osp worker`: serve one row/col shard of the trunk over HTTP for a
+/// sharded `osp serve` coordinator. The artifact comes from a local
+/// file (`--artifact`) or a checksummed resumable fetch against the
+/// coordinator's `/shards` endpoints (`--coordinator`). Blocks until
+/// drained (`POST /admin/drain`); a failed shard load exits nonzero.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let shard = args.usize_or("shard", 0);
+    let source = if let Some(file) = args.get("artifact") {
+        ShardSource::File(PathBuf::from(file))
+    } else if let Some(coord) = args.get("coordinator") {
+        ShardSource::Fetch {
+            coordinator: coord.to_string(),
+            spool: PathBuf::from(
+                args.str_or("spool", &format!("shard_{shard}.part"))),
+            byte_budget: match args.get("fetch-budget") {
+                Some(s) => Some(s.parse().map_err(|_| {
+                    anyhow!("--fetch-budget wants a byte count, got \
+                             '{s}'")
+                })?),
+                None => None,
+            },
+        }
+    } else {
+        bail!("worker needs --artifact FILE or --coordinator HOST:PORT")
+    };
+    let opts = WorkerOpts {
+        addr: args.str_or("addr", "127.0.0.1:0"),
+        n_shards: args.usize_or("n-shards", 0),
+        int_mode: int_mode_arg(args)?,
+        ..WorkerOpts::new("", shard, source)
+    };
+    let server = WorkerServer::spawn(opts)?;
+    println!(
+        "osp worker (shard {shard}) listening on {} (POST /matmul, \
+         GET /metrics, GET /healthz, POST /admin/drain to stop)",
+        server.addr());
+    // Block until drained. `is_done` flips on POST /admin/drain or on
+    // a failed shard load; read the failure before join() consumes the
+    // handle so a bad artifact exits 1, not "drained" + 0.
+    while !server.is_done() {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    let load_err = server.load_error();
+    server.join();
+    if let Some(e) = load_err {
+        bail!("shard load failed: {e}");
+    }
     Ok(())
 }
 
@@ -963,6 +1074,8 @@ fn main() {
         Some("eval") => cmd_eval(&args),
         Some("generate") => cmd_generate(&args),
         Some("serve") => cmd_serve(&args),
+        Some("shard") => cmd_shard(&args),
+        Some("worker") => cmd_worker(&args),
         Some("serve-load") => cmd_serve_load(&args),
         Some("serve-bench") => cmd_serve_bench(&args),
         Some("bench-diff") => cmd_bench_diff(&args),

@@ -42,6 +42,7 @@
 
 pub mod kv;
 pub mod ops;
+pub mod remote;
 pub mod sample;
 pub mod scratch;
 
@@ -112,11 +113,14 @@ impl InferConfig {
 }
 
 /// One weight matrix of the host model: packed codes (the deployment
-/// path) or a dense f32 fallback. All kernels are bit-identical across
-/// the two representations of the same dequantized values.
+/// path), a dense f32 fallback, or a remote handle whose codes live on
+/// sharded workers (DESIGN.md §14). All kernels are bit-identical
+/// across representations of the same dequantized values; the remote
+/// arm only supports the integer-tap path (validated at serve spawn).
 pub enum Linear {
     Dense(Tensor),
     Packed(QTensor),
+    Remote(remote::RemoteLinear),
 }
 
 impl Linear {
@@ -124,6 +128,7 @@ impl Linear {
         match self {
             Linear::Dense(t) => t.shape(),
             Linear::Packed(q) => q.shape(),
+            Linear::Remote(r) => r.shape(),
         }
     }
 
@@ -132,6 +137,10 @@ impl Linear {
         match self {
             Linear::Dense(t) => par::matmul_with(pool, a, t),
             Linear::Packed(q) => q.qmatmul_rhs_with(pool, a),
+            Linear::Remote(r) => panic!(
+                "remote linear '{}' has no f32 path — sharded serving \
+                 requires the integer tap (a_bits <= 8, int mode on)",
+                r.op()),
         }
     }
 
@@ -141,12 +150,21 @@ impl Linear {
     /// ([`QTensor::qmatmul_rhs_int_with`]); every other combination
     /// falls back to the f32 path on the *same* `a` (the tap's
     /// write-back), so routing never changes which values are consumed.
+    /// Remote leaves accept only the tap path — their codes live on
+    /// workers that speak i8, and the spawn-time validation guarantees
+    /// every trunk tap is live before a remote model serves.
     fn matmul_tap(&self, pool: Option<&ThreadPool>, a: &Tensor,
                   tap: Option<&(QuantActs, Backend)>) -> Tensor {
-        if let (Linear::Packed(q), Some((acts, be))) = (self, tap) {
-            if q.is_packed() {
-                return q.qmatmul_rhs_int_with(pool, acts, *be);
+        match (self, tap) {
+            (Linear::Remote(r), Some((acts, _be))) => {
+                return r.matmul_int(acts);
             }
+            (Linear::Packed(q), Some((acts, be))) => {
+                if q.is_packed() {
+                    return q.qmatmul_rhs_int_with(pool, acts, *be);
+                }
+            }
+            _ => {}
         }
         self.matmul(pool, a)
     }
@@ -156,14 +174,20 @@ impl Linear {
         match self {
             Linear::Dense(t) => out.copy_from_slice(t.row(i)),
             Linear::Packed(q) => q.dequant_row_into(i, out),
+            Linear::Remote(r) => panic!(
+                "row_into on remote linear '{}' (embedding leaves stay \
+                 on the coordinator)", r.op()),
         }
     }
 
-    /// Serialized weight bytes in this representation.
+    /// Serialized weight bytes this process holds in the current
+    /// representation (a remote leaf keeps only its rescale vector —
+    /// the codes are worker-side).
     pub fn packed_bytes(&self) -> usize {
         match self {
             Linear::Dense(t) => 4 * t.len(),
             Linear::Packed(q) => q.packed_bytes(),
+            Linear::Remote(r) => r.local_bytes(),
         }
     }
 
@@ -171,6 +195,8 @@ impl Linear {
         match self {
             Linear::Dense(t) => Linear::Dense(t.clone()),
             Linear::Packed(q) => Linear::Dense(q.dequantize()),
+            Linear::Remote(r) => panic!(
+                "cannot dequantize remote linear '{}'", r.op()),
         }
     }
 
@@ -182,6 +208,8 @@ impl Linear {
             }
             Linear::Dense(t) => Linear::Dense(t.clone()),
             Linear::Packed(q) => Linear::Packed(q.clone()),
+            Linear::Remote(r) => panic!(
+                "cannot requantize remote linear '{}'", r.op()),
         }
     }
 }
@@ -277,6 +305,24 @@ fn rope_inv_freq(cfg: &InferConfig) -> Vec<f32> {
     (0..half)
         .map(|j| cfg.rope_theta.powf(-(j as f32) / half as f32))
         .collect()
+}
+
+/// Replace one validated packed trunk leaf with its remote handle
+/// (helper of [`InferModel::shard_remote`]).
+fn swap_remote(name: String, l: &mut Linear, kind: remote::ShardKind,
+               pool: &Arc<dyn remote::ShardCompute>) {
+    let Linear::Packed(q) = &*l else {
+        unreachable!("shard_remote validated '{name}' as packed");
+    };
+    let shape = [q.rows(), q.cols()];
+    let bits = q.bits();
+    let scales = if kind == remote::ShardKind::Row {
+        q.scales().to_vec()
+    } else {
+        Vec::new()
+    };
+    *l = Linear::Remote(remote::RemoteLinear::new(
+        name, shape, bits, kind, scales, Arc::clone(pool)));
 }
 
 fn norm_leaf(p: &QParam) -> Tensor {
@@ -549,6 +595,7 @@ impl InferModel {
     pub fn weight_bits(&self) -> u32 {
         let leaf = |l: &Linear| match l {
             Linear::Packed(q) if q.is_packed() => q.bits(),
+            Linear::Remote(r) => r.bits(),
             _ => 16,
         };
         let mut bits = 0u32;
@@ -559,6 +606,129 @@ impl InferModel {
             }
         }
         if bits == 0 { 16 } else { bits }
+    }
+
+    /// `(name, leaf, split kind)` for every shardable trunk linear, in
+    /// one fixed order (DESIGN.md §14): QKV and the FFN expansions
+    /// split by output column (their per-channel scales travel with
+    /// the columns), the reduction weights (wo/w_down) by contraction
+    /// row (exact i32 partials), and the unembed — the widest matmul —
+    /// by column like the projections. The names are the routing keys
+    /// workers look shards up by.
+    fn trunk_linears(&self) -> Vec<(String, &Linear, remote::ShardKind)> {
+        use remote::ShardKind::{Col, Row};
+        let mut v = Vec::with_capacity(7 * self.layers.len() + 1);
+        for (li, lw) in self.layers.iter().enumerate() {
+            v.push((format!("L{li}.wq"), &lw.wq, Col));
+            v.push((format!("L{li}.wk"), &lw.wk, Col));
+            v.push((format!("L{li}.wv"), &lw.wv, Col));
+            v.push((format!("L{li}.wo"), &lw.wo, Row));
+            v.push((format!("L{li}.w_gate"), &lw.w_gate, Col));
+            v.push((format!("L{li}.w_up"), &lw.w_up, Col));
+            v.push((format!("L{li}.w_down"), &lw.w_down, Row));
+        }
+        v.push(("unembed".to_string(), &self.unembed, Col));
+        v
+    }
+
+    /// Slice every trunk linear into `shards` self-contained worker
+    /// sets (DESIGN.md §14). Embedding, norm, and EmbProj leaves stay
+    /// with the coordinator — they are small and row-local. Requires
+    /// every trunk leaf packed (shard a quantized model) and every
+    /// split dimension >= `shards`.
+    pub fn extract_shard_sets(&self, shards: usize)
+                              -> Result<Vec<remote::ShardSet>> {
+        if shards == 0 {
+            bail!("extract_shard_sets: need at least one shard");
+        }
+        let mut sets: Vec<remote::ShardSet> =
+            (0..shards).map(|_| Vec::new()).collect();
+        for (name, l, kind) in self.trunk_linears() {
+            let q = match l {
+                Linear::Packed(q) if q.is_packed() => q,
+                Linear::Remote(_) => bail!("'{name}' is already remote"),
+                _ => bail!("'{name}' is not packed — shard a quantized \
+                            model (w_bits <= 8)"),
+            };
+            let (k, n) = (q.rows(), q.cols());
+            let dim = match kind {
+                remote::ShardKind::Col => n,
+                remote::ShardKind::Row => k,
+            };
+            if dim < shards {
+                bail!("'{name}' {} dimension {dim} < {shards} shards",
+                      kind.label());
+            }
+            for (w, set) in sets.iter_mut().enumerate() {
+                let (a, b) = remote::shard_range(dim, shards, w);
+                let piece = match kind {
+                    remote::ShardKind::Col => q.shard_cols(a, b),
+                    remote::ShardKind::Row => q.shard_rows(a, b),
+                };
+                set.push(remote::ShardEntry {
+                    name: name.clone(), kind, full_k: k, full_n: n,
+                    off: a, q: piece,
+                });
+            }
+        }
+        Ok(sets)
+    }
+
+    /// Swap every shardable trunk linear for a remote handle driving
+    /// `pool` (the coordinator side of sharded serving). Validates the
+    /// whole trunk before mutating anything, so a failed call leaves
+    /// the model untouched. After the swap, only the integer-tap
+    /// forward works (the serve layer enforces `a_bits <= 8` + int
+    /// mode at spawn), and [`Self::weight_bytes`] reports just the
+    /// coordinator-resident bytes — the sharded codes are accounted by
+    /// the workers holding them.
+    pub fn shard_remote(&mut self, pool: Arc<dyn remote::ShardCompute>)
+                        -> Result<()> {
+        let shards = pool.n_workers();
+        if shards == 0 {
+            bail!("shard_remote: pool has no workers");
+        }
+        for (name, l, kind) in self.trunk_linears() {
+            let q = match l {
+                Linear::Packed(q) if q.is_packed() => q,
+                Linear::Remote(_) => bail!("'{name}' is already remote"),
+                _ => bail!("'{name}' is not packed — shard a quantized \
+                            model (w_bits <= 8)"),
+            };
+            let dim = match kind {
+                remote::ShardKind::Col => q.cols(),
+                remote::ShardKind::Row => q.rows(),
+            };
+            if dim < shards {
+                bail!("'{name}' {} dimension {dim} < {shards} workers",
+                      kind.label());
+            }
+        }
+        for li in 0..self.layers.len() {
+            use remote::ShardKind::{Col, Row};
+            let lw = &mut self.layers[li];
+            swap_remote(format!("L{li}.wq"), &mut lw.wq, Col, &pool);
+            swap_remote(format!("L{li}.wk"), &mut lw.wk, Col, &pool);
+            swap_remote(format!("L{li}.wv"), &mut lw.wv, Col, &pool);
+            swap_remote(format!("L{li}.wo"), &mut lw.wo, Row, &pool);
+            swap_remote(format!("L{li}.w_gate"), &mut lw.w_gate, Col,
+                        &pool);
+            swap_remote(format!("L{li}.w_up"), &mut lw.w_up, Col, &pool);
+            swap_remote(format!("L{li}.w_down"), &mut lw.w_down, Row,
+                        &pool);
+        }
+        swap_remote("unembed".to_string(), &mut self.unembed,
+                    remote::ShardKind::Col, &pool);
+        Ok(())
+    }
+
+    /// Worker count behind the trunk after [`Self::shard_remote`];
+    /// 0 for a fully local model.
+    pub fn remote_workers(&self) -> usize {
+        match self.layers.first().map(|l| &l.wq) {
+            Some(Linear::Remote(r)) => r.workers(),
+            _ => 0,
+        }
     }
 
     /// Fresh per-sequence KV cache for this model (private page pool
@@ -1037,6 +1207,67 @@ mod tests {
         let kurt = probe.kurt();
         assert_eq!(kurt.len(), 2 * m.cfg.n_layers);
         assert!(kurt.iter().all(|v| v.is_finite()), "{kurt:?}");
+    }
+
+    /// The §14 model-layer invariant: swapping the trunk for remote
+    /// handles over an in-process shard pool changes no logits bit,
+    /// for any worker count.
+    #[test]
+    fn sharded_trunk_matches_local_forward_bitwise() {
+        for shards in [1usize, 2, 4] {
+            let mut m = InferModel::synthetic(&tiny_cfg(), 9)
+                .quantized(4)
+                .with_int_mode(IntMode::Scalar);
+            let run = |m: &InferModel| -> Vec<f32> {
+                let mut c = m.new_cache(4);
+                let mut out = Vec::new();
+                for t in [1i32, 5, 9, 2] {
+                    let mut refs = vec![&mut c];
+                    let logits = m
+                        .forward_step_refs(None, &[t], &mut refs, 4)
+                        .unwrap();
+                    out.extend_from_slice(logits.data());
+                }
+                out
+            };
+            let want = run(&m);
+            let sets = m.extract_shard_sets(shards).unwrap();
+            assert_eq!(sets.len(), shards);
+            assert_eq!(sets[0].len(), 7 * m.cfg.n_layers + 1);
+            let pool = Arc::new(remote::LocalShards::new(
+                sets, Backend::Scalar));
+            m.shard_remote(pool).unwrap();
+            assert_eq!(m.remote_workers(), shards);
+            assert_eq!(want, run(&m), "x{shards} shards");
+        }
+    }
+
+    #[test]
+    fn shard_extraction_rejects_dense_and_oversplit() {
+        let dense = InferModel::synthetic(&tiny_cfg(), 9);
+        assert!(dense.extract_shard_sets(2).is_err());
+        let q = InferModel::synthetic(&tiny_cfg(), 9).quantized(4);
+        assert!(q.extract_shard_sets(0).is_err());
+        // d_model is 32: 64 shards cannot split the wo contraction.
+        assert!(q.extract_shard_sets(64).is_err());
+        assert!(q.extract_shard_sets(2).is_ok());
+    }
+
+    #[test]
+    fn sharded_weight_bytes_shrink_on_the_coordinator() {
+        let mut m = InferModel::synthetic(&tiny_cfg(), 9).quantized(4);
+        let full = m.weight_bytes();
+        let bits = m.weight_bits();
+        let sets = m.extract_shard_sets(2).unwrap();
+        let pool = Arc::new(remote::LocalShards::new(
+            sets, Backend::Scalar));
+        m.shard_remote(pool).unwrap();
+        // Trunk codes moved to the workers; the coordinator keeps the
+        // embed/norm leaves and the Row-op rescale vectors.
+        assert!(m.weight_bytes() < full, "{} !< {full}",
+                m.weight_bytes());
+        // The W label survives the swap (stats plumbing).
+        assert_eq!(m.weight_bits(), bits);
     }
 
     #[test]

@@ -1,0 +1,435 @@
+//! Row-parallel remote linears (DESIGN.md §14): the model-side half of
+//! multi-process sharded serving.
+//!
+//! A sharded deployment splits every *trunk* linear of an
+//! [`super::InferModel`] across N workers along the dimension that
+//! keeps the integer kernels exact:
+//!
+//! * **Column shards** ([`ShardKind::Col`]) — wq/wk/wv/w_gate/w_up and
+//!   the unembed split along *output* channels. Every worker sees the
+//!   full activation row, runs the same ascending-k i8×i8→i32 dot
+//!   products as the unsharded kernel, and rescales its own columns
+//!   with the per-channel scales that traveled with them. The
+//!   coordinator just concatenates the f32 stripes — bit-identical
+//!   because each output element is computed by exactly one worker,
+//!   with the unsharded arithmetic.
+//! * **Row shards** ([`ShardKind::Row`]) — the reduction weights
+//!   (wo/w_down) split along the *contraction* dimension. Here an
+//!   output element needs contributions from every worker, and f32
+//!   partial sums would not be associative. So workers return their
+//!   *exact i32* partials (no scales applied), the coordinator sums
+//!   them in i32 — integer addition is exactly associative — and then
+//!   applies the single `act_scale * weight_scale` rescale of
+//!   [`crate::tensor::qtensor::QTensor::qmatmul_rhs_int_with`]. One
+//!   float rounding happens per element, same as single-process.
+//!
+//! This is why sharded serving *requires* the §11 integer path
+//! (`a_bits <= 8`, int mode on): the f32 kernels have no exact
+//! cross-process partial. The serve layer validates that at spawn.
+//!
+//! Transport stays out of this module: [`ShardCompute`] is the small
+//! sync interface the coordinator drives, [`LocalShards`] is the
+//! in-process implementation the property tests pin recombination
+//! with, and `serve::worker::HttpShardPool` implements the same trait
+//! over the std-only HTTP layer.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::tensor::intkern::{Backend, QuantActs};
+use crate::tensor::qtensor::QTensor;
+use crate::tensor::Tensor;
+
+/// Which dimension of a `[in, out]` weight a shard slices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardKind {
+    /// Output-column slice: self-contained (scales travel along),
+    /// recombined by stripe concatenation.
+    Col,
+    /// Contraction-row slice: recombined by exact i32 partial-sum
+    /// reduction, rescaled once by the coordinator.
+    Row,
+}
+
+impl ShardKind {
+    /// Stable wire/disk tag (shard artifacts, worker protocol).
+    pub fn tag(self) -> u8 {
+        match self {
+            ShardKind::Col => 0,
+            ShardKind::Row => 1,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Result<ShardKind, String> {
+        match tag {
+            0 => Ok(ShardKind::Col),
+            1 => Ok(ShardKind::Row),
+            other => Err(format!("unknown shard kind tag {other}")),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ShardKind::Col => "col",
+            ShardKind::Row => "row",
+        }
+    }
+}
+
+/// One sharded weight as a worker holds it: the op name the
+/// coordinator routes by, the slice geometry, and the packed piece.
+pub struct ShardEntry {
+    /// Routing key, e.g. `"L0.wq"` / `"L3.w_down"` / `"unembed"` —
+    /// identical in `InferModel::extract_shard_sets` and the worker's
+    /// lookup, so there is no separate schema to keep in sync.
+    pub name: String,
+    pub kind: ShardKind,
+    /// Contraction depth of the *full* weight (shape\[0\]).
+    pub full_k: usize,
+    /// Output width of the full weight (shape\[1\]).
+    pub full_n: usize,
+    /// This shard's offset along the split dimension (`j0` for Col,
+    /// `k0` for Row).
+    pub off: usize,
+    pub q: QTensor,
+}
+
+/// Everything one worker serves: its slice of every trunk linear.
+pub type ShardSet = Vec<ShardEntry>;
+
+/// Balanced split `[start, end)` of dimension `n` for worker `w` of
+/// `shards`: the one partition function shared by shard extraction,
+/// the coordinator's stripe/slice routing, and the workers — all
+/// three must agree or recombination scrambles.
+pub fn shard_range(n: usize, shards: usize, w: usize) -> (usize, usize) {
+    ((n * w) / shards, (n * (w + 1)) / shards)
+}
+
+/// The k-window `[k0, k1)` of every activation row: row-parallel ops
+/// feed each worker only the contraction slice its shard covers, so
+/// the wire carries `m * (k1 - k0)` codes instead of `m * k`.
+pub fn slice_acts(acts: &QuantActs, k0: usize, k1: usize) -> QuantActs {
+    let (m, kw) = (acts.m(), k1 - k0);
+    let mut codes = Vec::with_capacity(m * kw);
+    for r in 0..m {
+        codes.extend_from_slice(&acts.row_codes(r)[k0..k1]);
+    }
+    let scales: Vec<f32> = (0..m).map(|r| acts.scale(r)).collect();
+    QuantActs::from_parts(codes, scales, m, kw)
+}
+
+/// What the coordinator needs from a worker fleet. Implementations
+/// own fan-out, transport, and retries; the contract is only that the
+/// returned numbers are the exact int-kernel results (any backend —
+/// Scalar/AVX2/NEON are pinned bit-identical, so a heterogeneous
+/// fleet is fine).
+pub trait ShardCompute: Send + Sync {
+    fn n_workers(&self) -> usize;
+
+    /// Column-parallel `op`: worker `w` runs the full-width `acts`
+    /// against its column slice and returns its `[m, jw(w)]` row-major
+    /// f32 stripe (already rescaled). Stripes ascend by worker index.
+    fn col_stripes(&self, op: &str, acts: &QuantActs)
+                   -> Result<Vec<Vec<f32>>>;
+
+    /// Row-parallel `op`: worker `w` consumes `slices[w]` (its
+    /// k-window of the activations) and returns its exact `[m, n]` i32
+    /// partial accumulator — no scales applied. Partials ascend by
+    /// worker index.
+    fn row_partials(&self, op: &str, slices: &[QuantActs])
+                    -> Result<Vec<Vec<i32>>>;
+}
+
+/// A trunk linear whose weights live on remote workers. Holds only
+/// what the coordinator-side recombination needs: the full logical
+/// shape, the split kind, and (for Row ops) the full per-output-column
+/// scale vector for the post-sum rescale.
+pub struct RemoteLinear {
+    op: String,
+    shape: [usize; 2],
+    bits: u32,
+    kind: ShardKind,
+    /// Full `[n]` scales for Row ops (the single rescale after the i32
+    /// reduction); empty for Col ops, whose scales live on the workers.
+    scales: Vec<f32>,
+    pool: Arc<dyn ShardCompute>,
+}
+
+impl RemoteLinear {
+    pub fn new(op: String, shape: [usize; 2], bits: u32, kind: ShardKind,
+               scales: Vec<f32>, pool: Arc<dyn ShardCompute>)
+               -> RemoteLinear {
+        if kind == ShardKind::Row {
+            assert_eq!(scales.len(), shape[1],
+                       "row-parallel '{op}' needs one scale per output \
+                        column for the post-sum rescale");
+        }
+        RemoteLinear { op, shape, bits, kind, scales, pool }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn op(&self) -> &str {
+        &self.op
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pool.n_workers()
+    }
+
+    /// Coordinator-side bytes this leaf still holds (the Row-op scale
+    /// vector); the codes live on the workers.
+    pub fn local_bytes(&self) -> usize {
+        4 * self.scales.len()
+    }
+
+    /// C = A @ deq(W) across the worker fleet, bit-identical to
+    /// [`QTensor::qmatmul_rhs_int_with`] on the unsharded weight (see
+    /// module docs for why). Panics on transport failure or a
+    /// mis-sized worker reply — by the time we are mid-decode there is
+    /// no per-request recovery that preserves stream parity, and the
+    /// serve loop's step-error handling turns the panic boundary into
+    /// failed requests rather than wrong tokens.
+    pub fn matmul_int(&self, acts: &QuantActs) -> Tensor {
+        let (m, k) = (acts.m(), acts.k());
+        let [kk, n] = self.shape;
+        assert_eq!(k, kk, "remote {} [{m}, {k}] @ {:?}", self.op,
+                   self.shape);
+        let nw = self.pool.n_workers();
+        let mut c = Tensor::zeros(&[m, n]);
+        match self.kind {
+            ShardKind::Col => {
+                let stripes = self.pool.col_stripes(&self.op, acts)
+                    .unwrap_or_else(|e| panic!(
+                        "remote {} col stripes: {e}", self.op));
+                assert_eq!(stripes.len(), nw, "remote {} stripe count",
+                           self.op);
+                let cd = c.data_mut();
+                for (w, stripe) in stripes.iter().enumerate() {
+                    let (j0, j1) = shard_range(n, nw, w);
+                    let jw = j1 - j0;
+                    assert_eq!(stripe.len(), m * jw,
+                               "remote {} worker {w} stripe size",
+                               self.op);
+                    for r in 0..m {
+                        cd[r * n + j0..r * n + j1].copy_from_slice(
+                            &stripe[r * jw..(r + 1) * jw]);
+                    }
+                }
+            }
+            ShardKind::Row => {
+                let slices: Vec<QuantActs> = (0..nw)
+                    .map(|w| {
+                        let (k0, k1) = shard_range(k, nw, w);
+                        slice_acts(acts, k0, k1)
+                    })
+                    .collect();
+                let partials = self.pool.row_partials(&self.op, &slices)
+                    .unwrap_or_else(|e| panic!(
+                        "remote {} row partials: {e}", self.op));
+                assert_eq!(partials.len(), nw, "remote {} partial count",
+                           self.op);
+                // Exact integer reduction (ascending worker index for
+                // definiteness, though i32 sums are order-free), then
+                // the one rescale the unsharded kernel applies.
+                let mut acc = vec![0i32; m * n];
+                for (w, part) in partials.iter().enumerate() {
+                    assert_eq!(part.len(), m * n,
+                               "remote {} worker {w} partial size",
+                               self.op);
+                    for (a, p) in acc.iter_mut().zip(part) {
+                        *a += p;
+                    }
+                }
+                let cd = c.data_mut();
+                for r in 0..m {
+                    let sa = acts.scale(r);
+                    let arow = &acc[r * n..(r + 1) * n];
+                    let crow = &mut cd[r * n..(r + 1) * n];
+                    for ((cv, &av), &sw) in
+                        crow.iter_mut().zip(arow).zip(&self.scales)
+                    {
+                        *cv = av as f32 * (sa * sw);
+                    }
+                }
+            }
+        }
+        c
+    }
+}
+
+/// In-process [`ShardCompute`] over extracted shard sets: the pure
+/// recombination path — no HTTP, no storage — that the property tests
+/// pin sharded-vs-single-process bit-parity with, and a useful
+/// harness for anything that wants "sharded math, one process".
+pub struct LocalShards {
+    sets: Vec<ShardSet>,
+    backend: Backend,
+}
+
+impl LocalShards {
+    pub fn new(sets: Vec<ShardSet>, backend: Backend) -> LocalShards {
+        LocalShards { sets, backend }
+    }
+
+    fn entry(&self, w: usize, op: &str) -> &ShardEntry {
+        self.sets[w]
+            .iter()
+            .find(|e| e.name == op)
+            .unwrap_or_else(|| panic!("worker {w} has no shard for '{op}'"))
+    }
+}
+
+impl ShardCompute for LocalShards {
+    fn n_workers(&self) -> usize {
+        self.sets.len()
+    }
+
+    fn col_stripes(&self, op: &str, acts: &QuantActs)
+                   -> Result<Vec<Vec<f32>>> {
+        Ok((0..self.sets.len())
+            .map(|w| {
+                let e = self.entry(w, op);
+                e.q.qmatmul_rhs_int_with(None, acts, self.backend)
+                    .data()
+                    .to_vec()
+            })
+            .collect())
+    }
+
+    fn row_partials(&self, op: &str, slices: &[QuantActs])
+                    -> Result<Vec<Vec<i32>>> {
+        Ok(slices
+            .iter()
+            .enumerate()
+            .map(|(w, sacts)| {
+                let e = self.entry(w, op);
+                let mut acc = vec![0i32; sacts.m() * e.q.cols()];
+                e.q.accumulate_int(sacts, self.backend, &mut acc);
+                acc
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn::quantize_per_channel_q;
+    use crate::util::rng::Pcg;
+
+    fn random_acts(rng: &mut Pcg, m: usize, k: usize) -> QuantActs {
+        let codes: Vec<i8> = (0..m * k)
+            .map(|_| (rng.below(16) as i64 - 8) as i8)
+            .collect();
+        let scales: Vec<f32> =
+            (0..m).map(|r| 0.05 + 0.01 * r as f32).collect();
+        QuantActs::from_parts(codes, scales, m, k)
+    }
+
+    fn random_q(rng: &mut Pcg, k: usize, n: usize) -> QTensor {
+        let mut t = Tensor::zeros(&[k, n]);
+        rng.fill_normal(t.data_mut(), 0.1);
+        quantize_per_channel_q(&t, 4)
+    }
+
+    fn shard_q(q: &QTensor, name: &str, kind: ShardKind, shards: usize)
+               -> Vec<ShardSet> {
+        let (k, n) = (q.rows(), q.cols());
+        let dim = match kind {
+            ShardKind::Col => n,
+            ShardKind::Row => k,
+        };
+        (0..shards)
+            .map(|w| {
+                let (a, b) = shard_range(dim, shards, w);
+                let piece = match kind {
+                    ShardKind::Col => q.shard_cols(a, b),
+                    ShardKind::Row => q.shard_rows(a, b),
+                };
+                vec![ShardEntry { name: name.into(), kind, full_k: k,
+                                  full_n: n, off: a, q: piece }]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn shard_range_is_a_partition() {
+        for n in [1usize, 7, 64, 353] {
+            for shards in [1usize, 2, 3, 4, 7] {
+                let mut covered = 0usize;
+                for w in 0..shards {
+                    let (a, b) = shard_range(n, shards, w);
+                    assert_eq!(a, covered, "gap at worker {w}");
+                    assert!(b >= a);
+                    covered = b;
+                }
+                assert_eq!(covered, n, "{n} over {shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn remote_col_linear_matches_unsharded_kernel_bitwise() {
+        let mut rng = Pcg::new(31, 0);
+        let (m, k, n) = (3, 20, 17);
+        let q = random_q(&mut rng, k, n);
+        let acts = random_acts(&mut rng, m, k);
+        let be = Backend::Scalar;
+        let want = q.qmatmul_rhs_int_with(None, &acts, be);
+        for shards in [1usize, 2, 4] {
+            let pool: Arc<dyn ShardCompute> = Arc::new(LocalShards::new(
+                shard_q(&q, "op", ShardKind::Col, shards), be));
+            let r = RemoteLinear::new("op".into(), [k, n], 4,
+                                      ShardKind::Col, Vec::new(), pool);
+            assert_eq!(want.data(), r.matmul_int(&acts).data(),
+                       "x{shards}");
+        }
+    }
+
+    #[test]
+    fn remote_row_linear_matches_unsharded_kernel_bitwise() {
+        let mut rng = Pcg::new(32, 0);
+        let (m, k, n) = (2, 21, 10);
+        let q = random_q(&mut rng, k, n);
+        let acts = random_acts(&mut rng, m, k);
+        let be = Backend::Scalar;
+        let want = q.qmatmul_rhs_int_with(None, &acts, be);
+        for shards in [1usize, 2, 3] {
+            let pool: Arc<dyn ShardCompute> = Arc::new(LocalShards::new(
+                shard_q(&q, "op", ShardKind::Row, shards), be));
+            let r = RemoteLinear::new("op".into(), [k, n], 4,
+                                      ShardKind::Row,
+                                      q.scales().to_vec(), pool);
+            assert_eq!(want.data(), r.matmul_int(&acts).data(),
+                       "x{shards}");
+        }
+    }
+
+    #[test]
+    fn slice_acts_windows_codes_and_keeps_scales() {
+        let mut rng = Pcg::new(33, 0);
+        let acts = random_acts(&mut rng, 3, 12);
+        let s = slice_acts(&acts, 4, 9);
+        assert_eq!((s.m(), s.k()), (3, 5));
+        for r in 0..3 {
+            assert_eq!(s.row_codes(r), &acts.row_codes(r)[4..9]);
+            assert_eq!(s.scale(r), acts.scale(r));
+        }
+    }
+
+    #[test]
+    fn shard_kind_tags_roundtrip() {
+        for kind in [ShardKind::Col, ShardKind::Row] {
+            assert_eq!(ShardKind::from_tag(kind.tag()).unwrap(), kind);
+        }
+        assert!(ShardKind::from_tag(7).is_err());
+    }
+}

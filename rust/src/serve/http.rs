@@ -212,6 +212,26 @@ pub fn write_response(w: &mut impl Write, status: u16,
     w.flush()
 }
 
+/// Write a complete response with an arbitrary content type and a raw
+/// byte body — the shard-fetch data path (DESIGN.md §14) ships OSPS
+/// artifact ranges as `application/octet-stream`, which must never
+/// pass through a UTF-8 conversion.
+pub fn write_response_bytes(w: &mut impl Write, status: u16,
+                            extra: &[(&str, &str)], content_type: &str,
+                            body: &[u8]) -> io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n",
+        reason(status), body.len());
+    for (k, v) in extra {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
 /// Start a chunked (streaming) response; each subsequent
 /// [`write_chunk`] delivers one newline-terminated JSON event.
 pub fn start_chunked(w: &mut impl Write, status: u16) -> io::Result<()> {
@@ -351,6 +371,13 @@ impl<S: Read + Write> ClientConn<S> {
     pub fn read_body(&mut self, n: usize) -> io::Result<String> {
         Ok(String::from_utf8_lossy(&self.take_exact(n)?).into_owned())
     }
+
+    /// Byte-exact body read for binary payloads (shard artifacts).
+    /// [`ClientConn::read_body`] is UTF-8-lossy and would corrupt
+    /// packed code bytes; fetches must come through here.
+    pub fn read_body_bytes(&mut self, n: usize) -> io::Result<Vec<u8>> {
+        self.take_exact(n)
+    }
 }
 
 /// Header lookup on a client-side header list.
@@ -442,6 +469,30 @@ mod tests {
         assert_eq!(client.next_chunk().unwrap().as_deref(),
                    Some("{\"done\":true}\n"));
         assert_eq!(client.next_chunk().unwrap(), None);
+    }
+
+    /// Binary bodies survive the wire bit-for-bit — including byte
+    /// sequences that are invalid UTF-8, which the lossy string path
+    /// would silently replace.
+    #[test]
+    fn byte_response_round_trip_is_exact() {
+        let payload: Vec<u8> = (0..=255u8).cycle().take(700).collect();
+        assert!(String::from_utf8(payload.clone()).is_err());
+        let mut wire = Vec::new();
+        write_response_bytes(&mut wire, 200, &[("X-Shard", "1")],
+                             "application/octet-stream", &payload)
+            .unwrap();
+        let mut client = ClientConn::new(Cursor::new(wire));
+        let (status, headers) = client.read_head().unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(header(&headers, "content-type"),
+                   Some("application/octet-stream"));
+        assert_eq!(header(&headers, "x-shard"), Some("1"));
+        let n: usize = header(&headers, "content-length")
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert_eq!(client.read_body_bytes(n).unwrap(), payload);
     }
 
     #[test]

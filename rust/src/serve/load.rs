@@ -380,6 +380,25 @@ pub fn run_load(opts: &LoadOpts) -> Result<Json> {
             .and_then(|v| v.as_f64())
             .unwrap_or(0.0)
     };
+    // Sharded-mode extras off `/status` (live per-worker scrape). On a
+    // single-process server `worker_status` is empty and these fold to
+    // zero, keeping the row schema stable across modes.
+    let status_doc = http_get(&opts.addr, "/status")
+        .map(|(_, d)| d)
+        .unwrap_or(Json::Null);
+    let worker_stat = |key: &str, fold: fn(f64, f64) -> f64| {
+        status_doc
+            .get("worker_status")
+            .and_then(|w| w.as_arr())
+            .map(|ws| {
+                ws.iter()
+                    .filter_map(|w| {
+                        w.get(key).and_then(|v| v.as_f64())
+                    })
+                    .fold(0.0, fold)
+            })
+            .unwrap_or(0.0)
+    };
     let mut gaps = total.token_gaps_us.clone();
     let mut firsts = total.first_token_us.clone();
     let row = Json::obj(vec![
@@ -401,6 +420,8 @@ pub fn run_load(opts: &LoadOpts) -> Result<Json> {
          info.get("kv_page_rows").cloned().unwrap_or(Json::Null)),
         ("share_prefix",
          info.get("share_prefix").cloned().unwrap_or(Json::Null)),
+        ("workers", info.get("workers").cloned().unwrap_or(Json::Null)),
+        ("shards", info.get("shards").cloned().unwrap_or(Json::Null)),
         ("requests", Json::num(total.requests as f64)),
         ("completed", Json::num(total.completed as f64)),
         ("rejected", Json::num(total.rejected as f64)),
@@ -428,6 +449,20 @@ pub fn run_load(opts: &LoadOpts) -> Result<Json> {
         ("kv_pages_peak", Json::num(server("kv_pages_peak"))),
         ("kv_pages_shared", Json::num(server("kv_pages_shared"))),
         ("kv_pages_live", Json::num(server("kv_pages_live"))),
+        // Shard-distribution metrics (DESIGN.md §14): slowest worker
+        // fetch, total artifact bytes over the wire, and the per-worker
+        // vs full-model weight footprint the memory win is judged on.
+        ("fetch_ms", Json::num(worker_stat("fetch_ms", f64::max))),
+        ("bytes_streamed",
+         Json::num(worker_stat("bytes_fetched", |a, b| a + b))),
+        ("worker_weight_bytes_max",
+         Json::num(worker_stat("weight_bytes", f64::max))),
+        ("weight_bytes_full",
+         info.get("weight_bytes_full").cloned()
+             .unwrap_or(Json::Null)),
+        ("weight_bytes_coord",
+         info.get("weight_bytes_coord").cloned()
+             .unwrap_or(Json::Null)),
     ]);
     Ok(Json::obj(vec![
         ("bench", Json::str("serve")),

@@ -22,15 +22,28 @@
 //! the server down cleanly with zero occupied batch slots.
 //!
 //! Endpoints: `POST /generate` (chunked NDJSON token stream),
-//! `GET /metrics`, `GET /healthz`, `POST /admin/drain`.
+//! `GET /metrics`, `GET /healthz`, `GET /status`,
+//! `POST /admin/drain` — plus, when spawned with `--workers`, the
+//! shard-distribution surface `GET /shards/{i}/meta` and
+//! `GET /shards/{i}/data?off=N&len=N` (DESIGN.md §14).
+//!
+//! Row-parallel sharded mode: with `opts.workers` non-empty the
+//! coordinator swaps every trunk linear for a remote stub driven by a
+//! [`worker::HttpShardPool`], serves the `osp shard` artifacts to
+//! fetching workers, and gates `/generate` on fleet readiness. The
+//! sharded token stream is pinned bit-identical to the single-process
+//! one (`tests/shard_properties.rs`).
 
 pub mod chaos;
 pub mod http;
 pub mod load;
 pub mod metrics;
 mod service;
+pub mod storage;
+pub mod worker;
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
 use std::sync::atomic::Ordering::{Relaxed, SeqCst};
 use std::sync::atomic::{AtomicBool, AtomicI64, AtomicUsize};
 use std::sync::mpsc::{self, RecvTimeoutError, SyncSender,
@@ -39,7 +52,7 @@ use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::infer::DecodeParams;
 use crate::model::InferModel;
@@ -93,6 +106,13 @@ pub struct ServeOpts {
     /// default in serve: shared streams are pinned bit-identical to
     /// unshared, and repeated system prompts are the serving norm.
     pub share_prefix: bool,
+    /// Worker addresses for row-parallel sharded serving (DESIGN.md
+    /// §14); empty = classic single-process serving. Order matters:
+    /// `workers[i]` must serve shard `i`.
+    pub workers: Vec<String>,
+    /// Directory written by `osp shard` that the coordinator serves
+    /// worker fetches from. Required when `workers` is non-empty.
+    pub shard_dir: String,
 }
 
 impl Default for ServeOpts {
@@ -120,6 +140,8 @@ impl Default for ServeOpts {
             kv_page_rows: crate::model::kv::DEFAULT_PAGE_ROWS,
             kv_pool_mb: 0,
             share_prefix: true,
+            workers: Vec::new(),
+            shard_dir: String::new(),
         }
     }
 }
@@ -134,6 +156,12 @@ pub struct ServeInfo {
     pub d_model: usize,
     pub n_layers: usize,
     pub int_kernel: Option<&'static str>,
+    /// Packed weight footprint of the full (unsharded) model — the
+    /// denominator of the sharded-memory win (DESIGN.md §14).
+    pub weight_bytes_full: usize,
+    /// Weights actually resident in this process after any remote
+    /// swap (== `weight_bytes_full` when serving single-process).
+    pub weight_bytes_coord: usize,
 }
 
 impl ServeInfo {
@@ -142,6 +170,16 @@ impl ServeInfo {
     pub fn config_label(&self) -> String {
         format!("{}-{}-{}", self.w_bits, self.a_bits, self.kv_bits)
     }
+}
+
+/// Sharded-mode coordinator state: the storage backend workers fetch
+/// their artifacts from, the rpc pool the remote linears ride, and the
+/// fleet-readiness gate for `/generate`.
+pub(crate) struct ShardCtl {
+    pub store: Box<dyn storage::StorageBackend>,
+    pub pool: Arc<worker::HttpShardPool>,
+    /// Set once every worker's `/healthz` reports `ready: true`.
+    pub ready: AtomicBool,
 }
 
 /// Shared control block: handlers, the service thread, and the
@@ -153,10 +191,20 @@ pub(crate) struct Ctl {
     pub metrics: ServeMetrics,
     pub opts: ServeOpts,
     pub info: ServeInfo,
+    /// `Some` iff serving in row-parallel sharded mode.
+    pub shard: Option<ShardCtl>,
 }
 
 impl Ctl {
+    fn workers_ready(&self) -> bool {
+        match &self.shard {
+            Some(sh) => sh.ready.load(SeqCst),
+            None => true,
+        }
+    }
+
     fn status_json(&self) -> Json {
+        let n_workers = self.opts.workers.len();
         Json::obj(vec![
             ("config", Json::str(self.info.config_label())),
             ("w_bits", Json::num(self.info.w_bits as f64)),
@@ -180,8 +228,48 @@ impl Ctl {
              })),
             ("threads", Json::num(par::configured_threads() as f64)),
             ("draining", Json::Bool(self.draining.load(SeqCst))),
+            ("weight_bytes_full",
+             Json::num(self.info.weight_bytes_full as f64)),
+            ("weight_bytes_coord",
+             Json::num(self.info.weight_bytes_coord as f64)),
+            ("workers", Json::num(n_workers as f64)),
+            ("shards", Json::num(n_workers as f64)),
+            ("workers_ready", Json::Bool(self.workers_ready())),
+            ("shard_pool", match &self.shard {
+                Some(sh) => sh.pool.to_json(),
+                None => Json::Null,
+            }),
             ("metrics", self.metrics.to_json()),
         ])
+    }
+
+    /// `/status`: the `/metrics` document plus a live scrape of every
+    /// worker's own `/metrics` — per-worker liveness, fetch progress,
+    /// queue depth, and stripe latency in one place. An unreachable
+    /// worker becomes `{"error": ...}` instead of failing the scrape;
+    /// the conservation invariant (pool `rpcs_ok` ≤ Σ worker
+    /// `rpcs_served`) is checkable straight off this document.
+    fn full_status_json(&self) -> Json {
+        let mut doc = self.status_json();
+        if let Json::Obj(map) = &mut doc {
+            let scraped: Vec<Json> = match &self.shard {
+                None => Vec::new(),
+                Some(sh) => sh.pool.worker_addrs().iter()
+                    .map(|a| match load::http_get(a, "/metrics") {
+                        Ok((200, m)) => m,
+                        Ok((status, _)) => Json::obj(vec![(
+                            "error",
+                            Json::str(format!("/metrics -> {status}")),
+                        )]),
+                        Err(e) => Json::obj(vec![(
+                            "error", Json::str(format!("{e:#}")),
+                        )]),
+                    })
+                    .collect(),
+            };
+            map.insert("worker_status".into(), Json::Arr(scraped));
+        }
+        doc
     }
 }
 
@@ -197,11 +285,39 @@ impl Server {
     /// Bind `opts.addr` (port 0 picks an ephemeral port — the bound
     /// address is available via [`Server::addr`]) and start the
     /// acceptor + service threads.
-    pub fn spawn(model: InferModel, opts: ServeOpts) -> Result<Server> {
+    pub fn spawn(mut model: InferModel, opts: ServeOpts)
+                 -> Result<Server> {
         let listener = TcpListener::bind(&opts.addr)
             .with_context(|| format!("bind {}", opts.addr))?;
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
+        let weight_bytes_full = model.weight_bytes();
+        // Sharded mode: validate up front (a misconfigured fleet must
+        // fail at spawn, not mid-decode), then swap the trunk linears
+        // for remote stubs over the worker pool.
+        let shard = if opts.workers.is_empty() {
+            None
+        } else {
+            let dir = Path::new(&opts.shard_dir);
+            let store = storage::LocalDir::open(dir)
+                .context("opening --shard-dir")?;
+            if store.n_shards() != opts.workers.len() {
+                bail!("shard dir {dir:?} was cut for {} workers, \
+                       --workers lists {}", store.n_shards(),
+                      opts.workers.len());
+            }
+            if model.int_kernel(opts.a_bits).is_none() {
+                bail!("sharded serving requires the integer kernel \
+                       path: a_bits <= 8 (got {}) and int mode \
+                       scalar|auto — f32 partial sums would break \
+                       stream bit-parity (DESIGN.md §14)", opts.a_bits);
+            }
+            let pool = Arc::new(worker::HttpShardPool::new(
+                opts.workers.clone()));
+            model.shard_remote(Arc::clone(&pool))?;
+            Some(ShardCtl { store: Box::new(store), pool,
+                            ready: AtomicBool::new(false) })
+        };
         let info = ServeInfo {
             w_bits: model.weight_bits(),
             a_bits: opts.a_bits,
@@ -210,6 +326,8 @@ impl Server {
             d_model: model.cfg.d_model,
             n_layers: model.cfg.n_layers,
             int_kernel: model.int_kernel_label(opts.a_bits),
+            weight_bytes_full,
+            weight_bytes_coord: model.weight_bytes(),
         };
         let ctl = Arc::new(Ctl {
             draining: AtomicBool::new(false),
@@ -218,7 +336,35 @@ impl Server {
             metrics: ServeMetrics::default(),
             opts,
             info,
+            shard,
         });
+        if ctl.shard.is_some() {
+            // Fleet-readiness poller: flips the /generate gate once
+            // every worker reports ready (they answer /healthz while
+            // still fetching their artifact from this very server).
+            let ctl3 = Arc::clone(&ctl);
+            thread::Builder::new()
+                .name("osp-ready".into())
+                .spawn(move || {
+                    let sh = ctl3.shard.as_ref().unwrap();
+                    while !ctl3.draining.load(SeqCst)
+                        && !ctl3.service_done.load(SeqCst)
+                    {
+                        let all = sh.pool.worker_addrs().iter().all(
+                            |a| matches!(
+                                load::http_get(a, "/healthz"),
+                                Ok((200, doc))
+                                    if doc.get("ready")
+                                        .and_then(|v| v.as_bool())
+                                        == Some(true)));
+                        if all {
+                            sh.ready.store(true, SeqCst);
+                            return;
+                        }
+                        thread::sleep(Duration::from_millis(50));
+                    }
+                })?;
+        }
         let ctl2 = Arc::clone(&ctl);
         let handle = thread::Builder::new()
             .name("osp-serve".into())
@@ -315,6 +461,14 @@ fn serve_loop(model: InferModel, listener: TcpListener, ctl: &Ctl) {
             }
         }
     });
+    // Sharded mode: propagate the drain so workers print their own
+    // zero-leak line and exit (best-effort — a dead worker is already
+    // drained for our purposes).
+    if let Some(sh) = &ctl.shard {
+        for a in sh.pool.worker_addrs() {
+            let _ = load::http_post(a, "/admin/drain", "{}");
+        }
+    }
 }
 
 fn err_body(msg: &str) -> String {
@@ -358,6 +512,7 @@ fn handle_conn(mut stream: TcpStream, adm_tx: SyncSender<Admission>,
         ("GET", "/healthz") => {
             let body = Json::obj(vec![
                 ("ok", Json::Bool(true)),
+                ("ready", Json::Bool(ctl.workers_ready())),
                 ("draining",
                  Json::Bool(ctl.draining.load(SeqCst))),
             ])
@@ -367,6 +522,25 @@ fn handle_conn(mut stream: TcpStream, adm_tx: SyncSender<Admission>,
         ("GET", "/metrics") => {
             let _ = http::write_response(&mut stream, 200, &[],
                                          &ctl.status_json().dump());
+        }
+        ("GET", "/status") => {
+            let _ = http::write_response(
+                &mut stream, 200, &[], &ctl.full_status_json().dump());
+        }
+        ("GET", p) if p.starts_with("/shards/") => {
+            match &ctl.shard {
+                Some(sh) => {
+                    let (status, ct, body) =
+                        worker::shards_http_response(p, &*sh.store);
+                    let _ = http::write_response_bytes(
+                        &mut stream, status, &[], ct, &body);
+                }
+                None => {
+                    let _ = http::write_response(
+                        &mut stream, 404, &[],
+                        &err_body("not a sharded server"));
+                }
+            }
         }
         ("POST", "/admin/drain") => {
             ctl.draining.store(true, SeqCst);
@@ -466,6 +640,15 @@ fn handle_generate(mut stream: TcpStream, req: &http::Request,
         let _ = http::write_response(&mut stream, 503,
                                      &[("Retry-After", "1")],
                                      &err_body("draining"));
+        return;
+    }
+    // Sharded mode: decode would panic inside a remote linear until
+    // every worker holds its shard, so shed load until the fleet is up.
+    if !ctl.workers_ready() {
+        ctl.metrics.rejected_full.fetch_add(1, Relaxed);
+        let _ = http::write_response(&mut stream, 503,
+                                     &[("Retry-After", "1")],
+                                     &err_body("workers not ready"));
         return;
     }
     // Event capacity max_new + 4: every token plus the terminal event

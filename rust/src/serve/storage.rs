@@ -1,0 +1,380 @@
+//! Pluggable shard storage (DESIGN.md §14): where the coordinator
+//! reads per-worker shard artifacts from, and the checksum scheme the
+//! chunked fetch protocol verifies against.
+//!
+//! [`StorageBackend`] is deliberately tiny — `meta` + ranged `read` —
+//! so a remote object store can slot in later; [`LocalDir`] is the
+//! implementation over an `osp shard` output directory. Artifacts are
+//! content-addressed with FNV-1a 64 at two granularities: one digest
+//! over the whole file (the manifest / end-of-fetch check) and one per
+//! [`CHUNK_BYTES`] chunk, which is what makes interrupted fetches
+//! *resumable*: a worker re-verifies the chunks it already spooled and
+//! continues from the first unverified one instead of starting over.
+//!
+//! Checksums cross JSON as fixed-width hex strings, never numbers:
+//! the JSON layer carries f64, which silently loses u64 precision past
+//! 2^53.
+
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Fetch-protocol chunk size. Small enough that a resumed fetch loses
+/// at most 64 KiB of progress, large enough that per-chunk overhead
+/// (one digest, one HTTP range request) stays negligible.
+pub const CHUNK_BYTES: usize = 64 * 1024;
+
+/// FNV-1a 64-bit digest — tiny, dependency-free, and plenty for
+/// transport/bit-rot detection (this is an integrity check, not an
+/// adversarial MAC).
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// `u64` digest as the fixed-width hex string it travels as in JSON.
+pub fn fnv_hex(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+pub fn parse_fnv(s: &str) -> Result<u64> {
+    u64::from_str_radix(s, 16)
+        .with_context(|| format!("bad fnv digest '{s}'"))
+}
+
+/// Per-[`CHUNK_BYTES`] digests of an artifact (last chunk short).
+pub fn chunk_sums(bytes: &[u8]) -> Vec<u64> {
+    bytes.chunks(CHUNK_BYTES).map(fnv64).collect()
+}
+
+/// What a worker needs to fetch-and-verify one shard artifact.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardMeta {
+    pub shard: usize,
+    pub bytes: usize,
+    /// Whole-artifact digest (checked after the last chunk).
+    pub fnv: u64,
+    /// Per-chunk digests (checked as each chunk lands; the resume
+    /// anchor).
+    pub chunk_fnv: Vec<u64>,
+}
+
+impl ShardMeta {
+    pub fn n_chunks(&self) -> usize {
+        self.chunk_fnv.len()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shard", Json::num(self.shard as f64)),
+            ("bytes", Json::num(self.bytes as f64)),
+            ("chunk_bytes", Json::num(CHUNK_BYTES as f64)),
+            ("fnv", Json::str(fnv_hex(self.fnv))),
+            ("chunks",
+             Json::Arr(self.chunk_fnv.iter().map(|&c| {
+                 Json::str(fnv_hex(c))
+             }).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ShardMeta> {
+        let cb = j.req("chunk_bytes")?.as_usize()
+            .context("chunk_bytes")?;
+        if cb != CHUNK_BYTES {
+            bail!("peer chunk size {cb} != ours {CHUNK_BYTES}");
+        }
+        let chunk_fnv = j
+            .req("chunks")?
+            .as_arr()
+            .context("chunks")?
+            .iter()
+            .map(|c| parse_fnv(c.as_str().context("chunk digest")?))
+            .collect::<Result<Vec<u64>>>()?;
+        Ok(ShardMeta {
+            shard: j.req("shard")?.as_usize().context("shard")?,
+            bytes: j.req("bytes")?.as_usize().context("bytes")?,
+            fnv: parse_fnv(j.req("fnv")?.as_str().context("fnv")?)?,
+            chunk_fnv,
+        })
+    }
+}
+
+/// Where shard artifacts live. Implementations must be safe to call
+/// from concurrent handler threads.
+pub trait StorageBackend: Send + Sync {
+    fn n_shards(&self) -> usize;
+
+    /// Size + digests of one shard's artifact.
+    fn meta(&self, shard: usize) -> Result<ShardMeta>;
+
+    /// `len` bytes at `offset` of the shard's artifact; errors rather
+    /// than short-reads past the end.
+    fn read(&self, shard: usize, offset: usize, len: usize)
+            -> Result<Vec<u8>>;
+}
+
+/// One artifact line of `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub file: String,
+    pub bytes: usize,
+    pub fnv: u64,
+}
+
+/// The `osp shard` output directory's index: shard count, model arch,
+/// and the per-shard artifact digests a [`LocalDir`] serves against.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub shards: usize,
+    pub arch: String,
+    pub files: Vec<ManifestEntry>,
+}
+
+pub fn write_manifest(dir: &Path, m: &Manifest) -> Result<()> {
+    assert_eq!(m.files.len(), m.shards, "one artifact per shard");
+    let doc = Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("shards", Json::num(m.shards as f64)),
+        ("arch", Json::str(m.arch.clone())),
+        ("files",
+         Json::Arr(m.files.iter().map(|f| {
+             Json::obj(vec![
+                 ("file", Json::str(f.file.clone())),
+                 ("bytes", Json::num(f.bytes as f64)),
+                 ("fnv", Json::str(fnv_hex(f.fnv))),
+             ])
+         }).collect())),
+    ]);
+    let path = dir.join("manifest.json");
+    std::fs::write(&path, doc.dump())
+        .with_context(|| format!("writing {path:?}"))
+}
+
+pub fn read_manifest(dir: &Path) -> Result<Manifest> {
+    let path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("no shard manifest at {path:?}"))?;
+    let doc = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+    let version = doc.req("version")?.as_usize().context("version")?;
+    if version != 1 {
+        bail!("{path:?}: manifest version {version}, this build reads 1");
+    }
+    let shards = doc.req("shards")?.as_usize().context("shards")?;
+    let files = doc
+        .req("files")?
+        .as_arr()
+        .context("files")?
+        .iter()
+        .map(|f| {
+            Ok(ManifestEntry {
+                file: f.req("file")?.as_str().context("file")?.into(),
+                bytes: f.req("bytes")?.as_usize().context("bytes")?,
+                fnv: parse_fnv(f.req("fnv")?.as_str().context("fnv")?)?,
+            })
+        })
+        .collect::<Result<Vec<ManifestEntry>>>()?;
+    if files.len() != shards {
+        bail!("{path:?}: {} files for {shards} shards", files.len());
+    }
+    Ok(Manifest {
+        shards,
+        arch: doc.req("arch")?.as_str().context("arch")?.into(),
+        files,
+    })
+}
+
+/// [`StorageBackend`] over an `osp shard` output directory. Ranged
+/// reads go straight to the file (no resident copy of the artifacts);
+/// `meta` re-reads and re-digests the file so tampering after `osp
+/// shard` is caught at serve time, not worker-crash time.
+pub struct LocalDir {
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl LocalDir {
+    pub fn open(dir: &Path) -> Result<LocalDir> {
+        let manifest = read_manifest(dir)?;
+        Ok(LocalDir { dir: dir.to_path_buf(), manifest })
+    }
+
+    pub fn arch(&self) -> &str {
+        &self.manifest.arch
+    }
+
+    fn entry(&self, shard: usize) -> Result<&ManifestEntry> {
+        self.manifest
+            .files
+            .get(shard)
+            .ok_or_else(|| anyhow::anyhow!(
+                "shard {shard} of {}", self.manifest.shards))
+    }
+}
+
+impl StorageBackend for LocalDir {
+    fn n_shards(&self) -> usize {
+        self.manifest.shards
+    }
+
+    fn meta(&self, shard: usize) -> Result<ShardMeta> {
+        let e = self.entry(shard)?;
+        let path = self.dir.join(&e.file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() != e.bytes {
+            bail!("{path:?}: {} bytes, manifest says {}", bytes.len(),
+                  e.bytes);
+        }
+        let fnv = fnv64(&bytes);
+        if fnv != e.fnv {
+            bail!("{path:?}: checksum mismatch (artifact modified after \
+                   `osp shard`?)");
+        }
+        Ok(ShardMeta { shard, bytes: bytes.len(), fnv,
+                       chunk_fnv: chunk_sums(&bytes) })
+    }
+
+    fn read(&self, shard: usize, offset: usize, len: usize)
+            -> Result<Vec<u8>> {
+        let e = self.entry(shard)?;
+        let end = offset.checked_add(len).unwrap_or(usize::MAX);
+        if end > e.bytes {
+            bail!("range [{offset}, {end}) past {} artifact bytes",
+                  e.bytes);
+        }
+        let path = self.dir.join(&e.file);
+        let mut f = std::fs::File::open(&path)
+            .with_context(|| format!("opening {path:?}"))?;
+        f.seek(SeekFrom::Start(offset as u64))?;
+        let mut buf = vec![0u8; len];
+        f.read_exact(&mut buf)
+            .with_context(|| format!("short read in {path:?}"))?;
+        Ok(buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_store(tag: &str, payloads: &[Vec<u8>]) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("osp_store_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let files = payloads
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let file = format!("shard_{i}.bin");
+                std::fs::write(dir.join(&file), p).unwrap();
+                ManifestEntry { file, bytes: p.len(), fnv: fnv64(p) }
+            })
+            .collect();
+        write_manifest(&dir, &Manifest {
+            shards: payloads.len(),
+            arch: "ssnorm_plain".into(),
+            files,
+        }).unwrap();
+        dir
+    }
+
+    #[test]
+    fn fnv64_known_vectors() {
+        // FNV-1a 64 reference values (offset basis and "a").
+        assert_eq!(fnv64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_ne!(fnv64(b"ab"), fnv64(b"ba"));
+    }
+
+    #[test]
+    fn fnv_hex_roundtrip_preserves_high_bits() {
+        // The reason digests travel as hex strings: 2^53-adjacent u64s
+        // collapse in f64, but survive the string path exactly.
+        for v in [0u64, 1, (1 << 53) + 1, u64::MAX, 0xcbf29ce484222325] {
+            assert_eq!(parse_fnv(&fnv_hex(v)).unwrap(), v);
+        }
+        assert!(parse_fnv("not-hex").is_err());
+    }
+
+    #[test]
+    fn chunk_sums_cover_exact_and_ragged_sizes() {
+        assert_eq!(chunk_sums(&[]).len(), 0);
+        assert_eq!(chunk_sums(&vec![7u8; CHUNK_BYTES]).len(), 1);
+        assert_eq!(chunk_sums(&vec![7u8; CHUNK_BYTES + 1]).len(), 2);
+        assert_eq!(chunk_sums(&vec![7u8; 3 * CHUNK_BYTES]).len(), 3);
+    }
+
+    #[test]
+    fn shard_meta_json_roundtrip() {
+        let m = ShardMeta {
+            shard: 1,
+            bytes: CHUNK_BYTES + 17,
+            fnv: u64::MAX - 3,
+            chunk_fnv: vec![5, (1 << 60) + 9],
+        };
+        let back =
+            ShardMeta::from_json(&Json::parse(&m.to_json().dump())
+                                 .unwrap()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn local_dir_serves_meta_and_ranges() {
+        let payload: Vec<u8> =
+            (0..(CHUNK_BYTES + 100)).map(|i| (i % 251) as u8).collect();
+        let dir = temp_store("a", &[vec![1, 2, 3], payload.clone()]);
+        let s = LocalDir::open(&dir).unwrap();
+        assert_eq!(s.n_shards(), 2);
+        assert_eq!(s.arch(), "ssnorm_plain");
+        let m = s.meta(1).unwrap();
+        assert_eq!(m.bytes, payload.len());
+        assert_eq!(m.n_chunks(), 2);
+        assert_eq!(m.fnv, fnv64(&payload));
+        assert_eq!(s.read(1, 0, 5).unwrap(), &payload[..5]);
+        assert_eq!(s.read(1, CHUNK_BYTES, 100).unwrap(),
+                   &payload[CHUNK_BYTES..]);
+        // Past-the-end and unknown-shard reads fail cleanly.
+        assert!(s.read(1, payload.len() - 1, 2).is_err());
+        assert!(s.read(2, 0, 1).is_err());
+        assert!(s.meta(2).is_err());
+    }
+
+    #[test]
+    fn local_dir_catches_post_shard_tampering() {
+        let dir = temp_store("b", &[vec![9u8; 500]]);
+        let s = LocalDir::open(&dir).unwrap();
+        assert!(s.meta(0).is_ok());
+        // Flip one artifact byte after the manifest was written.
+        let path = dir.join("shard_0.bin");
+        let mut b = std::fs::read(&path).unwrap();
+        b[250] ^= 0xff;
+        std::fs::write(&path, &b).unwrap();
+        let err = s.meta(0).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        // Truncation trips the size check first.
+        std::fs::write(&path, &b[..100]).unwrap();
+        assert!(s.meta(0).is_err());
+    }
+
+    #[test]
+    fn manifest_rejects_bad_version_and_missing_dir() {
+        let dir = temp_store("c", &[vec![1u8]]);
+        let text =
+            std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        std::fs::write(dir.join("manifest.json"),
+                       text.replace("\"version\":1", "\"version\":9"))
+            .unwrap();
+        assert!(LocalDir::open(&dir).is_err());
+        let empty = std::env::temp_dir().join("osp_store_nope");
+        let _ = std::fs::remove_dir_all(&empty);
+        assert!(LocalDir::open(&empty).is_err());
+    }
+}

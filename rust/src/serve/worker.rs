@@ -1,0 +1,1207 @@
+//! `osp worker` — the worker half of row-parallel sharded serving
+//! (DESIGN.md §14), plus [`HttpShardPool`], the coordinator-side
+//! [`ShardCompute`] implementation that drives a worker fleet over the
+//! std-only HTTP layer.
+//!
+//! A worker is a stateless sharded-matmul server: it acquires one OSPS
+//! shard artifact (from a local file, or by checksummed resumable
+//! fetch from the coordinator's `/shards/{i}/...` endpoints), then
+//! answers `POST /matmul` with either an f32 column stripe (Col ops)
+//! or an exact i32 partial accumulator (Row ops) — see
+//! `model::remote` for why that split keeps sharded streams
+//! bit-identical to single-process ones.
+//!
+//! Worker endpoints: `POST /matmul`, `GET /healthz` (carries `ready`),
+//! `GET /metrics` (shard fetch progress, rpc counters, stripe
+//! latency), `POST /admin/drain`. The worker serves health/metrics
+//! while the shard is still loading; `/matmul` answers 503 until
+//! ready.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering::{Relaxed, SeqCst};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::checkpoint::{self, ShardArtifact};
+use crate::model::remote::{ShardCompute, ShardEntry, ShardKind};
+use crate::tensor::intkern::{Backend, IntMode, QuantActs, MAX_INT_K};
+use crate::util::json::Json;
+
+use super::http::{self, header, ClientConn};
+use super::metrics::LatHist;
+use super::storage::{fnv64, ShardMeta, StorageBackend, CHUNK_BYTES};
+
+/// Largest `len` a single `/shards/{i}/data` range request may ask
+/// for; clients fetch chunk-by-chunk anyway.
+pub const MAX_RANGE_BYTES: usize = 8 << 20;
+
+// ---- small blocking HTTP client helpers --------------------------------
+
+fn connect(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connect {addr}"))?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    Ok(stream)
+}
+
+/// GET returning the raw body bytes — the shard-data fetch path, which
+/// must never pass through a lossy UTF-8 conversion.
+fn get_bytes(addr: &str, path: &str, timeout: Duration)
+             -> Result<(u16, Vec<u8>)> {
+    let mut conn = ClientConn::new(connect(addr, timeout)?);
+    conn.send_request("GET", path, "")?;
+    let (status, headers) = conn.read_head()?;
+    let n: usize = header(&headers, "content-length")
+        .ok_or_else(|| anyhow!("response without Content-Length"))?
+        .parse()?;
+    Ok((status, conn.read_body_bytes(n)?))
+}
+
+fn post_json(addr: &str, path: &str, body: &str, timeout: Duration)
+             -> Result<(u16, Json)> {
+    let mut conn = ClientConn::new(connect(addr, timeout)?);
+    conn.send_request("POST", path, body)?;
+    let (status, headers) = conn.read_head()?;
+    let n: usize = header(&headers, "content-length")
+        .ok_or_else(|| anyhow!("response without Content-Length"))?
+        .parse()?;
+    let text = conn.read_body(n)?;
+    let doc = Json::parse(&text)
+        .map_err(|e| anyhow!("bad response JSON: {e}"))?;
+    Ok((status, doc))
+}
+
+fn json_err(doc: &Json) -> String {
+    doc.get("error")
+        .and_then(|e| e.as_str())
+        .unwrap_or("?")
+        .to_string()
+}
+
+// ---- the /shards/{i}/... endpoint body (served by the coordinator) ----
+
+/// Build the response for a `GET /shards/...` path against a storage
+/// backend: `(status, content_type, body)`. Factored out of the serve
+/// front-end so the fetch tests can run it behind a bare listener
+/// without booting a model.
+pub(crate) fn shards_http_response(path: &str,
+                                   store: &dyn StorageBackend)
+                                   -> (u16, &'static str, Vec<u8>) {
+    fn err(status: u16, msg: &str) -> (u16, &'static str, Vec<u8>) {
+        let body = Json::obj(vec![("error", Json::str(msg))]).dump();
+        (status, "application/json", body.into_bytes())
+    }
+    let Some(rest) = path.strip_prefix("/shards/") else {
+        return err(404, "no such endpoint");
+    };
+    let Some((idx, tail)) = rest.split_once('/') else {
+        return err(404, "want /shards/{i}/meta or /shards/{i}/data");
+    };
+    let Ok(shard) = idx.parse::<usize>() else {
+        return err(404, "bad shard index");
+    };
+    if tail == "meta" {
+        return match store.meta(shard) {
+            Ok(m) => (200, "application/json",
+                      m.to_json().dump().into_bytes()),
+            Err(e) => err(404, &format!("{e:#}")),
+        };
+    }
+    let Some(query) = tail.strip_prefix("data?") else {
+        return err(404, "want /shards/{i}/meta or /shards/{i}/data");
+    };
+    let (mut off, mut len) = (None, None);
+    for kv in query.split('&') {
+        match kv.split_once('=') {
+            Some(("off", v)) => off = v.parse::<usize>().ok(),
+            Some(("len", v)) => len = v.parse::<usize>().ok(),
+            _ => {}
+        }
+    }
+    let (Some(off), Some(len)) = (off, len) else {
+        return err(400, "data wants ?off=N&len=N");
+    };
+    if len == 0 || len > MAX_RANGE_BYTES {
+        return err(400, "bad range length");
+    }
+    match store.read(shard, off, len) {
+        Ok(bytes) => (200, "application/octet-stream", bytes),
+        Err(e) => err(400, &format!("{e:#}")),
+    }
+}
+
+// ---- worker metrics ----------------------------------------------------
+
+/// Worker-side counters and gauges, all lock-free. `chunks_*` move
+/// during the fetch so `/metrics` shows live progress.
+#[derive(Default)]
+pub struct WorkerMetrics {
+    pub rpcs_served: AtomicU64,
+    /// Matmuls currently executing (the worker's queue-depth gauge;
+    /// single-threaded worker ⇒ 0 or 1, and 0 after drain).
+    pub rpc_in_flight: AtomicI64,
+    pub stripe_lat: LatHist,
+    pub fetch_ms: AtomicU64,
+    pub bytes_fetched: AtomicU64,
+    pub chunks_done: AtomicU64,
+    pub chunks_total: AtomicU64,
+    /// Chunks recovered from the spool instead of the wire.
+    pub resumed_chunks: AtomicU64,
+}
+
+// ---- resumable checksummed shard fetch ---------------------------------
+
+pub struct FetchStats {
+    pub fetch_ms: u64,
+    /// Bytes that crossed the wire *this call* (resumed chunks do not
+    /// count — that is the point of resuming).
+    pub bytes_fetched: u64,
+    pub resumed_chunks: u64,
+}
+
+/// Fetch shard `shard` from the coordinator's `/shards` endpoints,
+/// verifying every [`CHUNK_BYTES`] chunk against the meta digests as
+/// it lands and spooling verified bytes to `spool`. A rerun after an
+/// interruption re-verifies the spool and resumes at the first
+/// unverified chunk. `byte_budget` caps wire bytes for this call (the
+/// interruption-injection knob used by tests and `osp worker
+/// --fetch-budget`); exceeding it errors *after* persisting progress.
+pub fn fetch_shard(coordinator: &str, shard: usize, spool: &Path,
+                   byte_budget: Option<usize>, wm: &WorkerMetrics)
+                   -> Result<(ShardArtifact, FetchStats)> {
+    let t0 = Instant::now();
+    let timeout = Duration::from_secs(10);
+    let (status, meta_doc) = post_meta(coordinator, shard, timeout)?;
+    if status != 200 {
+        bail!("coordinator {coordinator} /shards/{shard}/meta -> \
+               {status}: {}", json_err(&meta_doc));
+    }
+    let meta = ShardMeta::from_json(&meta_doc)
+        .context("parsing shard meta")?;
+    if meta.shard != shard {
+        bail!("asked for shard {shard}, meta describes {}", meta.shard);
+    }
+    let want_chunks = meta.bytes.div_ceil(CHUNK_BYTES);
+    if meta.n_chunks() != want_chunks {
+        bail!("meta lists {} chunk digests for {} bytes (want {})",
+              meta.n_chunks(), meta.bytes, want_chunks);
+    }
+    wm.chunks_total.store(want_chunks as u64, Relaxed);
+
+    // Re-verify whatever a previous attempt spooled; keep the verified
+    // prefix, drop the rest.
+    let mut buf = std::fs::read(spool).unwrap_or_default();
+    let mut verified = 0usize;
+    for i in 0..want_chunks {
+        let a = i * CHUNK_BYTES;
+        let b = ((i + 1) * CHUNK_BYTES).min(meta.bytes);
+        if buf.len() >= b && fnv64(&buf[a..b]) == meta.chunk_fnv[i] {
+            verified += 1;
+        } else {
+            break;
+        }
+    }
+    buf.truncate((verified * CHUNK_BYTES).min(meta.bytes));
+    wm.resumed_chunks.store(verified as u64, Relaxed);
+    wm.chunks_done.store(verified as u64, Relaxed);
+
+    if let Some(parent) = spool.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {parent:?}"))?;
+        }
+    }
+    let mut wire_bytes = 0usize;
+    for i in verified..want_chunks {
+        let off = i * CHUNK_BYTES;
+        let len = CHUNK_BYTES.min(meta.bytes - off);
+        if let Some(cap) = byte_budget {
+            if wire_bytes + len > cap {
+                bail!("fetch interrupted after {wire_bytes} wire bytes \
+                       ({i} of {want_chunks} chunks verified and \
+                       spooled; rerun to resume)");
+            }
+        }
+        let path = format!("/shards/{shard}/data?off={off}&len={len}");
+        let (status, chunk) = get_bytes(coordinator, &path, timeout)?;
+        if status != 200 {
+            bail!("coordinator {coordinator} {path} -> {status}: {}",
+                  String::from_utf8_lossy(&chunk));
+        }
+        if chunk.len() != len {
+            bail!("{path}: got {} bytes, asked for {len}", chunk.len());
+        }
+        if fnv64(&chunk) != meta.chunk_fnv[i] {
+            bail!("shard {shard} chunk {i} failed its checksum in \
+                   transit");
+        }
+        buf.extend_from_slice(&chunk);
+        std::fs::write(spool, &buf)
+            .with_context(|| format!("spooling to {spool:?}"))?;
+        wire_bytes += len;
+        wm.bytes_fetched.fetch_add(len as u64, Relaxed);
+        wm.chunks_done.fetch_add(1, Relaxed);
+    }
+    if buf.len() != meta.bytes || fnv64(&buf) != meta.fnv {
+        bail!("shard {shard} artifact failed its whole-file checksum");
+    }
+    let art = checkpoint::parse_shard(
+        &buf, &format!("shard {shard} fetched from {coordinator}"))?;
+    if art.shard != shard {
+        bail!("fetched artifact says it is shard {} of {}, expected \
+               shard {shard}", art.shard, art.n_shards);
+    }
+    let ms = t0.elapsed().as_millis() as u64;
+    wm.fetch_ms.store(ms, Relaxed);
+    Ok((art, FetchStats { fetch_ms: ms,
+                          bytes_fetched: wire_bytes as u64,
+                          resumed_chunks: verified as u64 }))
+}
+
+fn post_meta(coordinator: &str, shard: usize, timeout: Duration)
+             -> Result<(u16, Json)> {
+    let mut conn = ClientConn::new(connect(coordinator, timeout)?);
+    conn.send_request("GET", &format!("/shards/{shard}/meta"), "")?;
+    let (status, headers) = conn.read_head()?;
+    let n: usize = header(&headers, "content-length")
+        .ok_or_else(|| anyhow!("meta response without Content-Length"))?
+        .parse()?;
+    let text = conn.read_body(n)?;
+    let doc = Json::parse(&text)
+        .map_err(|e| anyhow!("bad meta JSON: {e}"))?;
+    Ok((status, doc))
+}
+
+// ---- the worker server -------------------------------------------------
+
+/// Where a worker's shard artifact comes from.
+pub enum ShardSource {
+    /// Load an `osp shard` output file directly (same machine).
+    File(PathBuf),
+    /// Checksummed resumable fetch from the coordinator's `/shards`
+    /// endpoints. `byte_budget` caps wire bytes (None = unlimited).
+    Fetch {
+        coordinator: String,
+        spool: PathBuf,
+        byte_budget: Option<usize>,
+    },
+}
+
+pub struct WorkerOpts {
+    /// Bind address; port 0 picks an ephemeral port.
+    pub addr: String,
+    /// Which shard this worker serves.
+    pub shard: usize,
+    /// Expected fleet size; 0 = accept whatever the artifact says.
+    pub n_shards: usize,
+    pub source: ShardSource,
+    pub int_mode: IntMode,
+    pub max_body_bytes: usize,
+}
+
+impl WorkerOpts {
+    pub fn new(addr: &str, shard: usize, source: ShardSource)
+               -> WorkerOpts {
+        WorkerOpts { addr: addr.into(), shard, n_shards: 0, source,
+                     int_mode: IntMode::Auto,
+                     max_body_bytes: 4 << 20 }
+    }
+}
+
+struct WorkerCtl {
+    shard: usize,
+    backend: Backend,
+    ready: AtomicBool,
+    draining: AtomicBool,
+    n_shards: AtomicU64,
+    weight_bytes: AtomicU64,
+    failed: Mutex<Option<String>>,
+    metrics: WorkerMetrics,
+    entries: RwLock<Vec<ShardEntry>>,
+}
+
+/// A running worker. Binds immediately (health/metrics respond while
+/// the shard loads); `drain()` + `join()` is the clean shutdown path.
+pub struct WorkerServer {
+    addr: SocketAddr,
+    ctl: Arc<WorkerCtl>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl WorkerServer {
+    pub fn spawn(opts: WorkerOpts) -> Result<WorkerServer> {
+        let backend = opts.int_mode.backend().ok_or_else(|| anyhow!(
+            "worker requires the integer kernel path (int mode \
+             scalar|auto)"))?;
+        let listener = TcpListener::bind(&opts.addr)
+            .with_context(|| format!("bind {}", opts.addr))?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let ctl = Arc::new(WorkerCtl {
+            shard: opts.shard,
+            backend,
+            ready: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
+            n_shards: AtomicU64::new(opts.n_shards as u64),
+            weight_bytes: AtomicU64::new(0),
+            failed: Mutex::new(None),
+            metrics: WorkerMetrics::default(),
+            entries: RwLock::new(Vec::new()),
+        });
+        let ctl2 = Arc::clone(&ctl);
+        let handle = thread::Builder::new()
+            .name(format!("osp-worker-{}", opts.shard))
+            .spawn(move || worker_loop(opts, listener, &ctl2))?;
+        Ok(WorkerServer { addr, ctl, handle: Some(handle) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn is_ready(&self) -> bool {
+        self.ctl.ready.load(SeqCst)
+    }
+
+    /// The load error, if acquiring the shard failed (the worker then
+    /// drains itself).
+    pub fn load_error(&self) -> Option<String> {
+        self.ctl.failed.lock().unwrap().clone()
+    }
+
+    pub fn drain(&self) {
+        self.ctl.draining.store(true, SeqCst);
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.ctl.draining.load(SeqCst)
+    }
+
+    pub fn join(mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn load_shard_set(opts: &WorkerOpts, ctl: &WorkerCtl) -> Result<()> {
+    let art = match &opts.source {
+        ShardSource::File(path) => checkpoint::load_shard(path)?,
+        ShardSource::Fetch { coordinator, spool, byte_budget } => {
+            fetch_shard(coordinator, opts.shard, spool, *byte_budget,
+                        &ctl.metrics)?.0
+        }
+    };
+    if art.shard != opts.shard {
+        bail!("artifact is shard {} of {}, this worker serves shard {}",
+              art.shard, art.n_shards, opts.shard);
+    }
+    if opts.n_shards != 0 && art.n_shards != opts.n_shards {
+        bail!("artifact was cut for {} workers, fleet has {}",
+              art.n_shards, opts.n_shards);
+    }
+    let bytes: usize = art.entries.iter()
+        .map(|e| e.q.packed_bytes())
+        .sum();
+    ctl.weight_bytes.store(bytes as u64, SeqCst);
+    ctl.n_shards.store(art.n_shards as u64, SeqCst);
+    *ctl.entries.write().unwrap() = art.entries;
+    ctl.ready.store(true, SeqCst);
+    Ok(())
+}
+
+fn worker_loop(opts: WorkerOpts, listener: TcpListener,
+               ctl: &Arc<WorkerCtl>) {
+    // Acquire the shard on a helper thread so health/metrics probes
+    // (and the coordinator's readiness poller) get answers during a
+    // long fetch.
+    let ctl2 = Arc::clone(ctl);
+    let opts = Arc::new(opts);
+    let opts2 = Arc::clone(&opts);
+    let loader = thread::Builder::new()
+        .name("osp-worker-load".into())
+        .spawn(move || {
+            if let Err(e) = load_shard_set(&opts2, &ctl2) {
+                eprintln!("worker {}: shard load failed: {e:#}",
+                          opts2.shard);
+                *ctl2.failed.lock().unwrap() = Some(format!("{e:#}"));
+                ctl2.draining.store(true, SeqCst);
+            }
+        })
+        .expect("spawn worker loader");
+    loop {
+        if ctl.draining.load(SeqCst) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                handle_worker_conn(stream, ctl, opts.max_body_bytes);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(2)),
+        }
+    }
+    let _ = loader.join();
+    // The zero-leak drain line CI greps on every worker process.
+    println!("worker {} drained; {} rpcs served, {} stripes in flight",
+             ctl.shard, ctl.metrics.rpcs_served.load(Relaxed),
+             ctl.metrics.rpc_in_flight.load(Relaxed));
+}
+
+fn worker_status_json(ctl: &WorkerCtl) -> Json {
+    let m = &ctl.metrics;
+    let q = |p: f64| match m.stripe_lat.quantile(p) {
+        Some(ms) => Json::num(ms),
+        None => Json::Null,
+    };
+    Json::obj(vec![
+        ("shard", Json::num(ctl.shard as f64)),
+        ("n_shards", Json::num(ctl.n_shards.load(SeqCst) as f64)),
+        ("ready", Json::Bool(ctl.ready.load(SeqCst))),
+        ("draining", Json::Bool(ctl.draining.load(SeqCst))),
+        ("backend", Json::str(ctl.backend.label())),
+        ("weight_bytes",
+         Json::num(ctl.weight_bytes.load(SeqCst) as f64)),
+        ("rpcs_served", Json::num(m.rpcs_served.load(Relaxed) as f64)),
+        ("rpc_in_flight",
+         Json::num(m.rpc_in_flight.load(Relaxed) as f64)),
+        ("fetch_ms", Json::num(m.fetch_ms.load(Relaxed) as f64)),
+        ("bytes_fetched",
+         Json::num(m.bytes_fetched.load(Relaxed) as f64)),
+        ("chunks_done", Json::num(m.chunks_done.load(Relaxed) as f64)),
+        ("chunks_total",
+         Json::num(m.chunks_total.load(Relaxed) as f64)),
+        ("resumed_chunks",
+         Json::num(m.resumed_chunks.load(Relaxed) as f64)),
+        ("stripe_p50_ms", q(0.50)),
+        ("stripe_p95_ms", q(0.95)),
+        ("error", match &*ctl.failed.lock().unwrap() {
+            Some(msg) => Json::str(msg.clone()),
+            None => Json::Null,
+        }),
+    ])
+}
+
+fn handle_worker_conn(mut stream: TcpStream, ctl: &WorkerCtl,
+                      max_body: usize) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    let req = match http::read_request(&mut stream, max_body) {
+        Ok(r) => r,
+        Err(e) => {
+            if let Some((status, msg)) = e.status() {
+                let body = Json::obj(vec![("error", Json::str(msg))])
+                    .dump();
+                let _ = http::write_response(&mut stream, status, &[],
+                                             &body);
+            }
+            return;
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let body = Json::obj(vec![
+                ("ok", Json::Bool(ctl.failed.lock().unwrap().is_none())),
+                ("ready", Json::Bool(ctl.ready.load(SeqCst))),
+                ("shard", Json::num(ctl.shard as f64)),
+                ("draining",
+                 Json::Bool(ctl.draining.load(SeqCst))),
+            ]).dump();
+            let _ = http::write_response(&mut stream, 200, &[], &body);
+        }
+        ("GET", "/metrics") => {
+            let _ = http::write_response(
+                &mut stream, 200, &[], &worker_status_json(ctl).dump());
+        }
+        ("POST", "/admin/drain") => {
+            let body = Json::obj(vec![("draining", Json::Bool(true))])
+                .dump();
+            let _ = http::write_response(&mut stream, 200, &[], &body);
+            ctl.draining.store(true, SeqCst);
+        }
+        ("POST", "/matmul") => {
+            let (status, body) = handle_matmul(ctl, &req.body);
+            let _ = http::write_response(&mut stream, status, &[],
+                                         &body);
+        }
+        _ => {
+            let body = Json::obj(vec![
+                ("error", Json::str("no such endpoint")),
+            ]).dump();
+            let _ = http::write_response(&mut stream, 404, &[], &body);
+        }
+    }
+}
+
+struct MatmulReq {
+    op: String,
+    row: bool,
+    acts: QuantActs,
+}
+
+/// Validate a `/matmul` body. Everything the kernels would `assert!`
+/// on is rejected here with a 400 instead — worker threads must not
+/// die on a malformed peer.
+fn parse_matmul(body: &[u8]) -> Result<MatmulReq, String> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| "body is not UTF-8".to_string())?;
+    let doc = Json::parse(text).map_err(|e| format!("bad JSON: {e}"))?;
+    let op = doc.get("op").and_then(|v| v.as_str())
+        .ok_or("missing 'op'")?.to_string();
+    let row = match doc.get("kind").and_then(|v| v.as_str()) {
+        Some("col") => false,
+        Some("row") => true,
+        _ => return Err("'kind' must be \"col\" or \"row\"".into()),
+    };
+    let m = doc.get("m").and_then(|v| v.as_usize()).filter(|&m| m > 0)
+        .ok_or("'m' must be a positive integer")?;
+    let k = doc.get("k").and_then(|v| v.as_usize()).filter(|&k| k > 0)
+        .ok_or("'k' must be a positive integer")?;
+    if k >= MAX_INT_K {
+        return Err(format!("k {k} >= int-kernel cap {MAX_INT_K}"));
+    }
+    let codes_arr = doc.get("codes").and_then(|v| v.as_arr())
+        .ok_or("missing 'codes' array")?;
+    if codes_arr.len() != m * k {
+        return Err(format!("{} codes for m*k = {}", codes_arr.len(),
+                           m * k));
+    }
+    let mut codes = Vec::with_capacity(m * k);
+    for v in codes_arr {
+        let c = v.as_f64().filter(|x| x.fract() == 0.0)
+            .map(|x| x as i64)
+            .filter(|&x| (-128..=127).contains(&x))
+            .ok_or("codes must be integers in [-128, 127]")?;
+        codes.push(c as i8);
+    }
+    let scales_arr = doc.get("scales").and_then(|v| v.as_arr())
+        .ok_or("missing 'scales' array")?;
+    if scales_arr.len() != m {
+        return Err(format!("{} scales for m = {m}", scales_arr.len()));
+    }
+    let mut scales = Vec::with_capacity(m);
+    for v in scales_arr {
+        let s = v.as_f64().filter(|x| x.is_finite())
+            .ok_or("scales must be finite numbers")?;
+        scales.push(s as f32);
+    }
+    Ok(MatmulReq { op, row,
+                   acts: QuantActs::from_parts(codes, scales, m, k) })
+}
+
+fn handle_matmul(ctl: &WorkerCtl, body: &[u8]) -> (u16, String) {
+    let err = |status: u16, msg: &str| {
+        (status,
+         Json::obj(vec![("error", Json::str(msg))]).dump())
+    };
+    if !ctl.ready.load(SeqCst) {
+        return err(503, "shard not loaded yet");
+    }
+    let req = match parse_matmul(body) {
+        Ok(r) => r,
+        Err(msg) => return err(400, &msg),
+    };
+    ctl.metrics.rpc_in_flight.fetch_add(1, SeqCst);
+    let out = run_matmul(ctl, &req);
+    ctl.metrics.rpc_in_flight.fetch_sub(1, SeqCst);
+    match out {
+        Ok(doc) => {
+            ctl.metrics.rpcs_served.fetch_add(1, Relaxed);
+            (200, doc.dump())
+        }
+        Err(msg) => err(400, &msg),
+    }
+}
+
+fn run_matmul(ctl: &WorkerCtl, req: &MatmulReq)
+              -> Result<Json, String> {
+    let entries = ctl.entries.read().unwrap();
+    let e = entries.iter().find(|e| e.name == req.op)
+        .ok_or_else(|| format!("no shard entry for op '{}'", req.op))?;
+    let want_row = e.kind == ShardKind::Row;
+    if want_row != req.row {
+        return Err(format!("op '{}' is {}-parallel, request says {}",
+                           req.op, e.kind.label(),
+                           if req.row { "row" } else { "col" }));
+    }
+    if req.acts.k() != e.q.rows() {
+        return Err(format!("op '{}' wants k = {}, request has k = {}",
+                           req.op, e.q.rows(), req.acts.k()));
+    }
+    let t0 = Instant::now();
+    let doc = if req.row {
+        let n = e.q.cols();
+        let mut acc = vec![0i32; req.acts.m() * n];
+        e.q.accumulate_int(&req.acts, ctl.backend, &mut acc);
+        Json::obj(vec![
+            ("n", Json::num(n as f64)),
+            ("partial",
+             Json::Arr(acc.iter().map(|&v| Json::num(v as f64))
+                       .collect())),
+        ])
+    } else {
+        let stripe =
+            e.q.qmatmul_rhs_int_with(None, &req.acts, ctl.backend);
+        Json::obj(vec![
+            ("j0", Json::num(e.off as f64)),
+            ("j1", Json::num((e.off + e.q.cols()) as f64)),
+            ("stripe",
+             Json::Arr(stripe.data().iter()
+                       .map(|&v| Json::num(v as f64)).collect())),
+        ])
+    };
+    ctl.metrics.stripe_lat.record(t0.elapsed());
+    Ok(doc)
+}
+
+// ---- the coordinator-side HTTP shard pool ------------------------------
+
+/// [`ShardCompute`] over a worker fleet reached through the std HTTP
+/// layer. Owns fan-out (one thread per worker per call — the fleet is
+/// small), per-attempt retries on transport errors and 503s, and the
+/// rpc counters the coordinator's `/metrics`//`/status` publish. After
+/// retries are exhausted the error propagates to
+/// [`crate::model::remote::RemoteLinear`], which panics by design —
+/// the serve loop's step-error boundary turns that into failed
+/// requests, never wrong tokens.
+pub struct HttpShardPool {
+    workers: Vec<String>,
+    timeout: Duration,
+    pub rpcs_ok: AtomicU64,
+    pub rpcs_retried: AtomicU64,
+    pub per_worker_ok: Vec<AtomicU64>,
+    /// Round-trip latency of successful partial-stripe rpcs.
+    pub stripe_lat: LatHist,
+}
+
+impl HttpShardPool {
+    pub fn new(workers: Vec<String>) -> HttpShardPool {
+        let n = workers.len();
+        HttpShardPool {
+            workers,
+            timeout: Duration::from_secs(30),
+            rpcs_ok: AtomicU64::new(0),
+            rpcs_retried: AtomicU64::new(0),
+            per_worker_ok: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            stripe_lat: LatHist::default(),
+        }
+    }
+
+    pub fn worker_addrs(&self) -> &[String] {
+        &self.workers
+    }
+
+    /// Pool counters for the coordinator's metrics endpoints. The
+    /// cross-process conservation invariant: `rpcs_ok` here never
+    /// exceeds the sum of the workers' `rpcs_served`.
+    pub fn to_json(&self) -> Json {
+        let q = |p: f64| match self.stripe_lat.quantile(p) {
+            Some(ms) => Json::num(ms),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("workers", Json::num(self.workers.len() as f64)),
+            ("rpcs_ok", Json::num(self.rpcs_ok.load(Relaxed) as f64)),
+            ("rpcs_retried",
+             Json::num(self.rpcs_retried.load(Relaxed) as f64)),
+            ("per_worker_rpcs_ok",
+             Json::Arr(self.per_worker_ok.iter()
+                       .map(|c| Json::num(c.load(Relaxed) as f64))
+                       .collect())),
+            ("stripe_p50_ms", q(0.50)),
+            ("stripe_p95_ms", q(0.95)),
+        ])
+    }
+
+    fn rpc(&self, w: usize, body: &str) -> Result<Json> {
+        let addr = &self.workers[w];
+        let mut last = anyhow!("no attempt made");
+        for attempt in 0..4 {
+            if attempt > 0 {
+                self.rpcs_retried.fetch_add(1, Relaxed);
+                thread::sleep(Duration::from_millis(40));
+            }
+            let t0 = Instant::now();
+            match post_json(addr, "/matmul", body, self.timeout) {
+                Ok((200, doc)) => {
+                    self.stripe_lat.record(t0.elapsed());
+                    self.rpcs_ok.fetch_add(1, Relaxed);
+                    self.per_worker_ok[w].fetch_add(1, Relaxed);
+                    return Ok(doc);
+                }
+                Ok((503, doc)) => {
+                    last = anyhow!("worker {addr} not ready (503): {}",
+                                   json_err(&doc));
+                }
+                Ok((status, doc)) => {
+                    // A semantic rejection will not improve on retry.
+                    bail!("worker {addr} /matmul -> {status}: {}",
+                          json_err(&doc));
+                }
+                Err(e) => last = e,
+            }
+        }
+        Err(last).with_context(|| format!(
+            "worker {addr} still failing after retries"))
+    }
+}
+
+fn matmul_body(op: &str, kind: &str, acts: &QuantActs) -> String {
+    let (m, k) = (acts.m(), acts.k());
+    let mut codes = Vec::with_capacity(m * k);
+    let mut scales = Vec::with_capacity(m);
+    for r in 0..m {
+        codes.extend(acts.row_codes(r).iter()
+                     .map(|&c| Json::num(c as f64)));
+        scales.push(Json::num(acts.scale(r) as f64));
+    }
+    Json::obj(vec![
+        ("op", Json::str(op)),
+        ("kind", Json::str(kind)),
+        ("m", Json::num(m as f64)),
+        ("k", Json::num(k as f64)),
+        ("codes", Json::Arr(codes)),
+        ("scales", Json::Arr(scales)),
+    ]).dump()
+}
+
+fn parse_f32_arr(doc: &Json, key: &str) -> Result<Vec<f32>> {
+    doc.get(key).and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("reply missing '{key}'"))?
+        .iter()
+        .map(|v| v.as_f64().map(|x| x as f32)
+             .ok_or_else(|| anyhow!("non-numeric '{key}' element")))
+        .collect()
+}
+
+fn parse_i32_arr(doc: &Json, key: &str) -> Result<Vec<i32>> {
+    doc.get(key).and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("reply missing '{key}'"))?
+        .iter()
+        .map(|v| v.as_f64().filter(|x| x.fract() == 0.0)
+             .map(|x| x as i32)
+             .ok_or_else(|| anyhow!("non-integer '{key}' element")))
+        .collect()
+}
+
+impl ShardCompute for HttpShardPool {
+    fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn col_stripes(&self, op: &str, acts: &QuantActs)
+                   -> Result<Vec<Vec<f32>>> {
+        let body = matmul_body(op, "col", acts);
+        let nw = self.workers.len();
+        let mut out: Vec<Result<Vec<f32>>> = Vec::with_capacity(nw);
+        thread::scope(|s| {
+            let handles: Vec<_> = (0..nw)
+                .map(|w| {
+                    let body = &body;
+                    s.spawn(move || {
+                        parse_f32_arr(&self.rpc(w, body)?, "stripe")
+                    })
+                })
+                .collect();
+            for h in handles {
+                out.push(h.join().unwrap_or_else(|_| {
+                    Err(anyhow!("rpc thread panicked"))
+                }));
+            }
+        });
+        out.into_iter().collect()
+    }
+
+    fn row_partials(&self, op: &str, slices: &[QuantActs])
+                    -> Result<Vec<Vec<i32>>> {
+        let nw = self.workers.len();
+        anyhow::ensure!(slices.len() == nw,
+                        "{} slices for {nw} workers", slices.len());
+        let bodies: Vec<String> = slices.iter()
+            .map(|sl| matmul_body(op, "row", sl))
+            .collect();
+        let mut out: Vec<Result<Vec<i32>>> = Vec::with_capacity(nw);
+        thread::scope(|s| {
+            let handles: Vec<_> = (0..nw)
+                .map(|w| {
+                    let body = &bodies[w];
+                    s.spawn(move || {
+                        parse_i32_arr(&self.rpc(w, body)?, "partial")
+                    })
+                })
+                .collect();
+            for h in handles {
+                out.push(h.join().unwrap_or_else(|_| {
+                    Err(anyhow!("rpc thread panicked"))
+                }));
+            }
+        });
+        out.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::remote::{shard_range, LocalShards, ShardSet};
+    use crate::quant::rtn::quantize_per_channel_q;
+    use crate::serve::storage::{self, LocalDir, Manifest,
+                                ManifestEntry};
+    use crate::tensor::qtensor::QTensor;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Pcg;
+
+    fn random_q(rng: &mut Pcg, k: usize, n: usize, bits: u32)
+                -> QTensor {
+        let mut t = Tensor::zeros(&[k, n]);
+        rng.fill_normal(t.data_mut(), 0.1);
+        quantize_per_channel_q(&t, bits)
+    }
+
+    fn random_acts(rng: &mut Pcg, m: usize, k: usize) -> QuantActs {
+        let codes: Vec<i8> = (0..m * k)
+            .map(|_| (rng.below(16) as i64 - 8) as i8)
+            .collect();
+        let scales: Vec<f32> =
+            (0..m).map(|r| 0.04 + 0.01 * r as f32).collect();
+        QuantActs::from_parts(codes, scales, m, k)
+    }
+
+    /// Two-op shard sets (one Col, one Row) over `shards` workers.
+    fn two_op_sets(qc: &QTensor, qr: &QTensor, shards: usize)
+                   -> Vec<ShardSet> {
+        (0..shards)
+            .map(|w| {
+                let (j0, j1) = shard_range(qc.cols(), shards, w);
+                let (k0, k1) = shard_range(qr.rows(), shards, w);
+                vec![
+                    ShardEntry { name: "L0.wq".into(),
+                                 kind: ShardKind::Col,
+                                 full_k: qc.rows(), full_n: qc.cols(),
+                                 off: j0, q: qc.shard_cols(j0, j1) },
+                    ShardEntry { name: "L0.wo".into(),
+                                 kind: ShardKind::Row,
+                                 full_k: qr.rows(), full_n: qr.cols(),
+                                 off: k0, q: qr.shard_rows(k0, k1) },
+                ]
+            })
+            .collect()
+    }
+
+    fn temp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("osp_worker_test_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn wait_ready(ws: &[&WorkerServer]) {
+        let t0 = Instant::now();
+        while !ws.iter().all(|w| w.is_ready()) {
+            assert!(t0.elapsed() < Duration::from_secs(20),
+                    "workers never became ready: {:?}",
+                    ws.iter().map(|w| w.load_error()).collect::<Vec<_>>());
+            thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    /// The §14 transport invariant: HTTP recombination is bitwise the
+    /// in-process [`LocalShards`] recombination for both shard kinds.
+    #[test]
+    fn http_pool_matches_local_shards_bitwise() {
+        let dir = temp("pool");
+        let mut rng = Pcg::new(41, 0);
+        let qc = random_q(&mut rng, 20, 14, 4);
+        let qr = random_q(&mut rng, 24, 9, 4);
+        let acts = random_acts(&mut rng, 2, 20);
+        let shards = 2;
+        for (w, set) in two_op_sets(&qc, &qr, shards).into_iter()
+            .enumerate()
+        {
+            checkpoint::save_shard(&dir.join(format!("shard_{w}.bin")),
+                                   w, shards, "ssnorm_plain", &set)
+                .unwrap();
+        }
+        let workers: Vec<WorkerServer> = (0..shards)
+            .map(|w| {
+                let mut o = WorkerOpts::new(
+                    "127.0.0.1:0", w,
+                    ShardSource::File(
+                        dir.join(format!("shard_{w}.bin"))));
+                o.int_mode = IntMode::Scalar;
+                o.n_shards = shards;
+                WorkerServer::spawn(o).unwrap()
+            })
+            .collect();
+        wait_ready(&workers.iter().collect::<Vec<_>>());
+        let pool = HttpShardPool::new(
+            workers.iter().map(|w| w.addr().to_string()).collect());
+        let local = LocalShards::new(two_op_sets(&qc, &qr, shards),
+                                     Backend::Scalar);
+        assert_eq!(pool.col_stripes("L0.wq", &acts).unwrap(),
+                   local.col_stripes("L0.wq", &acts).unwrap());
+        let slices: Vec<QuantActs> = (0..shards)
+            .map(|w| {
+                let (k0, k1) = shard_range(24, shards, w);
+                crate::model::remote::slice_acts(
+                    &random_acts(&mut Pcg::new(42, 0), 2, 24), k0, k1)
+            })
+            .collect();
+        assert_eq!(pool.row_partials("L0.wo", &slices).unwrap(),
+                   local.row_partials("L0.wo", &slices).unwrap());
+        // Conservation: every pool success was served by a worker.
+        let served: u64 = workers.iter()
+            .map(|w| w.ctl.metrics.rpcs_served.load(Relaxed))
+            .sum();
+        assert_eq!(pool.rpcs_ok.load(Relaxed), served);
+        assert_eq!(pool.rpcs_ok.load(Relaxed),
+                   pool.per_worker_ok.iter()
+                       .map(|c| c.load(Relaxed)).sum::<u64>());
+        for w in workers {
+            w.drain();
+            w.join();
+        }
+    }
+
+    #[test]
+    fn matmul_rejects_malformed_unknown_and_mismatched() {
+        let dir = temp("rej");
+        let mut rng = Pcg::new(43, 0);
+        let qc = random_q(&mut rng, 16, 10, 4);
+        let qr = random_q(&mut rng, 16, 6, 4);
+        let set = two_op_sets(&qc, &qr, 1).remove(0);
+        let path = dir.join("shard_0.bin");
+        checkpoint::save_shard(&path, 0, 1, "ssnorm_plain", &set)
+            .unwrap();
+        let mut o = WorkerOpts::new("127.0.0.1:0", 0,
+                                    ShardSource::File(path));
+        o.int_mode = IntMode::Scalar;
+        let w = WorkerServer::spawn(o).unwrap();
+        wait_ready(&[&w]);
+        let addr = w.addr().to_string();
+        let post = |body: &str| {
+            post_json(&addr, "/matmul", body,
+                      Duration::from_secs(5)).unwrap()
+        };
+        assert_eq!(post("{not json").0, 400);
+        let acts = random_acts(&mut rng, 1, 16);
+        let bad_op = matmul_body("L9.nope", "col", &acts);
+        assert_eq!(post(&bad_op).0, 400);
+        // Kind mismatch: L0.wo is row-parallel.
+        let bad_kind = matmul_body("L0.wo", "col", &acts);
+        assert_eq!(post(&bad_kind).0, 400);
+        // Wrong contraction depth.
+        let bad_k = matmul_body("L0.wq", "col",
+                                &random_acts(&mut rng, 1, 12));
+        assert_eq!(post(&bad_k).0, 400);
+        // And a well-formed request still works afterwards.
+        assert_eq!(post(&matmul_body("L0.wq", "col", &acts)).0, 200);
+        w.drain();
+        w.join();
+    }
+
+    // ---- fetch protocol tests ------------------------------------------
+
+    /// Bare listener serving `/shards/...` from a storage backend —
+    /// the coordinator's fetch surface without booting a model.
+    struct MiniShardServer {
+        addr: SocketAddr,
+        stop: Arc<AtomicBool>,
+        handle: Option<thread::JoinHandle<()>>,
+    }
+
+    impl MiniShardServer {
+        fn spawn(store: Arc<dyn StorageBackend>) -> MiniShardServer {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            listener.set_nonblocking(true).unwrap();
+            let addr = listener.local_addr().unwrap();
+            let stop = Arc::new(AtomicBool::new(false));
+            let stop2 = Arc::clone(&stop);
+            let handle = thread::spawn(move || loop {
+                if stop2.load(SeqCst) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok((mut stream, _)) => {
+                        let _ = stream.set_read_timeout(
+                            Some(Duration::from_secs(5)));
+                        if let Ok(req) =
+                            http::read_request(&mut stream, 1024)
+                        {
+                            let (st, ct, body) = shards_http_response(
+                                &req.path, &*store);
+                            let _ = http::write_response_bytes(
+                                &mut stream, st, &[], ct, &body);
+                        }
+                    }
+                    Err(_) => {
+                        thread::sleep(Duration::from_millis(2))
+                    }
+                }
+            });
+            MiniShardServer { addr, stop, handle: Some(handle) }
+        }
+
+        fn addr(&self) -> String {
+            self.addr.to_string()
+        }
+    }
+
+    impl Drop for MiniShardServer {
+        fn drop(&mut self) {
+            self.stop.store(true, SeqCst);
+            if let Some(h) = self.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+
+    /// A storage backend that corrupts one byte in transit — the
+    /// artifact on disk (and thus `meta`) stays honest, so only the
+    /// chunk checksum can catch it.
+    struct FlippingStore {
+        inner: LocalDir,
+        flip_at: usize,
+    }
+
+    impl StorageBackend for FlippingStore {
+        fn n_shards(&self) -> usize {
+            self.inner.n_shards()
+        }
+        fn meta(&self, shard: usize) -> Result<ShardMeta> {
+            self.inner.meta(shard)
+        }
+        fn read(&self, shard: usize, offset: usize, len: usize)
+                -> Result<Vec<u8>> {
+            let mut b = self.inner.read(shard, offset, len)?;
+            if (offset..offset + len).contains(&self.flip_at) {
+                b[self.flip_at - offset] ^= 1;
+            }
+            Ok(b)
+        }
+    }
+
+    /// Publish one multi-chunk artifact; returns (dir, total bytes).
+    fn publish_big(tag: &str) -> (PathBuf, usize) {
+        let dir = temp(tag);
+        let mut rng = Pcg::new(44, 0);
+        // ~148 KiB packed -> 3 chunks at 64 KiB.
+        let q = random_q(&mut rng, 768, 384, 4);
+        let qr = random_q(&mut rng, 16, 6, 4);
+        let set = two_op_sets(&q, &qr, 1).remove(0);
+        let path = dir.join("shard_0.bin");
+        checkpoint::save_shard(&path, 0, 1, "ssnorm_plain", &set)
+            .unwrap();
+        let blob = std::fs::read(&path).unwrap();
+        assert!(blob.len() > 2 * CHUNK_BYTES,
+                "artifact too small to exercise chunking: {}",
+                blob.len());
+        let total = blob.len();
+        storage::write_manifest(&dir, &Manifest {
+            shards: 1,
+            arch: "ssnorm_plain".into(),
+            files: vec![ManifestEntry { file: "shard_0.bin".into(),
+                                        bytes: total,
+                                        fnv: fnv64(&blob) }],
+        }).unwrap();
+        (dir, total)
+    }
+
+    /// Interrupted fetch resumes from the last verified chunk instead
+    /// of restarting (the satellite robustness contract).
+    #[test]
+    fn fetch_resumes_from_verified_chunks() {
+        let (dir, total) = publish_big("resume");
+        let store: Arc<dyn StorageBackend> =
+            Arc::new(LocalDir::open(&dir).unwrap());
+        let srv = MiniShardServer::spawn(store);
+        let spool = dir.join("spool.part");
+        let wm = WorkerMetrics::default();
+        // Budget for exactly one chunk: the fetch dies mid-way...
+        let err = fetch_shard(&srv.addr(), 0, &spool,
+                              Some(CHUNK_BYTES + 10), &wm)
+            .unwrap_err().to_string();
+        assert!(err.contains("interrupted"), "{err}");
+        let spooled = std::fs::read(&spool).unwrap().len();
+        assert_eq!(spooled, CHUNK_BYTES, "one verified chunk spooled");
+        // ...and the rerun picks up where it left off.
+        let wm2 = WorkerMetrics::default();
+        let (art, stats) =
+            fetch_shard(&srv.addr(), 0, &spool, None, &wm2).unwrap();
+        assert_eq!(stats.resumed_chunks, 1);
+        assert_eq!(stats.bytes_fetched as usize, total - CHUNK_BYTES);
+        assert_eq!(art.shard, 0);
+        assert_eq!(art.entries.len(), 2);
+    }
+
+    #[test]
+    fn fetch_rejects_corrupted_chunk_with_clean_error() {
+        let (dir, _total) = publish_big("corrupt");
+        let store: Arc<dyn StorageBackend> = Arc::new(FlippingStore {
+            inner: LocalDir::open(&dir).unwrap(),
+            flip_at: CHUNK_BYTES + 5, // inside chunk 1
+        });
+        let srv = MiniShardServer::spawn(store);
+        let spool = dir.join("spool.part");
+        let wm = WorkerMetrics::default();
+        let err = fetch_shard(&srv.addr(), 0, &spool, None, &wm)
+            .unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        // Chunk 0 (clean) was still spooled for a future resume.
+        assert_eq!(std::fs::read(&spool).unwrap().len(), CHUNK_BYTES);
+    }
+
+    /// A version-bumped artifact passes every checksum (the manifest
+    /// is rebuilt to match) but is rejected by the OSPS parser — the
+    /// version gate and the integrity gate are independent.
+    #[test]
+    fn fetch_rejects_version_mismatch_after_valid_transfer() {
+        let (dir, _total) = publish_big("version");
+        let path = dir.join("shard_0.bin");
+        let mut blob = std::fs::read(&path).unwrap();
+        blob[4] = 99; // version u32 LE lives right after the magic
+        std::fs::write(&path, &blob).unwrap();
+        storage::write_manifest(&dir, &Manifest {
+            shards: 1,
+            arch: "ssnorm_plain".into(),
+            files: vec![ManifestEntry { file: "shard_0.bin".into(),
+                                        bytes: blob.len(),
+                                        fnv: fnv64(&blob) }],
+        }).unwrap();
+        let store: Arc<dyn StorageBackend> =
+            Arc::new(LocalDir::open(&dir).unwrap());
+        let srv = MiniShardServer::spawn(store);
+        let wm = WorkerMetrics::default();
+        let err = fetch_shard(&srv.addr(), 0, &dir.join("spool.part"),
+                              None, &wm)
+            .unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn shards_endpoint_rejects_bad_paths_and_ranges() {
+        let (dir, total) = publish_big("paths");
+        let store = LocalDir::open(&dir).unwrap();
+        let code = |p: &str| shards_http_response(p, &store).0;
+        assert_eq!(code("/shards/0/meta"), 200);
+        assert_eq!(code("/shards/1/meta"), 404);
+        assert_eq!(code("/shards/x/meta"), 404);
+        assert_eq!(code("/shards/0/nope"), 404);
+        assert_eq!(code("/shards/0/data?off=0&len=16"), 200);
+        assert_eq!(code("/shards/0/data?off=0"), 400);
+        assert_eq!(code("/shards/0/data?off=0&len=0"), 400);
+        assert_eq!(
+            code(&format!("/shards/0/data?off={total}&len=1")), 400);
+    }
+}

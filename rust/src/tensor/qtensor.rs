@@ -735,6 +735,76 @@ impl QTensor {
         }
         c
     }
+
+    // ---- row-parallel shard views (DESIGN.md §14) -------------------------
+
+    /// Output-column shard `[j0, j1)` of a packed `[in, out]` weight:
+    /// the codes of those columns repacked into a self-contained
+    /// QTensor whose per-column scales are exactly `scales[j0..j1]`.
+    /// Running [`Self::qmatmul_rhs_int_with`] on every shard and
+    /// concatenating the column stripes in ascending `j0` order is
+    /// bit-identical to running it on the full tensor — the kernel
+    /// already partitions by column stripe internally, so a shard
+    /// boundary is just a stripe boundary that happens to live in
+    /// another process.
+    pub fn shard_cols(&self, j0: usize, j1: usize) -> QTensor {
+        assert!(self.is_packed(), "shard_cols needs packed storage");
+        assert!(j0 < j1 && j1 <= self.cols(),
+                "shard_cols [{j0}, {j1}) of {} columns", self.cols());
+        let (rows, jw) = (self.rows(), j1 - j0);
+        let mut codes = Vec::with_capacity(rows * jw);
+        for i in 0..rows {
+            for j in j0..j1 {
+                codes.push(self.code_at(i, j));
+            }
+        }
+        QTensor::pack(&[rows, jw], self.bits, &codes,
+                      self.scales[j0..j1].to_vec())
+    }
+
+    /// Contraction-row shard `[k0, k1)` of a packed `[in, out]` weight:
+    /// those input rows repacked with the *full* per-output-column
+    /// scale vector, so the shard stays self-describing. Summing the
+    /// exact i32 partials of [`Self::accumulate_int`] over all shards
+    /// (any order — integer addition is associative) and rescaling the
+    /// total once by `act_scale * scales[j]` is bit-identical to the
+    /// unsharded [`Self::qmatmul_rhs_int_with`], which is why the
+    /// reduction weights (wo / w_down) can split across workers without
+    /// breaking stream parity (DESIGN.md §14).
+    pub fn shard_rows(&self, k0: usize, k1: usize) -> QTensor {
+        assert!(self.is_packed(), "shard_rows needs packed storage");
+        assert!(k0 < k1 && k1 <= self.rows(),
+                "shard_rows [{k0}, {k1}) of {} rows", self.rows());
+        let (cols, kw) = (self.cols(), k1 - k0);
+        let mut codes = Vec::with_capacity(kw * cols);
+        for i in k0..k1 {
+            for j in 0..cols {
+                codes.push(self.code_at(i, j));
+            }
+        }
+        QTensor::pack(&[kw, cols], self.bits, &codes, self.scales.clone())
+    }
+
+    /// Full-width exact i32 accumulation: `acc[r][j] += Σ_k
+    /// act_code[r][k] * weight_code[k][j]` over every output column.
+    /// This is the worker-side partial of the row-parallel reduction —
+    /// no scales are applied, so partials from different shards can be
+    /// summed exactly before the single rescale. `acc` is `[m, n]`
+    /// row-major and is accumulated into, not overwritten. Packed
+    /// storage only.
+    pub fn accumulate_int(&self, acts: &intkern::QuantActs,
+                          backend: intkern::Backend, acc: &mut [i32]) {
+        let (m, k) = (acts.m(), acts.k());
+        let (k2, n) = (self.rows(), self.cols());
+        assert_eq!(k, k2, "accumulate_int [{m}, {k}] @ {:?}", self.shape);
+        assert_eq!(acc.len(), m * n, "acc len vs [{m}, {n}]");
+        let QStorage::Packed(bytes) = &self.storage else {
+            panic!("accumulate_int needs packed storage");
+        };
+        let (stride, sbits) = (row_stride(n, self.bits), self.sbits());
+        intkern::accumulate_stripe(bytes, stride, sbits, k, 0, n, acts,
+                                   backend, acc);
+    }
 }
 
 /// Bytes per packed row: columns padded up to a whole byte so every row
@@ -912,6 +982,123 @@ mod tests {
                 assert_eq!(q.qmatmul_with(None, &b).data(),
                            q.qmatmul_scalar(&b).data(),
                            "{bits}b {m}x{k} matmul");
+            }
+        }
+    }
+
+    fn random_acts(rng: &mut Pcg, m: usize, k: usize)
+                   -> intkern::QuantActs {
+        let codes: Vec<i8> = (0..m * k)
+            .map(|_| (rng.below(16) as i64 - 8) as i8)
+            .collect();
+        let scales: Vec<f32> =
+            (0..m).map(|r| 0.02 + 0.01 * r as f32).collect();
+        intkern::QuantActs::from_parts(codes, scales, m, k)
+    }
+
+    /// Column shards recombine bitwise: concatenating the int-kernel
+    /// output stripes of `shard_cols` pieces (ascending j0) equals the
+    /// unsharded kernel exactly, for any shard count (DESIGN.md §14).
+    #[test]
+    fn col_shards_concat_bitwise_to_full_int_matmul() {
+        let mut rng = Pcg::new(21, 0);
+        for bits in [4u32, 8] {
+            let (m, k, n) = (3, 19, 23);
+            let codes = random_codes(&mut rng, k * n, bits);
+            let scales: Vec<f32> =
+                (0..n).map(|j| 0.1 + 0.02 * j as f32).collect();
+            let q = QTensor::pack(&[k, n], bits, &codes, scales);
+            let acts = random_acts(&mut rng, m, k);
+            let be = intkern::Backend::Scalar;
+            let full = q.qmatmul_rhs_int_with(None, &acts, be);
+            for shards in [1usize, 2, 4] {
+                let mut got = Tensor::zeros(&[m, n]);
+                for s in 0..shards {
+                    let (j0, j1) =
+                        ((n * s) / shards, (n * (s + 1)) / shards);
+                    let jw = j1 - j0;
+                    let part = q.shard_cols(j0, j1)
+                        .qmatmul_rhs_int_with(None, &acts, be);
+                    for r in 0..m {
+                        got.data_mut()[r * n + j0..r * n + j1]
+                            .copy_from_slice(
+                                &part.data()[r * jw..(r + 1) * jw]);
+                    }
+                }
+                assert_eq!(full.data(), got.data(),
+                           "{bits}b x{shards} shards");
+            }
+        }
+    }
+
+    /// Row shards recombine bitwise: exact i32 partials from
+    /// `accumulate_int` over `shard_rows` pieces sum (any shard count)
+    /// to the full-contraction accumulator, and one rescale of that
+    /// total reproduces the unsharded kernel output exactly — the §14
+    /// reduction-weight invariant.
+    #[test]
+    fn row_shard_partials_sum_bitwise_to_full_int_matmul() {
+        let mut rng = Pcg::new(22, 0);
+        let (m, k, n) = (2, 24, 9);
+        let codes = random_codes(&mut rng, k * n, 4);
+        let scales: Vec<f32> =
+            (0..n).map(|j| 0.2 + 0.05 * j as f32).collect();
+        let q = QTensor::pack(&[k, n], 4, &codes, scales);
+        let acts = random_acts(&mut rng, m, k);
+        let be = intkern::Backend::Scalar;
+        let full = q.qmatmul_rhs_int_with(None, &acts, be);
+        for shards in [1usize, 2, 3] {
+            let mut acc = vec![0i32; m * n];
+            for s in 0..shards {
+                let (k0, k1) = ((k * s) / shards, (k * (s + 1)) / shards);
+                let shard = q.shard_rows(k0, k1);
+                let mut sc = Vec::with_capacity(m * (k1 - k0));
+                for r in 0..m {
+                    sc.extend_from_slice(&acts.row_codes(r)[k0..k1]);
+                }
+                let sacts = intkern::QuantActs::from_parts(
+                    sc, (0..m).map(|r| acts.scale(r)).collect(), m,
+                    k1 - k0);
+                let mut part = vec![0i32; m * n];
+                shard.accumulate_int(&sacts, be, &mut part);
+                for (a, p) in acc.iter_mut().zip(&part) {
+                    *a += p;
+                }
+            }
+            let mut got = vec![0.0f32; m * n];
+            for r in 0..m {
+                let sa = acts.scale(r);
+                for j in 0..n {
+                    got[r * n + j] =
+                        acc[r * n + j] as f32 * (sa * q.scales()[j]);
+                }
+            }
+            assert_eq!(full.data(), &got[..], "x{shards} shards");
+        }
+    }
+
+    #[test]
+    fn shard_views_carry_their_scales() {
+        let mut rng = Pcg::new(23, 0);
+        let (k, n) = (6, 10);
+        let codes = random_codes(&mut rng, k * n, 4);
+        let scales: Vec<f32> =
+            (0..n).map(|j| 1.0 + j as f32).collect();
+        let q = QTensor::pack(&[k, n], 4, &codes, scales.clone());
+        let c = q.shard_cols(3, 7);
+        assert_eq!(c.shape(), &[k, 4]);
+        assert_eq!(c.scales(), &scales[3..7]);
+        for i in 0..k {
+            for j in 0..4 {
+                assert_eq!(c.code_at(i, j), q.code_at(i, 3 + j));
+            }
+        }
+        let r = q.shard_rows(2, 5);
+        assert_eq!(r.shape(), &[3, n]);
+        assert_eq!(r.scales(), &scales[..]);
+        for i in 0..3 {
+            for j in 0..n {
+                assert_eq!(r.code_at(i, j), q.code_at(2 + i, j));
             }
         }
     }

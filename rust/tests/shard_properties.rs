@@ -1,0 +1,343 @@
+//! Row-parallel sharded serving contract (DESIGN.md §14, ISSUE 9
+//! acceptance): a sharded decode — trunk matmuls split across worker
+//! shards, col stripes concatenated and row partials summed in i32 on
+//! the coordinator — produces token streams bit-identical to the
+//! single-process integer path for any shard count. Pinned here as a
+//! property over the {1, 2, 4} shards x W{4,8} x KV{4,16} matrix via
+//! in-process [`LocalShards`], and end-to-end over HTTP with real
+//! worker processes that fetch their artifacts (checksummed, chunked)
+//! from the coordinator's `/shards` endpoints.
+//!
+//! All servers bind 127.0.0.1:0 (ephemeral ports), so the suite can
+//! run in parallel with itself and with CI neighbors.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use osp::coordinator::shard::write_shards;
+use osp::infer::{engine as decode, DecodeParams, InferConfig,
+                 InferModel};
+use osp::model::remote::LocalShards;
+use osp::serve::http::ClientConn;
+use osp::serve::load;
+use osp::serve::worker::{ShardSource, WorkerOpts, WorkerServer};
+use osp::serve::{ServeOpts, Server};
+use osp::tensor::intkern::{Backend, IntMode};
+use osp::tensor::par;
+use osp::util::json::Json;
+
+fn tiny_cfg() -> InferConfig {
+    InferConfig { vocab_size: 96, d_model: 32, n_layers: 2, n_heads: 2,
+                  d_ff: 40, rope_theta: 10000.0, norm_ss: true,
+                  embproj: false }
+}
+
+/// One well-behaved streamed /generate exchange: returns the token
+/// stream when the request completes.
+fn gen_stream(addr: &str, prompt: &[i32], max_new: usize)
+              -> Result<(u16, Vec<i64>, Option<String>), String> {
+    let stream =
+        TcpStream::connect(addr).map_err(|e| e.to_string())?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .map_err(|e| e.to_string())?;
+    stream.set_nodelay(true).ok();
+    let mut conn = ClientConn::new(stream);
+    let body = format!(
+        "{{\"prompt\":{prompt:?},\"max_new\":{max_new},\
+         \"timeout_ms\":30000}}");
+    conn.send_request("POST", "/generate", &body)
+        .map_err(|e| e.to_string())?;
+    let (status, _headers) =
+        conn.read_head().map_err(|e| e.to_string())?;
+    let mut tokens = Vec::new();
+    let mut terminal = None;
+    if status != 200 {
+        return Ok((status, tokens, terminal));
+    }
+    loop {
+        let Some(line) =
+            conn.next_chunk().map_err(|e| e.to_string())?
+        else {
+            return Ok((status, tokens, terminal));
+        };
+        let ev = Json::parse(line.trim()).map_err(|e| {
+            format!("bad event '{line}': {e}")
+        })?;
+        if let Some(t) = ev.get("token").and_then(|v| v.as_f64()) {
+            tokens.push(t as i64);
+        } else if ev.get("done").is_some() {
+            terminal = Some("done".into());
+        } else if let Some(e) =
+            ev.get("error").and_then(|v| v.as_str())
+        {
+            terminal = Some(e.to_string());
+        }
+    }
+}
+
+/// The standing invariant, as a matrix: sharded decode streams are
+/// bit-identical to the single-process scalar-integer streams for
+/// shard counts {1, 2, 4} at W{4,8} x KV{4,16} (A4 throughout — the
+/// sharded path requires the integer kernels, DESIGN.md §14).
+#[test]
+fn sharded_streams_bit_identical_across_matrix() {
+    let cfg = tiny_cfg();
+    let dense = InferModel::synthetic(&cfg, 29);
+    let prompts: Vec<Vec<i32>> =
+        (0..3).map(|i| vec![2 + i, 5, 7 + i, 11]).collect();
+    let pool = par::shared_pool();
+    for &w in &[4u32, 8] {
+        for &kv in &[4u32, 16] {
+            let params = DecodeParams::greedy(4, kv, prompts.len());
+            let mut local = dense.quantized(w);
+            local.set_int_mode(IntMode::Scalar);
+            let want = decode::generate(&local, &prompts, 10, params,
+                                        pool)
+                .expect("local decode");
+            for &s in &[1usize, 2, 4] {
+                let mut m = dense.quantized(w);
+                m.set_int_mode(IntMode::Scalar);
+                let sets = m.extract_shard_sets(s)
+                    .expect("extract shard sets");
+                m.shard_remote(Arc::new(LocalShards::new(
+                    sets, Backend::Scalar)))
+                    .expect("shard_remote");
+                assert_eq!(m.remote_workers(), s);
+                let got = decode::generate(&m, &prompts, 10, params,
+                                           pool)
+                    .expect("sharded decode");
+                assert_eq!(
+                    got, want,
+                    "streams diverged at shards={s} W{w} KV{kv}");
+            }
+        }
+    }
+}
+
+/// End-to-end over HTTP: `osp shard` artifacts on disk, two worker
+/// servers that fetch them (checksummed, chunked, resumable) from the
+/// coordinator's `/shards` endpoints, a coordinator routing trunk
+/// matmuls to the fleet — token streams bit-identical to a
+/// single-process server over the same model, per-worker gauges live
+/// on `/status`, rpc counters conserved, and a coordinator drain
+/// propagates to the fleet with zero stripes in flight.
+#[test]
+fn http_sharded_serve_streams_match_single_process() {
+    let cfg = tiny_cfg();
+    let dir = std::env::temp_dir().join("osp_shard_props_e2e");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("mkdir");
+
+    let published = InferModel::synthetic(&cfg, 53).quantized(4);
+    write_shards(&published, 2, "ssnorm_plain", &dir)
+        .expect("write shards");
+
+    // Reserve two ephemeral worker ports, then release them: the
+    // coordinator needs the fleet's addresses at spawn, while the
+    // workers need the coordinator's address to fetch from. (Both
+    // listeners are held until the addresses are read so the two
+    // reservations cannot collide.)
+    let l0 = TcpListener::bind("127.0.0.1:0").expect("reserve 0");
+    let l1 = TcpListener::bind("127.0.0.1:0").expect("reserve 1");
+    let wa0 = l0.local_addr().expect("addr 0").to_string();
+    let wa1 = l1.local_addr().expect("addr 1").to_string();
+    drop(l0);
+    drop(l1);
+
+    let mut cm = InferModel::synthetic(&cfg, 53).quantized(4);
+    cm.set_int_mode(IntMode::Scalar);
+    let server = Server::spawn(cm, ServeOpts {
+        addr: "127.0.0.1:0".into(),
+        workers: vec![wa0.clone(), wa1.clone()],
+        shard_dir: dir.to_string_lossy().into_owned(),
+        ..ServeOpts::default()
+    })
+    .expect("spawn coordinator");
+    let addr = server.addr().to_string();
+
+    let spawn_worker = |shard: usize, waddr: &str| {
+        WorkerServer::spawn(WorkerOpts {
+            addr: waddr.into(),
+            n_shards: 2,
+            int_mode: IntMode::Scalar,
+            ..WorkerOpts::new("", shard, ShardSource::Fetch {
+                coordinator: addr.clone(),
+                spool: dir.join(format!("spool_{shard}.part")),
+                byte_budget: None,
+            })
+        })
+        .expect("spawn worker")
+    };
+    let w0 = spawn_worker(0, &wa0);
+    let w1 = spawn_worker(1, &wa1);
+
+    // The coordinator's /healthz flips ready once every worker has
+    // fetched, verified, and published its shard.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (st, h) =
+            load::http_get(&addr, "/healthz").expect("healthz");
+        assert_eq!(st, 200);
+        if h.get("ready").and_then(|v| v.as_bool()) == Some(true) {
+            break;
+        }
+        assert!(Instant::now() < deadline,
+                "fleet never became ready: {} (w0 err {:?}, w1 err \
+                 {:?})",
+                h.dump(), w0.load_error(), w1.load_error());
+        thread::sleep(Duration::from_millis(50));
+    }
+
+    let probes: Vec<Vec<i32>> =
+        (0..4).map(|i| vec![1 + i, 2 + i, 3, 5]).collect();
+
+    // Single-process baseline over the identical model, on the same
+    // scalar-integer path the sharded trunk recombines bitwise.
+    let baseline: Vec<Vec<i64>> = {
+        let mut bm = InferModel::synthetic(&cfg, 53).quantized(4);
+        bm.set_int_mode(IntMode::Scalar);
+        let bs = Server::spawn(bm, ServeOpts {
+            addr: "127.0.0.1:0".into(),
+            ..ServeOpts::default()
+        })
+        .expect("baseline server");
+        let baddr = bs.addr().to_string();
+        let streams = probes
+            .iter()
+            .map(|p| {
+                let (st, tokens, term) =
+                    gen_stream(&baddr, p, 8).expect("probe");
+                assert_eq!(st, 200);
+                assert_eq!(term.as_deref(), Some("done"));
+                tokens
+            })
+            .collect();
+        bs.drain();
+        bs.join();
+        streams
+    };
+
+    let got: Vec<Vec<i64>> = probes
+        .iter()
+        .map(|p| {
+            let (st, tokens, term) =
+                gen_stream(&addr, p, 8).expect("sharded probe");
+            assert_eq!(st, 200);
+            assert_eq!(term.as_deref(), Some("done"));
+            tokens
+        })
+        .collect();
+    assert_eq!(got, baseline,
+               "sharded streams diverged from single-process");
+
+    // Per-worker gauges on /status, the ISSUE 9 memory contract, and
+    // rpc conservation: every pool-side success was served by exactly
+    // one worker.
+    let (st, status) =
+        load::http_get(&addr, "/status").expect("status");
+    assert_eq!(st, 200);
+    let f = |k: &str| status.get(k).and_then(|v| v.as_f64());
+    assert_eq!(f("workers"), Some(2.0), "{}", status.dump());
+    assert_eq!(f("shards"), Some(2.0), "{}", status.dump());
+    let full = f("weight_bytes_full").expect("weight_bytes_full");
+    assert_eq!(full, published.weight_bytes() as f64);
+    let coord = f("weight_bytes_coord").expect("weight_bytes_coord");
+    assert!(coord < full,
+            "sharding freed no coordinator weight bytes: {coord} vs \
+             {full}");
+    let ws = status
+        .get("worker_status")
+        .and_then(|v| v.as_arr())
+        .expect("worker_status")
+        .clone();
+    assert_eq!(ws.len(), 2);
+    let mut served_sum = 0.0;
+    let mut max_wb: f64 = 0.0;
+    for w in &ws {
+        let wf = |k: &str| {
+            w.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0)
+        };
+        assert_eq!(w.get("ready").and_then(|v| v.as_bool()),
+                   Some(true), "{}", w.dump());
+        assert!(wf("bytes_fetched") > 0.0,
+                "worker fetched nothing: {}", w.dump());
+        assert_eq!(wf("chunks_done"), wf("chunks_total"), "{}",
+                   w.dump());
+        served_sum += wf("rpcs_served");
+        max_wb = max_wb.max(wf("weight_bytes"));
+    }
+    // Each worker holds at most ~55% of the full model's weight
+    // bytes at 2 shards (the trunk halves; dense embed/norms stay
+    // coordinator-side and are not duplicated onto workers).
+    assert!(max_wb > 0.0 && max_wb <= 0.55 * full,
+            "per-worker peak {max_wb} vs full model {full}");
+    let pool_ok = status
+        .get("shard_pool")
+        .and_then(|p| p.get("rpcs_ok"))
+        .and_then(|v| v.as_f64())
+        .expect("shard_pool.rpcs_ok");
+    assert!(pool_ok > 0.0, "{}", status.dump());
+    assert_eq!(pool_ok, served_sum,
+               "rpc conservation violated: {}", status.dump());
+
+    // Drain the coordinator; it propagates the drain to the fleet.
+    let (st, _) =
+        load::http_post(&addr, "/admin/drain", "").expect("drain");
+    assert_eq!(st, 200);
+    server.join();
+    let wait_done = |w: &WorkerServer, tag: &str| {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !w.is_done() {
+            assert!(Instant::now() < deadline,
+                    "{tag} never saw the propagated drain");
+            thread::sleep(Duration::from_millis(20));
+        }
+    };
+    wait_done(&w0, "worker 0");
+    wait_done(&w1, "worker 1");
+    assert_eq!(w0.load_error(), None);
+    assert_eq!(w1.load_error(), None);
+    w0.join();
+    w1.join();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Spawn-time validation: a fleet whose size disagrees with the shard
+/// cut is rejected, and so is the f32 path (partial f32 sums cannot
+/// recombine bit-exactly — the invariant demands integer kernels).
+#[test]
+fn coordinator_spawn_validates_fleet_and_kernel_path() {
+    let cfg = tiny_cfg();
+    let dir = std::env::temp_dir().join("osp_shard_props_reject");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("mkdir");
+    let model = InferModel::synthetic(&cfg, 7).quantized(4);
+    write_shards(&model, 2, "ssnorm_plain", &dir).expect("shards");
+    let sopts = |workers: Vec<String>| ServeOpts {
+        addr: "127.0.0.1:0".into(),
+        workers,
+        shard_dir: dir.to_string_lossy().into_owned(),
+        ..ServeOpts::default()
+    };
+
+    // Fleet size must match what the shard dir was cut for.
+    let mut m = InferModel::synthetic(&cfg, 7).quantized(4);
+    m.set_int_mode(IntMode::Scalar);
+    let err = Server::spawn(m, sopts(vec!["127.0.0.1:1".into()]))
+        .err()
+        .expect("mismatched fleet accepted");
+    assert!(format!("{err:#}").contains("workers"), "{err:#}");
+
+    // Integer kernels are mandatory for sharded serving.
+    let mut m = InferModel::synthetic(&cfg, 7).quantized(4);
+    m.set_int_mode(IntMode::Off);
+    let err = Server::spawn(
+        m, sopts(vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()]))
+        .err()
+        .expect("f32 sharded serve accepted");
+    assert!(format!("{err:#}").contains("integer"), "{err:#}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
