@@ -30,11 +30,14 @@ use crate::util::json::Json;
 /// layouts must not be diffed against each other. `workers`/`shards`
 /// key the row-parallel sharded serve rows (DESIGN.md §14): a 2-worker
 /// run pays rpc latency a single-process run does not, so the two are
-/// different experiments, never regression candidates.
-const IDENTITY_FIELDS: [&str; 17] = [
+/// different experiments, never regression candidates. `replicas`
+/// joins them (DESIGN.md §15): a replicated fleet buys failover with
+/// extra rpc fan-in, so its latencies are not comparable to an
+/// unreplicated run's.
+const IDENTITY_FIELDS: [&str; 18] = [
     "op", "phase", "config", "size", "w_bits", "a_bits", "kv_bits", "bits",
     "batch", "chunk", "prompt_len", "clients", "chaos", "kv_page_rows",
-    "share_prefix", "workers", "shards",
+    "share_prefix", "workers", "shards", "replicas",
 ];
 
 /// Lower-is-better metrics: `*_ns_op` kernel timings and the serve
@@ -386,6 +389,15 @@ mod tests {
     fn sharded_rows_key_on_workers_and_diff_fetch_metrics() {
         assert!(IDENTITY_FIELDS.contains(&"workers"));
         assert!(IDENTITY_FIELDS.contains(&"shards"));
+        // §15: replication factor splits identity too, while the
+        // failover counters stay context-only (never "regressions").
+        assert!(IDENTITY_FIELDS.contains(&"replicas"));
+        for counter in ["failovers", "breaker_trips", "rejoins"] {
+            assert!(!is_time_metric(counter)
+                    && !is_rate_metric(counter)
+                    && !is_mem_metric(counter),
+                    "{counter} must not diff as a metric");
+        }
         assert!(is_time_metric("fetch_ms"));
         assert!(is_mem_metric("bytes_streamed"));
         assert!(is_mem_metric("worker_weight_bytes_max"));

@@ -23,6 +23,30 @@ pub struct ShardReport {
     pub bytes: Vec<usize>,
 }
 
+/// Replica placement for a possibly-replicated fleet (DESIGN.md §15):
+/// worker `w` serves shard `w % n_shards`, so `--workers a,b,c` with 2
+/// shards covers shard 0 twice (workers 0 and 2) and shard 1 once.
+/// Round-robin keeps the `--replicas 1` layout identical to the PR-9
+/// one-worker-per-shard fleet and spreads extra replicas evenly.
+pub fn replica_assignment(n_workers: usize, n_shards: usize)
+                          -> Vec<usize> {
+    assert!(n_shards > 0, "replica_assignment with zero shards");
+    (0..n_workers).map(|w| w % n_shards).collect()
+}
+
+/// Worker indices per shard under [`replica_assignment`], in placement
+/// order (the first entry is the shard's primary).
+pub fn replicas_of(n_workers: usize, n_shards: usize)
+                   -> Vec<Vec<usize>> {
+    let mut groups = vec![Vec::new(); n_shards];
+    for (w, &s) in replica_assignment(n_workers, n_shards).iter()
+        .enumerate()
+    {
+        groups[s].push(w);
+    }
+    groups
+}
+
 /// Partition `model`'s trunk into `shards` row/col slices and publish
 /// them under `dir` (created if absent) with a manifest. The model is
 /// left untouched — publication is a pure read.
@@ -95,6 +119,31 @@ mod tests {
             assert!(art.entries.iter().any(|e| {
                 e.name == "L0.wo" && e.kind == ShardKind::Row
             }));
+        }
+    }
+
+    #[test]
+    fn replica_assignment_covers_every_shard_evenly() {
+        // replicas = 1: the PR-9 layout, worker w <-> shard w.
+        assert_eq!(replica_assignment(2, 2), vec![0, 1]);
+        // The CI failover fleet: 3 workers over 2 shards.
+        assert_eq!(replica_assignment(3, 2), vec![0, 1, 0]);
+        assert_eq!(replicas_of(3, 2), vec![vec![0, 2], vec![1]]);
+        // Full duplication.
+        assert_eq!(replicas_of(4, 2), vec![vec![0, 2], vec![1, 3]]);
+        // Every shard covered, group sizes within 1 of each other.
+        for (nw, ns) in [(2, 2), (3, 2), (5, 3), (8, 3)] {
+            let groups = replicas_of(nw, ns);
+            assert_eq!(groups.len(), ns);
+            let (mut lo, mut hi) = (usize::MAX, 0);
+            for g in &groups {
+                assert!(!g.is_empty(), "{nw}/{ns}: uncovered shard");
+                lo = lo.min(g.len());
+                hi = hi.max(g.len());
+            }
+            assert!(hi - lo <= 1, "{nw}/{ns}: uneven groups");
+            let total: usize = groups.iter().map(Vec::len).sum();
+            assert_eq!(total, nw);
         }
     }
 

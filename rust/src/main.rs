@@ -12,6 +12,7 @@
 //!   shard      partition a packed model into per-worker artifacts
 //!   worker     row-parallel shard worker for a sharded serve
 //!   serve-load chaos-capable load generator against a running serve
+//!   chaos-proxy  fleet-fault TCP proxy in front of one shard worker
 //!   serve-bench  decode + chunked-prefill throughput sweeps
 //!   bench-diff  per-row speedup diff of two bench JSON artifacts
 //!   simd-info  detected CPU features + integer-kernel backend
@@ -114,9 +115,20 @@ USAGE: osp <subcommand> [flags]
              [--workers A:P1,A:P2]   row-parallel sharded mode: route
                                      trunk matmuls to these osp worker
                                      processes (token streams stay
-                                     bit-identical to single-process)
+                                     bit-identical to single-process;
+                                     worker w serves shard
+                                     w % n_shards)
              [--shard-dir DIR]       osp shard output served to the
                                      workers over GET /shards/...
+             [--replicas N]          shard replication factor: with
+                                     N >= 2 live replicas per shard
+                                     the fleet survives any single
+                                     worker failure mid-decode
+             [--probe-interval-ms N] health prober cadence
+                                     (default 150)
+             [--down-after N]        consecutive failures before a
+                                     worker's breaker trips
+                                     (default 3)
   shard      partition a packed model into per-worker row/col shard
              artifacts + manifest.json for sharded serving
              --packed FILE | --ckpt DIR | --synthetic  (as generate)
@@ -143,10 +155,20 @@ USAGE: osp <subcommand> [flags]
              [--chaos SPEC]          off|default|[preset,]k=v,... with
                                      keys abort/delay/oversize/malformed/
                                      slowloris/tiny_deadline (probs),
-                                     seed/delay_ms/hold_ms
+                                     seed/delay_ms/hold_ms, plus fleet
+                                     faults worker-kill=k (drop the
+                                     proxied worker after k completed
+                                     requests, revive hold_ms later)
+                                     and worker-stall-ms=t
+             [--proxy HOST:PORT]     chaos-proxy control address the
+                                     fleet faults are driven through
              [--json [FILE]]         write BENCH_serve.json (diffable
                                      with osp bench-diff)
              [--drain true]          POST /admin/drain afterwards
+  chaos-proxy  byte-transparent fault-injection proxy for one worker
+             --target HOST:PORT [--listen HOST:PORT (default
+             127.0.0.1:0)]; control via POST /chaos/kill,
+             /chaos/revive, /chaos/stall?ms=N, GET /chaos/ping
   serve-bench  sustained decode + chunked-prefill throughput on a
              synthetic model across the Table-2 bit configs
              [--batches 1,8,32] [--prompt-len N] [--max-new N]
@@ -889,12 +911,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .filter(|w| !w.is_empty())
             .collect(),
         shard_dir: args.str_or("shard-dir", &defaults.shard_dir),
+        replicas: args.usize_or("replicas", defaults.replicas).max(1),
+        probe_interval_ms: args
+            .u64_or("probe-interval-ms", defaults.probe_interval_ms)
+            .max(10),
+        down_after: args
+            .u64_or("down-after", defaults.down_after as u64)
+            .max(1) as u32,
     };
     let n_workers = opts.workers.len();
+    let replicas = opts.replicas;
     let server = Server::spawn(model, opts)?;
     if n_workers > 0 {
         println!("sharded: trunk matmuls routed to {n_workers} \
-                  worker(s); GET /shards serves their artifacts");
+                  worker(s) at --replicas {replicas}; GET /shards \
+                  serves their artifacts");
     }
     println!(
         "osp serve listening on {} (max_batch {}, queue_cap {}; \
@@ -999,8 +1030,14 @@ fn cmd_serve_load(args: &Args) -> Result<()> {
             .max(1),
         chaos: ChaosSpec::parse(&chaos_label)?,
         chaos_label: chaos_label.clone(),
+        proxy: args.str_or("proxy", ""),
         seed: args.u64_or("seed", 7),
     };
+    if opts.chaos.has_fleet_faults() && opts.proxy.is_empty() {
+        bail!("chaos spec '{chaos_label}' has fleet faults \
+               (worker-kill / worker-stall-ms) but no --proxy \
+               HOST:PORT to drive them through");
+    }
     let doc = serve_load::run_load(&opts)?;
     let row = doc
         .get("rows")
@@ -1030,6 +1067,13 @@ fn cmd_serve_load(args: &Args) -> Result<()> {
          saved by prefix sharing, {:.0} live at scrape",
         f("kv_bytes_peak"), f("kv_pages_peak"), f("kv_pages_shared"),
         f("kv_pages_live"));
+    if f("replicas") >= 2.0 || f("failovers") > 0.0 {
+        println!(
+            "fleet: {:.0} failover(s), {:.0} breaker trip(s), {:.0} \
+             rejoin(s), {:.0} uncovered 503(s)",
+            f("failovers"), f("breaker_trips"), f("rejoins"),
+            f("server_uncovered_503s"));
+    }
     if let Some(j) = args.get("json") {
         let path = if j == "true" { "BENCH_serve.json" } else { j };
         std::fs::write(path, doc.dump())
@@ -1042,6 +1086,28 @@ fn cmd_serve_load(args: &Args) -> Result<()> {
         println!("drain requested ({status})");
     }
     Ok(())
+}
+
+/// `osp chaos-proxy`: stand-alone fleet-fault TCP proxy for one shard
+/// worker (DESIGN.md §15). Put it between the coordinator and a worker
+/// (`--workers` lists the proxy's address), then drive faults over its
+/// control surface — by hand with curl, or from `osp serve-load
+/// --proxy` via the `worker-kill`/`worker-stall-ms` chaos keys. Runs
+/// until killed.
+fn cmd_chaos_proxy(args: &Args) -> Result<()> {
+    let listen = args.str_or("listen", "127.0.0.1:0");
+    let target = args.get("target").ok_or_else(|| {
+        anyhow!("chaos-proxy needs --target HOST:PORT")
+    })?;
+    let proxy = osp::serve::chaos::ChaosProxy::spawn(&listen, target)?;
+    println!(
+        "osp chaos-proxy forwarding {} -> {target} (POST \
+         /chaos/kill, /chaos/revive, /chaos/stall?ms=N; GET \
+         /chaos/ping)",
+        proxy.addr());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
 }
 
 /// `osp simd-info`: one line naming the host arch, the CPU features the
@@ -1077,6 +1143,7 @@ fn main() {
         Some("shard") => cmd_shard(&args),
         Some("worker") => cmd_worker(&args),
         Some("serve-load") => cmd_serve_load(&args),
+        Some("chaos-proxy") => cmd_chaos_proxy(&args),
         Some("serve-bench") => cmd_serve_bench(&args),
         Some("bench-diff") => cmd_bench_diff(&args),
         Some("simd-info") => cmd_simd_info(&args),

@@ -152,21 +152,24 @@ impl Linear {
     /// write-back), so routing never changes which values are consumed.
     /// Remote leaves accept only the tap path — their codes live on
     /// workers that speak i8, and the spawn-time validation guarantees
-    /// every trunk tap is live before a remote model serves.
+    /// every trunk tap is live before a remote model serves. Remote
+    /// transport failure is the only `Err` — local paths are
+    /// infallible — and it propagates through `forward_block` to the
+    /// serve loop's step-error boundary (DESIGN.md §15).
     fn matmul_tap(&self, pool: Option<&ThreadPool>, a: &Tensor,
-                  tap: Option<&(QuantActs, Backend)>) -> Tensor {
+                  tap: Option<&(QuantActs, Backend)>) -> Result<Tensor> {
         match (self, tap) {
             (Linear::Remote(r), Some((acts, _be))) => {
                 return r.matmul_int(acts);
             }
             (Linear::Packed(q), Some((acts, be))) => {
                 if q.is_packed() {
-                    return q.qmatmul_rhs_int_with(pool, acts, *be);
+                    return Ok(q.qmatmul_rhs_int_with(pool, acts, *be));
                 }
             }
             _ => {}
         }
-        self.matmul(pool, a)
+        Ok(self.matmul(pool, a))
     }
 
     /// Row `i` dequantized into `out` (the embedding lookup).
@@ -825,9 +828,9 @@ impl InferModel {
             // One tap feeds all three projections: the rows are
             // quantized exactly once and the codes shared.
             let tap = ops::quant_tap(h.data_mut(), d, a_levels, int_be);
-            let q = lw.wq.matmul_tap(pool, &h, tap.as_ref());
-            let k = lw.wk.matmul_tap(pool, &h, tap.as_ref());
-            let v = lw.wv.matmul_tap(pool, &h, tap.as_ref());
+            let q = lw.wq.matmul_tap(pool, &h, tap.as_ref())?;
+            let k = lw.wk.matmul_tap(pool, &h, tap.as_ref())?;
+            let v = lw.wv.matmul_tap(pool, &h, tap.as_ref())?;
             attn_out.data_mut().fill(0.0);
             {
                 let (qd, kd, vd) = (q.data(), k.data(), v.data());
@@ -851,7 +854,8 @@ impl InferModel {
             }
             let tap = ops::quant_tap(attn_out.data_mut(), d, a_levels,
                                      int_be);
-            x = x.add(&lw.wo.matmul_tap(pool, &attn_out, tap.as_ref()));
+            x = x.add(&lw.wo.matmul_tap(pool, &attn_out,
+                                        tap.as_ref())?);
 
             // ---- FFN (SwiGLU) ----
             if let Some(p) = probe.as_deref_mut() {
@@ -862,8 +866,8 @@ impl InferModel {
                 ops::norm_row(row, &lw.ffn_norm, self.cfg.norm_ss);
             }
             let tap = ops::quant_tap(h.data_mut(), d, a_levels, int_be);
-            let gate = lw.w_gate.matmul_tap(pool, &h, tap.as_ref());
-            let mut g = lw.w_up.matmul_tap(pool, &h, tap.as_ref());
+            let gate = lw.w_gate.matmul_tap(pool, &h, tap.as_ref())?;
+            let mut g = lw.w_up.matmul_tap(pool, &h, tap.as_ref())?;
             for (gv, xv) in g.data_mut().iter_mut().zip(gate.data()) {
                 *gv *= ops::silu(*xv);
             }
@@ -876,7 +880,7 @@ impl InferModel {
                 }
             }
             let tap = ops::quant_tap(g.data_mut(), f, a_levels, int_be);
-            x = x.add(&lw.w_down.matmul_tap(pool, &g, tap.as_ref()));
+            x = x.add(&lw.w_down.matmul_tap(pool, &g, tap.as_ref())?);
         }
 
         // Advance every cache past its whole block.
@@ -907,7 +911,7 @@ impl InferModel {
             h = p_out.matmul(pool, &h);
         }
         let tap = ops::quant_tap(h.data_mut(), d, a_levels, int_be);
-        Ok(Some(self.unembed.matmul_tap(pool, &h, tap.as_ref())))
+        Ok(Some(self.unembed.matmul_tap(pool, &h, tap.as_ref())?))
     }
 
     /// One decode step for a batch of sequences: feed `tokens[r]` at

@@ -35,7 +35,7 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{ensure, Context, Result};
 
 use crate::tensor::intkern::{Backend, QuantActs};
 use crate::tensor::qtensor::QTensor;
@@ -125,6 +125,11 @@ pub fn slice_acts(acts: &QuantActs, k0: usize, k1: usize) -> QuantActs {
 /// Scalar/AVX2/NEON are pinned bit-identical, so a heterogeneous
 /// fleet is fine).
 pub trait ShardCompute: Send + Sync {
+    /// Number of *partitions* the weights were cut into — the stripe /
+    /// slice count of every call below. With replication (DESIGN.md
+    /// §15) the physical fleet may be larger; replicas are an
+    /// implementation detail behind this trait, invisible here because
+    /// any replica of a shard returns bit-identical integer results.
     fn n_workers(&self) -> usize;
 
     /// Column-parallel `op`: worker `w` runs the full-width `acts`
@@ -192,32 +197,34 @@ impl RemoteLinear {
 
     /// C = A @ deq(W) across the worker fleet, bit-identical to
     /// [`QTensor::qmatmul_rhs_int_with`] on the unsharded weight (see
-    /// module docs for why). Panics on transport failure or a
-    /// mis-sized worker reply — by the time we are mid-decode there is
-    /// no per-request recovery that preserves stream parity, and the
-    /// serve loop's step-error handling turns the panic boundary into
-    /// failed requests rather than wrong tokens.
-    pub fn matmul_int(&self, acts: &QuantActs) -> Tensor {
+    /// module docs for why). Transport failures and mis-sized worker
+    /// replies return `Err` — never wrong tokens — and propagate
+    /// through the model's `Result` forward to the serve loop's
+    /// step-error boundary, which fails the affected requests and
+    /// keeps serving (DESIGN.md §15).
+    pub fn matmul_int(&self, acts: &QuantActs) -> Result<Tensor> {
         let (m, k) = (acts.m(), acts.k());
         let [kk, n] = self.shape;
-        assert_eq!(k, kk, "remote {} [{m}, {k}] @ {:?}", self.op,
-                   self.shape);
+        ensure!(k == kk, "remote {} [{m}, {k}] @ {:?}", self.op,
+                self.shape);
         let nw = self.pool.n_workers();
         let mut c = Tensor::zeros(&[m, n]);
         match self.kind {
             ShardKind::Col => {
                 let stripes = self.pool.col_stripes(&self.op, acts)
-                    .unwrap_or_else(|e| panic!(
-                        "remote {} col stripes: {e}", self.op));
-                assert_eq!(stripes.len(), nw, "remote {} stripe count",
-                           self.op);
+                    .with_context(|| format!(
+                        "remote {} col stripes", self.op))?;
+                ensure!(stripes.len() == nw,
+                        "remote {}: {} stripes for {nw} shards",
+                        self.op, stripes.len());
                 let cd = c.data_mut();
                 for (w, stripe) in stripes.iter().enumerate() {
                     let (j0, j1) = shard_range(n, nw, w);
                     let jw = j1 - j0;
-                    assert_eq!(stripe.len(), m * jw,
-                               "remote {} worker {w} stripe size",
-                               self.op);
+                    ensure!(stripe.len() == m * jw,
+                            "remote {} shard {w}: stripe has {} \
+                             elements, want {}", self.op,
+                            stripe.len(), m * jw);
                     for r in 0..m {
                         cd[r * n + j0..r * n + j1].copy_from_slice(
                             &stripe[r * jw..(r + 1) * jw]);
@@ -232,18 +239,20 @@ impl RemoteLinear {
                     })
                     .collect();
                 let partials = self.pool.row_partials(&self.op, &slices)
-                    .unwrap_or_else(|e| panic!(
-                        "remote {} row partials: {e}", self.op));
-                assert_eq!(partials.len(), nw, "remote {} partial count",
-                           self.op);
+                    .with_context(|| format!(
+                        "remote {} row partials", self.op))?;
+                ensure!(partials.len() == nw,
+                        "remote {}: {} partials for {nw} shards",
+                        self.op, partials.len());
                 // Exact integer reduction (ascending worker index for
                 // definiteness, though i32 sums are order-free), then
                 // the one rescale the unsharded kernel applies.
                 let mut acc = vec![0i32; m * n];
                 for (w, part) in partials.iter().enumerate() {
-                    assert_eq!(part.len(), m * n,
-                               "remote {} worker {w} partial size",
-                               self.op);
+                    ensure!(part.len() == m * n,
+                            "remote {} shard {w}: partial has {} \
+                             elements, want {}", self.op, part.len(),
+                            m * n);
                     for (a, p) in acc.iter_mut().zip(part) {
                         *a += p;
                     }
@@ -261,7 +270,7 @@ impl RemoteLinear {
                 }
             }
         }
-        c
+        Ok(c)
     }
 }
 
@@ -389,7 +398,8 @@ mod tests {
                 shard_q(&q, "op", ShardKind::Col, shards), be));
             let r = RemoteLinear::new("op".into(), [k, n], 4,
                                       ShardKind::Col, Vec::new(), pool);
-            assert_eq!(want.data(), r.matmul_int(&acts).data(),
+            assert_eq!(want.data(),
+                       r.matmul_int(&acts).unwrap().data(),
                        "x{shards}");
         }
     }
@@ -408,7 +418,8 @@ mod tests {
             let r = RemoteLinear::new("op".into(), [k, n], 4,
                                       ShardKind::Row,
                                       q.scales().to_vec(), pool);
-            assert_eq!(want.data(), r.matmul_int(&acts).data(),
+            assert_eq!(want.data(),
+                       r.matmul_int(&acts).unwrap().data(),
                        "x{shards}");
         }
     }

@@ -13,6 +13,7 @@
 //! pair    := key "=" value
 //! key     := seed | abort | delay | oversize | malformed
 //!          | slowloris | tiny_deadline | delay_ms | hold_ms
+//!          | worker-kill | worker-stall-ms
 //! ```
 //!
 //! Probability keys take values in `[0,1]` and their sum must be <= 1
@@ -21,8 +22,23 @@
 //! schedules replay exactly across runs, which is what lets the
 //! bit-parity acceptance test compare a chaos run against an
 //! unperturbed run.
+//!
+//! The two `worker-*` keys are **fleet faults** (DESIGN.md §15): they
+//! perturb one worker of a sharded fleet, not a client request, and
+//! require a [`ChaosProxy`] sitting in front of that worker
+//! (`--proxy` on `osp serve-load`). `worker-kill=k` drops the worker
+//! after the coordinator completes `k` requests and revives it
+//! `hold_ms` later; `worker-stall-ms=t` delays every forwarded
+//! connection by `t` ms.
 
-use anyhow::{bail, Result};
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
 
 use crate::util::rng::Pcg;
 
@@ -60,15 +76,22 @@ pub struct ChaosSpec {
     /// Slow-consumer pause before reads.
     pub delay_ms: u64,
     /// Slow-loris stall length (must exceed the server header timeout
-    /// for the fault to actually trigger a 408).
+    /// for the fault to actually trigger a 408). Doubles as the
+    /// kill→revive hold for `worker-kill`.
     pub hold_ms: u64,
+    /// Fleet fault: SIGKILL-equivalent drop of the proxied worker
+    /// after this many completed requests (0 = off).
+    pub worker_kill: u64,
+    /// Fleet fault: per-connection forward stall in ms (0 = off).
+    pub worker_stall_ms: u64,
 }
 
 impl ChaosSpec {
     pub fn off() -> ChaosSpec {
         ChaosSpec { seed: 0, abort: 0.0, delay: 0.0, oversize: 0.0,
                     malformed: 0.0, slowloris: 0.0, tiny_deadline: 0.0,
-                    delay_ms: 40, hold_ms: 3000 }
+                    delay_ms: 40, hold_ms: 3000, worker_kill: 0,
+                    worker_stall_ms: 0 }
     }
 
     /// The CI preset: every failure class is present, a majority of
@@ -83,6 +106,12 @@ impl ChaosSpec {
         self.abort + self.delay + self.oversize + self.malformed
             + self.slowloris + self.tiny_deadline
             == 0.0
+            && !self.has_fleet_faults()
+    }
+
+    /// Any fleet (worker-level) fault requested?
+    pub fn has_fleet_faults(&self) -> bool {
+        self.worker_kill > 0 || self.worker_stall_ms > 0
     }
 
     /// Parse a `--chaos` spec string (grammar above).
@@ -127,6 +156,10 @@ impl ChaosSpec {
                 "tiny_deadline" => out.tiny_deadline = prob(v)?,
                 "delay_ms" => out.delay_ms = v.parse()?,
                 "hold_ms" => out.hold_ms = v.parse()?,
+                "worker-kill" => out.worker_kill = v.parse()?,
+                "worker-stall-ms" => {
+                    out.worker_stall_ms = v.parse()?
+                }
                 _ => bail!("chaos: unknown key '{k}'"),
             }
         }
@@ -171,6 +204,224 @@ impl ChaosSpec {
         }
         Fault::None
     }
+}
+
+/// A TCP chaos proxy fronting one worker (DESIGN.md §15). Forwards
+/// byte streams verbatim — worker RPC semantics are preserved
+/// bit-for-bit — while exposing an HTTP control surface on the same
+/// port for the fleet faults:
+///
+/// * `POST /chaos/kill` — drop every subsequent connection before a
+///   byte reaches the worker, so from the coordinator the worker
+///   looks SIGKILLed;
+/// * `POST /chaos/revive` — resume forwarding;
+/// * `POST /chaos/stall?ms=N` — delay each forward by `N` ms
+///   (`worker-stall-ms`), exercising Suspect/backoff;
+/// * `GET /chaos/ping` — current fault state.
+///
+/// Control paths are recognised by peeking the head of each inbound
+/// connection; anything else is replayed to the target untouched.
+/// Run standalone as `osp chaos-proxy --listen A --target B`, or in
+/// process from the integration tests.
+pub struct ChaosProxy {
+    addr: String,
+    killed: Arc<AtomicBool>,
+    stall_ms: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+}
+
+impl ChaosProxy {
+    /// Bind `listen` (port 0 picks an ephemeral port; see
+    /// [`ChaosProxy::addr`]) and start forwarding to `target`.
+    pub fn spawn(listen: &str, target: &str) -> Result<ChaosProxy> {
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("chaos-proxy bind {listen}"))?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?.to_string();
+        let killed = Arc::new(AtomicBool::new(false));
+        let stall_ms = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (k2, s2, st2) = (Arc::clone(&killed), Arc::clone(&stall_ms),
+                             Arc::clone(&stop));
+        let target = target.to_string();
+        thread::Builder::new()
+            .name("osp-chaos-proxy".into())
+            .spawn(move || loop {
+                if st2.load(Ordering::SeqCst) {
+                    return;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let t = target.clone();
+                        let k = Arc::clone(&k2);
+                        let s = Arc::clone(&s2);
+                        let _ = thread::Builder::new()
+                            .name("osp-chaos-conn".into())
+                            .spawn(move || {
+                                proxy_conn(stream, &t, &k, &s)
+                            });
+                    }
+                    Err(_) => {
+                        thread::sleep(Duration::from_millis(2))
+                    }
+                }
+            })?;
+        Ok(ChaosProxy { addr, killed, stall_ms, stop })
+    }
+
+    /// The bound listen address (`host:port`).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn kill(&self) {
+        self.killed.store(true, Ordering::SeqCst);
+    }
+
+    pub fn revive(&self) {
+        self.killed.store(false, Ordering::SeqCst);
+    }
+
+    pub fn set_stall_ms(&self, ms: u64) {
+        self.stall_ms.store(ms, Ordering::SeqCst);
+    }
+
+    /// Stop accepting; existing forwards finish on their own.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn head_complete(buf: &[u8]) -> bool {
+    buf.windows(4).any(|w| w == b"\r\n\r\n")
+}
+
+/// Raw bytes up to (and past) the end of the request head, capped at
+/// 8 KiB — enough to classify the path, and whatever body bytes ride
+/// along are replayed to the target with it.
+fn read_head_raw(stream: &mut TcpStream) -> Option<Vec<u8>> {
+    let mut buf = Vec::with_capacity(1024);
+    let mut tmp = [0u8; 1024];
+    while !head_complete(&buf) && buf.len() < 8192 {
+        match stream.read(&mut tmp) {
+            Ok(0) => break,
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(_) => return None,
+        }
+    }
+    if buf.is_empty() { None } else { Some(buf) }
+}
+
+fn proxy_conn(mut client: TcpStream, target: &str,
+              killed: &AtomicBool, stall: &AtomicU64) {
+    let _ = client.set_nodelay(true);
+    let _ = client.set_read_timeout(Some(Duration::from_secs(5)));
+    let _ = client.set_write_timeout(Some(Duration::from_secs(5)));
+    let Some(head) = read_head_raw(&mut client) else { return };
+    let line_end = head.iter().position(|&b| b == b'\n')
+        .unwrap_or(head.len());
+    let line = String::from_utf8_lossy(&head[..line_end]);
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    if path.starts_with("/chaos/") {
+        control(&mut client, &method, &path, killed, stall);
+        return;
+    }
+    if killed.load(Ordering::SeqCst) {
+        // Dead worker: hang up without a byte. The coordinator sees a
+        // transport error, exactly like a SIGKILLed process.
+        return;
+    }
+    forward(client, head, target, stall.load(Ordering::SeqCst));
+}
+
+fn control(stream: &mut TcpStream, method: &str, path: &str,
+           killed: &AtomicBool, stall: &AtomicU64) {
+    let (bare, query) = path.split_once('?').unwrap_or((path, ""));
+    let status = match (method, bare) {
+        ("POST", "/chaos/kill") => {
+            killed.store(true, Ordering::SeqCst);
+            200
+        }
+        ("POST", "/chaos/revive") => {
+            killed.store(false, Ordering::SeqCst);
+            200
+        }
+        ("POST", "/chaos/stall") => {
+            match query.strip_prefix("ms=")
+                .and_then(|v| v.parse::<u64>().ok())
+            {
+                Some(ms) => {
+                    stall.store(ms, Ordering::SeqCst);
+                    200
+                }
+                None => 400,
+            }
+        }
+        ("GET", "/chaos/ping") => 200,
+        _ => 404,
+    };
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        _ => "Not Found",
+    };
+    let body = format!("{{\"killed\":{},\"stall_ms\":{}}}",
+                       killed.load(Ordering::SeqCst),
+                       stall.load(Ordering::SeqCst));
+    let _ = write!(stream,
+                   "HTTP/1.1 {status} {reason}\r\n\
+                    Content-Length: {}\r\n\
+                    Content-Type: application/json\r\n\
+                    Connection: close\r\n\r\n{body}",
+                   body.len());
+    let _ = stream.flush();
+}
+
+fn forward(mut client: TcpStream, head: Vec<u8>, target: &str,
+           stall_ms: u64) {
+    if stall_ms > 0 {
+        thread::sleep(Duration::from_millis(stall_ms));
+    }
+    let Some(sa) = target.to_socket_addrs().ok()
+        .and_then(|mut i| i.next())
+    else {
+        return;
+    };
+    let Ok(mut upstream) =
+        TcpStream::connect_timeout(&sa, Duration::from_secs(5))
+    else {
+        return;
+    };
+    let _ = upstream.set_nodelay(true);
+    let _ = upstream.set_read_timeout(Some(Duration::from_secs(30)));
+    if upstream.write_all(&head).is_err() {
+        return;
+    }
+    let (Ok(mut up_w), Ok(mut cl_r)) =
+        (upstream.try_clone(), client.try_clone())
+    else {
+        return;
+    };
+    // Pump any remaining request bytes client→target while the main
+    // thread relays the response target→client; the upstream's
+    // Connection-close EOF ends the relay and the shutdowns unblock
+    // the pump.
+    let pump = thread::spawn(move || {
+        let _ = std::io::copy(&mut cl_r, &mut up_w);
+        let _ = up_w.shutdown(Shutdown::Write);
+    });
+    let _ = std::io::copy(&mut upstream, &mut client);
+    let _ = client.shutdown(Shutdown::Both);
+    let _ = upstream.shutdown(Shutdown::Both);
+    let _ = pump.join();
 }
 
 #[cfg(test)]
@@ -237,5 +488,113 @@ mod tests {
         for r in 0..32u64 {
             assert_eq!(spec.draw(0, r), Fault::Malformed);
         }
+    }
+
+    #[test]
+    fn fleet_fault_keys_parse() {
+        let c = ChaosSpec::parse(
+            "worker-kill=3,worker-stall-ms=250,hold_ms=900")
+            .unwrap();
+        assert_eq!(c.worker_kill, 3);
+        assert_eq!(c.worker_stall_ms, 250);
+        assert_eq!(c.hold_ms, 900);
+        assert!(c.has_fleet_faults());
+        assert!(!c.is_off(), "fleet faults are not 'off'");
+        assert!(!ChaosSpec::parse("off").unwrap().has_fleet_faults());
+        assert!(ChaosSpec::parse("worker-kill=x").is_err());
+        assert!(ChaosSpec::parse("worker_kill=1").is_err(),
+                "grammar uses hyphens");
+    }
+
+    /// Minimal single-response HTTP target: enough for the proxy's
+    /// pass-through, kill, and stall paths to be observed end to end.
+    fn spawn_target() -> (String, Arc<AtomicBool>) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        thread::spawn(move || {
+            for conn in l.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    return;
+                }
+                let Ok(mut s) = conn else { continue };
+                let _ = s.set_read_timeout(
+                    Some(Duration::from_secs(2)));
+                let mut buf = Vec::new();
+                let mut tmp = [0u8; 1024];
+                while !head_complete(&buf) && buf.len() < 8192 {
+                    match s.read(&mut tmp) {
+                        Ok(0) => break,
+                        Ok(n) => buf.extend_from_slice(&tmp[..n]),
+                        Err(_) => break,
+                    }
+                }
+                let body = "{\"target\":true}";
+                let _ = write!(
+                    s,
+                    "HTTP/1.1 200 OK\r\nContent-Length: {}\r\n\
+                     Connection: close\r\n\r\n{body}",
+                    body.len());
+            }
+        });
+        (addr, stop)
+    }
+
+    #[test]
+    fn proxy_forwards_kills_revives_and_stalls() {
+        use crate::serve::load;
+        let (target, stop) = spawn_target();
+        let proxy =
+            ChaosProxy::spawn("127.0.0.1:0", &target).unwrap();
+        // Pass-through: the target's bytes come back verbatim.
+        let (status, doc) =
+            load::http_get(proxy.addr(), "/metrics").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(doc.get("target").and_then(|v| v.as_bool()),
+                   Some(true));
+        // Kill over the HTTP control surface: forwards now drop
+        // before a byte reaches the target.
+        let (status, doc) =
+            load::http_post(proxy.addr(), "/chaos/kill", "{}")
+                .unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(doc.get("killed").and_then(|v| v.as_bool()),
+                   Some(true));
+        assert!(load::http_get(proxy.addr(), "/metrics").is_err(),
+                "killed proxy must look like a dead worker");
+        // Control surface stays alive while "dead".
+        let (status, _) =
+            load::http_get(proxy.addr(), "/chaos/ping").unwrap();
+        assert_eq!(status, 200);
+        // Revive + stall: forwards resume, delayed by the stall.
+        let (status, _) =
+            load::http_post(proxy.addr(), "/chaos/revive", "{}")
+                .unwrap();
+        assert_eq!(status, 200);
+        let (status, doc) = load::http_post(
+            proxy.addr(), "/chaos/stall?ms=150", "{}").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(doc.get("stall_ms").and_then(|v| v.as_f64()),
+                   Some(150.0));
+        let t0 = std::time::Instant::now();
+        let (status, doc) =
+            load::http_get(proxy.addr(), "/metrics").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(doc.get("target").and_then(|v| v.as_bool()),
+                   Some(true));
+        assert!(t0.elapsed() >= Duration::from_millis(120),
+                "stall was not applied");
+        // Bad control requests answer without touching the target.
+        let (status, _) = load::http_post(
+            proxy.addr(), "/chaos/stall?ms=oops", "{}").unwrap();
+        assert_eq!(status, 400);
+        let (status, _) =
+            load::http_post(proxy.addr(), "/chaos/nope", "{}")
+                .unwrap();
+        assert_eq!(status, 404);
+        proxy.shutdown();
+        stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(&target); // wake the target loop
     }
 }

@@ -1,0 +1,396 @@
+//! Health-checked worker registry for the sharded serving plane
+//! (DESIGN.md §15).
+//!
+//! The coordinator keeps one [`HealthRegistry`] per fleet. A background
+//! prober (spawned by `Server::spawn`) GETs every worker's `/healthz`
+//! on a fixed cadence and feeds the observations in here; the rpc path
+//! ([`super::worker::HttpShardPool`]) feeds transport outcomes in as
+//! they happen. Both drive the same per-worker state machine:
+//!
+//! ```text
+//!   Rejoining --ready--> Up --fail--> Suspect --fail*--> Down
+//!       ^                 ^------------ok-----------------|
+//!       |                                                 |
+//!       +---------------probe reachable, not ready--------+
+//! ```
+//!
+//! `Up` and `Suspect` are routable. `Rejoining` (reachable but the
+//! shard is still loading — boot and rejoin look identical) is a
+//! last-resort route: `/matmul` answers a retryable 503 until ready.
+//! `Down` is breaker-open: the pool skips the worker entirely and only
+//! the prober can half-open it back (a reachable probe moves it to
+//! `Rejoining`, a ready one to `Up`). Shard coverage — every shard has
+//! at least one non-`Down` replica — is the serve front-end's
+//! readiness/degradation gate.
+//!
+//! Retry pacing is [`retry_delay`]: capped exponential backoff with
+//! deterministic Pcg jitter, overridden upward by a peer's
+//! `Retry-After` hint (still capped).
+
+use std::sync::atomic::Ordering::{Relaxed, SeqCst};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8};
+use std::time::Duration;
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+
+/// Per-worker health as seen from the coordinator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    /// Probed ready; first-choice route for its shard.
+    Up,
+    /// Recent failure(s), breaker not yet tripped; still routable.
+    Suspect,
+    /// Breaker open: consecutive failures reached the threshold. Not
+    /// routed; only a successful probe can move it out.
+    Down,
+    /// Reachable but not ready (shard loading — initial join or a
+    /// restarted worker re-fetching). Routed only when nothing better
+    /// is live; `/matmul` answers 503 until ready.
+    Rejoining,
+}
+
+impl HealthState {
+    pub fn label(self) -> &'static str {
+        match self {
+            HealthState::Up => "up",
+            HealthState::Suspect => "suspect",
+            HealthState::Down => "down",
+            HealthState::Rejoining => "rejoining",
+        }
+    }
+
+    fn from_u8(v: u8) -> HealthState {
+        match v {
+            0 => HealthState::Up,
+            1 => HealthState::Suspect,
+            2 => HealthState::Down,
+            _ => HealthState::Rejoining,
+        }
+    }
+
+    fn as_u8(self) -> u8 {
+        match self {
+            HealthState::Up => 0,
+            HealthState::Suspect => 1,
+            HealthState::Down => 2,
+            HealthState::Rejoining => 3,
+        }
+    }
+}
+
+/// Knobs for the registry + retry schedule. Defaults match the serve
+/// CLI defaults documented in DESIGN.md §15.
+#[derive(Clone, Debug)]
+pub struct HealthOpts {
+    /// Prober cadence.
+    pub probe_interval_ms: u64,
+    /// Consecutive failures before the breaker trips (`Down`).
+    pub down_after: u32,
+    /// First retry backoff step.
+    pub backoff_base_ms: u64,
+    /// Backoff cap (also caps honored `Retry-After` hints).
+    pub backoff_cap_ms: u64,
+    /// Rpc attempt rounds per call (each round tries every live
+    /// replica of the shard).
+    pub retries: u32,
+    /// Seed for the deterministic backoff jitter.
+    pub seed: u64,
+}
+
+impl Default for HealthOpts {
+    fn default() -> HealthOpts {
+        HealthOpts {
+            probe_interval_ms: 150,
+            down_after: 3,
+            backoff_base_ms: 10,
+            backoff_cap_ms: 500,
+            retries: 4,
+            seed: 0,
+        }
+    }
+}
+
+struct WorkerHealth {
+    state: AtomicU8,
+    fails: AtomicU32,
+    /// Whether this worker has ever been observed ready — separates a
+    /// genuine rejoin from the initial join, so booting a fleet of N
+    /// does not count N rejoins.
+    ever_up: AtomicBool,
+}
+
+/// Fleet health: per-worker state machines plus the failover counters
+/// `/status` publishes. Shared between the rpc pool and the prober.
+pub struct HealthRegistry {
+    workers: Vec<WorkerHealth>,
+    /// `shard_of[w]` = the shard worker `w` serves (round-robin
+    /// placement, see [`crate::coordinator::shard::replica_assignment`]).
+    shard_of: Vec<usize>,
+    n_shards: usize,
+    pub opts: HealthOpts,
+    pub failovers: AtomicU64,
+    pub breaker_trips: AtomicU64,
+    pub rejoins: AtomicU64,
+}
+
+impl HealthRegistry {
+    pub fn new(n_workers: usize, n_shards: usize, opts: HealthOpts)
+               -> HealthRegistry {
+        assert!(n_shards > 0 && n_workers >= n_shards,
+                "{n_workers} workers cannot cover {n_shards} shards");
+        HealthRegistry {
+            workers: (0..n_workers)
+                .map(|_| WorkerHealth {
+                    state: AtomicU8::new(
+                        HealthState::Rejoining.as_u8()),
+                    fails: AtomicU32::new(0),
+                    ever_up: AtomicBool::new(false),
+                })
+                .collect(),
+            shard_of: crate::coordinator::shard::replica_assignment(
+                n_workers, n_shards),
+            n_shards,
+            opts,
+            failovers: AtomicU64::new(0),
+            breaker_trips: AtomicU64::new(0),
+            rejoins: AtomicU64::new(0),
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    pub fn shard_of(&self, w: usize) -> usize {
+        self.shard_of[w]
+    }
+
+    pub fn state(&self, w: usize) -> HealthState {
+        HealthState::from_u8(self.workers[w].state.load(SeqCst))
+    }
+
+    fn set_state(&self, w: usize, s: HealthState) -> HealthState {
+        let prev = self.workers[w].state.swap(s.as_u8(), SeqCst);
+        HealthState::from_u8(prev)
+    }
+
+    /// A probe saw `ready: true`, or an rpc succeeded: the worker is
+    /// fully live. Counts a rejoin when it returns from `Down` /
+    /// `Rejoining` after having been up before.
+    pub fn record_ready(&self, w: usize) {
+        self.workers[w].fails.store(0, SeqCst);
+        let prev = self.set_state(w, HealthState::Up);
+        let rejoined = matches!(prev, HealthState::Down
+                                | HealthState::Rejoining)
+            && self.workers[w].ever_up.load(SeqCst);
+        if rejoined {
+            self.rejoins.fetch_add(1, Relaxed);
+        }
+        self.workers[w].ever_up.store(true, SeqCst);
+    }
+
+    /// A probe reached the worker but it reported `ready: false` (the
+    /// shard is still loading, or it is draining). Half-opens a
+    /// breaker-tripped worker into `Rejoining`.
+    pub fn record_unready(&self, w: usize) {
+        self.workers[w].fails.store(0, SeqCst);
+        self.set_state(w, HealthState::Rejoining);
+    }
+
+    /// A probe or rpc could not reach the worker (transport error).
+    pub fn record_failure(&self, w: usize) {
+        let fails = self.workers[w].fails.fetch_add(1, SeqCst) + 1;
+        if fails >= self.opts.down_after {
+            let prev = self.set_state(w, HealthState::Down);
+            if prev != HealthState::Down {
+                self.breaker_trips.fetch_add(1, Relaxed);
+            }
+        } else {
+            self.set_state(w, HealthState::Suspect);
+        }
+    }
+
+    /// Worker indices serving `shard`, in routing preference order:
+    /// `Up` first, then `Suspect`, then `Rejoining`; `Down` (breaker
+    /// open) workers are excluded entirely. Empty ⇒ the shard is
+    /// uncovered.
+    pub fn route_order(&self, shard: usize) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.workers.len())
+            .filter(|&w| self.shard_of[w] == shard
+                    && self.state(w) != HealthState::Down)
+            .collect();
+        let rank = |s: HealthState| match s {
+            HealthState::Up => 0u8,
+            HealthState::Suspect => 1,
+            _ => 2,
+        };
+        order.sort_by_key(|&w| (rank(self.state(w)), w));
+        order
+    }
+
+    /// Is `shard` servable right now — does it have a ready (`Up` or
+    /// `Suspect`) replica?
+    pub fn covered(&self, shard: usize) -> bool {
+        (0..self.workers.len()).any(|w| {
+            self.shard_of[w] == shard
+                && matches!(self.state(w), HealthState::Up
+                            | HealthState::Suspect)
+        })
+    }
+
+    /// Lowest shard with no live replica, if any. `None` ⇒ the fleet
+    /// can serve; this is the coordinator's readiness gate (at boot
+    /// every shard is uncovered until its first replica goes `Up`).
+    pub fn first_uncovered(&self) -> Option<usize> {
+        (0..self.n_shards).find(|&s| !self.covered(s))
+    }
+
+    pub fn all_covered(&self) -> bool {
+        self.first_uncovered().is_none()
+    }
+
+    /// Fleet counters + per-worker states for `/status`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("states",
+             Json::Arr((0..self.workers.len())
+                       .map(|w| Json::str(self.state(w).label()))
+                       .collect())),
+            ("failovers",
+             Json::num(self.failovers.load(Relaxed) as f64)),
+            ("breaker_trips",
+             Json::num(self.breaker_trips.load(Relaxed) as f64)),
+            ("rejoins", Json::num(self.rejoins.load(Relaxed) as f64)),
+        ])
+    }
+}
+
+/// Retry pacing for attempt `attempt` (1-based: the sleep taken
+/// *before* that attempt): capped exponential backoff with
+/// deterministic Pcg "equal jitter" — half the step is fixed, half is
+/// drawn from `Pcg::new(seed, salt)` advanced per attempt, so a given
+/// (seed, salt) always yields the same schedule. A peer's
+/// `Retry-After` hint (milliseconds) raises the floor but never
+/// exceeds `cap_ms`.
+pub fn retry_delay(base_ms: u64, cap_ms: u64, attempt: u32, seed: u64,
+                   salt: u64, retry_after_ms: Option<u64>) -> Duration {
+    let exp = attempt.saturating_sub(1).min(16);
+    let step = base_ms.saturating_mul(1u64 << exp).min(cap_ms).max(1);
+    let mut rng = Pcg::new(seed, salt);
+    let mut jitter = 0;
+    for _ in 0..attempt {
+        jitter = rng.below(step.div_ceil(2).max(1));
+    }
+    let mut ms = step / 2 + jitter;
+    if let Some(hint) = retry_after_ms {
+        ms = ms.max(hint);
+    }
+    Duration::from_millis(ms.min(cap_ms))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg(workers: usize, shards: usize) -> HealthRegistry {
+        HealthRegistry::new(workers, shards, HealthOpts::default())
+    }
+
+    #[test]
+    fn boot_fleet_is_rejoining_and_uncovered_until_ready() {
+        let r = reg(3, 2);
+        assert_eq!(r.state(0), HealthState::Rejoining);
+        assert_eq!(r.first_uncovered(), Some(0));
+        r.record_ready(0); // shard 0
+        assert_eq!(r.first_uncovered(), Some(1));
+        r.record_ready(1); // shard 1
+        assert!(r.all_covered());
+        // Initial joins are not rejoins.
+        assert_eq!(r.rejoins.load(Relaxed), 0);
+    }
+
+    #[test]
+    fn breaker_trips_after_threshold_and_half_opens_via_probe() {
+        let r = reg(2, 1);
+        r.record_ready(0);
+        r.record_ready(1);
+        r.record_failure(0);
+        assert_eq!(r.state(0), HealthState::Suspect);
+        assert!(r.covered(0), "suspect still covers");
+        r.record_failure(0);
+        r.record_failure(0);
+        assert_eq!(r.state(0), HealthState::Down);
+        assert_eq!(r.breaker_trips.load(Relaxed), 1);
+        // Down workers drop out of routing; the replica remains.
+        assert_eq!(r.route_order(0), vec![1]);
+        // Probe reaches it mid-reload: half-open, last-resort route.
+        r.record_unready(0);
+        assert_eq!(r.state(0), HealthState::Rejoining);
+        assert_eq!(r.route_order(0), vec![1, 0]);
+        // Ready again: that is one rejoin, not two.
+        r.record_ready(0);
+        assert_eq!(r.state(0), HealthState::Up);
+        assert_eq!(r.rejoins.load(Relaxed), 1);
+        r.record_ready(0);
+        assert_eq!(r.rejoins.load(Relaxed), 1);
+    }
+
+    #[test]
+    fn route_order_prefers_up_over_suspect_over_rejoining() {
+        let r = reg(4, 2); // shard 0: workers {0, 2}; shard 1: {1, 3}
+        r.record_ready(0);
+        r.record_ready(2);
+        r.record_failure(0);
+        assert_eq!(r.route_order(0), vec![2, 0]);
+        assert_eq!(r.shard_of(2), 0);
+        // All replicas down -> uncovered, empty route.
+        for _ in 0..3 {
+            r.record_failure(0);
+            r.record_failure(2);
+        }
+        assert!(r.route_order(0).is_empty());
+        assert_eq!(r.first_uncovered(), Some(0));
+    }
+
+    #[test]
+    fn retry_schedule_is_deterministic_capped_and_grows() {
+        let d = |attempt, hint| {
+            retry_delay(10, 500, attempt, 42, 7, hint).as_millis()
+                as u64
+        };
+        // Deterministic: same inputs, same schedule.
+        assert_eq!(d(1, None), d(1, None));
+        assert_eq!(d(3, None), d(3, None));
+        // Each attempt stays within its exponential envelope
+        // [step/2, step] for step = min(cap, base << (attempt-1)).
+        for attempt in 1..10u32 {
+            let step =
+                (10u64 << (attempt - 1).min(16)).min(500).max(1);
+            let ms = d(attempt, None);
+            assert!(ms >= step / 2 && ms <= step,
+                    "attempt {attempt}: {ms}ms outside envelope \
+                     [{}, {step}]", step / 2);
+        }
+        // Capped: late attempts never exceed the cap.
+        assert!(d(30, None) <= 500);
+        // Retry-After raises the floor but respects the cap.
+        assert!(d(1, Some(200)) >= 200);
+        assert_eq!(d(1, Some(30_000)), 500);
+        // Different seeds give different jitter somewhere in the
+        // schedule (not a fixed sleep).
+        let a: Vec<u64> = (1..8)
+            .map(|i| retry_delay(10, 500, i, 1, 0, None).as_millis()
+                 as u64)
+            .collect();
+        let b: Vec<u64> = (1..8)
+            .map(|i| retry_delay(10, 500, i, 2, 0, None).as_millis()
+                 as u64)
+            .collect();
+        assert_ne!(a, b);
+    }
+}

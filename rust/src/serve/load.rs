@@ -11,7 +11,8 @@
 //! reuses [`http_get`]/[`http_post`] and the per-fault request logic
 //! through [`run_load`].
 
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -41,6 +42,10 @@ pub struct LoadOpts {
     pub chaos: ChaosSpec,
     /// The raw `--chaos` spec string (bench-row identity).
     pub chaos_label: String,
+    /// Chaos-proxy control address (`--proxy`) the fleet faults
+    /// (`worker-kill`, `worker-stall-ms`) are driven through; empty =
+    /// no proxy, fleet faults are ignored (DESIGN.md §15).
+    pub proxy: String,
     pub seed: u64,
 }
 
@@ -50,7 +55,8 @@ impl Default for LoadOpts {
                    requests: 8, prompt_len: 12, prefix_len: 0,
                    max_new: 16, timeout_ms: 10_000,
                    chaos: ChaosSpec::off(),
-                   chaos_label: "off".into(), seed: 7 }
+                   chaos_label: "off".into(), proxy: String::new(),
+                   seed: 7 }
     }
 }
 
@@ -88,7 +94,18 @@ impl ClientStats {
 }
 
 fn connect(addr: &str, read_timeout: Duration) -> Result<TcpStream> {
-    let stream = TcpStream::connect(addr)
+    // `connect_timeout` rather than `connect`: a black-holed server
+    // (SYN dropped, not refused) would otherwise park the client for
+    // the kernel's connect timeout — minutes, not the bounded wait
+    // the health prober and chaos driver need.
+    let sa = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolve {addr}"))?
+        .next()
+        .ok_or_else(|| anyhow!("no address for {addr}"))?;
+    let stream =
+        TcpStream::connect_timeout(&sa, read_timeout.min(
+            Duration::from_secs(5)))
         .with_context(|| format!("connect {addr}"))?;
     stream.set_nodelay(true)?;
     stream.set_read_timeout(Some(read_timeout))?;
@@ -99,7 +116,15 @@ fn connect(addr: &str, read_timeout: Duration) -> Result<TcpStream> {
 /// Blocking GET returning (status, parsed body). Used for `/metrics`
 /// and `/healthz`.
 pub fn http_get(addr: &str, path: &str) -> Result<(u16, Json)> {
-    let stream = connect(addr, Duration::from_secs(10))?;
+    http_get_timeout(addr, path, Duration::from_secs(10))
+}
+
+/// [`http_get`] with an explicit per-call budget covering connect and
+/// read — the health prober's probe must fail fast, not inherit the
+/// 10 s client default.
+pub fn http_get_timeout(addr: &str, path: &str, timeout: Duration)
+                        -> Result<(u16, Json)> {
+    let stream = connect(addr, timeout)?;
     let mut conn = ClientConn::new(stream);
     conn.send_request("GET", path, "")?;
     read_framed_json(&mut conn)
@@ -344,6 +369,49 @@ fn percentile_ms(samples: &mut [u64], q: f64) -> f64 {
     samples[idx] as f64 / 1000.0
 }
 
+/// Drive the fleet faults (DESIGN.md §15) against the chaos proxy at
+/// `opts.proxy` while the client threads run:
+///
+/// * `worker-stall-ms=t` — applied immediately; every forwarded
+///   connection stalls `t` ms, exercising Suspect/backoff without a
+///   breaker trip.
+/// * `worker-kill=k` — waits until the coordinator reports `k`
+///   completed requests (so the kill lands mid-run, not before the
+///   fleet warms up), drops the proxied worker, holds `hold_ms`, then
+///   revives it — the failover→breaker→rejoin arc in one run.
+///
+/// `stop` is the client-threads-finished signal: a threshold never
+/// reached skips the kill rather than firing it after the run.
+fn drive_fleet_faults(opts: &LoadOpts, stop: &AtomicBool) {
+    if opts.proxy.is_empty() || !opts.chaos.has_fleet_faults() {
+        return;
+    }
+    let c = &opts.chaos;
+    if c.worker_stall_ms > 0 {
+        let _ = http_post(
+            &opts.proxy,
+            &format!("/chaos/stall?ms={}", c.worker_stall_ms), "{}");
+    }
+    if c.worker_kill == 0 {
+        return;
+    }
+    while !stop.load(Ordering::SeqCst) {
+        let completed = http_get(&opts.addr, "/metrics")
+            .ok()
+            .and_then(|(_, d)| {
+                d.get("metrics")?.get("completed")?.as_f64()
+            })
+            .unwrap_or(0.0);
+        if completed >= c.worker_kill as f64 {
+            let _ = http_post(&opts.proxy, "/chaos/kill", "{}");
+            thread::sleep(Duration::from_millis(c.hold_ms));
+            let _ = http_post(&opts.proxy, "/chaos/revive", "{}");
+            return;
+        }
+        thread::sleep(Duration::from_millis(20));
+    }
+}
+
 /// Drive the server at `opts.addr` and return a `BENCH_serve.json`
 /// document (bench-style: `{"bench":"serve","threads":N,"rows":[...]}`
 /// — one row keyed by config/clients/chaos, diffable with
@@ -360,7 +428,11 @@ pub fn run_load(opts: &LoadOpts) -> Result<Json> {
         .ok_or_else(|| anyhow!("/metrics missing 'vocab'"))?;
     let t0 = Instant::now();
     let mut total = ClientStats::default();
+    let clients_done = AtomicBool::new(false);
+    let done_ref = &clients_done;
     thread::scope(|s| {
+        let driver =
+            s.spawn(move || drive_fleet_faults(opts, done_ref));
         let handles: Vec<_> = (0..opts.clients as u64)
             .map(|c| s.spawn(move || run_client(opts, vocab, c)))
             .collect();
@@ -369,6 +441,8 @@ pub fn run_load(opts: &LoadOpts) -> Result<Json> {
                 total.merge(st);
             }
         }
+        clients_done.store(true, Ordering::SeqCst);
+        let _ = driver.join();
     });
     let wall = t0.elapsed().as_secs_f64();
     let (_, after) = http_get(&opts.addr, "/metrics")
@@ -399,6 +473,15 @@ pub fn run_load(opts: &LoadOpts) -> Result<Json> {
             })
             .unwrap_or(0.0)
     };
+    // Fleet-robustness counters off the coordinator's health registry
+    // (DESIGN.md §15); Null-shaped absence folds to 0 single-process.
+    let fleet = |key: &str| {
+        status_doc
+            .get("fleet_health")
+            .and_then(|f| f.get(key))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0)
+    };
     let mut gaps = total.token_gaps_us.clone();
     let mut firsts = total.first_token_us.clone();
     let row = Json::obj(vec![
@@ -422,6 +505,8 @@ pub fn run_load(opts: &LoadOpts) -> Result<Json> {
          info.get("share_prefix").cloned().unwrap_or(Json::Null)),
         ("workers", info.get("workers").cloned().unwrap_or(Json::Null)),
         ("shards", info.get("shards").cloned().unwrap_or(Json::Null)),
+        ("replicas",
+         info.get("replicas").cloned().unwrap_or(Json::Null)),
         ("requests", Json::num(total.requests as f64)),
         ("completed", Json::num(total.completed as f64)),
         ("rejected", Json::num(total.rejected as f64)),
@@ -443,6 +528,11 @@ pub fn run_load(opts: &LoadOpts) -> Result<Json> {
         ("server_failed", Json::num(server("failed"))),
         ("server_rejected_full", Json::num(server("rejected_full"))),
         ("server_rejected_bad", Json::num(server("rejected_bad"))),
+        ("server_uncovered_503s",
+         Json::num(server("uncovered_503s"))),
+        ("failovers", Json::num(fleet("failovers"))),
+        ("breaker_trips", Json::num(fleet("breaker_trips"))),
+        ("rejoins", Json::num(fleet("rejoins"))),
         ("server_queue_depth", Json::num(server("queue_depth"))),
         ("server_in_flight", Json::num(server("in_flight"))),
         ("kv_bytes_peak", Json::num(server("kv_bytes_peak"))),

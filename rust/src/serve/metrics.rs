@@ -28,6 +28,12 @@ pub struct ServeMetrics {
     pub rejected_oversize: AtomicU64,
     pub rejected_slow: AtomicU64,
     pub rejected_draining: AtomicU64,
+    /// Retryable 503s shed because a shard had no live replica
+    /// (DESIGN.md §15) — both handler-side deferrals and in-flight
+    /// requests failed by an uncovered step error. Subset of
+    /// `rejected_full` + `failed`, broken out so operators can tell
+    /// fleet outages from ordinary backpressure.
+    pub uncovered_503s: AtomicU64,
     // Service-side terminal states (request was admitted).
     pub admitted: AtomicU64,
     pub completed: AtomicU64,
@@ -85,6 +91,7 @@ impl ServeMetrics {
             ("rejected_oversize", n(&self.rejected_oversize)),
             ("rejected_slow", n(&self.rejected_slow)),
             ("rejected_draining", n(&self.rejected_draining)),
+            ("uncovered_503s", n(&self.uncovered_503s)),
             ("tokens_streamed", n(&self.tokens_streamed)),
             ("connections", n(&self.connections)),
             ("queue_depth", g(&self.queue_depth)),

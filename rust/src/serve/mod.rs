@@ -35,6 +35,7 @@
 //! one (`tests/shard_properties.rs`).
 
 pub mod chaos;
+pub mod health;
 pub mod http;
 pub mod load;
 pub mod metrics;
@@ -108,11 +109,21 @@ pub struct ServeOpts {
     pub share_prefix: bool,
     /// Worker addresses for row-parallel sharded serving (DESIGN.md
     /// §14); empty = classic single-process serving. Order matters:
-    /// `workers[i]` must serve shard `i`.
+    /// `workers[w]` must serve shard `w % n_shards` (round-robin
+    /// replica placement, DESIGN.md §15).
     pub workers: Vec<String>,
     /// Directory written by `osp shard` that the coordinator serves
     /// worker fetches from. Required when `workers` is non-empty.
     pub shard_dir: String,
+    /// Replication factor (`--replicas`): each shard may be served by
+    /// up to this many workers, and the fleet survives any single
+    /// worker failure when every shard has ≥ 2 live replicas.
+    pub replicas: usize,
+    /// Health prober cadence (`--probe-interval-ms`, DESIGN.md §15).
+    pub probe_interval_ms: u64,
+    /// Consecutive probe/rpc failures before a worker's breaker trips
+    /// (`--down-after`).
+    pub down_after: u32,
 }
 
 impl Default for ServeOpts {
@@ -142,6 +153,9 @@ impl Default for ServeOpts {
             share_prefix: true,
             workers: Vec::new(),
             shard_dir: String::new(),
+            replicas: 1,
+            probe_interval_ms: 150,
+            down_after: 3,
         }
     }
 }
@@ -173,13 +187,13 @@ impl ServeInfo {
 }
 
 /// Sharded-mode coordinator state: the storage backend workers fetch
-/// their artifacts from, the rpc pool the remote linears ride, and the
-/// fleet-readiness gate for `/generate`.
+/// their artifacts from, and the rpc pool the remote linears ride.
+/// The `/generate` gate is the pool's health registry — shard
+/// coverage, not a one-way ready latch, so the gate reopens after an
+/// outage once a worker rejoins (DESIGN.md §15).
 pub(crate) struct ShardCtl {
     pub store: Box<dyn storage::StorageBackend>,
     pub pool: Arc<worker::HttpShardPool>,
-    /// Set once every worker's `/healthz` reports `ready: true`.
-    pub ready: AtomicBool,
 }
 
 /// Shared control block: handlers, the service thread, and the
@@ -196,15 +210,23 @@ pub(crate) struct Ctl {
 }
 
 impl Ctl {
+    /// Lowest shard with no live replica (`None` = fleet can serve;
+    /// always `None` single-process). Uncovered at boot until every
+    /// shard's first replica turns ready, and again mid-outage.
+    fn uncovered_shard(&self) -> Option<usize> {
+        self.shard.as_ref()
+            .and_then(|sh| sh.pool.health().first_uncovered())
+    }
+
     fn workers_ready(&self) -> bool {
-        match &self.shard {
-            Some(sh) => sh.ready.load(SeqCst),
-            None => true,
-        }
+        self.uncovered_shard().is_none()
     }
 
     fn status_json(&self) -> Json {
         let n_workers = self.opts.workers.len();
+        let n_shards = self.shard.as_ref()
+            .map(|sh| sh.pool.n_shards())
+            .unwrap_or(n_workers);
         Json::obj(vec![
             ("config", Json::str(self.info.config_label())),
             ("w_bits", Json::num(self.info.w_bits as f64)),
@@ -233,10 +255,15 @@ impl Ctl {
             ("weight_bytes_coord",
              Json::num(self.info.weight_bytes_coord as f64)),
             ("workers", Json::num(n_workers as f64)),
-            ("shards", Json::num(n_workers as f64)),
+            ("shards", Json::num(n_shards as f64)),
+            ("replicas", Json::num(self.opts.replicas.max(1) as f64)),
             ("workers_ready", Json::Bool(self.workers_ready())),
             ("shard_pool", match &self.shard {
                 Some(sh) => sh.pool.to_json(),
+                None => Json::Null,
+            }),
+            ("fleet_health", match &self.shard {
+                Some(sh) => sh.pool.health().to_json(),
                 None => Json::Null,
             }),
             ("metrics", self.metrics.to_json()),
@@ -254,16 +281,29 @@ impl Ctl {
         if let Json::Obj(map) = &mut doc {
             let scraped: Vec<Json> = match &self.shard {
                 None => Vec::new(),
-                Some(sh) => sh.pool.worker_addrs().iter()
-                    .map(|a| match load::http_get(a, "/metrics") {
-                        Ok((200, m)) => m,
-                        Ok((status, _)) => Json::obj(vec![(
-                            "error",
-                            Json::str(format!("/metrics -> {status}")),
-                        )]),
-                        Err(e) => Json::obj(vec![(
-                            "error", Json::str(format!("{e:#}")),
-                        )]),
+                Some(sh) => sh.pool.worker_addrs().iter().enumerate()
+                    .map(|(w, a)| {
+                        let mut m = match load::http_get(a, "/metrics")
+                        {
+                            Ok((200, m)) => m,
+                            Ok((status, _)) => Json::obj(vec![(
+                                "error",
+                                Json::str(format!(
+                                    "/metrics -> {status}")),
+                            )]),
+                            Err(e) => Json::obj(vec![(
+                                "error", Json::str(format!("{e:#}")),
+                            )]),
+                        };
+                        if let Json::Obj(map) = &mut m {
+                            map.insert("addr".into(),
+                                       Json::str(a.clone()));
+                            map.insert(
+                                "health".into(),
+                                Json::str(sh.pool.health().state(w)
+                                          .label()));
+                        }
+                        m
                     })
                     .collect(),
             };
@@ -301,10 +341,15 @@ impl Server {
             let dir = Path::new(&opts.shard_dir);
             let store = storage::LocalDir::open(dir)
                 .context("opening --shard-dir")?;
-            if store.n_shards() != opts.workers.len() {
-                bail!("shard dir {dir:?} was cut for {} workers, \
-                       --workers lists {}", store.n_shards(),
-                      opts.workers.len());
+            let n_shards = store.n_shards();
+            let replicas = opts.replicas.max(1);
+            let nw = opts.workers.len();
+            if nw < n_shards || nw > n_shards * replicas {
+                bail!("shard dir {dir:?} was cut for {n_shards} \
+                       shards; --workers lists {nw} addresses (want \
+                       {n_shards} to {} with --replicas {replicas}, \
+                       worker w serving shard w % {n_shards})",
+                      n_shards * replicas);
             }
             if model.int_kernel(opts.a_bits).is_none() {
                 bail!("sharded serving requires the integer kernel \
@@ -312,11 +357,18 @@ impl Server {
                        scalar|auto — f32 partial sums would break \
                        stream bit-parity (DESIGN.md §14)", opts.a_bits);
             }
-            let pool = Arc::new(worker::HttpShardPool::new(
-                opts.workers.clone()));
+            let hopts = health::HealthOpts {
+                probe_interval_ms: opts.probe_interval_ms.max(10),
+                down_after: opts.down_after.max(1),
+                seed: opts.seed,
+                ..health::HealthOpts::default()
+            };
+            let registry = Arc::new(health::HealthRegistry::new(
+                nw, n_shards, hopts));
+            let pool = Arc::new(worker::HttpShardPool::with_health(
+                opts.workers.clone(), n_shards, registry));
             model.shard_remote(Arc::clone(&pool))?;
-            Some(ShardCtl { store: Box::new(store), pool,
-                            ready: AtomicBool::new(false) })
+            Some(ShardCtl { store: Box::new(store), pool })
         };
         let info = ServeInfo {
             w_bits: model.weight_bits(),
@@ -339,29 +391,43 @@ impl Server {
             shard,
         });
         if ctl.shard.is_some() {
-            // Fleet-readiness poller: flips the /generate gate once
-            // every worker reports ready (they answer /healthz while
-            // still fetching their artifact from this very server).
+            // Persistent health prober (DESIGN.md §15): feeds every
+            // worker's /healthz into the registry's state machines —
+            // the /generate coverage gate, the breaker half-open
+            // path, and the rejoin counter all ride these probes.
+            // Unlike the PR-9 one-shot readiness poller this never
+            // latches: the gate closes during an outage and reopens
+            // when a restarted worker passes readiness again.
             let ctl3 = Arc::clone(&ctl);
             thread::Builder::new()
-                .name("osp-ready".into())
+                .name("osp-health".into())
                 .spawn(move || {
                     let sh = ctl3.shard.as_ref().unwrap();
+                    let reg = sh.pool.health();
+                    let interval = Duration::from_millis(
+                        ctl3.opts.probe_interval_ms.max(10));
+                    let per_probe = Duration::from_millis(1_000);
                     while !ctl3.draining.load(SeqCst)
                         && !ctl3.service_done.load(SeqCst)
                     {
-                        let all = sh.pool.worker_addrs().iter().all(
-                            |a| matches!(
-                                load::http_get(a, "/healthz"),
+                        for (w, a) in sh.pool.worker_addrs().iter()
+                            .enumerate()
+                        {
+                            match load::http_get_timeout(
+                                a, "/healthz", per_probe)
+                            {
                                 Ok((200, doc))
                                     if doc.get("ready")
                                         .and_then(|v| v.as_bool())
-                                        == Some(true)));
-                        if all {
-                            sh.ready.store(true, SeqCst);
-                            return;
+                                        == Some(true) =>
+                                    reg.record_ready(w),
+                                Ok((200, _)) => reg.record_unready(w),
+                                Ok(_) | Err(_) => {
+                                    reg.record_failure(w)
+                                }
+                            }
                         }
-                        thread::sleep(Duration::from_millis(50));
+                        thread::sleep(interval);
                     }
                 })?;
         }
@@ -642,13 +708,17 @@ fn handle_generate(mut stream: TcpStream, req: &http::Request,
                                      &err_body("draining"));
         return;
     }
-    // Sharded mode: decode would panic inside a remote linear until
-    // every worker holds its shard, so shed load until the fleet is up.
-    if !ctl.workers_ready() {
+    // Sharded mode: while any shard has no live replica — boot,
+    // outage, every-replica-down — a decode step would fail inside a
+    // remote linear, so defer new requests with a retryable 503
+    // instead (DESIGN.md §15). The fleet recovers without a restart:
+    // the prober reopens this gate as soon as a worker rejoins.
+    if let Some(shard) = ctl.uncovered_shard() {
         ctl.metrics.rejected_full.fetch_add(1, Relaxed);
-        let _ = http::write_response(&mut stream, 503,
-                                     &[("Retry-After", "1")],
-                                     &err_body("workers not ready"));
+        ctl.metrics.uncovered_503s.fetch_add(1, Relaxed);
+        let _ = http::write_response(
+            &mut stream, 503, &[("Retry-After", "1")],
+            &err_body(&format!("shard {shard} uncovered")));
         return;
     }
     // Event capacity max_new + 4: every token plus the terminal event

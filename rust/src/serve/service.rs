@@ -187,15 +187,30 @@ pub(crate) fn service_loop(model: &InferModel, params: DecodeParams,
         }
 
         // 4. Step. A request-induced error must not kill the loop:
-        // fail everything in flight, reset, keep serving.
+        // fail everything in flight, reset, keep serving. The
+        // alternate `{:#}` rendering flattens the whole anyhow
+        // context chain — `to_string()` shows only the outermost
+        // layer, which would hide the "uncovered" marker that
+        // `HttpShardPool::rpc_shard` buries under per-op context.
         let t0 = Instant::now();
         if let Err(e) = eng.step() {
-            let msg = e.to_string();
+            let msg = format!("{e:#}");
+            // A fleet outage (every replica of some shard down,
+            // DESIGN.md §15) is retryable: tell clients 503 +
+            // Retry-After when they have seen zero tokens, so they
+            // can resubmit elsewhere. Requests mid-stream still fail
+            // — the terminal accounting (`failed`) is identical
+            // either way, preserving conservation.
+            let uncovered = msg.contains("uncovered");
             for (id, st) in inflight.drain() {
                 eng.cancel(id);
-                let _ = st.events.try_send(Event::Failed {
-                    msg: msg.clone(),
-                });
+                let ev = if uncovered && st.tokens == 0 {
+                    m.uncovered_503s.fetch_add(1, Relaxed);
+                    Event::Rejected { status: 503, msg: msg.clone() }
+                } else {
+                    Event::Failed { msg: msg.clone() }
+                };
+                let _ = st.events.try_send(ev);
                 m.failed.fetch_add(1, Relaxed);
             }
             m.active_seqs.store(eng.n_pending() as i64, Relaxed);

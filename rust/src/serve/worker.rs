@@ -32,6 +32,7 @@ use crate::model::remote::{ShardCompute, ShardEntry, ShardKind};
 use crate::tensor::intkern::{Backend, IntMode, QuantActs, MAX_INT_K};
 use crate::util::json::Json;
 
+use super::health::{self, HealthOpts, HealthRegistry};
 use super::http::{self, header, ClientConn};
 use super::metrics::LatHist;
 use super::storage::{fnv64, ShardMeta, StorageBackend, CHUNK_BYTES};
@@ -42,8 +43,18 @@ pub const MAX_RANGE_BYTES: usize = 8 << 20;
 
 // ---- small blocking HTTP client helpers --------------------------------
 
+/// Connect with `timeout` applied to the connect itself as well as
+/// both I/O directions. A plain `TcpStream::connect` would block for
+/// the OS default (minutes) on a black-holed address — far past every
+/// read timeout in this file — so a dead worker would stall fetches
+/// and rpcs instead of failing fast into the §15 failover path.
 fn connect(addr: &str, timeout: Duration) -> Result<TcpStream> {
-    let stream = TcpStream::connect(addr)
+    use std::net::ToSocketAddrs;
+    let sa = addr.to_socket_addrs()
+        .with_context(|| format!("resolve {addr}"))?
+        .next()
+        .ok_or_else(|| anyhow!("no socket address for {addr}"))?;
+    let stream = TcpStream::connect_timeout(&sa, timeout)
         .with_context(|| format!("connect {addr}"))?;
     stream.set_nodelay(true)?;
     stream.set_read_timeout(Some(timeout))?;
@@ -66,6 +77,16 @@ fn get_bytes(addr: &str, path: &str, timeout: Duration)
 
 fn post_json(addr: &str, path: &str, body: &str, timeout: Duration)
              -> Result<(u16, Json)> {
+    let (status, doc, _headers) =
+        post_json_hdrs(addr, path, body, timeout)?;
+    Ok((status, doc))
+}
+
+/// [`post_json`] that also surfaces the response headers — the rpc
+/// path reads `Retry-After` off 503s to pace its backoff.
+fn post_json_hdrs(addr: &str, path: &str, body: &str,
+                  timeout: Duration)
+                  -> Result<(u16, Json, Vec<(String, String)>)> {
     let mut conn = ClientConn::new(connect(addr, timeout)?);
     conn.send_request("POST", path, body)?;
     let (status, headers) = conn.read_head()?;
@@ -75,7 +96,7 @@ fn post_json(addr: &str, path: &str, body: &str, timeout: Duration)
     let text = conn.read_body(n)?;
     let doc = Json::parse(&text)
         .map_err(|e| anyhow!("bad response JSON: {e}"))?;
-    Ok((status, doc))
+    Ok((status, doc, headers))
 }
 
 fn json_err(doc: &Json) -> String {
@@ -531,7 +552,14 @@ fn handle_worker_conn(mut stream: TcpStream, ctl: &WorkerCtl,
         }
         ("POST", "/matmul") => {
             let (status, body) = handle_matmul(ctl, &req.body);
-            let _ = http::write_response(&mut stream, status, &[],
+            // Not-ready 503s carry a pacing hint for the pool's
+            // Retry-After-aware backoff (§15).
+            let extra: &[(&str, &str)] = if status == 503 {
+                &[("Retry-After", "1")]
+            } else {
+                &[]
+            };
+            let _ = http::write_response(&mut stream, status, extra,
                                          &body);
         }
         _ => {
@@ -667,15 +695,25 @@ fn run_matmul(ctl: &WorkerCtl, req: &MatmulReq)
 // ---- the coordinator-side HTTP shard pool ------------------------------
 
 /// [`ShardCompute`] over a worker fleet reached through the std HTTP
-/// layer. Owns fan-out (one thread per worker per call — the fleet is
-/// small), per-attempt retries on transport errors and 503s, and the
-/// rpc counters the coordinator's `/metrics`//`/status` publish. After
-/// retries are exhausted the error propagates to
-/// [`crate::model::remote::RemoteLinear`], which panics by design —
-/// the serve loop's step-error boundary turns that into failed
-/// requests, never wrong tokens.
+/// layer. Owns fan-out (one thread per *shard* per call — the fleet
+/// is small), replica failover, and the rpc counters the
+/// coordinator's `/metrics`/`/status` publish.
+///
+/// With `--replicas R` (DESIGN.md §15) the fleet is larger than the
+/// shard count: worker `w` serves shard `w % n_shards`
+/// ([`crate::coordinator::shard::replica_assignment`]). Each stripe
+/// rpc walks its shard's replicas in health order (Up, Suspect, then
+/// Rejoining; breaker-open workers skipped), failing over mid-call on
+/// transport errors — output-preserving because any replica returns
+/// bit-identical integer results. Attempt rounds are paced by
+/// [`health::retry_delay`] (capped exponential backoff, deterministic
+/// seeded jitter, `Retry-After`-aware). When every replica of a shard
+/// is down the rpc returns the `shard N uncovered` error that the
+/// serve layer turns into retryable 503s — never wrong tokens.
 pub struct HttpShardPool {
     workers: Vec<String>,
+    n_shards: usize,
+    health: Arc<HealthRegistry>,
     timeout: Duration,
     pub rpcs_ok: AtomicU64,
     pub rpcs_retried: AtomicU64,
@@ -685,10 +723,28 @@ pub struct HttpShardPool {
 }
 
 impl HttpShardPool {
+    /// One worker per shard — the unreplicated PR-9 layout, with a
+    /// default-knob private health registry.
     pub fn new(workers: Vec<String>) -> HttpShardPool {
+        let n = workers.len();
+        let health = Arc::new(HealthRegistry::new(
+            n, n, HealthOpts::default()));
+        HttpShardPool::with_health(workers, n, health)
+    }
+
+    /// Replicated fleet: `workers[w]` serves shard `w % n_shards`.
+    /// `health` is shared with the serve front-end's prober thread.
+    pub fn with_health(workers: Vec<String>, n_shards: usize,
+                       health: Arc<HealthRegistry>) -> HttpShardPool {
+        assert_eq!(health.n_workers(), workers.len(),
+                   "health registry sized for a different fleet");
+        assert_eq!(health.n_shards(), n_shards,
+                   "health registry cut for a different shard count");
         let n = workers.len();
         HttpShardPool {
             workers,
+            n_shards,
+            health,
             timeout: Duration::from_secs(30),
             rpcs_ok: AtomicU64::new(0),
             rpcs_retried: AtomicU64::new(0),
@@ -701,6 +757,14 @@ impl HttpShardPool {
         &self.workers
     }
 
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    pub fn health(&self) -> &Arc<HealthRegistry> {
+        &self.health
+    }
+
     /// Pool counters for the coordinator's metrics endpoints. The
     /// cross-process conservation invariant: `rpcs_ok` here never
     /// exceeds the sum of the workers' `rpcs_served`.
@@ -711,6 +775,7 @@ impl HttpShardPool {
         };
         Json::obj(vec![
             ("workers", Json::num(self.workers.len() as f64)),
+            ("shards", Json::num(self.n_shards as f64)),
             ("rpcs_ok", Json::num(self.rpcs_ok.load(Relaxed) as f64)),
             ("rpcs_retried",
              Json::num(self.rpcs_retried.load(Relaxed) as f64)),
@@ -723,36 +788,73 @@ impl HttpShardPool {
         ])
     }
 
-    fn rpc(&self, w: usize, body: &str) -> Result<Json> {
-        let addr = &self.workers[w];
-        let mut last = anyhow!("no attempt made");
-        for attempt in 0..4 {
+    /// One stripe rpc for `shard`, with replica failover inside the
+    /// call: every attempt round walks the shard's live replicas in
+    /// health order before sleeping. A reply from any replica is
+    /// bit-identical, so failover never perturbs the stream.
+    fn rpc_shard(&self, shard: usize, body: &str) -> Result<Json> {
+        let h = &self.health;
+        let o = h.opts.clone();
+        let mut last: Option<anyhow::Error> = None;
+        let mut hint: Option<u64> = None;
+        for attempt in 0..o.retries {
             if attempt > 0 {
                 self.rpcs_retried.fetch_add(1, Relaxed);
-                thread::sleep(Duration::from_millis(40));
+                thread::sleep(health::retry_delay(
+                    o.backoff_base_ms, o.backoff_cap_ms, attempt,
+                    o.seed, shard as u64, hint.take()));
             }
-            let t0 = Instant::now();
-            match post_json(addr, "/matmul", body, self.timeout) {
-                Ok((200, doc)) => {
-                    self.stripe_lat.record(t0.elapsed());
-                    self.rpcs_ok.fetch_add(1, Relaxed);
-                    self.per_worker_ok[w].fetch_add(1, Relaxed);
-                    return Ok(doc);
+            let order = h.route_order(shard);
+            if order.is_empty() {
+                // Breaker open on every replica: shed fast; only the
+                // prober can bring a worker back into rotation.
+                break;
+            }
+            for (choice, &w) in order.iter().enumerate() {
+                let addr = &self.workers[w];
+                let t0 = Instant::now();
+                match post_json_hdrs(addr, "/matmul", body,
+                                     self.timeout) {
+                    Ok((200, doc, _)) => {
+                        h.record_ready(w);
+                        if choice > 0 {
+                            h.failovers.fetch_add(1, Relaxed);
+                        }
+                        self.stripe_lat.record(t0.elapsed());
+                        self.rpcs_ok.fetch_add(1, Relaxed);
+                        self.per_worker_ok[w].fetch_add(1, Relaxed);
+                        return Ok(doc);
+                    }
+                    Ok((503, doc, headers)) => {
+                        // Alive but not ready (loading/draining): not
+                        // a transport failure — honor its pacing hint.
+                        hint = header(&headers, "retry-after")
+                            .and_then(|v| v.trim().parse::<u64>().ok())
+                            .map(|s| s.saturating_mul(1000))
+                            .or(hint);
+                        last = Some(anyhow!(
+                            "worker {addr} not ready (503): {}",
+                            json_err(&doc)));
+                    }
+                    Ok((status, doc, _)) => {
+                        // A semantic rejection is the same on every
+                        // replica; neither retry nor failover helps.
+                        bail!("worker {addr} /matmul -> {status}: {}",
+                              json_err(&doc));
+                    }
+                    Err(e) => {
+                        h.record_failure(w);
+                        last = Some(e);
+                    }
                 }
-                Ok((503, doc)) => {
-                    last = anyhow!("worker {addr} not ready (503): {}",
-                                   json_err(&doc));
-                }
-                Ok((status, doc)) => {
-                    // A semantic rejection will not improve on retry.
-                    bail!("worker {addr} /matmul -> {status}: {}",
-                          json_err(&doc));
-                }
-                Err(e) => last = e,
             }
         }
-        Err(last).with_context(|| format!(
-            "worker {addr} still failing after retries"))
+        let detail = match last {
+            Some(e) => format!("; last error: {e:#}"),
+            None => "; breaker open on every replica".to_string(),
+        };
+        bail!("shard {shard} uncovered after {} attempts{detail}",
+              o.retries)
     }
 }
 
@@ -795,21 +897,24 @@ fn parse_i32_arr(doc: &Json, key: &str) -> Result<Vec<i32>> {
 }
 
 impl ShardCompute for HttpShardPool {
+    /// Partition count — stripes/slices per call. The physical fleet
+    /// (`worker_addrs`) may be `replicas`× larger.
     fn n_workers(&self) -> usize {
-        self.workers.len()
+        self.n_shards
     }
 
     fn col_stripes(&self, op: &str, acts: &QuantActs)
                    -> Result<Vec<Vec<f32>>> {
         let body = matmul_body(op, "col", acts);
-        let nw = self.workers.len();
-        let mut out: Vec<Result<Vec<f32>>> = Vec::with_capacity(nw);
+        let ns = self.n_shards;
+        let mut out: Vec<Result<Vec<f32>>> = Vec::with_capacity(ns);
         thread::scope(|s| {
-            let handles: Vec<_> = (0..nw)
-                .map(|w| {
+            let handles: Vec<_> = (0..ns)
+                .map(|shard| {
                     let body = &body;
                     s.spawn(move || {
-                        parse_f32_arr(&self.rpc(w, body)?, "stripe")
+                        parse_f32_arr(&self.rpc_shard(shard, body)?,
+                                      "stripe")
                     })
                 })
                 .collect();
@@ -824,19 +929,20 @@ impl ShardCompute for HttpShardPool {
 
     fn row_partials(&self, op: &str, slices: &[QuantActs])
                     -> Result<Vec<Vec<i32>>> {
-        let nw = self.workers.len();
-        anyhow::ensure!(slices.len() == nw,
-                        "{} slices for {nw} workers", slices.len());
+        let ns = self.n_shards;
+        anyhow::ensure!(slices.len() == ns,
+                        "{} slices for {ns} shards", slices.len());
         let bodies: Vec<String> = slices.iter()
             .map(|sl| matmul_body(op, "row", sl))
             .collect();
-        let mut out: Vec<Result<Vec<i32>>> = Vec::with_capacity(nw);
+        let mut out: Vec<Result<Vec<i32>>> = Vec::with_capacity(ns);
         thread::scope(|s| {
-            let handles: Vec<_> = (0..nw)
-                .map(|w| {
-                    let body = &bodies[w];
+            let handles: Vec<_> = (0..ns)
+                .map(|shard| {
+                    let body = &bodies[shard];
                     s.spawn(move || {
-                        parse_i32_arr(&self.rpc(w, body)?, "partial")
+                        parse_i32_arr(&self.rpc_shard(shard, body)?,
+                                      "partial")
                     })
                 })
                 .collect();
@@ -855,6 +961,7 @@ mod tests {
     use super::*;
     use crate::model::remote::{shard_range, LocalShards, ShardSet};
     use crate::quant::rtn::quantize_per_channel_q;
+    use crate::serve::health::HealthState;
     use crate::serve::storage::{self, LocalDir, Manifest,
                                 ManifestEntry};
     use crate::tensor::qtensor::QTensor;
@@ -972,6 +1079,66 @@ mod tests {
             w.drain();
             w.join();
         }
+    }
+
+    /// §15 failover at the pool level: two replicas of one shard,
+    /// kill the one serving traffic, and the rpc reroutes mid-call —
+    /// bit-identically. With both replicas dead the pool reports the
+    /// shard uncovered (after tripping both breakers) instead of
+    /// hanging or panicking.
+    #[test]
+    fn pool_fails_over_to_replica_then_reports_uncovered() {
+        let dir = temp("failover");
+        let mut rng = Pcg::new(45, 0);
+        let qc = random_q(&mut rng, 18, 12, 4);
+        let qr = random_q(&mut rng, 20, 7, 4);
+        let acts = random_acts(&mut rng, 2, 18);
+        // A 1-shard cut served by two replica workers.
+        let set = two_op_sets(&qc, &qr, 1).remove(0);
+        let path = dir.join("shard_0.bin");
+        checkpoint::save_shard(&path, 0, 1, "ssnorm_plain", &set)
+            .unwrap();
+        let spawn_one = || {
+            let mut o = WorkerOpts::new("127.0.0.1:0", 0,
+                                        ShardSource::File(path.clone()));
+            o.int_mode = IntMode::Scalar;
+            o.n_shards = 1;
+            WorkerServer::spawn(o).unwrap()
+        };
+        let (w0, w1) = (spawn_one(), spawn_one());
+        wait_ready(&[&w0, &w1]);
+        let health = Arc::new(HealthRegistry::new(
+            2, 1, HealthOpts::default()));
+        let pool = HttpShardPool::with_health(
+            vec![w0.addr().to_string(), w1.addr().to_string()],
+            1, Arc::clone(&health));
+        let local = LocalShards::new(two_op_sets(&qc, &qr, 1),
+                                     Backend::Scalar);
+        let want = local.col_stripes("L0.wq", &acts).unwrap();
+        // Healthy call routes to the primary and matches local math.
+        assert_eq!(pool.col_stripes("L0.wq", &acts).unwrap(), want);
+        assert_eq!(health.state(0), HealthState::Up);
+        // Kill the primary: the same call fails over to the replica,
+        // still bitwise-identical, and counts the reroute.
+        w0.drain();
+        w0.join();
+        assert_eq!(pool.col_stripes("L0.wq", &acts).unwrap(), want);
+        assert!(health.failovers.load(Relaxed) >= 1,
+                "failover not counted");
+        // Kill the replica too: uncovered, with both breakers tripped
+        // and a typed error instead of a panic.
+        w1.drain();
+        w1.join();
+        let err = pool.col_stripes("L0.wq", &acts)
+            .unwrap_err().to_string();
+        assert!(err.contains("shard 0 uncovered"), "{err}");
+        assert_eq!(health.breaker_trips.load(Relaxed), 2);
+        assert_eq!(health.route_order(0), Vec::<usize>::new());
+        // Conservation still holds: every pool success has a serving
+        // worker behind it.
+        assert_eq!(pool.rpcs_ok.load(Relaxed),
+                   pool.per_worker_ok.iter()
+                       .map(|c| c.load(Relaxed)).sum::<u64>());
     }
 
     #[test]

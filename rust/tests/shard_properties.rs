@@ -8,6 +8,13 @@
 //! worker processes that fetch their artifacts (checksummed, chunked)
 //! from the coordinator's `/shards` endpoints.
 //!
+//! The fault-tolerance half (DESIGN.md §15): with `--replicas 2`,
+//! killing one worker mid-decode reroutes its stripes to the live
+//! replica with the surviving stream byte-identical (integer partials
+//! are replica-invariant), losing every replica of a shard degrades
+//! to retryable 503s, and a restarted worker rejoins through the
+//! resumable fetch path without a coordinator restart.
+//!
 //! All servers bind 127.0.0.1:0 (ephemeral ports), so the suite can
 //! run in parallel with itself and with CI neighbors.
 
@@ -305,6 +312,335 @@ fn http_sharded_serve_streams_match_single_process() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// The §15 fault-tolerance contract, end to end: a three-worker fleet
+/// at `--replicas 2` (worker w serves shard w % 2, so shard 0 has two
+/// replicas) survives losing shard 0's primary mid-decode with the
+/// survivor's stream byte-identical to a single-process run; losing
+/// the last shard-0 replica degrades to retryable 503s naming the
+/// shard; and restarting the dead primary on its old port rejoins
+/// through the resumable fetch path and reopens the gate — all
+/// without touching the coordinator. RPC conservation is checked
+/// across the whole incident via pre/post-kill counter snapshots.
+#[test]
+fn failover_rejoin_and_degradation_with_replicas() {
+    let cfg = tiny_cfg();
+    let dir = std::env::temp_dir().join("osp_shard_props_failover");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("mkdir");
+
+    let published = InferModel::synthetic(&cfg, 61).quantized(4);
+    write_shards(&published, 2, "ssnorm_plain", &dir)
+        .expect("write shards");
+
+    // Reserve three worker ports (the same bind-then-drop dance as
+    // above); worker 2 is shard 0's replica.
+    let ls: Vec<TcpListener> = (0..3)
+        .map(|i| {
+            TcpListener::bind("127.0.0.1:0")
+                .unwrap_or_else(|e| panic!("reserve {i}: {e}"))
+        })
+        .collect();
+    let was: Vec<String> = ls
+        .iter()
+        .map(|l| l.local_addr().expect("reserved addr").to_string())
+        .collect();
+    drop(ls);
+
+    let mut cm = InferModel::synthetic(&cfg, 61).quantized(4);
+    cm.set_int_mode(IntMode::Scalar);
+    let server = Server::spawn(cm, ServeOpts {
+        addr: "127.0.0.1:0".into(),
+        workers: was.clone(),
+        shard_dir: dir.to_string_lossy().into_owned(),
+        replicas: 2,
+        probe_interval_ms: 40,
+        down_after: 2,
+        ..ServeOpts::default()
+    })
+    .expect("spawn coordinator");
+    let addr = server.addr().to_string();
+
+    let spawn_worker = |w: usize| {
+        WorkerServer::spawn(WorkerOpts {
+            addr: was[w].clone(),
+            n_shards: 2,
+            int_mode: IntMode::Scalar,
+            ..WorkerOpts::new("", w % 2, ShardSource::Fetch {
+                coordinator: addr.clone(),
+                // Spools are keyed by *worker*, not shard: workers 0
+                // and 2 fetch shard 0 concurrently.
+                spool: dir.join(format!("spool_w{w}.part")),
+                byte_budget: None,
+            })
+        })
+        .unwrap_or_else(|e| panic!("spawn worker {w}: {e:#}"))
+    };
+    let w0 = spawn_worker(0);
+    let w1 = spawn_worker(1);
+    let w2 = spawn_worker(2);
+
+    let wait_ready = |want: bool, tag: &str| {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let (st, h) =
+                load::http_get(&addr, "/healthz").expect("healthz");
+            assert_eq!(st, 200);
+            if h.get("ready").and_then(|v| v.as_bool()) == Some(want)
+            {
+                break;
+            }
+            assert!(Instant::now() < deadline,
+                    "{tag}: ready never became {want}: {}", h.dump());
+            thread::sleep(Duration::from_millis(25));
+        }
+    };
+    wait_ready(true, "boot");
+
+    // Fleet-health and per-worker rpc counters off /metrics (the
+    // scrape-free document; /status adds the worker scrape).
+    let fleet = |k: &str| -> f64 {
+        let (st, s) =
+            load::http_get(&addr, "/metrics").expect("metrics");
+        assert_eq!(st, 200);
+        s.get("fleet_health")
+            .and_then(|f| f.get(k))
+            .and_then(|v| v.as_f64())
+            .unwrap_or_else(|| panic!("no fleet_health.{k}: {}",
+                                      s.dump()))
+    };
+    let state_of = |w: usize| -> String {
+        let (_, s) =
+            load::http_get(&addr, "/metrics").expect("metrics");
+        s.get("fleet_health")
+            .and_then(|f| f.get("states"))
+            .and_then(|v| v.as_arr())
+            .and_then(|a| a.get(w))
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string())
+            .unwrap_or_default()
+    };
+    let per_ok = || -> Vec<f64> {
+        let (_, s) =
+            load::http_get(&addr, "/metrics").expect("metrics");
+        s.get("shard_pool")
+            .and_then(|p| p.get("per_worker_rpcs_ok"))
+            .and_then(|v| v.as_arr())
+            .map(|a| {
+                a.iter().map(|v| v.as_f64().unwrap_or(0.0)).collect()
+            })
+            .expect("per_worker_rpcs_ok")
+    };
+
+    let probes: Vec<Vec<i32>> =
+        (0..3).map(|i| vec![3 + i, 1, 4 + i, 2]).collect();
+    let max_news = [8usize, 48, 8];
+
+    // Single-process baseline: the unperturbed streams every phase
+    // below must reproduce bit-for-bit.
+    let baseline: Vec<Vec<i64>> = {
+        let mut bm = InferModel::synthetic(&cfg, 61).quantized(4);
+        bm.set_int_mode(IntMode::Scalar);
+        let bs = Server::spawn(bm, ServeOpts {
+            addr: "127.0.0.1:0".into(),
+            ..ServeOpts::default()
+        })
+        .expect("baseline server");
+        let baddr = bs.addr().to_string();
+        let streams = probes
+            .iter()
+            .zip(&max_news)
+            .map(|(p, &n)| {
+                let (st, tokens, term) =
+                    gen_stream(&baddr, p, n).expect("baseline probe");
+                assert_eq!(st, 200);
+                assert_eq!(term.as_deref(), Some("done"));
+                tokens
+            })
+            .collect();
+        bs.drain();
+        bs.join();
+        streams
+    };
+
+    // Phase A — healthy fleet streams match the baseline.
+    let (st, tokens, term) =
+        gen_stream(&addr, &probes[0], max_news[0]).expect("healthy");
+    assert_eq!((st, term.as_deref()), (200, Some("done")));
+    assert_eq!(tokens, baseline[0], "healthy fleet diverged");
+    let rejoins_before = fleet("rejoins");
+
+    // Phase B — kill shard 0's primary mid-decode. The stream is
+    // held open manually: the kill lands after the first token, with
+    // dozens of shard-0 stripe RPCs still ahead of the sequence, so
+    // the reroute to worker 2 is exercised while decoding.
+    let stream =
+        TcpStream::connect(&addr).expect("connect for failover");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .expect("read timeout");
+    stream.set_nodelay(true).ok();
+    let mut conn = ClientConn::new(stream);
+    let body = format!(
+        "{{\"prompt\":{:?},\"max_new\":{},\"timeout_ms\":30000}}",
+        probes[1], max_news[1]);
+    conn.send_request("POST", "/generate", &body).expect("send");
+    let (st, _headers) = conn.read_head().expect("head");
+    assert_eq!(st, 200);
+    let first = conn
+        .next_chunk()
+        .expect("first chunk")
+        .expect("stream closed before the first token");
+    let ev = Json::parse(first.trim()).expect("first event");
+    let mut tokens = vec![ev
+        .get("token")
+        .and_then(|v| v.as_f64())
+        .unwrap_or_else(|| panic!("first event not a token: {first}"))
+        as i64];
+    // In-process SIGKILL stand-in: drain stops the accept loop and
+    // `join` guarantees the listener is gone, so the next shard-0
+    // RPC sees the refused connection a killed process would cause.
+    w0.drain();
+    w0.join();
+    let mut term = None;
+    loop {
+        let Some(line) = conn.next_chunk().expect("chunk") else {
+            break;
+        };
+        let ev = Json::parse(line.trim()).expect("event");
+        if let Some(t) = ev.get("token").and_then(|v| v.as_f64()) {
+            tokens.push(t as i64);
+        } else if ev.get("done").is_some() {
+            term = Some("done".to_string());
+        } else if let Some(e) =
+            ev.get("error").and_then(|v| v.as_str())
+        {
+            term = Some(e.to_string());
+        }
+    }
+    assert_eq!(term.as_deref(), Some("done"),
+               "stream did not survive the primary's death");
+    assert_eq!(tokens, baseline[1],
+               "failover perturbed the surviving stream");
+    assert!(fleet("failovers") >= 1.0, "no failover recorded");
+    let ok_dead0 = per_ok()[0];
+
+    // The prober's breaker opens on the dead worker.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while state_of(0) != "down" {
+        assert!(Instant::now() < deadline,
+                "worker 0 never marked down (state {})", state_of(0));
+        thread::sleep(Duration::from_millis(25));
+    }
+    assert!(fleet("breaker_trips") >= 1.0);
+
+    // Phase C — lose the last shard-0 replica: the fleet degrades to
+    // retryable 503s that name the uncovered shard, never panics,
+    // never emits wrong tokens.
+    w2.drain();
+    w2.join();
+    let ok_dead2 = per_ok()[2];
+    wait_ready(false, "outage");
+    let gen_body =
+        format!("{{\"prompt\":{:?},\"max_new\":4}}", probes[0]);
+    let (st, doc) = load::http_post(&addr, "/generate", &gen_body)
+        .expect("degraded post");
+    assert_eq!(st, 503, "{}", doc.dump());
+    let msg = doc.get("error").and_then(|v| v.as_str()).unwrap_or("");
+    assert!(msg.contains("uncovered"), "{}", doc.dump());
+    let (_, mdoc) =
+        load::http_get(&addr, "/metrics").expect("metrics");
+    let m = |k: &str| {
+        mdoc.get("metrics")
+            .and_then(|m| m.get(k))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(-1.0)
+    };
+    assert!(m("uncovered_503s") >= 1.0, "{}", mdoc.dump());
+
+    // Phase D — the primary restarts on its old port, re-fetches via
+    // the resumable spool, passes the readiness gate, and the fleet
+    // recovers without a coordinator restart.
+    let w0b = spawn_worker(0);
+    wait_ready(true, "rejoin");
+    assert!(fleet("rejoins") >= rejoins_before + 1.0,
+            "rejoin not recorded");
+    assert_eq!(state_of(2), "down", "dead replica resurrected?");
+    let (st, tokens, term) = gen_stream(&addr, &probes[2], max_news[2])
+        .expect("post-rejoin");
+    assert_eq!((st, term.as_deref()), (200, Some("done")));
+    assert_eq!(tokens, baseline[2], "post-rejoin stream diverged");
+
+    // Conservation across the incident: the pool's successes split
+    // exactly into each incarnation's serves — dead worker 2's count
+    // froze at its snapshot, worker 0's post-restart serves sit on
+    // top of its pre-kill snapshot, and worker 1 never lost an rpc.
+    let (st, status) =
+        load::http_get(&addr, "/status").expect("status");
+    assert_eq!(st, 200);
+    let per = per_ok();
+    let pool_ok = status
+        .get("shard_pool")
+        .and_then(|p| p.get("rpcs_ok"))
+        .and_then(|v| v.as_f64())
+        .expect("shard_pool.rpcs_ok");
+    assert_eq!(pool_ok, per.iter().sum::<f64>(),
+               "pool rpc conservation violated: {}", status.dump());
+    let ws = status
+        .get("worker_status")
+        .and_then(|v| v.as_arr())
+        .expect("worker_status")
+        .clone();
+    assert_eq!(ws.len(), 3);
+    let wf = |w: usize, k: &str| {
+        ws[w].get(k).and_then(|v| v.as_f64()).unwrap_or(-1.0)
+    };
+    assert_eq!(wf(0, "rpcs_served"), per[0] - ok_dead0,
+               "worker 0 incarnations do not reconcile: {}",
+               status.dump());
+    assert_eq!(wf(1, "rpcs_served"), per[1],
+               "worker 1 serves drifted from pool successes: {}",
+               status.dump());
+    assert_eq!(per[2], ok_dead2,
+               "successes recorded against a dead worker: {}",
+               status.dump());
+    assert!(ws[2].get("error").is_some(), "{}", ws[2].dump());
+    assert_eq!(wf(0, "rpc_in_flight"), 0.0);
+    assert_eq!(wf(1, "rpc_in_flight"), 0.0);
+    // Zero failed requests end to end (the uncovered 503 was shed at
+    // the gate, pre-admission).
+    let sm = |k: &str| {
+        status.get("metrics")
+            .and_then(|m| m.get(k))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(-1.0)
+    };
+    assert_eq!(sm("admitted"), 3.0, "{}", status.dump());
+    assert_eq!(sm("completed"), 3.0, "{}", status.dump());
+    assert_eq!(sm("failed"), 0.0, "{}", status.dump());
+
+    // Clean drain: the propagated drain reaches the live workers
+    // (the dead one is skipped best-effort).
+    let (st, _) =
+        load::http_post(&addr, "/admin/drain", "").expect("drain");
+    assert_eq!(st, 200);
+    server.join();
+    let wait_done = |w: &WorkerServer, tag: &str| {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !w.is_done() {
+            assert!(Instant::now() < deadline,
+                    "{tag} never saw the propagated drain");
+            thread::sleep(Duration::from_millis(20));
+        }
+    };
+    wait_done(&w1, "worker 1");
+    wait_done(&w0b, "worker 0 (rejoined)");
+    assert_eq!(w1.load_error(), None);
+    assert_eq!(w0b.load_error(), None);
+    w1.join();
+    w0b.join();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Spawn-time validation: a fleet whose size disagrees with the shard
 /// cut is rejected, and so is the f32 path (partial f32 sums cannot
 /// recombine bit-exactly — the invariant demands integer kernels).
@@ -329,6 +665,19 @@ fn coordinator_spawn_validates_fleet_and_kernel_path() {
     let err = Server::spawn(m, sopts(vec!["127.0.0.1:1".into()]))
         .err()
         .expect("mismatched fleet accepted");
+    assert!(format!("{err:#}").contains("workers"), "{err:#}");
+
+    // A fleet larger than n_shards * replicas is rejected too: at
+    // the default --replicas 1 a third worker could never be routed
+    // a stripe.
+    let mut m = InferModel::synthetic(&cfg, 7).quantized(4);
+    m.set_int_mode(IntMode::Scalar);
+    let err = Server::spawn(
+        m,
+        sopts(vec!["127.0.0.1:1".into(), "127.0.0.1:2".into(),
+                   "127.0.0.1:3".into()]))
+        .err()
+        .expect("overfull fleet accepted at replicas=1");
     assert!(format!("{err:#}").contains("workers"), "{err:#}");
 
     // Integer kernels are mandatory for sharded serving.
